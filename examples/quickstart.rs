@@ -1,0 +1,46 @@
+//! Quickstart: train a tiny transformer LM with ET2 preconditioning for a
+//! handful of steps and watch the loss fall.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Everything on the hot path is rust + PJRT; the compute graph (including
+//! the Pallas extreme-tensoring kernels) was AOT-compiled by
+//! `python/compile/aot.py` into `artifacts/lm_tiny_et2.hlo.txt`.
+
+use extensor::optim::Schedule;
+use extensor::train::{RunConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig {
+        name: "quickstart".into(),
+        artifact: "lm_tiny_et2".into(),
+        eval_artifact: Some("lm_tiny_eval".into()),
+        steps: 80,
+        eval_every: 40,
+        log_every: 10,
+        schedule: Schedule::scaled_lm(0.5, 10),
+        ..RunConfig::default()
+    };
+    println!("loading artifact '{}' ...", cfg.artifact);
+    let mut trainer = Trainer::new(cfg)?;
+    let m = &trainer.engine().manifest;
+    println!(
+        "model: {} params across {} groups; optimizer state: {} scalars ({}x overhead)",
+        m.total_params(),
+        m.params.len(),
+        m.total_opt_state(),
+        m.total_opt_state() as f64 / m.total_params() as f64,
+    );
+    let result = trainer.run()?;
+    println!("\nloss curve (step, train loss):");
+    for (step, loss) in &result.loss_history {
+        let bar = "#".repeat((loss * 6.0) as usize);
+        println!("  {step:>4}  {loss:>7.3}  {bar}");
+    }
+    let s = &result.summary;
+    println!(
+        "\nfinal: val ppl {:.2} after {} steps in {:.1}s ({:.0} tokens/s)",
+        s.final_eval_ppl, s.steps, s.wall_seconds, s.tokens_per_sec
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Online convex optimization with regret measurement — the theory side of
+//! the paper (§4) made concrete.
+//!
+//! We run extreme tensoring as an *online* learner on the §5.4 logistic
+//! regression stream and measure (a) cumulative regret against the best
+//! fixed comparator in hindsight, checking sublinear growth, and (b) the
+//! trace quantities of Theorem 4.1, checking that the measured regret is
+//! inside the bound's scale.
+//!
+//!     cargo run --release --example regret_convex
+
+use extensor::convex::{ConvexConfig, ConvexDataset, SoftmaxRegression};
+use extensor::optim::{self, GroupSpec, Optimizer};
+use extensor::regret::{RegretMeter, TraceTracker};
+use extensor::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ConvexConfig { n: 4000, d: 256, k: 8, cond: 1e4, householder: 6, seed: 3 };
+    println!("generating online stream: d={}, k={}, cond={:.0}", cfg.d, cfg.k, cfg.cond);
+    let ds = ConvexDataset::generate(&cfg);
+    let obj = SoftmaxRegression::new(&ds);
+    let groups = vec![GroupSpec::new("w", &[cfg.k, cfg.d])];
+
+    // Comparator: a near-optimal fixed W from an offline AdaGrad run.
+    let full: Vec<usize> = (0..ds.n).collect();
+    let mut comparator = vec![0.0f32; obj.dim()];
+    {
+        let mut opt = optim::build(
+            extensor::tensoring::OptimizerKind::AdaGrad,
+            &groups,
+            &optim::Hyper::default(),
+        );
+        let mut grad = vec![0.0f32; obj.dim()];
+        for _ in 0..300 {
+            obj.loss_grad(&comparator, &full, &mut grad);
+            opt.step(0, &mut comparator, &grad, 0.1)?;
+        }
+        println!("comparator loss (offline AdaGrad): {:.4}", obj.loss(&comparator, &full));
+    }
+
+    // Online learner: ET depth 2 over the feature dimension.
+    let dims = vec![vec![cfg.k, 16, cfg.d / 16]];
+    let mut learner =
+        optim::extreme::ExtremeTensoring::new_with_dims(&groups, dims.clone(), 1e-8, None);
+    let mut tracker = TraceTracker::new(&[("w".into(), dims[0].clone())], 1e-8)?;
+    let mut meter = RegretMeter::new();
+    let mut w = vec![0.0f32; obj.dim()];
+    let mut grad = vec![0.0f32; obj.dim()];
+    let mut rng = Pcg64::seeded(99);
+
+    let rounds = 600usize;
+    let batch = 32usize;
+    for t in 0..rounds {
+        // adversary reveals a random minibatch loss f_t
+        let idx: Vec<usize> = (0..batch).map(|_| rng.below(ds.n as u64) as usize).collect();
+        let learner_loss = obj.loss_grad(&w, &idx, &mut grad);
+        let comp_loss = obj.loss(&comparator, &idx);
+        meter.observe(learner_loss, comp_loss);
+        tracker.observe(&[&grad])?;
+        learner.step(0, &mut w, &grad, 0.3)?;
+        if (t + 1) % 100 == 0 {
+            println!(
+                "round {:>4}: learner loss {:.4}, cumulative regret {:.2}",
+                t + 1,
+                learner_loss,
+                meter.regret()
+            );
+        }
+    }
+
+    // Sublinearity check: compare regret growth in the two halves.
+    let curve = meter.regret_curve();
+    let half = curve[rounds / 2 - 1];
+    let total = curve[rounds - 1];
+    println!("\nregret at T/2: {half:.2}, at T: {total:.2}");
+    println!(
+        "second-half increment {:.2} vs first half {half:.2} (sublinear if smaller)",
+        total - half
+    );
+
+    let report = tracker.report();
+    println!(
+        "\nTheorem 4.1 traces after T={rounds}: Tr(H_T) = {:.3e}, Tr(Ĥ_T) = {:.3e}",
+        report.trace_h, report.trace_h_hat
+    );
+    println!(
+        "regret-bound gap vs AdaGrad: sqrt(Tr(H)/Tr(Ĥ)) = {:.2} (paper measures ≈ 5.7 at scale)",
+        report.ratio
+    );
+    Ok(())
+}

@@ -1,0 +1,451 @@
+"""AOT compiler: lowers every (model x optimizer) train/eval/grad step to
+HLO **text** + a JSON manifest the rust runtime consumes.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` rust crate binds) rejects; the text
+parser reassigns ids. See /opt/xla-example/README.md.
+
+Also emits golden fixtures (tiny inputs + expected outputs as JSON) under
+``artifacts/golden/`` for the rust cross-layer tests.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only lm_tiny_et2 ...]
+
+Incremental: an artifact is skipped when its .hlo.txt and .json exist and
+the stored source-hash matches (``make artifacts`` stays a no-op when
+python sources are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import cnn as cnn_mod
+from . import model as lm_mod
+from . import optim_jax
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+LM_CONFIGS = {
+    # micro: golden tests + fast integration tests
+    "lm_micro": lm_mod.LmConfig(vocab=64, d_model=32, layers=1, heads=2, d_ff=64,
+                                rows=2, seq=16),
+    # tiny: the Table 1 / Figure 1 workhorse
+    "lm_tiny": lm_mod.LmConfig(vocab=1904, d_model=128, layers=2, heads=4, d_ff=512,
+                               rows=8, seq=64),
+    # big: doubled depth for Table 2 (§5.2)
+    "lm_big": lm_mod.LmConfig(vocab=1904, d_model=128, layers=4, heads=4, d_ff=512,
+                              rows=8, seq=64),
+}
+
+CNN_CONFIG = cnn_mod.CnnConfig()
+
+LM_OPTIMIZERS = ["sgd", "adagrad", "adam", "adafactor", "et1", "et2", "et3", "etinf"]
+BIG_OPTIMIZERS = ["et1", "et2", "et3", "etinf"]
+CNN_OPTIMIZERS = ["sgd", "adam", "et1", "et2", "et3", "etinf"]
+MICRO_OPTIMIZERS = ["et1", "et2", "et3", "etinf", "adagrad", "adam", "adafactor", "sgd"]
+
+# ET accumulator decay: None for LM (paper found decay unhelpful there),
+# 0.99 for vision (paper appendix A.1).
+ET_BETA2_LM = None
+ET_BETA2_CNN = 0.99
+EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _source_hash() -> str:
+    """Hash of every python source under compile/ — the cache key."""
+    h = hashlib.sha256()
+    root = pathlib.Path(__file__).parent
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.name.encode())
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def _write_manifest(out_dir, name, kind, pspecs, sspecs, data_inputs,
+                    extra_inputs, model_meta, opt_meta, src_hash):
+    manifest = {
+        "name": name,
+        "kind": kind,
+        "hlo": f"{name}.hlo.txt",
+        "source_hash": src_hash,
+        "model": model_meta,
+        "optimizer": opt_meta,
+        "params": [
+            {"name": n, "shape": list(s), "init": init, "init_scale": scale}
+            for n, s, init, scale in pspecs
+        ],
+        "opt_state": [
+            {"name": n, "shape": list(s), "init": "zeros"} for n, s in sspecs
+        ],
+        "data_inputs": data_inputs,
+        "extra_inputs": extra_inputs,
+    }
+    (out_dir / f"{name}.json").write_text(json.dumps(manifest, indent=1))
+
+
+def _is_current(out_dir: pathlib.Path, name: str, src_hash: str) -> bool:
+    mpath = out_dir / f"{name}.json"
+    hpath = out_dir / f"{name}.hlo.txt"
+    if not (mpath.exists() and hpath.exists()):
+        return False
+    try:
+        return json.loads(mpath.read_text()).get("source_hash") == src_hash
+    except json.JSONDecodeError:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# LM artifacts
+# ---------------------------------------------------------------------------
+
+
+def lm_train_step_fn(cfg, opt_kind, n_params, n_state, et_beta2):
+    pspecs = lm_mod.param_specs(cfg)
+
+    def fn(*args):
+        params = list(args[:n_params])
+        opt_state = list(args[n_params : n_params + n_state])
+        tokens = args[n_params + n_state]
+        lr = args[n_params + n_state + 1]
+        step = args[n_params + n_state + 2]
+        loss, grads = lm_mod.loss_and_grads(params, tokens, cfg)
+        new_params, new_state = optim_jax.apply_updates(
+            opt_kind, pspecs, params, grads, opt_state, lr, step,
+            eps=EPS, et_beta2=et_beta2,
+        )
+        return tuple([loss] + new_params + new_state)
+
+    return fn
+
+
+def build_lm_artifact(out_dir, cfg_name, cfg, opt_kind, src_hash, et_beta2):
+    name = f"{cfg_name}_{opt_kind}"
+    if _is_current(out_dir, name, src_hash):
+        return False
+    pspecs = lm_mod.param_specs(cfg)
+    sspecs = optim_jax.state_specs(opt_kind, pspecs)
+    fn = lm_train_step_fn(cfg, opt_kind, len(pspecs), len(sspecs), et_beta2)
+    args = (
+        [_spec(s) for _, s, _, _ in pspecs]
+        + [_spec(s) for _, s in sspecs]
+        + [_spec((cfg.rows, cfg.seq), jnp.int32), _spec(()), _spec(())]
+    )
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+    _write_manifest(
+        out_dir, name, "train_step", pspecs, sspecs,
+        [{"name": "tokens", "shape": [cfg.rows, cfg.seq], "dtype": "i32"}],
+        ["lr", "step"],
+        {"family": "transformer_lm", "vocab": cfg.vocab, "d_model": cfg.d_model,
+         "layers": cfg.layers, "heads": cfg.heads, "d_ff": cfg.d_ff,
+         "rows": cfg.rows, "seq": cfg.seq,
+         "total_params": sum(math.prod(s) for _, s, _, _ in pspecs)},
+        {"kind": opt_kind, "eps": EPS, "beta2": et_beta2,
+         "state_scalars": sum(math.prod(s) for _, s in sspecs)},
+        src_hash,
+    )
+    return True
+
+
+def build_lm_eval(out_dir, cfg_name, cfg, src_hash):
+    name = f"{cfg_name}_eval"
+    if _is_current(out_dir, name, src_hash):
+        return False
+    pspecs = lm_mod.param_specs(cfg)
+
+    def fn(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        total, count = lm_mod.nll_fn(params, tokens, cfg)
+        return (total, count)
+
+    args = [_spec(s) for _, s, _, _ in pspecs] + [_spec((cfg.rows, cfg.seq), jnp.int32)]
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+    _write_manifest(
+        out_dir, name, "eval_step", pspecs, [],
+        [{"name": "tokens", "shape": [cfg.rows, cfg.seq], "dtype": "i32"}],
+        [], {"family": "transformer_lm", "vocab": cfg.vocab}, {"kind": "none"},
+        src_hash,
+    )
+    return True
+
+
+def build_lm_grad(out_dir, cfg_name, cfg, src_hash):
+    name = f"{cfg_name}_grad"
+    if _is_current(out_dir, name, src_hash):
+        return False
+    pspecs = lm_mod.param_specs(cfg)
+
+    def fn(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        loss, grads = lm_mod.loss_and_grads(params, tokens, cfg)
+        return tuple([loss] + list(grads))
+
+    args = [_spec(s) for _, s, _, _ in pspecs] + [_spec((cfg.rows, cfg.seq), jnp.int32)]
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+    _write_manifest(
+        out_dir, name, "grad_step", pspecs, [],
+        [{"name": "tokens", "shape": [cfg.rows, cfg.seq], "dtype": "i32"}],
+        [], {"family": "transformer_lm", "vocab": cfg.vocab}, {"kind": "none"},
+        src_hash,
+    )
+    return True
+
+
+# ---------------------------------------------------------------------------
+# CNN artifacts
+# ---------------------------------------------------------------------------
+
+
+def build_cnn_artifact(out_dir, opt_kind, src_hash):
+    cfg = CNN_CONFIG
+    name = f"cnn_{opt_kind}"
+    if _is_current(out_dir, name, src_hash):
+        return False
+    pspecs = cnn_mod.param_specs(cfg)
+    sspecs = optim_jax.state_specs(opt_kind, pspecs)
+    np_, ns = len(pspecs), len(sspecs)
+
+    def fn(*args):
+        params = list(args[:np_])
+        opt_state = list(args[np_ : np_ + ns])
+        images, labels, lr, step = args[np_ + ns :]
+        loss, grads = cnn_mod.loss_and_grads(params, images, labels, cfg)
+        new_params, new_state = optim_jax.apply_updates(
+            opt_kind, pspecs, params, grads, opt_state, lr, step,
+            eps=EPS, et_beta2=ET_BETA2_CNN, beta1=0.0,  # paper: Adam beta1=0
+        )
+        return tuple([loss] + new_params + new_state)
+
+    args = (
+        [_spec(s) for _, s, _, _ in pspecs]
+        + [_spec(s) for _, s in sspecs]
+        + [
+            _spec((cfg.batch, cfg.in_ch, cfg.img, cfg.img)),
+            _spec((cfg.batch,), jnp.int32),
+            _spec(()),
+            _spec(()),
+        ]
+    )
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+    _write_manifest(
+        out_dir, name, "train_step", pspecs, sspecs,
+        [
+            {"name": "images", "shape": [cfg.batch, cfg.in_ch, cfg.img, cfg.img],
+             "dtype": "f32"},
+            {"name": "labels", "shape": [cfg.batch], "dtype": "i32"},
+        ],
+        ["lr", "step"],
+        {"family": "cnn", "classes": cfg.classes, "batch": cfg.batch},
+        {"kind": opt_kind, "eps": EPS, "beta2": ET_BETA2_CNN,
+         "state_scalars": sum(math.prod(s) for _, s in sspecs)},
+        src_hash,
+    )
+    return True
+
+
+def build_cnn_eval(out_dir, src_hash):
+    cfg = CNN_CONFIG
+    name = "cnn_eval"
+    if _is_current(out_dir, name, src_hash):
+        return False
+    pspecs = cnn_mod.param_specs(cfg)
+
+    def fn(*args):
+        params = list(args[:-2])
+        images, labels = args[-2:]
+        wrong, count = cnn_mod.error_count_fn(params, images, labels, cfg)
+        return (wrong, count)
+
+    args = [_spec(s) for _, s, _, _ in pspecs] + [
+        _spec((cfg.batch, cfg.in_ch, cfg.img, cfg.img)),
+        _spec((cfg.batch,), jnp.int32),
+    ]
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+    _write_manifest(
+        out_dir, name, "eval_step", pspecs, [],
+        [
+            {"name": "images", "shape": [cfg.batch, cfg.in_ch, cfg.img, cfg.img],
+             "dtype": "f32"},
+            {"name": "labels", "shape": [cfg.batch], "dtype": "i32"},
+        ],
+        [], {"family": "cnn", "classes": cfg.classes}, {"kind": "none"},
+        src_hash,
+    )
+    return True
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures (rust cross-layer tests)
+# ---------------------------------------------------------------------------
+
+
+def build_goldens(out_dir: pathlib.Path, src_hash: str):
+    """Tiny fixed inputs + expected outputs, as JSON, for rust to diff
+    against both the compiled artifact and its own native ET oracle."""
+    gdir = out_dir / "golden"
+    gdir.mkdir(parents=True, exist_ok=True)
+    stamp = gdir / "source_hash.txt"
+    if stamp.exists() and stamp.read_text() == src_hash:
+        return False
+    rng = np.random.default_rng(20200417)
+
+    # 1. kernel-level golden: slice sums + one Algorithm-1 update
+    dims = (4, 5, 6)
+    n = math.prod(dims)
+    g = rng.normal(size=(n,)).astype(np.float32)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    from .kernels import ref
+
+    sums = ref.slice_sq_sums(jnp.asarray(g), dims)
+    new_x = ref.et_update(jnp.asarray(x), jnp.asarray(g), sums, EPS, 0.37)
+    (gdir / "et_kernel.json").write_text(json.dumps({
+        "dims": list(dims), "eps": EPS, "lr": 0.37,
+        "g": g.tolist(), "x": x.tolist(),
+        "sums": [np.asarray(s).tolist() for s in sums],
+        "new_x": np.asarray(new_x).tolist(),
+    }))
+
+    # 2. micro train-step golden: two fused et2 steps from fixed params
+    cfg = LM_CONFIGS["lm_micro"]
+    pspecs = lm_mod.param_specs(cfg)
+    sspecs = optim_jax.state_specs("et2", pspecs)
+    params_init = []
+    for name, shape, init, scale in pspecs:
+        if init == "normal":
+            params_init.append(jnp.asarray(
+                rng.normal(size=shape).astype(np.float32) * scale))
+        elif init == "ones":
+            params_init.append(jnp.ones(shape, jnp.float32))
+        else:
+            params_init.append(jnp.zeros(shape, jnp.float32))
+    params = list(params_init)
+    state = [jnp.zeros(s, jnp.float32) for _, s in sspecs]
+    tokens = rng.integers(1, cfg.vocab, size=(cfg.rows, cfg.seq)).astype(np.int32)
+    losses = []
+    for step in (1.0, 2.0):
+        loss, grads = lm_mod.loss_and_grads(params, jnp.asarray(tokens), cfg)
+        params, state = optim_jax.apply_updates(
+            "et2", pspecs, params, grads, state,
+            jnp.float32(0.05), jnp.float32(step), eps=EPS, et_beta2=ET_BETA2_LM)
+        losses.append(float(loss))
+    (gdir / "lm_micro_et2_steps.json").write_text(json.dumps({
+        "config": "lm_micro", "optimizer": "et2", "lr": 0.05, "steps": 2,
+        "tokens": tokens.reshape(-1).tolist(),
+        "param_init": [
+            {"name": pspecs[i][0],
+             "values": np.asarray(p).reshape(-1).tolist()}
+            for i, p in enumerate(params_init)
+        ],
+        "losses": losses,
+        "final_param_checksums": [
+            {"name": pspecs[i][0], "sum_abs": float(jnp.sum(jnp.abs(p)))}
+            for i, p in enumerate(params)
+        ],
+        "final_state_checksums": [
+            {"name": sspecs[i][0], "sum": float(jnp.sum(s))}
+            for i, s in enumerate(state)
+        ],
+    }))
+    stamp.write_text(src_hash)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="artifact name filter (substring match)")
+    ns = ap.parse_args(argv)
+    out_dir = pathlib.Path(ns.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    src_hash = _source_hash()
+
+    jobs = []
+    for opt in MICRO_OPTIMIZERS:
+        jobs.append((f"lm_micro_{opt}",
+                     lambda o=opt: build_lm_artifact(
+                         out_dir, "lm_micro", LM_CONFIGS["lm_micro"], o,
+                         src_hash, ET_BETA2_LM)))
+    jobs.append(("lm_micro_eval",
+                 lambda: build_lm_eval(out_dir, "lm_micro", LM_CONFIGS["lm_micro"], src_hash)))
+    jobs.append(("lm_micro_grad",
+                 lambda: build_lm_grad(out_dir, "lm_micro", LM_CONFIGS["lm_micro"], src_hash)))
+    for opt in LM_OPTIMIZERS:
+        jobs.append((f"lm_tiny_{opt}",
+                     lambda o=opt: build_lm_artifact(
+                         out_dir, "lm_tiny", LM_CONFIGS["lm_tiny"], o,
+                         src_hash, ET_BETA2_LM)))
+    jobs.append(("lm_tiny_eval",
+                 lambda: build_lm_eval(out_dir, "lm_tiny", LM_CONFIGS["lm_tiny"], src_hash)))
+    jobs.append(("lm_tiny_grad",
+                 lambda: build_lm_grad(out_dir, "lm_tiny", LM_CONFIGS["lm_tiny"], src_hash)))
+    for opt in BIG_OPTIMIZERS:
+        jobs.append((f"lm_big_{opt}",
+                     lambda o=opt: build_lm_artifact(
+                         out_dir, "lm_big", LM_CONFIGS["lm_big"], o,
+                         src_hash, ET_BETA2_LM)))
+    jobs.append(("lm_big_eval",
+                 lambda: build_lm_eval(out_dir, "lm_big", LM_CONFIGS["lm_big"], src_hash)))
+    for opt in CNN_OPTIMIZERS:
+        jobs.append((f"cnn_{opt}", lambda o=opt: build_cnn_artifact(out_dir, o, src_hash)))
+    jobs.append(("cnn_eval", lambda: build_cnn_eval(out_dir, src_hash)))
+    jobs.append(("golden", lambda: build_goldens(out_dir, src_hash)))
+
+    built = skipped = 0
+    for name, job in jobs:
+        if ns.only and not any(f in name for f in ns.only):
+            continue
+        if job():
+            built += 1
+            print(f"[aot] built {name}", flush=True)
+        else:
+            skipped += 1
+    print(f"[aot] done: {built} built, {skipped} up-to-date "
+          f"(source hash {src_hash})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

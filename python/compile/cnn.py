@@ -1,0 +1,100 @@
+"""Layer 2: small convolutional classifier for the appendix vision
+experiment (Table 4 / Figure 4 substitute — see DESIGN.md §3).
+
+Architecture: two 3x3 conv + relu + 2x2 avg-pool stages, then a linear
+classifier. Parameter shapes are conv-shaped `(out, in, kh, kw)` so the
+Table 3 factorization presets apply directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    classes: int = 10
+    img: int = 32
+    in_ch: int = 3
+    ch1: int = 16
+    ch2: int = 32
+    batch: int = 32
+
+    @property
+    def fc_in(self) -> int:
+        return self.ch2 * (self.img // 4) * (self.img // 4)
+
+
+def param_specs(cfg: CnnConfig):
+    """Ordered (name, shape, init, init_scale) — the artifact contract."""
+    return [
+        ("conv1", (cfg.ch1, cfg.in_ch, 3, 3), "normal", (cfg.in_ch * 9) ** -0.5),
+        ("b1", (cfg.ch1,), "zeros", 0.0),
+        ("conv2", (cfg.ch2, cfg.ch1, 3, 3), "normal", (cfg.ch1 * 9) ** -0.5),
+        ("b2", (cfg.ch2,), "zeros", 0.0),
+        ("fc", (cfg.fc_in, cfg.classes), "normal", cfg.fc_in ** -0.5),
+        ("fcb", (cfg.classes,), "zeros", 0.0),
+    ]
+
+
+def init_params(cfg: CnnConfig, key):
+    params = []
+    for _, shape, init, scale in param_specs(cfg):
+        if init == "normal":
+            key, sub = jax.random.split(key)
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def _conv(x, w, b):
+    # x: (B, C, H, W), w: (O, I, kh, kw) -> same-padded conv
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    ) * 0.25
+
+
+def logits_fn(params, images, cfg: CnnConfig):
+    """images f32[B, 3, 32, 32] -> logits f32[B, classes]."""
+    conv1, b1, conv2, b2, fc, fcb = params
+    h = _pool2(jax.nn.relu(_conv(images, conv1, b1)))
+    h = _pool2(jax.nn.relu(_conv(h, conv2, b2)))
+    h = h.reshape(h.shape[0], -1)
+    return h @ fc + fcb
+
+
+def nll_fn(params, images, labels, cfg: CnnConfig):
+    """(total_nll, count) cross-entropy."""
+    logits = logits_fn(params, images, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tnll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(tnll), jnp.float32(labels.shape[0])
+
+
+def mean_loss_fn(params, images, labels, cfg: CnnConfig):
+    total, count = nll_fn(params, images, labels, cfg)
+    return total / count
+
+
+def error_count_fn(params, images, labels, cfg: CnnConfig):
+    """(wrong_count, count) for test-error aggregation (eval artifact)."""
+    logits = logits_fn(params, images, cfg)
+    pred = jnp.argmax(logits, axis=-1).astype(labels.dtype)
+    wrong = jnp.sum((pred != labels).astype(jnp.float32))
+    return wrong, jnp.float32(labels.shape[0])
+
+
+def loss_and_grads(params, images, labels, cfg: CnnConfig):
+    return jax.value_and_grad(lambda ps: mean_loss_fn(ps, images, labels, cfg))(params)

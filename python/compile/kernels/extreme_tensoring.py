@@ -1,0 +1,194 @@
+"""Pallas kernels for the extreme-tensoring hot spots (Layer 1).
+
+Two compute patterns dominate Algorithm 1:
+
+1. **Slice-sum reduction** (line 6): per-mode sums of squared gradient
+   entries. Any mode-``i`` slice sum of a ``p``-order tensor is a row-sum
+   of squares of a 2-D view ``(a * d_i, b)`` followed by a tiny ``(a, d_i)``
+   reduction, so one tiled 2-D kernel (`rowsum_sq`) covers every mode of
+   every order.
+
+2. **Fused preconditioner apply** (lines 7-8): the elementwise update
+   ``x - lr * g * (eps + prod)^(-1/(2p))``. `et_apply_flat` fuses the power,
+   multiply and subtraction so ``x`` and ``g`` stream through VMEM exactly
+   once (arithmetic intensity ~4 flops/element — bandwidth-bound, as an
+   optimizer update should be). For the common matrix case (p = 2) the
+   rank-one product is consumed directly from the two accumulator vectors
+   by `et_apply_2d`, skipping the materialized product vector entirely.
+
+All kernels run with ``interpret=True``: at AOT-lowering time this expands
+to plain HLO (so the rust CPU-PJRT runtime executes compiled XLA, not a
+python interpreter); on a real TPU the same BlockSpecs express the
+HBM->VMEM schedule.
+
+Block sizes are chosen as divisors of the array dims (tensor-index dims are
+products of small factors by construction, so good divisors always exist)
+to avoid masked edge tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget heuristic: keep each operand block <= ~128K f32 (~512 KiB),
+# comfortably inside a TPU core's ~16 MiB VMEM with double-buffering.
+_BLOCK_TARGET_ROWS = 256
+_BLOCK_TARGET_COLS = 512
+_BLOCK_TARGET_FLAT = 64 * 1024
+
+
+def _divisor_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (n itself if n <= target)."""
+    if n <= target:
+        return n
+    best = 1
+    a = 1
+    while a * a <= n:
+        if n % a == 0:
+            for c in (a, n // a):
+                if c <= target and c > best:
+                    best = c
+        a += 1
+    return best
+
+
+def rowsum_sq(x, *, block_rows: int = _BLOCK_TARGET_ROWS, block_cols: int = _BLOCK_TARGET_COLS):
+    """Tiled row sums of squares: out[i] = sum_j x[i, j]^2.
+
+    Grid is (row_blocks, col_blocks); the column dimension is innermost, so
+    each output block is initialized on the first column tile and
+    accumulated across the rest (the standard Pallas reduction pattern).
+    """
+    m, n = x.shape
+    bm = _divisor_block(m, block_rows)
+    bn = _divisor_block(n, block_cols)
+
+    def kernel(x_ref, o_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        blk = x_ref[...]
+        o_ref[...] += jnp.sum(blk * blk, axis=1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def mode_slice_sums(g_flat, dims):
+    """Per-mode squared slice sums via the 2-D rowsum kernel.
+
+    For mode i with dims = (a, d_i, b) split: reshape the gradient to
+    ``(a * d_i, b)``, rowsum-square (the O(d) heavy pass), then fold the
+    leading ``a`` copies with a cheap ``(a, d_i)`` sum.
+    """
+    p = len(dims)
+    out = []
+    for i in range(p):
+        a = 1
+        for d in dims[:i]:
+            a *= d
+        b = 1
+        for d in dims[i + 1 :]:
+            b *= d
+        di = dims[i]
+        if b == 1:
+            # mode is innermost: rows are already (a, d_i) columns
+            per_row = rowsum_sq(jnp.reshape(g_flat, (a * di, 1)))
+        else:
+            per_row = rowsum_sq(jnp.reshape(g_flat, (a * di, b)))
+        out.append(jnp.sum(jnp.reshape(per_row, (a, di)), axis=0))
+    return out
+
+
+def et_apply_flat(x_flat, g_flat, prod_flat, lr, eps: float, p: int,
+                  *, block: int = _BLOCK_TARGET_FLAT):
+    """Fused Algorithm-1 update on flat vectors:
+
+    ``out = x - lr * g * (eps + prod) ** (-1/(2p))``
+
+    `prod_flat` is the materialized rank-one product ``prod_i S_i[I_i]``
+    (built by `kron_chain`); `lr` is a traced scalar (the schedule lives in
+    rust). One read of x/g/prod, one write of out.
+    """
+    (n,) = x_flat.shape
+    bn = _divisor_block(n, block)
+    inv_exp = -1.0 / (2.0 * p)
+
+    def kernel(x_ref, g_ref, prod_ref, lr_ref, o_ref):
+        delta = jnp.power(eps + prod_ref[...], inv_exp)
+        o_ref[...] = x_ref[...] - lr_ref[0] * g_ref[...] * delta
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x_flat.dtype),
+        interpret=True,
+    )(x_flat, g_flat, prod_flat, jnp.reshape(lr, (1,)))
+
+
+def et_apply_2d(x, g, sr, sc, lr, eps: float,
+                *, block_rows: int = _BLOCK_TARGET_ROWS,
+                block_cols: int = _BLOCK_TARGET_COLS):
+    """p=2 fused update without materializing the product vector:
+
+    ``out[i,j] = x[i,j] - lr * g[i,j] * (eps + sr[i]*sc[j]) ** (-1/4)``
+    """
+    m, n = x.shape
+    bm = _divisor_block(m, block_rows)
+    bn = _divisor_block(n, block_cols)
+
+    def kernel(x_ref, g_ref, sr_ref, sc_ref, lr_ref, o_ref):
+        denom = eps + sr_ref[...][:, None] * sc_ref[...][None, :]
+        delta = jnp.power(denom, -0.25)
+        o_ref[...] = x_ref[...] - lr_ref[0] * g_ref[...] * delta
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, g, sr, sc, jnp.reshape(lr, (1,)))
+
+
+def kron_chain(sums):
+    """Materialize ``prod_i S_i[I_i]`` as a flat length-d vector by repeated
+    outer products (log-p doublings, ~2d total work)."""
+    prod = sums[0]
+    for s in sums[1:]:
+        prod = (prod[:, None] * s[None, :]).reshape(-1)
+    return prod
+
+
+@functools.partial(jax.jit, static_argnames=("dims", "eps", "p"))
+def et_group_update(x_flat, g_flat, sums, lr, *, dims, eps: float, p: int):
+    """Convenience jit wrapper used by tests: full slice-sum + apply for one
+    group, given pre-accumulated sums."""
+    del dims
+    prod = kron_chain(list(sums))
+    return et_apply_flat(x_flat, g_flat, prod, lr, eps, p)

@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1 correctness).
+
+Everything here is straight-line jnp with no tiling tricks — the simplest
+possible statement of Algorithm 1's two compute hot-spots:
+
+* ``slice_sq_sums``: per-mode sums of squared gradient entries over tensor
+  slices (Algorithm 1, line 6).
+* ``et_step_sizes`` / ``et_apply``: the rank-one inverse-2p-root
+  preconditioner (Algorithm 1, lines 7-8).
+
+The pytest + hypothesis suites assert the Pallas kernels match these on
+shape/value sweeps, and ``aot.py`` embeds golden outputs for the rust
+cross-checks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def slice_sq_sums(g, dims):
+    """Per-mode squared slice sums of ``g`` reshaped to ``dims``.
+
+    Returns a list of arrays, one per mode i with shape (dims[i],):
+    ``S[i][j] = sum_{I: I_i = j} g[I]^2``.
+    """
+    t = jnp.reshape(g, dims)
+    sq = t * t
+    p = len(dims)
+    return [jnp.sum(sq, axis=tuple(a for a in range(p) if a != i)) for i in range(p)]
+
+
+def et_step_sizes(sums, eps):
+    """delta[I] = (eps + prod_i S[i][I_i]) ** (-1/(2p)), flattened."""
+    p = len(sums)
+    prod = sums[0]
+    for i in range(1, p):
+        prod = prod[..., None] * sums[i]
+    return jnp.power(eps + prod, -1.0 / (2.0 * p)).reshape(-1)
+
+
+def et_apply(g, sums, eps):
+    """Preconditioned gradient ``delta * g`` (flat, same length as g)."""
+    delta = et_step_sizes(sums, eps)
+    return jnp.reshape(g, (-1,)) * delta
+
+
+def et_update(x, g, sums, eps, lr):
+    """Full Algorithm 1 inner update given *already accumulated* sums."""
+    return jnp.reshape(x, (-1,)) - lr * et_apply(g, sums, eps)
+
+
+def rowsum_sq(x):
+    """Row sums of squares of a 2-D array: out[i] = sum_j x[i,j]^2."""
+    return jnp.sum(x * x, axis=1)
+
+
+def colsum_sq(x):
+    """Column sums of squares of a 2-D array: out[j] = sum_i x[i,j]^2."""
+    return jnp.sum(x * x, axis=0)
+
+
+def et_apply_2d(g, sr, sc, eps):
+    """p=2 fused preconditioner apply:
+    out[i,j] = g[i,j] * (eps + sr[i]*sc[j]) ** (-1/4).
+    """
+    denom = eps + sr[:, None] * sc[None, :]
+    return g * jnp.power(denom, -0.25)

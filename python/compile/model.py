@@ -1,0 +1,140 @@
+"""Layer 2: decoder-only transformer language model in pure jnp.
+
+Mirrors the paper's base architecture family (Tensor2Tensor "base"
+Transformer, decoder-only, shared embedding/softmax weights, sinusoidal
+positions) at configurable scale. Parameters are an *ordered list* —
+the order is the artifact contract consumed by the rust runtime, recorded
+in the manifest by ``aot.py``.
+
+Loss is next-token cross-entropy over the packed stream with PAD (id 0)
+targets masked, returning ``(total_nll, token_count)`` so the rust side
+can aggregate exact corpus perplexity across batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+PAD_ID = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 1904
+    d_model: int = 128
+    layers: int = 2
+    heads: int = 4
+    d_ff: int = 512
+    rows: int = 8
+    seq: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+def param_specs(cfg: LmConfig):
+    """Ordered (name, shape, init, init_scale) — the artifact contract."""
+    specs = [("embed", (cfg.vocab, cfg.d_model), "normal", cfg.d_model ** -0.5)]
+    wscale = cfg.d_model ** -0.5
+    fscale = cfg.d_ff ** -0.5
+    for l in range(cfg.layers):
+        specs += [
+            (f"l{l}.ln1", (cfg.d_model,), "ones", 0.0),
+            (f"l{l}.wq", (cfg.d_model, cfg.d_model), "normal", wscale),
+            (f"l{l}.wk", (cfg.d_model, cfg.d_model), "normal", wscale),
+            (f"l{l}.wv", (cfg.d_model, cfg.d_model), "normal", wscale),
+            (f"l{l}.wo", (cfg.d_model, cfg.d_model), "normal", wscale),
+            (f"l{l}.ln2", (cfg.d_model,), "ones", 0.0),
+            (f"l{l}.ff1", (cfg.d_model, cfg.d_ff), "normal", wscale),
+            (f"l{l}.ff1b", (cfg.d_ff,), "zeros", 0.0),
+            (f"l{l}.ff2", (cfg.d_ff, cfg.d_model), "normal", fscale),
+            (f"l{l}.ff2b", (cfg.d_model,), "zeros", 0.0),
+        ]
+    specs.append(("ln_f", (cfg.d_model,), "ones", 0.0))
+    return specs
+
+
+def init_params(cfg: LmConfig, key):
+    """Test-time initializer (the rust runtime has its own, seeded from the
+    manifest; this one is only for python-side tests)."""
+    params = []
+    for name, shape, init, scale in param_specs(cfg):
+        if init == "normal":
+            key, sub = jax.random.split(key)
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+        elif init == "ones":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def _sinusoidal(seq: int, dim: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    half = dim // 2
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def _layer_norm(x, gain):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gain * (x - mu) * jax.lax.rsqrt(var + 1e-6)
+
+
+def _unpack(params, cfg: LmConfig):
+    names = [s[0] for s in param_specs(cfg)]
+    return dict(zip(names, params))
+
+
+def logits_fn(params, tokens, cfg: LmConfig):
+    """tokens i32[rows, seq] -> logits f32[rows, seq, vocab]."""
+    p = _unpack(params, cfg)
+    b, s = tokens.shape
+    h = p["embed"][tokens] * (cfg.d_model ** 0.5) + _sinusoidal(s, cfg.d_model)[None]
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    for l in range(cfg.layers):
+        # --- pre-norm multi-head self-attention ---
+        x = _layer_norm(h, p[f"l{l}.ln1"])
+        q = (x @ p[f"l{l}.wq"]).reshape(b, s, cfg.heads, cfg.head_dim)
+        k = (x @ p[f"l{l}.wk"]).reshape(b, s, cfg.heads, cfg.head_dim)
+        v = (x @ p[f"l{l}.wv"]).reshape(b, s, cfg.heads, cfg.head_dim)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+        att = jnp.where(causal[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, cfg.d_model)
+        h = h + ctx @ p[f"l{l}.wo"]
+        # --- pre-norm feed-forward ---
+        x = _layer_norm(h, p[f"l{l}.ln2"])
+        ff = jax.nn.relu(x @ p[f"l{l}.ff1"] + p[f"l{l}.ff1b"])
+        h = h + ff @ p[f"l{l}.ff2"] + p[f"l{l}.ff2b"]
+    h = _layer_norm(h, p["ln_f"])
+    # weight-tied softmax
+    return h @ p["embed"].T
+
+
+def nll_fn(params, tokens, cfg: LmConfig):
+    """(total_nll, token_count) for next-token prediction, PAD masked."""
+    logits = logits_fn(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tnll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != PAD_ID).astype(jnp.float32)
+    return jnp.sum(tnll * mask), jnp.sum(mask)
+
+
+def mean_loss_fn(params, tokens, cfg: LmConfig):
+    total, count = nll_fn(params, tokens, cfg)
+    return total / jnp.maximum(count, 1.0)
+
+
+def loss_and_grads(params, tokens, cfg: LmConfig):
+    """(mean_nll, grads) — what the train-step artifacts differentiate."""
+    return jax.value_and_grad(lambda ps: mean_loss_fn(ps, tokens, cfg))(params)

@@ -1,0 +1,172 @@
+"""Layer 2: optimizer updates in JAX — one fused train step per
+(model, optimizer) pair gets AOT-lowered by ``aot.py``.
+
+The extreme-tensoring path calls the Layer-1 Pallas kernels
+(`mode_slice_sums` for the reduction, `et_apply_2d` / `et_apply_flat` for
+the fused update), so the kernels lower into the same HLO the rust runtime
+executes. Baselines (SGD/AdaGrad/Adam/Adafactor) are plain jnp.
+
+Update rules intentionally match ``rust/src/optim/`` scalar-for-scalar:
+the cross-layer golden tests diff a compiled artifact step against the
+rust oracle.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from . import planner
+from .kernels import extreme_tensoring as ek
+
+# ---------------------------------------------------------------------------
+# state-spec construction (shared with aot.py's manifest writer)
+# ---------------------------------------------------------------------------
+
+
+def state_specs(kind: str, param_specs):
+    """Ordered optimizer-state (name, shape) for ``kind`` over the model's
+    parameter specs. Empty for SGD."""
+    out = []
+    for name, shape, _init, _scale in param_specs:
+        numel = math.prod(shape)
+        if kind == "sgd":
+            continue
+        elif kind == "adagrad":
+            out.append((f"{name}.acc", tuple(shape)))
+        elif kind == "adam":
+            out.append((f"{name}.m", tuple(shape)))
+            out.append((f"{name}.v", tuple(shape)))
+        elif kind == "adafactor":
+            nat = planner.natural_dims(shape)
+            if len(nat) >= 2:
+                rows = math.prod(nat[:-1])
+                out.append((f"{name}.r", (rows,)))
+                out.append((f"{name}.c", (nat[-1],)))
+            else:
+                out.append((f"{name}.acc", tuple(shape)))
+        elif kind.startswith("et") and kind != "etinf":
+            level = int(kind[2:])
+            dims = planner.plan(shape, level)
+            for i, d in enumerate(dims):
+                out.append((f"{name}.s{i}", (d,)))
+        elif kind == "etinf":
+            out.append((f"{name}.s", (1,)))
+        else:
+            raise ValueError(f"unknown optimizer kind '{kind}'")
+        del numel
+    return out
+
+
+# ---------------------------------------------------------------------------
+# update rules
+# ---------------------------------------------------------------------------
+
+
+def _et_group_update(x, g, sums, dims, lr, step, eps, beta2):
+    """Algorithm 1 for one parameter group. ``sums`` are this group's
+    accumulator vectors (manifest order); returns (new_x, new_sums).
+
+    With ``beta2`` set (the decayed Adam/RMSprop analogue, paper remark 1),
+    the accumulators are EMAs and the step is rescaled by the Adam-style
+    sqrt bias correction — matching
+    ``SliceAccumulators::apply_update_bias_corrected`` on the rust side.
+    """
+    p = len(dims)
+    g_flat = jnp.reshape(g, (-1,))
+    fresh = ek.mode_slice_sums(g_flat, tuple(dims))  # L1 Pallas reduction
+    if beta2 is None:
+        new_sums = [s + f for s, f in zip(sums, fresh)]
+        lr_eff = lr
+    else:
+        new_sums = [beta2 * s + (1.0 - beta2) * f for s, f in zip(sums, fresh)]
+        corr = 1.0 - jnp.power(jnp.float32(beta2), step)
+        lr_eff = lr * jnp.sqrt(corr)
+    if p == 2 and len(x.shape) == 2 and tuple(x.shape) == tuple(dims):
+        new_x = ek.et_apply_2d(x, g, new_sums[0], new_sums[1], lr_eff, eps)
+    else:
+        prod = ek.kron_chain(new_sums)
+        new_flat = ek.et_apply_flat(
+            jnp.reshape(x, (-1,)), g_flat, prod, lr_eff, eps, p
+        )
+        new_x = jnp.reshape(new_flat, x.shape)
+    return new_x, new_sums
+
+
+def apply_updates(kind: str, param_specs, params, grads, opt_state, lr, step,
+                  *, eps: float = 1e-8, beta1: float = 0.9,
+                  beta2: float = 0.999, et_beta2=None):
+    """Apply one optimizer step. ``opt_state`` is the flat ordered list from
+    ``state_specs``; returns (new_params, new_opt_state).
+
+    ``lr`` and ``step`` are traced f32 scalars supplied by the rust
+    coordinator each step (L3 owns the schedule).
+    """
+    new_params = []
+    new_state = []
+    si = 0  # opt_state cursor
+
+    for (name, shape, _i, _s), x, g in zip(param_specs, params, grads):
+        if kind == "sgd":
+            new_params.append(x - lr * g)
+
+        elif kind == "adagrad":
+            acc = opt_state[si]; si += 1
+            acc = acc + g * g
+            new_params.append(x - lr * g / jnp.sqrt(eps + acc))
+            new_state.append(acc)
+
+        elif kind == "adam":
+            m = opt_state[si]; v = opt_state[si + 1]; si += 2
+            m = beta1 * m + (1.0 - beta1) * g
+            v = beta2 * v + (1.0 - beta2) * g * g
+            bc1 = 1.0 - jnp.power(jnp.float32(beta1), step)
+            bc2 = 1.0 - jnp.power(jnp.float32(beta2), step)
+            new_params.append(x - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            new_state.append(m)
+            new_state.append(v)
+
+        elif kind == "adafactor":
+            nat = planner.natural_dims(shape)
+            if len(nat) >= 2:
+                rows = math.prod(nat[:-1])
+                cols = nat[-1]
+                r = opt_state[si]; c = opt_state[si + 1]; si += 2
+                g2 = jnp.reshape(g, (rows, cols))
+                g2sq = g2 * g2
+                # cumulative (AdaGrad-style) sums, matching rust beta2=None
+                r = r + jnp.mean(g2sq, axis=1)
+                c = c + jnp.mean(g2sq, axis=0)
+                mean_r = jnp.mean(r)
+                vhat = (r / mean_r)[:, None] * c[None, :]
+                upd = g2 / jnp.sqrt(vhat + eps)
+                new_params.append(x - lr * jnp.reshape(upd, x.shape))
+                new_state.append(r)
+                new_state.append(c)
+            else:
+                acc = opt_state[si]; si += 1
+                acc = acc + g * g
+                new_params.append(x - lr * g / jnp.sqrt(acc + eps))
+                new_state.append(acc)
+
+        elif kind.startswith("et") and kind != "etinf":
+            level = int(kind[2:])
+            dims = planner.plan(shape, level)
+            p = len(dims)
+            sums = opt_state[si : si + p]; si += p
+            new_x, new_sums = _et_group_update(x, g, sums, dims, lr, step, eps, et_beta2)
+            new_params.append(new_x)
+            new_state.extend(new_sums)
+
+        elif kind == "etinf":
+            s = opt_state[si]; si += 1
+            s = s + jnp.sum(g * g)
+            new_params.append(x - lr * g / jnp.sqrt(eps + s))
+            new_state.append(jnp.reshape(s, (1,)))
+
+        else:
+            raise ValueError(f"unknown optimizer kind '{kind}'")
+
+    assert si == len(opt_state), f"state cursor {si} != {len(opt_state)}"
+    return new_params, new_state

@@ -1,0 +1,69 @@
+"""Factorization planner — python mirror of ``rust/src/tensoring/planner.rs``.
+
+The tensor-index dims chosen here are baked into the AOT artifacts (the
+optimizer-state shapes in each manifest), so the rust side never re-plans
+for artifact-driven training; the rust planner exists for the native
+(convex/regret) experiments and is tested against the same paper tables.
+Keeping the two implementations in lockstep is enforced by the golden tests
+(the manifest opt-state shapes are produced here and consumed there).
+
+Scheme (paper Table 3 / Appendix B.1):
+  * ET1: the parameter's natural tensor (conv spatial dims merged).
+  * ET(k+1): split every ET(k) factor > 10 into (a, n/a), a = largest
+    divisor <= sqrt(n). Primes pass through.
+"""
+
+from __future__ import annotations
+
+import math
+
+SPLIT_THRESHOLD = 10
+
+
+def balanced_divisor(n: int) -> int:
+    """Largest divisor of n that is <= sqrt(n); 1 when n is prime."""
+    best = 1
+    a = 1
+    while a * a <= n:
+        if n % a == 0:
+            best = a
+        a += 1
+    return best
+
+
+def natural_dims(shape: tuple[int, ...]) -> list[int]:
+    """ET1 dims: drop size-1 axes; merge conv spatial dims (rank >= 4)."""
+    dims = [d for d in shape if d > 1]
+    if not dims:
+        dims = [1]
+    if len(dims) >= 4:
+        spatial = math.prod(dims[2:])
+        dims = dims[:2] + [spatial]
+    return dims
+
+
+def _split_factor(n: int, out: list[int]) -> None:
+    if n <= SPLIT_THRESHOLD:
+        out.append(n)
+        return
+    a = balanced_divisor(n)
+    if a == 1:
+        out.append(n)  # prime
+    else:
+        out.append(a)
+        out.append(n // a)
+
+
+def plan(shape: tuple[int, ...], level: int) -> list[int]:
+    """Tensor-index dims for ``shape`` at ET level ``level`` (>= 1)."""
+    dims = natural_dims(tuple(shape))
+    for _ in range(max(level, 1) - 1):
+        nxt: list[int] = []
+        for f in dims:
+            _split_factor(f, nxt)
+        dims = nxt
+    return dims
+
+
+def plan_state_len(dims: list[int]) -> int:
+    return sum(dims)

@@ -1,0 +1,88 @@
+"""AOT pipeline checks: manifests are consistent with the lowered HLO, HLO
+text parses, and the caching layer behaves."""
+
+import json
+import math
+import pathlib
+import re
+
+import pytest
+
+from compile import aot, optim_jax
+from compile import model as lm_mod
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "lm_micro_et2.json").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def _manifest(name):
+    return json.loads((ART / f"{name}.json").read_text())
+
+
+def _entry_param_count(name):
+    text = (ART / f"{name}.hlo.txt").read_text()
+    entry = text[text.index("ENTRY") :]
+    body = entry[: entry.index("\n}")]
+    return len(set(re.findall(r"parameter\((\d+)\)", body)))
+
+
+@pytest.mark.parametrize("name", ["lm_micro_et1", "lm_micro_et2", "lm_micro_et3",
+                                  "lm_micro_adagrad", "lm_micro_adam",
+                                  "lm_micro_adafactor", "lm_micro_sgd",
+                                  "lm_micro_etinf"])
+def test_manifest_arity_matches_hlo(name):
+    m = _manifest(name)
+    want = (len(m["params"]) + len(m["opt_state"]) + len(m["data_inputs"])
+            + len(m["extra_inputs"]))
+    assert _entry_param_count(name) == want
+
+
+def test_eval_manifest_arity():
+    m = _manifest("lm_micro_eval")
+    want = len(m["params"]) + len(m["data_inputs"])
+    assert _entry_param_count("lm_micro_eval") == want
+
+
+def test_opt_state_shapes_match_state_specs():
+    m = _manifest("lm_micro_et2")
+    cfg = aot.LM_CONFIGS["lm_micro"]
+    pspecs = lm_mod.param_specs(cfg)
+    want = optim_jax.state_specs("et2", pspecs)
+    got = [(s["name"], tuple(s["shape"])) for s in m["opt_state"]]
+    assert got == [(n, tuple(s)) for n, s in want]
+
+
+def test_et_memory_column_is_sublinear():
+    cfg = aot.LM_CONFIGS["lm_micro"]
+    total = sum(math.prod(s) for _, s, _, _ in lm_mod.param_specs(cfg))
+    for kind, bound in [("et1", 0.2), ("et2", 0.05), ("et3", 0.04)]:
+        m = _manifest(f"lm_micro_{kind}")
+        scalars = m["optimizer"]["state_scalars"]
+        assert scalars < total * bound, f"{kind}: {scalars} vs {total}"
+
+
+def test_hlo_text_has_tuple_root():
+    text = (ART / "lm_micro_et2.hlo.txt").read_text()
+    assert "ROOT" in text and "tuple(" in text
+
+
+def test_source_hash_marks_current():
+    src = aot._source_hash()
+    assert aot._is_current(ART, "lm_micro_et2", src)
+    assert not aot._is_current(ART, "lm_micro_et2", "bogus")
+    assert not aot._is_current(ART, "no_such_artifact", src)
+
+
+def test_golden_fixture_wellformed():
+    g = json.loads((ART / "golden" / "lm_micro_et2_steps.json").read_text())
+    assert g["optimizer"] == "et2"
+    assert len(g["losses"]) == g["steps"] == 2
+    assert g["losses"][1] < g["losses"][0]  # training reduces memorized loss
+    cfg = aot.LM_CONFIGS["lm_micro"]
+    assert len(g["tokens"]) == cfg.rows * cfg.seq
+    pspecs = lm_mod.param_specs(cfg)
+    assert [p["name"] for p in g["param_init"]] == [n for n, *_ in pspecs]

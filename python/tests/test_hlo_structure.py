@@ -1,0 +1,90 @@
+"""L2 performance-structure checks on the lowered HLO: the properties the
+§Perf plan requires must be visible in the artifact text, not assumed.
+
+- the ET train step is ONE fused module (no python round trips possible);
+- the fused preconditioner apply exists as elementwise ops over the
+  parameter tensors (power/multiply/subtract), i.e. Algorithm 1 lowered
+  into the same HLO as fwd/bwd;
+- module size scales sanely (no accidental unrolling explosions);
+- ET modules do not materialize full-size second-moment buffers: their
+  output arity and state shapes stay the manifest's slice vectors.
+"""
+
+import json
+import pathlib
+import re
+
+import pytest
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "lm_tiny_et2.hlo.txt").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def _text(name):
+    return (ART / f"{name}.hlo.txt").read_text()
+
+
+def _manifest(name):
+    return json.loads((ART / f"{name}.json").read_text())
+
+
+def _entry_root_arity(text):
+    """Output-tuple arity of the ENTRY computation (inner fused
+    computations have their own ROOT tuples; take the ENTRY block's)."""
+    entry = text[text.index("ENTRY ") :]
+    root = re.search(r"ROOT [^=]+= \(([^)]*)\) tuple", entry)
+    assert root is not None, "no ENTRY root tuple"
+    # Count typed elements (layout braces `{1,0}` contain commas, so a
+    # plain split would overcount): each element is `dtype[dims]{layout}`.
+    return len(re.findall(r"\w+\[", root.group(1)))
+
+
+def test_single_entry_module():
+    text = _text("lm_tiny_et2")
+    assert text.count("ENTRY ") == 1
+
+
+def test_et_apply_ops_present():
+    # The fused apply needs power (the -1/2p root), multiply and subtract
+    # over f32 tensors.
+    text = _text("lm_tiny_et2")
+    assert re.search(r"\bpower\(", text) or "power" in text
+    assert "multiply" in text and "subtract" in text
+
+
+def test_et_state_stays_sublinear_in_hlo():
+    # No f32 tensor the size of a full second-moment accumulator should be
+    # produced as an *output* of an ET module beyond the params themselves:
+    # output tuple arity == 1 + params + slice-vector states.
+    m = _manifest("lm_tiny_et2")
+    arity = _entry_root_arity(_text("lm_tiny_et2"))
+    assert arity == 1 + len(m["params"]) + len(m["opt_state"])
+
+
+def test_module_sizes_do_not_explode():
+    # Sanity bound: unrolled layers at this scale should keep modules under
+    # a few MB of text; an accidental seq-length unroll would blow this up.
+    for name in ["lm_tiny_et2", "lm_tiny_adam", "lm_big_et2", "cnn_et2"]:
+        size = (ART / f"{name}.hlo.txt").stat().st_size
+        assert size < 8_000_000, f"{name}: {size} bytes"
+
+
+def test_et2_not_larger_than_adam_module():
+    # interpret=True Pallas expands each kernel into explicit HLO loops, so
+    # the ET module is larger than Adam's handful of elementwise ops —
+    # measured ~6.4x at lm_tiny scale. Bound it at 10x so a structural
+    # regression (e.g. accidental per-coordinate unrolling) still fails.
+    et2 = (ART / "lm_tiny_et2.hlo.txt").stat().st_size
+    adam = (ART / "lm_tiny_adam.hlo.txt").stat().st_size
+    assert et2 < 10 * adam, f"et2 {et2} vs adam {adam}"
+
+
+def test_grad_artifact_has_no_optimizer_state():
+    m = _manifest("lm_tiny_grad")
+    assert m["opt_state"] == []
+    arity = _entry_root_arity(_text("lm_tiny_grad"))
+    assert arity == 1 + len(m["params"])

@@ -1,0 +1,141 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle, swept over
+shapes and value regimes with hypothesis."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import extreme_tensoring as ek
+from compile.kernels import ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _rand(shape, seed, style="normal"):
+    rng = np.random.default_rng(seed)
+    if style == "normal":
+        x = rng.normal(size=shape)
+    elif style == "sparse":
+        x = rng.normal(size=shape) * (rng.random(shape) < 0.1)
+    else:  # wide dynamic range
+        x = rng.normal(size=shape) * 10.0 ** rng.uniform(-4, 3, size=shape)
+    return jnp.asarray(x.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# rowsum_sq
+# ---------------------------------------------------------------------------
+
+
+@given(m=st.integers(1, 65), n=st.integers(1, 130), seed=st.integers(0, 2**31),
+       style=st.sampled_from(["normal", "sparse", "wide"]))
+def test_rowsum_sq_matches_ref(m, n, seed, style):
+    x = _rand((m, n), seed, style)
+    got = ek.rowsum_sq(x)
+    want = ref.rowsum_sq(x)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-6)
+
+
+def test_rowsum_sq_tiled_path():
+    # force multi-tile grid in both dimensions
+    x = _rand((64, 128), 7)
+    got = ek.rowsum_sq(x, block_rows=16, block_cols=32)
+    np.testing.assert_allclose(got, ref.rowsum_sq(x), rtol=1e-4)
+
+
+def test_divisor_block():
+    assert ek._divisor_block(512, 256) == 256
+    assert ek._divisor_block(100, 30) == 25
+    assert ek._divisor_block(13, 8) == 1  # prime > target
+    assert ek._divisor_block(8, 256) == 8
+
+
+# ---------------------------------------------------------------------------
+# mode_slice_sums
+# ---------------------------------------------------------------------------
+
+
+@given(dims=st.lists(st.integers(1, 9), min_size=1, max_size=4),
+       seed=st.integers(0, 2**31))
+def test_mode_slice_sums_matches_ref(dims, seed):
+    dims = tuple(dims)
+    n = math.prod(dims)
+    g = _rand((n,), seed)
+    got = ek.mode_slice_sums(g, dims)
+    want = ref.slice_sq_sums(g, dims)
+    assert len(got) == len(dims)
+    for i, (a, b) in enumerate(zip(got, want)):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-6,
+                                   err_msg=f"mode {i} of dims {dims}")
+
+
+def test_mode_slice_sums_conservation():
+    # sum of each mode's buckets == total sum of squares
+    dims = (8, 4, 16)
+    g = _rand((math.prod(dims),), 3)
+    total = float(jnp.sum(g * g))
+    for s in ek.mode_slice_sums(g, dims):
+        assert abs(float(jnp.sum(s)) - total) < 1e-3 * total
+
+
+# ---------------------------------------------------------------------------
+# fused applies
+# ---------------------------------------------------------------------------
+
+
+@given(dims=st.lists(st.integers(2, 8), min_size=1, max_size=4),
+       seed=st.integers(0, 2**31), lr=st.floats(1e-4, 1.0))
+def test_et_apply_flat_matches_ref(dims, seed, lr):
+    dims = tuple(dims)
+    n = math.prod(dims)
+    g = _rand((n,), seed)
+    x = _rand((n,), seed + 1)
+    sums = ref.slice_sq_sums(g, dims)
+    prod = ek.kron_chain(list(sums))
+    got = ek.et_apply_flat(x, g, prod, jnp.float32(lr), 1e-8, len(dims))
+    want = ref.et_update(x, g, sums, 1e-8, lr)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=1e-6)
+
+
+@given(m=st.integers(2, 48), n=st.integers(2, 96), seed=st.integers(0, 2**31))
+def test_et_apply_2d_matches_ref(m, n, seed):
+    g = _rand((m, n), seed)
+    x = _rand((m, n), seed + 1)
+    sr, sc = ref.rowsum_sq(g), ref.colsum_sq(g)
+    got = ek.et_apply_2d(x, g, sr, sc, jnp.float32(0.2), 1e-8)
+    want = x - 0.2 * ref.et_apply_2d(g, sr, sc, 1e-8)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=1e-6)
+
+
+def test_kron_chain_order_and_values():
+    a = jnp.asarray([1.0, 2.0])
+    b = jnp.asarray([3.0, 5.0])
+    got = ek.kron_chain([a, b])
+    np.testing.assert_allclose(got, [3.0, 5.0, 6.0, 10.0])
+
+
+def test_p1_reduces_to_adagrad():
+    # With p=1 the ET update is exactly AdaGrad's.
+    n = 33
+    g = _rand((n,), 11)
+    x = _rand((n,), 12)
+    sums = ref.slice_sq_sums(g, (n,))
+    got = ek.et_apply_flat(x, g, ek.kron_chain(list(sums)), jnp.float32(0.1),
+                           1e-8, 1)
+    want = x - 0.1 * g / jnp.sqrt(1e-8 + g * g)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_lemma_4_3_underestimate():
+    # ET per-coordinate rates never exceed AdaGrad's (small eps).
+    dims = (6, 7)
+    n = math.prod(dims)
+    g = _rand((n,), 5)
+    sums = ref.slice_sq_sums(g, dims)
+    delta_et = ref.et_step_sizes(sums, 1e-10)
+    delta_ada = jnp.power(1e-10 + g * g, -0.5)
+    assert bool(jnp.all(delta_et <= delta_ada * (1.0 + 1e-3)))

@@ -1,0 +1,120 @@
+"""Layer-2 model correctness: shapes, masking, loss properties, gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import cnn as cnn_mod
+from compile import model as lm_mod
+
+CFG = lm_mod.LmConfig(vocab=50, d_model=16, layers=2, heads=2, d_ff=32, rows=2, seq=12)
+
+
+def _params():
+    return lm_mod.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _tokens(seed=0, lo=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(lo, CFG.vocab, size=(CFG.rows, CFG.seq)).astype(np.int32))
+
+
+def test_logits_shape():
+    logits = lm_mod.logits_fn(_params(), _tokens(), CFG)
+    assert logits.shape == (CFG.rows, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_untrained_loss_near_uniform():
+    total, count = lm_mod.nll_fn(_params(), _tokens(), CFG)
+    mean = float(total) / float(count)
+    assert abs(mean - np.log(CFG.vocab)) < 1.0
+
+
+def test_pad_targets_masked():
+    params = _params()
+    tok = np.asarray(_tokens(3))
+    tok_pad = tok.copy()
+    tok_pad[:, -4:] = lm_mod.PAD_ID  # pad the tail
+    _, count_full = lm_mod.nll_fn(params, jnp.asarray(tok), CFG)
+    _, count_pad = lm_mod.nll_fn(params, jnp.asarray(tok_pad), CFG)
+    assert float(count_pad) < float(count_full)
+    # exactly 4 targets per row masked
+    assert float(count_full) - float(count_pad) == 2 * 4
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = _params()
+    tok = np.asarray(_tokens(1))
+    logits_a = lm_mod.logits_fn(params, jnp.asarray(tok), CFG)
+    tok_b = tok.copy()
+    tok_b[:, -1] = (tok_b[:, -1] % (CFG.vocab - 1)) + 1  # change last token
+    logits_b = lm_mod.logits_fn(params, jnp.asarray(tok_b), CFG)
+    np.testing.assert_allclose(logits_a[:, :-1], logits_b[:, :-1], atol=1e-5)
+
+
+def test_grads_cover_all_params_and_are_finite():
+    params = _params()
+    loss, grads = lm_mod.loss_and_grads(params, _tokens(2), CFG)
+    assert np.isfinite(float(loss))
+    specs = lm_mod.param_specs(CFG)
+    assert len(grads) == len(specs)
+    nonzero = 0
+    for (name, shape, _, _), g in zip(specs, grads):
+        assert g.shape == tuple(shape), name
+        assert bool(jnp.all(jnp.isfinite(g))), name
+        if float(jnp.max(jnp.abs(g))) > 0:
+            nonzero += 1
+    assert nonzero >= len(specs) - 1  # everything but maybe a bias gets grad
+
+
+def test_one_sgd_step_reduces_loss_on_fixed_batch():
+    params = _params()
+    tok = _tokens(4)
+    loss0, grads = lm_mod.loss_and_grads(params, tok, CFG)
+    params2 = [p - 0.5 * g for p, g in zip(params, grads)]
+    loss1 = lm_mod.mean_loss_fn(params2, tok, CFG)
+    assert float(loss1) < float(loss0)
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+CCFG = cnn_mod.CnnConfig(classes=4, batch=8)
+
+
+def _cnn_data(seed=0):
+    rng = np.random.default_rng(seed)
+    imgs = jnp.asarray(rng.normal(size=(CCFG.batch, 3, 32, 32)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, CCFG.classes, size=(CCFG.batch,)).astype(np.int32))
+    return imgs, labels
+
+
+def test_cnn_shapes_and_loss():
+    params = cnn_mod.init_params(CCFG, jax.random.PRNGKey(1))
+    imgs, labels = _cnn_data()
+    logits = cnn_mod.logits_fn(params, imgs, CCFG)
+    assert logits.shape == (CCFG.batch, CCFG.classes)
+    total, count = cnn_mod.nll_fn(params, imgs, labels, CCFG)
+    assert abs(float(total) / float(count) - np.log(CCFG.classes)) < 1.0
+
+
+def test_cnn_error_count():
+    params = cnn_mod.init_params(CCFG, jax.random.PRNGKey(2))
+    imgs, labels = _cnn_data(1)
+    wrong, count = cnn_mod.error_count_fn(params, imgs, labels, CCFG)
+    assert 0.0 <= float(wrong) <= float(count)
+    assert float(count) == CCFG.batch
+
+
+def test_cnn_learns_fixed_batch():
+    params = cnn_mod.init_params(CCFG, jax.random.PRNGKey(3))
+    imgs, labels = _cnn_data(2)
+    loss0, _ = cnn_mod.loss_and_grads(params, imgs, labels, CCFG)
+    for _ in range(30):
+        _, grads = cnn_mod.loss_and_grads(params, imgs, labels, CCFG)
+        params = [p - 0.1 * g for p, g in zip(params, grads)]
+    loss1 = cnn_mod.mean_loss_fn(params, imgs, labels, CCFG)
+    assert float(loss1) < float(loss0) * 0.7

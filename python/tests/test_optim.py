@@ -1,0 +1,139 @@
+"""Layer-2 optimizer updates vs plain numpy reference implementations."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optim_jax, planner
+
+PSPECS = [
+    ("w", (6, 8), "normal", 0.1),
+    ("b", (8,), "zeros", 0.0),
+    ("conv", (4, 2, 3, 3), "normal", 0.1),
+]
+
+
+def _params_grads(seed=0):
+    rng = np.random.default_rng(seed)
+    params = [jnp.asarray(rng.normal(size=s).astype(np.float32) * 0.1)
+              for _, s, _, _ in PSPECS]
+    grads = [jnp.asarray(rng.normal(size=s).astype(np.float32))
+             for _, s, _, _ in PSPECS]
+    return params, grads
+
+
+def _zeros_state(kind):
+    return [jnp.zeros(s, jnp.float32) for _, s in optim_jax.state_specs(kind, PSPECS)]
+
+
+@pytest.mark.parametrize("kind", ["sgd", "adagrad", "adam", "adafactor",
+                                  "et1", "et2", "et3", "etinf"])
+def test_state_specs_and_update_shapes(kind):
+    params, grads = _params_grads()
+    state = _zeros_state(kind)
+    new_p, new_s = optim_jax.apply_updates(
+        kind, PSPECS, params, grads, state, jnp.float32(0.1), jnp.float32(1.0))
+    assert len(new_p) == len(params)
+    assert len(new_s) == len(state)
+    for p, np_ in zip(params, new_p):
+        assert p.shape == np_.shape
+        assert bool(jnp.all(jnp.isfinite(np_)))
+    for s, ns in zip(state, new_s):
+        assert s.shape == ns.shape
+
+
+def test_sgd_exact():
+    params, grads = _params_grads()
+    new_p, _ = optim_jax.apply_updates(
+        "sgd", PSPECS, params, grads, [], jnp.float32(0.5), jnp.float32(1.0))
+    for p, g, np_ in zip(params, grads, new_p):
+        np.testing.assert_allclose(np_, p - 0.5 * g, rtol=1e-6)
+
+
+def test_adagrad_exact():
+    params, grads = _params_grads()
+    state = _zeros_state("adagrad")
+    new_p, new_s = optim_jax.apply_updates(
+        "adagrad", PSPECS, params, grads, state, jnp.float32(0.5), jnp.float32(1.0))
+    for p, g, np_ in zip(params, grads, new_p):
+        want = p - 0.5 * g / jnp.sqrt(1e-8 + g * g)
+        np.testing.assert_allclose(np_, want, rtol=1e-5)
+    for g, s in zip(grads, new_s):
+        np.testing.assert_allclose(s, g * g, rtol=1e-6)
+
+
+def test_adam_first_step_is_lr_sized():
+    params, grads = _params_grads()
+    state = _zeros_state("adam")
+    new_p, _ = optim_jax.apply_updates(
+        "adam", PSPECS, params, grads, state, jnp.float32(0.01), jnp.float32(1.0),
+        eps=1e-12)
+    for p, g, np_ in zip(params, grads, new_p):
+        step = np.abs(np.asarray(np_ - p))
+        nz = np.abs(np.asarray(g)) > 1e-6
+        np.testing.assert_allclose(step[nz], 0.01, rtol=1e-3)
+
+
+def test_et1_matches_adagrad_on_vectors():
+    # For a 1-D parameter, ET1 has p=1 => identical to AdaGrad.
+    pspecs = [("v", (16,), "zeros", 0.0)]
+    rng = np.random.default_rng(1)
+    p = [jnp.asarray(rng.normal(size=(16,)).astype(np.float32))]
+    g = [jnp.asarray(rng.normal(size=(16,)).astype(np.float32))]
+    sa = [jnp.zeros(s, jnp.float32) for _, s in optim_jax.state_specs("adagrad", pspecs)]
+    se = [jnp.zeros(s, jnp.float32) for _, s in optim_jax.state_specs("et1", pspecs)]
+    pa, _ = optim_jax.apply_updates("adagrad", pspecs, p, g, sa,
+                                    jnp.float32(0.1), jnp.float32(1.0))
+    pe, _ = optim_jax.apply_updates("et1", pspecs, p, g, se,
+                                    jnp.float32(0.1), jnp.float32(1.0))
+    np.testing.assert_allclose(pa[0], pe[0], rtol=1e-4)
+
+
+def test_et_state_sizes_shrink_with_level():
+    sizes = {}
+    for kind in ["adagrad", "et1", "et2", "et3"]:
+        specs = optim_jax.state_specs(kind, PSPECS)
+        sizes[kind] = sum(math.prod(s) for _, s in specs)
+    assert sizes["et1"] <= sizes["adagrad"]
+    assert sizes["et2"] <= sizes["et1"]
+    assert sizes["et3"] <= sizes["et2"]
+
+
+def test_etinf_one_scalar_per_group():
+    specs = optim_jax.state_specs("etinf", PSPECS)
+    assert len(specs) == len(PSPECS)
+    assert all(s == (1,) for _, s in specs)
+
+
+def test_et_decay_bias_correction_shrinks_early_steps():
+    # With beta2 decay + bias correction, the first-step update magnitude
+    # matches the non-decayed one (corr cancels the (1-b2) scaling).
+    pspecs = [("w", (8, 8), "zeros", 0.0)]
+    rng = np.random.default_rng(2)
+    p = [jnp.zeros((8, 8), jnp.float32)]
+    g = [jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))]
+    s0 = [jnp.zeros(s, jnp.float32) for _, s in optim_jax.state_specs("et1", pspecs)]
+    p_plain, _ = optim_jax.apply_updates("et1", pspecs, p, g, s0,
+                                         jnp.float32(0.1), jnp.float32(1.0),
+                                         et_beta2=None)
+    p_decay, _ = optim_jax.apply_updates("et1", pspecs, p, g, s0,
+                                         jnp.float32(0.1), jnp.float32(1.0),
+                                         et_beta2=0.99)
+    # plain: S=rowsum; decayed: S=(1-b2)rowsum, lr_eff=lr*sqrt(1-b2)
+    # => identical first step.
+    np.testing.assert_allclose(p_plain[0], p_decay[0], rtol=1e-3)
+
+
+def test_planner_matches_rust_tables():
+    # Table B.1 rows
+    assert sorted(planner.plan((512, 512), 2)) == sorted([16, 32, 16, 32])
+    assert sorted(planner.plan((2000, 512), 3)) == sorted([5, 8, 5, 10, 4, 4, 4, 8])
+    # Table 3 rows
+    assert sorted(planner.plan((64, 3, 3, 3), 2)) == sorted([8, 8, 3, 9])
+    assert sorted(planner.plan((512, 128, 1, 1), 3)) == sorted([8, 4, 4, 4, 4, 4, 8])
+    # product invariant
+    for shape in [(7, 13), (100,), (12, 34, 2)]:
+        for lvl in (1, 2, 3):
+            assert math.prod(planner.plan(shape, lvl)) == math.prod(shape)

@@ -1,0 +1,50 @@
+//! Data-pipeline throughput: corpus synthesis, packing, batch assembly, and
+//! the prefetch loader, in tokens/s. The pipeline must comfortably outrun
+//! the PJRT step (see table1_step) so the trainer is never input-bound.
+
+use extensor::data::{Batcher, Corpus, Loader, SyntheticConfig, Tokenizer};
+use extensor::testing::bench::{bench, header};
+use extensor::util::rng::Pcg64;
+
+fn main() {
+    header("data_pipeline");
+
+    let cfg = SyntheticConfig::default();
+    let r = bench("corpus_synthesis(20k sentences)", 1, 5, || {
+        std::hint::black_box(Corpus::synthetic(&cfg));
+    });
+    r.report();
+
+    let corpus = Corpus::synthetic(&cfg);
+    let tok = Tokenizer::from_corpus(&corpus);
+    let (train, _) = corpus.split(10);
+    let total_tokens: usize = train.iter().map(|s| s.len() + 2).sum();
+
+    let r = bench("pack_stream(full corpus)", 1, 10, || {
+        std::hint::black_box(Batcher::new(&tok, &train, 64, 8));
+    });
+    r.report_with_rate(total_tokens as f64, "tokens/s");
+
+    let batcher = Batcher::new(&tok, &train, 64, 8);
+    let order = batcher.epoch_order(0, 42);
+    let nb = batcher.batches_per_epoch();
+    let mut rng = Pcg64::seeded(5);
+    let r = bench("assemble_batch(8x64)", 10, 200, || {
+        let b = rng.below(nb as u64) as usize;
+        std::hint::black_box(batcher.batch(&order, b));
+    });
+    r.report_with_rate(512.0, "tokens/s");
+
+    // loader end-to-end: consume 200 prefetched batches
+    let r = bench("loader_stream(200 batches)", 1, 5, || {
+        let batcher = Batcher::new(&tok, &train, 64, 8);
+        let mut loader = Loader::spawn(batcher, 1, 200, 4);
+        let mut n = 0;
+        while let Some(b) = loader.next() {
+            std::hint::black_box(&b);
+            n += 1;
+        }
+        assert_eq!(n, 200);
+    });
+    r.report_with_rate(200.0 * 512.0, "tokens/s");
+}

@@ -1,0 +1,95 @@
+//! Convex-experiment throughput (Figure 3's workload): full-batch
+//! loss+gradient evaluation of the softmax regression substrate, and one
+//! optimizer step per ET depth. Separates substrate cost (the gradient)
+//! from preconditioner cost (the step) — at paper scale the gradient
+//! dominates, which is why the paper can afford full-batch plots.
+
+use extensor::convex::{ConvexConfig, ConvexDataset, SoftmaxRegression};
+use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
+use extensor::tensoring::OptimizerKind;
+use extensor::testing::bench::{bench, header};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ConvexConfig { n: 2000, d: 512, k: 10, cond: 1e4, householder: 8, seed: 1 };
+    let ds = ConvexDataset::generate(&cfg);
+    let obj = SoftmaxRegression::new(&ds);
+    let idx: Vec<usize> = (0..ds.n).collect();
+    let groups = vec![GroupSpec::new("w", &[cfg.k, cfg.d])];
+
+    header(&format!("fig3_convex (n={}, d={}, k={})", cfg.n, cfg.d, cfg.k));
+
+    let w = vec![0.01f32; obj.dim()];
+    let mut grad = vec![0.0f32; obj.dim()];
+    let r = bench("full_batch_loss_grad (vectorized)", 2, 10, || {
+        std::hint::black_box(obj.loss_grad(&w, &idx, &mut grad));
+    });
+    r.report_with_rate((ds.n * obj.dim()) as f64, "elem/s");
+
+    // The pre-optimization implementation (scalar f64 dot/axpy) is kept
+    // here as the §Perf baseline so the before/after is measurable, not
+    // anecdotal.
+    let r = bench("full_batch_loss_grad (scalar-f64 ref)", 1, 5, || {
+        std::hint::black_box(loss_grad_scalar(&ds, &w, &idx, &mut grad));
+    });
+    r.report_with_rate((ds.n * obj.dim()) as f64, "elem/s");
+
+    let variants: Vec<(&str, Vec<usize>)> = vec![
+        ("et_depth1 (10,512)", vec![10, 512]),
+        ("et_depth2 (10,16,32)", vec![10, 16, 32]),
+        ("et_depth3 (10,8,8,8)", vec![10, 8, 8, 8]),
+    ];
+    for (name, dims) in variants {
+        let mut opt = optim::extreme::ExtremeTensoring::new_with_dims(
+            &groups,
+            vec![dims],
+            1e-8,
+            None,
+        );
+        let mut wv = vec![0.01f32; obj.dim()];
+        let r = bench(&format!("step/{name}"), 3, 50, || {
+            opt.step(0, &mut wv, &grad, 0.01).unwrap();
+        });
+        r.report_with_rate(obj.dim() as f64, "elem/s");
+    }
+    let mut ada = optim::build(OptimizerKind::AdaGrad, &groups, &Hyper::default());
+    let mut wv = vec![0.01f32; obj.dim()];
+    let r = bench("step/adagrad (full)", 3, 50, || {
+        ada.step(0, &mut wv, &grad, 0.01).unwrap();
+    });
+    r.report_with_rate(obj.dim() as f64, "elem/s");
+    Ok(())
+}
+
+/// Pre-optimization softmax-regression gradient: scalar loops with f64
+/// `dot`/`axpy` helpers (what `SoftmaxRegression::loss_grad` shipped as
+/// before the §Perf pass). Kept verbatim for the before/after measurement.
+fn loss_grad_scalar(
+    ds: &ConvexDataset,
+    w: &[f32],
+    idx: &[usize],
+    grad: &mut [f32],
+) -> f64 {
+    use extensor::util::math::{axpy, dot, log_sum_exp};
+    let (d, k) = (ds.d, ds.k);
+    grad.iter_mut().for_each(|g| *g = 0.0);
+    let mut logits = vec![0.0f32; k];
+    let mut total = 0.0f64;
+    let scale = 1.0 / idx.len().max(1) as f32;
+    for &i in idx {
+        let row = &ds.x[i * d..(i + 1) * d];
+        for c in 0..k {
+            logits[c] = dot(&w[c * d..(c + 1) * d], row) as f32;
+        }
+        let lse = log_sum_exp(&logits);
+        let yi = ds.y[i] as usize;
+        total += (lse - logits[yi]) as f64;
+        for c in 0..k {
+            let p = (logits[c] - lse).exp();
+            let coef = (p - if c == yi { 1.0 } else { 0.0 }) * scale;
+            if coef != 0.0 {
+                axpy(coef, row, &mut grad[c * d..(c + 1) * d]);
+            }
+        }
+    }
+    total / idx.len().max(1) as f64
+}

@@ -1,0 +1,55 @@
+//! Pure-rust optimizer hot-path throughput: elements/s of one `step()` per
+//! optimizer kind on transformer-shaped groups. This is the L3-native
+//! equivalent of the paper's "optimizer overhead" concern — ET's update
+//! must stay bandwidth-bound and within a small factor of SGD.
+
+use extensor::optim::{self, GroupSpec, Hyper};
+use extensor::tensoring::OptimizerKind;
+use extensor::testing::bench::{bench, header};
+use extensor::util::rng::Pcg64;
+
+fn main() {
+    let shapes: Vec<(&str, Vec<usize>)> = vec![
+        ("embed", vec![2000, 512]),
+        ("attn", vec![512, 512]),
+        ("ff1", vec![512, 2048]),
+        ("ln", vec![512]),
+    ];
+    let groups: Vec<GroupSpec> =
+        shapes.iter().map(|(n, s)| GroupSpec::new(*n, s)).collect();
+    let total: usize = groups.iter().map(|g| g.numel()).sum();
+
+    let mut rng = Pcg64::seeded(1);
+    let mut params: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+    let grads: Vec<Vec<f32>> = groups
+        .iter()
+        .map(|g| {
+            let mut v = vec![0.0f32; g.numel()];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+
+    header(&format!("optim_hot — one full step over {total} parameters"));
+    let hyper = Hyper::default();
+    for kind in [
+        OptimizerKind::Sgd,
+        OptimizerKind::AdaGrad,
+        OptimizerKind::Adam,
+        OptimizerKind::Adafactor,
+        OptimizerKind::Et(1),
+        OptimizerKind::Et(2),
+        OptimizerKind::Et(3),
+        OptimizerKind::EtInf,
+    ] {
+        let mut opt = optim::build(kind, &groups, &hyper);
+        let r = bench(&format!("step/{}", kind.name()), 3, 30, || {
+            opt.next_step();
+            for (gi, (p, g)) in params.iter_mut().zip(&grads).enumerate() {
+                opt.step(gi, p, g, 1e-4).unwrap();
+            }
+        });
+        r.report_with_rate(total as f64, "elem/s");
+    }
+    println!("\n(ET overhead vs SGD is the paper's 'negligible memory AND compute' claim)");
+}

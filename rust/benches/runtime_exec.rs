@@ -1,0 +1,52 @@
+//! PJRT runtime dispatch costs on the micro artifacts: step latency, the
+//! host<->device state round-trip (the decompose_tuple path — see
+//! DESIGN.md §8), and eval dispatch. Separates runtime overhead from model
+//! compute so the table1_step numbers can be attributed.
+
+use extensor::runtime::{Client, DataArg, Engine};
+use extensor::testing::bench::{bench, header};
+use extensor::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let dir = extensor::runtime::default_artifact_dir();
+    if !dir.join("lm_micro_et2.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let client = Client::cpu()?;
+    header("runtime_exec (lm_micro: 70k params)");
+
+    let mut rng = Pcg64::seeded(3);
+    let tokens: Vec<i32> = (0..32).map(|_| 1 + rng.below(60) as i32).collect();
+
+    for name in ["lm_micro_sgd", "lm_micro_et2", "lm_micro_adam"] {
+        let engine = Engine::load(&client, &dir, name)?;
+        let mut state = engine.init_state(1)?;
+        let r = bench(&format!("train_step/{name}"), 5, 40, || {
+            engine.train_step_tokens(&mut state, &tokens, 1e-3).unwrap();
+        });
+        r.report();
+    }
+
+    let eval = Engine::load(&client, &dir, "lm_micro_eval")?;
+    let train = Engine::load(&client, &dir, "lm_micro_et2")?;
+    let state = train.init_state(1)?;
+    let r = bench("eval_step/lm_micro_eval", 5, 40, || {
+        eval.eval_step(&state, &[DataArg::I32(&tokens)]).unwrap();
+    });
+    r.report();
+
+    // compile cost (one-time per process, amortized across a run)
+    let r = bench("load_and_compile/lm_micro_et2", 0, 3, || {
+        std::hint::black_box(Engine::load(&client, &dir, "lm_micro_et2").unwrap());
+    });
+    r.report();
+
+    // state init cost
+    let engine = Engine::load(&client, &dir, "lm_micro_et2")?;
+    let r = bench("init_state/lm_micro_et2", 2, 20, || {
+        std::hint::black_box(engine.init_state(7).unwrap());
+    });
+    r.report();
+    Ok(())
+}

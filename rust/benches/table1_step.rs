@@ -1,0 +1,48 @@
+//! End-to-end step latency per optimizer on the Table-1 workload
+//! (lm_tiny): the perf counterpart of the paper's comparison. The claim
+//! under test: extreme tensoring's fused preconditioner adds *negligible
+//! step-time overhead* over SGD while AdaGrad/Adam pay for full
+//! accumulators, and the hierarchy of optimizer-state sizes (printed
+//! alongside) spans three orders of magnitude.
+
+use extensor::runtime::{Client, Engine};
+use extensor::testing::bench::{bench, fmt_ns, header};
+use extensor::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let dir = extensor::runtime::default_artifact_dir();
+    if !dir.join("lm_tiny_sgd.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let client = Client::cpu()?;
+    header("table1_step (lm_tiny: 1M params, 512 tokens/step)");
+
+    let mut rng = Pcg64::seeded(4);
+    let tokens: Vec<i32> = (0..8 * 64).map(|_| 1 + rng.below(1900) as i32).collect();
+
+    let mut baseline_ns = None;
+    for kind in ["sgd", "adagrad", "adam", "adafactor", "et1", "et2", "et3", "etinf"] {
+        let engine = Engine::load(&client, &dir, &format!("lm_tiny_{kind}"))?;
+        let mut state = engine.init_state(1)?;
+        let r = bench(&format!("train_step/{kind}"), 3, 15, || {
+            engine.train_step_tokens(&mut state, &tokens, 1e-3).unwrap();
+        });
+        let opt_state = engine.manifest.total_opt_state();
+        if kind == "sgd" {
+            baseline_ns = Some(r.median_ns);
+        }
+        let overhead = baseline_ns
+            .map(|b| format!("{:+.1}% vs sgd", (r.median_ns / b - 1.0) * 100.0))
+            .unwrap_or_default();
+        println!(
+            "{:<24} {:>12} median  {:>10} opt-state floats   {}",
+            r.name,
+            fmt_ns(r.median_ns),
+            opt_state,
+            overhead
+        );
+    }
+    println!("\ntokens/s at median: see values above (512 tokens per step)");
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Multinomial logistic (softmax) regression loss and gradient — the convex
+//! objective of §5.4. Full-batch or mini-batch; f32 data with f64 loss
+//! accumulation.
+
+use super::ConvexDataset;
+use crate::util::math::log_sum_exp;
+
+/// Softmax-regression objective over a dataset; weights are a flat `k x d`
+/// row-major matrix.
+pub struct SoftmaxRegression<'a> {
+    ds: &'a ConvexDataset,
+}
+
+impl<'a> SoftmaxRegression<'a> {
+    pub fn new(ds: &'a ConvexDataset) -> Self {
+        SoftmaxRegression { ds }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.ds.k * self.ds.d
+    }
+
+    /// Mean negative log-likelihood over the index set.
+    pub fn loss(&self, w: &[f32], idx: &[usize]) -> f64 {
+        assert_eq!(w.len(), self.dim());
+        let (d, k) = (self.ds.d, self.ds.k);
+        let mut logits = vec![0.0f32; k];
+        let mut total = 0.0f64;
+        for &i in idx {
+            let row = &self.ds.x[i * d..(i + 1) * d];
+            for c in 0..k {
+                logits[c] = crate::util::math::dot(&w[c * d..(c + 1) * d], row) as f32;
+            }
+            let lse = log_sum_exp(&logits);
+            total += (lse - logits[self.ds.y[i] as usize]) as f64;
+        }
+        total / idx.len().max(1) as f64
+    }
+
+    /// Mean NLL and its gradient wrt `w` over the index set. `grad` must be
+    /// zeroed or will be overwritten.
+    ///
+    /// Hot path of the Figure 3 experiment (full-batch over 1e4 samples):
+    /// logits and the gradient accumulation are written as plain f32 inner
+    /// loops over contiguous slices so LLVM auto-vectorizes them; loss
+    /// accumulation stays f64. (~8x over the scalar-f64 `dot`/`axpy`
+    /// version — see EXPERIMENTS.md §Perf.)
+    pub fn loss_grad(&self, w: &[f32], idx: &[usize], grad: &mut [f32]) -> f64 {
+        assert_eq!(w.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        let (d, k) = (self.ds.d, self.ds.k);
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let mut logits = vec![0.0f32; k];
+        let mut total = 0.0f64;
+        let scale = 1.0 / idx.len().max(1) as f32;
+        for &i in idx {
+            let row = &self.ds.x[i * d..(i + 1) * d];
+            for (c, l) in logits.iter_mut().enumerate() {
+                let wc = &w[c * d..(c + 1) * d];
+                let mut acc = 0.0f32;
+                for (&wj, &xj) in wc.iter().zip(row) {
+                    acc += wj * xj;
+                }
+                *l = acc;
+            }
+            let lse = log_sum_exp(&logits);
+            let yi = self.ds.y[i] as usize;
+            total += (lse - logits[yi]) as f64;
+            for c in 0..k {
+                let p = (logits[c] - lse).exp();
+                let coef = (p - if c == yi { 1.0 } else { 0.0 }) * scale;
+                if coef != 0.0 {
+                    let gc = &mut grad[c * d..(c + 1) * d];
+                    for (gj, &xj) in gc.iter_mut().zip(row) {
+                        *gj += coef * xj;
+                    }
+                }
+            }
+        }
+        total / idx.len().max(1) as f64
+    }
+
+    /// Classification accuracy over the index set.
+    pub fn accuracy(&self, w: &[f32], idx: &[usize]) -> f64 {
+        let (d, k) = (self.ds.d, self.ds.k);
+        let mut correct = 0usize;
+        for &i in idx {
+            let row = &self.ds.x[i * d..(i + 1) * d];
+            let mut best = (f64::NEG_INFINITY, 0usize);
+            for c in 0..k {
+                let s = crate::util::math::dot(&w[c * d..(c + 1) * d], row);
+                if s > best.0 {
+                    best = (s, c);
+                }
+            }
+            if best.1 as u32 == self.ds.y[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / idx.len().max(1) as f64
+    }
+}
+
+/// All indices `0..n` (the paper uses the full gradient in its plots).
+pub fn full_batch(n: usize) -> Vec<usize> {
+    (0..n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convex::{ConvexConfig, ConvexDataset};
+
+    fn tiny() -> ConvexDataset {
+        ConvexDataset::generate(&ConvexConfig {
+            n: 200,
+            d: 16,
+            k: 3,
+            cond: 100.0,
+            householder: 2,
+            seed: 11,
+        })
+    }
+
+    #[test]
+    fn zero_weights_give_log_k() {
+        let ds = tiny();
+        let obj = SoftmaxRegression::new(&ds);
+        let w = vec![0.0f32; obj.dim()];
+        let idx = full_batch(ds.n);
+        let loss = obj.loss(&w, &idx);
+        assert!((loss - (3.0f64).ln()).abs() < 1e-5, "loss {loss}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let ds = tiny();
+        let obj = SoftmaxRegression::new(&ds);
+        let idx: Vec<usize> = (0..50).collect();
+        let mut w: Vec<f32> = (0..obj.dim()).map(|i| ((i * 13 % 7) as f32 - 3.0) * 0.05).collect();
+        let mut grad = vec![0.0f32; obj.dim()];
+        obj.loss_grad(&w, &idx, &mut grad);
+        let h = 1e-3f32;
+        for probe in [0usize, 7, obj.dim() / 2, obj.dim() - 1] {
+            let orig = w[probe];
+            w[probe] = orig + h;
+            let lp = obj.loss(&w, &idx);
+            w[probe] = orig - h;
+            let lm = obj.loss(&w, &idx);
+            w[probe] = orig;
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (fd - grad[probe]).abs() < 1e-2 * (1.0 + fd.abs()),
+                "coord {probe}: fd {fd} vs analytic {}",
+                grad[probe]
+            );
+        }
+    }
+
+    #[test]
+    fn loss_grad_and_loss_agree() {
+        let ds = tiny();
+        let obj = SoftmaxRegression::new(&ds);
+        let idx = full_batch(ds.n);
+        let w = vec![0.01f32; obj.dim()];
+        let mut grad = vec![0.0f32; obj.dim()];
+        let l1 = obj.loss(&w, &idx);
+        let l2 = obj.loss_grad(&w, &idx, &mut grad);
+        assert!((l1 - l2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn training_reduces_loss_and_beats_chance() {
+        let ds = tiny();
+        let obj = SoftmaxRegression::new(&ds);
+        let idx = full_batch(ds.n);
+        let mut w = vec![0.0f32; obj.dim()];
+        let mut grad = vec![0.0f32; obj.dim()];
+        let l0 = obj.loss(&w, &idx);
+        for _ in 0..100 {
+            obj.loss_grad(&w, &idx, &mut grad);
+            for (wi, &gi) in w.iter_mut().zip(&grad) {
+                *wi -= 0.05 * gi;
+            }
+        }
+        let l1 = obj.loss(&w, &idx);
+        assert!(l1 < l0 * 0.9, "{l0} -> {l1}");
+        assert!(obj.accuracy(&w, &idx) > 1.0 / 3.0 + 0.05);
+    }
+}

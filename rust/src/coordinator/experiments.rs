@@ -1,0 +1,511 @@
+//! The experiment registry: one entry per table/figure in the paper's
+//! evaluation, each regenerating the corresponding rows/series at this
+//! testbed's scale (see DESIGN.md §4 for the index and §3 for workload
+//! substitutions).
+
+use crate::convex::{ConvexConfig, ConvexDataset, SoftmaxRegression};
+use crate::coordinator::report::{fmt_mem, fmt_ppl, save_json, Table};
+use crate::optim::{self, GroupSpec, Hyper, Schedule};
+use crate::runtime::Client;
+use crate::tensoring::{MemoryReport, OptimizerKind};
+use crate::train::vision::VisionTrainer;
+use crate::train::{RunConfig, Trainer};
+use crate::util::json::Json;
+use crate::vision::VisionConfig;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Shared experiment options (from the CLI).
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub artifact_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub steps: u64,
+    pub seed: u64,
+    pub csv: bool,
+    /// Grid-search the global LR scale over a small grid with short probe
+    /// runs (the paper tunes c per optimizer; this is the scaled-down
+    /// version). When off, hand-tuned defaults are used.
+    pub tune: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            artifact_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("results"),
+            steps: 300,
+            seed: 42,
+            csv: false,
+            tune: false,
+        }
+    }
+}
+
+/// Hand-tuned global LR scale `c` per optimizer for the scaled LM runs
+/// (schedule: warmup_rsqrt over steps/8 warmup). Found by `--tune` probes.
+fn default_lm_scale(kind: &str) -> f64 {
+    match kind {
+        "sgd" => 4.0,
+        "adagrad" => 0.5,
+        "adam" => 0.15,
+        "adafactor" => 0.5,
+        // Deeper tensoring inflates the slice-sum denominators (each bucket
+        // aggregates a whole (p-1)-dim slice), so the tuned global scale
+        // grows with depth -- the same per-optimizer tuning the paper does.
+        "et1" => 2.0,
+        "et2" => 4.0,
+        "et3" => 8.0,
+        "etinf" => 8.0,
+        _ => 1.0,
+    }
+}
+
+fn lm_run(
+    opts: &ExpOptions,
+    artifact: &str,
+    eval_artifact: &str,
+    name: &str,
+    scale: f64,
+    steps: u64,
+    max_seconds: f64,
+    track_traces: bool,
+) -> Result<crate::train::RunResult> {
+    // Schedule geometry always follows the *nominal* step budget
+    // (opts.steps), not `steps`: time-budgeted runs pass a sentinel step
+    // cap, and deriving the warmup from it would freeze the LR near zero.
+    let nominal = opts.steps.max(1);
+    let cfg = RunConfig {
+        name: name.to_string(),
+        artifact: artifact.to_string(),
+        eval_artifact: Some(eval_artifact.to_string()),
+        artifact_dir: opts.artifact_dir.clone(),
+        out_dir: opts.out_dir.join("runs"),
+        steps,
+        eval_every: (nominal / 4).max(1),
+        eval_batches: 8,
+        log_every: (nominal / 40).max(1),
+        checkpoint_every: 0,
+        schedule: Schedule::scaled_lm(scale, (nominal / 8).max(4)),
+        seed: opts.seed,
+        corpus_vocab: 1900,
+        corpus_sentences: 20_000,
+        max_seconds,
+        track_traces,
+        trace_every: (nominal / 32).max(1),
+    };
+    Trainer::new(cfg)?.run()
+}
+
+/// Short probe runs over an LR grid; returns the best scale by final loss.
+fn tune_lm_scale(opts: &ExpOptions, artifact: &str, eval_artifact: &str) -> Result<f64> {
+    let grid = [0.1, 0.3, 1.0, 3.0];
+    let probe_steps = (opts.steps / 4).clamp(20, 120);
+    let mut best = (f64::INFINITY, grid[0]);
+    for &c in &grid {
+        let name = format!("tune_{artifact}_{c}");
+        match lm_run(opts, artifact, eval_artifact, &name, c, probe_steps, 0.0, false) {
+            Ok(res) if res.summary.final_train_loss.is_finite() => {
+                if res.summary.final_train_loss < best.0 {
+                    best = (res.summary.final_train_loss, c);
+                }
+            }
+            _ => {} // diverged probes lose
+        }
+    }
+    crate::info!("[tune] {artifact}: best c = {} (loss {:.3})", best.1, best.0);
+    Ok(best.1)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 / Figure 1 — memory-performance tradeoff on the LM task
+// ---------------------------------------------------------------------------
+
+pub fn table1(opts: &ExpOptions) -> Result<()> {
+    let kinds = ["adagrad", "et1", "et2", "et3", "etinf", "sgd", "adam", "adafactor"];
+    let mut table = Table::new(
+        "Table 1 — GBW-scale LM (scaled): optimizer memory vs final validation ppl",
+        &["Optimizer", "Opt. param count", "Final val ppl", "Final train loss", "tok/s"],
+    );
+    let mut fig1 = Table::new("Figure 1 series", &["optimizer", "opt_params", "val_ppl"]);
+    let mut results = Vec::new();
+    for kind in kinds {
+        let artifact = format!("lm_tiny_{kind}");
+        let scale = if opts.tune {
+            tune_lm_scale(opts, &artifact, "lm_tiny_eval")?
+        } else {
+            default_lm_scale(kind)
+        };
+        let res = lm_run(
+            opts,
+            &artifact,
+            "lm_tiny_eval",
+            &format!("table1_{kind}"),
+            scale,
+            opts.steps,
+            0.0,
+            false,
+        )
+        .with_context(|| format!("table1 run {kind}"))?;
+        let s = &res.summary;
+        // Paper convention: SGD reports 1 scalar (the global lr).
+        let mem = if kind == "sgd" { 1 } else { s.optimizer_scalars };
+        table.row(vec![
+            s.optimizer.clone(),
+            fmt_mem(mem),
+            fmt_ppl(s.final_eval_ppl),
+            format!("{:.3}", s.final_train_loss),
+            format!("{:.0}", s.tokens_per_sec),
+        ]);
+        fig1.row(vec![s.optimizer.clone(), mem.to_string(), format!("{:.4}", s.final_eval_ppl)]);
+        results.push(Json::obj(vec![
+            ("optimizer", Json::str(s.optimizer.clone())),
+            ("opt_params", Json::num(mem as f64)),
+            ("val_ppl", Json::num(s.final_eval_ppl)),
+            ("train_loss", Json::num(s.final_train_loss)),
+            ("wall_seconds", Json::num(s.wall_seconds)),
+        ]));
+    }
+    println!("{}", table.render());
+    save_json(opts.out_dir.join("table1.json"), &Json::Arr(results))?;
+    if opts.csv {
+        fig1.write_csv(opts.out_dir.join("figure1.csv"))?;
+        println!("wrote {}", opts.out_dir.join("figure1.csv").display());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — doubling the model with the freed memory (§5.2)
+// ---------------------------------------------------------------------------
+
+pub fn table2(opts: &ExpOptions) -> Result<()> {
+    // Equal-time budget: measured from a reference small-model run.
+    let kinds = ["et1", "et2", "et3", "etinf"];
+    let reference = lm_run(
+        opts,
+        "lm_tiny_et1",
+        "lm_tiny_eval",
+        "table2_ref_small",
+        default_lm_scale("et1"),
+        opts.steps,
+        0.0,
+        false,
+    )?;
+    let budget_secs = reference.summary.wall_seconds;
+
+    let mut table = Table::new(
+        "Table 2 — doubled model (2x layers), equal time vs equal iterations",
+        &["Optimizer", "ppl (equal time)", "ppl (equal iters)", "Opt. params"],
+    );
+    let mut results = Vec::new();
+    for kind in kinds {
+        let artifact = format!("lm_big_{kind}");
+        let scale = default_lm_scale(kind);
+        let timed = lm_run(
+            opts,
+            &artifact,
+            "lm_big_eval",
+            &format!("table2_{kind}_time"),
+            scale,
+            u64::MAX / 2,
+            budget_secs,
+            false,
+        )?;
+        let iters = lm_run(
+            opts,
+            &artifact,
+            "lm_big_eval",
+            &format!("table2_{kind}_iters"),
+            scale,
+            opts.steps,
+            0.0,
+            false,
+        )?;
+        table.row(vec![
+            timed.summary.optimizer.clone(),
+            fmt_ppl(timed.summary.final_eval_ppl),
+            fmt_ppl(iters.summary.final_eval_ppl),
+            fmt_mem(timed.summary.optimizer_scalars),
+        ]);
+        results.push(Json::obj(vec![
+            ("optimizer", Json::str(timed.summary.optimizer.clone())),
+            ("ppl_equal_time", Json::num(timed.summary.final_eval_ppl)),
+            ("ppl_equal_iters", Json::num(iters.summary.final_eval_ppl)),
+            ("steps_in_budget", Json::num(timed.summary.steps as f64)),
+        ]));
+    }
+    println!("reference small-model run: {:.1}s for {} steps", budget_secs, opts.steps);
+    println!("{}", table.render());
+    save_json(opts.out_dir.join("table2.json"), &Json::Arr(results))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 — Tr(H_T) vs Tr(Ĥ_T) and the regret-bound gap (§5.3)
+// ---------------------------------------------------------------------------
+
+pub fn fig2(opts: &ExpOptions) -> Result<()> {
+    let mut table = Table::new(
+        "Figure 2 — trace comparison (log scale in the paper); gap = sqrt(TrH/TrĤ)",
+        &["ET level", "Tr(H_T)", "Tr(H_hat_T)", "sqrt ratio"],
+    );
+    let mut results = Vec::new();
+    for kind in ["et1", "et2", "et3"] {
+        let res = lm_run(
+            opts,
+            &format!("lm_tiny_{kind}"),
+            "lm_tiny_eval",
+            &format!("fig2_{kind}"),
+            default_lm_scale(kind),
+            opts.steps,
+            0.0,
+            true, // track traces
+        )?;
+        let tr = res.trace_report.context("trace tracking was on")?;
+        table.row(vec![
+            kind.to_uppercase(),
+            format!("{:.3e}", tr.trace_h),
+            format!("{:.3e}", tr.trace_h_hat),
+            format!("{:.2}", tr.ratio),
+        ]);
+        results.push(Json::obj(vec![
+            ("level", Json::str(kind)),
+            ("trace_h", Json::num(tr.trace_h)),
+            ("trace_h_hat", Json::num(tr.trace_h_hat)),
+            ("ratio", Json::num(tr.ratio)),
+        ]));
+    }
+    println!("{}", table.render());
+    println!("(paper measures the ET1 gap ≈ 5.7 on the full GBW model)");
+    save_json(opts.out_dir.join("figure2.json"), &Json::Arr(results))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3 — synthetic convex problem (§5.4), pure rust
+// ---------------------------------------------------------------------------
+
+pub fn fig3(opts: &ExpOptions) -> Result<()> {
+    let cfg = ConvexConfig { seed: opts.seed ^ 0x54, ..ConvexConfig::default() };
+    crate::info!("generating convex dataset (n={}, d={}, cond={})", cfg.n, cfg.d, cfg.cond);
+    let ds = ConvexDataset::generate(&cfg);
+    let obj = SoftmaxRegression::new(&ds);
+    let idx: Vec<usize> = (0..ds.n).collect();
+    let groups = vec![GroupSpec::new("w", &[cfg.k, cfg.d])];
+    let iters = opts.steps.max(100) as usize;
+
+    // The paper's tensor indices along the feature dimension of W.
+    let variants: Vec<(String, Box<dyn Fn() -> Box<dyn optim::Optimizer>>, f64)> = vec![
+        ("SGD".into(),
+         Box::new({ let g = groups.clone(); move || optim::build(OptimizerKind::Sgd, &g, &Hyper::default()) }),
+         0.003),
+        ("AdaGrad".into(),
+         Box::new({ let g = groups.clone(); move || optim::build(OptimizerKind::AdaGrad, &g, &Hyper::default()) }),
+         0.05),
+        ("ET depth 1 (10,512)".into(),
+         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::ExtremeTensoring::new_with_dims(&g, vec![vec![10, 512]], 1e-8, None)) as Box<dyn optim::Optimizer> }),
+         0.05),
+        ("ET depth 2 (10,16,32)".into(),
+         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::ExtremeTensoring::new_with_dims(&g, vec![vec![10, 16, 32]], 1e-8, None)) as Box<dyn optim::Optimizer> }),
+         0.05),
+        ("ET depth 3 (10,8,8,8)".into(),
+         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::ExtremeTensoring::new_with_dims(&g, vec![vec![10, 8, 8, 8]], 1e-8, None)) as Box<dyn optim::Optimizer> }),
+         0.05),
+        ("ET-inf".into(),
+         Box::new({ let g = groups.clone(); move || optim::build(OptimizerKind::EtInf, &g, &Hyper::default()) }),
+         0.5),
+    ];
+
+    let mut table = Table::new(
+        "Figure 3 — convex logistic regression: final loss vs optimizer memory",
+        &["Optimizer", "Opt. params", "Final loss", "Accuracy"],
+    );
+    let mut curves = Table::new("fig3 curves", &["optimizer", "iter", "loss"]);
+    let mut results = Vec::new();
+    for (name, make, lr) in &variants {
+        let mut o = make();
+        let mut w = vec![0.0f32; obj.dim()];
+        let mut grad = vec![0.0f32; obj.dim()];
+        let mut final_loss = f64::NAN;
+        for t in 0..iters {
+            let loss = obj.loss_grad(&w, &idx, &mut grad);
+            o.next_step();
+            o.step(0, &mut w, &grad, *lr as f32)?;
+            final_loss = loss;
+            if t % (iters / 50).max(1) == 0 {
+                curves.row(vec![name.clone(), t.to_string(), format!("{loss:.6}")]);
+            }
+        }
+        let acc = obj.accuracy(&w, &idx);
+        let mem = if name == "SGD" { 1 } else { o.state_scalars() };
+        table.row(vec![
+            name.clone(),
+            fmt_mem(mem),
+            format!("{final_loss:.4}"),
+            format!("{:.3}", acc),
+        ]);
+        results.push(Json::obj(vec![
+            ("optimizer", Json::str(name.clone())),
+            ("opt_params", Json::num(mem as f64)),
+            ("final_loss", Json::num(final_loss)),
+            ("accuracy", Json::num(acc)),
+        ]));
+    }
+    println!("{}", table.render());
+    save_json(opts.out_dir.join("figure3.json"), &Json::Arr(results))?;
+    if opts.csv {
+        curves.write_csv(opts.out_dir.join("figure3_curves.csv"))?;
+        println!("wrote {}", opts.out_dir.join("figure3_curves.csv").display());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 / Figure 4 — vision experiment (appendix A)
+// ---------------------------------------------------------------------------
+
+pub fn table4(opts: &ExpOptions) -> Result<()> {
+    let kinds = ["adam", "et1", "et2", "et3", "etinf", "sgd"];
+    // Harder-than-default data (heavy pixel noise, fewer samples) so the
+    // task does not saturate at 0% for every optimizer within the step
+    // budget -- the paper's 7-9% error band comes from CIFAR's intrinsic
+    // difficulty, which the synthetic substitute has to emulate.
+    let data_cfg = VisionConfig {
+        seed: opts.seed ^ 0xf1,
+        noise: 1.3,
+        mix_max: 0.55,
+        train: 2000,
+        test: 512,
+        ..VisionConfig::default()
+    };
+    let client = Client::cpu()?;
+    let mut table = Table::new(
+        "Table 4 — synthetic-CIFAR convnet: optimizer memory vs test error (%)",
+        &["Optimizer", "Opt. param count", "Best test error", "Final test error"],
+    );
+    let mut fig4 = Table::new("Figure 4 series", &["optimizer", "opt_params", "test_error"]);
+    let mut results = Vec::new();
+    for kind in kinds {
+        let lr = match kind {
+            "sgd" => 0.05,
+            "adam" => 0.002,
+            "etinf" => 0.5,
+            _ => 0.05,
+        };
+        let mut t = VisionTrainer::new(&client, &opts.artifact_dir, kind, &data_cfg)?;
+        let run = t.run(opts.steps, lr, (opts.steps / 5).max(1), opts.seed)?;
+        let mem = if kind == "sgd" { 1 } else { run.optimizer_scalars };
+        table.row(vec![
+            run.optimizer.clone(),
+            fmt_mem(mem),
+            format!("{:.2}%", run.best_test_error * 100.0),
+            format!("{:.2}%", run.final_test_error * 100.0),
+        ]);
+        fig4.row(vec![
+            run.optimizer.clone(),
+            mem.to_string(),
+            format!("{:.4}", run.best_test_error),
+        ]);
+        results.push(Json::obj(vec![
+            ("optimizer", Json::str(run.optimizer.clone())),
+            ("opt_params", Json::num(mem as f64)),
+            ("best_test_error", Json::num(run.best_test_error)),
+            ("final_test_error", Json::num(run.final_test_error)),
+        ]));
+    }
+    println!("{}", table.render());
+    save_json(opts.out_dir.join("table4.json"), &Json::Arr(results))?;
+    if opts.csv {
+        fig4.write_csv(opts.out_dir.join("figure4.csv"))?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// plan-index / memory-report — Tables 3 & B.1 and §5.2 memory accounting
+// ---------------------------------------------------------------------------
+
+pub fn plan_index(preset: &str) -> Result<()> {
+    let shapes: Vec<(&str, Vec<usize>)> = match preset {
+        "resnet18" => vec![
+            ("conv 64x3x3x3", vec![64, 3, 3, 3]),
+            ("conv 64x64x3x3", vec![64, 64, 3, 3]),
+            ("conv 128x64x3x3", vec![128, 64, 3, 3]),
+            ("conv 128x128x3x3", vec![128, 128, 3, 3]),
+            ("conv 256x128x3x3", vec![256, 128, 3, 3]),
+            ("conv 256x256x3x3", vec![256, 256, 3, 3]),
+            ("conv 512x256x3x3", vec![512, 256, 3, 3]),
+            ("conv 512x512x3x3", vec![512, 512, 3, 3]),
+            ("conv 128x64x1x1", vec![128, 64, 1, 1]),
+            ("conv 256x128x1x1", vec![256, 128, 1, 1]),
+            ("conv 512x128x1x1", vec![512, 128, 1, 1]),
+        ],
+        "transformer" => vec![
+            ("attention / FF (512,512)", vec![512, 512]),
+            ("embedding (2000,512)", vec![2000, 512]),
+            ("layer norm (512,)", vec![512]),
+            ("FC (512,2048)", vec![512, 2048]),
+            ("FC bias (2048,)", vec![2048]),
+            ("FC (2048,512)", vec![2048, 512]),
+        ],
+        other => anyhow::bail!("unknown preset '{other}' (resnet18 | transformer)"),
+    };
+    let title = if preset == "resnet18" {
+        "Table 3 — ResNet-18 tensor indices per ET level"
+    } else {
+        "Table B.1 — Transformer tensor indices per ET level"
+    };
+    let mut table = Table::new(title, &["Parameter", "ET1", "ET2", "ET3"]);
+    for (name, shape) in shapes {
+        let f = |k: u8| {
+            format!("{:?}", crate::tensoring::plan(&shape, crate::tensoring::Level::Et(k)))
+        };
+        table.row(vec![name.to_string(), f(1), f(2), f(3)]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+pub fn memory_report(layers: usize, vocab: usize, d_model: usize, d_ff: usize) -> Result<()> {
+    let mut groups: Vec<(String, Vec<usize>)> = vec![("embed".into(), vec![vocab, d_model])];
+    for l in 0..layers {
+        for nm in ["ln1", "ln2"] {
+            groups.push((format!("l{l}.{nm}"), vec![d_model]));
+        }
+        for nm in ["wq", "wk", "wv", "wo"] {
+            groups.push((format!("l{l}.{nm}"), vec![d_model, d_model]));
+        }
+        groups.push((format!("l{l}.ff1"), vec![d_model, d_ff]));
+        groups.push((format!("l{l}.ff1b"), vec![d_ff]));
+        groups.push((format!("l{l}.ff2"), vec![d_ff, d_model]));
+        groups.push((format!("l{l}.ff2b"), vec![d_model]));
+    }
+    groups.push(("ln_f".into(), vec![d_model]));
+
+    let mut table = Table::new(
+        &format!(
+            "Optimizer memory for a {layers}-layer transformer (d_model={d_model}, d_ff={d_ff}, vocab={vocab})"
+        ),
+        &["Optimizer", "State scalars", "Overhead vs params"],
+    );
+    for kind in [
+        OptimizerKind::Adam,
+        OptimizerKind::AdaGrad,
+        OptimizerKind::Adafactor,
+        OptimizerKind::Et(1),
+        OptimizerKind::Et(2),
+        OptimizerKind::Et(3),
+        OptimizerKind::EtInf,
+        OptimizerKind::Sgd,
+    ] {
+        let rep = MemoryReport::for_model(kind, &groups);
+        table.row(vec![
+            kind.name(),
+            fmt_mem(rep.optimizer_scalars),
+            format!("{:.5}x", rep.overhead()),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

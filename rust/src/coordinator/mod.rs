@@ -1,0 +1,9 @@
+//! L3 coordinator: the experiment registry mapping each paper table/figure
+//! to a runnable regeneration, plus reporting utilities. The `ettrain`
+//! binary (rust/src/main.rs) is the CLI over this module.
+
+pub mod ablation;
+pub mod experiments;
+pub mod report;
+
+pub use experiments::ExpOptions;

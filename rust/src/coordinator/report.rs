@@ -1,0 +1,124 @@
+//! Table/CSV rendering for experiment outputs — prints the same rows the
+//! paper's tables report, and CSV series for the figures.
+
+use crate::util::json::Json;
+use crate::util::math::fmt_count;
+use std::path::Path;
+
+/// A simple aligned text table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write rows as CSV (figures are plotted from these files).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+/// Format helpers shared by experiments.
+pub fn fmt_ppl(x: f64) -> String {
+    if x.is_nan() {
+        "-".into()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+pub fn fmt_mem(n: usize) -> String {
+    format!("{} ({})", n, fmt_count(n))
+}
+
+/// Persist an experiment's structured result next to the human table.
+pub fn save_json(path: impl AsRef<Path>, value: &Json) -> anyhow::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, value.to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["Optimizer", "ppl"]);
+        t.row(vec!["AdaGrad".into(), "41.18".into()]);
+        t.row(vec!["ET1".into(), "39.84".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("AdaGrad"));
+        // column alignment: both ppl values start at the same column
+        let p1 = s.lines().find(|l| l.contains("41.18")).unwrap().find("41.18").unwrap();
+        let p2 = s.lines().find(|l| l.contains("39.84")).unwrap().find("39.84").unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("etcsv-{}", std::process::id()));
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let p = dir.join("t.csv");
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

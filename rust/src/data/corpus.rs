@@ -1,0 +1,289 @@
+//! Corpus sources for language-model training.
+//!
+//! The paper trains on Google Billion Words, which is not available here;
+//! the substitution (DESIGN.md §3) is a seeded synthetic corpus with
+//! learnable statistical structure: a sparse first-order Markov chain over
+//! a Zipf-distributed word vocabulary. An LM that learns the bigram
+//! transitions will beat the unigram entropy floor by a wide margin, so
+//! optimizer quality differences show up in perplexity exactly as they do
+//! on natural text. Plain text files are also supported for users with a
+//! real corpus.
+
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A tokenized corpus: a stream of word strings plus sentence boundaries.
+pub struct Corpus {
+    /// Sentences, each a vector of word ids into `vocab`.
+    pub sentences: Vec<Vec<u32>>,
+    /// The word strings (index = word id used in `sentences`).
+    pub vocab: Vec<String>,
+}
+
+/// Parameters of the synthetic Markov corpus.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    /// Vocabulary size (word types).
+    pub vocab: usize,
+    /// Number of sentences to generate.
+    pub sentences: usize,
+    /// Mean sentence length (geometric).
+    pub mean_len: usize,
+    /// Out-degree of the Markov chain (successors per word).
+    pub branching: usize,
+    pub seed: u64,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig { vocab: 1900, sentences: 20_000, mean_len: 18, branching: 24, seed: 0x6b }
+    }
+}
+
+impl Corpus {
+    /// Generate the synthetic Markov corpus.
+    pub fn synthetic(cfg: &SyntheticConfig) -> Corpus {
+        let mut rng = Pcg64::seeded(cfg.seed);
+        let mut chain_rng = rng.fork("chain");
+        let mut text_rng = rng.fork("text");
+
+        // Zipfian unigram weights over word types.
+        let uni: Vec<f64> = (0..cfg.vocab).map(|r| 1.0 / (r as f64 + 2.7)).collect();
+
+        // Sparse successor lists: each word transitions to `branching`
+        // candidates with geometric-ish weights. Successors are sampled
+        // from the unigram distribution so frequent words stay frequent.
+        let mut successors: Vec<Vec<(u32, f64)>> = Vec::with_capacity(cfg.vocab);
+        for _ in 0..cfg.vocab {
+            let mut row = Vec::with_capacity(cfg.branching);
+            let mut w = 1.0f64;
+            for _ in 0..cfg.branching {
+                let next = chain_rng.categorical(&uni) as u32;
+                row.push((next, w));
+                w *= 0.78;
+            }
+            successors.push(row);
+        }
+
+        // Synthesize word strings: pronounceable CV syllables, length by id
+        // so the vocabulary is deterministic and readable in logs.
+        let vocab: Vec<String> = (0..cfg.vocab).map(|i| synth_word(i as u64)).collect();
+
+        let mut sentences = Vec::with_capacity(cfg.sentences);
+        for _ in 0..cfg.sentences {
+            let mut sent = Vec::with_capacity(cfg.mean_len + 4);
+            let mut cur = text_rng.categorical(&uni) as u32;
+            sent.push(cur);
+            // geometric length with the requested mean
+            let cont = 1.0 - 1.0 / cfg.mean_len.max(1) as f64;
+            while text_rng.next_f64() < cont && sent.len() < 8 * cfg.mean_len {
+                let row = &successors[cur as usize];
+                let weights: Vec<f64> = row.iter().map(|&(_, w)| w).collect();
+                cur = row[text_rng.categorical(&weights)].0;
+                sent.push(cur);
+            }
+            sentences.push(sent);
+        }
+        Corpus { sentences, vocab }
+    }
+
+    /// Load a plain-text corpus: one sentence per line, whitespace-split
+    /// words, vocabulary built by frequency with a max size (rare words
+    /// collapse to their frequency-rank cutoff at tokenizer level).
+    pub fn from_text_file(path: impl AsRef<Path>, max_vocab: usize) -> Result<Corpus> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read corpus {:?}", path.as_ref()))?;
+        Ok(Self::from_text(&text, max_vocab))
+    }
+
+    /// Build from in-memory text (one sentence per line).
+    pub fn from_text(text: &str, max_vocab: usize) -> Corpus {
+        use std::collections::HashMap;
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        for line in text.lines() {
+            for w in line.split_whitespace() {
+                *freq.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut by_freq: Vec<(&str, u64)> = freq.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        by_freq.truncate(max_vocab);
+        let vocab: Vec<String> = by_freq.iter().map(|(w, _)| w.to_string()).collect();
+        let lookup: HashMap<&str, u32> =
+            by_freq.iter().enumerate().map(|(i, (w, _))| (*w, i as u32)).collect();
+        let sentences = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|line| {
+                line.split_whitespace()
+                    .filter_map(|w| lookup.get(w).copied())
+                    .collect::<Vec<u32>>()
+            })
+            .filter(|s| !s.is_empty())
+            .collect();
+        Corpus { sentences, vocab }
+    }
+
+    pub fn total_words(&self) -> usize {
+        self.sentences.iter().map(|s| s.len()).sum()
+    }
+
+    /// Unigram entropy in nats — the perplexity floor for a context-free
+    /// model; a trained LM should get below `exp(H1)`.
+    pub fn unigram_entropy(&self) -> f64 {
+        let mut counts = vec![0u64; self.vocab.len()];
+        for s in &self.sentences {
+            for &w in s {
+                counts[w as usize] += 1;
+            }
+        }
+        let total: u64 = counts.iter().sum();
+        let mut h = 0.0f64;
+        for &c in &counts {
+            if c > 0 {
+                let p = c as f64 / total as f64;
+                h -= p * p.ln();
+            }
+        }
+        h
+    }
+
+    /// Split sentences into train/validation by a deterministic hash of the
+    /// sentence index (every k-th sentence is validation).
+    pub fn split(&self, every_kth_valid: usize) -> (Vec<&[u32]>, Vec<&[u32]>) {
+        let mut train = Vec::new();
+        let mut valid = Vec::new();
+        for (i, s) in self.sentences.iter().enumerate() {
+            if every_kth_valid > 0 && i % every_kth_valid == every_kth_valid - 1 {
+                valid.push(s.as_slice());
+            } else {
+                train.push(s.as_slice());
+            }
+        }
+        (train, valid)
+    }
+}
+
+/// Deterministic pronounceable word from an id (base-consonant-vowel code).
+fn synth_word(mut id: u64) -> String {
+    const C: &[u8] = b"bcdfghjklmnprstvwz";
+    const V: &[u8] = b"aeiou";
+    let mut s = String::new();
+    loop {
+        let c = C[(id % C.len() as u64) as usize];
+        id /= C.len() as u64;
+        let v = V[(id % V.len() as u64) as usize];
+        id /= V.len() as u64;
+        s.push(c as char);
+        s.push(v as char);
+        if id == 0 {
+            break;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SyntheticConfig {
+        SyntheticConfig { vocab: 100, sentences: 500, mean_len: 10, branching: 8, seed: 3 }
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = Corpus::synthetic(&tiny());
+        let b = Corpus::synthetic(&tiny());
+        assert_eq!(a.sentences, b.sentences);
+        assert_eq!(a.vocab, b.vocab);
+    }
+
+    #[test]
+    fn word_ids_in_range() {
+        let c = Corpus::synthetic(&tiny());
+        for s in &c.sentences {
+            assert!(!s.is_empty());
+            for &w in s {
+                assert!((w as usize) < c.vocab.len());
+            }
+        }
+    }
+
+    #[test]
+    fn has_learnable_bigram_structure() {
+        // Bigram conditional entropy must be substantially below unigram
+        // entropy — otherwise an LM has nothing to learn beyond frequency.
+        let c = Corpus::synthetic(&SyntheticConfig { sentences: 3000, ..tiny() });
+        let v = c.vocab.len();
+        let mut uni = vec![0f64; v];
+        let mut bi = std::collections::HashMap::<(u32, u32), f64>::new();
+        let mut total_bi = 0f64;
+        for s in &c.sentences {
+            for &w in s {
+                uni[w as usize] += 1.0;
+            }
+            for pair in s.windows(2) {
+                *bi.entry((pair[0], pair[1])).or_insert(0.0) += 1.0;
+                total_bi += 1.0;
+            }
+        }
+        let h1 = c.unigram_entropy();
+        // H(next | prev) = H(pair) - H(prev)
+        let total_uni: f64 = uni.iter().sum();
+        let h_prev: f64 = uni
+            .iter()
+            .filter(|&&c| c > 0.0)
+            .map(|&c| {
+                let p = c / total_uni;
+                -p * p.ln()
+            })
+            .sum();
+        let h_pair: f64 = bi
+            .values()
+            .map(|&c| {
+                let p = c / total_bi;
+                -p * p.ln()
+            })
+            .sum();
+        let h_cond = h_pair - h_prev;
+        assert!(
+            h_cond < 0.75 * h1,
+            "conditional entropy {h_cond} not far below unigram {h1}"
+        );
+    }
+
+    #[test]
+    fn from_text_builds_vocab_by_frequency() {
+        let text = "the cat sat\nthe dog sat\nthe cat ran\n";
+        let c = Corpus::from_text(text, 10);
+        assert_eq!(c.vocab[0], "the"); // most frequent
+        assert_eq!(c.sentences.len(), 3);
+        assert_eq!(c.total_words(), 9);
+    }
+
+    #[test]
+    fn vocab_truncation_drops_rare_words() {
+        let text = "a a a b b c\n";
+        let c = Corpus::from_text(text, 2);
+        assert_eq!(c.vocab, vec!["a", "b"]);
+        assert_eq!(c.sentences[0], vec![0, 0, 0, 1, 1]); // 'c' dropped
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let c = Corpus::synthetic(&tiny());
+        let (train, valid) = c.split(10);
+        assert_eq!(train.len() + valid.len(), c.sentences.len());
+        assert!(valid.len() >= c.sentences.len() / 12);
+    }
+
+    #[test]
+    fn synth_words_unique_for_small_ids() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..1000 {
+            assert!(seen.insert(synth_word(i)), "collision at {i}");
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Prefetching data loader: a background thread assembles batches ahead of
+//! the training loop through a bounded channel, so host-side batch assembly
+//! overlaps device execution. (The offline environment has no tokio; a
+//! dedicated thread + `sync_channel` is the right tool for one producer and
+//! one consumer anyway.)
+
+use super::batcher::{Batch, Batcher};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+pub struct Loader {
+    rx: Receiver<Batch>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Loader {
+    /// Stream `total_batches` batches (cycling epochs as needed), keeping up
+    /// to `prefetch` batches in flight.
+    pub fn spawn(batcher: Batcher, seed: u64, total_batches: usize, prefetch: usize) -> Loader {
+        let (tx, rx) = sync_channel(prefetch.max(1));
+        let handle = std::thread::Builder::new()
+            .name("et-loader".into())
+            .spawn(move || {
+                let per_epoch = batcher.batches_per_epoch().max(1);
+                let mut produced = 0usize;
+                let mut epoch = 0u64;
+                'outer: while produced < total_batches {
+                    let order = batcher.epoch_order(epoch, seed);
+                    for b in 0..per_epoch {
+                        if produced >= total_batches {
+                            break 'outer;
+                        }
+                        match batcher.batch(&order, b) {
+                            Some(batch) => {
+                                if tx.send(batch).is_err() {
+                                    break 'outer; // consumer dropped
+                                }
+                                produced += 1;
+                            }
+                            None => break,
+                        }
+                    }
+                    epoch += 1;
+                }
+            })
+            .expect("spawn loader thread");
+        Loader { rx, handle: Some(handle) }
+    }
+
+    /// Blocking next batch; `None` when the stream is exhausted.
+    pub fn next(&mut self) -> Option<Batch> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for Loader {
+    fn drop(&mut self) {
+        // Drain-free shutdown: dropping rx unblocks the producer's send.
+        let (_tx, rx) = sync_channel(1);
+        let old = std::mem::replace(&mut self.rx, rx);
+        drop(old);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, SyntheticConfig};
+    use crate::data::tokenizer::Tokenizer;
+
+    fn batcher() -> Batcher {
+        let c = Corpus::synthetic(&SyntheticConfig {
+            vocab: 40,
+            sentences: 200,
+            mean_len: 8,
+            branching: 5,
+            seed: 9,
+        });
+        let t = Tokenizer::from_corpus(&c);
+        let (train, _) = c.split(0);
+        Batcher::new(&t, &train, 16, 2)
+    }
+
+    #[test]
+    fn streams_exact_count() {
+        let mut loader = Loader::spawn(batcher(), 1, 25, 4);
+        let mut n = 0;
+        while let Some(b) = loader.next() {
+            assert_eq!(b.numel(), 32);
+            n += 1;
+        }
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn cycles_epochs_when_needed() {
+        let b = batcher();
+        let per_epoch = b.batches_per_epoch();
+        let want = per_epoch * 2 + 3;
+        let mut loader = Loader::spawn(b, 1, want, 2);
+        let mut n = 0;
+        while loader.next().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, want);
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let mut loader = Loader::spawn(batcher(), 1, 1000, 2);
+        let _ = loader.next();
+        drop(loader); // must unblock the producer and join cleanly
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let collect = || {
+            let mut l = Loader::spawn(batcher(), 7, 10, 3);
+            let mut v = Vec::new();
+            while let Some(b) = l.next() {
+                v.push(b.tokens);
+            }
+            v
+        };
+        assert_eq!(collect(), collect());
+    }
+}

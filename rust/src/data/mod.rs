@@ -1,0 +1,12 @@
+//! Data pipeline: corpus synthesis/loading, tokenization, sequence packing,
+//! and a prefetching loader. See DESIGN.md §3 for the GBW substitution.
+
+pub mod batcher;
+pub mod corpus;
+pub mod loader;
+pub mod tokenizer;
+
+pub use batcher::{Batch, Batcher};
+pub use corpus::{Corpus, SyntheticConfig};
+pub use loader::Loader;
+pub use tokenizer::Tokenizer;

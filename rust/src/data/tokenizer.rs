@@ -1,0 +1,122 @@
+//! Token-id mapping with the special tokens the LM artifacts expect.
+//!
+//! Layout: `PAD=0, BOS=1, EOS=2, UNK=3`, then corpus word ids shifted by 4.
+//! The model's vocabulary size (embedding rows) is `corpus_vocab + 4`; the
+//! AOT manifest records it so rust and python can never disagree.
+
+use super::corpus::Corpus;
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const UNK: u32 = 3;
+pub const NUM_SPECIAL: u32 = 4;
+
+/// Bidirectional word <-> token-id mapping.
+pub struct Tokenizer {
+    words: Vec<String>,
+    lookup: HashMap<String, u32>,
+}
+
+impl Tokenizer {
+    pub fn from_corpus(corpus: &Corpus) -> Tokenizer {
+        let words = corpus.vocab.clone();
+        let lookup =
+            words.iter().enumerate().map(|(i, w)| (w.clone(), i as u32 + NUM_SPECIAL)).collect();
+        Tokenizer { words, lookup }
+    }
+
+    /// Total vocabulary size including specials (the model's embedding rows).
+    pub fn vocab_size(&self) -> usize {
+        self.words.len() + NUM_SPECIAL as usize
+    }
+
+    /// Corpus word id -> token id.
+    #[inline]
+    pub fn id_of_word_id(&self, word_id: u32) -> u32 {
+        word_id + NUM_SPECIAL
+    }
+
+    /// Token id -> display string.
+    pub fn token_str(&self, token: u32) -> &str {
+        match token {
+            PAD => "<pad>",
+            BOS => "<bos>",
+            EOS => "<eos>",
+            UNK => "<unk>",
+            t => self
+                .words
+                .get((t - NUM_SPECIAL) as usize)
+                .map(|s| s.as_str())
+                .unwrap_or("<oov>"),
+        }
+    }
+
+    /// Encode a raw word string (UNK for out-of-vocabulary).
+    pub fn encode_word(&self, w: &str) -> u32 {
+        self.lookup.get(w).copied().unwrap_or(UNK)
+    }
+
+    /// Encode one sentence of corpus word-ids as `BOS w1 .. wn EOS`.
+    pub fn encode_sentence(&self, word_ids: &[u32]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(word_ids.len() + 2);
+        out.push(BOS);
+        out.extend(word_ids.iter().map(|&w| self.id_of_word_id(w)));
+        out.push(EOS);
+        out
+    }
+
+    /// Decode token ids to a readable string (for logging samples).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens.iter().map(|&t| self.token_str(t)).collect::<Vec<_>>().join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, SyntheticConfig};
+
+    fn tok() -> Tokenizer {
+        let c = Corpus::synthetic(&SyntheticConfig {
+            vocab: 50,
+            sentences: 10,
+            mean_len: 5,
+            branching: 4,
+            seed: 1,
+        });
+        Tokenizer::from_corpus(&c)
+    }
+
+    #[test]
+    fn specials_reserved() {
+        let t = tok();
+        assert_eq!(t.vocab_size(), 54);
+        assert_eq!(t.token_str(PAD), "<pad>");
+        assert_eq!(t.token_str(BOS), "<bos>");
+        // first real word maps to id 4
+        assert_eq!(t.id_of_word_id(0), 4);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = tok();
+        let sent = vec![0u32, 3, 7];
+        let enc = t.encode_sentence(&sent);
+        assert_eq!(enc.first(), Some(&BOS));
+        assert_eq!(enc.last(), Some(&EOS));
+        assert_eq!(enc.len(), 5);
+        let dec = t.decode(&enc);
+        assert!(dec.starts_with("<bos> "));
+        assert!(dec.ends_with(" <eos>"));
+    }
+
+    #[test]
+    fn word_lookup_and_unk() {
+        let t = tok();
+        let known = t.token_str(4).to_string();
+        assert_eq!(t.encode_word(&known), 4);
+        assert_eq!(t.encode_word("zzz-not-a-word-zzz"), UNK);
+    }
+}

@@ -1,0 +1,32 @@
+//! # extensor — Extreme Tensoring for Low-Memory Preconditioning
+//!
+//! A production-shaped reproduction of *Extreme Tensoring for Low-Memory
+//! Preconditioning* (Chen, Agarwal, Hazan, Zhang, Zhang — ICLR 2020) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the `ettrain` training coordinator: config,
+//!   data pipeline, step loop, checkpointing, metrics, memory accounting,
+//!   the pure-rust optimizer suite, and the experiment harness that
+//!   regenerates every table and figure in the paper.
+//! * **L2 (`python/compile/`)** — the transformer / convnet compute graphs
+//!   and optimizer updates in JAX, AOT-lowered once to HLO text.
+//! * **L1 (`python/compile/kernels/`)** — the extreme-tensoring slice-sum
+//!   and preconditioner-apply hot spots as Pallas kernels.
+//!
+//! Python never runs on the training path: the rust binary loads the AOT
+//! artifacts through PJRT (`runtime`) and owns everything else.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod convex;
+pub mod coordinator;
+pub mod data;
+pub mod optim;
+pub mod regret;
+pub mod runtime;
+pub mod tensoring;
+pub mod testing;
+pub mod train;
+pub mod util;
+pub mod vision;

@@ -1,0 +1,223 @@
+//! `ettrain` — the extreme-tensoring training coordinator CLI.
+//!
+//! Subcommands:
+//!   train          run a training job from a TOML config
+//!   experiment     regenerate a paper table/figure (table1|table2|fig2|fig3|table4)
+//!   plan-index     print the Table 3 / B.1 factorization tables
+//!   memory-report  per-optimizer state accounting for a transformer config
+//!   list-artifacts show compiled AOT artifacts and their shapes
+//!
+//! Run `ettrain <cmd> --help` (any bad flag prints usage).
+
+use anyhow::{bail, Context, Result};
+use extensor::coordinator::experiments;
+use extensor::coordinator::ExpOptions;
+use extensor::train::{RunConfig, Trainer};
+use extensor::util::cli::{Args, Spec};
+use std::path::PathBuf;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "experiment" => cmd_experiment(rest),
+        "plan-index" => cmd_plan_index(rest),
+        "memory-report" => cmd_memory_report(rest),
+        "list-artifacts" => cmd_list_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `ettrain help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ettrain — Extreme Tensoring for Low-Memory Preconditioning (ICLR 2020) reproduction
+
+USAGE: ettrain <subcommand> [options]
+
+  train <config.toml> [--set k=v ...]   run a training job
+  experiment <id> [--steps N] [--csv]   regenerate a paper table/figure
+        ids: table1 fig1 table2 fig2 fig3 table4 fig4 ablation all
+  plan-index --preset resnet18|transformer
+  memory-report [--layers N] [--vocab V] [--d-model D] [--d-ff F]
+  list-artifacts [--dir artifacts]
+
+Artifacts must be built first: `make artifacts`."
+    );
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "train",
+        about: "run a training job from a TOML config",
+        options: vec![("set", None, "override config key=value (comma separated)")],
+        flags: vec![("quiet", "reduce logging")],
+        positional: vec![("config", "path to run config TOML")],
+    };
+    let args = Args::parse(&spec, argv)?;
+    if args.flag("quiet") {
+        extensor::util::logging::set_verbosity(extensor::util::logging::Level::Warn);
+    }
+    let config_path = args
+        .positional
+        .first()
+        .context("missing <config> (see configs/ for examples)")?;
+    let overrides: Vec<(String, String)> = args
+        .get("set")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|kv| kv.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
+                .collect()
+        })
+        .unwrap_or_default();
+    let cfg = RunConfig::load(config_path, &overrides)?;
+    let name = cfg.name.clone();
+    let result = Trainer::new(cfg)?.run()?;
+    let s = &result.summary;
+    println!(
+        "run '{name}': {} steps, final loss {:.4}, val ppl {:.2}, {:.1}s, {:.0} tok/s",
+        s.steps, s.final_train_loss, s.final_eval_ppl, s.wall_seconds, s.tokens_per_sec
+    );
+    Ok(())
+}
+
+fn exp_options(args: &Args) -> Result<ExpOptions> {
+    Ok(ExpOptions {
+        artifact_dir: PathBuf::from(args.get("artifact-dir").unwrap_or("artifacts")),
+        out_dir: PathBuf::from(args.get("out-dir").unwrap_or("results")),
+        steps: args.get_u64("steps")?,
+        seed: args.get_u64("seed")?,
+        csv: args.flag("csv"),
+        tune: args.flag("tune"),
+    })
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "experiment",
+        about: "regenerate a paper table/figure",
+        options: vec![
+            ("steps", Some("300"), "training steps per run"),
+            ("seed", Some("42"), "experiment seed"),
+            ("artifact-dir", Some("artifacts"), "AOT artifact directory"),
+            ("out-dir", Some("results"), "output directory"),
+        ],
+        flags: vec![
+            ("csv", "also write figure CSV series"),
+            ("tune", "grid-search the global LR scale with probe runs"),
+        ],
+        positional: vec![("id", "table1|fig1|table2|fig2|fig3|table4|fig4|ablation|all")],
+    };
+    let args = Args::parse(&spec, argv)?;
+    let id = args.positional.first().context("missing experiment id")?.as_str();
+    let mut opts = exp_options(&args)?;
+    match id {
+        "table1" | "fig1" => {
+            opts.csv |= id == "fig1";
+            experiments::table1(&opts)
+        }
+        "table2" => experiments::table2(&opts),
+        "fig2" => experiments::fig2(&opts),
+        "fig3" => experiments::fig3(&opts),
+        "table4" | "fig4" => {
+            opts.csv |= id == "fig4";
+            experiments::table4(&opts)
+        }
+        "ablation" => {
+            extensor::coordinator::ablation::run(&opts.out_dir, opts.steps as usize, opts.seed)
+        }
+        "all" => {
+            opts.csv = true;
+            experiments::table1(&opts)?;
+            experiments::table2(&opts)?;
+            experiments::fig2(&opts)?;
+            experiments::fig3(&opts)?;
+            experiments::table4(&opts)?;
+            extensor::coordinator::ablation::run(&opts.out_dir, opts.steps as usize, opts.seed)
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+}
+
+fn cmd_plan_index(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "plan-index",
+        about: "print factorization tables (paper Tables 3 / B.1)",
+        options: vec![("preset", Some("transformer"), "resnet18 | transformer")],
+        flags: vec![],
+        positional: vec![],
+    };
+    let args = Args::parse(&spec, argv)?;
+    experiments::plan_index(args.get("preset").unwrap_or("transformer"))
+}
+
+fn cmd_memory_report(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "memory-report",
+        about: "optimizer state accounting for a transformer config",
+        options: vec![
+            ("layers", Some("6"), "transformer layers"),
+            ("vocab", Some("2000"), "vocabulary size"),
+            ("d-model", Some("512"), "model width"),
+            ("d-ff", Some("2048"), "feed-forward width"),
+        ],
+        flags: vec![],
+        positional: vec![],
+    };
+    let args = Args::parse(&spec, argv)?;
+    experiments::memory_report(
+        args.get_usize("layers")?,
+        args.get_usize("vocab")?,
+        args.get_usize("d-model")?,
+        args.get_usize("d-ff")?,
+    )
+}
+
+fn cmd_list_artifacts(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "list-artifacts",
+        about: "show compiled AOT artifacts",
+        options: vec![("dir", Some("artifacts"), "artifact directory")],
+        flags: vec![],
+        positional: vec![],
+    };
+    let args = Args::parse(&spec, argv)?;
+    let dir = PathBuf::from(args.get("dir").unwrap_or("artifacts"));
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .with_context(|| format!("read {dir:?} (run `make artifacts`)"))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            let n = e.file_name().to_string_lossy().to_string();
+            n.strip_suffix(".json").map(|s| s.to_string())
+        })
+        .collect();
+    names.sort();
+    println!("{:<22} {:>12} {:>12}  kind", "artifact", "params", "opt state");
+    for name in names {
+        if let Ok(m) = extensor::runtime::Manifest::load(&dir, &name) {
+            println!(
+                "{:<22} {:>12} {:>12}  {:?}",
+                m.name,
+                m.total_params(),
+                m.total_opt_state(),
+                m.kind
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Adadelta (Zeiler 2012): second-moment accumulator on gradients plus an
+//! accumulator on squared updates, removing the global learning-rate scale
+//! (we still multiply by `lr` as a trust factor, as all practical
+//! implementations do).
+
+use super::{GroupSpec, Optimizer};
+use crate::tensoring::OptimizerKind;
+use anyhow::Result;
+
+pub struct AdaDelta {
+    rho: f32,
+    eps: f32,
+    eg2: Vec<Vec<f32>>,
+    ex2: Vec<Vec<f32>>,
+}
+
+impl AdaDelta {
+    pub fn new(groups: &[GroupSpec], rho: f32, eps: f32) -> Self {
+        AdaDelta {
+            rho,
+            eps,
+            eg2: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
+            ex2: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
+        }
+    }
+}
+
+impl Optimizer for AdaDelta {
+    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let (eg2, ex2) = (&mut self.eg2[gi], &mut self.ex2[gi]);
+        anyhow::ensure!(x.len() == eg2.len() && g.len() == eg2.len());
+        for i in 0..eg2.len() {
+            eg2[i] = self.rho * eg2[i] + (1.0 - self.rho) * g[i] * g[i];
+            let dx = ((ex2[i] + self.eps) / (eg2[i] + self.eps)).sqrt() * g[i];
+            ex2[i] = self.rho * ex2[i] + (1.0 - self.rho) * dx * dx;
+            x[i] -= lr * dx;
+        }
+        Ok(())
+    }
+
+    fn state_scalars(&self) -> usize {
+        self.eg2.iter().map(|v| v.len()).sum::<usize>() * 2
+    }
+
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::AdaDelta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descends_quadratic() {
+        let gs = vec![GroupSpec::new("x", &[4])];
+        let mut o = AdaDelta::new(&gs, 0.95, 1e-6);
+        let mut x = vec![1.0f32; 4];
+        for _ in 0..500 {
+            let g: Vec<f32> = x.clone();
+            o.step(0, &mut x, &g, 1.0).unwrap();
+        }
+        let loss: f32 = x.iter().map(|v| v * v).sum();
+        assert!(loss < 0.5, "loss {loss}");
+    }
+
+    #[test]
+    fn memory_is_2d() {
+        let gs = vec![GroupSpec::new("w", &[6])];
+        assert_eq!(AdaDelta::new(&gs, 0.95, 1e-6).state_scalars(), 12);
+    }
+}

@@ -1,0 +1,122 @@
+//! Diagonal AdaGrad (Duchi, Hazan & Singer 2011) — the full-memory endpoint
+//! of the paper's interpolation and the `p = 1` special case of Algorithm 1.
+
+use super::{GroupSpec, Optimizer};
+use crate::tensoring::OptimizerKind;
+use anyhow::Result;
+
+pub struct AdaGrad {
+    eps: f32,
+    s: Vec<Vec<f32>>,
+}
+
+impl AdaGrad {
+    pub fn new(groups: &[GroupSpec], eps: f32) -> Self {
+        AdaGrad { eps, s: groups.iter().map(|g| vec![0.0; g.numel()]).collect() }
+    }
+
+    /// Accumulated second moments (used by the regret instrumentation to
+    /// compute `Tr(Ĥ_T)`).
+    pub fn accumulators(&self) -> &[Vec<f32>] {
+        &self.s
+    }
+
+    /// `Tr(Ĥ_T) = sum_j (eps + S[j])^{1/2}` over all groups.
+    pub fn trace_h_hat(&self) -> f64 {
+        self.s
+            .iter()
+            .flat_map(|v| v.iter())
+            .map(|&x| ((self.eps + x) as f64).sqrt())
+            .sum()
+    }
+}
+
+impl Optimizer for AdaGrad {
+    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let s = &mut self.s[gi];
+        anyhow::ensure!(x.len() == s.len() && g.len() == s.len());
+        for i in 0..s.len() {
+            s[i] += g[i] * g[i];
+            x[i] -= lr * g[i] / (self.eps + s[i]).sqrt();
+        }
+        Ok(())
+    }
+
+    fn state_scalars(&self) -> usize {
+        self.s.iter().map(|v| v.len()).sum()
+    }
+
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::AdaGrad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{props, Gen};
+
+    #[test]
+    fn update_rule_exact() {
+        let gs = vec![GroupSpec::new("x", &[2])];
+        let mut o = AdaGrad::new(&gs, 0.0);
+        let mut x = vec![0.0f32, 0.0];
+        o.step(0, &mut x, &[3.0, 4.0], 1.0).unwrap();
+        // x -= g / |g| elementwise on first step
+        assert!((x[0] + 1.0).abs() < 1e-6);
+        assert!((x[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adapts_to_scale() {
+        // Coordinates with wildly different gradient scales get equalized.
+        let gs = vec![GroupSpec::new("x", &[2])];
+        let mut o = AdaGrad::new(&gs, 1e-10);
+        let mut x = vec![0.0f32, 0.0];
+        for _ in 0..100 {
+            o.step(0, &mut x, &[100.0, 0.01], 0.1).unwrap();
+        }
+        let ratio = x[0] / x[1];
+        assert!((ratio - 1.0).abs() < 1e-3, "AdaGrad steps should equalize: {x:?}");
+    }
+
+    /// Property: AdaGrad must agree exactly with ET at p=1 (paper remark 1).
+    #[test]
+    fn prop_matches_et_p1() {
+        props("adagrad_equals_et1_flat", 60, |g: &mut Gen| {
+            let n = g.usize_in(1, 40);
+            let gs = vec![GroupSpec::new("x", &[n])];
+            let mut ada = AdaGrad::new(&gs, 1e-8);
+            let mut et = super::super::extreme::ExtremeTensoring::new_with_dims(
+                &gs,
+                vec![vec![n]],
+                1e-8,
+                None,
+            );
+            let (mut xa, mut xe) = (vec![0.5f32; n], vec![0.5f32; n]);
+            for _ in 0..g.usize_in(1, 4) {
+                let grad = g.grad_vec(n);
+                ada.step(0, &mut xa, &grad, 0.1).unwrap();
+                et.step(0, &mut xe, &grad, 0.1).unwrap();
+            }
+            for j in 0..n {
+                let denom = xa[j].abs().max(1e-6);
+                assert!(
+                    (xa[j] - xe[j]).abs() / denom < 1e-3,
+                    "coord {j}: adagrad {} vs et1 {}",
+                    xa[j],
+                    xe[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn trace_h_hat_on_known_data() {
+        let gs = vec![GroupSpec::new("x", &[2])];
+        let mut o = AdaGrad::new(&gs, 0.0);
+        let mut x = vec![0.0f32; 2];
+        o.step(0, &mut x, &[3.0, 4.0], 0.0).unwrap();
+        assert!((o.trace_h_hat() - (3.0 + 4.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,65 @@
+//! RMSprop (Tieleman & Hinton 2012): exponentially decayed second-moment
+//! accumulator, no momentum, no bias correction.
+
+use super::{GroupSpec, Optimizer};
+use crate::tensoring::OptimizerKind;
+use anyhow::Result;
+
+pub struct RmsProp {
+    beta2: f32,
+    eps: f32,
+    v: Vec<Vec<f32>>,
+}
+
+impl RmsProp {
+    pub fn new(groups: &[GroupSpec], beta2: f32, eps: f32) -> Self {
+        RmsProp { beta2, eps, v: groups.iter().map(|g| vec![0.0; g.numel()]).collect() }
+    }
+}
+
+impl Optimizer for RmsProp {
+    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let v = &mut self.v[gi];
+        anyhow::ensure!(x.len() == v.len() && g.len() == v.len());
+        for i in 0..v.len() {
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+            x[i] -= lr * g[i] / (v[i].sqrt() + self.eps);
+        }
+        Ok(())
+    }
+
+    fn state_scalars(&self) -> usize {
+        self.v.iter().map(|v| v.len()).sum()
+    }
+
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::RmsProp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stationary_gradient_gives_unit_steps() {
+        // With a constant gradient, v converges to g^2 and steps approach
+        // lr * sign(g).
+        let gs = vec![GroupSpec::new("x", &[1])];
+        let mut o = RmsProp::new(&gs, 0.9, 1e-12);
+        let mut x = vec![0.0f32];
+        let mut last = 0.0f32;
+        for _ in 0..400 {
+            last = x[0];
+            o.step(0, &mut x, &[7.0], 0.01).unwrap();
+        }
+        let step = last - x[0];
+        assert!((step - 0.01).abs() < 1e-4, "step {step}");
+    }
+
+    #[test]
+    fn memory_is_d() {
+        let gs = vec![GroupSpec::new("w", &[3, 5])];
+        assert_eq!(RmsProp::new(&gs, 0.99, 1e-8).state_scalars(), 15);
+    }
+}

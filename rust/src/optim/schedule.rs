@@ -1,0 +1,129 @@
+//! Learning-rate schedules.
+//!
+//! The paper's language-modeling schedule (same as Adafactor's):
+//! `eta_t = c * min(1e-6 * t, 1/sqrt(t))` — linear warmup then inverse
+//! square-root decay. The vision and convex experiments use tuned constant
+//! rates. L3 owns the schedule: the AOT train-step artifacts take `lr` as a
+//! scalar input each step.
+
+/// A learning-rate schedule evaluated at step `t` (1-based).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    /// `lr = c`.
+    Constant(f64),
+    /// `lr = c * min(warmup_slope * t, 1/sqrt(t))` (paper §5.1; the paper
+    /// uses `warmup_slope = 1e-6`, crossing at t = 1e4).
+    WarmupRsqrt { c: f64, warmup_slope: f64 },
+    /// `lr = c * decay^(t / every)` (classic step decay, for ablations).
+    StepDecay { c: f64, decay: f64, every: u64 },
+}
+
+impl Schedule {
+    pub fn lr(&self, t: u64) -> f64 {
+        let t = t.max(1);
+        match self {
+            Schedule::Constant(c) => *c,
+            Schedule::WarmupRsqrt { c, warmup_slope } => {
+                let tf = t as f64;
+                c * (warmup_slope * tf).min(1.0 / tf.sqrt())
+            }
+            Schedule::StepDecay { c, decay, every } => {
+                c * decay.powi((t / (*every).max(1)) as i32)
+            }
+        }
+    }
+
+    /// The paper's LM schedule with global scale `c`.
+    pub fn paper_lm(c: f64) -> Schedule {
+        Schedule::WarmupRsqrt { c, warmup_slope: 1e-6 }
+    }
+
+    /// A warmup-rsqrt schedule rescaled for short runs: warmup over
+    /// `warmup_steps` instead of 1e6-scale (our runs are hundreds to
+    /// thousands of steps, so the paper's literal 1e-6 slope would never
+    /// leave warmup).
+    pub fn scaled_lm(c: f64, warmup_steps: u64) -> Schedule {
+        Schedule::WarmupRsqrt { c, warmup_slope: 1.0 / (warmup_steps.max(1) as f64).powf(1.5) }
+    }
+
+    /// Parse "constant:0.1", "warmup_rsqrt:0.05:400", "step:0.1:0.5:1000".
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["constant", c] => Some(Schedule::Constant(c.parse().ok()?)),
+            ["warmup_rsqrt", c, w] => {
+                Some(Schedule::scaled_lm(c.parse().ok()?, w.parse().ok()?))
+            }
+            ["paper_lm", c] => Some(Schedule::paper_lm(c.parse().ok()?)),
+            ["step", c, d, e] => Some(Schedule::StepDecay {
+                c: c.parse().ok()?,
+                decay: d.parse().ok()?,
+                every: e.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::props;
+
+    #[test]
+    fn paper_schedule_crossover() {
+        let s = Schedule::paper_lm(1.0);
+        // warmup region: linear
+        assert!((s.lr(100) - 1e-4).abs() < 1e-12);
+        // crossover at t = 1e4
+        assert!((s.lr(10_000) - 0.01).abs() < 1e-9);
+        // decay region: 1/sqrt(t)
+        assert!((s.lr(1_000_000) - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_warmup_peaks_at_warmup_steps() {
+        let s = Schedule::scaled_lm(1.0, 400);
+        let peak = s.lr(400);
+        assert!(s.lr(399) < peak * 1.001);
+        assert!(s.lr(401) < peak);
+        // peak ~ 1/sqrt(400) = 0.05
+        assert!((peak - 0.05).abs() < 1e-9, "peak {peak}");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Schedule::parse("constant:0.1"), Some(Schedule::Constant(0.1)));
+        assert!(matches!(
+            Schedule::parse("warmup_rsqrt:0.5:100"),
+            Some(Schedule::WarmupRsqrt { .. })
+        ));
+        assert!(matches!(Schedule::parse("paper_lm:0.1"), Some(Schedule::WarmupRsqrt { .. })));
+        assert!(Schedule::parse("bogus").is_none());
+    }
+
+    /// Property: all schedules are positive and, after warmup, non-increasing.
+    #[test]
+    fn prop_positive_and_decaying() {
+        props("schedule_positive", 50, |g| {
+            let c = g.f32_in(1e-4, 10.0) as f64;
+            let warm = g.usize_in(1, 500) as u64;
+            let s = Schedule::scaled_lm(c, warm);
+            let mut prev = f64::INFINITY;
+            for t in warm..warm + 1000 {
+                let lr = s.lr(t);
+                assert!(lr > 0.0);
+                assert!(lr <= prev * (1.0 + 1e-12), "increased at t={t}");
+                prev = lr;
+            }
+        });
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = Schedule::StepDecay { c: 1.0, decay: 0.5, every: 10 };
+        assert_eq!(s.lr(5), 1.0);
+        assert_eq!(s.lr(10), 0.5);
+        assert_eq!(s.lr(25), 0.25);
+    }
+}

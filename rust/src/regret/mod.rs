@@ -1,0 +1,246 @@
+//! Regret-bound instrumentation (§4 / §5.3, Figure 2).
+//!
+//! Theorem 4.1 bounds extreme tensoring's regret by
+//! `D_inf * sqrt(2 Tr(H_T) Tr(Ĥ_T))` where
+//!
+//! * `Ĥ_T = diag(eps I + sum_t g_t g_t^T)^{1/2}` — the AdaGrad regularizer,
+//! * `H_T = ⊗_i (eps I_{d_i} + sum_t G_t^i)^{1/2p}` — the ET regularizer,
+//!
+//! so ET's bound is `sqrt(Tr(H_T)/Tr(Ĥ_T))` times AdaGrad's. This module
+//! mirrors a training run's gradients into both accumulators and reports
+//! the traces and the multiplicative gap (paper measures ≈ 5.7 for ET1 on
+//! the LM task).
+
+use crate::tensoring::{EpsMode, SliceAccumulators, TensorIndex};
+use anyhow::Result;
+
+/// Tracks `Tr(H_T)` and `Tr(Ĥ_T)` for one parameter group.
+pub struct GroupTraceTracker {
+    /// ET slice accumulators (PerFactor eps mode — the Theorem 4.1 form).
+    et: SliceAccumulators,
+    /// Full AdaGrad accumulator `sum_t g_t^2` per coordinate.
+    full: Vec<f64>,
+    eps: f64,
+}
+
+impl GroupTraceTracker {
+    pub fn new(dims: &[usize], eps: f32) -> Result<Self> {
+        let ix = TensorIndex::new(dims)?;
+        let n = ix.numel();
+        Ok(GroupTraceTracker {
+            et: SliceAccumulators::new(ix, eps, None, EpsMode::PerFactor),
+            full: vec![0.0; n],
+            eps: eps as f64,
+        })
+    }
+
+    pub fn observe(&mut self, g: &[f32]) -> Result<()> {
+        self.et.accumulate(g)?;
+        for (s, &x) in self.full.iter_mut().zip(g) {
+            *s += (x as f64) * (x as f64);
+        }
+        Ok(())
+    }
+
+    /// `Tr(H_T)` restricted to this group (Kronecker trace identity).
+    pub fn trace_h(&self) -> f64 {
+        self.et.trace_h()
+    }
+
+    /// `Tr(Ĥ_T)` restricted to this group.
+    pub fn trace_h_hat(&self) -> f64 {
+        self.full.iter().map(|&s| (self.eps + s).sqrt()).sum()
+    }
+}
+
+/// Whole-model tracker: one group tracker per parameter group (the paper
+/// runs independent copies of Algorithm 1 per group; preconditioners are a
+/// tensor sum, so traces add).
+pub struct TraceTracker {
+    groups: Vec<GroupTraceTracker>,
+    names: Vec<String>,
+    steps: u64,
+}
+
+/// Summary for reporting (Figure 2's bars + the competitive ratio).
+#[derive(Clone, Debug)]
+pub struct TraceReport {
+    pub trace_h: f64,
+    pub trace_h_hat: f64,
+    /// `sqrt(Tr(H_T)/Tr(Ĥ_T))` — the multiplicative regret-bound gap.
+    pub ratio: f64,
+    pub steps: u64,
+    pub per_group: Vec<(String, f64, f64)>,
+}
+
+impl TraceTracker {
+    /// `dims_per_group[i]` is the tensor-index dims chosen for group `i`.
+    pub fn new(groups: &[(String, Vec<usize>)], eps: f32) -> Result<Self> {
+        let mut gs = Vec::with_capacity(groups.len());
+        let mut names = Vec::with_capacity(groups.len());
+        for (name, dims) in groups {
+            gs.push(GroupTraceTracker::new(dims, eps)?);
+            names.push(name.clone());
+        }
+        Ok(TraceTracker { groups: gs, names, steps: 0 })
+    }
+
+    /// Observe one step's gradients (one flat slice per group).
+    pub fn observe(&mut self, grads: &[&[f32]]) -> Result<()> {
+        anyhow::ensure!(grads.len() == self.groups.len(), "group count mismatch");
+        for (g, t) in grads.iter().zip(self.groups.iter_mut()) {
+            t.observe(g)?;
+        }
+        self.steps += 1;
+        Ok(())
+    }
+
+    pub fn report(&self) -> TraceReport {
+        let mut h = 0.0;
+        let mut hh = 0.0;
+        let mut per_group = Vec::with_capacity(self.groups.len());
+        for (t, n) in self.groups.iter().zip(&self.names) {
+            let (th, thh) = (t.trace_h(), t.trace_h_hat());
+            h += th;
+            hh += thh;
+            per_group.push((n.clone(), th, thh));
+        }
+        TraceReport {
+            trace_h: h,
+            trace_h_hat: hh,
+            ratio: (h / hh.max(f64::MIN_POSITIVE)).sqrt(),
+            steps: self.steps,
+            per_group,
+        }
+    }
+}
+
+/// Online regret measurement for the convex experiments: cumulative loss of
+/// the learner minus cumulative loss of a fixed comparator.
+pub struct RegretMeter {
+    cum_learner: f64,
+    comparator_losses: Vec<f64>,
+    learner_losses: Vec<f64>,
+}
+
+impl RegretMeter {
+    pub fn new() -> Self {
+        RegretMeter { cum_learner: 0.0, comparator_losses: Vec::new(), learner_losses: Vec::new() }
+    }
+
+    /// Record one round: the learner's loss `f_t(x_t)` and the comparator's
+    /// loss `f_t(x*)` on the same function.
+    pub fn observe(&mut self, learner_loss: f64, comparator_loss: f64) {
+        self.cum_learner += learner_loss;
+        self.learner_losses.push(learner_loss);
+        self.comparator_losses.push(comparator_loss);
+    }
+
+    /// Regret after all observed rounds.
+    pub fn regret(&self) -> f64 {
+        self.cum_learner - self.comparator_losses.iter().sum::<f64>()
+    }
+
+    /// Regret curve (prefix sums), for plotting sublinearity.
+    pub fn regret_curve(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.learner_losses.len());
+        let mut acc = 0.0;
+        for (l, c) in self.learner_losses.iter().zip(&self.comparator_losses) {
+            acc += l - c;
+            out.push(acc);
+        }
+        out
+    }
+}
+
+impl Default for RegretMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{props, Gen};
+
+    #[test]
+    fn p1_traces_are_equal() {
+        // With dims = [n] (p=1), H_T == Ĥ_T, so the ratio is exactly 1.
+        let mut t =
+            TraceTracker::new(&[("x".into(), vec![24])], 1e-8).unwrap();
+        for step in 0..5 {
+            let g: Vec<f32> = (0..24).map(|j| ((j + step * 7) % 5) as f32 * 0.3 - 0.5).collect();
+            t.observe(&[&g]).unwrap();
+        }
+        let r = t.report();
+        assert!((r.ratio - 1.0).abs() < 1e-6, "ratio {}", r.ratio);
+    }
+
+    /// Property (Lemma 4.3 at the trace level): Tr(H_T) >= Tr(Ĥ_T), i.e.
+    /// the competitive ratio is always >= 1.
+    #[test]
+    fn prop_ratio_at_least_one() {
+        props("trace_ratio_ge_1", 100, |g: &mut Gen| {
+            let dims = g.dims_upto(3, 8);
+            let n: usize = dims.iter().product();
+            let mut t = TraceTracker::new(&[("x".into(), dims.clone())], 1e-6).unwrap();
+            for _ in 0..g.usize_in(1, 4) {
+                let grad = g.grad_vec(n);
+                t.observe(&[&grad]).unwrap();
+            }
+            let r = t.report();
+            assert!(
+                r.ratio >= 1.0 - 1e-4,
+                "ratio {} < 1 for dims {dims:?}",
+                r.ratio
+            );
+        });
+    }
+
+    #[test]
+    fn sparse_gradients_shrink_the_gap() {
+        // Perfectly aligned one-hot gradients: slice sums concentrate and
+        // the ratio stays near 1; dense uniform gradients inflate it.
+        let dims = vec![8, 8];
+        let mut sparse = TraceTracker::new(&[("x".into(), dims.clone())], 1e-10).unwrap();
+        let mut dense = TraceTracker::new(&[("x".into(), dims.clone())], 1e-10).unwrap();
+        let mut g_sparse = vec![0.0f32; 64];
+        g_sparse[0] = 1.0;
+        let g_dense = vec![0.125f32; 64];
+        for _ in 0..10 {
+            sparse.observe(&[&g_sparse]).unwrap();
+            dense.observe(&[&g_dense]).unwrap();
+        }
+        let (rs, rd) = (sparse.report().ratio, dense.report().ratio);
+        assert!(rs < rd, "sparse {rs} should be < dense {rd}");
+    }
+
+    #[test]
+    fn regret_meter_prefix_sums() {
+        let mut m = RegretMeter::new();
+        m.observe(1.0, 0.5);
+        m.observe(0.8, 0.5);
+        m.observe(0.6, 0.5);
+        assert!((m.regret() - 0.9).abs() < 1e-12);
+        let curve = m.regret_curve();
+        assert_eq!(curve.len(), 3);
+        assert!((curve[1] - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiple_groups_add() {
+        let mut t = TraceTracker::new(
+            &[("a".into(), vec![4]), ("b".into(), vec![2, 3])],
+            1e-8,
+        )
+        .unwrap();
+        let ga = vec![1.0f32; 4];
+        let gb = vec![0.5f32; 6];
+        t.observe(&[&ga, &gb]).unwrap();
+        let r = t.report();
+        assert_eq!(r.per_group.len(), 2);
+        let sum_h: f64 = r.per_group.iter().map(|(_, h, _)| h).sum();
+        assert!((sum_h - r.trace_h).abs() < 1e-9);
+    }
+}

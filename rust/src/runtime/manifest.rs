@@ -1,0 +1,280 @@
+//! Artifact manifests — the contract between `python/compile/aot.py` (which
+//! writes them) and the rust runtime (which is fully manifest-driven: no
+//! model shape is hard-coded on the rust side).
+//!
+//! Each artifact `artifacts/<name>.hlo.txt` is accompanied by
+//! `artifacts/<name>.json`:
+//!
+//! ```json
+//! {
+//!   "name": "lm_tiny_et2", "hlo": "lm_tiny_et2.hlo.txt",
+//!   "kind": "train_step" | "eval_step" | "grad_step",
+//!   "model": {"family": "transformer_lm", "vocab": 2004, ...},
+//!   "optimizer": {"kind": "et2", "eps": 1e-8, "beta2": null},
+//!   "params":    [{"name": "embed", "shape": [2004,128],
+//!                  "init": "normal", "init_scale": 0.02}, ...],
+//!   "opt_state": [{"name": "embed.s0", "shape": [2004]}, ...],
+//!   "data_inputs": [{"name": "tokens", "shape": [8, 64], "dtype": "i32"}],
+//!   "extra_inputs": ["lr", "step"],
+//!   "outputs": ["loss", "params", "opt_state"]
+//! }
+//! ```
+//!
+//! Input order at execution time is always
+//! `params ++ opt_state ++ data_inputs ++ extra_inputs`; output order is
+//! `loss` (plus `token_count` for eval) followed by updated params and
+//! optimizer state for train steps. aot.py and this module must agree —
+//! the cross-layer golden tests in `rust/tests/` enforce it.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parameter initialization rule (chosen python-side, executed rust-side so
+/// the request path never needs python).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Init {
+    /// N(0, scale^2)
+    Normal { scale: f32 },
+    /// all zeros
+    Zeros,
+    /// all ones (layer-norm gains)
+    Ones,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Dtype of a data input (the per-step payload rust uploads).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One per-step data input (token batch, image batch, label batch...).
+#[derive(Clone, Debug)]
+pub struct DataSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl DataSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// (params, opt, tokens, lr, step) -> (loss, params', opt')
+    TrainStep,
+    /// (params, tokens) -> (total_nll, token_count)
+    EvalStep,
+    /// (params, tokens) -> (loss, grads...)
+    GradStep,
+}
+
+/// Parsed manifest for one AOT artifact.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub hlo_path: PathBuf,
+    pub params: Vec<TensorSpec>,
+    pub opt_state: Vec<TensorSpec>,
+    pub data_inputs: Vec<DataSpec>,
+    pub extra_inputs: Vec<String>,
+    pub model: Json,
+    pub optimizer: Json,
+}
+
+fn parse_init(obj: &Json) -> Result<Init> {
+    match obj.get("init").and_then(|j| j.as_str()).unwrap_or("zeros") {
+        "normal" => {
+            let scale = obj.get("init_scale").and_then(|j| j.as_f64()).unwrap_or(0.02) as f32;
+            Ok(Init::Normal { scale })
+        }
+        "zeros" => Ok(Init::Zeros),
+        "ones" => Ok(Init::Ones),
+        other => bail!("unknown init '{other}'"),
+    }
+}
+
+fn parse_specs(arr: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    let items = arr.as_arr().with_context(|| format!("manifest '{what}' not an array"))?;
+    items
+        .iter()
+        .map(|it| {
+            let name = it
+                .get("name")
+                .and_then(|j| j.as_str())
+                .with_context(|| format!("{what}: missing name"))?
+                .to_string();
+            let shape = it
+                .get("shape")
+                .and_then(|j| j.as_shape())
+                .with_context(|| format!("{what} '{name}': bad shape"))?;
+            let init = parse_init(it)?;
+            Ok(TensorSpec { name, shape, init })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let name = j.get("name").and_then(|x| x.as_str()).context("missing name")?.to_string();
+        let kind = match j.get("kind").and_then(|x| x.as_str()).context("missing kind")? {
+            "train_step" => ArtifactKind::TrainStep,
+            "eval_step" => ArtifactKind::EvalStep,
+            "grad_step" => ArtifactKind::GradStep,
+            other => bail!("unknown artifact kind '{other}'"),
+        };
+        let hlo_rel = j.get("hlo").and_then(|x| x.as_str()).context("missing hlo")?;
+        let params = parse_specs(j.get("params").context("missing params")?, "params")?;
+        let opt_state = match j.get("opt_state") {
+            Some(arr) => parse_specs(arr, "opt_state")?,
+            None => vec![],
+        };
+        let data_inputs = j
+            .get("data_inputs")
+            .and_then(|x| x.as_arr())
+            .context("missing data_inputs")?
+            .iter()
+            .map(|it| {
+                let name =
+                    it.get("name").and_then(|x| x.as_str()).context("data input name")?.to_string();
+                let shape =
+                    it.get("shape").and_then(|x| x.as_shape()).context("data input shape")?;
+                let dtype = match it.get("dtype").and_then(|x| x.as_str()).unwrap_or("i32") {
+                    "i32" => Dtype::I32,
+                    "f32" => Dtype::F32,
+                    other => bail!("unknown data dtype '{other}'"),
+                };
+                Ok(DataSpec { name, shape, dtype })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let extra_inputs = match j.get("extra_inputs") {
+            Some(Json::Arr(v)) => v
+                .iter()
+                .map(|x| x.as_str().map(|s| s.to_string()).context("extra_inputs entry"))
+                .collect::<Result<Vec<_>>>()?,
+            _ => vec![],
+        };
+        Ok(Manifest {
+            name,
+            kind,
+            hlo_path: dir.join(hlo_rel),
+            params,
+            opt_state,
+            data_inputs,
+            extra_inputs,
+            model: j.get("model").cloned().unwrap_or(Json::Null),
+            optimizer: j.get("optimizer").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    /// Load `dir/<name>.json`.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join(format!("{name}.json"));
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("read manifest {path:?}"))?;
+        let m = Self::parse(&text, dir)?;
+        anyhow::ensure!(m.name == name, "manifest name '{}' != file stem '{name}'", m.name);
+        Ok(m)
+    }
+
+    /// Total number of executable inputs.
+    pub fn input_arity(&self) -> usize {
+        self.params.len() + self.opt_state.len() + self.data_inputs.len() + self.extra_inputs.len()
+    }
+
+    /// Expected output leaf count.
+    pub fn output_arity(&self) -> usize {
+        match self.kind {
+            ArtifactKind::TrainStep => 1 + self.params.len() + self.opt_state.len(),
+            ArtifactKind::EvalStep => 2,
+            ArtifactKind::GradStep => 1 + self.params.len(),
+        }
+    }
+
+    /// Parameter groups as optimizer specs (for the rust-native oracle and
+    /// memory accounting).
+    pub fn group_specs(&self) -> Vec<crate::optim::GroupSpec> {
+        self.params.iter().map(|p| crate::optim::GroupSpec::new(&p.name, &p.shape)).collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn total_opt_state(&self) -> usize {
+        self.opt_state.iter().map(|p| p.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "lm_tiny_et2", "kind": "train_step", "hlo": "lm_tiny_et2.hlo.txt",
+      "model": {"family": "transformer_lm", "vocab": 100},
+      "optimizer": {"kind": "et2", "eps": 1e-8},
+      "params": [
+        {"name": "embed", "shape": [100, 16], "init": "normal", "init_scale": 0.02},
+        {"name": "ln", "shape": [16], "init": "ones"}
+      ],
+      "opt_state": [
+        {"name": "embed.s0", "shape": [100]},
+        {"name": "embed.s1", "shape": [16]},
+        {"name": "ln.s0", "shape": [16]}
+      ],
+      "data_inputs": [{"name": "tokens", "shape": [4, 8], "dtype": "i32"}],
+      "extra_inputs": ["lr", "step"]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.name, "lm_tiny_et2");
+        assert_eq!(m.kind, ArtifactKind::TrainStep);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].init, Init::Normal { scale: 0.02 });
+        assert_eq!(m.params[1].init, Init::Ones);
+        assert_eq!(m.opt_state.len(), 3);
+        assert_eq!(m.data_inputs.len(), 1);
+        assert_eq!(m.data_inputs[0].dtype, Dtype::I32);
+        assert_eq!(m.data_inputs[0].numel(), 32);
+        assert_eq!(m.input_arity(), 2 + 3 + 1 + 2);
+        assert_eq!(m.output_arity(), 1 + 2 + 3);
+        assert_eq!(m.total_params(), 1616);
+        assert_eq!(m.hlo_path, Path::new("/tmp/artifacts/lm_tiny_et2.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"name":"x","kind":"bogus","hlo":"x.hlo","params":[],"data_inputs":[]}"#, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn eval_kind_arities() {
+        let text = SAMPLE.replace("train_step", "eval_step");
+        let m = Manifest::parse(&text, Path::new(".")).unwrap();
+        assert_eq!(m.output_arity(), 2);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: manifest-driven loading and execution of the AOT artifacts
+//! produced by `python/compile/aot.py`. See `engine` for the execution
+//! contract and `manifest` for the artifact format.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Client, DataArg, Engine, EvalOutput, StepOutput, TrainState};
+pub use manifest::{ArtifactKind, DataSpec, Dtype, Init, Manifest, TensorSpec};
+
+/// Default artifact directory (relative to the repo root / cwd).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("ET_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

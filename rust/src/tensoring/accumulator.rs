@@ -1,0 +1,487 @@
+//! Slice-sum accumulators and preconditioner application — the core of
+//! Algorithm 1 (AdaGrad with extreme tensoring).
+//!
+//! For a parameter reshaped by a [`TensorIndex`] with dims `(d_1..d_p)`, we
+//! maintain `p` accumulators `S^(i) in R^{d_i}` holding (optionally
+//! `beta2`-decayed) sums of squared gradient entries over mode-`i` slices:
+//!
+//! ```text
+//! S^(i)[j] += sum_{I : I_i = j} g[I]^2
+//! ```
+//!
+//! and precondition with `delta[I] = (eps + prod_i S^(i)[I_i])^(-1/(2p))`
+//! (Algorithm 1, line 7). [`EpsMode::PerFactor`] instead uses
+//! `prod_i (eps + S^(i)[I_i])^(-1/(2p))`, the exact form whose spectral
+//! bound Lemma 4.3 proves; the two coincide as `eps -> 0` and we expose both
+//! so the Lemma 4.3 property test can be exact.
+
+use super::index::TensorIndex;
+use anyhow::Result;
+
+/// `x^(-1/(2p))` with the `powf` avoided when `p` is a power of two
+/// (p=1,2,4,8 cover every planner output): `x^(-1/2)` is one sqrt,
+/// `x^(-1/4)` two, etc. Measured ~4x faster per element than `powf` on
+/// this CPU — the dominant cost of the apply loop (see EXPERIMENTS.md
+/// §Perf).
+#[inline(always)]
+fn inv_root_2p(x: f32, p: usize) -> f32 {
+    match p {
+        1 => 1.0 / x.sqrt(),
+        2 => 1.0 / x.sqrt().sqrt(),
+        4 => 1.0 / x.sqrt().sqrt().sqrt(),
+        8 => 1.0 / x.sqrt().sqrt().sqrt().sqrt(),
+        _ => x.powf(-1.0 / (2.0 * p as f32)),
+    }
+}
+
+/// Where the `eps` damping enters the step-size product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EpsMode {
+    /// `(eps + prod_i S_i)^(-1/2p)` — Algorithm 1 as printed.
+    InsideProduct,
+    /// `prod_i (eps + S_i)^(-1/2p)` — the Lemma 4.3 / Theorem 4.1 form.
+    PerFactor,
+}
+
+/// Second-moment state for one tensor-indexed parameter group.
+#[derive(Clone, Debug)]
+pub struct SliceAccumulators {
+    index: TensorIndex,
+    /// One accumulator vector per mode; `s[i].len() == d_i`.
+    s: Vec<Vec<f32>>,
+    eps: f32,
+    /// `None` => AdaGrad-style cumulative sums; `Some(beta2)` => RMSprop/
+    /// Adam-style exponential decay of the accumulator.
+    beta2: Option<f32>,
+    eps_mode: EpsMode,
+    steps: u64,
+}
+
+impl SliceAccumulators {
+    pub fn new(index: TensorIndex, eps: f32, beta2: Option<f32>, eps_mode: EpsMode) -> Self {
+        let s = index.dims().iter().map(|&d| vec![0.0f32; d]).collect();
+        SliceAccumulators { index, s, eps, beta2, eps_mode, steps: 0 }
+    }
+
+    pub fn index(&self) -> &TensorIndex {
+        &self.index
+    }
+
+    pub fn mode_sums(&self) -> &[Vec<f32>] {
+        &self.s
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Number of optimizer-state scalars held (the paper's "parameter
+    /// count" for this group).
+    pub fn state_len(&self) -> usize {
+        self.index.accumulator_len()
+    }
+
+    /// Accumulate one gradient (flat, row-major w.r.t. the tensor index).
+    pub fn accumulate(&mut self, g: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            g.len() == self.index.numel(),
+            "gradient len {} != index numel {}",
+            g.len(),
+            self.index.numel()
+        );
+        // Decayed (Adam/RMSprop-style) accumulators use the standard
+        // exponential moving average `S <- b2*S + (1-b2)*slice_sums`; the
+        // cumulative (AdaGrad-style) setting adds the raw slice sums.
+        let w = match self.beta2 {
+            Some(b2) => {
+                for sv in self.s.iter_mut() {
+                    for x in sv.iter_mut() {
+                        *x *= b2;
+                    }
+                }
+                1.0 - b2
+            }
+            None => 1.0,
+        };
+        let dims = self.index.dims().to_vec();
+        match dims.len() {
+            1 => {
+                let s0 = &mut self.s[0];
+                for (j, &gj) in g.iter().enumerate() {
+                    s0[j] += w * gj * gj;
+                }
+            }
+            2 => {
+                // Matrix case: row sums into s[0], column sums into s[1].
+                let (d0, d1) = (dims[0], dims[1]);
+                let (s01, s1x) = self.s.split_at_mut(1);
+                let (s0, s1) = (&mut s01[0], &mut s1x[0]);
+                for r in 0..d0 {
+                    let row = &g[r * d1..(r + 1) * d1];
+                    let mut acc = 0.0f32;
+                    for (c, &grc) in row.iter().enumerate() {
+                        let sq = w * grc * grc;
+                        acc += sq;
+                        s1[c] += sq;
+                    }
+                    s0[r] += acc;
+                }
+            }
+            _ => {
+                // General p: odometer walk, p bucket adds per element. The
+                // bucket vectors total sum_i d_i floats — they stay in L1.
+                let p = dims.len();
+                let mut coords = vec![0usize; p];
+                for &gj in g.iter() {
+                    let sq = w * gj * gj;
+                    for i in 0..p {
+                        self.s[i][coords[i]] += sq;
+                    }
+                    // advance odometer
+                    for i in (0..p).rev() {
+                        coords[i] += 1;
+                        if coords[i] < dims[i] {
+                            break;
+                        }
+                        coords[i] = 0;
+                    }
+                }
+            }
+        }
+        self.steps += 1;
+        Ok(())
+    }
+
+    /// Per-coordinate step size `delta[I]` (Algorithm 1, line 7), written
+    /// into `out` in flat order. Exposed mainly for tests and the regret
+    /// instrumentation; the training path uses [`Self::apply_update`].
+    pub fn step_sizes(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.index.numel());
+        let p = self.index.order();
+        self.for_each_denominator(|j, denom| {
+            out[j] = inv_root_2p(denom, p);
+        });
+    }
+
+    /// Fused preconditioned SGD update: `x -= lr * delta * g`.
+    pub fn apply_update(&self, x: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(x.len(), self.index.numel());
+        assert_eq!(g.len(), self.index.numel());
+        let p = self.index.order();
+        self.for_each_denominator(|j, denom| {
+            x[j] -= lr * inv_root_2p(denom, p) * g[j];
+        });
+    }
+
+    /// Bias-corrected variant for the decayed (`beta2 < 1`) setting, in the
+    /// style of Adam: divides the accumulator by `1 - beta2^t` before the
+    /// root. No-op when `beta2` is `None`.
+    pub fn apply_update_bias_corrected(&self, x: &mut [f32], g: &[f32], lr: f32) {
+        match self.beta2 {
+            None => self.apply_update(x, g, lr),
+            Some(b2) => {
+                let p = self.index.order();
+                let corr = 1.0 - b2.powi(self.steps.max(1) as i32);
+                // Each of the p factors is divided by corr; the product of p
+                // factors to the power 1/2p gives corr^(1/2) overall, i.e.
+                // exactly Adam's sqrt bias correction.
+                let scale = corr.sqrt();
+                self.for_each_denominator(|j, denom| {
+                    x[j] -= lr * scale * inv_root_2p(denom, p) * g[j];
+                });
+            }
+        }
+    }
+
+    /// Walk coordinates in flat order calling `f(flat, denominator)` where
+    /// `denominator` is the quantity raised to `-1/(2p)`:
+    /// - InsideProduct: `eps + prod_i S_i[c_i]`
+    /// - PerFactor:     `prod_i (eps + S_i[c_i])`
+    ///
+    /// Prefix products are cached per mode and recomputed only from the
+    /// deepest changed odometer level, so the amortized cost per element is
+    /// ~1 multiply + 1 powf regardless of p.
+    fn for_each_denominator(&self, mut f: impl FnMut(usize, f32)) {
+        let dims = self.index.dims();
+        let p = dims.len();
+        let n = self.index.numel();
+        let eps = self.eps;
+        let factor = |i: usize, c: usize| -> f32 {
+            match self.eps_mode {
+                EpsMode::InsideProduct => self.s[i][c],
+                EpsMode::PerFactor => eps + self.s[i][c],
+            }
+        };
+        // prefix[i] = product of factors for modes 0..=i at current coords
+        let mut coords = vec![0usize; p];
+        let mut prefix = vec![0.0f32; p];
+        let mut rebuild_from = 0usize;
+        for j in 0..n {
+            for i in rebuild_from..p {
+                let base = if i == 0 { 1.0 } else { prefix[i - 1] };
+                prefix[i] = base * factor(i, coords[i]);
+            }
+            let prod = prefix[p - 1];
+            let denom = match self.eps_mode {
+                EpsMode::InsideProduct => eps + prod,
+                EpsMode::PerFactor => prod,
+            };
+            f(j, denom);
+            // advance odometer, tracking deepest changed level
+            rebuild_from = p; // sentinel: nothing to rebuild if we're done
+            for i in (0..p).rev() {
+                coords[i] += 1;
+                if coords[i] < dims[i] {
+                    rebuild_from = i;
+                    break;
+                }
+                coords[i] = 0;
+            }
+        }
+    }
+
+    /// `Tr(H_T)` contribution of this group, where
+    /// `H_T = ⊗_i (eps I + sum_t G_t^i)^(1/2p)`; by the Kronecker trace
+    /// identity this is `prod_i sum_j (eps + S_i[j])^(1/2p)`. Used by the
+    /// Figure 2 reproduction. (Always the PerFactor form — that is the
+    /// quantity in Theorem 4.1.)
+    pub fn trace_h(&self) -> f64 {
+        let p = self.index.order() as f64;
+        let expo = 1.0 / (2.0 * p);
+        self.s
+            .iter()
+            .map(|sv| sv.iter().map(|&x| ((self.eps + x) as f64).powf(expo)).sum::<f64>())
+            .product()
+    }
+
+    /// Serialize accumulator state (flat f32s per mode) for checkpointing.
+    pub fn state_vectors(&self) -> Vec<&[f32]> {
+        self.s.iter().map(|v| v.as_slice()).collect()
+    }
+
+    /// Restore accumulator state saved by [`Self::state_vectors`].
+    pub fn load_state(&mut self, state: &[Vec<f32>], steps: u64) -> Result<()> {
+        anyhow::ensure!(state.len() == self.s.len(), "mode count mismatch");
+        for (dst, src) in self.s.iter_mut().zip(state) {
+            anyhow::ensure!(dst.len() == src.len(), "mode length mismatch");
+            dst.copy_from_slice(src);
+        }
+        self.steps = steps;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{props, Gen};
+
+    fn acc(dims: &[usize], eps: f32, mode: EpsMode) -> SliceAccumulators {
+        SliceAccumulators::new(TensorIndex::new(dims).unwrap(), eps, None, mode)
+    }
+
+    /// Reference implementation: direct per-coordinate loops.
+    fn ref_slice_sums(dims: &[usize], g: &[f32]) -> Vec<Vec<f32>> {
+        let ix = TensorIndex::new(dims).unwrap();
+        let mut s: Vec<Vec<f32>> = dims.iter().map(|&d| vec![0.0; d]).collect();
+        let mut c = vec![0usize; dims.len()];
+        for (j, &gj) in g.iter().enumerate() {
+            ix.unravel(j, &mut c);
+            for i in 0..dims.len() {
+                s[i][c[i]] += gj * gj;
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn matrix_slice_sums_match_reference() {
+        let dims = [3, 4];
+        let g: Vec<f32> = (0..12).map(|i| (i as f32) - 5.0).collect();
+        let mut a = acc(&dims, 1e-8, EpsMode::InsideProduct);
+        a.accumulate(&g).unwrap();
+        let r = ref_slice_sums(&dims, &g);
+        for i in 0..2 {
+            for (x, y) in a.mode_sums()[i].iter().zip(&r[i]) {
+                assert!((x - y).abs() < 1e-5, "mode {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn p1_equals_adagrad() {
+        // With p=1, delta[j] = (eps + sum g^2)^(-1/2): exactly AdaGrad.
+        let mut a = acc(&[6], 1e-8, EpsMode::InsideProduct);
+        let g1 = [1.0f32, -2.0, 0.5, 0.0, 3.0, -1.0];
+        let g2 = [0.5f32, 1.0, -0.5, 2.0, 0.0, 1.0];
+        a.accumulate(&g1).unwrap();
+        a.accumulate(&g2).unwrap();
+        let mut delta = [0.0f32; 6];
+        a.step_sizes(&mut delta);
+        for j in 0..6 {
+            let want = (1e-8 + g1[j] * g1[j] + g2[j] * g2[j]).powf(-0.5);
+            assert!((delta[j] - want).abs() / want < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_len() {
+        let mut a = acc(&[2, 3], 1e-8, EpsMode::InsideProduct);
+        assert!(a.accumulate(&[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn beta2_decay() {
+        let mut a = SliceAccumulators::new(
+            TensorIndex::new(&[2]).unwrap(),
+            0.0,
+            Some(0.5),
+            EpsMode::InsideProduct,
+        );
+        a.accumulate(&[2.0, 0.0]).unwrap(); // S = (1-b2)*[4, 0] = [2, 0]
+        a.accumulate(&[0.0, 1.0]).unwrap(); // S = 0.5*[2,0] + 0.5*[0,1] = [1, 0.5]
+        assert!((a.mode_sums()[0][0] - 1.0).abs() < 1e-6);
+        assert!((a.mode_sums()[0][1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn apply_update_matches_step_sizes() {
+        let dims = [4, 3, 2];
+        let mut a = acc(&dims, 1e-6, EpsMode::InsideProduct);
+        let mut g = vec![0.0f32; 24];
+        for (i, x) in g.iter_mut().enumerate() {
+            *x = ((i * 7 % 11) as f32) / 3.0 - 1.0;
+        }
+        a.accumulate(&g).unwrap();
+        let mut delta = vec![0.0f32; 24];
+        a.step_sizes(&mut delta);
+        let mut x = vec![1.0f32; 24];
+        a.apply_update(&mut x, &g, 0.1);
+        for j in 0..24 {
+            let want = 1.0 - 0.1 * delta[j] * g[j];
+            assert!((x[j] - want).abs() < 1e-6);
+        }
+    }
+
+    /// Property: slice-sum conservation — for every mode i,
+    /// sum_j S^(i)[j] equals the total sum of squared gradient entries.
+    #[test]
+    fn prop_slice_sum_conservation() {
+        props("slice_sum_conservation", 150, |g: &mut Gen| {
+            let dims = g.dims_upto(4, 8);
+            let n: usize = dims.iter().product();
+            let mut a = acc(&dims, 0.0, EpsMode::InsideProduct);
+            let mut total = 0.0f64;
+            for _ in 0..g.usize_in(1, 3) {
+                let grad = g.grad_vec(n);
+                total += grad.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+                a.accumulate(&grad).unwrap();
+            }
+            for (i, sv) in a.mode_sums().iter().enumerate() {
+                let s: f64 = sv.iter().map(|&x| x as f64).sum();
+                let tol = 1e-3 * total.max(1.0);
+                assert!((s - total).abs() <= tol, "mode {i}: {s} vs {total} (dims {dims:?})");
+            }
+        });
+    }
+
+    /// Property (Lemma 4.3): with PerFactor eps, the ET per-coordinate step
+    /// sizes are underestimates of AdaGrad's:
+    /// (prod_i (eps+S_i[c_i]))^(1/2p) >= (eps + sum_t g_t[j]^2)^(1/2).
+    #[test]
+    fn prop_lemma_4_3_underestimates_adagrad() {
+        props("lemma_4_3", 150, |g: &mut Gen| {
+            let dims = g.dims_upto(4, 8);
+            let n: usize = dims.iter().product();
+            let eps = 10f32.powf(g.f32_in(-8.0, -2.0));
+            let mut a = acc(&dims, eps, EpsMode::PerFactor);
+            let mut adagrad = vec![0.0f64; n];
+            for _ in 0..g.usize_in(1, 4) {
+                let grad = g.grad_vec(n);
+                for (s, &x) in adagrad.iter_mut().zip(&grad) {
+                    *s += (x as f64) * (x as f64);
+                }
+                a.accumulate(&grad).unwrap();
+            }
+            let mut delta = vec![0.0f32; n];
+            a.step_sizes(&mut delta);
+            for j in 0..n {
+                let ada_rate = (eps as f64 + adagrad[j]).powf(-0.5);
+                // float slack: accumulation orders differ
+                assert!(
+                    delta[j] as f64 <= ada_rate * (1.0 + 1e-3),
+                    "coord {j}: ET {} > AdaGrad {} (dims {dims:?})",
+                    delta[j],
+                    ada_rate
+                );
+            }
+        });
+    }
+
+    /// Property: ET with p=1 equals AdaGrad exactly, for any data.
+    #[test]
+    fn prop_p1_is_adagrad() {
+        props("p1_is_adagrad", 100, |g: &mut Gen| {
+            let n = g.usize_in(1, 64);
+            let eps = 1e-8f32;
+            let mut a = acc(&[n], eps, EpsMode::InsideProduct);
+            let mut sums = vec![0.0f32; n];
+            for _ in 0..g.usize_in(1, 3) {
+                let grad = g.grad_vec(n);
+                for (s, &x) in sums.iter_mut().zip(&grad) {
+                    *s += x * x;
+                }
+                a.accumulate(&grad).unwrap();
+            }
+            let mut delta = vec![0.0f32; n];
+            a.step_sizes(&mut delta);
+            for j in 0..n {
+                let want = (eps + sums[j]).powf(-0.5);
+                let rel = (delta[j] - want).abs() / want.max(1e-30);
+                assert!(rel < 1e-3, "coord {j}: {} vs {}", delta[j], want);
+            }
+        });
+    }
+
+    /// Property: trace_h matches the brute-force per-coordinate sum.
+    #[test]
+    fn prop_trace_matches_bruteforce() {
+        props("trace_h_bruteforce", 80, |g: &mut Gen| {
+            let dims = g.dims_upto(3, 6);
+            let n: usize = dims.iter().product();
+            let eps = 1e-4f32;
+            let mut a = acc(&dims, eps, EpsMode::PerFactor);
+            a.accumulate(&g.grad_vec(n)).unwrap();
+            // brute force: sum over coords of prod_i (eps+S_i)^{1/2p}
+            let ix = TensorIndex::new(&dims).unwrap();
+            let p = dims.len() as f64;
+            let mut c = vec![0usize; dims.len()];
+            let mut want = 0.0f64;
+            for j in 0..n {
+                ix.unravel(j, &mut c);
+                let mut prod = 1.0f64;
+                for i in 0..dims.len() {
+                    prod *= ((eps + a.mode_sums()[i][c[i]]) as f64).powf(1.0 / (2.0 * p));
+                }
+                want += prod;
+            }
+            let got = a.trace_h();
+            assert!((got - want).abs() / want.max(1e-12) < 1e-6, "{got} vs {want}");
+        });
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dims = [3, 5];
+        let mut a = acc(&dims, 1e-8, EpsMode::InsideProduct);
+        let g: Vec<f32> = (0..15).map(|i| i as f32 * 0.1).collect();
+        a.accumulate(&g).unwrap();
+        let saved: Vec<Vec<f32>> = a.state_vectors().iter().map(|s| s.to_vec()).collect();
+        let mut b = acc(&dims, 1e-8, EpsMode::InsideProduct);
+        b.load_state(&saved, a.steps()).unwrap();
+        let (mut da, mut db) = (vec![0.0f32; 15], vec![0.0f32; 15]);
+        a.step_sizes(&mut da);
+        b.step_sizes(&mut db);
+        assert_eq!(da, db);
+    }
+}

@@ -1,0 +1,201 @@
+//! Tensor indices (Definition 2.1 of the paper).
+//!
+//! A *tensor index* is a bijection `I : [d] -> [d_1] x ... x [d_p]` between
+//! flat parameter indices and coordinates of a `p`-order tensor with
+//! `prod(d_i) = d`. Extreme tensoring never materializes the bijection; we
+//! use the row-major (C-order) reshape, which is what `reshape`/`view` give
+//! in every deep-learning package and what the paper's implementations use.
+
+use anyhow::{bail, Result};
+
+/// A row-major tensor index over dims `(d_1, ..., d_p)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorIndex {
+    dims: Vec<usize>,
+    strides: Vec<usize>,
+    d: usize,
+}
+
+impl TensorIndex {
+    /// Build an index from tensor dims. Fails on empty dims or zero dim.
+    pub fn new(dims: &[usize]) -> Result<Self> {
+        if dims.is_empty() {
+            bail!("tensor index needs at least one dimension");
+        }
+        if dims.iter().any(|&d| d == 0) {
+            bail!("tensor index dims must be positive, got {dims:?}");
+        }
+        let mut d: usize = 1;
+        for &x in dims {
+            d = d.checked_mul(x).ok_or_else(|| anyhow::anyhow!("dim product overflow"))?;
+        }
+        let mut strides = vec![1usize; dims.len()];
+        for i in (0..dims.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * dims[i + 1];
+        }
+        Ok(TensorIndex { dims: dims.to_vec(), strides, d })
+    }
+
+    /// The flat dimension `d = prod(d_i)`.
+    pub fn numel(&self) -> usize {
+        self.d
+    }
+
+    /// Tensor order `p`.
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    /// `I(j)`: flat index -> tensor coordinates.
+    pub fn unravel(&self, flat: usize, coords: &mut [usize]) {
+        debug_assert!(flat < self.d);
+        debug_assert_eq!(coords.len(), self.dims.len());
+        let mut rem = flat;
+        for (i, &s) in self.strides.iter().enumerate() {
+            coords[i] = rem / s;
+            rem %= s;
+        }
+    }
+
+    /// `I^{-1}(coords)`: tensor coordinates -> flat index.
+    pub fn ravel(&self, coords: &[usize]) -> usize {
+        debug_assert_eq!(coords.len(), self.dims.len());
+        coords
+            .iter()
+            .zip(&self.strides)
+            .map(|(&c, &s)| {
+                debug_assert!(c < self.dims[self.strides.iter().position(|x| *x == s).unwrap()]);
+                c * s
+            })
+            .sum()
+    }
+
+    /// Number of coordinates in each mode-`i` slice (`d / d_i`): the count of
+    /// gradient entries that share one accumulator bucket.
+    pub fn slice_size(&self, mode: usize) -> usize {
+        self.d / self.dims[mode]
+    }
+
+    /// Total accumulator storage for this index: `sum_i d_i` scalars. This is
+    /// the "optimizer parameter count" the paper reports per group.
+    pub fn accumulator_len(&self) -> usize {
+        self.dims.iter().sum()
+    }
+}
+
+/// Incremental odometer over tensor coordinates in flat (row-major) order.
+/// Advancing is O(1) amortized, which keeps the accumulator hot loop free of
+/// div/mod per element.
+pub struct Odometer<'a> {
+    dims: &'a [usize],
+    pub coords: Vec<usize>,
+}
+
+impl<'a> Odometer<'a> {
+    pub fn new(index: &'a TensorIndex) -> Self {
+        Odometer { dims: index.dims(), coords: vec![0; index.order()] }
+    }
+
+    /// Advance to the next flat index. Returns false after the last one.
+    #[inline]
+    pub fn advance(&mut self) -> bool {
+        for i in (0..self.coords.len()).rev() {
+            self.coords[i] += 1;
+            if self.coords[i] < self.dims[i] {
+                return true;
+            }
+            self.coords[i] = 0;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{props, Gen};
+
+    #[test]
+    fn basic_roundtrip() {
+        let ix = TensorIndex::new(&[3, 4, 5]).unwrap();
+        assert_eq!(ix.numel(), 60);
+        assert_eq!(ix.order(), 3);
+        assert_eq!(ix.strides(), &[20, 5, 1]);
+        let mut c = [0; 3];
+        ix.unravel(37, &mut c);
+        assert_eq!(c, [1, 3, 2]); // 37 = 1*20 + 3*5 + 2
+        assert_eq!(ix.ravel(&c), 37);
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        assert!(TensorIndex::new(&[]).is_err());
+        assert!(TensorIndex::new(&[4, 0, 2]).is_err());
+    }
+
+    #[test]
+    fn p1_is_identity() {
+        let ix = TensorIndex::new(&[7]).unwrap();
+        let mut c = [0; 1];
+        for j in 0..7 {
+            ix.unravel(j, &mut c);
+            assert_eq!(c[0], j);
+            assert_eq!(ix.ravel(&c), j);
+        }
+    }
+
+    #[test]
+    fn slice_and_accumulator_sizes() {
+        let ix = TensorIndex::new(&[16, 32]).unwrap();
+        assert_eq!(ix.slice_size(0), 32);
+        assert_eq!(ix.slice_size(1), 16);
+        assert_eq!(ix.accumulator_len(), 48);
+    }
+
+    /// Property (Definition 2.1): the row-major index is a bijection —
+    /// ravel(unravel(j)) == j for all j, and unravel is injective.
+    #[test]
+    fn prop_bijection() {
+        props("tensor_index_bijection", 200, |g: &mut Gen| {
+            let dims = g.dims_upto(4, 9);
+            let ix = TensorIndex::new(&dims).unwrap();
+            let mut seen = vec![false; ix.numel()];
+            let mut coords = vec![0usize; ix.order()];
+            for j in 0..ix.numel() {
+                ix.unravel(j, &mut coords);
+                for (c, d) in coords.iter().zip(ix.dims()) {
+                    assert!(c < d, "coordinate out of range");
+                }
+                let back = ix.ravel(&coords);
+                assert_eq!(back, j, "not a left inverse for dims {dims:?}");
+                assert!(!seen[back], "not injective for dims {dims:?}");
+                seen[back] = true;
+            }
+        });
+    }
+
+    /// Property: the odometer enumerates exactly the unravel sequence.
+    #[test]
+    fn prop_odometer_matches_unravel() {
+        props("odometer_matches_unravel", 100, |g: &mut Gen| {
+            let dims = g.dims_upto(4, 7);
+            let ix = TensorIndex::new(&dims).unwrap();
+            let mut odo = Odometer::new(&ix);
+            let mut coords = vec![0usize; ix.order()];
+            for j in 0..ix.numel() {
+                ix.unravel(j, &mut coords);
+                assert_eq!(odo.coords, coords, "dims {dims:?} at flat {j}");
+                let more = odo.advance();
+                assert_eq!(more, j + 1 < ix.numel());
+            }
+        });
+    }
+}

@@ -1,0 +1,188 @@
+//! Optimizer memory accounting — the quantity on the x-axis of Figures 1
+//! and 4 and the "Parameter count" column of Tables 1 and 4.
+//!
+//! Conventions follow the paper: the count is the number of *optimizer
+//! state scalars* beyond the parameters themselves. SGD stores nothing
+//! (the paper reports 1, for the global learning rate); full AdaGrad stores
+//! `d`; Adam stores `2d` (first + second moment); Adafactor on an `n x m`
+//! matrix stores `n + m`; ET with index dims `(d_1..d_p)` stores
+//! `sum_i d_i`; ET∞ stores one scalar per parameter group.
+
+use super::planner::{plan, Level};
+
+/// Which optimizer's footprint to account for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    AdaGrad,
+    Adam,
+    RmsProp,
+    AdaDelta,
+    Adafactor,
+    Et(u8),
+    EtInf,
+}
+
+impl OptimizerKind {
+    pub fn name(&self) -> String {
+        match self {
+            OptimizerKind::Sgd => "SGD".into(),
+            OptimizerKind::AdaGrad => "AdaGrad".into(),
+            OptimizerKind::Adam => "Adam".into(),
+            OptimizerKind::RmsProp => "RMSprop".into(),
+            OptimizerKind::AdaDelta => "Adadelta".into(),
+            OptimizerKind::Adafactor => "Adafactor".into(),
+            OptimizerKind::Et(k) => format!("ET{k}"),
+            OptimizerKind::EtInf => "ET-inf".into(),
+        }
+    }
+
+    /// Parse the CLI/manifest spelling.
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Some(OptimizerKind::Sgd),
+            "adagrad" => Some(OptimizerKind::AdaGrad),
+            "adam" => Some(OptimizerKind::Adam),
+            "rmsprop" => Some(OptimizerKind::RmsProp),
+            "adadelta" => Some(OptimizerKind::AdaDelta),
+            "adafactor" => Some(OptimizerKind::Adafactor),
+            "etinf" | "et-inf" | "etoo" => Some(OptimizerKind::EtInf),
+            s if s.starts_with("et") => s[2..].parse::<u8>().ok().map(OptimizerKind::Et),
+            _ => None,
+        }
+    }
+}
+
+/// Optimizer state scalars needed for one parameter group of `shape`.
+pub fn group_state_scalars(kind: OptimizerKind, shape: &[usize]) -> usize {
+    let d: usize = shape.iter().product();
+    match kind {
+        OptimizerKind::Sgd => 0,
+        OptimizerKind::AdaGrad | OptimizerKind::RmsProp => d,
+        // Adam & Adadelta hold two d-sized buffers.
+        OptimizerKind::Adam | OptimizerKind::AdaDelta => 2 * d,
+        OptimizerKind::Adafactor => {
+            // row + column accumulators on matrices; full accumulator on
+            // vectors (as in the Adafactor paper).
+            let nat = super::planner::natural_dims(shape);
+            if nat.len() >= 2 {
+                let rows: usize = nat[..nat.len() - 1].iter().product();
+                rows + nat[nat.len() - 1]
+            } else {
+                d
+            }
+        }
+        OptimizerKind::Et(k) => plan(shape, Level::Et(k)).iter().sum(),
+        OptimizerKind::EtInf => 1,
+    }
+}
+
+/// A whole model's optimizer memory report.
+#[derive(Clone, Debug)]
+pub struct MemoryReport {
+    pub kind: OptimizerKind,
+    pub model_params: usize,
+    pub optimizer_scalars: usize,
+    pub groups: Vec<(String, Vec<usize>, usize)>,
+}
+
+impl MemoryReport {
+    /// Account for every named parameter group of a model.
+    pub fn for_model(kind: OptimizerKind, groups: &[(String, Vec<usize>)]) -> MemoryReport {
+        let mut rep = MemoryReport {
+            kind,
+            model_params: 0,
+            optimizer_scalars: 0,
+            groups: Vec::with_capacity(groups.len()),
+        };
+        for (name, shape) in groups {
+            let d: usize = shape.iter().product();
+            let s = group_state_scalars(kind, shape);
+            rep.model_params += d;
+            rep.optimizer_scalars += s;
+            rep.groups.push((name.clone(), shape.clone(), s));
+        }
+        // Paper convention: SGD reports "1" (the global LR), ET-inf reports
+        // one scalar per group — already handled per group above.
+        if kind == OptimizerKind::Sgd {
+            rep.optimizer_scalars = 1;
+        }
+        rep
+    }
+
+    /// Overhead ratio: optimizer scalars / model parameters.
+    pub fn overhead(&self) -> f64 {
+        self.optimizer_scalars as f64 / self.model_params.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn transformer_groups(layers: usize, vocab: usize, dm: usize, dff: usize) -> Vec<(String, Vec<usize>)> {
+        // Mirrors python/compile/model.py's parameter registry (shared
+        // embedding/softmax as in the paper).
+        let mut g = vec![(format!("embed"), vec![vocab, dm])];
+        for l in 0..layers {
+            for nm in ["wq", "wk", "wv", "wo"] {
+                g.push((format!("l{l}.{nm}"), vec![dm, dm]));
+            }
+            g.push((format!("l{l}.ln1"), vec![dm]));
+            g.push((format!("l{l}.ln2"), vec![dm]));
+            g.push((format!("l{l}.ff1"), vec![dm, dff]));
+            g.push((format!("l{l}.ff1b"), vec![dff]));
+            g.push((format!("l{l}.ff2"), vec![dff, dm]));
+            g.push((format!("l{l}.ff2b"), vec![dm]));
+        }
+        g.push(("ln_f".into(), vec![dm]));
+        g
+    }
+
+    #[test]
+    fn adagrad_equals_param_count() {
+        let groups = transformer_groups(2, 2000, 512, 2048);
+        let rep = MemoryReport::for_model(OptimizerKind::AdaGrad, &groups);
+        assert_eq!(rep.optimizer_scalars, rep.model_params);
+        let adam = MemoryReport::for_model(OptimizerKind::Adam, &groups);
+        assert_eq!(adam.optimizer_scalars, 2 * rep.model_params);
+    }
+
+    #[test]
+    fn orders_of_magnitude_match_paper() {
+        // Paper (35M-param transformer): AdaGrad 3.5e7, ET1 1.2e5, ET2 1.0e4,
+        // ET3 5.0e3, ET-inf 90. Our scaled transformer must show the same
+        // *relative* ordering with ET1 ~ sqrt-scale of d, ET2/ET3 far below.
+        let groups = transformer_groups(6, 2000, 512, 2048);
+        let d = MemoryReport::for_model(OptimizerKind::AdaGrad, &groups).model_params;
+        let et1 = MemoryReport::for_model(OptimizerKind::Et(1), &groups).optimizer_scalars;
+        let et2 = MemoryReport::for_model(OptimizerKind::Et(2), &groups).optimizer_scalars;
+        let et3 = MemoryReport::for_model(OptimizerKind::Et(3), &groups).optimizer_scalars;
+        let etinf = MemoryReport::for_model(OptimizerKind::EtInf, &groups).optimizer_scalars;
+        assert!(et1 < d / 50, "ET1 {et1} vs d {d}");
+        assert!(et2 < et1 / 5, "ET2 {et2} vs ET1 {et1}");
+        assert!(et3 < et2, "ET3 {et3} vs ET2 {et2}");
+        assert_eq!(etinf, groups.len());
+    }
+
+    #[test]
+    fn adafactor_rows_plus_cols() {
+        assert_eq!(group_state_scalars(OptimizerKind::Adafactor, &[512, 2048]), 512 + 2048);
+        assert_eq!(group_state_scalars(OptimizerKind::Adafactor, &[512]), 512);
+    }
+
+    #[test]
+    fn sgd_reports_one() {
+        let rep = MemoryReport::for_model(OptimizerKind::Sgd, &[("w".into(), vec![10, 10])]);
+        assert_eq!(rep.optimizer_scalars, 1);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(OptimizerKind::parse("et2"), Some(OptimizerKind::Et(2)));
+        assert_eq!(OptimizerKind::parse("ET3"), Some(OptimizerKind::Et(3)));
+        assert_eq!(OptimizerKind::parse("etinf"), Some(OptimizerKind::EtInf));
+        assert_eq!(OptimizerKind::parse("adafactor"), Some(OptimizerKind::Adafactor));
+        assert_eq!(OptimizerKind::parse("bogus"), None);
+    }
+}

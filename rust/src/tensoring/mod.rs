@@ -1,0 +1,13 @@
+//! Extreme tensoring core: tensor indices, factorization planning, slice-sum
+//! accumulators, and optimizer memory accounting (the paper's Algorithm 1
+//! and its memory model).
+
+pub mod accumulator;
+pub mod index;
+pub mod memory;
+pub mod planner;
+
+pub use accumulator::{EpsMode, SliceAccumulators};
+pub use index::{Odometer, TensorIndex};
+pub use memory::{group_state_scalars, MemoryReport, OptimizerKind};
+pub use planner::{natural_dims, plan, plan_flat, plan_index, Level};

@@ -1,0 +1,269 @@
+//! Factorization planner: choose a tensor index for each parameter shape at
+//! a given extreme-tensoring level.
+//!
+//! Reproduces the paper's index-selection scheme (Appendix A.2 Table 3 for
+//! ResNet-18 conv shapes, Appendix B.1 for the Transformer):
+//!
+//! * **ET1** — the parameter's "natural" tensor: matrices stay matrices,
+//!   vectors stay vectors, conv kernels `(o, i, kh, kw)` merge the spatial
+//!   dims to `(o, i, kh*kw)`.
+//! * **ET(k+1)** — take the ET(k) dims and split every factor larger than a
+//!   threshold (10, matching the paper's tables) into `(a, n/a)` where `a`
+//!   is the largest divisor of `n` with `a <= sqrt(n)`. Primes and small
+//!   factors pass through.
+//! * **ET∞** — one scalar per parameter group (handled by the ET∞
+//!   optimizer, planner returns order-0 marker via `dims = [group]`... no:
+//!   ET∞ is a separate optimizer; the planner's `Level::Inf` returns `[1]`
+//!   conceptually — see `optim::etinf`).
+//!
+//! The planner also provides `plan_flat` for parameters with no natural
+//! tensor shape (the paper: "applies to arbitrary models"): factor `d` into
+//! `p` near-equal integer factors.
+
+use super::index::TensorIndex;
+use anyhow::Result;
+
+/// Extreme-tensoring level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// ETk for k >= 1; Et(1) is the natural shape.
+    Et(u8),
+}
+
+/// Factors larger than this get split one more time per level. The paper's
+/// ET3 tables keep 9 and 10 unsplit, so the threshold is 10.
+pub const SPLIT_THRESHOLD: usize = 10;
+
+/// Largest divisor of `n` that is `<= sqrt(n)`; 1 when `n` is prime.
+pub fn balanced_divisor(n: usize) -> usize {
+    let mut best = 1;
+    let mut a = 1;
+    while a * a <= n {
+        if n % a == 0 {
+            best = a;
+        }
+        a += 1;
+    }
+    best
+}
+
+/// Split a single factor into the paper's `(a, n/a)` balanced pair, or keep
+/// it if it's at or below the threshold (or prime).
+fn split_factor(n: usize, out: &mut Vec<usize>) {
+    if n <= SPLIT_THRESHOLD {
+        out.push(n);
+        return;
+    }
+    let a = balanced_divisor(n);
+    if a == 1 {
+        out.push(n); // prime: cannot split
+    } else {
+        out.push(a);
+        out.push(n / a);
+    }
+}
+
+/// Natural (ET1) dims for a raw parameter shape: spatial conv dims merged,
+/// scalars/vectors unchanged, size-1 axes dropped (they contribute nothing
+/// to the preconditioner and would waste accumulator slots).
+pub fn natural_dims(shape: &[usize]) -> Vec<usize> {
+    let mut dims: Vec<usize> = shape.iter().copied().filter(|&d| d > 1).collect();
+    if dims.is_empty() {
+        dims.push(1);
+    }
+    if dims.len() >= 4 {
+        // conv-style (o, i, kh, kw, ...) -> (o, i, prod(spatial))
+        let spatial: usize = dims[2..].iter().product();
+        dims.truncate(2);
+        dims.push(spatial);
+    }
+    dims
+}
+
+/// Plan the tensor index dims for `shape` at level `Et(k)`.
+pub fn plan(shape: &[usize], level: Level) -> Vec<usize> {
+    let Level::Et(k) = level;
+    let mut dims = natural_dims(shape);
+    for _ in 1..k.max(1) {
+        let mut next = Vec::with_capacity(dims.len() * 2);
+        for &f in &dims {
+            split_factor(f, &mut next);
+        }
+        dims = next;
+    }
+    dims
+}
+
+/// Build the [`TensorIndex`] for `shape` at `level`.
+pub fn plan_index(shape: &[usize], level: Level) -> Result<TensorIndex> {
+    TensorIndex::new(&plan(shape, level))
+}
+
+/// Factor a flat dimension `d` into `p` near-equal factors (for parameters
+/// with no natural tensor shape). Greedy: repeatedly pull the most balanced
+/// divisor. When `d` has too few divisors, trailing factors may be 1.
+pub fn plan_flat(d: usize, p: usize) -> Vec<usize> {
+    assert!(p >= 1 && d >= 1);
+    let mut dims = Vec::with_capacity(p);
+    let mut rest = d;
+    for i in 0..p - 1 {
+        let remaining = p - i;
+        // target factor ~ rest^(1/remaining)
+        let target = (rest as f64).powf(1.0 / remaining as f64).round() as usize;
+        let f = nearest_divisor(rest, target.max(1));
+        dims.push(f);
+        rest /= f;
+    }
+    dims.push(rest);
+    dims.sort_unstable();
+    dims
+}
+
+/// Divisor of `n` nearest to `target` (ties toward smaller).
+fn nearest_divisor(n: usize, target: usize) -> usize {
+    let mut best = 1;
+    let mut best_gap = usize::MAX;
+    let mut a = 1;
+    while a * a <= n {
+        if n % a == 0 {
+            for cand in [a, n / a] {
+                let gap = cand.abs_diff(target);
+                if gap < best_gap || (gap == best_gap && cand < best) {
+                    best = cand;
+                    best_gap = gap;
+                }
+            }
+        }
+        a += 1;
+    }
+    best
+}
+
+/// The optimizer-state scalar count for a plan (`sum d_i`).
+pub fn plan_state_len(dims: &[usize]) -> usize {
+    dims.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{props, Gen};
+
+    fn sorted(mut v: Vec<usize>) -> Vec<usize> {
+        v.sort_unstable();
+        v
+    }
+
+    /// Paper Table B.1 (Transformer parameter shapes). Factor multisets must
+    /// match; the paper's printed ordering is not semantically meaningful
+    /// (the preconditioner is a tensor product over the same modes).
+    #[test]
+    fn table_b1_transformer_indices() {
+        let cases: &[(&[usize], &[usize], &[usize], &[usize])] = &[
+            // (shape, ET1, ET2, ET3)
+            (&[512, 512], &[512, 512], &[16, 32, 16, 32], &[4, 4, 4, 8, 4, 4, 4, 8]),
+            (&[2000, 512], &[2000, 512], &[40, 50, 16, 32], &[5, 8, 5, 10, 4, 4, 4, 8]),
+            (&[512], &[512], &[16, 32], &[4, 4, 4, 8]),
+            (&[512, 2048], &[512, 2048], &[16, 32, 32, 64], &[4, 4, 4, 8, 4, 8, 8, 8]),
+            (&[2048], &[2048], &[32, 64], &[4, 8, 8, 8]),
+            (&[2048, 512], &[2048, 512], &[32, 64, 16, 32], &[4, 8, 8, 8, 4, 4, 4, 8]),
+        ];
+        for (shape, et1, et2, et3) in cases {
+            assert_eq!(sorted(plan(shape, Level::Et(1))), sorted(et1.to_vec()), "ET1 {shape:?}");
+            assert_eq!(sorted(plan(shape, Level::Et(2))), sorted(et2.to_vec()), "ET2 {shape:?}");
+            assert_eq!(sorted(plan(shape, Level::Et(3))), sorted(et3.to_vec()), "ET3 {shape:?}");
+        }
+    }
+
+    /// Paper Table 3 (ResNet-18 conv shapes), spot-checked rows.
+    #[test]
+    fn table_3_resnet_indices() {
+        let cases: &[(&[usize], &[usize], &[usize], &[usize])] = &[
+            (&[64, 3, 3, 3], &[64, 3, 9], &[8, 8, 3, 9], &[8, 8, 3, 9]),
+            (&[64, 64, 3, 3], &[64, 64, 9], &[8, 8, 8, 8, 9], &[8, 8, 8, 8, 9]),
+            (&[128, 64, 3, 3], &[128, 64, 9], &[8, 16, 8, 8, 9], &[8, 4, 4, 8, 8, 9]),
+            (
+                &[512, 512, 3, 3],
+                &[512, 512, 9],
+                &[32, 16, 32, 16, 9],
+                &[8, 4, 4, 4, 8, 4, 4, 4, 9],
+            ),
+            (&[128, 64, 1, 1], &[128, 64], &[16, 8, 8, 8], &[4, 4, 8, 8, 8]),
+            (&[512, 128, 1, 1], &[512, 128], &[32, 16, 16, 8], &[8, 4, 4, 4, 4, 4, 8]),
+        ];
+        for (shape, et1, et2, et3) in cases {
+            assert_eq!(sorted(plan(shape, Level::Et(1))), sorted(et1.to_vec()), "ET1 {shape:?}");
+            assert_eq!(sorted(plan(shape, Level::Et(2))), sorted(et2.to_vec()), "ET2 {shape:?}");
+            assert_eq!(sorted(plan(shape, Level::Et(3))), sorted(et3.to_vec()), "ET3 {shape:?}");
+        }
+    }
+
+    #[test]
+    fn balanced_divisors() {
+        assert_eq!(balanced_divisor(512), 16);
+        assert_eq!(balanced_divisor(2000), 40);
+        assert_eq!(balanced_divisor(2048), 32);
+        assert_eq!(balanced_divisor(64), 8);
+        assert_eq!(balanced_divisor(13), 1); // prime
+        assert_eq!(balanced_divisor(1), 1);
+    }
+
+    #[test]
+    fn primes_pass_through() {
+        assert_eq!(plan(&[13, 17], Level::Et(3)), vec![13, 17]);
+    }
+
+    #[test]
+    fn scalar_and_unit_axes() {
+        assert_eq!(plan(&[1], Level::Et(2)), vec![1]);
+        assert_eq!(plan(&[1, 64, 1], Level::Et(1)), vec![64]);
+    }
+
+    #[test]
+    fn plan_flat_balances() {
+        assert_eq!(plan_flat(512, 2), vec![16, 32]);
+        assert_eq!(plan_flat(1000, 3), vec![10, 10, 10]);
+        let dims = plan_flat(360, 3);
+        assert_eq!(dims.iter().product::<usize>(), 360);
+    }
+
+    /// Property: any plan's factors multiply back to the original numel, and
+    /// deeper levels never increase the state length (memory monotonicity —
+    /// the §5.2 claim depends on it).
+    #[test]
+    fn prop_plan_invariants() {
+        props("plan_invariants", 200, |g: &mut Gen| {
+            let rank = g.usize_in(1, 4);
+            let shape: Vec<usize> = (0..rank).map(|_| g.usize_in(1, 512)).collect();
+            let numel: usize = shape.iter().product();
+            let mut prev_state = usize::MAX;
+            for k in 1..=4u8 {
+                let dims = plan(&shape, Level::Et(k));
+                assert_eq!(
+                    dims.iter().product::<usize>(),
+                    numel,
+                    "shape {shape:?} level {k}: product mismatch {dims:?}"
+                );
+                let state = plan_state_len(&dims);
+                assert!(
+                    state <= prev_state,
+                    "state len grew {prev_state} -> {state} at level {k} for {shape:?}"
+                );
+                prev_state = state;
+            }
+        });
+    }
+
+    /// Property: plan_flat(d, p) always multiplies to d and has exactly p
+    /// factors.
+    #[test]
+    fn prop_plan_flat_product() {
+        props("plan_flat_product", 200, |g: &mut Gen| {
+            let d = g.usize_in(1, 1 << 16);
+            let p = g.usize_in(1, 4);
+            let dims = plan_flat(d, p);
+            assert_eq!(dims.len(), p);
+            assert_eq!(dims.iter().product::<usize>(), d);
+        });
+    }
+}

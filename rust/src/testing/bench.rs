@@ -1,0 +1,104 @@
+//! Minimal benchmark harness (no criterion offline): warmup + timed
+//! iterations, reporting median / p10 / p90 wall time. Used by the
+//! `cargo bench` targets (`harness = false`).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns / 1e9)
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<40} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        );
+    }
+
+    pub fn report_with_rate(&self, items_per_iter: f64, unit: &str) {
+        println!(
+            "{:<40} {:>12} median   {:>14.0} {unit}",
+            self.name,
+            fmt_ns(self.median_ns),
+            self.throughput(items_per_iter)
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Print the standard header once per bench binary.
+pub fn header(title: &str) {
+    println!("\n### {title}");
+    println!(
+        "{:<40} {:>12} {:>12} {:>12}",
+        "benchmark", "median", "p10", "p90"
+    );
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |p: f64| samples[((p * (samples.len() - 1) as f64).round() as usize).min(samples.len() - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: pick(0.5),
+        p10_ns: pick(0.1),
+        p90_ns: pick(0.9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("us"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Test-support utilities (property-based testing harness). Compiled into
+//! the library (not `#[cfg(test)]`) so integration tests and benches can
+//! reuse the generators.
+
+pub mod bench;
+pub mod prop;

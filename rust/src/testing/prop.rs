@@ -1,0 +1,111 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline environment has no `proptest` crate, so this module provides
+//! the subset we need: a seeded case generator, a fixed case budget per
+//! property, and failure reports that print the case seed so a failing case
+//! can be replayed deterministically (`ETPROP_SEED=<n> cargo test`).
+
+use crate::util::rng::Pcg64;
+
+/// Per-case generator handed to property bodies.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Random tensor dims: order in [1, max_order], each dim in [1, max_dim].
+    pub fn dims_upto(&mut self, max_order: usize, max_dim: usize) -> Vec<usize> {
+        let p = self.usize_in(1, max_order);
+        (0..p).map(|_| self.usize_in(1, max_dim)).collect()
+    }
+
+    /// A gradient-like vector: mix of dense gaussian, sparse, and large-range
+    /// values — the regimes that stress accumulator numerics.
+    pub fn grad_vec(&mut self, n: usize) -> Vec<f32> {
+        let style = self.usize_in(0, 2);
+        let mut v = vec![0.0f32; n];
+        match style {
+            0 => self.rng.fill_normal(&mut v, 1.0),
+            1 => {
+                // sparse: ~10% nonzero
+                for x in v.iter_mut() {
+                    if self.rng.next_f32() < 0.1 {
+                        *x = self.rng.normal() as f32 * 3.0;
+                    }
+                }
+            }
+            _ => {
+                // wide dynamic range
+                for x in v.iter_mut() {
+                    let e = self.f32_in(-6.0, 4.0);
+                    *x = (self.rng.normal() as f32) * 10f32.powf(e);
+                }
+            }
+        }
+        v
+    }
+}
+
+/// Run `cases` random cases of a property. Panics (with the replay seed) on
+/// the first failing case. `ETPROP_SEED` pins the base seed.
+pub fn props(name: &str, cases: usize, mut body: impl FnMut(&mut Gen)) {
+    let base_seed: u64 = std::env::var("ETPROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xE7E7_0001);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen { rng: Pcg64::new(seed, 0x9e37), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay with ETPROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_ranges_hold() {
+        props("gen_ranges", 50, |g| {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let dims = g.dims_upto(4, 9);
+            assert!(!dims.is_empty() && dims.len() <= 4);
+            assert!(dims.iter().all(|&d| (1..=9).contains(&d)));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with ETPROP_SEED=")]
+    fn failure_reports_seed() {
+        props("always_fails", 3, |_| panic!("boom"));
+    }
+}

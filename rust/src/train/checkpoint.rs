@@ -1,0 +1,141 @@
+//! Checkpointing: save/restore the full training state (params + optimizer
+//! state + step counter) in a simple length-prefixed binary format.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "ETCK" | version u32 | step u64 | n_tensors u32 |
+//!   per tensor: name_len u32 | name bytes | numel u64 | f32 data
+//! ```
+//! Tensor order and names must match the artifact manifest; `load` verifies
+//! both, so a checkpoint can never be silently applied to the wrong model.
+
+use crate::runtime::{Engine, TrainState};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"ETCK";
+const VERSION: u32 = 1;
+
+pub fn save(engine: &Engine, state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&state.step.to_le_bytes())?;
+        let names: Vec<&str> = engine
+            .manifest
+            .params
+            .iter()
+            .map(|p| p.name.as_str())
+            .chain(engine.manifest.opt_state.iter().map(|s| s.name.as_str()))
+            .collect();
+        let tensors: Vec<&xla::Literal> =
+            state.params.iter().chain(state.opt_state.iter()).collect();
+        w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+        for (name, lit) in names.iter().zip(&tensors) {
+            let data = lit.to_vec::<f32>()?;
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(data.len() as u64).to_le_bytes())?;
+            // bulk byte write
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?; // atomic replace
+    Ok(())
+}
+
+pub fn load(engine: &Engine, path: impl AsRef<Path>) -> Result<TrainState> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open checkpoint {:?}", path.as_ref()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an ETCK checkpoint");
+    }
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    r.read_exact(&mut b8)?;
+    let step = u64::from_le_bytes(b8);
+    r.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4) as usize;
+
+    let expected: Vec<(&str, usize)> = engine
+        .manifest
+        .params
+        .iter()
+        .map(|p| (p.name.as_str(), p.numel()))
+        .chain(engine.manifest.opt_state.iter().map(|s| (s.name.as_str(), s.numel())))
+        .collect();
+    if n != expected.len() {
+        bail!("checkpoint has {n} tensors, manifest expects {}", expected.len());
+    }
+
+    let mut params: Vec<Vec<f32>> = Vec::with_capacity(engine.manifest.params.len());
+    let mut opt: Vec<Vec<f32>> = Vec::with_capacity(engine.manifest.opt_state.len());
+    for (i, (want_name, want_numel)) in expected.iter().enumerate() {
+        r.read_exact(&mut b4)?;
+        let name_len = u32::from_le_bytes(b4) as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf8")?;
+        if name != *want_name {
+            bail!("tensor {i}: checkpoint has '{name}', manifest expects '{want_name}'");
+        }
+        r.read_exact(&mut b8)?;
+        let numel = u64::from_le_bytes(b8) as usize;
+        if numel != *want_numel {
+            bail!("tensor '{name}': {numel} values, manifest expects {want_numel}");
+        }
+        let mut data = vec![0.0f32; numel];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+        };
+        r.read_exact(bytes)?;
+        if i < engine.manifest.params.len() {
+            params.push(data);
+        } else {
+            opt.push(data);
+        }
+    }
+    engine.state_from_vecs(&params, &opt, step)
+}
+
+#[cfg(test)]
+mod tests {
+    // Checkpoint round-trip with a real engine requires artifacts; the
+    // integration test `rust/tests/train_loop.rs` covers it. Here we test
+    // the header validation on raw bytes.
+    use super::*;
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("etck-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ck");
+        std::fs::write(&path, b"NOPE").unwrap();
+        // Need an engine to call load(); validate magic by parsing manually.
+        let mut f = std::fs::File::open(&path).unwrap();
+        let mut magic = [0u8; 4];
+        use std::io::Read;
+        f.read_exact(&mut magic).unwrap();
+        assert_ne!(&magic, MAGIC);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,135 @@
+//! Run configuration for `ettrain`: which artifact, schedule, data, and
+//! budgets. Parsed from TOML (`util::config`) with CLI overrides.
+
+use crate::optim::Schedule;
+use crate::util::config::Config;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Everything a training run needs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Run name (directory under `runs/`).
+    pub name: String,
+    /// Artifact name, e.g. `lm_tiny_et2`.
+    pub artifact: String,
+    /// Eval artifact name, e.g. `lm_tiny_eval` (optional).
+    pub eval_artifact: Option<String>,
+    pub artifact_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub log_every: u64,
+    pub checkpoint_every: u64,
+    pub schedule: Schedule,
+    pub seed: u64,
+    /// Corpus settings (LM runs).
+    pub corpus_vocab: usize,
+    pub corpus_sentences: usize,
+    /// Max wall-clock seconds (0 = unlimited) — Table 2's equal-time budget.
+    pub max_seconds: f64,
+    /// Mirror gradients into the trace tracker (Figure 2). Costs one
+    /// grad-artifact execution per sampled step.
+    pub track_traces: bool,
+    pub trace_every: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            name: "run".into(),
+            artifact: "lm_tiny_et1".into(),
+            eval_artifact: None,
+            artifact_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("runs"),
+            steps: 300,
+            eval_every: 100,
+            eval_batches: 8,
+            log_every: 10,
+            checkpoint_every: 0,
+            schedule: Schedule::scaled_lm(1.0, 40),
+            seed: 42,
+            corpus_vocab: 1900,
+            corpus_sentences: 20_000,
+            max_seconds: 0.0,
+            track_traces: false,
+            trace_every: 10,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file; `overrides` are `key=value` pairs applied on
+    /// top (CLI `--set`).
+    pub fn load(path: &str, overrides: &[(String, String)]) -> Result<RunConfig> {
+        let mut cfg = Config::load(path).with_context(|| format!("load config {path}"))?;
+        for (k, v) in overrides {
+            cfg.set(k, v)?;
+        }
+        Self::from_config(&cfg)
+    }
+
+    pub fn from_config(cfg: &Config) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let schedule_str = cfg.str("optim.schedule", "warmup_rsqrt:1.0:40");
+        let schedule = Schedule::parse(&schedule_str)
+            .with_context(|| format!("bad schedule '{schedule_str}'"))?;
+        Ok(RunConfig {
+            name: cfg.str("run.name", &d.name),
+            artifact: cfg.req_str("run.artifact")?,
+            eval_artifact: cfg.get("run.eval_artifact").and_then(|v| v.as_str()).map(String::from),
+            artifact_dir: PathBuf::from(cfg.str("run.artifact_dir", "artifacts")),
+            out_dir: PathBuf::from(cfg.str("run.out_dir", "runs")),
+            steps: cfg.usize("run.steps", d.steps as usize) as u64,
+            eval_every: cfg.usize("run.eval_every", d.eval_every as usize) as u64,
+            eval_batches: cfg.usize("run.eval_batches", d.eval_batches),
+            log_every: cfg.usize("run.log_every", d.log_every as usize) as u64,
+            checkpoint_every: cfg.usize("run.checkpoint_every", 0) as u64,
+            schedule,
+            seed: cfg.usize("run.seed", d.seed as usize) as u64,
+            corpus_vocab: cfg.usize("data.vocab", d.corpus_vocab),
+            corpus_sentences: cfg.usize("data.sentences", d.corpus_sentences),
+            max_seconds: cfg.f64("run.max_seconds", 0.0),
+            track_traces: cfg.bool("run.track_traces", false),
+            trace_every: cfg.usize("run.trace_every", d.trace_every as usize) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal() {
+        let cfg = Config::parse(
+            r#"
+[run]
+artifact = "lm_tiny_et2"
+steps = 500
+
+[optim]
+schedule = "constant:0.05"
+"#,
+        )
+        .unwrap();
+        let rc = RunConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.artifact, "lm_tiny_et2");
+        assert_eq!(rc.steps, 500);
+        assert_eq!(rc.schedule, Schedule::Constant(0.05));
+    }
+
+    #[test]
+    fn requires_artifact() {
+        let cfg = Config::parse("[run]\nsteps = 5").unwrap();
+        assert!(RunConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_schedule() {
+        let cfg =
+            Config::parse("[run]\nartifact = \"a\"\n[optim]\nschedule = \"nope\"").unwrap();
+        assert!(RunConfig::from_config(&cfg).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Run metrics: step records, perplexity aggregation, throughput.
+
+use crate::util::json::Json;
+
+/// One logged training step.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub lr: f64,
+    pub tokens_per_sec: f64,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("train")),
+            ("step", Json::num(self.step as f64)),
+            ("loss", Json::num(self.loss)),
+            ("ppl", Json::num(self.loss.exp())),
+            ("lr", Json::num(self.lr)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec)),
+        ])
+    }
+}
+
+/// One logged evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub mean_nll: f64,
+    pub tokens: f64,
+}
+
+impl EvalRecord {
+    pub fn ppl(&self) -> f64 {
+        self.mean_nll.exp()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("eval")),
+            ("step", Json::num(self.step as f64)),
+            ("mean_nll", Json::num(self.mean_nll)),
+            ("ppl", Json::num(self.ppl())),
+            ("tokens", Json::num(self.tokens)),
+        ])
+    }
+}
+
+/// Aggregates (total_nll, count) pairs into exact corpus-level perplexity.
+#[derive(Default, Clone, Debug)]
+pub struct PplAccumulator {
+    total_nll: f64,
+    total_count: f64,
+}
+
+impl PplAccumulator {
+    pub fn add(&mut self, nll: f64, count: f64) {
+        self.total_nll += nll;
+        self.total_count += count;
+    }
+
+    pub fn mean_nll(&self) -> f64 {
+        if self.total_count > 0.0 {
+            self.total_nll / self.total_count
+        } else {
+            f64::NAN
+        }
+    }
+
+    pub fn ppl(&self) -> f64 {
+        self.mean_nll().exp()
+    }
+
+    pub fn tokens(&self) -> f64 {
+        self.total_count
+    }
+}
+
+/// Final run summary (one row of a paper table).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub name: String,
+    pub optimizer: String,
+    pub optimizer_scalars: usize,
+    pub model_params: usize,
+    pub steps: u64,
+    pub final_train_loss: f64,
+    pub final_eval_ppl: f64,
+    pub wall_seconds: f64,
+    pub tokens_per_sec: f64,
+}
+
+impl RunSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("summary")),
+            ("name", Json::str(self.name.clone())),
+            ("optimizer", Json::str(self.optimizer.clone())),
+            ("optimizer_scalars", Json::num(self.optimizer_scalars as f64)),
+            ("model_params", Json::num(self.model_params as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("final_train_loss", Json::num(self.final_train_loss)),
+            ("final_eval_ppl", Json::num(self.final_eval_ppl)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_aggregation_is_exact() {
+        let mut acc = PplAccumulator::default();
+        acc.add(10.0, 5.0);
+        acc.add(2.0, 1.0);
+        assert!((acc.mean_nll() - 2.0).abs() < 1e-12);
+        assert!((acc.ppl() - 2f64.exp()).abs() < 1e-9);
+        assert_eq!(acc.tokens(), 6.0);
+    }
+
+    #[test]
+    fn empty_ppl_is_nan() {
+        assert!(PplAccumulator::default().mean_nll().is_nan());
+    }
+
+    #[test]
+    fn records_serialize() {
+        let s = StepRecord { step: 3, loss: 1.5, lr: 0.1, tokens_per_sec: 100.0 };
+        let j = s.to_json();
+        assert_eq!(j.get("step").unwrap().as_usize(), Some(3));
+        assert!(j.get("ppl").unwrap().as_f64().unwrap() > 4.0);
+        let e = EvalRecord { step: 3, mean_nll: 0.0, tokens: 10.0 };
+        assert_eq!(e.ppl(), 1.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Training orchestration: run configs, the trainer loop, checkpoints and
+//! metrics. See `trainer` for the step loop.
+
+pub mod checkpoint;
+pub mod config;
+pub mod metrics;
+pub mod trainer;
+pub mod vision;
+
+pub use config::RunConfig;
+pub use metrics::{EvalRecord, PplAccumulator, RunSummary, StepRecord};
+pub use trainer::{RunResult, Trainer};

@@ -1,0 +1,280 @@
+//! The training orchestrator: owns the step loop over a compiled train-step
+//! artifact, the prefetching data loader, periodic evaluation, JSONL
+//! metrics, checkpoints, optional trace tracking (Figure 2), and both
+//! step-count and wall-clock budgets (Table 2 needs equal-time runs).
+//!
+//! Python never appears here: the artifact was lowered once at build time;
+//! this loop is pure rust + PJRT.
+
+use super::checkpoint;
+use super::config::RunConfig;
+use super::metrics::{EvalRecord, PplAccumulator, RunSummary, StepRecord};
+use crate::data::{Batcher, Corpus, Loader, SyntheticConfig, Tokenizer};
+use crate::regret::TraceTracker;
+use crate::runtime::{Client, DataArg, Engine, TrainState};
+use crate::util::json::Json;
+use crate::util::logging::JsonlWriter;
+use crate::util::timer::{EmaRate, Timer};
+use anyhow::{Context, Result};
+
+/// Outcome of a completed run.
+pub struct RunResult {
+    pub summary: RunSummary,
+    pub eval_history: Vec<EvalRecord>,
+    pub loss_history: Vec<(u64, f64)>,
+    pub trace_report: Option<crate::regret::TraceReport>,
+}
+
+/// LM trainer bound to one artifact + corpus.
+pub struct Trainer {
+    pub cfg: RunConfig,
+    client: Client,
+    engine: Engine,
+    eval_engine: Option<Engine>,
+    grad_engine: Option<Engine>,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunConfig) -> Result<Trainer> {
+        let client = Client::cpu()?;
+        let engine = Engine::load(&client, &cfg.artifact_dir, &cfg.artifact)
+            .with_context(|| format!("load artifact '{}'", cfg.artifact))?;
+        let eval_engine = match &cfg.eval_artifact {
+            Some(name) => Some(Engine::load(&client, &cfg.artifact_dir, name)?),
+            None => None,
+        };
+        // grad artifact: derive name `<family>_grad` from the train artifact
+        let grad_engine = if cfg.track_traces {
+            let base = cfg
+                .artifact
+                .rsplit_once('_')
+                .map(|(b, _)| b.to_string())
+                .unwrap_or_else(|| cfg.artifact.clone());
+            Some(Engine::load(&client, &cfg.artifact_dir, &format!("{base}_grad"))?)
+        } else {
+            None
+        };
+        Ok(Trainer { cfg, client, engine, eval_engine, grad_engine })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    /// Build the corpus/batcher pipeline matching the artifact's token
+    /// geometry.
+    pub fn build_data(&self) -> Result<(Batcher, Batcher)> {
+        let m = &self.engine.manifest;
+        let tokens = &m.data_inputs[0];
+        anyhow::ensure!(tokens.shape.len() == 2, "expected 2-D token input");
+        let (rows, seq) = (tokens.shape[0], tokens.shape[1]);
+        let vocab = m
+            .model
+            .get("vocab")
+            .and_then(|v| v.as_usize())
+            .context("manifest missing model.vocab")?;
+        let corpus = Corpus::synthetic(&SyntheticConfig {
+            vocab: self.cfg.corpus_vocab,
+            sentences: self.cfg.corpus_sentences,
+            seed: self.cfg.seed ^ 0xc0a9,
+            ..SyntheticConfig::default()
+        });
+        let tok = Tokenizer::from_corpus(&corpus);
+        anyhow::ensure!(
+            tok.vocab_size() <= vocab,
+            "tokenizer vocab {} exceeds model vocab {vocab}",
+            tok.vocab_size()
+        );
+        let (train, valid) = corpus.split(10);
+        Ok((
+            Batcher::new(&tok, &train, seq, rows),
+            Batcher::new(&tok, &valid, seq, rows),
+        ))
+    }
+
+    /// Run the configured training job.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let run_dir = self.cfg.out_dir.join(&self.cfg.name);
+        std::fs::create_dir_all(&run_dir)?;
+        let mut log = JsonlWriter::create(run_dir.join("metrics.jsonl"))?;
+
+        let (train_batcher, valid_batcher) = self.build_data()?;
+        let tokens_per_batch = train_batcher.seq_len * train_batcher.batch_rows;
+        let mut loader =
+            Loader::spawn(train_batcher, self.cfg.seed, self.cfg.steps as usize, 4);
+
+        let mut state = self.engine.init_state(self.cfg.seed)?;
+
+        // Trace tracker mirrors the artifact's planned tensor indices.
+        let mut tracker = if self.cfg.track_traces {
+            Some(self.build_tracker()?)
+        } else {
+            None
+        };
+
+        let wall = Timer::start();
+        let mut step_ema = EmaRate::new(0.1);
+        let mut loss_history = Vec::new();
+        let mut eval_history = Vec::new();
+        let mut last_loss = f64::NAN;
+
+        while state.step < self.cfg.steps {
+            if self.cfg.max_seconds > 0.0 && wall.elapsed_secs() >= self.cfg.max_seconds {
+                crate::info!("time budget reached at step {}", state.step);
+                break;
+            }
+            let Some(batch) = loader.next() else { break };
+            let lr = self.cfg.schedule.lr(state.step + 1) as f32;
+
+            // Optional gradient mirroring for the Figure 2 traces (before
+            // the update, at the current params).
+            if let (Some(tracker), Some(grad_engine)) = (&mut tracker, &self.grad_engine) {
+                if state.step % self.cfg.trace_every == 0 {
+                    let (_, grads) = grad_engine.grad_step(&state, &[DataArg::I32(&batch.tokens)])?;
+                    let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+                    tracker.observe(&views)?;
+                }
+            }
+
+            let t0 = Timer::start();
+            let out = self.engine.train_step_tokens(&mut state, &batch.tokens, lr)?;
+            step_ema.observe(t0.elapsed_secs());
+            last_loss = out.loss as f64;
+            anyhow::ensure!(last_loss.is_finite(), "loss diverged at step {}", state.step);
+
+            if state.step % self.cfg.log_every == 0 || state.step == self.cfg.steps {
+                let tps = step_ema.rate().unwrap_or(0.0) * tokens_per_batch as f64;
+                let rec = StepRecord {
+                    step: state.step,
+                    loss: last_loss,
+                    lr: lr as f64,
+                    tokens_per_sec: tps,
+                };
+                log.write(&rec.to_json())?;
+                loss_history.push((state.step, last_loss));
+                crate::debugln!(
+                    "step {} loss {:.4} lr {:.2e} {:.0} tok/s",
+                    state.step,
+                    last_loss,
+                    lr,
+                    tps
+                );
+            }
+
+            if self.cfg.eval_every > 0
+                && state.step % self.cfg.eval_every == 0
+                && self.eval_engine.is_some()
+            {
+                let rec = self.evaluate(&state, &valid_batcher)?;
+                log.write(&rec.to_json())?;
+                crate::info!(
+                    "[{}] step {} val ppl {:.2}",
+                    self.cfg.name,
+                    state.step,
+                    rec.ppl()
+                );
+                eval_history.push(rec);
+            }
+
+            if self.cfg.checkpoint_every > 0 && state.step % self.cfg.checkpoint_every == 0 {
+                checkpoint::save(&self.engine, &state, run_dir.join("latest.ck"))?;
+            }
+        }
+
+        // Final eval.
+        let final_ppl = if self.eval_engine.is_some() {
+            let rec = self.evaluate(&state, &valid_batcher)?;
+            log.write(&rec.to_json())?;
+            let p = rec.ppl();
+            eval_history.push(rec);
+            p
+        } else {
+            f64::NAN
+        };
+
+        if self.cfg.checkpoint_every > 0 {
+            checkpoint::save(&self.engine, &state, run_dir.join("final.ck"))?;
+        }
+
+        let opt_scalars = self
+            .engine
+            .manifest
+            .optimizer
+            .get("state_scalars")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(self.engine.manifest.total_opt_state());
+        let summary = RunSummary {
+            name: self.cfg.name.clone(),
+            optimizer: self
+                .engine
+                .manifest
+                .optimizer
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("?")
+                .to_string(),
+            optimizer_scalars: opt_scalars,
+            model_params: self.engine.manifest.total_params(),
+            steps: state.step,
+            final_train_loss: last_loss,
+            final_eval_ppl: final_ppl,
+            wall_seconds: wall.elapsed_secs(),
+            tokens_per_sec: step_ema.rate().unwrap_or(0.0) * tokens_per_batch as f64,
+        };
+        log.write(&summary.to_json())?;
+        log.flush()?;
+
+        let trace_report = tracker.map(|t| t.report());
+        if let Some(r) = &trace_report {
+            log.write(&Json::obj(vec![
+                ("kind", Json::str("traces")),
+                ("trace_h", Json::num(r.trace_h)),
+                ("trace_h_hat", Json::num(r.trace_h_hat)),
+                ("ratio", Json::num(r.ratio)),
+            ]))?;
+            log.flush()?;
+        }
+
+        Ok(RunResult { summary, eval_history, loss_history, trace_report })
+    }
+
+    fn evaluate(&self, state: &TrainState, valid: &Batcher) -> Result<EvalRecord> {
+        let eval_engine = self.eval_engine.as_ref().context("no eval artifact")?;
+        let order = valid.epoch_order(0, self.cfg.seed);
+        let mut acc = PplAccumulator::default();
+        for b in 0..valid.batches_per_epoch().min(self.cfg.eval_batches) {
+            let batch = valid.batch(&order, b).context("eval batch")?;
+            let out = eval_engine.eval_step(state, &[DataArg::I32(&batch.tokens)])?;
+            acc.add(out.total_nll, out.token_count);
+        }
+        Ok(EvalRecord { step: state.step, mean_nll: acc.mean_nll(), tokens: acc.tokens() })
+    }
+
+    /// Trace tracker over the artifact's ET tensor-index dims: each
+    /// parameter's dims are recovered from the opt-state shapes when the
+    /// artifact *is* an ET artifact, else planned at ET1 (the tracker is
+    /// measuring what ET *would* store — Figure 2 compares against the
+    /// AdaGrad baseline regardless of which optimizer trains).
+    fn build_tracker(&self) -> Result<TraceTracker> {
+        let m = &self.engine.manifest;
+        let mut groups = Vec::new();
+        for p in &m.params {
+            let prefix = format!("{}.s", p.name);
+            let mut dims: Vec<usize> = m
+                .opt_state
+                .iter()
+                .filter(|s| s.name.starts_with(&prefix))
+                .map(|s| s.shape[0])
+                .collect();
+            if dims.is_empty() || dims.iter().product::<usize>() != p.numel() {
+                dims = crate::tensoring::plan(&p.shape, crate::tensoring::Level::Et(1));
+            }
+            groups.push((p.name.clone(), dims));
+        }
+        TraceTracker::new(&groups, 1e-8)
+    }
+}

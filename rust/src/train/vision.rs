@@ -1,0 +1,137 @@
+//! Vision training loop for the appendix experiment (Table 4 / Figure 4):
+//! drives the `cnn_*` train/eval artifacts over the synthetic image
+//! substrate. Smaller than the LM trainer (in-memory dataset, no packing),
+//! so it gets its own compact loop.
+
+use crate::runtime::{Client, DataArg, Engine, TrainState};
+use crate::util::rng::Pcg64;
+use crate::vision::{VisionConfig, VisionDataset, CHANNELS, IMG};
+use anyhow::{Context, Result};
+
+pub struct VisionRun {
+    pub optimizer: String,
+    pub optimizer_scalars: usize,
+    pub model_params: usize,
+    pub final_test_error: f64,
+    pub best_test_error: f64,
+    pub final_train_loss: f64,
+    pub steps: u64,
+    pub loss_history: Vec<(u64, f64)>,
+}
+
+pub struct VisionTrainer {
+    engine: Engine,
+    eval: Engine,
+    train_set: VisionDataset,
+    test_set: VisionDataset,
+    batch: usize,
+}
+
+impl VisionTrainer {
+    pub fn new(
+        client: &Client,
+        artifact_dir: &std::path::Path,
+        optimizer: &str,
+        data_cfg: &VisionConfig,
+    ) -> Result<VisionTrainer> {
+        let engine = Engine::load(client, artifact_dir, &format!("cnn_{optimizer}"))?;
+        let eval = Engine::load(client, artifact_dir, "cnn_eval")?;
+        let batch = engine.manifest.data_inputs[0].shape[0];
+        let (train_set, test_set) = VisionDataset::generate(data_cfg);
+        Ok(VisionTrainer { engine, eval, train_set, test_set, batch })
+    }
+
+    fn gather_batch(&self, set: &VisionDataset, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let pix = CHANNELS * IMG * IMG;
+        let mut images = Vec::with_capacity(idx.len() * pix);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            images.extend_from_slice(set.image(i));
+            labels.push(set.y[i] as i32);
+        }
+        (images, labels)
+    }
+
+    /// Train for `steps` minibatch steps at constant `lr` (the appendix
+    /// uses tuned constant rates), evaluating test error every
+    /// `eval_every`.
+    pub fn run(&mut self, steps: u64, lr: f32, eval_every: u64, seed: u64) -> Result<VisionRun> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut state = self.engine.init_state(seed)?;
+        let mut order: Vec<usize> = (0..self.train_set.n).collect();
+        let mut cursor = self.train_set.n; // force initial shuffle
+        let mut best_err = f64::INFINITY;
+        let mut last_loss = f64::NAN;
+        let mut loss_history = Vec::new();
+
+        while state.step < steps {
+            if cursor + self.batch > order.len() {
+                rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            let idx = &order[cursor..cursor + self.batch];
+            cursor += self.batch;
+            let (images, labels) = self.gather_batch(&self.train_set, idx);
+            let out = self.engine.train_step(
+                &mut state,
+                &[DataArg::F32(&images), DataArg::I32(&labels)],
+                lr,
+            )?;
+            last_loss = out.loss as f64;
+            anyhow::ensure!(last_loss.is_finite(), "vision loss diverged at {}", state.step);
+            if state.step % 10 == 0 {
+                loss_history.push((state.step, last_loss));
+            }
+            if eval_every > 0 && state.step % eval_every == 0 {
+                best_err = best_err.min(self.test_error(&state)?);
+            }
+        }
+        let final_err = self.test_error(&state)?;
+        best_err = best_err.min(final_err);
+
+        let opt_scalars = self
+            .engine
+            .manifest
+            .optimizer
+            .get("state_scalars")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(self.engine.manifest.total_opt_state());
+        Ok(VisionRun {
+            optimizer: self
+                .engine
+                .manifest
+                .optimizer
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("?")
+                .to_string(),
+            optimizer_scalars: opt_scalars,
+            model_params: self.engine.manifest.total_params(),
+            final_test_error: final_err,
+            best_test_error: best_err,
+            final_train_loss: last_loss,
+            steps: state.step,
+            loss_history,
+        })
+    }
+
+    /// Exact test error over the full test set (batched).
+    pub fn test_error(&self, state: &TrainState) -> Result<f64> {
+        let mut wrong = 0.0f64;
+        let mut total = 0.0f64;
+        let mut i = 0;
+        while i + self.batch <= self.test_set.n {
+            let idx: Vec<usize> = (i..i + self.batch).collect();
+            let (images, labels) = self.gather_batch(&self.test_set, &idx);
+            let out = self
+                .eval
+                .eval_step(state, &[DataArg::F32(&images), DataArg::I32(&labels)])
+                .context("cnn eval step")?;
+            wrong += out.total_nll; // eval artifact returns (wrong_count, count)
+            total += out.token_count;
+            i += self.batch;
+        }
+        anyhow::ensure!(total > 0.0, "empty test set");
+        Ok(wrong / total)
+    }
+}

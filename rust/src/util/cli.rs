@@ -1,0 +1,181 @@
+//! Tiny command-line parser (no `clap` in the offline environment).
+//!
+//! Supports `ettrain <subcommand> [--flag] [--key value] [positional...]`,
+//! with typed accessors and an auto-generated usage string. Unknown flags
+//! are errors — experiments must not silently ignore a typoed parameter.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Declarative spec of what a subcommand accepts (for validation + usage).
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// (key, default-or-None, help)
+    pub options: Vec<(&'static str, Option<&'static str>, &'static str)>,
+    pub flags: Vec<(&'static str, &'static str)>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+impl Spec {
+    pub fn usage(&self) -> String {
+        let mut s = format!("ettrain {} — {}\n", self.name, self.about);
+        if !self.positional.is_empty() {
+            s.push_str("  positional:\n");
+            for (n, h) in &self.positional {
+                s.push_str(&format!("    <{n}>  {h}\n"));
+            }
+        }
+        if !self.options.is_empty() {
+            s.push_str("  options:\n");
+            for (k, d, h) in &self.options {
+                match d {
+                    Some(d) => s.push_str(&format!("    --{k} <v>  {h} (default {d})\n")),
+                    None => s.push_str(&format!("    --{k} <v>  {h}\n")),
+                }
+            }
+        }
+        if !self.flags.is_empty() {
+            s.push_str("  flags:\n");
+            for (k, h) in &self.flags {
+                s.push_str(&format!("    --{k}  {h}\n"));
+            }
+        }
+        s
+    }
+}
+
+impl Args {
+    /// Parse raw argv (without the binary name) against a spec.
+    pub fn parse(spec: &Spec, argv: &[String]) -> Result<Args> {
+        let mut args = Args { subcommand: spec.name.to_string(), ..Default::default() };
+        // seed defaults
+        for (k, d, _) in &spec.options {
+            if let Some(d) = d {
+                args.options.insert(k.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    if spec.options.iter().any(|(n, _, _)| *n == k) {
+                        args.options.insert(k.to_string(), v.to_string());
+                    } else {
+                        bail!("unknown option --{k}\n{}", spec.usage());
+                    }
+                } else if spec.flags.iter().any(|(n, _)| *n == name) {
+                    args.flags.push(name.to_string());
+                } else if spec.options.iter().any(|(n, _, _)| *n == name) {
+                    i += 1;
+                    if i >= argv.len() {
+                        bail!("option --{name} needs a value\n{}", spec.usage());
+                    }
+                    args.options.insert(name.to_string(), argv[i].clone());
+                } else {
+                    bail!("unknown option --{name}\n{}", spec.usage());
+                }
+            } else {
+                if args.positional.len() >= spec.positional.len() {
+                    bail!("unexpected positional '{a}'\n{}", spec.usage());
+                }
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        let v = self.req(key)?;
+        v.parse().map_err(|_| anyhow::anyhow!("--{key}: expected integer, got '{v}'"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        let v = self.req(key)?;
+        v.parse().map_err(|_| anyhow::anyhow!("--{key}: expected integer, got '{v}'"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        let v = self.req(key)?;
+        v.parse().map_err(|_| anyhow::anyhow!("--{key}: expected number, got '{v}'"))
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing required option --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec {
+            name: "train",
+            about: "run a training job",
+            options: vec![
+                ("steps", Some("100"), "number of steps"),
+                ("lr", None, "learning rate"),
+            ],
+            flags: vec![("csv", "emit csv")],
+            positional: vec![("config", "config path")],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&spec(), &sv(&["cfg.toml", "--steps", "500", "--csv", "--lr=0.1"]))
+            .unwrap();
+        assert_eq!(a.positional, vec!["cfg.toml"]);
+        assert_eq!(a.get_usize("steps").unwrap(), 500);
+        assert_eq!(a.get_f64("lr").unwrap(), 0.1);
+        assert!(a.flag("csv"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&spec(), &sv(&["cfg.toml"])).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 100);
+        assert!(a.get("lr").is_none());
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(&spec(), &sv(&["--bogus", "1"])).is_err());
+        assert!(Args::parse(&spec(), &sv(&["a", "b"])).is_err());
+        assert!(Args::parse(&spec(), &sv(&["--steps"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = spec().usage();
+        assert!(u.contains("--steps"));
+        assert!(u.contains("--csv"));
+        assert!(u.contains("<config>"));
+    }
+}

@@ -1,0 +1,246 @@
+//! TOML-subset config parser for run configs.
+//!
+//! Supports exactly the subset our configs use: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! bool / array-of-scalars values, `#` comments. Values land in a flat
+//! `section.key -> Value` map with typed accessors. Unknown syntax is an
+//! error (configs are small; silent misparses are worse than strictness).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_usize_arr(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Arr(v) => v.iter().map(|x| x.as_i64().map(|i| i as usize)).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> Value` config map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = inner.trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section header", ln + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected 'key = value'", ln + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", ln + 1);
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value for '{full}'", ln + 1))?;
+            if cfg.values.insert(full.clone(), value).is_some() {
+                bail!("line {}: duplicate key '{full}'", ln + 1);
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read config {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_i64()).map(|i| i as usize).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow::anyhow!("config missing required string '{key}'"))
+    }
+
+    /// Override or insert a value (CLI `--set section.key=value`).
+    pub fn set(&mut self, key: &str, raw: &str) -> Result<()> {
+        let value = parse_value(raw)?;
+        self.values.insert(key.to_string(), value);
+        Ok(())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unterminated array")?.trim();
+        if body.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>> = body.split(',').map(|x| parse_value(x.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{s}' (quote strings)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run config
+name = "table1-et2"
+
+[model]
+layers = 6          # transformer depth
+d_model = 512
+dims = [16, 32]
+tied = true
+
+[optim]
+kind = "et2"
+lr = 0.1
+eps = 1e-8
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name", ""), "table1-et2");
+        assert_eq!(c.usize("model.layers", 0), 6);
+        assert_eq!(c.f64("optim.lr", 0.0), 0.1);
+        assert_eq!(c.f64("optim.eps", 0.0), 1e-8);
+        assert!(c.bool("model.tied", false));
+        assert_eq!(c.get("model.dims").unwrap().as_usize_arr(), Some(vec![16, 32]));
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut c = Config::parse("[a]\nx = 1").unwrap();
+        assert_eq!(c.usize("a.y", 9), 9);
+        c.set("a.x", "5").unwrap();
+        assert_eq!(c.usize("a.x", 0), 5);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("just words").is_err());
+        assert!(Config::parse("k = ").is_err());
+        assert!(Config::parse("[]\n").is_err());
+        assert!(Config::parse("k = \"unterminated").is_err());
+        assert!(Config::parse("k = 1\nk = 2").is_err());
+    }
+
+    #[test]
+    fn comments_in_strings_survive() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn numbers() {
+        let c = Config::parse("a = -3\nb = 2.5e-4\nc = 1e4").unwrap();
+        assert_eq!(c.get("a").unwrap().as_i64(), Some(-3));
+        assert!((c.f64("b", 0.0) - 2.5e-4).abs() < 1e-12);
+        assert!((c.f64("c", 0.0) - 1e4).abs() < 1e-9);
+    }
+}

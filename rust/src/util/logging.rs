@@ -1,0 +1,144 @@
+//! Structured JSONL logging for training runs and experiments.
+//!
+//! Every training run writes one JSON object per line to
+//! `<run_dir>/metrics.jsonl`; the experiment harness parses these back to
+//! assemble the paper's tables/figures, so the writer and reader live
+//! together here.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Append-only JSONL metrics writer.
+pub struct JsonlWriter {
+    path: PathBuf,
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("open {path:?}"))?;
+        Ok(JsonlWriter { path, out: BufWriter::new(file) })
+    }
+
+    pub fn write(&mut self, record: &Json) -> Result<()> {
+        self.out.write_all(record.to_string().as_bytes())?;
+        self.out.write_all(b"\n")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Read all records from a JSONL file.
+pub fn read_jsonl(path: impl AsRef<Path>) -> Result<Vec<Json>> {
+    let f = File::open(path.as_ref()).with_context(|| format!("open {:?}", path.as_ref()))?;
+    let mut out = Vec::new();
+    for (i, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(
+            Json::parse(&line).map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Leveled stderr logger with a global verbosity switch, used by the CLI.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+static VERBOSITY: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(2);
+
+pub fn set_verbosity(level: Level) {
+    VERBOSITY.store(level as u8, std::sync::atomic::Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= VERBOSITY.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+pub fn log(level: Level, msg: &str) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warnln {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debugln {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("etlog-{}", std::process::id()));
+        let path = dir.join("m.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut w = JsonlWriter::create(&path).unwrap();
+        for i in 0..5 {
+            w.write(&Json::obj(vec![
+                ("step", Json::num(i as f64)),
+                ("loss", Json::num(3.0 - 0.1 * i as f64)),
+            ]))
+            .unwrap();
+        }
+        w.flush().unwrap();
+        let rec = read_jsonl(&path).unwrap();
+        assert_eq!(rec.len(), 5);
+        assert_eq!(rec[3].get("step").unwrap().as_usize(), Some(3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn verbosity_gate() {
+        set_verbosity(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_verbosity(Level::Info);
+    }
+}

@@ -1,0 +1,132 @@
+//! Small numeric helpers shared across the convex substrate, the optimizers,
+//! and the metrics code.
+
+/// Numerically stable log-sum-exp over a slice.
+pub fn log_sum_exp(xs: &[f32]) -> f32 {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// In-place softmax.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let lse = log_sum_exp(xs);
+    for x in xs.iter_mut() {
+        *x = (*x - lse).exp();
+    }
+}
+
+/// Dot product (f32 data, f64 accumulation for stability).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Squared l2 norm with f64 accumulation.
+pub fn sq_norm(a: &[f32]) -> f64 {
+    a.iter().map(|&x| x as f64 * x as f64).sum()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile (nearest-rank) of an unsorted slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Format a count with SI-ish suffix (paper tables use 1.2e5-style; we print
+/// both). `fmt_count(120000) == "1.2e5"`.
+pub fn fmt_count(n: usize) -> String {
+    if n == 0 {
+        return "0".into();
+    }
+    let x = n as f64;
+    let e = x.log10().floor() as i32;
+    if e < 3 {
+        format!("{n}")
+    } else {
+        format!("{:.1}e{}", x / 10f64.powi(e), e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lse_stable() {
+        let xs = [1000.0f32, 1000.0];
+        let v = log_sum_exp(&xs);
+        assert!((v - (1000.0 + 2f32.ln())).abs() < 1e-3);
+        assert_eq!(log_sum_exp(&[f32::NEG_INFINITY]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = [0.5f32, -1.0, 2.0, 0.0];
+        softmax_inplace(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(xs.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(1), "1");
+        assert_eq!(fmt_count(90), "90");
+        assert_eq!(fmt_count(120_000), "1.2e5");
+        assert_eq!(fmt_count(35_000_000), "3.5e7");
+    }
+
+    #[test]
+    fn axpy_dot() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [1.0f32, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        assert!((dot(&x, &x) - 14.0).abs() < 1e-12);
+        assert!((sq_norm(&x) - 14.0).abs() < 1e-12);
+    }
+}

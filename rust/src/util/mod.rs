@@ -1,0 +1,11 @@
+//! Shared substrates: seeded RNG, JSON codec, CLI parsing, config files,
+//! logging, timing. All in-repo because the offline build environment only
+//! ships the `xla` crate's dependency closure.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod math;
+pub mod rng;
+pub mod timer;

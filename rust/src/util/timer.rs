@@ -1,0 +1,84 @@
+//! Wall-clock timing helpers for the trainer and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Exponential moving average of step durations (for steady-state
+/// throughput reporting that ignores warmup).
+pub struct EmaRate {
+    alpha: f64,
+    ema_secs: Option<f64>,
+}
+
+impl EmaRate {
+    pub fn new(alpha: f64) -> Self {
+        EmaRate { alpha, ema_secs: None }
+    }
+
+    pub fn observe(&mut self, secs: f64) {
+        self.ema_secs = Some(match self.ema_secs {
+            None => secs,
+            Some(prev) => self.alpha * secs + (1.0 - self.alpha) * prev,
+        });
+    }
+
+    /// Events per second at the EMA rate.
+    pub fn rate(&self) -> Option<f64> {
+        self.ema_secs.map(|s| if s > 0.0 { 1.0 / s } else { f64::INFINITY })
+    }
+
+    pub fn secs(&self) -> Option<f64> {
+        self.ema_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = EmaRate::new(0.5);
+        for _ in 0..20 {
+            e.observe(0.1);
+        }
+        let r = e.rate().unwrap();
+        assert!((r - 10.0).abs() < 0.5, "{r}");
+    }
+
+    #[test]
+    fn ema_empty() {
+        assert!(EmaRate::new(0.1).rate().is_none());
+    }
+}

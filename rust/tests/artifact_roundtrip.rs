@@ -1,0 +1,205 @@
+//! Cross-layer integration: load the AOT lm_micro artifacts, run train and
+//! eval steps from rust, and verify (a) the execution contract, (b) loss
+//! decreases under training, (c) the compiled ET2 artifact agrees with the
+//! pure-rust extreme-tensoring oracle on the golden fixture.
+//!
+//! These tests are skipped (with a note) when `artifacts/` has not been
+//! built — run `make artifacts` first.
+
+use anyhow::Result;
+use extensor::optim::{GroupSpec, Optimizer};
+use extensor::runtime::{Client, DataArg, Engine};
+use extensor::util::json::Json;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = extensor::runtime::default_artifact_dir();
+    if dir.join("lm_micro_et2.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skip: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn micro_tokens(seed: u64, rows: usize, seq: usize, vocab: usize) -> Vec<i32> {
+    let mut rng = extensor::util::rng::Pcg64::seeded(seed);
+    (0..rows * seq).map(|_| (1 + rng.below(vocab as u64 - 1)) as i32).collect()
+}
+
+#[test]
+fn train_step_runs_and_loss_decreases() -> Result<()> {
+    let Some(dir) = artifacts_dir() else { return Ok(()) };
+    let client = Client::cpu()?;
+    let engine = Engine::load(&client, &dir, "lm_micro_et2")?;
+    let mut state = engine.init_state(42)?;
+    let vocab = engine.manifest.model.get("vocab").unwrap().as_usize().unwrap();
+    let (rows, seq) = (2, 16);
+
+    // Repeated steps on one fixed batch must drive its loss down hard.
+    let tokens = micro_tokens(7, rows, seq, vocab);
+    let first = engine.train_step_tokens(&mut state, &tokens, 0.1)?.loss;
+    let mut last = first;
+    for _ in 0..30 {
+        last = engine.train_step_tokens(&mut state, &tokens, 0.1)?.loss;
+    }
+    assert!(first.is_finite() && last.is_finite());
+    assert!(
+        last < first * 0.7,
+        "memorization failed: {first} -> {last}"
+    );
+    Ok(())
+}
+
+#[test]
+fn eval_artifact_aggregates_nll() -> Result<()> {
+    let Some(dir) = artifacts_dir() else { return Ok(()) };
+    let client = Client::cpu()?;
+    let train = Engine::load(&client, &dir, "lm_micro_et2")?;
+    let eval = Engine::load(&client, &dir, "lm_micro_eval")?;
+    let state = train.init_state(1)?;
+    let vocab = train.manifest.model.get("vocab").unwrap().as_usize().unwrap();
+    let tokens = micro_tokens(9, 2, 16, vocab);
+    let out = eval.eval_step(&state, &[DataArg::I32(&tokens)])?;
+    assert!(out.token_count > 0.0);
+    let mean = out.total_nll / out.token_count;
+    // Untrained model on vocab-64 data: mean NLL should be near ln(64).
+    assert!(
+        (mean - (vocab as f64).ln()).abs() < 1.5,
+        "untrained mean nll {mean} far from ln(V) {}",
+        (vocab as f64).ln()
+    );
+    Ok(())
+}
+
+/// The golden fixture: python ran two fused ET2 steps; rust must reproduce
+/// the same losses from the same initial params/tokens via the compiled
+/// artifact, and the same final parameter checksums.
+#[test]
+fn golden_et2_two_steps_match_python() -> Result<()> {
+    let Some(dir) = artifacts_dir() else { return Ok(()) };
+    let gpath = dir.join("golden/lm_micro_et2_steps.json");
+    let golden = Json::parse(&std::fs::read_to_string(&gpath)?)
+        .map_err(|e| anyhow::anyhow!("golden json: {e}"))?;
+
+    let client = Client::cpu()?;
+    let engine = Engine::load(&client, &dir, "lm_micro_et2")?;
+
+    // Initial params from the fixture, opt state zeros.
+    let params: Vec<Vec<f32>> = golden
+        .get("param_init")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| {
+            p.get("values")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as f32)
+                .collect()
+        })
+        .collect();
+    let opt_state: Vec<Vec<f32>> =
+        engine.manifest.opt_state.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+    let mut state = engine.state_from_vecs(&params, &opt_state, 0)?;
+
+    let tokens: Vec<i32> = golden
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as i32)
+        .collect();
+    let lr = golden.get("lr").unwrap().as_f64().unwrap() as f32;
+    let want_losses: Vec<f64> = golden
+        .get("losses")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+
+    for (i, want) in want_losses.iter().enumerate() {
+        let got = engine.train_step_tokens(&mut state, &tokens, lr)?.loss as f64;
+        let rel = (got - want).abs() / want.abs().max(1e-9);
+        assert!(rel < 2e-4, "step {i}: loss {got} vs python {want} (rel {rel:.2e})");
+    }
+
+    // Final parameter checksums.
+    for entry in golden.get("final_param_checksums").unwrap().as_arr().unwrap() {
+        let name = entry.get("name").unwrap().as_str().unwrap();
+        let want = entry.get("sum_abs").unwrap().as_f64().unwrap();
+        let got: f64 = state
+            .param_to_vec(&engine.manifest, name)?
+            .iter()
+            .map(|&x| x.abs() as f64)
+            .sum();
+        let rel = (got - want).abs() / want.max(1e-9);
+        assert!(rel < 5e-4, "param {name}: checksum {got} vs {want} (rel {rel:.2e})");
+    }
+    Ok(())
+}
+
+/// The compiled ET2 artifact and the pure-rust ET oracle must produce the
+/// same parameter update when fed the same gradients. We use the grad
+/// artifact to extract the HLO-side gradients, then apply the rust
+/// optimizer to the same initial params and compare against one artifact
+/// train step.
+#[test]
+fn artifact_update_matches_rust_oracle() -> Result<()> {
+    let Some(dir) = artifacts_dir() else { return Ok(()) };
+    if !dir.join("lm_micro_grad.json").exists() {
+        eprintln!("skip: lm_micro_grad not built");
+        return Ok(());
+    }
+    let client = Client::cpu()?;
+    let train = Engine::load(&client, &dir, "lm_micro_et2")?;
+    let grad = Engine::load(&client, &dir, "lm_micro_grad")?;
+
+    let mut state = train.init_state(123)?;
+    let vocab = train.manifest.model.get("vocab").unwrap().as_usize().unwrap();
+    let tokens = micro_tokens(55, 2, 16, vocab);
+
+    // Host copies of the initial params.
+    let params_host: Vec<Vec<f32>> = train
+        .manifest
+        .params
+        .iter()
+        .map(|p| state.param_to_vec(&train.manifest, &p.name))
+        .collect::<Result<_>>()?;
+
+    // HLO-side gradients at the initial params.
+    let (_, grads) = grad.grad_step(&state, &[DataArg::I32(&tokens)])?;
+
+    // Rust oracle: ET2 on the same groups.
+    let groups: Vec<GroupSpec> = train.manifest.group_specs();
+    let mut oracle = extensor::optim::extreme::ExtremeTensoring::new(&groups, 2, 1e-8, None);
+    let mut oracle_params = params_host.clone();
+    for (gi, (p, g)) in oracle_params.iter_mut().zip(&grads).enumerate() {
+        oracle.step(gi, p, g, 0.05)?;
+    }
+
+    // One artifact train step from the same state.
+    train.train_step_tokens(&mut state, &tokens, 0.05)?;
+
+    for (gi, spec) in train.manifest.params.iter().enumerate() {
+        let got = state.param_to_vec(&train.manifest, &spec.name)?;
+        let want = &oracle_params[gi];
+        let mut max_rel = 0.0f64;
+        for (a, b) in got.iter().zip(want) {
+            let rel = ((a - b).abs() as f64) / (b.abs() as f64).max(1e-5);
+            max_rel = max_rel.max(rel);
+        }
+        assert!(
+            max_rel < 5e-3,
+            "param {}: artifact vs rust oracle max rel diff {max_rel:.2e}",
+            spec.name
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,183 @@
+//! Trainer-level integration tests over the micro artifacts: full run with
+//! eval + metrics, determinism across runs, checkpoint round-trip, and the
+//! vision loop. Skipped when artifacts aren't built.
+
+use anyhow::Result;
+use extensor::optim::Schedule;
+use extensor::runtime::{Client, Engine};
+use extensor::train::{checkpoint, RunConfig, Trainer};
+use extensor::util::logging::read_jsonl;
+
+fn artifacts_ready() -> bool {
+    let ok = extensor::runtime::default_artifact_dir().join("lm_micro_et2.json").exists();
+    if !ok {
+        eprintln!("skip: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn micro_cfg(name: &str, steps: u64) -> RunConfig {
+    RunConfig {
+        name: name.into(),
+        artifact: "lm_micro_et2".into(),
+        eval_artifact: Some("lm_micro_eval".into()),
+        artifact_dir: extensor::runtime::default_artifact_dir(),
+        out_dir: std::env::temp_dir().join(format!("etruns-{}", std::process::id())),
+        steps,
+        eval_every: steps / 2,
+        eval_batches: 2,
+        log_every: 2,
+        checkpoint_every: 0,
+        schedule: Schedule::Constant(0.05),
+        seed: 7,
+        corpus_vocab: 56, // model vocab is 64; 56 + 4 specials fits
+        corpus_sentences: 400,
+        max_seconds: 0.0,
+        track_traces: false,
+        trace_every: 1,
+    }
+}
+
+#[test]
+fn full_run_writes_metrics_and_learns() -> Result<()> {
+    if !artifacts_ready() {
+        return Ok(());
+    }
+    let cfg = micro_cfg("itest_full", 30);
+    let out_dir = cfg.out_dir.clone();
+    let result = Trainer::new(cfg)?.run()?;
+    assert_eq!(result.summary.steps, 30);
+    assert!(result.summary.final_train_loss.is_finite());
+    // loss must drop vs the first logged value
+    let first = result.loss_history.first().unwrap().1;
+    let last = result.loss_history.last().unwrap().1;
+    assert!(last < first, "no learning: {first} -> {last}");
+    // metrics file has train + eval + summary records
+    let recs = read_jsonl(out_dir.join("itest_full/metrics.jsonl"))?;
+    let kinds: Vec<&str> =
+        recs.iter().filter_map(|r| r.get("kind").and_then(|k| k.as_str())).collect();
+    assert!(kinds.contains(&"train"));
+    assert!(kinds.contains(&"eval"));
+    assert!(kinds.contains(&"summary"));
+    std::fs::remove_dir_all(&out_dir).ok();
+    Ok(())
+}
+
+#[test]
+fn training_is_deterministic() -> Result<()> {
+    if !artifacts_ready() {
+        return Ok(());
+    }
+    let run = |name: &str| -> Result<f64> {
+        let cfg = micro_cfg(name, 12);
+        let out = cfg.out_dir.clone();
+        let r = Trainer::new(cfg)?.run()?;
+        std::fs::remove_dir_all(out).ok();
+        Ok(r.summary.final_train_loss)
+    };
+    let a = run("itest_det_a")?;
+    let b = run("itest_det_b")?;
+    assert_eq!(a, b, "same seed must give identical runs");
+    Ok(())
+}
+
+#[test]
+fn trace_tracking_reports_gap_ge_one() -> Result<()> {
+    if !artifacts_ready() {
+        return Ok(());
+    }
+    let mut cfg = micro_cfg("itest_traces", 10);
+    cfg.track_traces = true;
+    cfg.trace_every = 2;
+    let out = cfg.out_dir.clone();
+    let result = Trainer::new(cfg)?.run()?;
+    let tr = result.trace_report.expect("trace report present");
+    assert!(tr.ratio >= 1.0 - 1e-6, "ratio {} < 1", tr.ratio);
+    assert!(tr.trace_h.is_finite() && tr.trace_h > 0.0);
+    std::fs::remove_dir_all(out).ok();
+    Ok(())
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_state() -> Result<()> {
+    if !artifacts_ready() {
+        return Ok(());
+    }
+    let dir = extensor::runtime::default_artifact_dir();
+    let client = Client::cpu()?;
+    let engine = Engine::load(&client, &dir, "lm_micro_et2")?;
+    let mut state = engine.init_state(3)?;
+    let tokens: Vec<i32> = (0..32).map(|i| 1 + (i * 7 % 60) as i32).collect();
+    for _ in 0..3 {
+        engine.train_step_tokens(&mut state, &tokens, 0.05)?;
+    }
+    let path = std::env::temp_dir().join(format!("etck-{}.ck", std::process::id()));
+    checkpoint::save(&engine, &state, &path)?;
+    let restored = checkpoint::load(&engine, &path)?;
+    assert_eq!(restored.step, state.step);
+
+    // One more identical step from both must produce identical losses.
+    let mut a = state;
+    let mut b = restored;
+    let la = engine.train_step_tokens(&mut a, &tokens, 0.05)?.loss;
+    let lb = engine.train_step_tokens(&mut b, &tokens, 0.05)?.loss;
+    assert_eq!(la, lb, "checkpoint round-trip diverged");
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}
+
+#[test]
+fn checkpoint_rejects_wrong_model() -> Result<()> {
+    if !artifacts_ready() {
+        return Ok(());
+    }
+    let dir = extensor::runtime::default_artifact_dir();
+    let client = Client::cpu()?;
+    let et2 = Engine::load(&client, &dir, "lm_micro_et2")?;
+    // ET1 has a different opt-state layout than ET2 (one accumulator per
+    // natural axis vs per split factor) -> load must fail loudly.
+    // (ET2 vs ET3 coincide at micro scale: all factors are already <= 10.)
+    let et1 = Engine::load(&client, &dir, "lm_micro_et1")?;
+    let state = et2.init_state(1)?;
+    let path = std::env::temp_dir().join(format!("etck-x-{}.ck", std::process::id()));
+    checkpoint::save(&et2, &state, &path)?;
+    assert!(checkpoint::load(&et1, &path).is_err());
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}
+
+#[test]
+fn vision_loop_learns() -> Result<()> {
+    if !artifacts_ready() {
+        return Ok(());
+    }
+    if !extensor::runtime::default_artifact_dir().join("cnn_et2.json").exists() {
+        eprintln!("skip: cnn artifacts not built");
+        return Ok(());
+    }
+    let client = Client::cpu()?;
+    let data_cfg = extensor::vision::VisionConfig {
+        classes: 10,
+        train: 640,
+        test: 128,
+        blobs: 5,
+        noise: 0.3,
+        mix_max: 0.0,
+        seed: 5,
+    };
+    let mut t = extensor::train::vision::VisionTrainer::new(
+        &client,
+        &extensor::runtime::default_artifact_dir(),
+        "et2",
+        &data_cfg,
+    )?;
+    let run = t.run(40, 0.05, 20, 11)?;
+    assert!(run.final_train_loss.is_finite());
+    // 10 classes, chance error 0.9; a short run should already beat it
+    assert!(
+        run.best_test_error < 0.82,
+        "vision model failed to learn: err {}",
+        run.best_test_error
+    );
+    Ok(())
+}
