@@ -3,7 +3,7 @@
 //! equivalent of the paper's "optimizer overhead" concern — ET's update
 //! must stay bandwidth-bound and within a small factor of SGD.
 
-use extensor::optim::{self, GroupSpec, Hyper};
+use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
 use extensor::tensoring::OptimizerKind;
 use extensor::testing::bench::{bench, header};
 use extensor::util::rng::Pcg64;

@@ -1,0 +1,65 @@
+//! Sharded optimizer-engine throughput: one full `step_all` over
+//! transformer-shaped groups, per optimizer kind and shard count, against
+//! the single-threaded suite as baseline. The paper's tiny-state result is
+//! exactly what makes this shard cleanly — no preconditioner entry ever
+//! crosses a shard boundary, so scaling is bounded by memory bandwidth and
+//! the fan-out barrier, not by state movement.
+
+use extensor::optim::{self, Hyper, Optimizer};
+use extensor::shard::ShardedOptimizer;
+use extensor::tensoring::OptimizerKind;
+use extensor::testing::bench::{bench, header};
+use extensor::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // Same model shapes as `ettrain experiment sharding`, by construction.
+    let gs = extensor::testing::transformer_groups(4, 2000, 512, 2048);
+    let total: usize = gs.iter().map(|g| g.numel()).sum();
+    let mut rng = Pcg64::seeded(2);
+    let grads: Vec<Vec<f32>> = gs
+        .iter()
+        .map(|g| {
+            let mut v = vec![0.0f32; g.numel()];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+
+    header(&format!("sharded_step — one full step over {total} parameters"));
+    let hyper = Hyper::default();
+    for kind in [
+        OptimizerKind::AdaGrad,
+        OptimizerKind::Et(1),
+        OptimizerKind::Et(3),
+        OptimizerKind::EtInf,
+    ] {
+        let mut params: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+        let mut baseline = optim::build(kind, &gs, &hyper);
+        let r = bench(&format!("single/{}", kind.name()), 2, 12, || {
+            baseline.next_step();
+            for (gi, (p, g)) in params.iter_mut().zip(&grads).enumerate() {
+                baseline.step(gi, p, g, 1e-4).unwrap();
+            }
+        });
+        r.report_with_rate(total as f64, "elem/s");
+
+        for shards in [1usize, 2, 4, 8] {
+            let mut params: Vec<Vec<f32>> =
+                gs.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+            let mut opt = ShardedOptimizer::new(kind, &gs, &hyper, shards)?;
+            let peak = opt.peak_state_scalars();
+            let r = bench(&format!("shard{shards}x/{}", kind.name()), 2, 12, || {
+                opt.next_step();
+                opt.step_all(&mut params, &grads, 1e-4).unwrap();
+            });
+            r.report_with_rate(total as f64, "elem/s");
+            println!(
+                "{:<40} {:>12} peak opt scalars on one shard",
+                format!("  ({} shards, state)", shards),
+                peak
+            );
+        }
+    }
+    println!("\n(peak per-shard state + scaling tables: `ettrain experiment sharding`)");
+    Ok(())
+}

@@ -5,12 +5,15 @@
 
 use crate::convex::{ConvexConfig, ConvexDataset, SoftmaxRegression};
 use crate::coordinator::report::{fmt_mem, fmt_ppl, save_json, Table};
-use crate::optim::{self, GroupSpec, Hyper, Schedule};
+use crate::optim::{self, GroupSpec, Hyper, Optimizer, Schedule};
 use crate::runtime::Client;
+use crate::shard::ShardedOptimizer;
 use crate::tensoring::{MemoryReport, OptimizerKind};
 use crate::train::vision::VisionTrainer;
 use crate::train::{RunConfig, Trainer};
 use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Timer;
 use crate::vision::VisionConfig;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -27,6 +30,9 @@ pub struct ExpOptions {
     /// runs (the paper tunes c per optimizer; this is the scaled-down
     /// version). When off, hand-tuned defaults are used.
     pub tune: bool,
+    /// Max worker-shard count for the sharded-engine scaling experiment
+    /// (the sweep covers powers of two up to this value).
+    pub shards: usize,
 }
 
 impl Default for ExpOptions {
@@ -38,6 +44,7 @@ impl Default for ExpOptions {
             seed: 42,
             csv: false,
             tune: false,
+            shards: 8,
         }
     }
 }
@@ -93,6 +100,7 @@ fn lm_run(
         max_seconds,
         track_traces,
         trace_every: (nominal / 32).max(1),
+        ..RunConfig::default()
     };
     Trainer::new(cfg)?.run()
 }
@@ -419,6 +427,96 @@ pub fn table4(opts: &ExpOptions) -> Result<()> {
     if opts.csv {
         fig4.write_csv(opts.out_dir.join("figure4.csv"))?;
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Sharded-engine scaling — steps/sec + peak optimizer bytes vs shard count
+// ---------------------------------------------------------------------------
+
+/// The shard-scaling experiment: the paper's memory result turned into a
+/// throughput result. Pure rust, no artifacts needed — transformer-shaped
+/// groups, one full optimizer step per iteration through
+/// [`ShardedOptimizer`], sweeping shard count (powers of two up to
+/// `opts.shards`) x ET level. Reports steps/sec and the *peak per-shard*
+/// optimizer footprint in bytes; one table + CSV per shard count through
+/// the standard report pipeline (the `shards` context column), plus a
+/// combined `sharding.json`.
+pub fn sharding(opts: &ExpOptions) -> Result<()> {
+    let groups = crate::testing::transformer_groups(4, 2000, 512, 2048);
+    let total: usize = groups.iter().map(|g| g.numel()).sum();
+    let kinds = [OptimizerKind::Et(1), OptimizerKind::Et(3), OptimizerKind::EtInf];
+    let mut shard_counts = vec![1usize];
+    while shard_counts.last().unwrap() * 2 <= opts.shards.max(1) {
+        let next = shard_counts.last().unwrap() * 2;
+        shard_counts.push(next);
+    }
+    let iters = (opts.steps as usize).clamp(5, 30);
+    crate::info!(
+        "[sharding] {} params in {} groups, {} timed steps per config",
+        total,
+        groups.len(),
+        iters
+    );
+
+    let mut rng = Pcg64::seeded(opts.seed);
+    let grads: Vec<Vec<f32>> = groups
+        .iter()
+        .map(|g| {
+            let mut v = vec![0.0f32; g.numel()];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let base_params: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+
+    let hyper = Hyper::default();
+    let mut results = Vec::new();
+    for &shards in &shard_counts {
+        let mut table = Table::new(
+            &format!("Sharded optimizer engine — {} params/step", fmt_mem(total)),
+            &["Optimizer", "steps/sec", "Melem/s", "peak opt bytes/shard", "opt scalars"],
+        );
+        table.set_shards(shards);
+        for &kind in &kinds {
+            let mut opt = ShardedOptimizer::new(kind, &groups, &hyper, shards)?;
+            let mut params = base_params.clone();
+            for _ in 0..2 {
+                opt.next_step();
+                opt.step_all(&mut params, &grads, 1e-3)?;
+            }
+            let timer = Timer::start();
+            for _ in 0..iters {
+                opt.next_step();
+                opt.step_all(&mut params, &grads, 1e-3)?;
+            }
+            let secs = timer.elapsed_secs();
+            let steps_per_sec = iters as f64 / secs.max(1e-12);
+            let peak_bytes = opt.peak_state_scalars() * 4;
+            table.row(vec![
+                kind.name(),
+                format!("{steps_per_sec:.2}"),
+                format!("{:.1}", steps_per_sec * total as f64 / 1e6),
+                fmt_mem(peak_bytes),
+                fmt_mem(opt.state_scalars()),
+            ]);
+            results.push(Json::obj(vec![
+                ("optimizer", Json::str(kind.name())),
+                ("shards", Json::num(shards as f64)),
+                ("steps_per_sec", Json::num(steps_per_sec)),
+                ("peak_opt_bytes_per_shard", Json::num(peak_bytes as f64)),
+                ("total_opt_scalars", Json::num(opt.state_scalars() as f64)),
+                ("work_imbalance", Json::num(opt.plan().work_imbalance())),
+            ]));
+        }
+        println!("{}", table.render());
+        if opts.csv {
+            let p = opts.out_dir.join(format!("sharding_s{shards}.csv"));
+            table.write_csv(&p)?;
+            println!("wrote {}", p.display());
+        }
+    }
+    save_json(opts.out_dir.join("sharding.json"), &Json::Arr(results))?;
     Ok(())
 }
 

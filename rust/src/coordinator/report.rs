@@ -10,6 +10,11 @@ pub struct Table {
     pub title: String,
     pub headers: Vec<String>,
     pub rows: Vec<Vec<String>>,
+    /// Shard-count context: when set, `render` and `write_csv` append a
+    /// trailing `shards` column carrying this value on every row, so any
+    /// experiment run under the sharded engine lands in the same report
+    /// pipeline (and CSV schema) as the paper tables.
+    shards: Option<usize>,
 }
 
 impl Table {
@@ -18,7 +23,13 @@ impl Table {
             title: title.to_string(),
             headers: headers.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            shards: None,
         }
+    }
+
+    /// Record the shard count this table's rows were produced under.
+    pub fn set_shards(&mut self, n: usize) {
+        self.shards = Some(n);
     }
 
     pub fn row(&mut self, cells: Vec<String>) {
@@ -26,9 +37,31 @@ impl Table {
         self.rows.push(cells);
     }
 
+    /// Headers + rows with the shards context column applied (if any).
+    fn effective(&self) -> (Vec<String>, Vec<Vec<String>>) {
+        match self.shards {
+            None => (self.headers.clone(), self.rows.clone()),
+            Some(n) => {
+                let mut headers = self.headers.clone();
+                headers.push("shards".to_string());
+                let rows = self
+                    .rows
+                    .iter()
+                    .map(|r| {
+                        let mut r = r.clone();
+                        r.push(n.to_string());
+                        r
+                    })
+                    .collect();
+                (headers, rows)
+            }
+        }
+    }
+
     pub fn render(&self) -> String {
-        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
-        for row in &self.rows {
+        let (headers, rows) = self.effective();
+        let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+        for row in &rows {
             for (w, c) in widths.iter_mut().zip(row) {
                 *w = (*w).max(c.len());
             }
@@ -43,11 +76,11 @@ impl Table {
                 .collect::<Vec<_>>()
                 .join("  ")
         };
-        out.push_str(&line(&self.headers, &widths));
+        out.push_str(&line(&headers, &widths));
         out.push('\n');
         out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
         out.push('\n');
-        for row in &self.rows {
+        for row in &rows {
             out.push_str(&line(row, &widths));
             out.push('\n');
         }
@@ -59,9 +92,10 @@ impl Table {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
         }
-        let mut s = self.headers.join(",");
+        let (headers, rows) = self.effective();
+        let mut s = headers.join(",");
         s.push('\n');
-        for row in &self.rows {
+        for row in &rows {
             s.push_str(&row.join(","));
             s.push('\n');
         }
@@ -119,6 +153,24 @@ mod tests {
         t.write_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shards_context_column_in_render_and_csv() {
+        let dir = std::env::temp_dir().join(format!("etcsv-sh-{}", std::process::id()));
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["3".into(), "4".into()]);
+        t.set_shards(4);
+        let s = t.render();
+        assert!(s.contains("shards"), "{s}");
+        let p = dir.join("t.csv");
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b,shards\n1,2,4\n3,4,4\n");
+        // the stored rows themselves are untouched
+        assert_eq!(t.rows[0], vec!["1".to_string(), "2".to_string()]);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -16,6 +16,16 @@
 //! Python never runs on the training path: the rust binary loads the AOT
 //! artifacts through PJRT (`runtime`) and owns everything else.
 //!
+//! The optimizer suite also runs *sharded*: `shard` bin-packs parameter
+//! groups across persistent worker threads using the same footprint
+//! accounting the paper's tables report, each worker owning its groups'
+//! complete optimizer state (`shard::ShardedOptimizer`). Determinism
+//! contract: sharded execution is bitwise-identical to the
+//! single-threaded engine at any shard count — a group's update is
+//! computed by exactly one worker with the single-threaded arithmetic,
+//! and the fan-in is a pure ack barrier with no cross-shard math to
+//! reorder (enforced in `rust/tests/sharded_parity.rs`).
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -25,6 +35,7 @@ pub mod data;
 pub mod optim;
 pub mod regret;
 pub mod runtime;
+pub mod shard;
 pub mod tensoring;
 pub mod testing;
 pub mod train;

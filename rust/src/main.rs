@@ -51,8 +51,10 @@ fn print_help() {
 USAGE: ettrain <subcommand> [options]
 
   train <config.toml> [--set k=v ...]   run a training job
+        (run.shards + run.host_optimizer train host-side via the sharded engine)
   experiment <id> [--steps N] [--csv]   regenerate a paper table/figure
-        ids: table1 fig1 table2 fig2 fig3 table4 fig4 ablation all
+        ids: table1 fig1 table2 fig2 fig3 table4 fig4 sharding ablation all
+        (sharding sweeps the worker-shard engine; --shards caps the sweep)
   plan-index --preset resnet18|transformer
   memory-report [--layers N] [--vocab V] [--d-model D] [--d-ff F]
   list-artifacts [--dir artifacts]
@@ -104,6 +106,7 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
         seed: args.get_u64("seed")?,
         csv: args.flag("csv"),
         tune: args.flag("tune"),
+        shards: args.get_usize("shards")?.max(1),
     })
 }
 
@@ -116,12 +119,15 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
             ("seed", Some("42"), "experiment seed"),
             ("artifact-dir", Some("artifacts"), "AOT artifact directory"),
             ("out-dir", Some("results"), "output directory"),
+            ("shards", Some("8"), "max worker-shard count for the sharding sweep"),
         ],
         flags: vec![
             ("csv", "also write figure CSV series"),
             ("tune", "grid-search the global LR scale with probe runs"),
         ],
-        positional: vec![("id", "table1|fig1|table2|fig2|fig3|table4|fig4|ablation|all")],
+        positional: vec![
+            ("id", "table1|fig1|table2|fig2|fig3|table4|fig4|sharding|ablation|all"),
+        ],
     };
     let args = Args::parse(&spec, argv)?;
     let id = args.positional.first().context("missing experiment id")?.as_str();
@@ -134,6 +140,7 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
         "table2" => experiments::table2(&opts),
         "fig2" => experiments::fig2(&opts),
         "fig3" => experiments::fig3(&opts),
+        "sharding" => experiments::sharding(&opts),
         "table4" | "fig4" => {
             opts.csv |= id == "fig4";
             experiments::table4(&opts)
@@ -148,6 +155,7 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
             experiments::fig2(&opts)?;
             experiments::fig3(&opts)?;
             experiments::table4(&opts)?;
+            experiments::sharding(&opts)?;
             extensor::coordinator::ablation::run(&opts.out_dir, opts.steps as usize, opts.seed)
         }
         other => bail!("unknown experiment '{other}'"),

@@ -7,9 +7,11 @@
 //! 1. the native engine for the convex experiments (§5.4 / Figure 3) and
 //!    the regret measurements (Figure 2), which run entirely in rust;
 //! 2. the *oracle* that cross-checks the JAX/Pallas train-step artifacts in
-//!    integration tests (same inputs → same update, см `rust/tests/`);
+//!    integration tests (same inputs → same update, see `rust/tests/`);
 //! 3. the hot path for host-side training in `examples/` when no PJRT
-//!    artifact is involved.
+//!    artifact is involved — optionally parallelized across persistent
+//!    worker threads by [`crate::shard::ShardedOptimizer`], which
+//!    implements the same [`Optimizer`] trait.
 //!
 //! All optimizers share the [`Optimizer`] trait: state is created from the
 //! model's parameter-group specs, and `step` is called per group with the

@@ -1,0 +1,126 @@
+//! Gradient bucketing: fuse many small parameter groups into one dispatch
+//! unit.
+//!
+//! Transformer-shaped models are dominated by a few huge matrices plus a
+//! long tail of biases and layer norms. Dispatching each tail group to a
+//! worker individually would pay one channel round-trip per ~512-element
+//! slice — more synchronization than arithmetic. A [`Bucket`] groups
+//! consecutive shard-local groups until a minimum element count is
+//! reached, so channel overhead is amortized over real work while large
+//! groups still travel alone.
+
+use crate::optim::GroupSpec;
+
+/// A set of groups dispatched to a shard worker as one message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    /// Global group indices, in the owning shard's ascending order.
+    pub groups: Vec<usize>,
+    /// Total gradient elements across the bucket.
+    pub numel: usize,
+}
+
+/// Default fuse threshold: a bucket keeps absorbing groups until it holds
+/// at least this many gradient elements (16Ki floats = 64KiB of gradient,
+/// far above per-message channel cost).
+pub const DEFAULT_MIN_BUCKET_NUMEL: usize = 1 << 14;
+
+/// Split a shard's owned group list (`order`, ascending global indices)
+/// into buckets of at least `min_numel` elements. The final undersized
+/// remainder is folded into the previous bucket so tiny tails never pay a
+/// full dispatch. Order within and across buckets preserves `order`.
+pub fn bucketize(order: &[usize], groups: &[GroupSpec], min_numel: usize) -> Vec<Bucket> {
+    let mut out: Vec<Bucket> = Vec::new();
+    let mut cur = Bucket { groups: Vec::new(), numel: 0 };
+    for &gi in order {
+        cur.groups.push(gi);
+        cur.numel += groups[gi].numel();
+        if cur.numel >= min_numel {
+            out.push(std::mem::replace(&mut cur, Bucket { groups: Vec::new(), numel: 0 }));
+        }
+    }
+    if !cur.groups.is_empty() {
+        match out.last_mut() {
+            Some(last) => {
+                last.groups.extend(cur.groups);
+                last.numel += cur.numel;
+            }
+            None => out.push(cur),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn groups() -> Vec<GroupSpec> {
+        vec![
+            GroupSpec::new("w1", &[100, 100]), // 10_000
+            GroupSpec::new("b1", &[100]),
+            GroupSpec::new("b2", &[100]),
+            GroupSpec::new("b3", &[100]),
+            GroupSpec::new("w2", &[200, 100]), // 20_000
+            GroupSpec::new("b4", &[50]),
+        ]
+    }
+
+    fn flat(buckets: &[Bucket]) -> Vec<usize> {
+        buckets.iter().flat_map(|b| b.groups.iter().copied()).collect()
+    }
+
+    #[test]
+    fn covers_all_groups_in_order() {
+        let gs = groups();
+        let order: Vec<usize> = (0..gs.len()).collect();
+        let buckets = bucketize(&order, &gs, 1 << 14);
+        assert_eq!(flat(&buckets), order);
+        let total: usize = buckets.iter().map(|b| b.numel).sum();
+        assert_eq!(total, gs.iter().map(|g| g.numel()).sum::<usize>());
+    }
+
+    #[test]
+    fn small_groups_fuse() {
+        let gs = groups();
+        // Only the biases, in shard order.
+        let order = [1usize, 2, 3, 5];
+        let buckets = bucketize(&order, &gs, 1000);
+        assert_eq!(buckets.len(), 1, "{buckets:?}");
+        assert_eq!(buckets[0].numel, 350);
+    }
+
+    #[test]
+    fn big_groups_travel_alone() {
+        let gs = groups();
+        let order = [0usize, 4];
+        let buckets = bucketize(&order, &gs, 5000);
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[0].groups, vec![0]);
+        assert_eq!(buckets[1].groups, vec![4]);
+    }
+
+    #[test]
+    fn tail_folds_into_previous_bucket() {
+        let gs = groups();
+        let order = [0usize, 1, 2]; // w1 closes a bucket; b1+b2 are the tail
+        let buckets = bucketize(&order, &gs, 5000);
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].groups, vec![0, 1, 2]);
+        assert_eq!(buckets[0].numel, 10_200);
+    }
+
+    #[test]
+    fn threshold_one_isolates_every_group() {
+        let gs = groups();
+        let order: Vec<usize> = (0..gs.len()).collect();
+        let buckets = bucketize(&order, &gs, 1);
+        assert_eq!(buckets.len(), gs.len());
+    }
+
+    #[test]
+    fn empty_order_yields_no_buckets() {
+        let gs = groups();
+        assert!(bucketize(&[], &gs, 1024).is_empty());
+    }
+}

@@ -1,0 +1,394 @@
+//! The sharded optimizer engine: fan-out/fan-in over persistent workers.
+//!
+//! [`ShardedOptimizer`] implements the ordinary [`Optimizer`] trait, so it
+//! drops into every call site the single-threaded suite serves, and adds
+//! [`ShardedOptimizer::step_all`] — the hot path that updates *all* groups
+//! in one fan-out. Work travels as [`Bucket`]s over bounded channels; the
+//! call returns only after every bucket is acknowledged, which is both the
+//! memory-safety barrier for the raw slice handoff and the reason the
+//! reduction is trivially deterministic: each group is computed by exactly
+//! one worker with exactly the single-threaded per-group arithmetic, and
+//! no cross-shard arithmetic exists to reorder. Sharded results are
+//! therefore bitwise-identical to the single-threaded engine at any shard
+//! count (`rust/tests/sharded_parity.rs` checks every optimizer kind).
+
+use super::bucket::{bucketize, Bucket, DEFAULT_MIN_BUCKET_NUMEL};
+use super::partition::{partition, ShardPlan};
+use super::worker::{run_worker, GroupTask, Reply, Request};
+use crate::optim::{GroupSpec, Hyper, Optimizer};
+use crate::tensoring::OptimizerKind;
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+pub struct ShardedOptimizer {
+    kind: OptimizerKind,
+    plan: ShardPlan,
+    /// Per-shard dispatch units over that shard's owned groups.
+    buckets: Vec<Vec<Bucket>>,
+    /// group index -> (owning shard, index into the shard-local optimizer).
+    local: Vec<(usize, usize)>,
+    group_numels: Vec<usize>,
+    requests: Vec<SyncSender<Request>>,
+    replies: Vec<Receiver<Reply>>,
+    handles: Vec<Option<JoinHandle<()>>>,
+    total_state_scalars: usize,
+}
+
+impl ShardedOptimizer {
+    /// Partition `groups` onto `n_shards` workers with default bucketing
+    /// and no per-shard state budget.
+    pub fn new(
+        kind: OptimizerKind,
+        groups: &[GroupSpec],
+        hyper: &Hyper,
+        n_shards: usize,
+    ) -> Result<ShardedOptimizer> {
+        Self::with_options(kind, groups, hyper, n_shards, None, DEFAULT_MIN_BUCKET_NUMEL)
+    }
+
+    /// Full-control constructor: optional per-shard optimizer-state budget
+    /// (scalars) and the bucket fuse threshold (elements).
+    pub fn with_options(
+        kind: OptimizerKind,
+        groups: &[GroupSpec],
+        hyper: &Hyper,
+        n_shards: usize,
+        max_state_per_shard: Option<usize>,
+        min_bucket_numel: usize,
+    ) -> Result<ShardedOptimizer> {
+        let plan = partition(kind, groups, n_shards, max_state_per_shard)?;
+        let mut local = vec![(0usize, 0usize); groups.len()];
+        for (s, owned) in plan.shards.iter().enumerate() {
+            for (li, &gi) in owned.iter().enumerate() {
+                local[gi] = (s, li);
+            }
+        }
+        let buckets: Vec<Vec<Bucket>> = plan
+            .shards
+            .iter()
+            .map(|owned| bucketize(owned, groups, min_bucket_numel.max(1)))
+            .collect();
+
+        let mut requests = Vec::with_capacity(n_shards);
+        let mut replies = Vec::with_capacity(n_shards);
+        let mut handles = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            // Channel capacity covers a full step's buckets plus control
+            // messages, so fan-out never blocks on a slow sibling shard.
+            let cap = buckets[s].len().max(1) + 2;
+            let (req_tx, req_rx) = sync_channel::<Request>(cap);
+            let (rep_tx, rep_rx) = sync_channel::<Reply>(cap);
+            let shard_groups: Vec<GroupSpec> =
+                plan.shards[s].iter().map(|&gi| groups[gi].clone()).collect();
+            let hy = hyper.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("et-shard-{s}"))
+                .spawn(move || run_worker(s, kind, shard_groups, hy, req_rx, rep_tx))
+                .context("spawn shard worker")?;
+            requests.push(req_tx);
+            replies.push(rep_rx);
+            handles.push(Some(handle));
+        }
+
+        let mut engine = ShardedOptimizer {
+            kind,
+            plan,
+            buckets,
+            local,
+            group_numels: groups.iter().map(|g| g.numel()).collect(),
+            requests,
+            replies,
+            handles,
+            total_state_scalars: 0,
+        };
+        // Deterministic startup reduction: query workers in shard order.
+        let mut total = 0usize;
+        for s in 0..n_shards {
+            engine.requests[s]
+                .send(Request::StateScalars)
+                .map_err(|_| anyhow::anyhow!("shard {s}: worker unavailable at startup"))?;
+            match engine.replies[s].recv() {
+                Ok(Reply::StateScalars(n)) => total += n,
+                _ => bail!("shard {s}: worker failed at startup"),
+            }
+        }
+        engine.total_state_scalars = total;
+        Ok(engine)
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.plan.n_shards()
+    }
+
+    /// Largest optimizer state held by any single worker, in scalars.
+    pub fn peak_state_scalars(&self) -> usize {
+        self.plan.peak_state_scalars()
+    }
+
+    /// One full optimizer step over every group: fan buckets out to the
+    /// shard workers, then block until each bucket is acknowledged.
+    ///
+    /// The fan-in is a pure ack barrier — each group's update is computed
+    /// entirely by its owning worker — so the result is independent of
+    /// shard completion order and bitwise-equal to the single-threaded
+    /// engine. The barrier is also the safety contract for the raw slice
+    /// handoff (see `shard::worker::GroupTask`): `params`/`grads` stay
+    /// borrowed until every worker is done with them.
+    pub fn step_all(
+        &mut self,
+        params: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> Result<()> {
+        let n = self.group_numels.len();
+        anyhow::ensure!(
+            params.len() == n && grads.len() == n,
+            "step_all: expected {n} groups, got {} params / {} grads",
+            params.len(),
+            grads.len()
+        );
+        for gi in 0..n {
+            anyhow::ensure!(
+                params[gi].len() == self.group_numels[gi]
+                    && grads[gi].len() == self.group_numels[gi],
+                "step_all: group {gi} buffer length mismatch"
+            );
+        }
+        // Derive every slice pointer up front — one reborrow per group —
+        // and do not touch `params`/`grads` again until all acks are in.
+        let xs: Vec<(*mut f32, usize)> =
+            params.iter_mut().map(|p| (p.as_mut_ptr(), p.len())).collect();
+        let gs: Vec<(*const f32, usize)> =
+            grads.iter().map(|g| (g.as_ptr(), g.len())).collect();
+        let n_shards = self.n_shards();
+        let mut pending = vec![0usize; n_shards];
+        let mut errs: Vec<String> = Vec::new();
+        for s in 0..n_shards {
+            for bucket in &self.buckets[s] {
+                let mut tasks = Vec::with_capacity(bucket.groups.len());
+                for &gi in &bucket.groups {
+                    let (_, li) = self.local[gi];
+                    let (x, x_len) = xs[gi];
+                    let (g, g_len) = gs[gi];
+                    tasks.push(GroupTask { local_gi: li, x, x_len, g, g_len });
+                }
+                if self.requests[s].send(Request::Step { lr, tasks }).is_err() {
+                    errs.push(format!("shard {s}: worker channel closed"));
+                    break;
+                }
+                pending[s] += 1;
+            }
+        }
+        // Fan-in: drain *every* dispatched ack before returning, even on
+        // error — returning early would let borrowed pointers outlive the
+        // call while workers still hold them.
+        for s in 0..n_shards {
+            for _ in 0..pending[s] {
+                match self.replies[s].recv() {
+                    Ok(Reply::StepDone(Ok(()))) => {}
+                    Ok(Reply::StepDone(Err(e))) => errs.push(e),
+                    Ok(Reply::StateScalars(_)) => {
+                        errs.push(format!("shard {s}: protocol error"))
+                    }
+                    Err(_) => {
+                        errs.push(format!("shard {s}: worker died mid-step"));
+                        break;
+                    }
+                }
+            }
+        }
+        if !errs.is_empty() {
+            bail!("sharded step failed: {}", errs.join("; "));
+        }
+        Ok(())
+    }
+}
+
+impl Optimizer for ShardedOptimizer {
+    /// Single-group step, routed synchronously to the owning worker. This
+    /// is the trait-compat path (drivers that update groups one at a
+    /// time); the throughput path is [`ShardedOptimizer::step_all`].
+    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        anyhow::ensure!(gi < self.group_numels.len(), "no group {gi}");
+        anyhow::ensure!(
+            x.len() == self.group_numels[gi] && g.len() == self.group_numels[gi],
+            "group {gi}: buffer length mismatch"
+        );
+        let (s, li) = self.local[gi];
+        let task = GroupTask {
+            local_gi: li,
+            x: x.as_mut_ptr(),
+            x_len: x.len(),
+            g: g.as_ptr(),
+            g_len: g.len(),
+        };
+        if self.requests[s].send(Request::Step { lr, tasks: vec![task] }).is_err() {
+            bail!("shard {s}: worker channel closed");
+        }
+        match self.replies[s].recv() {
+            Ok(Reply::StepDone(Ok(()))) => Ok(()),
+            Ok(Reply::StepDone(Err(e))) => bail!("{e}"),
+            _ => bail!("shard {s}: worker died mid-step"),
+        }
+    }
+
+    fn state_scalars(&self) -> usize {
+        self.total_state_scalars
+    }
+
+    fn kind(&self) -> OptimizerKind {
+        self.kind
+    }
+
+    fn name(&self) -> String {
+        format!("{}/{}sh", self.kind.name(), self.n_shards())
+    }
+
+    fn next_step(&mut self) {
+        // Ordered before any later Step by each worker's request channel;
+        // no ack needed.
+        for tx in &self.requests {
+            let _ = tx.send(Request::NextStep);
+        }
+    }
+}
+
+impl Drop for ShardedOptimizer {
+    fn drop(&mut self) {
+        for tx in &self.requests {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for h in self.handles.iter_mut() {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim;
+    use crate::util::rng::Pcg64;
+
+    fn groups() -> Vec<GroupSpec> {
+        vec![
+            GroupSpec::new("w", &[16, 32]),
+            GroupSpec::new("b", &[32]),
+            GroupSpec::new("v", &[8, 4, 3, 3]),
+            GroupSpec::new("ln", &[16]),
+        ]
+    }
+
+    fn grads(gs: &[GroupSpec], seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seeded(seed);
+        gs.iter()
+            .map(|g| {
+                let mut v = vec![0.0f32; g.numel()];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn step_all_matches_single_threaded() {
+        let gs = groups();
+        let gr = grads(&gs, 3);
+        let hyper = Hyper::default();
+
+        let mut single = optim::build(OptimizerKind::Et(2), &gs, &hyper);
+        let mut want: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.3f32; g.numel()]).collect();
+        for _ in 0..4 {
+            single.next_step();
+            for (gi, (p, g)) in want.iter_mut().zip(&gr).enumerate() {
+                single.step(gi, p, g, 0.1).unwrap();
+            }
+        }
+
+        let mut sharded = ShardedOptimizer::new(OptimizerKind::Et(2), &gs, &hyper, 2).unwrap();
+        let mut got: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.3f32; g.numel()]).collect();
+        for _ in 0..4 {
+            sharded.next_step();
+            sharded.step_all(&mut got, &gr, 0.1).unwrap();
+        }
+        assert_eq!(want, got);
+        assert_eq!(sharded.state_scalars(), single.state_scalars());
+    }
+
+    #[test]
+    fn trait_step_routes_to_owner() {
+        let gs = groups();
+        let gr = grads(&gs, 5);
+        let hyper = Hyper::default();
+        let mut single = optim::build(OptimizerKind::AdaGrad, &gs, &hyper);
+        let mut sharded =
+            ShardedOptimizer::new(OptimizerKind::AdaGrad, &gs, &hyper, 3).unwrap();
+        for gi in 0..gs.len() {
+            let mut a = vec![0.5f32; gs[gi].numel()];
+            let mut b = a.clone();
+            single.step(gi, &mut a, &gr[gi], 0.2).unwrap();
+            sharded.step(gi, &mut b, &gr[gi], 0.2).unwrap();
+            assert_eq!(a, b, "group {gi}");
+        }
+    }
+
+    #[test]
+    fn more_shards_than_groups_still_correct() {
+        let gs = groups();
+        let gr = grads(&gs, 7);
+        let hyper = Hyper::default();
+        let mut single = optim::build(OptimizerKind::EtInf, &gs, &hyper);
+        let mut want: Vec<Vec<f32>> = gs.iter().map(|g| vec![1.0f32; g.numel()]).collect();
+        for (gi, (p, g)) in want.iter_mut().zip(&gr).enumerate() {
+            single.step(gi, p, g, 0.5).unwrap();
+        }
+        let mut sharded = ShardedOptimizer::new(OptimizerKind::EtInf, &gs, &hyper, 9).unwrap();
+        let mut got: Vec<Vec<f32>> = gs.iter().map(|g| vec![1.0f32; g.numel()]).collect();
+        sharded.step_all(&mut got, &gr, 0.5).unwrap();
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn rejects_wrong_buffer_shapes() {
+        let gs = groups();
+        let hyper = Hyper::default();
+        let mut sharded = ShardedOptimizer::new(OptimizerKind::Sgd, &gs, &hyper, 2).unwrap();
+        let mut params: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.0f32; g.numel()]).collect();
+        let bad: Vec<Vec<f32>> = gs.iter().map(|_| vec![0.0f32; 3]).collect();
+        assert!(sharded.step_all(&mut params, &bad, 0.1).is_err());
+        let short = vec![vec![0.0f32; 4]];
+        assert!(sharded.step_all(&mut params, &short, 0.1).is_err());
+    }
+
+    #[test]
+    fn coarse_and_fine_bucketing_agree() {
+        let gs = groups();
+        let gr = grads(&gs, 11);
+        let hyper = Hyper::default();
+        let run = |min_bucket: usize| -> Vec<Vec<f32>> {
+            let mut opt = ShardedOptimizer::with_options(
+                OptimizerKind::Adam,
+                &gs,
+                &hyper,
+                2,
+                None,
+                min_bucket,
+            )
+            .unwrap();
+            let mut p: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.2f32; g.numel()]).collect();
+            for _ in 0..3 {
+                opt.next_step();
+                opt.step_all(&mut p, &gr, 0.05).unwrap();
+            }
+            p
+        };
+        assert_eq!(run(1), run(usize::MAX));
+    }
+}

@@ -1,0 +1,35 @@
+//! Sharded optimizer-state engine: parallel extreme tensoring across
+//! worker shards.
+//!
+//! The paper shrinks AdaGrad's preconditioner from `d` scalars to
+//! `sum_i d_i`; this subsystem turns that memory result into a throughput
+//! result. Because a group's entire slice-accumulator state is tiny, it
+//! can live wholly on one worker thread — sharding the optimizer is a
+//! *partition of groups*, with zero preconditioner communication:
+//!
+//! * [`partition`] — memory-budget-aware bin-packing of parameter groups
+//!   onto N shards, costed by the paper's own footprint accounting
+//!   ([`crate::tensoring::memory`]), so ET's asymmetric state drives
+//!   placement rather than numel alone;
+//! * [`bucketize`] — fuses small groups (biases, layer norms) into one
+//!   dispatch unit to amortize channel overhead;
+//! * [`ShardedOptimizer`] — persistent `std::thread` workers, each owning
+//!   shard-local state for any `OptimizerKind`, driven by fan-out/fan-in
+//!   over bounded channels.
+//!
+//! **Determinism contract:** sharded execution is bitwise-identical to
+//! the single-threaded optimizer at any shard count. Each group's update
+//! is computed by exactly one worker running exactly the single-threaded
+//! per-group arithmetic, and the fan-in is a pure ack barrier — there is
+//! no cross-shard arithmetic whose order could differ.
+//! `rust/tests/sharded_parity.rs` enforces this for every optimizer kind
+//! at 1, 2, and 4 shards.
+
+pub mod bucket;
+pub mod executor;
+pub mod partition;
+pub mod worker;
+
+pub use bucket::{bucketize, Bucket, DEFAULT_MIN_BUCKET_NUMEL};
+pub use executor::ShardedOptimizer;
+pub use partition::{group_cost, partition, GroupCost, ShardPlan};

@@ -1,0 +1,252 @@
+//! Memory-budget-aware partitioning of parameter groups onto shards.
+//!
+//! The paper's result is what makes sharding clean: extreme-tensored
+//! preconditioner state is so small that a shard can own each of its
+//! groups' *complete* slice accumulators and never communicate a
+//! preconditioner entry. What still needs balancing is (a) per-step
+//! *work*, which scales with the gradient elements a shard touches, and
+//! (b) the optimizer-state *footprint*, which for the dense baselines
+//! (AdaGrad, Adam) rivals the parameters themselves. Both costs come from
+//! the existing accounting in [`crate::tensoring::memory`], so ET's
+//! asymmetric profile (huge groups, near-zero state) drives placement —
+//! not numel alone.
+//!
+//! The packer is greedy LPT (longest processing time first) with
+//! deterministic tie-breaking, optionally constrained by a per-shard
+//! optimizer-state budget in scalars.
+
+use crate::optim::GroupSpec;
+use crate::tensoring::memory::group_state_scalars;
+use crate::tensoring::OptimizerKind;
+use anyhow::{bail, Result};
+
+/// Placement cost of one parameter group under a given optimizer.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupCost {
+    /// Optimizer-state scalars the owning shard must hold for this group.
+    pub state_scalars: usize,
+    /// Per-step work units: gradient elements read + parameters written.
+    pub work: usize,
+}
+
+impl GroupCost {
+    /// Combined load used for balance decisions.
+    pub fn load(&self) -> usize {
+        self.work + self.state_scalars
+    }
+}
+
+/// Cost of `group` under `kind`, from the paper's memory model.
+pub fn group_cost(kind: OptimizerKind, group: &GroupSpec) -> GroupCost {
+    GroupCost {
+        state_scalars: group_state_scalars(kind, &group.shape),
+        work: group.numel(),
+    }
+}
+
+/// The result of partitioning: which shard owns which groups.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub kind: OptimizerKind,
+    /// group index -> owning shard.
+    pub owner: Vec<usize>,
+    /// shard -> owned group indices, ascending.
+    pub shards: Vec<Vec<usize>>,
+    /// Per-shard optimizer-state scalars.
+    pub state_scalars: Vec<usize>,
+    /// Per-shard work units.
+    pub work: Vec<usize>,
+}
+
+impl ShardPlan {
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Largest per-shard optimizer state, in scalars — the quantity the
+    /// scaling experiment reports (x4 for bytes).
+    pub fn peak_state_scalars(&self) -> usize {
+        self.state_scalars.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn total_state_scalars(&self) -> usize {
+        self.state_scalars.iter().sum()
+    }
+
+    /// Max/mean work ratio across shards (1.0 = perfectly balanced).
+    pub fn work_imbalance(&self) -> f64 {
+        let max = self.work.iter().copied().max().unwrap_or(0) as f64;
+        let mean = self.work.iter().sum::<usize>() as f64 / self.n_shards().max(1) as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Bin-pack `groups` onto `n_shards` shards: heaviest group first, each
+/// placed on the least-loaded shard that still fits its optimizer state
+/// under `max_state_per_shard` (when given). Fully deterministic: ties
+/// break toward the lower group index, then the lower shard index.
+pub fn partition(
+    kind: OptimizerKind,
+    groups: &[GroupSpec],
+    n_shards: usize,
+    max_state_per_shard: Option<usize>,
+) -> Result<ShardPlan> {
+    if n_shards == 0 {
+        bail!("partition: n_shards must be >= 1");
+    }
+    if groups.is_empty() {
+        bail!("partition: no parameter groups");
+    }
+    let costs: Vec<GroupCost> = groups.iter().map(|g| group_cost(kind, g)).collect();
+    let mut order: Vec<usize> = (0..groups.len()).collect();
+    order.sort_by(|&a, &b| costs[b].load().cmp(&costs[a].load()).then(a.cmp(&b)));
+
+    let mut owner = vec![0usize; groups.len()];
+    let mut state = vec![0usize; n_shards];
+    let mut work = vec![0usize; n_shards];
+    for &gi in &order {
+        let c = costs[gi];
+        let mut best: Option<usize> = None;
+        for s in 0..n_shards {
+            if let Some(budget) = max_state_per_shard {
+                if state[s] + c.state_scalars > budget {
+                    continue;
+                }
+            }
+            let better = match best {
+                None => true,
+                Some(b) => work[s] + state[s] < work[b] + state[b],
+            };
+            if better {
+                best = Some(s);
+            }
+        }
+        let Some(s) = best else {
+            bail!(
+                "group '{}' needs {} optimizer-state scalars but every shard would \
+                 exceed the per-shard budget of {} (total so far: {:?})",
+                groups[gi].name,
+                c.state_scalars,
+                max_state_per_shard.unwrap_or(0),
+                state
+            );
+        };
+        owner[gi] = s;
+        state[s] += c.state_scalars;
+        work[s] += c.work;
+    }
+
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+    for (gi, &s) in owner.iter().enumerate() {
+        shards[s].push(gi);
+    }
+    Ok(ShardPlan { kind, owner, shards, state_scalars: state, work })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn transformer_groups() -> Vec<GroupSpec> {
+        let mut g = vec![GroupSpec::new("embed", &[2000, 512])];
+        for l in 0..2 {
+            g.push(GroupSpec::new(format!("l{l}.w"), &[512, 512]));
+            g.push(GroupSpec::new(format!("l{l}.ln"), &[512]));
+            g.push(GroupSpec::new(format!("l{l}.ff"), &[512, 2048]));
+            g.push(GroupSpec::new(format!("l{l}.ffb"), &[2048]));
+        }
+        g
+    }
+
+    #[test]
+    fn one_shard_owns_everything() {
+        let gs = transformer_groups();
+        let plan = partition(OptimizerKind::Et(2), &gs, 1, None).unwrap();
+        assert_eq!(plan.shards.len(), 1);
+        assert_eq!(plan.shards[0], (0..gs.len()).collect::<Vec<_>>());
+        assert_eq!(plan.work[0], gs.iter().map(|g| g.numel()).sum::<usize>());
+    }
+
+    #[test]
+    fn covers_each_group_exactly_once() {
+        let gs = transformer_groups();
+        for shards in [2usize, 3, 4, 16] {
+            let plan = partition(OptimizerKind::AdaGrad, &gs, shards, None).unwrap();
+            let mut seen = vec![false; gs.len()];
+            for owned in &plan.shards {
+                for &gi in owned {
+                    assert!(!seen[gi], "group {gi} assigned twice");
+                    seen[gi] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+            assert_eq!(plan.owner.len(), gs.len());
+            for (gi, &s) in plan.owner.iter().enumerate() {
+                assert!(plan.shards[s].contains(&gi));
+            }
+        }
+    }
+
+    #[test]
+    fn accounting_matches_memory_model() {
+        let gs = transformer_groups();
+        for kind in [OptimizerKind::Adam, OptimizerKind::Et(3), OptimizerKind::EtInf] {
+            let plan = partition(kind, &gs, 3, None).unwrap();
+            let want: usize = gs.iter().map(|g| group_state_scalars(kind, &g.shape)).sum();
+            assert_eq!(plan.total_state_scalars(), want, "kind {kind:?}");
+            assert!(plan.peak_state_scalars() <= want);
+        }
+    }
+
+    #[test]
+    fn balances_uniform_groups() {
+        let gs: Vec<GroupSpec> =
+            (0..16).map(|i| GroupSpec::new(format!("g{i}"), &[64, 64])).collect();
+        let plan = partition(OptimizerKind::AdaGrad, &gs, 4, None).unwrap();
+        for owned in &plan.shards {
+            assert_eq!(owned.len(), 4);
+        }
+        assert!(plan.work_imbalance() < 1.01, "imbalance {}", plan.work_imbalance());
+    }
+
+    /// The asymmetry the subsystem exists for: under AdaGrad the embed
+    /// group's state forces the budget; under ET3 the same groups fit in a
+    /// tiny budget because state is sum-of-factors, not product.
+    #[test]
+    fn et_state_drives_budget_feasibility() {
+        let gs = transformer_groups();
+        let tight = 10_000; // scalars per shard
+        assert!(partition(OptimizerKind::AdaGrad, &gs, 4, Some(tight)).is_err());
+        let plan = partition(OptimizerKind::Et(3), &gs, 4, Some(tight)).unwrap();
+        assert!(plan.peak_state_scalars() <= tight);
+    }
+
+    #[test]
+    fn deterministic() {
+        let gs = transformer_groups();
+        let a = partition(OptimizerKind::Et(1), &gs, 4, None).unwrap();
+        let b = partition(OptimizerKind::Et(1), &gs, 4, None).unwrap();
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.owner, b.owner);
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        let gs = transformer_groups();
+        assert!(partition(OptimizerKind::Sgd, &gs, 0, None).is_err());
+        assert!(partition(OptimizerKind::Sgd, &[], 2, None).is_err());
+    }
+
+    #[test]
+    fn more_shards_than_groups_leaves_empty_shards() {
+        let gs = vec![GroupSpec::new("a", &[8]), GroupSpec::new("b", &[8])];
+        let plan = partition(OptimizerKind::Sgd, &gs, 5, None).unwrap();
+        let owned: usize = plan.shards.iter().map(|s| s.len()).sum();
+        assert_eq!(owned, 2);
+        assert_eq!(plan.shards.len(), 5);
+    }
+}

@@ -1,0 +1,195 @@
+//! The shard worker: a persistent thread owning one shard's optimizer
+//! state.
+//!
+//! Each worker builds its own `Box<dyn Optimizer>` over exactly the groups
+//! its shard owns, so *all* of a group's optimizer state (slice
+//! accumulators, moments, ...) lives on one thread for the process
+//! lifetime — nothing is ever serialized or migrated. Requests arrive over
+//! a bounded channel; every [`Request::Step`] is acknowledged on the reply
+//! channel, which is what lets the executor hand workers raw slice
+//! pointers safely (see the safety contract on [`GroupTask`]).
+
+use crate::optim::{self, GroupSpec, Hyper, Optimizer};
+use crate::tensoring::OptimizerKind;
+use std::sync::mpsc::{Receiver, SyncSender};
+
+/// One group's update, described by raw slice parts so a persistent worker
+/// can write the caller's buffers in place.
+///
+/// # Safety contract
+///
+/// The executor that creates a `GroupTask` must (1) derive `x`/`g` from
+/// live, correctly-sized buffers, (2) never hand the same group to two
+/// in-flight tasks, and (3) block until the worker acknowledges the step
+/// before letting the underlying borrows end. `ShardedOptimizer::step_all`
+/// upholds all three: groups are partitioned disjointly and the call does
+/// not return until every dispatched bucket is acked.
+pub(crate) struct GroupTask {
+    /// Index into the *worker-local* optimizer's group list.
+    pub local_gi: usize,
+    pub x: *mut f32,
+    pub x_len: usize,
+    pub g: *const f32,
+    pub g_len: usize,
+}
+
+// Raw pointers are not Send by default; the executor's fan-in barrier (see
+// the safety contract above) is what makes shipping them across the
+// channel sound.
+unsafe impl Send for GroupTask {}
+
+pub(crate) enum Request {
+    /// Apply one bucket of group updates at learning rate `lr`.
+    Step { lr: f32, tasks: Vec<GroupTask> },
+    /// Advance the shard optimizer's shared step counter (Adam's `t`,
+    /// ...). Ordered before subsequent `Step`s by the channel; no ack.
+    NextStep,
+    /// Reply with the shard optimizer's allocated state scalars.
+    StateScalars,
+    /// Exit the worker loop.
+    Shutdown,
+}
+
+pub(crate) enum Reply {
+    /// Ack for one `Step` bucket; `Err` carries the failing group's error.
+    StepDone(Result<(), String>),
+    StateScalars(usize),
+}
+
+/// Worker main loop. Runs until `Shutdown` or channel disconnect.
+pub(crate) fn run_worker(
+    shard: usize,
+    kind: OptimizerKind,
+    groups: Vec<GroupSpec>,
+    hyper: Hyper,
+    requests: Receiver<Request>,
+    replies: SyncSender<Reply>,
+) {
+    let mut opt = optim::build(kind, &groups, &hyper);
+    while let Ok(req) = requests.recv() {
+        match req {
+            Request::Step { lr, tasks } => {
+                let mut outcome: Result<(), String> = Ok(());
+                for t in &tasks {
+                    // Sound per the GroupTask contract: the executor keeps
+                    // the source buffers borrowed until our ack arrives,
+                    // and no other task aliases this group.
+                    let x = unsafe { std::slice::from_raw_parts_mut(t.x, t.x_len) };
+                    let g = unsafe { std::slice::from_raw_parts(t.g, t.g_len) };
+                    if let Err(e) = opt.step(t.local_gi, x, g, lr) {
+                        outcome = Err(format!(
+                            "shard {shard}, local group {}: {e:#}",
+                            t.local_gi
+                        ));
+                        break;
+                    }
+                }
+                if replies.send(Reply::StepDone(outcome)).is_err() {
+                    return; // executor gone
+                }
+            }
+            Request::NextStep => opt.next_step(),
+            Request::StateScalars => {
+                if replies.send(Reply::StateScalars(opt.state_scalars())).is_err() {
+                    return;
+                }
+            }
+            Request::Shutdown => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    /// Drive one worker directly: its update must match the same optimizer
+    /// run inline, and the ack must arrive after the write.
+    #[test]
+    fn worker_applies_steps_and_acks() {
+        let groups = vec![GroupSpec::new("a", &[4]), GroupSpec::new("b", &[2])];
+        let (req_tx, req_rx) = sync_channel::<Request>(4);
+        let (rep_tx, rep_rx) = sync_channel::<Reply>(4);
+        let worker_groups = groups.clone();
+        let handle = std::thread::spawn(move || {
+            run_worker(0, OptimizerKind::AdaGrad, worker_groups, Hyper::default(), req_rx, rep_tx)
+        });
+
+        let mut x0 = vec![1.0f32; 4];
+        let mut x1 = vec![2.0f32; 2];
+        let g0 = vec![0.5f32, -0.5, 1.0, 0.0];
+        let g1 = vec![1.0f32, 2.0];
+        req_tx
+            .send(Request::Step {
+                lr: 0.1,
+                tasks: vec![
+                    GroupTask {
+                        local_gi: 0,
+                        x: x0.as_mut_ptr(),
+                        x_len: x0.len(),
+                        g: g0.as_ptr(),
+                        g_len: g0.len(),
+                    },
+                    GroupTask {
+                        local_gi: 1,
+                        x: x1.as_mut_ptr(),
+                        x_len: x1.len(),
+                        g: g1.as_ptr(),
+                        g_len: g1.len(),
+                    },
+                ],
+            })
+            .unwrap();
+        match rep_rx.recv().unwrap() {
+            Reply::StepDone(r) => r.unwrap(),
+            _ => panic!("expected StepDone"),
+        }
+
+        // Inline reference.
+        let mut reference = crate::optim::adagrad::AdaGrad::new(&groups, 1e-8);
+        let (mut r0, mut r1) = (vec![1.0f32; 4], vec![2.0f32; 2]);
+        crate::optim::Optimizer::step(&mut reference, 0, &mut r0, &g0, 0.1).unwrap();
+        crate::optim::Optimizer::step(&mut reference, 1, &mut r1, &g1, 0.1).unwrap();
+        assert_eq!(x0, r0);
+        assert_eq!(x1, r1);
+
+        req_tx.send(Request::StateScalars).unwrap();
+        match rep_rx.recv().unwrap() {
+            Reply::StateScalars(n) => assert_eq!(n, 6),
+            _ => panic!("expected StateScalars"),
+        }
+        req_tx.send(Request::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn worker_reports_step_errors() {
+        let groups = vec![GroupSpec::new("a", &[4])];
+        let (req_tx, req_rx) = sync_channel::<Request>(2);
+        let (rep_tx, rep_rx) = sync_channel::<Reply>(2);
+        let handle = std::thread::spawn(move || {
+            run_worker(3, OptimizerKind::Sgd, groups, Hyper::default(), req_rx, rep_tx)
+        });
+        let mut x = vec![0.0f32; 2]; // wrong length for the 4-element group
+        let g = vec![0.0f32; 2];
+        req_tx
+            .send(Request::Step {
+                lr: 0.1,
+                tasks: vec![GroupTask {
+                    local_gi: 0,
+                    x: x.as_mut_ptr(),
+                    x_len: x.len(),
+                    g: g.as_ptr(),
+                    g_len: g.len(),
+                }],
+            })
+            .unwrap();
+        match rep_rx.recv().unwrap() {
+            Reply::StepDone(Err(msg)) => assert!(msg.contains("shard 3"), "{msg}"),
+            _ => panic!("expected an error ack"),
+        }
+        drop(req_tx); // disconnect also terminates the loop
+        handle.join().unwrap();
+    }
+}

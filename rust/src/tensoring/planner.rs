@@ -11,10 +11,11 @@
 //!   threshold (10, matching the paper's tables) into `(a, n/a)` where `a`
 //!   is the largest divisor of `n` with `a <= sqrt(n)`. Primes and small
 //!   factors pass through.
-//! * **ET∞** — one scalar per parameter group (handled by the ET∞
-//!   optimizer, planner returns order-0 marker via `dims = [group]`... no:
-//!   ET∞ is a separate optimizer; the planner's `Level::Inf` returns `[1]`
-//!   conceptually — see `optim::etinf`).
+//! * **ET∞** — one scalar per parameter group. This is *not* a planner
+//!   level: the planner only ever emits ETk factorizations, and ET∞ is
+//!   implemented by the dedicated optimizer in `optim::etinf`, whose
+//!   per-group preconditioner is a scalar multiple of the identity (there
+//!   is no `Level` variant for it).
 //!
 //! The planner also provides `plan_flat` for parameters with no natural
 //! tensor shape (the paper: "applies to arbitrary models"): factor `d` into
@@ -250,6 +251,73 @@ mod tests {
                     "state len grew {prev_state} -> {state} at level {k} for {shape:?}"
                 );
                 prev_state = state;
+            }
+        });
+    }
+
+    /// Property: `balanced_divisor(n)` always divides `n` and never
+    /// exceeds `sqrt(n)` — the invariant `split_factor` relies on to keep
+    /// the `(a, n/a)` pair balanced.
+    #[test]
+    fn prop_balanced_divisor_divides_and_bounded() {
+        props("balanced_divisor_bounds", 300, |g: &mut Gen| {
+            let n = g.usize_in(1, 1 << 20);
+            let b = balanced_divisor(n);
+            assert!(b >= 1, "b = 0 for n = {n}");
+            assert_eq!(n % b, 0, "balanced_divisor({n}) = {b} does not divide");
+            assert!(b * b <= n, "balanced_divisor({n}) = {b} exceeds sqrt");
+        });
+    }
+
+    fn is_prime(n: usize) -> bool {
+        if n < 2 {
+            return false;
+        }
+        let mut a = 2;
+        while a * a <= n {
+            if n % a == 0 {
+                return false;
+            }
+            a += 1;
+        }
+        true
+    }
+
+    /// Property: going ET(k) -> ET(k+1) preserves the numel product, never
+    /// grows the largest factor, and never leaves a factor above
+    /// `SPLIT_THRESHOLD` unless it is prime or strictly smaller than the
+    /// level-k maximum (i.e. it was just produced by a genuine split and
+    /// will keep shrinking at deeper levels).
+    #[test]
+    fn prop_deeper_levels_respect_split_threshold() {
+        props("split_threshold_respected", 200, |g: &mut Gen| {
+            let rank = g.usize_in(1, 4);
+            let shape: Vec<usize> = (0..rank).map(|_| g.usize_in(1, 4096)).collect();
+            let numel: usize = shape.iter().product();
+            for k in 1..=5u8 {
+                let cur = plan(&shape, Level::Et(k));
+                let next = plan(&shape, Level::Et(k + 1));
+                assert_eq!(
+                    next.iter().product::<usize>(),
+                    numel,
+                    "shape {shape:?} level {}: product mismatch",
+                    k + 1
+                );
+                let max_cur = cur.iter().copied().max().unwrap();
+                let max_next = next.iter().copied().max().unwrap();
+                assert!(
+                    max_next <= max_cur,
+                    "largest factor grew {max_cur} -> {max_next} for {shape:?} at level {}",
+                    k + 1
+                );
+                for &d in &next {
+                    assert!(
+                        d <= SPLIT_THRESHOLD || is_prime(d) || d < max_cur,
+                        "level {} factor {d} above threshold, composite, and unreduced \
+                         for {shape:?}",
+                        k + 1
+                    );
+                }
             }
         });
     }

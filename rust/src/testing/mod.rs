@@ -1,6 +1,29 @@
-//! Test-support utilities (property-based testing harness). Compiled into
-//! the library (not `#[cfg(test)]`) so integration tests and benches can
-//! reuse the generators.
+//! Test-support utilities (property-based testing harness, shared model
+//! shapes). Compiled into the library (not `#[cfg(test)]`) so integration
+//! tests and benches can reuse the generators.
 
 pub mod bench;
 pub mod prop;
+
+use crate::optim::GroupSpec;
+
+/// Transformer-shaped parameter groups (the Table 1 model family) for
+/// experiments and benches that drive the pure-rust optimizer suite
+/// without AOT artifacts. One definition so the scaling experiment and
+/// `benches/sharded_step.rs` can never drift apart.
+pub fn transformer_groups(layers: usize, vocab: usize, dm: usize, dff: usize) -> Vec<GroupSpec> {
+    let mut g = vec![GroupSpec::new("embed", &[vocab, dm])];
+    for l in 0..layers {
+        for nm in ["wq", "wk", "wv", "wo"] {
+            g.push(GroupSpec::new(format!("l{l}.{nm}"), &[dm, dm]));
+        }
+        g.push(GroupSpec::new(format!("l{l}.ln1"), &[dm]));
+        g.push(GroupSpec::new(format!("l{l}.ln2"), &[dm]));
+        g.push(GroupSpec::new(format!("l{l}.ff1"), &[dm, dff]));
+        g.push(GroupSpec::new(format!("l{l}.ff1b"), &[dff]));
+        g.push(GroupSpec::new(format!("l{l}.ff2"), &[dff, dm]));
+        g.push(GroupSpec::new(format!("l{l}.ff2b"), &[dm]));
+    }
+    g.push(GroupSpec::new("ln_f", &[dm]));
+    g
+}

@@ -2,6 +2,7 @@
 //! budgets. Parsed from TOML (`util::config`) with CLI overrides.
 
 use crate::optim::Schedule;
+use crate::tensoring::OptimizerKind;
 use crate::util::config::Config;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -33,6 +34,14 @@ pub struct RunConfig {
     /// grad-artifact execution per sampled step.
     pub track_traces: bool,
     pub trace_every: u64,
+    /// Worker shards for the host-side optimizer engine (`shard::`).
+    /// Only meaningful together with `host_optimizer`; 1 = a single
+    /// worker (still bitwise-identical to the in-thread optimizer).
+    pub shards: usize,
+    /// When set, train host-side: gradients come from the `<family>_grad`
+    /// artifact and the update is applied by the (sharded) pure-rust
+    /// optimizer suite instead of the fused train-step artifact.
+    pub host_optimizer: Option<OptimizerKind>,
 }
 
 impl Default for RunConfig {
@@ -55,6 +64,8 @@ impl Default for RunConfig {
             max_seconds: 0.0,
             track_traces: false,
             trace_every: 10,
+            shards: 1,
+            host_optimizer: None,
         }
     }
 }
@@ -93,6 +104,14 @@ impl RunConfig {
             max_seconds: cfg.f64("run.max_seconds", 0.0),
             track_traces: cfg.bool("run.track_traces", false),
             trace_every: cfg.usize("run.trace_every", d.trace_every as usize) as u64,
+            shards: cfg.usize("run.shards", 1).max(1),
+            host_optimizer: match cfg.get("run.host_optimizer").and_then(|v| v.as_str()) {
+                Some(s) => Some(
+                    OptimizerKind::parse(s)
+                        .with_context(|| format!("unknown host optimizer '{s}'"))?,
+                ),
+                None => None,
+            },
         })
     }
 }
@@ -118,6 +137,34 @@ schedule = "constant:0.05"
         assert_eq!(rc.artifact, "lm_tiny_et2");
         assert_eq!(rc.steps, 500);
         assert_eq!(rc.schedule, Schedule::Constant(0.05));
+    }
+
+    #[test]
+    fn parses_shard_knobs() {
+        let cfg = Config::parse(
+            r#"
+[run]
+artifact = "lm_tiny_et2"
+shards = 4
+host_optimizer = "et2"
+"#,
+        )
+        .unwrap();
+        let rc = RunConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.shards, 4);
+        assert_eq!(rc.host_optimizer, Some(OptimizerKind::Et(2)));
+        // default: single shard, fused-artifact training
+        let plain = Config::parse("[run]\nartifact = \"a\"").unwrap();
+        let rc = RunConfig::from_config(&plain).unwrap();
+        assert_eq!(rc.shards, 1);
+        assert_eq!(rc.host_optimizer, None);
+    }
+
+    #[test]
+    fn rejects_bad_host_optimizer() {
+        let cfg =
+            Config::parse("[run]\nartifact = \"a\"\nhost_optimizer = \"bogus\"").unwrap();
+        assert!(RunConfig::from_config(&cfg).is_err());
     }
 
     #[test]

@@ -10,8 +10,10 @@ use super::checkpoint;
 use super::config::RunConfig;
 use super::metrics::{EvalRecord, PplAccumulator, RunSummary, StepRecord};
 use crate::data::{Batcher, Corpus, Loader, SyntheticConfig, Tokenizer};
+use crate::optim::{Hyper, Optimizer};
 use crate::regret::TraceTracker;
 use crate::runtime::{Client, DataArg, Engine, TrainState};
+use crate::shard::ShardedOptimizer;
 use crate::util::json::Json;
 use crate::util::logging::JsonlWriter;
 use crate::util::timer::{EmaRate, Timer};
@@ -43,8 +45,10 @@ impl Trainer {
             Some(name) => Some(Engine::load(&client, &cfg.artifact_dir, name)?),
             None => None,
         };
-        // grad artifact: derive name `<family>_grad` from the train artifact
-        let grad_engine = if cfg.track_traces {
+        // grad artifact: derive name `<family>_grad` from the train
+        // artifact. Needed for trace mirroring and for host-optimizer
+        // training (where it replaces the fused train step entirely).
+        let grad_engine = if cfg.track_traces || cfg.host_optimizer.is_some() {
             let base = cfg
                 .artifact
                 .rsplit_once('_')
@@ -98,6 +102,9 @@ impl Trainer {
 
     /// Run the configured training job.
     pub fn run(&mut self) -> Result<RunResult> {
+        if self.cfg.host_optimizer.is_some() {
+            return self.run_host();
+        }
         let run_dir = self.cfg.out_dir.join(&self.cfg.name);
         std::fs::create_dir_all(&run_dir)?;
         let mut log = JsonlWriter::create(run_dir.join("metrics.jsonl"))?;
@@ -220,6 +227,169 @@ impl Trainer {
             optimizer_scalars: opt_scalars,
             model_params: self.engine.manifest.total_params(),
             steps: state.step,
+            final_train_loss: last_loss,
+            final_eval_ppl: final_ppl,
+            wall_seconds: wall.elapsed_secs(),
+            tokens_per_sec: step_ema.rate().unwrap_or(0.0) * tokens_per_batch as f64,
+        };
+        log.write(&summary.to_json())?;
+        log.flush()?;
+
+        let trace_report = tracker.map(|t| t.report());
+        if let Some(r) = &trace_report {
+            log.write(&Json::obj(vec![
+                ("kind", Json::str("traces")),
+                ("trace_h", Json::num(r.trace_h)),
+                ("trace_h_hat", Json::num(r.trace_h_hat)),
+                ("ratio", Json::num(r.ratio)),
+            ]))?;
+            log.flush()?;
+        }
+
+        Ok(RunResult { summary, eval_history, loss_history, trace_report })
+    }
+
+    /// Host-side training: gradients come from the `<family>_grad`
+    /// artifact; the update is applied by the pure-rust optimizer engine,
+    /// fanned out over `cfg.shards` persistent workers
+    /// ([`crate::shard::ShardedOptimizer`]). Parameters live as host
+    /// vectors; optimizer state lives shard-local inside the workers and
+    /// never crosses a shard boundary. With `shards = 1` this is
+    /// bitwise-identical to running the plain optimizer in-thread.
+    fn run_host(&mut self) -> Result<RunResult> {
+        let kind = self.cfg.host_optimizer.context("host_optimizer not set")?;
+        let grad_engine = self
+            .grad_engine
+            .as_ref()
+            .context("host-optimizer training needs the <family>_grad artifact")?;
+        let run_dir = self.cfg.out_dir.join(&self.cfg.name);
+        std::fs::create_dir_all(&run_dir)?;
+        let mut log = JsonlWriter::create(run_dir.join("metrics.jsonl"))?;
+
+        let (train_batcher, valid_batcher) = self.build_data()?;
+        let tokens_per_batch = train_batcher.seq_len * train_batcher.batch_rows;
+        let mut loader =
+            Loader::spawn(train_batcher, self.cfg.seed, self.cfg.steps as usize, 4);
+
+        // Host-resident parameters, seeded exactly like the fused path.
+        let gm = &grad_engine.manifest;
+        let init = grad_engine.init_state(self.cfg.seed)?;
+        let mut params: Vec<Vec<f32>> = gm
+            .params
+            .iter()
+            .map(|p| init.param_to_vec(gm, &p.name))
+            .collect::<Result<_>>()?;
+        // The grad artifact carries no optimizer state; keep a zero block
+        // matching its manifest so state reconstruction stays uniform.
+        let opt_zeros: Vec<Vec<f32>> =
+            gm.opt_state.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+        let groups = gm.group_specs();
+        let shards = self.cfg.shards.max(1);
+        let mut opt = ShardedOptimizer::new(kind, &groups, &Hyper::default(), shards)?;
+        // Optimizer state lives shard-local inside the workers; extracting
+        // it for checkpoints is future work (see ROADMAP), so be loud
+        // rather than silently skipping.
+        if self.cfg.checkpoint_every > 0 {
+            crate::warnln!(
+                "[{}] checkpoint_every is ignored in host-optimizer mode \
+                 (worker-local state extraction not implemented)",
+                self.cfg.name
+            );
+        }
+        let mut tracker = if self.cfg.track_traces {
+            Some(self.build_tracker()?)
+        } else {
+            None
+        };
+        crate::info!(
+            "[{}] host optimizer {} ({} state scalars, peak {} per shard)",
+            self.cfg.name,
+            opt.name(),
+            opt.state_scalars(),
+            opt.peak_state_scalars()
+        );
+
+        let wall = Timer::start();
+        let mut step_ema = EmaRate::new(0.1);
+        let mut loss_history = Vec::new();
+        let mut eval_history = Vec::new();
+        let mut last_loss = f64::NAN;
+        let mut step: u64 = 0;
+
+        while step < self.cfg.steps {
+            if self.cfg.max_seconds > 0.0 && wall.elapsed_secs() >= self.cfg.max_seconds {
+                crate::info!("time budget reached at step {step}");
+                break;
+            }
+            let Some(batch) = loader.next() else { break };
+            step += 1;
+            let lr = self.cfg.schedule.lr(step) as f32;
+
+            let t0 = Timer::start();
+            let state = grad_engine.state_from_vecs(&params, &opt_zeros, step)?;
+            let (loss, grads) =
+                grad_engine.grad_step(&state, &[DataArg::I32(&batch.tokens)])?;
+            // Trace mirroring sees the gradients at the *current* params,
+            // before the update — same convention as the fused path.
+            if let Some(tracker) = &mut tracker {
+                if step % self.cfg.trace_every == 0 {
+                    let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+                    tracker.observe(&views)?;
+                }
+            }
+            opt.next_step();
+            opt.step_all(&mut params, &grads, lr)?;
+            step_ema.observe(t0.elapsed_secs());
+            last_loss = loss as f64;
+            anyhow::ensure!(last_loss.is_finite(), "loss diverged at step {step}");
+
+            if step % self.cfg.log_every == 0 || step == self.cfg.steps {
+                let tps = step_ema.rate().unwrap_or(0.0) * tokens_per_batch as f64;
+                let rec = StepRecord {
+                    step,
+                    loss: last_loss,
+                    lr: lr as f64,
+                    tokens_per_sec: tps,
+                };
+                log.write(&rec.to_json())?;
+                loss_history.push((step, last_loss));
+                crate::debugln!(
+                    "step {step} loss {last_loss:.4} lr {lr:.2e} {tps:.0} tok/s [host/{shards}sh]"
+                );
+            }
+
+            if self.cfg.eval_every > 0
+                && step % self.cfg.eval_every == 0
+                && self.eval_engine.is_some()
+            {
+                // Rebuild from the just-updated params so the eval record
+                // matches its step (the fused path evaluates post-update).
+                let eval_state = grad_engine.state_from_vecs(&params, &opt_zeros, step)?;
+                let rec = self.evaluate(&eval_state, &valid_batcher)?;
+                log.write(&rec.to_json())?;
+                crate::info!("[{}] step {step} val ppl {:.2}", self.cfg.name, rec.ppl());
+                eval_history.push(rec);
+            }
+        }
+
+        // Final eval at the final parameters.
+        let final_ppl = if self.eval_engine.is_some() {
+            let state = grad_engine.state_from_vecs(&params, &opt_zeros, step)?;
+            let rec = self.evaluate(&state, &valid_batcher)?;
+            log.write(&rec.to_json())?;
+            let p = rec.ppl();
+            eval_history.push(rec);
+            p
+        } else {
+            f64::NAN
+        };
+
+        let summary = RunSummary {
+            name: self.cfg.name.clone(),
+            optimizer: opt.name(),
+            optimizer_scalars: opt.state_scalars(),
+            model_params: gm.total_params(),
+            steps: step,
             final_train_loss: last_loss,
             final_eval_ppl: final_ppl,
             wall_seconds: wall.elapsed_secs(),

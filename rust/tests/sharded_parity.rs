@@ -1,0 +1,190 @@
+//! Determinism contract of the sharded optimizer-state engine: for every
+//! optimizer kind in the suite, `ShardedOptimizer` over 1, 2, and 4 shards
+//! must produce parameter updates *bitwise-identical* to the
+//! single-threaded optimizer on the same seeded groups and gradient
+//! stream. There is no tolerance here on purpose — each group's update is
+//! computed by exactly one worker with the single-threaded arithmetic, so
+//! any drift would mean the engine reordered real math.
+
+use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
+use extensor::shard::ShardedOptimizer;
+use extensor::tensoring::OptimizerKind;
+use extensor::util::rng::Pcg64;
+
+/// Transformer-flavored group mix: big matrices, a conv kernel, and a tail
+/// of small vectors (the bucketing path must fuse those).
+fn groups() -> Vec<GroupSpec> {
+    vec![
+        GroupSpec::new("embed", &[50, 16]),
+        GroupSpec::new("wq", &[16, 16]),
+        GroupSpec::new("ln1", &[16]),
+        GroupSpec::new("ff1", &[16, 32]),
+        GroupSpec::new("ff1b", &[32]),
+        GroupSpec::new("ff2", &[32, 16]),
+        GroupSpec::new("ff2b", &[16]),
+        GroupSpec::new("conv", &[8, 4, 3, 3]),
+        GroupSpec::new("ln_f", &[16]),
+    ]
+}
+
+fn all_kinds() -> Vec<OptimizerKind> {
+    vec![
+        OptimizerKind::Sgd,
+        OptimizerKind::AdaGrad,
+        OptimizerKind::Adam,
+        OptimizerKind::RmsProp,
+        OptimizerKind::AdaDelta,
+        OptimizerKind::Adafactor,
+        OptimizerKind::Et(1),
+        OptimizerKind::Et(2),
+        OptimizerKind::Et(3),
+        OptimizerKind::EtInf,
+    ]
+}
+
+/// One gradient vector per group per step, seeded.
+fn grad_stream(gs: &[GroupSpec], steps: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..steps)
+        .map(|_| {
+            gs.iter()
+                .map(|g| {
+                    let mut v = vec![0.0f32; g.numel()];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn init_params(gs: &[GroupSpec], seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed ^ 0xA11CE);
+    gs.iter()
+        .map(|g| {
+            let mut v = vec![0.0f32; g.numel()];
+            rng.fill_uniform(&mut v, -0.5, 0.5);
+            v
+        })
+        .collect()
+}
+
+fn run_single(
+    kind: OptimizerKind,
+    gs: &[GroupSpec],
+    stream: &[Vec<Vec<f32>>],
+    lr: f32,
+) -> Vec<Vec<f32>> {
+    let mut opt = optim::build(kind, gs, &Hyper::default());
+    let mut params = init_params(gs, 1);
+    for grads in stream {
+        opt.next_step();
+        for (gi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            opt.step(gi, p, g, lr).unwrap();
+        }
+    }
+    params
+}
+
+fn run_sharded(
+    kind: OptimizerKind,
+    gs: &[GroupSpec],
+    stream: &[Vec<Vec<f32>>],
+    lr: f32,
+    shards: usize,
+) -> Vec<Vec<f32>> {
+    let mut opt = ShardedOptimizer::new(kind, gs, &Hyper::default(), shards).unwrap();
+    let mut params = init_params(gs, 1);
+    for grads in stream {
+        opt.next_step();
+        opt.step_all(&mut params, grads, lr).unwrap();
+    }
+    params
+}
+
+/// The acceptance-criterion test: every kind, shards in {1, 2, 4},
+/// bitwise equality after a multi-step run.
+#[test]
+fn sharded_matches_single_threaded_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 5, 7);
+    for kind in all_kinds() {
+        let lr = if kind == OptimizerKind::AdaDelta { 1.0 } else { 0.05 };
+        let want = run_single(kind, &gs, &stream, lr);
+        for shards in [1usize, 2, 4] {
+            let got = run_sharded(kind, &gs, &stream, lr, shards);
+            assert_eq!(
+                want, got,
+                "kind {kind:?} with {shards} shards diverged from single-threaded"
+            );
+        }
+    }
+}
+
+/// The trait-compat path (per-group `step`) must agree with `step_all`.
+#[test]
+fn trait_step_agrees_with_step_all() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 3, 21);
+    for kind in [OptimizerKind::Adam, OptimizerKind::Et(2)] {
+        let mut a = ShardedOptimizer::new(kind, &gs, &Hyper::default(), 3).unwrap();
+        let mut b = ShardedOptimizer::new(kind, &gs, &Hyper::default(), 3).unwrap();
+        let mut pa = init_params(&gs, 2);
+        let mut pb = init_params(&gs, 2);
+        for grads in &stream {
+            a.next_step();
+            b.next_step();
+            a.step_all(&mut pa, grads, 0.05).unwrap();
+            for (gi, (p, g)) in pb.iter_mut().zip(grads).enumerate() {
+                b.step(gi, p, g, 0.05).unwrap();
+            }
+        }
+        assert_eq!(pa, pb, "kind {kind:?}");
+    }
+}
+
+/// State accounting must be invariant under sharding (the paper's memory
+/// model is per group; partitioning cannot change the total).
+#[test]
+fn state_scalars_invariant_under_sharding() {
+    let gs = groups();
+    for kind in all_kinds() {
+        let single = optim::build(kind, &gs, &Hyper::default());
+        for shards in [1usize, 2, 4] {
+            let sharded = ShardedOptimizer::new(kind, &gs, &Hyper::default(), shards).unwrap();
+            assert_eq!(
+                sharded.state_scalars(),
+                single.state_scalars(),
+                "kind {kind:?} shards {shards}"
+            );
+            assert!(sharded.peak_state_scalars() <= single.state_scalars().max(1));
+        }
+    }
+}
+
+/// Sharding must not depend on bucket granularity either.
+#[test]
+fn bucket_granularity_does_not_change_results() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 4, 13);
+    let run = |min_bucket: usize| -> Vec<Vec<f32>> {
+        let mut opt = ShardedOptimizer::with_options(
+            OptimizerKind::Et(3),
+            &gs,
+            &Hyper::default(),
+            4,
+            None,
+            min_bucket,
+        )
+        .unwrap();
+        let mut params = init_params(&gs, 3);
+        for grads in &stream {
+            opt.next_step();
+            opt.step_all(&mut params, grads, 0.1).unwrap();
+        }
+        params
+    };
+    let fine = run(1);
+    assert_eq!(fine, run(512));
+    assert_eq!(fine, run(usize::MAX));
+}

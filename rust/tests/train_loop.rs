@@ -35,6 +35,7 @@ fn micro_cfg(name: &str, steps: u64) -> RunConfig {
         max_seconds: 0.0,
         track_traces: false,
         trace_every: 1,
+        ..RunConfig::default()
     }
 }
 

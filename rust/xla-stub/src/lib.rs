@@ -1,0 +1,278 @@
+//! Offline stand-in for the `xla` PJRT bindings crate.
+//!
+//! The build environment does not ship the XLA C++ extension, so this crate
+//! provides the exact API surface `extensor` uses — `Literal`,
+//! `PjRtClient`, `HloModuleProto`, `XlaComputation`,
+//! `PjRtLoadedExecutable`, `PjRtBuffer` — with host-side semantics:
+//!
+//! * `Literal` is fully functional (host vectors + dims), so everything
+//!   that only marshals tensors (state init, checkpoints, oracles) works.
+//! * Anything that needs a live PJRT backend (`HloModuleProto::
+//!   from_text_file`, `PjRtClient::compile`, `execute`) returns a clear
+//!   `Error`, which callers surface through `anyhow`. All artifact-driven
+//!   paths in `extensor` gate on artifact presence first, so tests and the
+//!   pure-rust experiments never hit these.
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `rust/Cargo.toml`; no call site changes.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable in the offline stub build (see rust/xla-stub)";
+
+/// Error type mirroring the bindings crate: displayable, `Send + Sync`, so
+/// it converts into `anyhow::Error` at call sites via `?`.
+#[derive(Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host storage for one literal.
+#[derive(Clone, Debug)]
+enum Storage {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized + 'static {
+    fn store(data: &[Self]) -> Storage;
+    fn load(storage: &Storage) -> Option<Vec<Self>>;
+    fn type_name() -> &'static str;
+}
+
+macro_rules! native {
+    ($ty:ty, $variant:ident, $name:expr) => {
+        impl NativeType for $ty {
+            fn store(data: &[Self]) -> Storage {
+                Storage::$variant(data.to_vec())
+            }
+            fn load(storage: &Storage) -> Option<Vec<Self>> {
+                match storage {
+                    Storage::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+            fn type_name() -> &'static str {
+                $name
+            }
+        }
+    };
+}
+
+native!(f32, F32, "f32");
+native!(f64, F64, "f64");
+native!(i32, I32, "i32");
+native!(i64, I64, "i64");
+
+/// A host tensor (or tuple of tensors) with row-major data and i64 dims.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { storage: T::store(data), dims: vec![data.len() as i64] }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { storage: T::store(&[v]), dims: Vec::new() }
+    }
+
+    /// Tuple literal over parts (what a multi-output execution returns).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { storage: Storage::Tuple(parts), dims: Vec::new() }
+    }
+
+    /// Total element count (leaves summed for tuples).
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::F64(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::I64(v) => v.len(),
+            Storage::Tuple(parts) => parts.iter().map(|p| p.element_count()).sum(),
+        }
+    }
+
+    /// Same data, new dims. Fails when the element counts disagree or the
+    /// literal is a tuple.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Dims of this literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.storage).ok_or_else(|| {
+            Error::new(format!("literal does not hold {} elements", T::type_name()))
+        })
+    }
+
+    /// Split a tuple literal into its parts (consumes the contents, like
+    /// the real bindings).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.storage, Storage::F32(Vec::new())) {
+            Storage::Tuple(parts) => Ok(parts),
+            other => {
+                self.storage = other;
+                Err(Error::new("decompose_tuple on a non-tuple literal"))
+            }
+        }
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text, so the only
+/// constructor always fails; the type exists to keep call sites compiling.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::new(format!("{UNAVAILABLE}; cannot parse HLO text {path}")))
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// The PJRT client. Construction succeeds (so memory reports and other
+/// host-only paths run); compilation fails with a clear message.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// A compiled executable (never constructible in the stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// A device buffer handle (never constructible in the stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.element_count(), 6);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert!(m.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_int_literals() {
+        let s = Literal::scalar(0.5f32);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.dims().is_empty());
+        let i = Literal::vec1(&[7i32, 8]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn tuple_decomposes_once() {
+        let mut t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32, 3])]);
+        assert_eq!(t.element_count(), 3);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.decompose_tuple().is_err());
+        let mut flat = Literal::vec1(&[1.0f32]);
+        assert!(flat.decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn backend_paths_error_cleanly() {
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "offline-stub");
+        let comp = XlaComputation { _priv: () };
+        assert!(client.compile(&comp).is_err());
+    }
+}
