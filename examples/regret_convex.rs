@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     // Online learner: ET depth 2 over the feature dimension.
     let dims = vec![vec![cfg.k, 16, cfg.d / 16]];
     let mut learner =
-        optim::extreme::ExtremeTensoring::new_with_dims(&groups, dims.clone(), 1e-8, None);
+        optim::extreme::custom_et(&groups, dims.clone(), 1e-8, None).expect("dims cover");
     let mut tracker = TraceTracker::new(&[("w".into(), dims[0].clone())], 1e-8)?;
     let mut meter = RegretMeter::new();
     let mut w = vec![0.0f32; obj.dim()];

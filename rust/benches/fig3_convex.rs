@@ -39,12 +39,8 @@ fn main() -> anyhow::Result<()> {
         ("et_depth3 (10,8,8,8)", vec![10, 8, 8, 8]),
     ];
     for (name, dims) in variants {
-        let mut opt = optim::extreme::ExtremeTensoring::new_with_dims(
-            &groups,
-            vec![dims],
-            1e-8,
-            None,
-        );
+        let mut opt =
+            optim::extreme::custom_et(&groups, vec![dims], 1e-8, None).expect("dims cover");
         let mut wv = vec![0.01f32; obj.dim()];
         let r = bench(&format!("step/{name}"), 3, 50, || {
             opt.step(0, &mut wv, &grad, 0.01).unwrap();

@@ -1,7 +1,15 @@
-//! Pure-rust optimizer hot-path throughput: elements/s of one `step()` per
+//! Pure-rust optimizer hot-path throughput: elements/s of one full step per
 //! optimizer kind on transformer-shaped groups. This is the L3-native
 //! equivalent of the paper's "optimizer overhead" concern — ET's update
 //! must stay bandwidth-bound and within a small factor of SGD.
+//!
+//! Two variants per kind measure the dispatch overhead the batched API
+//! removes:
+//!
+//! * `loop/...` — the legacy shape: one `Box<dyn Optimizer>` virtual call
+//!   per *group* per step;
+//! * `step_all/...` — one virtual call per *step*; the per-group loop runs
+//!   statically dispatched inside the update rule.
 
 use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
 use extensor::tensoring::OptimizerKind;
@@ -20,7 +28,6 @@ fn main() {
     let total: usize = groups.iter().map(|g| g.numel()).sum();
 
     let mut rng = Pcg64::seeded(1);
-    let mut params: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
     let grads: Vec<Vec<f32>> = groups
         .iter()
         .map(|g| {
@@ -42,14 +49,30 @@ fn main() {
         OptimizerKind::Et(3),
         OptimizerKind::EtInf,
     ] {
+        // Per-group dynamic-dispatch loop (the pre-refactor driver shape).
         let mut opt = optim::build(kind, &groups, &hyper);
-        let r = bench(&format!("step/{}", kind.name()), 3, 30, || {
+        let mut params: Vec<Vec<f32>> =
+            groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+        let r = bench(&format!("loop/{}", kind.name()), 3, 30, || {
             opt.next_step();
             for (gi, (p, g)) in params.iter_mut().zip(&grads).enumerate() {
                 opt.step(gi, p, g, 1e-4).unwrap();
             }
         });
         r.report_with_rate(total as f64, "elem/s");
+
+        // Batched entry point: one dynamic dispatch for the whole step.
+        let mut opt = optim::build(kind, &groups, &hyper);
+        let mut params: Vec<Vec<f32>> =
+            groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+        let r = bench(&format!("step_all/{}", kind.name()), 3, 30, || {
+            opt.next_step();
+            opt.step_all(&mut params, &grads, 1e-4).unwrap();
+        });
+        r.report_with_rate(total as f64, "elem/s");
     }
-    println!("\n(ET overhead vs SGD is the paper's 'negligible memory AND compute' claim)");
+    println!(
+        "\n(ET overhead vs SGD is the paper's 'negligible memory AND compute' claim;\n \
+         loop-vs-step_all is the per-group dispatch overhead the batched API removes)"
+    );
 }

@@ -312,13 +312,13 @@ pub fn fig3(opts: &ExpOptions) -> Result<()> {
          Box::new({ let g = groups.clone(); move || optim::build(OptimizerKind::AdaGrad, &g, &Hyper::default()) }),
          0.05),
         ("ET depth 1 (10,512)".into(),
-         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::ExtremeTensoring::new_with_dims(&g, vec![vec![10, 512]], 1e-8, None)) as Box<dyn optim::Optimizer> }),
+         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::custom_et(&g, vec![vec![10, 512]], 1e-8, None).expect("dims cover")) as Box<dyn optim::Optimizer> }),
          0.05),
         ("ET depth 2 (10,16,32)".into(),
-         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::ExtremeTensoring::new_with_dims(&g, vec![vec![10, 16, 32]], 1e-8, None)) as Box<dyn optim::Optimizer> }),
+         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::custom_et(&g, vec![vec![10, 16, 32]], 1e-8, None).expect("dims cover")) as Box<dyn optim::Optimizer> }),
          0.05),
         ("ET depth 3 (10,8,8,8)".into(),
-         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::ExtremeTensoring::new_with_dims(&g, vec![vec![10, 8, 8, 8]], 1e-8, None)) as Box<dyn optim::Optimizer> }),
+         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::custom_et(&g, vec![vec![10, 8, 8, 8]], 1e-8, None).expect("dims cover")) as Box<dyn optim::Optimizer> }),
          0.05),
         ("ET-inf".into(),
          Box::new({ let g = groups.clone(); move || optim::build(OptimizerKind::EtInf, &g, &Hyper::default()) }),
@@ -492,7 +492,26 @@ pub fn sharding(opts: &ExpOptions) -> Result<()> {
             }
             let secs = timer.elapsed_secs();
             let steps_per_sec = iters as f64 / secs.max(1e-12);
-            let peak_bytes = opt.peak_state_scalars() * 4;
+            // Real per-shard bytes, not scalars*4 — ET∞'s wide accumulator
+            // is an f64, so the two differ (see tensoring::memory).
+            let peak_bytes = opt
+                .plan()
+                .shards
+                .iter()
+                .map(|owned| {
+                    owned
+                        .iter()
+                        .map(|&gi| {
+                            crate::tensoring::group_state_bytes(
+                                kind,
+                                &groups[gi].shape,
+                                crate::tensoring::StateBackend::DenseF32,
+                            )
+                        })
+                        .sum::<usize>()
+                })
+                .max()
+                .unwrap_or(0);
             table.row(vec![
                 kind.name(),
                 format!("{steps_per_sec:.2}"),
@@ -517,6 +536,99 @@ pub fn sharding(opts: &ExpOptions) -> Result<()> {
         }
     }
     save_json(opts.out_dir.join("sharding.json"), &Json::Arr(results))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Quantized-state scenario — storage backend x optimizer, memory vs quality
+// ---------------------------------------------------------------------------
+
+/// The low-precision-state experiment: every adaptive optimizer in the
+/// suite trained on the convex workload (§5.4's substrate, no artifacts
+/// needed) under both state backends — dense `f32` and 8-bit
+/// block-quantized — reporting physical state bytes, the paper's
+/// `f32`-equivalent scalar count (fractional under q8), final loss, and
+/// accuracy. This is the memory/quality axis the externalized-state API
+/// opens: quantization composes with ET, so "ET level x backend" spans
+/// from AdaGrad/f32 (4d bytes) down to ET3/q8.
+pub fn quantized_state(opts: &ExpOptions) -> Result<()> {
+    use crate::tensoring::StateBackend;
+    let cfg = ConvexConfig { seed: opts.seed ^ 0x9a, ..ConvexConfig::default() };
+    crate::info!(
+        "generating convex dataset (n={}, d={}, cond={})",
+        cfg.n,
+        cfg.d,
+        cfg.cond
+    );
+    let ds = ConvexDataset::generate(&cfg);
+    let obj = SoftmaxRegression::new(&ds);
+    let idx: Vec<usize> = (0..ds.n).collect();
+    let groups = vec![GroupSpec::new("w", &[cfg.k, cfg.d])];
+    let iters = opts.steps.max(100) as usize;
+
+    let kinds = [
+        OptimizerKind::AdaGrad,
+        OptimizerKind::Adam,
+        OptimizerKind::Adafactor,
+        OptimizerKind::Et(1),
+        OptimizerKind::Et(2),
+        OptimizerKind::Et(3),
+        OptimizerKind::EtInf,
+    ];
+    let backends = [StateBackend::DenseF32, StateBackend::q8()];
+    let lr_for = |kind: OptimizerKind| match kind {
+        OptimizerKind::EtInf => 0.5,
+        OptimizerKind::Adam => 0.01,
+        _ => 0.05,
+    };
+
+    let mut table = Table::new(
+        "Quantized optimizer state — backend x optimizer on the convex task",
+        &["Optimizer", "Backend", "State bytes", "f32-equiv", "Final loss", "Accuracy"],
+    );
+    let mut results = Vec::new();
+    for kind in kinds {
+        for backend in backends {
+            let hyper = Hyper { backend, ..Hyper::default() };
+            let mut o = optim::build(kind, &groups, &hyper);
+            let lr = lr_for(kind) as f32;
+            let mut w = vec![0.0f32; obj.dim()];
+            let mut grad = vec![0.0f32; obj.dim()];
+            for _ in 0..iters {
+                obj.loss_grad(&w, &idx, &mut grad);
+                o.next_step();
+                o.step(0, &mut w, &grad, lr)?;
+            }
+            // Measure *after* the last update so the final step counts.
+            let final_loss = obj.loss(&w, &idx);
+            let acc = obj.accuracy(&w, &idx);
+            let bytes = o.state_bytes();
+            table.row(vec![
+                o.name(),
+                backend.name(),
+                fmt_mem(bytes),
+                format!("{:.1}", bytes as f64 / 4.0),
+                format!("{final_loss:.4}"),
+                format!("{acc:.3}"),
+            ]);
+            results.push(Json::obj(vec![
+                ("optimizer", Json::str(o.name())),
+                ("backend", Json::str(backend.name())),
+                ("state_bytes", Json::num(bytes as f64)),
+                ("f32_equiv_scalars", Json::num(bytes as f64 / 4.0)),
+                ("opt_scalars", Json::num(o.state_scalars() as f64)),
+                ("final_loss", Json::num(final_loss)),
+                ("accuracy", Json::num(acc)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+    println!("(q8 stores ~1.125 bytes/scalar vs f32's 4; ET∞'s f64 scalar is never quantized)");
+    save_json(opts.out_dir.join("quantized_state.json"), &Json::Arr(results))?;
+    if opts.csv {
+        table.write_csv(opts.out_dir.join("quantized_state.csv"))?;
+        println!("wrote {}", opts.out_dir.join("quantized_state.csv").display());
+    }
     Ok(())
 }
 

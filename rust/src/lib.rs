@@ -16,15 +16,31 @@
 //! Python never runs on the training path: the rust binary loads the AOT
 //! artifacts through PJRT (`runtime`) and owns everything else.
 //!
-//! The optimizer suite also runs *sharded*: `shard` bin-packs parameter
-//! groups across persistent worker threads using the same footprint
-//! accounting the paper's tables report, each worker owning its groups'
-//! complete optimizer state (`shard::ShardedOptimizer`). Determinism
-//! contract: sharded execution is bitwise-identical to the
-//! single-threaded engine at any shard count — a group's update is
-//! computed by exactly one worker with the single-threaded arithmetic,
-//! and the fan-in is a pure ack barrier with no cross-shard math to
-//! reorder (enforced in `rust/tests/sharded_parity.rs`).
+//! The optimizer suite is built around an **externalized-state API**
+//! (`optim::state`): optimizer state is a first-class, serializable
+//! `OptState` — named per-group buffers behind a pluggable `StateBuf`
+//! backend (dense `f32` or 8-bit block-quantized), laid out by the same
+//! `tensoring::memory` accounting the paper's tables report — and the
+//! update rules are stateless (`optim::UpdateRule`), bundled behind the
+//! classic `Optimizer` trait by `optim::StateOptimizer`. The batched
+//! `Optimizer::step_all` entry point updates every group with one dynamic
+//! dispatch; `rust/tests/golden_parity.rs` pins the dense backend to the
+//! pre-refactor arithmetic bitwise.
+//!
+//! The suite also runs *sharded*: `shard` bin-packs parameter groups
+//! across persistent worker threads using the footprint accounting, each
+//! worker owning its groups' complete optimizer state
+//! (`shard::ShardedOptimizer`). Determinism contract: sharded execution is
+//! bitwise-identical to the single-threaded engine at any shard count — a
+//! group's update is computed by exactly one worker with the
+//! single-threaded arithmetic, and the fan-in is a pure ack barrier with
+//! no cross-shard math to reorder (enforced in
+//! `rust/tests/sharded_parity.rs`). Externalized state makes the shard
+//! engine checkpointable: `export_state`/`import_state` fan worker-local
+//! snapshots in/out as one shard-count-independent `StateExport`, which
+//! `train::checkpoint::{save_host, load_host}` round-trips to disk
+//! (`rust/tests/host_checkpoint.rs` proves bitwise resume at 1/2/4
+//! shards, including shard-count migration).
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.

@@ -53,8 +53,10 @@ USAGE: ettrain <subcommand> [options]
   train <config.toml> [--set k=v ...]   run a training job
         (run.shards + run.host_optimizer train host-side via the sharded engine)
   experiment <id> [--steps N] [--csv]   regenerate a paper table/figure
-        ids: table1 fig1 table2 fig2 fig3 table4 fig4 sharding ablation all
-        (sharding sweeps the worker-shard engine; --shards caps the sweep)
+        ids: table1 fig1 table2 fig2 fig3 table4 fig4 sharding quantized-state
+             ablation all
+        (sharding sweeps the worker-shard engine; --shards caps the sweep;
+         quantized-state sweeps state backend x optimizer, memory vs quality)
   plan-index --preset resnet18|transformer
   memory-report [--layers N] [--vocab V] [--d-model D] [--d-ff F]
   list-artifacts [--dir artifacts]
@@ -125,9 +127,10 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
             ("csv", "also write figure CSV series"),
             ("tune", "grid-search the global LR scale with probe runs"),
         ],
-        positional: vec![
-            ("id", "table1|fig1|table2|fig2|fig3|table4|fig4|sharding|ablation|all"),
-        ],
+        positional: vec![(
+            "id",
+            "table1|fig1|table2|fig2|fig3|table4|fig4|sharding|quantized-state|ablation|all",
+        )],
     };
     let args = Args::parse(&spec, argv)?;
     let id = args.positional.first().context("missing experiment id")?.as_str();
@@ -141,6 +144,7 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
         "fig2" => experiments::fig2(&opts),
         "fig3" => experiments::fig3(&opts),
         "sharding" => experiments::sharding(&opts),
+        "quantized-state" => experiments::quantized_state(&opts),
         "table4" | "fig4" => {
             opts.csv |= id == "fig4";
             experiments::table4(&opts)
@@ -156,6 +160,7 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
             experiments::fig3(&opts)?;
             experiments::table4(&opts)?;
             experiments::sharding(&opts)?;
+            experiments::quantized_state(&opts)?;
             extensor::coordinator::ablation::run(&opts.out_dir, opts.steps as usize, opts.seed)
         }
         other => bail!("unknown experiment '{other}'"),

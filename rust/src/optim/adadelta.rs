@@ -1,60 +1,54 @@
 //! Adadelta (Zeiler 2012): second-moment accumulator on gradients plus an
 //! accumulator on squared updates, removing the global learning-rate scale
 //! (we still multiply by `lr` as a trust factor, as all practical
-//! implementations do).
+//! implementations do). State: `eg2` + `ex2` buffers per group.
 
-use super::{GroupSpec, Optimizer};
+use super::state::{OptState, UpdateRule};
 use crate::tensoring::OptimizerKind;
 use anyhow::Result;
 
-pub struct AdaDelta {
-    rho: f32,
-    eps: f32,
-    eg2: Vec<Vec<f32>>,
-    ex2: Vec<Vec<f32>>,
+pub struct AdaDeltaRule {
+    pub rho: f32,
+    pub eps: f32,
 }
 
-impl AdaDelta {
-    pub fn new(groups: &[GroupSpec], rho: f32, eps: f32) -> Self {
-        AdaDelta {
-            rho,
-            eps,
-            eg2: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
-            ex2: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
-        }
-    }
-}
-
-impl Optimizer for AdaDelta {
-    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let (eg2, ex2) = (&mut self.eg2[gi], &mut self.ex2[gi]);
-        anyhow::ensure!(x.len() == eg2.len() && g.len() == eg2.len());
-        for i in 0..eg2.len() {
-            eg2[i] = self.rho * eg2[i] + (1.0 - self.rho) * g[i] * g[i];
-            let dx = ((ex2[i] + self.eps) / (eg2[i] + self.eps)).sqrt() * g[i];
-            ex2[i] = self.rho * ex2[i] + (1.0 - self.rho) * dx * dx;
-            x[i] -= lr * dx;
-        }
-        Ok(())
-    }
-
-    fn state_scalars(&self) -> usize {
-        self.eg2.iter().map(|v| v.len()).sum::<usize>() * 2
-    }
-
+impl UpdateRule for AdaDeltaRule {
     fn kind(&self) -> OptimizerKind {
         OptimizerKind::AdaDelta
+    }
+
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let gs = st.group_mut(gi);
+        anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
+        let (rho, eps) = (self.rho, self.eps);
+        gs.with_bufs(|bufs| {
+            let (eg2, ex2) = bufs.split_at_mut(1);
+            let (eg2, ex2) = (&mut *eg2[0], &mut *ex2[0]);
+            for i in 0..eg2.len() {
+                eg2[i] = rho * eg2[i] + (1.0 - rho) * g[i] * g[i];
+                let dx = ((ex2[i] + eps) / (eg2[i] + eps)).sqrt() * g[i];
+                ex2[i] = rho * ex2[i] + (1.0 - rho) * dx * dx;
+                x[i] -= lr * dx;
+            }
+        });
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{self, GroupSpec, Hyper, Optimizer, StateOptimizer};
+
+    fn adadelta(gs: &[GroupSpec], rho: f32, eps: f32) -> StateOptimizer {
+        let hyper = Hyper { beta2: Some(rho), eps, ..Hyper::default() };
+        optim::build_state(OptimizerKind::AdaDelta, gs, &hyper)
+    }
 
     #[test]
     fn descends_quadratic() {
         let gs = vec![GroupSpec::new("x", &[4])];
-        let mut o = AdaDelta::new(&gs, 0.95, 1e-6);
+        let mut o = adadelta(&gs, 0.95, 1e-6);
         let mut x = vec![1.0f32; 4];
         for _ in 0..500 {
             let g: Vec<f32> = x.clone();
@@ -67,6 +61,6 @@ mod tests {
     #[test]
     fn memory_is_2d() {
         let gs = vec![GroupSpec::new("w", &[6])];
-        assert_eq!(AdaDelta::new(&gs, 0.95, 1e-6).state_scalars(), 12);
+        assert_eq!(adadelta(&gs, 0.95, 1e-6).state_scalars(), 12);
     }
 }

@@ -17,139 +17,115 @@
 //! modeling. Vectors (rank-1 groups) fall back to full AdaGrad/RMSprop
 //! accumulators as in the original. Momentum and update clipping are
 //! intentionally omitted (the paper's LM experiments disable momentum).
+//!
+//! State: `r` (rows) + `c` (cols) buffers on matrices, one `v` buffer on
+//! vectors — the layout [`crate::tensoring::memory::group_state_buffer_lens`]
+//! assigns, so the factored-vs-full decision is shared with the accounting.
 
-use super::{GroupSpec, Optimizer};
-use crate::tensoring::{natural_dims, OptimizerKind};
+use super::state::{OptState, UpdateRule};
+use crate::tensoring::OptimizerKind;
 use anyhow::Result;
 
-enum GroupState {
-    /// Factored: row and column accumulators over the natural matrix view
-    /// (leading dims merged into rows, last dim = columns).
-    Factored { rows: usize, cols: usize, r: Vec<f32>, c: Vec<f32> },
-    /// Full accumulator for vectors/scalars.
-    Full(Vec<f32>),
+pub struct AdafactorRule {
+    /// `None` = cumulative sums (the paper's LM setting).
+    pub beta2: Option<f32>,
+    pub eps: f32,
 }
 
-pub struct Adafactor {
-    beta2: Option<f32>,
-    eps: f32,
-    t: u64,
-    state: Vec<GroupState>,
-}
-
-impl Adafactor {
-    pub fn new(groups: &[GroupSpec], beta2: Option<f32>, eps: f32) -> Self {
-        let state = groups
-            .iter()
-            .map(|g| {
-                let nat = natural_dims(&g.shape);
-                if nat.len() >= 2 {
-                    let cols = nat[nat.len() - 1];
-                    let rows: usize = nat[..nat.len() - 1].iter().product();
-                    GroupState::Factored { rows, cols, r: vec![0.0; rows], c: vec![0.0; cols] }
-                } else {
-                    GroupState::Full(vec![0.0; g.numel()])
-                }
-            })
-            .collect();
-        Adafactor { beta2, eps, t: 0, state }
-    }
-}
-
-impl Optimizer for Adafactor {
-    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        match &mut self.state[gi] {
-            GroupState::Full(v) => {
-                anyhow::ensure!(x.len() == v.len() && g.len() == v.len());
-                for i in 0..v.len() {
-                    let sq = g[i] * g[i];
-                    v[i] = match self.beta2 {
-                        Some(b2) => b2 * v[i] + (1.0 - b2) * sq,
-                        None => v[i] + sq,
-                    };
-                    x[i] -= lr * g[i] / (v[i] + self.eps).sqrt();
-                }
-            }
-            GroupState::Factored { rows, cols, r, c } => {
-                let (rows, cols) = (*rows, *cols);
-                anyhow::ensure!(x.len() == rows * cols && g.len() == rows * cols);
-                // row/col mean squared gradients
-                let mut row_ms = vec![0.0f32; rows];
-                let mut col_ms = vec![0.0f32; cols];
-                for i in 0..rows {
-                    let grow = &g[i * cols..(i + 1) * cols];
-                    let mut acc = 0.0f32;
-                    for (j, &v) in grow.iter().enumerate() {
-                        let sq = v * v;
-                        acc += sq;
-                        col_ms[j] += sq;
-                    }
-                    row_ms[i] = acc / cols as f32;
-                }
-                for v in col_ms.iter_mut() {
-                    *v /= rows as f32;
-                }
-                match self.beta2 {
-                    Some(b2) => {
-                        for i in 0..rows {
-                            r[i] = b2 * r[i] + (1.0 - b2) * row_ms[i];
-                        }
-                        for j in 0..cols {
-                            c[j] = b2 * c[j] + (1.0 - b2) * col_ms[j];
-                        }
-                    }
-                    None => {
-                        for i in 0..rows {
-                            r[i] += row_ms[i];
-                        }
-                        for j in 0..cols {
-                            c[j] += col_ms[j];
-                        }
-                    }
-                }
-                let mean_r: f32 = r.iter().sum::<f32>() / rows as f32;
-                let inv_mean_r = if mean_r > 0.0 { 1.0 / mean_r } else { 0.0 };
-                for i in 0..rows {
-                    let ri = r[i] * inv_mean_r;
-                    let xrow = &mut x[i * cols..(i + 1) * cols];
-                    let grow = &g[i * cols..(i + 1) * cols];
-                    for j in 0..cols {
-                        let vhat = ri * c[j];
-                        xrow[j] -= lr * grow[j] / (vhat + self.eps).sqrt();
-                    }
-                }
-            }
-        }
-        Ok(())
-    }
-
-    fn state_scalars(&self) -> usize {
-        self.state
-            .iter()
-            .map(|s| match s {
-                GroupState::Factored { r, c, .. } => r.len() + c.len(),
-                GroupState::Full(v) => v.len(),
-            })
-            .sum()
-    }
-
+impl UpdateRule for AdafactorRule {
     fn kind(&self) -> OptimizerKind {
         OptimizerKind::Adafactor
     }
 
-    fn next_step(&mut self) {
-        self.t += 1;
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let gs = st.group_mut(gi);
+        let factored = gs.n_bufs() == 2;
+        let numel = gs.numel;
+        let (beta2, eps) = (self.beta2, self.eps);
+        if !factored {
+            anyhow::ensure!(x.len() == numel && g.len() == numel);
+            gs.with_bufs(|bufs| {
+                let v = &mut *bufs[0];
+                for i in 0..v.len() {
+                    let sq = g[i] * g[i];
+                    v[i] = match beta2 {
+                        Some(b2) => b2 * v[i] + (1.0 - b2) * sq,
+                        None => v[i] + sq,
+                    };
+                    x[i] -= lr * g[i] / (v[i] + eps).sqrt();
+                }
+            });
+            return Ok(());
+        }
+        let (rows, cols) = (gs.buf(0).len(), gs.buf(1).len());
+        anyhow::ensure!(x.len() == rows * cols && g.len() == rows * cols);
+        gs.with_bufs(|bufs| {
+            let (r, c) = bufs.split_at_mut(1);
+            let (r, c) = (&mut *r[0], &mut *c[0]);
+            // row/col mean squared gradients
+            let mut row_ms = vec![0.0f32; rows];
+            let mut col_ms = vec![0.0f32; cols];
+            for i in 0..rows {
+                let grow = &g[i * cols..(i + 1) * cols];
+                let mut acc = 0.0f32;
+                for (j, &v) in grow.iter().enumerate() {
+                    let sq = v * v;
+                    acc += sq;
+                    col_ms[j] += sq;
+                }
+                row_ms[i] = acc / cols as f32;
+            }
+            for v in col_ms.iter_mut() {
+                *v /= rows as f32;
+            }
+            match beta2 {
+                Some(b2) => {
+                    for i in 0..rows {
+                        r[i] = b2 * r[i] + (1.0 - b2) * row_ms[i];
+                    }
+                    for j in 0..cols {
+                        c[j] = b2 * c[j] + (1.0 - b2) * col_ms[j];
+                    }
+                }
+                None => {
+                    for i in 0..rows {
+                        r[i] += row_ms[i];
+                    }
+                    for j in 0..cols {
+                        c[j] += col_ms[j];
+                    }
+                }
+            }
+            let mean_r: f32 = r.iter().sum::<f32>() / rows as f32;
+            let inv_mean_r = if mean_r > 0.0 { 1.0 / mean_r } else { 0.0 };
+            for i in 0..rows {
+                let ri = r[i] * inv_mean_r;
+                let xrow = &mut x[i * cols..(i + 1) * cols];
+                let grow = &g[i * cols..(i + 1) * cols];
+                for j in 0..cols {
+                    let vhat = ri * c[j];
+                    xrow[j] -= lr * grow[j] / (vhat + eps).sqrt();
+                }
+            }
+        });
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{self, GroupSpec, Hyper, Optimizer, StateOptimizer};
+
+    fn adafactor(gs: &[GroupSpec], beta2: Option<f32>, eps: f32) -> StateOptimizer {
+        let hyper = Hyper { beta2, eps, ..Hyper::default() };
+        optim::build_state(OptimizerKind::Adafactor, gs, &hyper)
+    }
 
     #[test]
     fn memory_is_rows_plus_cols() {
         let gs = vec![GroupSpec::new("w", &[512, 2048]), GroupSpec::new("b", &[64])];
-        let o = Adafactor::new(&gs, None, 1e-8);
+        let o = adafactor(&gs, None, 1e-8);
         assert_eq!(o.state_scalars(), 512 + 2048 + 64);
     }
 
@@ -159,7 +135,7 @@ mod tests {
         // estimate Vhat equals g^2 exactly, so the first Adafactor step
         // matches full RMSprop on the same data.
         let gs = vec![GroupSpec::new("w", &[2, 3])];
-        let mut o = Adafactor::new(&gs, None, 0.0);
+        let mut o = adafactor(&gs, None, 0.0);
         // g[i][j] = a[i]*b[j] makes g^2 rank one
         let a = [1.0f32, 2.0];
         let b = [3.0f32, 1.0, 0.5];
@@ -175,7 +151,7 @@ mod tests {
     #[test]
     fn conv_shape_uses_natural_matrix() {
         let gs = vec![GroupSpec::new("conv", &[8, 4, 3, 3])];
-        let o = Adafactor::new(&gs, None, 1e-8);
+        let o = adafactor(&gs, None, 1e-8);
         // natural dims (8, 4, 9) -> rows 8*4=32, cols 9
         assert_eq!(o.state_scalars(), 32 + 9);
     }
@@ -183,7 +159,7 @@ mod tests {
     #[test]
     fn descends() {
         let gs = vec![GroupSpec::new("w", &[4, 4])];
-        let mut o = Adafactor::new(&gs, Some(0.99), 1e-30);
+        let mut o = adafactor(&gs, Some(0.99), 1e-30);
         let mut x = vec![1.0f32; 16];
         for _ in 0..300 {
             let g: Vec<f32> = x.clone();

@@ -1,65 +1,69 @@
 //! Diagonal AdaGrad (Duchi, Hazan & Singer 2011) — the full-memory endpoint
 //! of the paper's interpolation and the `p = 1` special case of Algorithm 1.
+//! State: one cumulative squared-gradient buffer `s` per group.
 
-use super::{GroupSpec, Optimizer};
+use super::state::{OptState, UpdateRule};
 use crate::tensoring::OptimizerKind;
 use anyhow::Result;
 
-pub struct AdaGrad {
-    eps: f32,
-    s: Vec<Vec<f32>>,
+pub struct AdaGradRule {
+    pub eps: f32,
 }
 
-impl AdaGrad {
-    pub fn new(groups: &[GroupSpec], eps: f32) -> Self {
-        AdaGrad { eps, s: groups.iter().map(|g| vec![0.0; g.numel()]).collect() }
-    }
-
-    /// Accumulated second moments (used by the regret instrumentation to
-    /// compute `Tr(Ĥ_T)`).
-    pub fn accumulators(&self) -> &[Vec<f32>] {
-        &self.s
-    }
-
-    /// `Tr(Ĥ_T) = sum_j (eps + S[j])^{1/2}` over all groups.
-    pub fn trace_h_hat(&self) -> f64 {
-        self.s
-            .iter()
-            .flat_map(|v| v.iter())
-            .map(|&x| ((self.eps + x) as f64).sqrt())
-            .sum()
-    }
-}
-
-impl Optimizer for AdaGrad {
-    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let s = &mut self.s[gi];
-        anyhow::ensure!(x.len() == s.len() && g.len() == s.len());
-        for i in 0..s.len() {
-            s[i] += g[i] * g[i];
-            x[i] -= lr * g[i] / (self.eps + s[i]).sqrt();
-        }
-        Ok(())
-    }
-
-    fn state_scalars(&self) -> usize {
-        self.s.iter().map(|v| v.len()).sum()
-    }
-
+impl UpdateRule for AdaGradRule {
     fn kind(&self) -> OptimizerKind {
         OptimizerKind::AdaGrad
     }
+
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let gs = st.group_mut(gi);
+        anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
+        let eps = self.eps;
+        gs.with_bufs(|bufs| {
+            let s = &mut *bufs[0];
+            for i in 0..s.len() {
+                s[i] += g[i] * g[i];
+                x[i] -= lr * g[i] / (eps + s[i]).sqrt();
+            }
+        });
+        Ok(())
+    }
+}
+
+/// `Tr(Ĥ_T) = sum_j (eps + S[j])^{1/2}` over all groups of an AdaGrad
+/// [`OptState`] — the regret-instrumentation quantity, now computable from
+/// any externalized state snapshot (not just a live optimizer).
+pub fn trace_h_hat(st: &OptState, eps: f32) -> f64 {
+    debug_assert_eq!(st.kind(), OptimizerKind::AdaGrad);
+    let mut total = 0.0f64;
+    for gi in 0..st.n_groups() {
+        let g = st.group(gi);
+        for bi in 0..g.n_bufs() {
+            total += g
+                .buf(bi)
+                .to_vec()
+                .iter()
+                .map(|&x| ((eps + x) as f64).sqrt())
+                .sum::<f64>();
+        }
+    }
+    total
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{self, GroupSpec, Hyper, Optimizer};
     use crate::testing::prop::{props, Gen};
+
+    fn adagrad(gs: &[GroupSpec], eps: f32) -> crate::optim::StateOptimizer {
+        optim::build_state(OptimizerKind::AdaGrad, gs, &Hyper { eps, ..Hyper::default() })
+    }
 
     #[test]
     fn update_rule_exact() {
         let gs = vec![GroupSpec::new("x", &[2])];
-        let mut o = AdaGrad::new(&gs, 0.0);
+        let mut o = adagrad(&gs, 0.0);
         let mut x = vec![0.0f32, 0.0];
         o.step(0, &mut x, &[3.0, 4.0], 1.0).unwrap();
         // x -= g / |g| elementwise on first step
@@ -71,7 +75,7 @@ mod tests {
     fn adapts_to_scale() {
         // Coordinates with wildly different gradient scales get equalized.
         let gs = vec![GroupSpec::new("x", &[2])];
-        let mut o = AdaGrad::new(&gs, 1e-10);
+        let mut o = adagrad(&gs, 1e-10);
         let mut x = vec![0.0f32, 0.0];
         for _ in 0..100 {
             o.step(0, &mut x, &[100.0, 0.01], 0.1).unwrap();
@@ -86,13 +90,9 @@ mod tests {
         props("adagrad_equals_et1_flat", 60, |g: &mut Gen| {
             let n = g.usize_in(1, 40);
             let gs = vec![GroupSpec::new("x", &[n])];
-            let mut ada = AdaGrad::new(&gs, 1e-8);
-            let mut et = super::super::extreme::ExtremeTensoring::new_with_dims(
-                &gs,
-                vec![vec![n]],
-                1e-8,
-                None,
-            );
+            let mut ada = adagrad(&gs, 1e-8);
+            let mut et =
+                super::super::extreme::custom_et(&gs, vec![vec![n]], 1e-8, None).unwrap();
             let (mut xa, mut xe) = (vec![0.5f32; n], vec![0.5f32; n]);
             for _ in 0..g.usize_in(1, 4) {
                 let grad = g.grad_vec(n);
@@ -114,9 +114,9 @@ mod tests {
     #[test]
     fn trace_h_hat_on_known_data() {
         let gs = vec![GroupSpec::new("x", &[2])];
-        let mut o = AdaGrad::new(&gs, 0.0);
+        let mut o = adagrad(&gs, 0.0);
         let mut x = vec![0.0f32; 2];
         o.step(0, &mut x, &[3.0, 4.0], 0.0).unwrap();
-        assert!((o.trace_h_hat() - (3.0 + 4.0)).abs() < 1e-9);
+        assert!((trace_h_hat(o.state(), 0.0) - (3.0 + 4.0)).abs() < 1e-9);
     }
 }

@@ -4,66 +4,55 @@
 //! that case (the buffer is still allocated for simplicity of accounting —
 //! the accounting module deliberately charges Adam 2d regardless, matching
 //! the paper's Table 1 which reports 7.0e7 = 2d for the 3.5e7-param model).
+//! State: `m` + `v` buffers per group; the shared `t` lives in
+//! [`OptState::step`].
 
-use super::{GroupSpec, Optimizer};
+use super::state::{OptState, UpdateRule};
 use crate::tensoring::OptimizerKind;
 use anyhow::Result;
 
-pub struct Adam {
-    beta1: f32,
-    beta2: f32,
-    eps: f32,
-    t: u64,
-    m: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+pub struct AdamRule {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
 }
 
-impl Adam {
-    pub fn new(groups: &[GroupSpec], beta1: f32, beta2: f32, eps: f32) -> Self {
-        Adam {
-            beta1,
-            beta2,
-            eps,
-            t: 0,
-            m: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
-            v: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
-        }
-    }
-}
-
-impl Optimizer for Adam {
-    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let (m, v) = (&mut self.m[gi], &mut self.v[gi]);
-        anyhow::ensure!(x.len() == m.len() && g.len() == m.len());
-        let t = self.t.max(1) as i32;
-        let bc1 = 1.0 - self.beta1.powi(t);
-        let bc2 = 1.0 - self.beta2.powi(t);
-        for i in 0..m.len() {
-            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
-            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
-            let mhat = m[i] / bc1;
-            let vhat = v[i] / bc2;
-            x[i] -= lr * mhat / (vhat.sqrt() + self.eps);
-        }
-        Ok(())
-    }
-
-    fn state_scalars(&self) -> usize {
-        self.m.iter().map(|v| v.len()).sum::<usize>() * 2
-    }
-
+impl UpdateRule for AdamRule {
     fn kind(&self) -> OptimizerKind {
         OptimizerKind::Adam
     }
 
-    fn next_step(&mut self) {
-        self.t += 1;
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let t = st.step.max(1) as i32;
+        let gs = st.group_mut(gi);
+        anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
+        let (beta1, beta2, eps) = (self.beta1, self.beta2, self.eps);
+        let bc1 = 1.0 - beta1.powi(t);
+        let bc2 = 1.0 - beta2.powi(t);
+        gs.with_bufs(|bufs| {
+            let (m, v) = bufs.split_at_mut(1);
+            let (m, v) = (&mut *m[0], &mut *v[0]);
+            for i in 0..m.len() {
+                m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+                v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                x[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        });
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{self, GroupSpec, Hyper, Optimizer, StateOptimizer};
+
+    fn adam(gs: &[GroupSpec], beta1: f32, beta2: f32, eps: f32) -> StateOptimizer {
+        let hyper = Hyper { beta1, beta2: Some(beta2), eps, ..Hyper::default() };
+        optim::build_state(OptimizerKind::Adam, gs, &hyper)
+    }
 
     #[test]
     fn first_step_is_lr_sized() {
@@ -71,7 +60,7 @@ mod tests {
         // regardless of gradient scale.
         for scale in [1e-3f32, 1.0, 1e3] {
             let gs = vec![GroupSpec::new("x", &[1])];
-            let mut o = Adam::new(&gs, 0.9, 0.999, 1e-12);
+            let mut o = adam(&gs, 0.9, 0.999, 1e-12);
             let mut x = vec![0.0f32];
             o.next_step();
             o.step(0, &mut x, &[scale], 0.01).unwrap();
@@ -82,7 +71,7 @@ mod tests {
     #[test]
     fn beta1_zero_has_no_momentum() {
         let gs = vec![GroupSpec::new("x", &[1])];
-        let mut o = Adam::new(&gs, 0.0, 0.999, 1e-12);
+        let mut o = adam(&gs, 0.0, 0.999, 1e-12);
         let mut x = vec![0.0f32];
         o.next_step();
         o.step(0, &mut x, &[1.0], 0.01).unwrap();
@@ -96,7 +85,7 @@ mod tests {
     #[test]
     fn counts_two_buffers() {
         let gs = vec![GroupSpec::new("w", &[4, 4])];
-        let o = Adam::new(&gs, 0.9, 0.999, 1e-8);
+        let o = adam(&gs, 0.9, 0.999, 1e-8);
         assert_eq!(o.state_scalars(), 32);
     }
 }

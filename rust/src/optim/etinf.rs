@@ -3,67 +3,56 @@
 //! accumulated sum of squared l2 norms of the group's gradients. The paper
 //! notes this achieves online-gradient-descent regret (Zinkevich 2003); its
 //! preconditioner is a tensor sum of scalar multiples of the identity.
+//!
+//! State: one *wide* (`f64`, never quantized) scalar per group — the whole
+//! group's adaptivity flows through it, so it stays in full precision
+//! under every [`crate::tensoring::StateBackend`].
 
-use super::{GroupSpec, Optimizer};
+use super::state::{OptState, UpdateRule};
 use crate::tensoring::OptimizerKind;
 use crate::util::math::sq_norm;
 use anyhow::Result;
 
-pub struct EtInf {
-    eps: f32,
-    s: Vec<f64>,
-    numels: Vec<usize>,
+pub struct EtInfRule {
+    pub eps: f32,
 }
 
-impl EtInf {
-    pub fn new(groups: &[GroupSpec], eps: f32) -> Self {
-        EtInf {
-            eps,
-            s: vec![0.0; groups.len()],
-            numels: groups.iter().map(|g| g.numel()).collect(),
-        }
+impl UpdateRule for EtInfRule {
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::EtInf
     }
 
-    /// Per-group scalar accumulators (one optimizer parameter each).
-    pub fn accumulators(&self) -> &[f64] {
-        &self.s
-    }
-}
-
-impl Optimizer for EtInf {
-    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        anyhow::ensure!(x.len() == self.numels[gi] && g.len() == self.numels[gi]);
-        self.s[gi] += sq_norm(g);
-        let rate = lr / (self.eps as f64 + self.s[gi]).sqrt() as f32;
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let gs = st.group_mut(gi);
+        anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
+        gs.wide[0] += sq_norm(g);
+        let rate = lr / (self.eps as f64 + gs.wide[0]).sqrt() as f32;
         for (xi, &gj) in x.iter_mut().zip(g) {
             *xi -= rate * gj;
         }
         Ok(())
-    }
-
-    fn state_scalars(&self) -> usize {
-        self.s.len()
-    }
-
-    fn kind(&self) -> OptimizerKind {
-        OptimizerKind::EtInf
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{self, GroupSpec, Hyper, Optimizer, StateOptimizer};
+
+    fn etinf(gs: &[GroupSpec], eps: f32) -> StateOptimizer {
+        optim::build_state(OptimizerKind::EtInf, gs, &Hyper { eps, ..Hyper::default() })
+    }
 
     #[test]
     fn one_scalar_per_group() {
         let gs = vec![GroupSpec::new("a", &[100]), GroupSpec::new("b", &[50, 2])];
-        assert_eq!(EtInf::new(&gs, 1e-8).state_scalars(), 2);
+        assert_eq!(etinf(&gs, 1e-8).state_scalars(), 2);
     }
 
     #[test]
     fn first_step_normalizes_by_group_norm() {
         let gs = vec![GroupSpec::new("a", &[2])];
-        let mut o = EtInf::new(&gs, 0.0);
+        let mut o = etinf(&gs, 0.0);
         let mut x = vec![0.0f32; 2];
         o.step(0, &mut x, &[3.0, 4.0], 1.0).unwrap();
         // rate = 1/||g|| = 1/5
@@ -74,7 +63,7 @@ mod tests {
     #[test]
     fn groups_adapt_independently() {
         let gs = vec![GroupSpec::new("a", &[1]), GroupSpec::new("b", &[1])];
-        let mut o = EtInf::new(&gs, 0.0);
+        let mut o = etinf(&gs, 0.0);
         let (mut xa, mut xb) = (vec![0.0f32], vec![0.0f32]);
         for _ in 0..10 {
             o.step(0, &mut xa, &[100.0], 1.0).unwrap();

@@ -1,89 +1,81 @@
-//! Extreme tensoring (Algorithm 1) as a drop-in optimizer: one
-//! [`SliceAccumulators`] per parameter group, with tensor indices chosen by
-//! the factorization planner at the requested level (or supplied
-//! explicitly, as the synthetic §5.4 experiment does).
+//! Extreme tensoring (Algorithm 1) as a stateless update rule: tensor
+//! indices chosen by the factorization planner at the requested level (or
+//! supplied explicitly, as the synthetic §5.4 experiment does), with the
+//! mode accumulators living externally in an [`OptState`] (one `s{i}`
+//! buffer per mode). The slice-sum arithmetic itself is the shared
+//! borrowed-state core in [`crate::tensoring::accumulator`], so this rule
+//! is bitwise-identical to the legacy [`SliceAccumulators`] path by
+//! construction.
+//!
+//! [`SliceAccumulators`]: crate::tensoring::SliceAccumulators
 
-use super::{GroupSpec, Optimizer};
+use super::state::{OptState, StateOptimizer, UpdateRule};
+use super::GroupSpec;
 use crate::tensoring::{
-    plan, EpsMode, Level, OptimizerKind, SliceAccumulators, TensorIndex,
+    accumulate_slices, apply_update_bias_corrected_slices, plan, EpsMode, Level, OptimizerKind,
+    StateBackend, TensorIndex,
 };
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-pub struct ExtremeTensoring {
+pub struct EtRule {
+    /// ET level; 0 means caller-supplied (custom) dims.
     level: u8,
-    accs: Vec<SliceAccumulators>,
+    eps: f32,
+    beta2: Option<f32>,
+    /// One planned tensor index per group — immutable configuration, not
+    /// state (it is a pure function of the group shapes and the level).
+    indices: Vec<TensorIndex>,
 }
 
-impl ExtremeTensoring {
+impl EtRule {
     /// Plan indices automatically for `level` (ET1/ET2/ET3...).
-    pub fn new(groups: &[GroupSpec], level: u8, eps: f32, beta2: Option<f32>) -> Self {
-        let dims: Vec<Vec<usize>> =
-            groups.iter().map(|g| plan(&g.shape, Level::Et(level))).collect();
-        Self::new_with_dims_level(groups, dims, eps, beta2, level)
+    pub fn planned(groups: &[GroupSpec], level: u8, eps: f32, beta2: Option<f32>) -> EtRule {
+        let indices = groups
+            .iter()
+            .map(|g| {
+                TensorIndex::new(&plan(&g.shape, Level::Et(level)))
+                    .expect("planner emits valid dims")
+            })
+            .collect();
+        EtRule { level, eps, beta2, indices }
     }
 
     /// Explicit tensor-index dims per group (must multiply to each group's
     /// numel). This is how the paper's synthetic experiment specifies
     /// indices like `(10, 16, 32)` over a `(10, 512)` matrix.
-    pub fn new_with_dims(
+    pub fn with_dims(
         groups: &[GroupSpec],
-        dims: Vec<Vec<usize>>,
+        dims: &[Vec<usize>],
         eps: f32,
         beta2: Option<f32>,
-    ) -> Self {
-        Self::new_with_dims_level(groups, dims, eps, beta2, 0)
+    ) -> Result<EtRule> {
+        anyhow::ensure!(
+            groups.len() == dims.len(),
+            "{} groups but {} dim lists",
+            groups.len(),
+            dims.len()
+        );
+        let mut indices = Vec::with_capacity(groups.len());
+        for (g, d) in groups.iter().zip(dims) {
+            let ix = TensorIndex::new(d).with_context(|| format!("group {}", g.name))?;
+            anyhow::ensure!(
+                ix.numel() == g.numel(),
+                "group {}: index dims {:?} do not cover shape {:?}",
+                g.name,
+                d,
+                g.shape
+            );
+            indices.push(ix);
+        }
+        Ok(EtRule { level: 0, eps, beta2, indices })
     }
 
-    fn new_with_dims_level(
-        groups: &[GroupSpec],
-        dims: Vec<Vec<usize>>,
-        eps: f32,
-        beta2: Option<f32>,
-        level: u8,
-    ) -> Self {
-        assert_eq!(groups.len(), dims.len());
-        let accs = groups
-            .iter()
-            .zip(&dims)
-            .map(|(g, d)| {
-                let ix = TensorIndex::new(d).unwrap_or_else(|e| panic!("group {}: {e}", g.name));
-                assert_eq!(
-                    ix.numel(),
-                    g.numel(),
-                    "group {}: index dims {:?} do not cover shape {:?}",
-                    g.name,
-                    d,
-                    g.shape
-                );
-                SliceAccumulators::new(ix, eps, beta2, EpsMode::InsideProduct)
-            })
-            .collect();
-        ExtremeTensoring { level, accs }
-    }
-
-    pub fn accumulators(&self) -> &[SliceAccumulators] {
-        &self.accs
-    }
-
-    /// `Tr(H_T)` over all groups (tensor-sum of per-group Kronecker
-    /// preconditioners ⇒ traces add). Drives the Figure 2 reproduction.
-    pub fn trace_h(&self) -> f64 {
-        self.accs.iter().map(|a| a.trace_h()).sum()
+    pub fn index(&self, gi: usize) -> &TensorIndex {
+        &self.indices[gi]
     }
 }
 
-impl Optimizer for ExtremeTensoring {
-    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let acc = &mut self.accs[gi];
-        acc.accumulate(g)?;
-        acc.apply_update_bias_corrected(x, g, lr);
-        Ok(())
-    }
-
-    fn state_scalars(&self) -> usize {
-        self.accs.iter().map(|a| a.state_len()).sum()
-    }
-
+impl UpdateRule for EtRule {
     fn kind(&self) -> OptimizerKind {
         if self.level == 0 {
             OptimizerKind::Et(1) // custom dims: report as ET-family
@@ -99,32 +91,86 @@ impl Optimizer for ExtremeTensoring {
             format!("ET{}", self.level)
         }
     }
+
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let ix = &self.indices[gi];
+        let gs = st.group_mut(gi);
+        anyhow::ensure!(x.len() == ix.numel() && g.len() == ix.numel());
+        // Per-group accumulate count drives the (optional) bias correction,
+        // exactly like `SliceAccumulators::steps` did.
+        gs.steps += 1;
+        let steps = gs.steps;
+        let (eps, beta2) = (self.eps, self.beta2);
+        let dims = ix.dims();
+        gs.with_bufs(|bufs| -> Result<()> {
+            accumulate_slices(dims, &mut *bufs, beta2, g)?;
+            apply_update_bias_corrected_slices(
+                dims,
+                &*bufs,
+                eps,
+                EpsMode::InsideProduct,
+                beta2,
+                steps,
+                x,
+                g,
+                lr,
+            );
+            Ok(())
+        })
+    }
+}
+
+/// Build a custom-dims ET optimizer (dense state): rule + a state layout
+/// with one `s{i}` buffer per supplied mode. Fails if any dim list does not
+/// cover its group.
+pub fn custom_et(
+    groups: &[GroupSpec],
+    dims: Vec<Vec<usize>>,
+    eps: f32,
+    beta2: Option<f32>,
+) -> Result<StateOptimizer> {
+    let rule = EtRule::with_dims(groups, &dims, eps, beta2)?;
+    let state = OptState::with_layout(
+        OptimizerKind::Et(1),
+        groups,
+        StateBackend::DenseF32,
+        |gi, _| {
+            let lens = &dims[gi];
+            (lens.iter().enumerate().map(|(i, &l)| (format!("s{i}"), l)).collect(), 0)
+        },
+    );
+    Ok(StateOptimizer::from_parts(Box::new(rule), state))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{self, Hyper, Optimizer};
     use crate::testing::prop::{props, Gen};
+
+    fn et(gs: &[GroupSpec], level: u8, eps: f32) -> crate::optim::StateOptimizer {
+        optim::build_state(OptimizerKind::Et(level), gs, &Hyper { eps, ..Hyper::default() })
+    }
 
     #[test]
     fn et1_matrix_keeps_shape() {
         let gs = vec![GroupSpec::new("w", &[16, 32])];
-        let o = ExtremeTensoring::new(&gs, 1, 1e-8, None);
+        let o = et(&gs, 1, 1e-8);
         assert_eq!(o.state_scalars(), 48);
     }
 
     #[test]
     fn custom_dims_validate() {
         let gs = vec![GroupSpec::new("w", &[10, 512])];
-        let o = ExtremeTensoring::new_with_dims(&gs, vec![vec![10, 16, 32]], 1e-8, None);
+        let o = custom_et(&gs, vec![vec![10, 16, 32]], 1e-8, None).unwrap();
         assert_eq!(o.state_scalars(), 10 + 16 + 32);
     }
 
     #[test]
-    #[should_panic(expected = "do not cover")]
     fn custom_dims_must_cover() {
         let gs = vec![GroupSpec::new("w", &[10, 512])];
-        let _ = ExtremeTensoring::new_with_dims(&gs, vec![vec![10, 10]], 1e-8, None);
+        let err = custom_et(&gs, vec![vec![10, 10]], 1e-8, None).err().unwrap();
+        assert!(format!("{err:#}").contains("do not cover"), "{err:#}");
     }
 
     #[test]
@@ -132,7 +178,7 @@ mod tests {
         // f(x) = 0.5 sum c_j x_j^2 with condition number 1e4.
         let n = 64;
         let gs = vec![GroupSpec::new("x", &[8, 8])];
-        let mut o = ExtremeTensoring::new(&gs, 2, 1e-8, None);
+        let mut o = et(&gs, 2, 1e-8);
         let c: Vec<f32> = (0..n).map(|j| 10f32.powf(4.0 * j as f32 / (n - 1) as f32)).collect();
         let mut x = vec![1.0f32; n];
         let loss =
@@ -156,7 +202,7 @@ mod tests {
             let grad = g.grad_vec(n);
             let mut prev_mem = usize::MAX;
             for level in 1..=3u8 {
-                let mut o = ExtremeTensoring::new(&gs, level, 1e-8, None);
+                let mut o = et(&gs, level, 1e-8);
                 assert!(o.state_scalars() <= prev_mem);
                 prev_mem = o.state_scalars();
                 let mut x = vec![0.0f32; n];
@@ -184,8 +230,12 @@ mod tests {
             let shape = vec![g.usize_in(2, 16), g.usize_in(2, 16)];
             let n: usize = shape.iter().product();
             let gs = vec![GroupSpec::new("w", &shape)];
-            let mut et = ExtremeTensoring::new(&gs, 2, 1e-10, None);
-            let mut ada = super::super::adagrad::AdaGrad::new(&gs, 1e-10);
+            let mut et = et(&gs, 2, 1e-10);
+            let mut ada = optim::build_state(
+                OptimizerKind::AdaGrad,
+                &gs,
+                &Hyper { eps: 1e-10, ..Hyper::default() },
+            );
             let (mut xe, mut xa) = (vec![0.0f32; n], vec![0.0f32; n]);
             let grad = g.grad_vec(n);
             et.step(0, &mut xe, &grad, 1.0).unwrap();

@@ -1,21 +1,42 @@
-//! Pure-rust optimizer suite.
+//! Pure-rust optimizer suite, redesigned around externalized state.
 //!
 //! Every second-moment method the paper compares — SGD, AdaGrad, Adam,
 //! RMSprop, Adadelta, Adafactor — plus extreme tensoring at any level and
-//! ET∞. These implementations serve three roles:
+//! ET∞. The suite serves three roles:
 //!
 //! 1. the native engine for the convex experiments (§5.4 / Figure 3) and
 //!    the regret measurements (Figure 2), which run entirely in rust;
 //! 2. the *oracle* that cross-checks the JAX/Pallas train-step artifacts in
 //!    integration tests (same inputs → same update, see `rust/tests/`);
-//! 3. the hot path for host-side training in `examples/` when no PJRT
-//!    artifact is involved — optionally parallelized across persistent
-//!    worker threads by [`crate::shard::ShardedOptimizer`], which
-//!    implements the same [`Optimizer`] trait.
+//! 3. the hot path for host-side training when no PJRT artifact is
+//!    involved — optionally parallelized across persistent worker threads
+//!    by [`crate::shard::ShardedOptimizer`].
 //!
-//! All optimizers share the [`Optimizer`] trait: state is created from the
-//! model's parameter-group specs, and `step` is called per group with the
-//! flat parameter and gradient slices.
+//! # Architecture: state is data, rules are functions
+//!
+//! The paper's point is that preconditioner *state* is the memory
+//! bottleneck, so the API splits an optimizer into two halves:
+//!
+//! * [`OptState`] — the serializable state object: named `f32` buffers per
+//!   parameter group (layout from
+//!   [`crate::tensoring::memory::group_state_buffer_lens`]), a per-group
+//!   step counter, and a never-quantized `f64` "wide" vector. Buffers are
+//!   [`StateBuf`]s behind a [`StateBackend`]: plain `f32` or 8-bit
+//!   block-quantized (scale+offset per block), so state can be inspected,
+//!   checkpointed ([`OptState::export`]/[`OptState::import`]), migrated
+//!   between shard workers, or stored at reduced precision.
+//! * [`UpdateRule`] — the stateless update rule
+//!   `step(&mut OptState, gi, x, g, lr)`; one implementation per
+//!   [`OptimizerKind`], holding only hyperparameters and planned tensor
+//!   indices.
+//!
+//! [`StateOptimizer`] bundles the two behind the classic [`Optimizer`]
+//! trait, whose batched [`Optimizer::step_all`] entry point updates every
+//! group with a single dynamic dispatch (the per-group loop inside the
+//! rule is monomorphic). Under the dense backend, updates are
+//! bitwise-identical to the pre-refactor embedded-state optimizers
+//! (`rust/tests/golden_parity.rs`) and to the sharded engine
+//! (`rust/tests/sharded_parity.rs`).
 
 pub mod adadelta;
 pub mod adafactor;
@@ -26,10 +47,14 @@ pub mod extreme;
 pub mod rmsprop;
 pub mod schedule;
 pub mod sgd;
+pub mod state;
 
 pub use schedule::Schedule;
+pub use state::{
+    GroupExport, GroupState, OptState, Q8Buf, StateBuf, StateExport, StateOptimizer, UpdateRule,
+};
 
-use crate::tensoring::OptimizerKind;
+use crate::tensoring::{OptimizerKind, StateBackend};
 use anyhow::Result;
 
 /// Static description of one parameter group (name + tensor shape).
@@ -54,10 +79,34 @@ pub trait Optimizer: Send {
     /// Apply one update to group `gi`: `x <- x - lr * precondition(g)`.
     fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()>;
 
+    /// One full optimizer step over every group in one call — the batched
+    /// hot path used by the trainer and the shard workers. Does *not*
+    /// advance the step counter; callers pair it with [`Self::next_step`]
+    /// exactly as they would a per-group loop. The default is that loop;
+    /// [`StateOptimizer`] overrides it with a single-dispatch version.
+    fn step_all(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == grads.len(),
+            "step_all: {} params vs {} grads",
+            params.len(),
+            grads.len()
+        );
+        for (gi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            self.step(gi, p, g, lr)?;
+        }
+        Ok(())
+    }
+
     /// Total optimizer-state scalars actually allocated (the paper's
     /// "optimizer parameter count"). Must agree with
     /// [`crate::tensoring::memory::group_state_scalars`] — tested.
     fn state_scalars(&self) -> usize;
+
+    /// Physical bytes of optimizer state held. `4 * state_scalars` for
+    /// dense `f32` storage; less under quantized [`StateBackend`]s.
+    fn state_bytes(&self) -> usize {
+        self.state_scalars() * 4
+    }
 
     fn kind(&self) -> OptimizerKind;
 
@@ -70,12 +119,16 @@ pub trait Optimizer: Send {
     fn next_step(&mut self) {}
 }
 
-/// Hyperparameters shared across the suite.
+/// Hyperparameters shared across the suite, plus the state-storage
+/// backend. `None` decay fields fall back to the per-kind defaults
+/// centralized in the associated constants below.
 #[derive(Clone, Debug)]
 pub struct Hyper {
     pub eps: f32,
-    /// Second-moment decay; `None` = cumulative (AdaGrad-style). Used by
-    /// Adam/RMSprop/Adafactor and optionally by ET.
+    /// Second-moment decay; `None` = per-kind default ([`Hyper::ADAM_BETA2`]
+    /// for Adam, [`Hyper::RMSPROP_BETA2`] for RMSprop,
+    /// [`Hyper::ADADELTA_RHO`] for Adadelta, cumulative AdaGrad-style sums
+    /// for Adafactor).
     pub beta2: Option<f32>,
     /// First-moment (momentum) coefficient where supported.
     pub beta1: f32,
@@ -83,36 +136,81 @@ pub struct Hyper {
     /// does not help language modeling (`None`) but uses `beta2 = 0.99` for
     /// the vision experiments.
     pub et_beta2: Option<f32>,
+    /// Physical storage for optimizer-state buffers (dense `f32` or 8-bit
+    /// block-quantized). Wide `f64` state (ET∞) is never quantized.
+    pub backend: StateBackend,
+}
+
+impl Hyper {
+    /// Damping added inside the preconditioner root. 1e-8 is the value the
+    /// paper's Algorithm 1 experiments use (and Kingma & Ba 2014's Adam
+    /// default).
+    pub const EPS: f32 = 1e-8;
+    /// Adam first-moment decay — Kingma & Ba 2014, Algorithm 1.
+    pub const BETA1: f32 = 0.9;
+    /// Adam second-moment decay — Kingma & Ba 2014, Algorithm 1.
+    pub const ADAM_BETA2: f32 = 0.999;
+    /// RMSprop accumulator decay — the value the paper's vision appendix
+    /// uses for its decayed accumulators (Tieleman & Hinton's lecture
+    /// originally suggested 0.9).
+    pub const RMSPROP_BETA2: f32 = 0.99;
+    /// Adadelta averaging constant ρ — Zeiler 2012, §4 experiments.
+    pub const ADADELTA_RHO: f32 = 0.95;
 }
 
 impl Default for Hyper {
     fn default() -> Self {
-        Hyper { eps: 1e-8, beta2: Some(0.999), beta1: 0.9, et_beta2: None }
+        Hyper {
+            eps: Self::EPS,
+            beta2: Some(Self::ADAM_BETA2),
+            beta1: Self::BETA1,
+            et_beta2: None,
+            backend: StateBackend::DenseF32,
+        }
     }
 }
 
-/// Build an optimizer of `kind` for `groups`.
-pub fn build(kind: OptimizerKind, groups: &[GroupSpec], hyper: &Hyper) -> Box<dyn Optimizer> {
+/// Build the stateless update rule for `kind`. Per-kind decay defaults are
+/// resolved here, in one place, from the [`Hyper`] constants.
+pub fn build_rule(kind: OptimizerKind, groups: &[GroupSpec], hyper: &Hyper) -> Box<dyn UpdateRule> {
     match kind {
-        OptimizerKind::Sgd => Box::new(sgd::Sgd::new(groups)),
-        OptimizerKind::AdaGrad => Box::new(adagrad::AdaGrad::new(groups, hyper.eps)),
-        OptimizerKind::Adam => {
-            Box::new(adam::Adam::new(groups, hyper.beta1, hyper.beta2.unwrap_or(0.999), hyper.eps))
-        }
-        OptimizerKind::RmsProp => {
-            Box::new(rmsprop::RmsProp::new(groups, hyper.beta2.unwrap_or(0.99), hyper.eps))
-        }
-        OptimizerKind::AdaDelta => {
-            Box::new(adadelta::AdaDelta::new(groups, hyper.beta2.unwrap_or(0.95), hyper.eps))
-        }
+        OptimizerKind::Sgd => Box::new(sgd::SgdRule),
+        OptimizerKind::AdaGrad => Box::new(adagrad::AdaGradRule { eps: hyper.eps }),
+        OptimizerKind::Adam => Box::new(adam::AdamRule {
+            beta1: hyper.beta1,
+            beta2: hyper.beta2.unwrap_or(Hyper::ADAM_BETA2),
+            eps: hyper.eps,
+        }),
+        OptimizerKind::RmsProp => Box::new(rmsprop::RmsPropRule {
+            beta2: hyper.beta2.unwrap_or(Hyper::RMSPROP_BETA2),
+            eps: hyper.eps,
+        }),
+        OptimizerKind::AdaDelta => Box::new(adadelta::AdaDeltaRule {
+            rho: hyper.beta2.unwrap_or(Hyper::ADADELTA_RHO),
+            eps: hyper.eps,
+        }),
         OptimizerKind::Adafactor => {
-            Box::new(adafactor::Adafactor::new(groups, hyper.beta2, hyper.eps))
+            Box::new(adafactor::AdafactorRule { beta2: hyper.beta2, eps: hyper.eps })
         }
         OptimizerKind::Et(level) => {
-            Box::new(extreme::ExtremeTensoring::new(groups, level, hyper.eps, hyper.et_beta2))
+            Box::new(extreme::EtRule::planned(groups, level, hyper.eps, hyper.et_beta2))
         }
-        OptimizerKind::EtInf => Box::new(etinf::EtInf::new(groups, hyper.eps)),
+        OptimizerKind::EtInf => Box::new(etinf::EtInfRule { eps: hyper.eps }),
     }
+}
+
+/// Build an optimizer of `kind` for `groups` as a concrete
+/// [`StateOptimizer`] (rule + externalized state under `hyper.backend`).
+pub fn build_state(kind: OptimizerKind, groups: &[GroupSpec], hyper: &Hyper) -> StateOptimizer {
+    StateOptimizer::from_parts(
+        build_rule(kind, groups, hyper),
+        OptState::new(kind, groups, hyper.backend),
+    )
+}
+
+/// Build an optimizer of `kind` for `groups`, boxed.
+pub fn build(kind: OptimizerKind, groups: &[GroupSpec], hyper: &Hyper) -> Box<dyn Optimizer> {
+    Box::new(build_state(kind, groups, hyper))
 }
 
 /// All optimizer kinds in the paper's Table 1 comparison, in display order.
@@ -132,7 +230,7 @@ pub fn table1_kinds() -> Vec<OptimizerKind> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensoring::memory::group_state_scalars;
+    use crate::tensoring::memory::{group_state_bytes, group_state_scalars};
 
     fn groups() -> Vec<GroupSpec> {
         vec![
@@ -142,13 +240,8 @@ mod tests {
         ]
     }
 
-    /// The live optimizers must allocate exactly what the accounting module
-    /// claims (paper's memory model) — for every kind.
-    #[test]
-    fn state_scalars_match_accounting() {
-        let gs = groups();
-        let hyper = Hyper::default();
-        for kind in [
+    fn all_kinds() -> Vec<OptimizerKind> {
+        vec![
             OptimizerKind::Sgd,
             OptimizerKind::AdaGrad,
             OptimizerKind::Adam,
@@ -159,42 +252,136 @@ mod tests {
             OptimizerKind::Et(2),
             OptimizerKind::Et(3),
             OptimizerKind::EtInf,
-        ] {
-            let opt = build(kind, &gs, &hyper);
-            let want: usize = gs.iter().map(|g| group_state_scalars(kind, &g.shape)).sum();
-            // SGD accounting reports 1 (the lr) but allocates 0.
-            let want = if kind == OptimizerKind::Sgd { 0 } else { want };
-            assert_eq!(opt.state_scalars(), want, "kind {kind:?}");
+        ]
+    }
+
+    /// The live optimizers must allocate exactly what the accounting module
+    /// claims (paper's memory model) — for every kind and both backends.
+    #[test]
+    fn state_accounting_matches_memory_model() {
+        let gs = groups();
+        for backend in [StateBackend::DenseF32, StateBackend::q8()] {
+            let hyper = Hyper { backend, ..Hyper::default() };
+            for kind in all_kinds() {
+                let opt = build(kind, &gs, &hyper);
+                let scalars: usize =
+                    gs.iter().map(|g| group_state_scalars(kind, &g.shape)).sum();
+                // SGD accounting reports 1 (the lr) in MemoryReport but
+                // allocates 0.
+                let scalars = if kind == OptimizerKind::Sgd { 0 } else { scalars };
+                assert_eq!(opt.state_scalars(), scalars, "kind {kind:?} {backend:?}");
+                let bytes: usize =
+                    gs.iter().map(|g| group_state_bytes(kind, &g.shape, backend)).sum();
+                assert_eq!(opt.state_bytes(), bytes, "kind {kind:?} {backend:?}");
+            }
         }
     }
 
-    /// Every optimizer must descend on a trivial quadratic.
+    /// Every optimizer must descend on a trivial quadratic — under both the
+    /// dense and the 8-bit quantized state backend.
     #[test]
     fn all_kinds_descend_quadratic() {
-        let gs = vec![GroupSpec::new("x", &[8])];
-        let hyper = Hyper::default();
-        for kind in table1_kinds()
-            .into_iter()
-            .chain([OptimizerKind::RmsProp, OptimizerKind::AdaDelta])
-        {
-            let mut opt = build(kind, &gs, &hyper);
-            let mut x = vec![2.0f32; 8];
-            let loss = |x: &[f32]| x.iter().map(|&v| 0.5 * v * v).sum::<f32>();
-            let initial = loss(&x);
-            // Adadelta is conventionally run with lr = 1.0 (it derives its
-            // own scale); the others get a generic 0.1.
-            let lr = if kind == OptimizerKind::AdaDelta { 1.0 } else { 0.1 };
-            for _ in 0..600 {
-                let g: Vec<f32> = x.to_vec(); // grad of 0.5 x^2
-                opt.next_step();
-                opt.step(0, &mut x, &g, lr).unwrap();
+        for backend in [StateBackend::DenseF32, StateBackend::q8()] {
+            let gs = vec![GroupSpec::new("x", &[8])];
+            let hyper = Hyper { backend, ..Hyper::default() };
+            for kind in table1_kinds()
+                .into_iter()
+                .chain([OptimizerKind::RmsProp, OptimizerKind::AdaDelta])
+            {
+                let mut opt = build(kind, &gs, &hyper);
+                let mut x = vec![2.0f32; 8];
+                let loss = |x: &[f32]| x.iter().map(|&v| 0.5 * v * v).sum::<f32>();
+                let initial = loss(&x);
+                // Adadelta is conventionally run with lr = 1.0 (it derives
+                // its own scale); the others get a generic 0.1.
+                let lr = if kind == OptimizerKind::AdaDelta { 1.0 } else { 0.1 };
+                for _ in 0..600 {
+                    let g: Vec<f32> = x.to_vec(); // grad of 0.5 x^2
+                    opt.next_step();
+                    opt.step(0, &mut x, &g, lr).unwrap();
+                }
+                let fin = loss(&x);
+                assert!(
+                    fin < initial * 0.5,
+                    "{kind:?} under {backend:?} failed to descend: {initial} -> {fin}"
+                );
             }
-            let fin = loss(&x);
-            assert!(
-                fin < initial * 0.5,
-                "{:?} failed to descend: {initial} -> {fin}",
-                kind
-            );
+        }
+    }
+
+    /// The batched entry point must agree with the per-group loop exactly.
+    #[test]
+    fn step_all_matches_per_group_loop() {
+        use crate::util::rng::Pcg64;
+        let gs = groups();
+        let mut rng = Pcg64::seeded(11);
+        let grads: Vec<Vec<f32>> = gs
+            .iter()
+            .map(|g| {
+                let mut v = vec![0.0f32; g.numel()];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        for kind in all_kinds() {
+            let hyper = Hyper::default();
+            let mut a = build(kind, &gs, &hyper);
+            let mut b = build(kind, &gs, &hyper);
+            let mut pa: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.4f32; g.numel()]).collect();
+            let mut pb = pa.clone();
+            for _ in 0..3 {
+                a.next_step();
+                for (gi, (p, g)) in pa.iter_mut().zip(&grads).enumerate() {
+                    a.step(gi, p, g, 0.05).unwrap();
+                }
+                b.next_step();
+                b.step_all(&mut pb, &grads, 0.05).unwrap();
+            }
+            assert_eq!(pa, pb, "kind {kind:?}");
+        }
+    }
+
+    /// Export → fresh import must continue the trajectory bitwise.
+    #[test]
+    fn export_import_resumes_bitwise() {
+        use crate::util::rng::Pcg64;
+        let gs = groups();
+        let mut rng = Pcg64::seeded(29);
+        let stream: Vec<Vec<Vec<f32>>> = (0..6)
+            .map(|_| {
+                gs.iter()
+                    .map(|g| {
+                        let mut v = vec![0.0f32; g.numel()];
+                        rng.fill_normal(&mut v, 1.0);
+                        v
+                    })
+                    .collect()
+            })
+            .collect();
+        for kind in all_kinds() {
+            let hyper = Hyper::default();
+            // Uninterrupted run.
+            let mut full = build_state(kind, &gs, &hyper);
+            let mut want: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.25f32; g.numel()]).collect();
+            for grads in &stream {
+                full.next_step();
+                full.step_all(&mut want, grads, 0.07).unwrap();
+            }
+            // Run 3 steps, export, import into a fresh optimizer, continue.
+            let mut first = build_state(kind, &gs, &hyper);
+            let mut got: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.25f32; g.numel()]).collect();
+            for grads in &stream[..3] {
+                first.next_step();
+                first.step_all(&mut got, grads, 0.07).unwrap();
+            }
+            let snapshot = first.export();
+            let mut second = build_state(kind, &gs, &hyper);
+            second.import(&snapshot).unwrap();
+            for grads in &stream[3..] {
+                second.next_step();
+                second.step_all(&mut got, grads, 0.07).unwrap();
+            }
+            assert_eq!(want, got, "kind {kind:?}");
         }
     }
 }

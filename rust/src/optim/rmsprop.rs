@@ -1,52 +1,52 @@
 //! RMSprop (Tieleman & Hinton 2012): exponentially decayed second-moment
-//! accumulator, no momentum, no bias correction.
+//! accumulator, no momentum, no bias correction. State: one `v` buffer per
+//! group.
 
-use super::{GroupSpec, Optimizer};
+use super::state::{OptState, UpdateRule};
 use crate::tensoring::OptimizerKind;
 use anyhow::Result;
 
-pub struct RmsProp {
-    beta2: f32,
-    eps: f32,
-    v: Vec<Vec<f32>>,
+pub struct RmsPropRule {
+    pub beta2: f32,
+    pub eps: f32,
 }
 
-impl RmsProp {
-    pub fn new(groups: &[GroupSpec], beta2: f32, eps: f32) -> Self {
-        RmsProp { beta2, eps, v: groups.iter().map(|g| vec![0.0; g.numel()]).collect() }
-    }
-}
-
-impl Optimizer for RmsProp {
-    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let v = &mut self.v[gi];
-        anyhow::ensure!(x.len() == v.len() && g.len() == v.len());
-        for i in 0..v.len() {
-            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
-            x[i] -= lr * g[i] / (v[i].sqrt() + self.eps);
-        }
-        Ok(())
-    }
-
-    fn state_scalars(&self) -> usize {
-        self.v.iter().map(|v| v.len()).sum()
-    }
-
+impl UpdateRule for RmsPropRule {
     fn kind(&self) -> OptimizerKind {
         OptimizerKind::RmsProp
+    }
+
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let gs = st.group_mut(gi);
+        anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
+        let (beta2, eps) = (self.beta2, self.eps);
+        gs.with_bufs(|bufs| {
+            let v = &mut *bufs[0];
+            for i in 0..v.len() {
+                v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+                x[i] -= lr * g[i] / (v[i].sqrt() + eps);
+            }
+        });
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{self, GroupSpec, Hyper, Optimizer, StateOptimizer};
+
+    fn rmsprop(gs: &[GroupSpec], beta2: f32, eps: f32) -> StateOptimizer {
+        let hyper = Hyper { beta2: Some(beta2), eps, ..Hyper::default() };
+        optim::build_state(OptimizerKind::RmsProp, gs, &hyper)
+    }
 
     #[test]
     fn stationary_gradient_gives_unit_steps() {
         // With a constant gradient, v converges to g^2 and steps approach
         // lr * sign(g).
         let gs = vec![GroupSpec::new("x", &[1])];
-        let mut o = RmsProp::new(&gs, 0.9, 1e-12);
+        let mut o = rmsprop(&gs, 0.9, 1e-12);
         let mut x = vec![0.0f32];
         let mut last = 0.0f32;
         for _ in 0..400 {
@@ -60,6 +60,6 @@ mod tests {
     #[test]
     fn memory_is_d() {
         let gs = vec![GroupSpec::new("w", &[3, 5])];
-        assert_eq!(RmsProp::new(&gs, 0.99, 1e-8).state_scalars(), 15);
+        assert_eq!(rmsprop(&gs, 0.99, 1e-8).state_scalars(), 15);
     }
 }

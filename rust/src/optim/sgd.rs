@@ -2,66 +2,49 @@
 //! paper's interpolation study (Table 1 reports its optimizer parameter
 //! count as 1: the global learning rate).
 
-use super::{GroupSpec, Optimizer};
+use super::state::{OptState, StateOptimizer, UpdateRule};
+use super::{GroupSpec, Hyper};
 use crate::tensoring::OptimizerKind;
 use anyhow::Result;
 
-pub struct Sgd {
-    numels: Vec<usize>,
-}
+/// `x <- x - lr * g`; no state buffers at all.
+pub struct SgdRule;
 
-impl Sgd {
-    pub fn new(groups: &[GroupSpec]) -> Self {
-        Sgd { numels: groups.iter().map(|g| g.numel()).collect() }
-    }
-}
-
-impl Optimizer for Sgd {
-    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        anyhow::ensure!(x.len() == self.numels[gi] && g.len() == self.numels[gi]);
-        for (xi, &gi_) in x.iter_mut().zip(g) {
-            *xi -= lr * gi_;
-        }
-        Ok(())
-    }
-
-    fn state_scalars(&self) -> usize {
-        0
-    }
-
+impl UpdateRule for SgdRule {
     fn kind(&self) -> OptimizerKind {
         OptimizerKind::Sgd
+    }
+
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let numel = st.group(gi).numel;
+        anyhow::ensure!(x.len() == numel && g.len() == numel);
+        for (xi, &gj) in x.iter_mut().zip(g) {
+            *xi -= lr * gj;
+        }
+        Ok(())
     }
 }
 
 /// SGD with classical momentum. Not part of the paper's memory study (the
-/// buffer costs `d`), provided for completeness and ablations.
-pub struct SgdMomentum {
-    mu: f32,
-    v: Vec<Vec<f32>>,
+/// buffer costs `d`), provided for completeness and ablations. The
+/// momentum buffer is externalized like every other state buffer.
+pub struct SgdMomentumRule {
+    pub mu: f32,
 }
 
-impl SgdMomentum {
-    pub fn new(groups: &[GroupSpec], mu: f32) -> Self {
-        SgdMomentum { mu, v: groups.iter().map(|g| vec![0.0; g.numel()]).collect() }
+impl SgdMomentumRule {
+    /// Build a momentum-SGD optimizer (the layout — one `d`-sized "v"
+    /// buffer per group — is not the canonical SGD layout, so it is
+    /// assembled here rather than in `optim::build`).
+    pub fn optimizer(groups: &[GroupSpec], mu: f32, hyper: &Hyper) -> StateOptimizer {
+        let state = OptState::with_layout(OptimizerKind::Sgd, groups, hyper.backend, |_, g| {
+            (vec![("v".to_string(), g.numel())], 0)
+        });
+        StateOptimizer::from_parts(Box::new(SgdMomentumRule { mu }), state)
     }
 }
 
-impl Optimizer for SgdMomentum {
-    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let v = &mut self.v[gi];
-        anyhow::ensure!(x.len() == v.len() && g.len() == v.len());
-        for i in 0..v.len() {
-            v[i] = self.mu * v[i] + g[i];
-            x[i] -= lr * v[i];
-        }
-        Ok(())
-    }
-
-    fn state_scalars(&self) -> usize {
-        self.v.iter().map(|v| v.len()).sum()
-    }
-
+impl UpdateRule for SgdMomentumRule {
     fn kind(&self) -> OptimizerKind {
         OptimizerKind::Sgd
     }
@@ -69,16 +52,31 @@ impl Optimizer for SgdMomentum {
     fn name(&self) -> String {
         "SGD+momentum".into()
     }
+
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let gs = st.group_mut(gi);
+        anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
+        let mu = self.mu;
+        gs.with_bufs(|bufs| {
+            let v = &mut *bufs[0];
+            for i in 0..v.len() {
+                v[i] = mu * v[i] + g[i];
+                x[i] -= lr * v[i];
+            }
+        });
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{self, Optimizer};
 
     #[test]
     fn sgd_update_rule() {
         let gs = vec![GroupSpec::new("x", &[3])];
-        let mut o = Sgd::new(&gs);
+        let mut o = optim::build(OptimizerKind::Sgd, &gs, &Hyper::default());
         let mut x = vec![1.0f32, 2.0, 3.0];
         o.step(0, &mut x, &[0.5, -0.5, 1.0], 0.1).unwrap();
         assert_eq!(x, vec![0.95, 2.05, 2.9]);
@@ -88,20 +86,22 @@ mod tests {
     #[test]
     fn momentum_accelerates_constant_gradient() {
         let gs = vec![GroupSpec::new("x", &[1])];
-        let mut plain = Sgd::new(&gs);
-        let mut mom = SgdMomentum::new(&gs, 0.9);
+        let hyper = Hyper::default();
+        let mut plain = optim::build(OptimizerKind::Sgd, &gs, &hyper);
+        let mut mom = SgdMomentumRule::optimizer(&gs, 0.9, &hyper);
         let (mut xp, mut xm) = (vec![0.0f32], vec![0.0f32]);
         for _ in 0..50 {
             plain.step(0, &mut xp, &[1.0], 0.01).unwrap();
             mom.step(0, &mut xm, &[1.0], 0.01).unwrap();
         }
         assert!(xm[0] < xp[0], "momentum should have moved further: {xm:?} vs {xp:?}");
+        assert_eq!(mom.state_scalars(), 1);
     }
 
     #[test]
     fn rejects_mismatched_len() {
         let gs = vec![GroupSpec::new("x", &[3])];
-        let mut o = Sgd::new(&gs);
+        let mut o = optim::build(OptimizerKind::Sgd, &gs, &Hyper::default());
         let mut x = vec![0.0f32; 2];
         assert!(o.step(0, &mut x, &[0.0; 2], 0.1).is_err());
     }

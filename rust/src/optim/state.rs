@@ -1,0 +1,691 @@
+//! Externalized optimizer state: named per-group state buffers behind a
+//! pluggable storage backend, plus the stateless-rule optimizer built on
+//! top of them.
+//!
+//! The paper's whole argument is that preconditioner *state* is the memory
+//! bottleneck, so this module makes that state a first-class object instead
+//! of private optimizer fields:
+//!
+//! * [`StateBuf`] — one logical `f32` buffer, physically stored either
+//!   dense ([`StateBackend::DenseF32`]) or 8-bit block-quantized
+//!   ([`StateBackend::QuantizedQ8`], affine scale+offset per block);
+//! * [`GroupState`] — one parameter group's named buffers plus a per-group
+//!   step counter and a small never-quantized `f64` "wide" vector (ET∞'s
+//!   accumulated squared norm lives there);
+//! * [`OptState`] — the whole model's optimizer state, built from
+//!   [`GroupSpec`]s + [`OptimizerKind`] via the layout functions in
+//!   [`crate::tensoring::memory`], with exact [`OptState::export`] /
+//!   [`OptState::import`] for checkpointing and shard migration;
+//! * [`UpdateRule`] — a *stateless* update rule `(&mut OptState, gi, x, g,
+//!   lr)`; every optimizer in the suite is one of these;
+//! * [`StateOptimizer`] — rule + state bundled behind the classic
+//!   [`Optimizer`] trait, so every existing call site keeps working.
+//!
+//! Invariant: under the dense backend the rules read and write state
+//! in place with exactly the pre-refactor arithmetic, so updates are
+//! bitwise-identical to the old embedded-state optimizers
+//! (`rust/tests/golden_parity.rs`).
+
+use super::{GroupSpec, Optimizer};
+use crate::tensoring::memory::{group_state_buffer_lens, group_wide_scalars};
+use crate::tensoring::{OptimizerKind, StateBackend};
+use anyhow::Result;
+
+// ---------------------------------------------------------------------------
+// Storage
+// ---------------------------------------------------------------------------
+
+/// One logical `f32` state buffer behind a storage backend.
+#[derive(Clone, Debug)]
+pub enum StateBuf {
+    /// Plain `f32` storage; rules mutate it in place (zero copy).
+    Dense(Vec<f32>),
+    /// 8-bit block-quantized storage; rules see a decoded scratch copy and
+    /// the result is re-encoded after each update.
+    Q8(Q8Buf),
+}
+
+impl StateBuf {
+    /// An all-zero buffer of `len` logical scalars under `backend`.
+    pub fn zeros(len: usize, backend: StateBackend) -> StateBuf {
+        match backend {
+            StateBackend::DenseF32 => StateBuf::Dense(vec![0.0; len]),
+            StateBackend::QuantizedQ8 { block } => StateBuf::Q8(Q8Buf::zeros(len, block)),
+        }
+    }
+
+    /// Logical scalar count.
+    pub fn len(&self) -> usize {
+        match self {
+            StateBuf::Dense(v) => v.len(),
+            StateBuf::Q8(q) => q.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode to dense `f32` (exact for the dense backend).
+    pub fn to_vec(&self) -> Vec<f32> {
+        match self {
+            StateBuf::Dense(v) => v.clone(),
+            StateBuf::Q8(q) => q.decode_vec(),
+        }
+    }
+
+    /// Overwrite from a dense `f32` slice (encoding under the backend).
+    pub fn write(&mut self, src: &[f32]) {
+        match self {
+            StateBuf::Dense(v) => {
+                assert_eq!(v.len(), src.len(), "state buffer length changed");
+                v.copy_from_slice(src);
+            }
+            StateBuf::Q8(q) => q.encode(src),
+        }
+    }
+
+    /// Physical bytes held (what the machine pays, not the logical count).
+    pub fn bytes(&self) -> usize {
+        match self {
+            StateBuf::Dense(v) => v.len() * 4,
+            StateBuf::Q8(q) => q.bytes(),
+        }
+    }
+}
+
+/// Affine 8-bit quantization: per block of `block` scalars, `x ≈ offset +
+/// scale * q` with `q ∈ [0, 255]`. All-equal blocks (including fresh zeros)
+/// round-trip exactly via `scale = 0`.
+#[derive(Clone, Debug)]
+pub struct Q8Buf {
+    block: usize,
+    len: usize,
+    q: Vec<u8>,
+    scale: Vec<f32>,
+    offset: Vec<f32>,
+}
+
+impl Q8Buf {
+    fn zeros(len: usize, block: usize) -> Q8Buf {
+        let block = block.max(1);
+        let blocks = len.div_ceil(block);
+        Q8Buf { block, len, q: vec![0; len], scale: vec![0.0; blocks], offset: vec![0.0; blocks] }
+    }
+
+    fn decode_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        for (bi, chunk) in out.chunks_mut(self.block).enumerate() {
+            let (s, o) = (self.scale[bi], self.offset[bi]);
+            let qs = &self.q[bi * self.block..bi * self.block + chunk.len()];
+            for (x, &q) in chunk.iter_mut().zip(qs) {
+                *x = o + s * q as f32;
+            }
+        }
+        out
+    }
+
+    fn encode(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.len, "state buffer length changed");
+        for (bi, chunk) in src.chunks(self.block).enumerate() {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in chunk {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            // Clamp the block range so an overflowed accumulator entry
+            // (`g*g = inf`) cannot produce a non-finite scale that would
+            // decode the *whole block* to NaN. The limit leaves enough
+            // headroom that `offset + scale * 255` can never overflow on
+            // decode; the offending scalar saturates to ~8.5e37, whose
+            // preconditioned update is ~0 — the same outcome the dense
+            // backend gives for 1/sqrt(inf).
+            const LIM: f32 = f32::MAX / 4.0;
+            let lo = lo.clamp(-LIM, LIM);
+            let hi = hi.clamp(-LIM, LIM);
+            let scale = if hi > lo { ((hi as f64 - lo as f64) / 255.0) as f32 } else { 0.0 };
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            self.scale[bi] = scale;
+            self.offset[bi] = lo;
+            let qs = &mut self.q[bi * self.block..bi * self.block + chunk.len()];
+            for (q, &x) in qs.iter_mut().zip(chunk) {
+                *q = (((x - lo) * inv).round()).clamp(0.0, 255.0) as u8;
+            }
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.q.len() + (self.scale.len() + self.offset.len()) * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-group and whole-model state
+// ---------------------------------------------------------------------------
+
+/// One parameter group's externalized optimizer state.
+#[derive(Clone, Debug)]
+pub struct GroupState {
+    /// Group name (from the [`GroupSpec`]); checkpoint identity.
+    pub name: String,
+    /// Flat parameter count of the group (update-rule length validation).
+    pub numel: usize,
+    /// Per-group step counter: ET's accumulate count (bias correction).
+    pub steps: u64,
+    /// High-precision scalar state, never quantized (ET∞'s accumulator).
+    pub wide: Vec<f64>,
+    bufs: Vec<(String, StateBuf)>,
+}
+
+impl GroupState {
+    pub fn n_bufs(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn buf(&self, bi: usize) -> &StateBuf {
+        &self.bufs[bi].1
+    }
+
+    pub fn buf_name(&self, bi: usize) -> &str {
+        &self.bufs[bi].0
+    }
+
+    /// Run `f` over in-place `f32` views of every state buffer. Dense
+    /// buffers are borrowed directly (zero copy — this is what keeps the
+    /// dense path bitwise-identical to the embedded-state implementations);
+    /// quantized buffers are decoded into scratch and re-encoded after.
+    pub fn with_bufs<R>(&mut self, f: impl FnOnce(&mut [&mut [f32]]) -> R) -> R {
+        let all_dense = self.bufs.iter().all(|(_, b)| matches!(b, StateBuf::Dense(_)));
+        if all_dense {
+            let mut views: Vec<&mut [f32]> = self
+                .bufs
+                .iter_mut()
+                .map(|(_, b)| match b {
+                    StateBuf::Dense(v) => v.as_mut_slice(),
+                    StateBuf::Q8(_) => unreachable!(),
+                })
+                .collect();
+            f(&mut views)
+        } else {
+            let mut scratch: Vec<Vec<f32>> = self.bufs.iter().map(|(_, b)| b.to_vec()).collect();
+            let r = {
+                let mut views: Vec<&mut [f32]> =
+                    scratch.iter_mut().map(|v| v.as_mut_slice()).collect();
+                f(&mut views)
+            };
+            for ((_, b), s) in self.bufs.iter_mut().zip(&scratch) {
+                b.write(s);
+            }
+            r
+        }
+    }
+
+    fn state_scalars(&self) -> usize {
+        self.bufs.iter().map(|(_, b)| b.len()).sum::<usize>() + self.wide.len()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.bufs.iter().map(|(_, b)| b.bytes()).sum::<usize>() + self.wide.len() * 8
+    }
+}
+
+/// Whole-model optimizer state: one [`GroupState`] per parameter group plus
+/// the shared step counter (Adam's `t`), advanced by
+/// [`Optimizer::next_step`].
+#[derive(Clone, Debug)]
+pub struct OptState {
+    kind: OptimizerKind,
+    backend: StateBackend,
+    /// Shared optimizer-step counter.
+    pub step: u64,
+    groups: Vec<GroupState>,
+}
+
+impl OptState {
+    /// Allocate zeroed state for `kind` over `groups`, using the canonical
+    /// layout from [`crate::tensoring::memory::group_state_buffer_lens`].
+    pub fn new(kind: OptimizerKind, groups: &[GroupSpec], backend: StateBackend) -> OptState {
+        Self::with_layout(kind, groups, backend, |_, g| {
+            let lens = group_state_buffer_lens(kind, &g.shape);
+            let names = buf_names(kind, lens.len());
+            (names.into_iter().zip(lens).collect(), group_wide_scalars(kind))
+        })
+    }
+
+    /// Allocate zeroed state with a caller-supplied per-group layout:
+    /// `layout(gi, group) -> (named buffer lengths, wide f64 count)`. Used
+    /// by custom-dims ET and SGD-momentum, whose layouts are not a pure
+    /// function of the optimizer kind.
+    pub fn with_layout<F>(
+        kind: OptimizerKind,
+        groups: &[GroupSpec],
+        backend: StateBackend,
+        layout: F,
+    ) -> OptState
+    where
+        F: Fn(usize, &GroupSpec) -> (Vec<(String, usize)>, usize),
+    {
+        let groups = groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                let (bufs, wide) = layout(gi, g);
+                GroupState {
+                    name: g.name.clone(),
+                    numel: g.numel(),
+                    steps: 0,
+                    wide: vec![0.0; wide],
+                    bufs: bufs
+                        .into_iter()
+                        .map(|(name, len)| (name, StateBuf::zeros(len, backend)))
+                        .collect(),
+                }
+            })
+            .collect();
+        OptState { kind, backend, step: 0, groups }
+    }
+
+    pub fn kind(&self) -> OptimizerKind {
+        self.kind
+    }
+
+    pub fn backend(&self) -> StateBackend {
+        self.backend
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn group(&self, gi: usize) -> &GroupState {
+        &self.groups[gi]
+    }
+
+    pub fn group_mut(&mut self, gi: usize) -> &mut GroupState {
+        &mut self.groups[gi]
+    }
+
+    /// Logical optimizer-state scalars (the paper's "optimizer parameter
+    /// count"); backend-independent.
+    pub fn state_scalars(&self) -> usize {
+        self.groups.iter().map(|g| g.state_scalars()).sum()
+    }
+
+    /// Physical bytes actually held, which is what the quantized backend
+    /// shrinks. Agrees with [`crate::tensoring::memory::group_state_bytes`]
+    /// for canonically laid-out state — tested.
+    pub fn state_bytes(&self) -> usize {
+        self.groups.iter().map(|g| g.state_bytes()).sum()
+    }
+
+    /// Snapshot everything as dense `f32`/`f64` tensors. Exact for the
+    /// dense backend; quantized buffers are decoded, so an export can be
+    /// re-imported under *any* backend (precision migration is free).
+    pub fn export(&self) -> StateExport {
+        StateExport {
+            kind: self.kind,
+            step: self.step,
+            groups: self
+                .groups
+                .iter()
+                .map(|g| GroupExport {
+                    name: g.name.clone(),
+                    steps: g.steps,
+                    wide: g.wide.clone(),
+                    bufs: g
+                        .bufs
+                        .iter()
+                        .map(|(name, b)| (name.clone(), b.to_vec()))
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore from an export. The export must describe the same optimizer
+    /// kind and the same groups (names, buffer names, lengths) in the same
+    /// order; the storage backend may differ (buffers are re-encoded).
+    pub fn import(&mut self, e: &StateExport) -> Result<()> {
+        anyhow::ensure!(
+            e.kind == self.kind,
+            "state import: kind {:?} does not match {:?}",
+            e.kind,
+            self.kind
+        );
+        anyhow::ensure!(
+            e.groups.len() == self.groups.len(),
+            "state import: {} groups, expected {}",
+            e.groups.len(),
+            self.groups.len()
+        );
+        for (g, ge) in self.groups.iter().zip(&e.groups) {
+            anyhow::ensure!(
+                g.name == ge.name,
+                "state import: group '{}' does not match '{}'",
+                ge.name,
+                g.name
+            );
+            anyhow::ensure!(
+                g.wide.len() == ge.wide.len() && g.bufs.len() == ge.bufs.len(),
+                "state import: group '{}' layout mismatch",
+                g.name
+            );
+            for ((name, b), (ename, data)) in g.bufs.iter().zip(&ge.bufs) {
+                anyhow::ensure!(
+                    name == ename && b.len() == data.len(),
+                    "state import: group '{}' buffer '{}' ({} scalars) vs '{}' ({})",
+                    g.name,
+                    ename,
+                    data.len(),
+                    name,
+                    b.len()
+                );
+            }
+        }
+        self.step = e.step;
+        for (g, ge) in self.groups.iter_mut().zip(&e.groups) {
+            g.steps = ge.steps;
+            g.wide.copy_from_slice(&ge.wide);
+            for ((_, b), (_, data)) in g.bufs.iter_mut().zip(&ge.bufs) {
+                b.write(data);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Canonical buffer names per kind (`n` = buffer count from the layout).
+fn buf_names(kind: OptimizerKind, n: usize) -> Vec<String> {
+    match kind {
+        OptimizerKind::Sgd | OptimizerKind::EtInf => vec![],
+        OptimizerKind::AdaGrad => vec!["s".into()],
+        OptimizerKind::RmsProp => vec!["v".into()],
+        OptimizerKind::Adam => vec!["m".into(), "v".into()],
+        OptimizerKind::AdaDelta => vec!["eg2".into(), "ex2".into()],
+        OptimizerKind::Adafactor => {
+            if n == 2 {
+                vec!["r".into(), "c".into()]
+            } else {
+                vec!["v".into()]
+            }
+        }
+        OptimizerKind::Et(_) => (0..n).map(|i| format!("s{i}")).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Export (the serializable view)
+// ---------------------------------------------------------------------------
+
+/// Dense snapshot of one group's state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupExport {
+    pub name: String,
+    pub steps: u64,
+    pub wide: Vec<f64>,
+    pub bufs: Vec<(String, Vec<f32>)>,
+}
+
+/// Dense snapshot of a whole [`OptState`] — the unit that checkpoints
+/// serialize and that shard workers fan out / fan in.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateExport {
+    pub kind: OptimizerKind,
+    pub step: u64,
+    pub groups: Vec<GroupExport>,
+}
+
+// ---------------------------------------------------------------------------
+// Stateless update rules and the optimizer built from them
+// ---------------------------------------------------------------------------
+
+/// A stateless optimizer update rule over externalized state. Rules hold
+/// only immutable configuration (hyperparameters, planned tensor indices);
+/// all mutable state lives in the [`OptState`] passed to every call.
+pub trait UpdateRule: Send {
+    fn kind(&self) -> OptimizerKind;
+
+    /// Apply one update to group `gi`: `x <- x - lr * precondition(g)`.
+    fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32)
+        -> Result<()>;
+
+    /// One full optimizer step over every group. The default body is
+    /// instantiated once per implementing rule, so even when invoked
+    /// through `Box<dyn UpdateRule>` this costs one virtual call per
+    /// *step* — the per-group `step` calls inside are statically
+    /// dispatched to the concrete rule.
+    fn step_all(
+        &self,
+        st: &mut OptState,
+        params: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == st.n_groups() && grads.len() == st.n_groups(),
+            "step_all: expected {} groups, got {} params / {} grads",
+            st.n_groups(),
+            params.len(),
+            grads.len()
+        );
+        for (gi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            self.step(st, gi, p, g, lr)?;
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        self.kind().name()
+    }
+}
+
+/// An update rule bundled with its externalized state, implementing the
+/// classic [`Optimizer`] trait. This is what [`crate::optim::build`]
+/// returns and what the shard workers own.
+pub struct StateOptimizer {
+    rule: Box<dyn UpdateRule>,
+    state: OptState,
+}
+
+impl StateOptimizer {
+    pub fn from_parts(rule: Box<dyn UpdateRule>, state: OptState) -> StateOptimizer {
+        StateOptimizer { rule, state }
+    }
+
+    pub fn state(&self) -> &OptState {
+        &self.state
+    }
+
+    pub fn state_mut(&mut self) -> &mut OptState {
+        &mut self.state
+    }
+
+    /// Dense snapshot of the optimizer state (see [`OptState::export`]).
+    pub fn export(&self) -> StateExport {
+        self.state.export()
+    }
+
+    /// Restore a snapshot (see [`OptState::import`]).
+    pub fn import(&mut self, e: &StateExport) -> Result<()> {
+        self.state.import(e)
+    }
+}
+
+impl Optimizer for StateOptimizer {
+    fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        self.rule.step(&mut self.state, gi, x, g, lr)
+    }
+
+    fn step_all(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32) -> Result<()> {
+        // One virtual call into the rule; the loop inside is monomorphic.
+        self.rule.step_all(&mut self.state, params, grads, lr)
+    }
+
+    fn state_scalars(&self) -> usize {
+        self.state.state_scalars()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state.state_bytes()
+    }
+
+    fn kind(&self) -> OptimizerKind {
+        self.rule.kind()
+    }
+
+    fn name(&self) -> String {
+        self.rule.name()
+    }
+
+    fn next_step(&mut self) {
+        self.state.step += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q8_roundtrips_zeros_exactly() {
+        let b = StateBuf::zeros(100, StateBackend::q8());
+        assert_eq!(b.len(), 100);
+        assert!(b.to_vec().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn q8_quantization_error_is_bounded() {
+        let mut b = StateBuf::zeros(256, StateBackend::QuantizedQ8 { block: 64 });
+        let src: Vec<f32> = (0..256).map(|i| (i as f32 * 0.37).sin()).collect();
+        b.write(&src);
+        let got = b.to_vec();
+        // Per-block range is <= 2.0, so the max error is <= range/255/2.
+        for (x, y) in src.iter().zip(&got) {
+            assert!((x - y).abs() <= 2.0 / 255.0, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn q8_overflowed_entry_does_not_poison_its_block() {
+        // One inf in a block must not turn the neighbors into NaN.
+        let mut b = StateBuf::zeros(64, StateBackend::QuantizedQ8 { block: 64 });
+        let mut src = vec![1.0f32; 64];
+        src[7] = f32::INFINITY;
+        b.write(&src);
+        let got = b.to_vec();
+        assert!(got.iter().all(|x| x.is_finite()), "{got:?}");
+        // The overflowed entry saturates high; its preconditioned update
+        // stays ~0, like the dense backend's 1/sqrt(inf).
+        assert!(got[7] > 1e37, "{}", got[7]);
+        // The finite neighbors survive unharmed: they sit at the block
+        // offset (q = 0), which decodes back exactly.
+        assert_eq!(got[0], 1.0);
+    }
+
+    #[test]
+    fn q8_constant_blocks_are_exact() {
+        let mut b = StateBuf::zeros(70, StateBackend::QuantizedQ8 { block: 32 });
+        b.write(&[3.25f32; 70]);
+        assert!(b.to_vec().iter().all(|&x| x == 3.25));
+    }
+
+    #[test]
+    fn q8_bytes_match_memory_model() {
+        let backend = StateBackend::QuantizedQ8 { block: 64 };
+        for len in [1usize, 63, 64, 65, 1000] {
+            let b = StateBuf::zeros(len, backend);
+            assert_eq!(b.bytes(), backend.buf_bytes(len), "len {len}");
+        }
+    }
+
+    #[test]
+    fn export_import_roundtrip_dense_is_exact() {
+        let gs = vec![GroupSpec::new("w", &[4, 4]), GroupSpec::new("b", &[4])];
+        let mut st = OptState::new(OptimizerKind::Adam, &gs, StateBackend::DenseF32);
+        st.step = 7;
+        st.group_mut(0).steps = 7;
+        st.group_mut(0).with_bufs(|bufs| {
+            for (i, x) in bufs[0].iter_mut().enumerate() {
+                *x = i as f32 * 0.1 - 0.5;
+            }
+        });
+        let e = st.export();
+        let mut fresh = OptState::new(OptimizerKind::Adam, &gs, StateBackend::DenseF32);
+        fresh.import(&e).unwrap();
+        assert_eq!(fresh.export(), e);
+        assert_eq!(fresh.step, 7);
+        assert_eq!(fresh.group(0).steps, 7);
+    }
+
+    #[test]
+    fn import_into_other_backend_is_allowed() {
+        let gs = vec![GroupSpec::new("w", &[8, 8])];
+        let mut dense = OptState::new(OptimizerKind::AdaGrad, &gs, StateBackend::DenseF32);
+        dense.group_mut(0).with_bufs(|bufs| {
+            for (i, x) in bufs[0].iter_mut().enumerate() {
+                *x = i as f32;
+            }
+        });
+        let e = dense.export();
+        let mut q8 = OptState::new(OptimizerKind::AdaGrad, &gs, StateBackend::q8());
+        q8.import(&e).unwrap();
+        assert!(q8.state_bytes() < dense.state_bytes());
+        // Decoded values stay within the quantization error bound.
+        let got = q8.group(0).buf(0).to_vec();
+        for (i, y) in got.iter().enumerate() {
+            assert!((i as f32 - y).abs() <= 64.0 / 255.0, "{i} vs {y}");
+        }
+    }
+
+    #[test]
+    fn import_rejects_mismatches() {
+        let gs = vec![GroupSpec::new("w", &[4])];
+        let st = OptState::new(OptimizerKind::AdaGrad, &gs, StateBackend::DenseF32);
+        let e = st.export();
+
+        let mut wrong_kind = OptState::new(OptimizerKind::RmsProp, &gs, StateBackend::DenseF32);
+        assert!(wrong_kind.import(&e).is_err());
+
+        let renamed = vec![GroupSpec::new("w2", &[4])];
+        let mut wrong_name =
+            OptState::new(OptimizerKind::AdaGrad, &renamed, StateBackend::DenseF32);
+        assert!(wrong_name.import(&e).is_err());
+
+        let resized = vec![GroupSpec::new("w", &[5])];
+        let mut wrong_len = OptState::new(OptimizerKind::AdaGrad, &resized, StateBackend::DenseF32);
+        assert!(wrong_len.import(&e).is_err());
+    }
+
+    #[test]
+    fn layout_matches_accounting_for_all_kinds() {
+        use crate::tensoring::memory::{group_state_bytes, group_state_scalars};
+        let gs = vec![
+            GroupSpec::new("w1", &[16, 32]),
+            GroupSpec::new("b1", &[32]),
+            GroupSpec::new("conv", &[8, 4, 3, 3]),
+        ];
+        for backend in [StateBackend::DenseF32, StateBackend::q8()] {
+            for kind in [
+                OptimizerKind::Sgd,
+                OptimizerKind::AdaGrad,
+                OptimizerKind::Adam,
+                OptimizerKind::RmsProp,
+                OptimizerKind::AdaDelta,
+                OptimizerKind::Adafactor,
+                OptimizerKind::Et(1),
+                OptimizerKind::Et(2),
+                OptimizerKind::Et(3),
+                OptimizerKind::EtInf,
+            ] {
+                let st = OptState::new(kind, &gs, backend);
+                let scalars: usize =
+                    gs.iter().map(|g| group_state_scalars(kind, &g.shape)).sum();
+                let bytes: usize =
+                    gs.iter().map(|g| group_state_bytes(kind, &g.shape, backend)).sum();
+                assert_eq!(st.state_scalars(), scalars, "{kind:?} {backend:?}");
+                assert_eq!(st.state_bytes(), bytes, "{kind:?} {backend:?}");
+            }
+        }
+    }
+}

@@ -24,6 +24,13 @@
 //! no cross-shard arithmetic whose order could differ.
 //! `rust/tests/sharded_parity.rs` enforces this for every optimizer kind
 //! at 1, 2, and 4 shards.
+//!
+//! **Shard-aware checkpointing:** every worker owns an externalized
+//! [`crate::optim::OptState`], so `ShardedOptimizer::export_state` /
+//! `import_state` fan worker-local snapshots in and out as one global,
+//! shard-count-independent [`crate::optim::StateExport`] — a checkpoint
+//! taken at 2 shards restores at 1 or 4 (or single-threaded) bitwise
+//! (`rust/tests/host_checkpoint.rs`).
 
 pub mod bucket;
 pub mod executor;

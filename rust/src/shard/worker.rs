@@ -1,15 +1,19 @@
 //! The shard worker: a persistent thread owning one shard's optimizer
 //! state.
 //!
-//! Each worker builds its own `Box<dyn Optimizer>` over exactly the groups
-//! its shard owns, so *all* of a group's optimizer state (slice
-//! accumulators, moments, ...) lives on one thread for the process
-//! lifetime — nothing is ever serialized or migrated. Requests arrive over
-//! a bounded channel; every [`Request::Step`] is acknowledged on the reply
-//! channel, which is what lets the executor hand workers raw slice
-//! pointers safely (see the safety contract on [`GroupTask`]).
+//! Each worker builds a concrete [`crate::optim::StateOptimizer`] over
+//! exactly the groups its shard owns, so *all* of a group's optimizer
+//! state (slice accumulators, moments, ...) lives on one thread, with no
+//! `Box<dyn Optimizer>` indirection in front of the update rule. State no
+//! longer has to die with the thread:
+//! [`Request::ExportState`] snapshots the shard-local [`StateExport`] and
+//! [`Request::ImportState`] restores one, which is what the executor's
+//! checkpoint fan-out/fan-in is built from. Requests arrive over a bounded
+//! channel; every [`Request::Step`] is acknowledged on the reply channel,
+//! which is what lets the executor hand workers raw slice pointers safely
+//! (see the safety contract on [`GroupTask`]).
 
-use crate::optim::{self, GroupSpec, Hyper, Optimizer};
+use crate::optim::{self, GroupSpec, Hyper, Optimizer, StateExport};
 use crate::tensoring::OptimizerKind;
 use std::sync::mpsc::{Receiver, SyncSender};
 
@@ -44,8 +48,14 @@ pub(crate) enum Request {
     /// Advance the shard optimizer's shared step counter (Adam's `t`,
     /// ...). Ordered before subsequent `Step`s by the channel; no ack.
     NextStep,
-    /// Reply with the shard optimizer's allocated state scalars.
+    /// Reply with the shard optimizer's allocated state footprint.
     StateScalars,
+    /// Reply with a dense snapshot of the shard-local optimizer state
+    /// (groups in worker-local order).
+    ExportState,
+    /// Replace the shard-local optimizer state with a snapshot (same
+    /// layout as an `ExportState` reply). Acked with `ImportDone`.
+    ImportState(Box<StateExport>),
     /// Exit the worker loop.
     Shutdown,
 }
@@ -53,7 +63,9 @@ pub(crate) enum Request {
 pub(crate) enum Reply {
     /// Ack for one `Step` bucket; `Err` carries the failing group's error.
     StepDone(Result<(), String>),
-    StateScalars(usize),
+    StateScalars { scalars: usize, bytes: usize },
+    State(Box<StateExport>),
+    ImportDone(Result<(), String>),
 }
 
 /// Worker main loop. Runs until `Shutdown` or channel disconnect.
@@ -65,7 +77,7 @@ pub(crate) fn run_worker(
     requests: Receiver<Request>,
     replies: SyncSender<Reply>,
 ) {
-    let mut opt = optim::build(kind, &groups, &hyper);
+    let mut opt = optim::build_state(kind, &groups, &hyper);
     while let Ok(req) = requests.recv() {
         match req {
             Request::Step { lr, tasks } => {
@@ -90,7 +102,24 @@ pub(crate) fn run_worker(
             }
             Request::NextStep => opt.next_step(),
             Request::StateScalars => {
-                if replies.send(Reply::StateScalars(opt.state_scalars())).is_err() {
+                let reply = Reply::StateScalars {
+                    scalars: opt.state_scalars(),
+                    bytes: opt.state_bytes(),
+                };
+                if replies.send(reply).is_err() {
+                    return;
+                }
+            }
+            Request::ExportState => {
+                if replies.send(Reply::State(Box::new(opt.export()))).is_err() {
+                    return;
+                }
+            }
+            Request::ImportState(export) => {
+                let outcome = opt
+                    .import(&export)
+                    .map_err(|e| format!("shard {shard}: state import: {e:#}"));
+                if replies.send(Reply::ImportDone(outcome)).is_err() {
                     return;
                 }
             }
@@ -147,18 +176,43 @@ mod tests {
         }
 
         // Inline reference.
-        let mut reference = crate::optim::adagrad::AdaGrad::new(&groups, 1e-8);
+        let mut reference =
+            crate::optim::build(OptimizerKind::AdaGrad, &groups, &Hyper::default());
         let (mut r0, mut r1) = (vec![1.0f32; 4], vec![2.0f32; 2]);
-        crate::optim::Optimizer::step(&mut reference, 0, &mut r0, &g0, 0.1).unwrap();
-        crate::optim::Optimizer::step(&mut reference, 1, &mut r1, &g1, 0.1).unwrap();
+        reference.step(0, &mut r0, &g0, 0.1).unwrap();
+        reference.step(1, &mut r1, &g1, 0.1).unwrap();
         assert_eq!(x0, r0);
         assert_eq!(x1, r1);
 
         req_tx.send(Request::StateScalars).unwrap();
         match rep_rx.recv().unwrap() {
-            Reply::StateScalars(n) => assert_eq!(n, 6),
+            Reply::StateScalars { scalars, bytes } => {
+                assert_eq!(scalars, 6);
+                assert_eq!(bytes, 24);
+            }
             _ => panic!("expected StateScalars"),
         }
+
+        // Export must reflect the accumulated squared gradients.
+        req_tx.send(Request::ExportState).unwrap();
+        let export = match rep_rx.recv().unwrap() {
+            Reply::State(e) => *e,
+            _ => panic!("expected State"),
+        };
+        assert_eq!(export.groups.len(), 2);
+        assert_eq!(export.groups[0].name, "a");
+        let s = &export.groups[0].bufs[0].1;
+        for (sv, &gv) in s.iter().zip(&g0) {
+            assert_eq!(*sv, gv * gv);
+        }
+
+        // Import it back (no-op round trip) — must ack cleanly.
+        req_tx.send(Request::ImportState(Box::new(export))).unwrap();
+        match rep_rx.recv().unwrap() {
+            Reply::ImportDone(r) => r.unwrap(),
+            _ => panic!("expected ImportDone"),
+        }
+
         req_tx.send(Request::Shutdown).unwrap();
         handle.join().unwrap();
     }

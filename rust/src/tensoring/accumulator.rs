@@ -43,6 +43,198 @@ pub enum EpsMode {
     PerFactor,
 }
 
+// ---------------------------------------------------------------------------
+// Borrowed-state core
+//
+// The slice-sum and preconditioner arithmetic is written once, over
+// *borrowed* mode vectors (`AsRef<[f32]>`/`AsMut<[f32]>`), so both owners —
+// [`SliceAccumulators`] below (owned `Vec<Vec<f32>>`, used by the regret
+// instrumentation) and the externalized-state ET rule
+// (`optim::extreme::EtRule`, mode vectors living in an `optim::OptState`) —
+// run the exact same code and are bitwise-identical by construction.
+// ---------------------------------------------------------------------------
+
+/// Accumulate one gradient (flat, row-major w.r.t. `dims`) into the mode
+/// accumulators `s` (`s[i].len() == dims[i]`), optionally `beta2`-decayed.
+pub fn accumulate_slices<S: AsMut<[f32]>>(
+    dims: &[usize],
+    s: &mut [S],
+    beta2: Option<f32>,
+    g: &[f32],
+) -> Result<()> {
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(
+        g.len() == numel,
+        "gradient len {} != index numel {}",
+        g.len(),
+        numel
+    );
+    anyhow::ensure!(s.len() == dims.len(), "mode count mismatch");
+    // Decayed (Adam/RMSprop-style) accumulators use the standard
+    // exponential moving average `S <- b2*S + (1-b2)*slice_sums`; the
+    // cumulative (AdaGrad-style) setting adds the raw slice sums.
+    let w = match beta2 {
+        Some(b2) => {
+            for sv in s.iter_mut() {
+                for x in sv.as_mut().iter_mut() {
+                    *x *= b2;
+                }
+            }
+            1.0 - b2
+        }
+        None => 1.0,
+    };
+    match dims.len() {
+        1 => {
+            let s0 = s[0].as_mut();
+            for (j, &gj) in g.iter().enumerate() {
+                s0[j] += w * gj * gj;
+            }
+        }
+        2 => {
+            // Matrix case: row sums into s[0], column sums into s[1].
+            let (d0, d1) = (dims[0], dims[1]);
+            let (s01, s1x) = s.split_at_mut(1);
+            let (s0, s1) = (s01[0].as_mut(), s1x[0].as_mut());
+            for r in 0..d0 {
+                let row = &g[r * d1..(r + 1) * d1];
+                let mut acc = 0.0f32;
+                for (c, &grc) in row.iter().enumerate() {
+                    let sq = w * grc * grc;
+                    acc += sq;
+                    s1[c] += sq;
+                }
+                s0[r] += acc;
+            }
+        }
+        _ => {
+            // General p: odometer walk, p bucket adds per element. The
+            // bucket vectors total sum_i d_i floats — they stay in L1.
+            let p = dims.len();
+            let mut coords = vec![0usize; p];
+            for &gj in g.iter() {
+                let sq = w * gj * gj;
+                for i in 0..p {
+                    s[i].as_mut()[coords[i]] += sq;
+                }
+                // advance odometer
+                for i in (0..p).rev() {
+                    coords[i] += 1;
+                    if coords[i] < dims[i] {
+                        break;
+                    }
+                    coords[i] = 0;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Walk coordinates in flat order calling `f(flat, denominator)` where
+/// `denominator` is the quantity raised to `-1/(2p)`:
+/// - InsideProduct: `eps + prod_i S_i[c_i]`
+/// - PerFactor:     `prod_i (eps + S_i[c_i])`
+///
+/// Prefix products are cached per mode and recomputed only from the
+/// deepest changed odometer level, so the amortized cost per element is
+/// ~1 multiply + 1 powf regardless of p.
+pub fn for_each_denominator_slices<S: AsRef<[f32]>>(
+    dims: &[usize],
+    s: &[S],
+    eps: f32,
+    eps_mode: EpsMode,
+    mut f: impl FnMut(usize, f32),
+) {
+    let p = dims.len();
+    let n: usize = dims.iter().product();
+    let factor = |i: usize, c: usize| -> f32 {
+        match eps_mode {
+            EpsMode::InsideProduct => s[i].as_ref()[c],
+            EpsMode::PerFactor => eps + s[i].as_ref()[c],
+        }
+    };
+    // prefix[i] = product of factors for modes 0..=i at current coords
+    let mut coords = vec![0usize; p];
+    let mut prefix = vec![0.0f32; p];
+    let mut rebuild_from = 0usize;
+    for j in 0..n {
+        for i in rebuild_from..p {
+            let base = if i == 0 { 1.0 } else { prefix[i - 1] };
+            prefix[i] = base * factor(i, coords[i]);
+        }
+        let prod = prefix[p - 1];
+        let denom = match eps_mode {
+            EpsMode::InsideProduct => eps + prod,
+            EpsMode::PerFactor => prod,
+        };
+        f(j, denom);
+        // advance odometer, tracking deepest changed level
+        rebuild_from = p; // sentinel: nothing to rebuild if we're done
+        for i in (0..p).rev() {
+            coords[i] += 1;
+            if coords[i] < dims[i] {
+                rebuild_from = i;
+                break;
+            }
+            coords[i] = 0;
+        }
+    }
+}
+
+/// Fused preconditioned SGD update over borrowed mode accumulators:
+/// `x -= lr * delta * g` with `delta = denom^(-1/2p)`.
+pub fn apply_update_slices<S: AsRef<[f32]>>(
+    dims: &[usize],
+    s: &[S],
+    eps: f32,
+    eps_mode: EpsMode,
+    x: &mut [f32],
+    g: &[f32],
+    lr: f32,
+) {
+    let n: usize = dims.iter().product();
+    assert_eq!(x.len(), n);
+    assert_eq!(g.len(), n);
+    let p = dims.len();
+    for_each_denominator_slices(dims, s, eps, eps_mode, |j, denom| {
+        x[j] -= lr * inv_root_2p(denom, p) * g[j];
+    });
+}
+
+/// Bias-corrected variant for the decayed (`beta2 < 1`) setting, in the
+/// style of Adam: divides the accumulator by `1 - beta2^t` before the
+/// root. Identical to [`apply_update_slices`] when `beta2` is `None`.
+pub fn apply_update_bias_corrected_slices<S: AsRef<[f32]>>(
+    dims: &[usize],
+    s: &[S],
+    eps: f32,
+    eps_mode: EpsMode,
+    beta2: Option<f32>,
+    steps: u64,
+    x: &mut [f32],
+    g: &[f32],
+    lr: f32,
+) {
+    match beta2 {
+        None => apply_update_slices(dims, s, eps, eps_mode, x, g, lr),
+        Some(b2) => {
+            let n: usize = dims.iter().product();
+            assert_eq!(x.len(), n);
+            assert_eq!(g.len(), n);
+            let p = dims.len();
+            let corr = 1.0 - b2.powi(steps.max(1) as i32);
+            // Each of the p factors is divided by corr; the product of p
+            // factors to the power 1/2p gives corr^(1/2) overall, i.e.
+            // exactly Adam's sqrt bias correction.
+            let scale = corr.sqrt();
+            for_each_denominator_slices(dims, s, eps, eps_mode, |j, denom| {
+                x[j] -= lr * scale * inv_root_2p(denom, p) * g[j];
+            });
+        }
+    }
+}
+
 /// Second-moment state for one tensor-indexed parameter group.
 #[derive(Clone, Debug)]
 pub struct SliceAccumulators {
@@ -83,71 +275,7 @@ impl SliceAccumulators {
 
     /// Accumulate one gradient (flat, row-major w.r.t. the tensor index).
     pub fn accumulate(&mut self, g: &[f32]) -> Result<()> {
-        anyhow::ensure!(
-            g.len() == self.index.numel(),
-            "gradient len {} != index numel {}",
-            g.len(),
-            self.index.numel()
-        );
-        // Decayed (Adam/RMSprop-style) accumulators use the standard
-        // exponential moving average `S <- b2*S + (1-b2)*slice_sums`; the
-        // cumulative (AdaGrad-style) setting adds the raw slice sums.
-        let w = match self.beta2 {
-            Some(b2) => {
-                for sv in self.s.iter_mut() {
-                    for x in sv.iter_mut() {
-                        *x *= b2;
-                    }
-                }
-                1.0 - b2
-            }
-            None => 1.0,
-        };
-        let dims = self.index.dims().to_vec();
-        match dims.len() {
-            1 => {
-                let s0 = &mut self.s[0];
-                for (j, &gj) in g.iter().enumerate() {
-                    s0[j] += w * gj * gj;
-                }
-            }
-            2 => {
-                // Matrix case: row sums into s[0], column sums into s[1].
-                let (d0, d1) = (dims[0], dims[1]);
-                let (s01, s1x) = self.s.split_at_mut(1);
-                let (s0, s1) = (&mut s01[0], &mut s1x[0]);
-                for r in 0..d0 {
-                    let row = &g[r * d1..(r + 1) * d1];
-                    let mut acc = 0.0f32;
-                    for (c, &grc) in row.iter().enumerate() {
-                        let sq = w * grc * grc;
-                        acc += sq;
-                        s1[c] += sq;
-                    }
-                    s0[r] += acc;
-                }
-            }
-            _ => {
-                // General p: odometer walk, p bucket adds per element. The
-                // bucket vectors total sum_i d_i floats — they stay in L1.
-                let p = dims.len();
-                let mut coords = vec![0usize; p];
-                for &gj in g.iter() {
-                    let sq = w * gj * gj;
-                    for i in 0..p {
-                        self.s[i][coords[i]] += sq;
-                    }
-                    // advance odometer
-                    for i in (0..p).rev() {
-                        coords[i] += 1;
-                        if coords[i] < dims[i] {
-                            break;
-                        }
-                        coords[i] = 0;
-                    }
-                }
-            }
-        }
+        accumulate_slices(self.index.dims(), &mut self.s, self.beta2, g)?;
         self.steps += 1;
         Ok(())
     }
@@ -158,86 +286,32 @@ impl SliceAccumulators {
     pub fn step_sizes(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.index.numel());
         let p = self.index.order();
-        self.for_each_denominator(|j, denom| {
+        let (eps, mode) = (self.eps, self.eps_mode);
+        for_each_denominator_slices(self.index.dims(), &self.s, eps, mode, |j, denom| {
             out[j] = inv_root_2p(denom, p);
         });
     }
 
     /// Fused preconditioned SGD update: `x -= lr * delta * g`.
     pub fn apply_update(&self, x: &mut [f32], g: &[f32], lr: f32) {
-        assert_eq!(x.len(), self.index.numel());
-        assert_eq!(g.len(), self.index.numel());
-        let p = self.index.order();
-        self.for_each_denominator(|j, denom| {
-            x[j] -= lr * inv_root_2p(denom, p) * g[j];
-        });
+        apply_update_slices(self.index.dims(), &self.s, self.eps, self.eps_mode, x, g, lr);
     }
 
     /// Bias-corrected variant for the decayed (`beta2 < 1`) setting, in the
     /// style of Adam: divides the accumulator by `1 - beta2^t` before the
     /// root. No-op when `beta2` is `None`.
     pub fn apply_update_bias_corrected(&self, x: &mut [f32], g: &[f32], lr: f32) {
-        match self.beta2 {
-            None => self.apply_update(x, g, lr),
-            Some(b2) => {
-                let p = self.index.order();
-                let corr = 1.0 - b2.powi(self.steps.max(1) as i32);
-                // Each of the p factors is divided by corr; the product of p
-                // factors to the power 1/2p gives corr^(1/2) overall, i.e.
-                // exactly Adam's sqrt bias correction.
-                let scale = corr.sqrt();
-                self.for_each_denominator(|j, denom| {
-                    x[j] -= lr * scale * inv_root_2p(denom, p) * g[j];
-                });
-            }
-        }
-    }
-
-    /// Walk coordinates in flat order calling `f(flat, denominator)` where
-    /// `denominator` is the quantity raised to `-1/(2p)`:
-    /// - InsideProduct: `eps + prod_i S_i[c_i]`
-    /// - PerFactor:     `prod_i (eps + S_i[c_i])`
-    ///
-    /// Prefix products are cached per mode and recomputed only from the
-    /// deepest changed odometer level, so the amortized cost per element is
-    /// ~1 multiply + 1 powf regardless of p.
-    fn for_each_denominator(&self, mut f: impl FnMut(usize, f32)) {
-        let dims = self.index.dims();
-        let p = dims.len();
-        let n = self.index.numel();
-        let eps = self.eps;
-        let factor = |i: usize, c: usize| -> f32 {
-            match self.eps_mode {
-                EpsMode::InsideProduct => self.s[i][c],
-                EpsMode::PerFactor => eps + self.s[i][c],
-            }
-        };
-        // prefix[i] = product of factors for modes 0..=i at current coords
-        let mut coords = vec![0usize; p];
-        let mut prefix = vec![0.0f32; p];
-        let mut rebuild_from = 0usize;
-        for j in 0..n {
-            for i in rebuild_from..p {
-                let base = if i == 0 { 1.0 } else { prefix[i - 1] };
-                prefix[i] = base * factor(i, coords[i]);
-            }
-            let prod = prefix[p - 1];
-            let denom = match self.eps_mode {
-                EpsMode::InsideProduct => eps + prod,
-                EpsMode::PerFactor => prod,
-            };
-            f(j, denom);
-            // advance odometer, tracking deepest changed level
-            rebuild_from = p; // sentinel: nothing to rebuild if we're done
-            for i in (0..p).rev() {
-                coords[i] += 1;
-                if coords[i] < dims[i] {
-                    rebuild_from = i;
-                    break;
-                }
-                coords[i] = 0;
-            }
-        }
+        apply_update_bias_corrected_slices(
+            self.index.dims(),
+            &self.s,
+            self.eps,
+            self.eps_mode,
+            self.beta2,
+            self.steps,
+            x,
+            g,
+            lr,
+        );
     }
 
     /// `Tr(H_T)` contribution of this group, where

@@ -47,34 +47,129 @@ impl OptimizerKind {
             "adadelta" => Some(OptimizerKind::AdaDelta),
             "adafactor" => Some(OptimizerKind::Adafactor),
             "etinf" | "et-inf" | "etoo" => Some(OptimizerKind::EtInf),
-            s if s.starts_with("et") => s[2..].parse::<u8>().ok().map(OptimizerKind::Et),
-            _ => None,
+            other => {
+                other.strip_prefix("et").and_then(|k| k.parse::<u8>().ok()).map(OptimizerKind::Et)
+            }
         }
     }
 }
 
-/// Optimizer state scalars needed for one parameter group of `shape`.
-pub fn group_state_scalars(kind: OptimizerKind, shape: &[usize]) -> usize {
+/// How optimizer-state scalars are physically stored
+/// (`optim::state::StateBuf` backends).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateBackend {
+    /// One `f32` per logical state scalar.
+    DenseF32,
+    /// 8-bit affine quantization: one `u8` per scalar plus an `f32`
+    /// scale + offset pair per `block` scalars.
+    QuantizedQ8 {
+        /// Scalars per quantization block (scale/offset granularity).
+        block: usize,
+    },
+}
+
+impl StateBackend {
+    /// Default quantization granularity: 64 scalars share one scale+offset
+    /// pair, so the per-scalar overhead is 8/64 bytes = 1/32 of an `f32`.
+    pub const DEFAULT_Q8_BLOCK: usize = 64;
+
+    /// The 8-bit backend at the default block size.
+    pub fn q8() -> StateBackend {
+        StateBackend::QuantizedQ8 { block: Self::DEFAULT_Q8_BLOCK }
+    }
+
+    /// Display/config spelling: `f32`, `q8`, `q8/128`, ...
+    pub fn name(&self) -> String {
+        match self {
+            StateBackend::DenseF32 => "f32".into(),
+            StateBackend::QuantizedQ8 { block } => format!("q8/{block}"),
+        }
+    }
+
+    /// Parse the CLI/config spelling (`f32`/`dense`, `q8`, `q8/<block>`).
+    pub fn parse(s: &str) -> Option<StateBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "dense" => Some(StateBackend::DenseF32),
+            "q8" => Some(StateBackend::q8()),
+            other => {
+                let block = other.strip_prefix("q8/")?.parse::<usize>().ok()?;
+                if block == 0 {
+                    return None;
+                }
+                Some(StateBackend::QuantizedQ8 { block })
+            }
+        }
+    }
+
+    /// Physical bytes needed to store one buffer of `len` logical state
+    /// scalars under this backend.
+    pub fn buf_bytes(&self, len: usize) -> usize {
+        match self {
+            StateBackend::DenseF32 => len * 4,
+            StateBackend::QuantizedQ8 { block } => {
+                len + len.div_ceil((*block).max(1)) * 8
+            }
+        }
+    }
+}
+
+/// Logical `f32` state-buffer lengths for one parameter group of `shape`
+/// under `kind`. This is the single source of truth for the externalized
+/// state layout: `optim::OptState` allocates exactly these buffers (in this
+/// order), and the paper's scalar accounting is their sum.
+pub fn group_state_buffer_lens(kind: OptimizerKind, shape: &[usize]) -> Vec<usize> {
     let d: usize = shape.iter().product();
     match kind {
-        OptimizerKind::Sgd => 0,
-        OptimizerKind::AdaGrad | OptimizerKind::RmsProp => d,
+        OptimizerKind::Sgd => vec![],
+        OptimizerKind::AdaGrad | OptimizerKind::RmsProp => vec![d],
         // Adam & Adadelta hold two d-sized buffers.
-        OptimizerKind::Adam | OptimizerKind::AdaDelta => 2 * d,
+        OptimizerKind::Adam | OptimizerKind::AdaDelta => vec![d, d],
         OptimizerKind::Adafactor => {
             // row + column accumulators on matrices; full accumulator on
             // vectors (as in the Adafactor paper).
             let nat = super::planner::natural_dims(shape);
             if nat.len() >= 2 {
                 let rows: usize = nat[..nat.len() - 1].iter().product();
-                rows + nat[nat.len() - 1]
+                vec![rows, nat[nat.len() - 1]]
             } else {
-                d
+                vec![d]
             }
         }
-        OptimizerKind::Et(k) => plan(shape, Level::Et(k)).iter().sum(),
-        OptimizerKind::EtInf => 1,
+        OptimizerKind::Et(k) => plan(shape, Level::Et(k)),
+        OptimizerKind::EtInf => vec![],
     }
+}
+
+/// Wide (`f64`, never-quantized) state scalars per group: ET∞ keeps its one
+/// accumulated squared-norm scalar in full precision because the entire
+/// group's adaptivity flows through it.
+pub fn group_wide_scalars(kind: OptimizerKind) -> usize {
+    match kind {
+        OptimizerKind::EtInf => 1,
+        _ => 0,
+    }
+}
+
+/// Optimizer state scalars needed for one parameter group of `shape`.
+pub fn group_state_scalars(kind: OptimizerKind, shape: &[usize]) -> usize {
+    group_state_buffer_lens(kind, shape).iter().sum::<usize>() + group_wide_scalars(kind)
+}
+
+/// Physical bytes for one group's optimizer state under `kind` stored via
+/// `backend`. Wide `f64` scalars are never quantized and cost 8 bytes each.
+pub fn group_state_bytes(kind: OptimizerKind, shape: &[usize], backend: StateBackend) -> usize {
+    group_state_buffer_lens(kind, shape).iter().map(|&l| backend.buf_bytes(l)).sum::<usize>()
+        + group_wide_scalars(kind) * 8
+}
+
+/// Footprint in `f32`-equivalents — the paper's scalar units — which is
+/// fractional under quantized backends (a q8 scalar costs ~0.28 of an f32).
+pub fn group_state_fractional_scalars(
+    kind: OptimizerKind,
+    shape: &[usize],
+    backend: StateBackend,
+) -> f64 {
+    group_state_bytes(kind, shape, backend) as f64 / 4.0
 }
 
 /// A whole model's optimizer memory report.
@@ -123,7 +218,7 @@ mod tests {
     fn transformer_groups(layers: usize, vocab: usize, dm: usize, dff: usize) -> Vec<(String, Vec<usize>)> {
         // Mirrors python/compile/model.py's parameter registry (shared
         // embedding/softmax as in the paper).
-        let mut g = vec![(format!("embed"), vec![vocab, dm])];
+        let mut g = vec![("embed".to_string(), vec![vocab, dm])];
         for l in 0..layers {
             for nm in ["wq", "wk", "wv", "wo"] {
                 g.push((format!("l{l}.{nm}"), vec![dm, dm]));
@@ -184,5 +279,66 @@ mod tests {
         assert_eq!(OptimizerKind::parse("etinf"), Some(OptimizerKind::EtInf));
         assert_eq!(OptimizerKind::parse("adafactor"), Some(OptimizerKind::Adafactor));
         assert_eq!(OptimizerKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn buffer_lens_sum_to_scalars() {
+        // The layout function and the headline accounting must agree for
+        // every kind (wide scalars included).
+        let shapes: Vec<Vec<usize>> = vec![vec![512, 2048], vec![512], vec![8, 4, 3, 3]];
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::AdaGrad,
+            OptimizerKind::Adam,
+            OptimizerKind::RmsProp,
+            OptimizerKind::AdaDelta,
+            OptimizerKind::Adafactor,
+            OptimizerKind::Et(1),
+            OptimizerKind::Et(2),
+            OptimizerKind::Et(3),
+            OptimizerKind::EtInf,
+        ] {
+            for shape in &shapes {
+                let lens = group_state_buffer_lens(kind, shape);
+                let want = lens.iter().sum::<usize>() + group_wide_scalars(kind);
+                assert_eq!(group_state_scalars(kind, shape), want, "{kind:?} {shape:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for b in [
+            StateBackend::DenseF32,
+            StateBackend::q8(),
+            StateBackend::QuantizedQ8 { block: 128 },
+        ] {
+            assert_eq!(StateBackend::parse(&b.name()), Some(b), "{}", b.name());
+        }
+        assert_eq!(StateBackend::parse("dense"), Some(StateBackend::DenseF32));
+        assert_eq!(StateBackend::parse("q8/0"), None);
+        assert_eq!(StateBackend::parse("q4"), None);
+    }
+
+    #[test]
+    fn q8_bytes_below_dense() {
+        let dense = group_state_bytes(OptimizerKind::AdaGrad, &[512, 512], StateBackend::DenseF32);
+        let q8 = group_state_bytes(OptimizerKind::AdaGrad, &[512, 512], StateBackend::q8());
+        assert_eq!(dense, 512 * 512 * 4);
+        // 1 byte/scalar + 8 bytes per 64-scalar block = 1.125 bytes/scalar.
+        assert_eq!(q8, 512 * 512 + (512 * 512 / 64) * 8);
+        assert!(q8 < dense / 3);
+        // Fractional-scalar view agrees with the bytes view.
+        let frac =
+            group_state_fractional_scalars(OptimizerKind::AdaGrad, &[512, 512], StateBackend::q8());
+        assert!((frac - q8 as f64 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wide_state_is_backend_invariant() {
+        // ET∞'s f64 accumulator is never quantized: 8 bytes either way.
+        for backend in [StateBackend::DenseF32, StateBackend::q8()] {
+            assert_eq!(group_state_bytes(OptimizerKind::EtInf, &[512, 512], backend), 8);
+        }
     }
 }

@@ -7,7 +7,13 @@ pub mod index;
 pub mod memory;
 pub mod planner;
 
-pub use accumulator::{EpsMode, SliceAccumulators};
+pub use accumulator::{
+    accumulate_slices, apply_update_bias_corrected_slices, apply_update_slices,
+    for_each_denominator_slices, EpsMode, SliceAccumulators,
+};
 pub use index::{Odometer, TensorIndex};
-pub use memory::{group_state_scalars, MemoryReport, OptimizerKind};
+pub use memory::{
+    group_state_buffer_lens, group_state_bytes, group_state_fractional_scalars,
+    group_state_scalars, group_wide_scalars, MemoryReport, OptimizerKind, StateBackend,
+};
 pub use planner::{natural_dims, plan, plan_flat, plan_index, Level};

@@ -1,21 +1,48 @@
 //! Checkpointing: save/restore the full training state (params + optimizer
 //! state + step counter) in a simple length-prefixed binary format.
 //!
-//! Format (little-endian):
+//! Two formats live here:
+//!
+//! * **ETCK** — artifact-engine checkpoints ([`save`]/[`load`]): the PJRT
+//!   train state's tensors, validated against the artifact manifest.
+//! * **ETHC** — host-optimizer checkpoints ([`save_host`]/[`load_host`]):
+//!   host-resident parameters plus a dense [`StateExport`] of the
+//!   externalized optimizer state, exactly as fanned in from the shard
+//!   workers by `ShardedOptimizer::export_state`. Shard-count independent:
+//!   a checkpoint taken at any `run.shards` restores at any other.
+//!
+//! ETCK format (little-endian):
 //! ```text
 //! magic "ETCK" | version u32 | step u64 | n_tensors u32 |
 //!   per tensor: name_len u32 | name bytes | numel u64 | f32 data
 //! ```
 //! Tensor order and names must match the artifact manifest; `load` verifies
 //! both, so a checkpoint can never be silently applied to the wrong model.
+//!
+//! ETHC format (little-endian; strings are `len u32 | bytes`):
+//! ```text
+//! magic "ETHC" | version u32 | step u64 | kind str | opt_step u64 |
+//! n_params u32 |
+//!   per param: name | numel u64 | f32 data
+//! n_state_groups u32 |
+//!   per group: name | steps u64 | n_wide u32 | f64 data |
+//!              n_bufs u32 | per buf: name | numel u64 | f32 data
+//! ```
+//! Counters (`opt_step`, per-group `steps`) are stored as exact `u64`s —
+//! never rounded through `f32` — so restored training continues
+//! bitwise-identically (`rust/tests/host_checkpoint.rs`).
 
+use crate::optim::{GroupExport, GroupSpec, StateExport};
 use crate::runtime::{Engine, TrainState};
+use crate::tensoring::OptimizerKind;
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"ETCK";
 const VERSION: u32 = 1;
+const HOST_MAGIC: &[u8; 4] = b"ETHC";
+const HOST_VERSION: u32 = 1;
 
 pub fn save(engine: &Engine, state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
     let path = path.as_ref();
@@ -117,11 +144,216 @@ pub fn load(engine: &Engine, path: impl AsRef<Path>) -> Result<TrainState> {
     engine.state_from_vecs(&params, &opt, step)
 }
 
+// ---------------------------------------------------------------------------
+// Host-optimizer checkpoints (ETHC)
+// ---------------------------------------------------------------------------
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    w.write_all(&(data.len() as u64).to_le_bytes())?;
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    // Same corruption invariant as read_f32s: a garbage length field must
+    // fail cleanly, not allocate gigabytes. No tensor/group name comes
+    // anywhere near this bound.
+    anyhow::ensure!(len <= 4096, "checkpoint string of {len} bytes is implausible");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).context("checkpoint string not utf8")
+}
+
+/// Read a length-prefixed f32 tensor, refusing lengths above `max_numel`
+/// *before* allocating — a corrupted length field must produce a clean
+/// error, not a multi-gigabyte allocation (same invariant the ETCK loader
+/// enforces by checking numel against the manifest first).
+fn read_f32s(r: &mut impl Read, max_numel: usize) -> Result<Vec<f32>> {
+    let numel = read_u64(r)? as usize;
+    anyhow::ensure!(
+        numel <= max_numel,
+        "checkpoint tensor of {numel} scalars exceeds the plausible bound {max_numel}"
+    );
+    let mut data = vec![0.0f32; numel];
+    let bytes: &mut [u8] =
+        unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4) };
+    r.read_exact(bytes)?;
+    Ok(data)
+}
+
+/// Save a host-optimizer checkpoint: parameters (one flat vector per
+/// `groups` entry, in order) plus the optimizer-state snapshot. Atomic
+/// (tmp + rename), like [`save`].
+pub fn save_host(
+    groups: &[GroupSpec],
+    params: &[Vec<f32>],
+    state: &StateExport,
+    step: u64,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    anyhow::ensure!(
+        groups.len() == params.len(),
+        "save_host: {} groups but {} param vectors",
+        groups.len(),
+        params.len()
+    );
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(HOST_MAGIC)?;
+        w.write_all(&HOST_VERSION.to_le_bytes())?;
+        w.write_all(&step.to_le_bytes())?;
+        write_str(&mut w, &state.kind.name())?;
+        w.write_all(&state.step.to_le_bytes())?;
+        w.write_all(&(groups.len() as u32).to_le_bytes())?;
+        for (g, p) in groups.iter().zip(params) {
+            anyhow::ensure!(
+                p.len() == g.numel(),
+                "save_host: group '{}' has {} values, expected {}",
+                g.name,
+                p.len(),
+                g.numel()
+            );
+            write_str(&mut w, &g.name)?;
+            write_f32s(&mut w, p)?;
+        }
+        w.write_all(&(state.groups.len() as u32).to_le_bytes())?;
+        for ge in &state.groups {
+            write_str(&mut w, &ge.name)?;
+            w.write_all(&ge.steps.to_le_bytes())?;
+            w.write_all(&(ge.wide.len() as u32).to_le_bytes())?;
+            for &x in &ge.wide {
+                w.write_all(&x.to_le_bytes())?;
+            }
+            w.write_all(&(ge.bufs.len() as u32).to_le_bytes())?;
+            for (name, data) in &ge.bufs {
+                write_str(&mut w, name)?;
+                write_f32s(&mut w, data)?;
+            }
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?; // atomic replace
+    Ok(())
+}
+
+/// Load a host-optimizer checkpoint saved by [`save_host`], validating the
+/// parameters against `groups` (names + sizes, in order). The returned
+/// [`StateExport`] is validated structurally on import
+/// (`OptState::import` / `ShardedOptimizer::import_state`).
+pub fn load_host(
+    groups: &[GroupSpec],
+    path: impl AsRef<Path>,
+) -> Result<(Vec<Vec<f32>>, StateExport, u64)> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open host checkpoint {:?}", path.as_ref()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != HOST_MAGIC {
+        bail!("not an ETHC host checkpoint");
+    }
+    let version = read_u32(&mut r)?;
+    if version != HOST_VERSION {
+        bail!("unsupported host checkpoint version {version}");
+    }
+    let step = read_u64(&mut r)?;
+    let kind_name = read_str(&mut r)?;
+    let kind = OptimizerKind::parse(&kind_name)
+        .with_context(|| format!("unknown optimizer kind '{kind_name}' in checkpoint"))?;
+    let opt_step = read_u64(&mut r)?;
+
+    let n_params = read_u32(&mut r)? as usize;
+    if n_params != groups.len() {
+        bail!("host checkpoint has {n_params} params, expected {}", groups.len());
+    }
+    let mut params = Vec::with_capacity(n_params);
+    for g in groups {
+        let name = read_str(&mut r)?;
+        if name != g.name {
+            bail!("host checkpoint param '{name}', expected '{}'", g.name);
+        }
+        let data = read_f32s(&mut r, g.numel())?;
+        if data.len() != g.numel() {
+            bail!(
+                "host checkpoint param '{name}': {} values, expected {}",
+                data.len(),
+                g.numel()
+            );
+        }
+        params.push(data);
+    }
+
+    // Every state layout has exactly one state group per parameter group,
+    // and no single buffer exceeds 2x the group's numel (Adam/Adadelta hold
+    // two d-sized buffers; ET mode vectors and Adafactor factors are all
+    // <= d). Bound the reads accordingly so corrupted counts fail cleanly.
+    let n_state = read_u32(&mut r)? as usize;
+    if n_state != groups.len() {
+        bail!("host checkpoint has {n_state} state groups, expected {}", groups.len());
+    }
+    let mut state_groups = Vec::with_capacity(n_state);
+    for g in groups {
+        let name = read_str(&mut r)?;
+        if name != g.name {
+            bail!("host checkpoint state group '{name}', expected '{}'", g.name);
+        }
+        let steps = read_u64(&mut r)?;
+        let n_wide = read_u32(&mut r)? as usize;
+        if n_wide > 16 {
+            bail!("host checkpoint state group '{name}': implausible {n_wide} wide scalars");
+        }
+        let mut wide = Vec::with_capacity(n_wide);
+        for _ in 0..n_wide {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            wide.push(f64::from_le_bytes(b));
+        }
+        let n_bufs = read_u32(&mut r)? as usize;
+        if n_bufs > g.numel().max(16) {
+            bail!("host checkpoint state group '{name}': implausible {n_bufs} buffers");
+        }
+        let mut bufs = Vec::with_capacity(n_bufs);
+        for _ in 0..n_bufs {
+            let bname = read_str(&mut r)?;
+            bufs.push((bname, read_f32s(&mut r, 2 * g.numel())?));
+        }
+        state_groups.push(GroupExport { name, steps, wide, bufs });
+    }
+    Ok((params, StateExport { kind, step: opt_step, groups: state_groups }, step))
+}
+
 #[cfg(test)]
 mod tests {
     // Checkpoint round-trip with a real engine requires artifacts; the
-    // integration test `rust/tests/train_loop.rs` covers it. Here we test
-    // the header validation on raw bytes.
+    // integration test `rust/tests/train_loop.rs` covers it (and
+    // `rust/tests/host_checkpoint.rs` covers ETHC end to end). Here we
+    // test header validation and the raw ETHC round trip.
     use super::*;
 
     #[test]
@@ -136,6 +368,42 @@ mod tests {
         use std::io::Read;
         f.read_exact(&mut magic).unwrap();
         assert_ne!(&magic, MAGIC);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn host_checkpoint_roundtrips_exactly() {
+        use crate::optim::{self, Hyper, Optimizer};
+        let dir = std::env::temp_dir().join(format!("ethc-{}", std::process::id()));
+        let path = dir.join("host.hck");
+        let gs = vec![GroupSpec::new("w", &[4, 4]), GroupSpec::new("b", &[4])];
+        let mut opt = optim::build_state(OptimizerKind::EtInf, &gs, &Hyper::default());
+        let mut params: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.5f32; g.numel()]).collect();
+        let grads: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.25f32; g.numel()]).collect();
+        for _ in 0..3 {
+            opt.next_step();
+            opt.step_all(&mut params, &grads, 0.1).unwrap();
+        }
+        let state = opt.export();
+        save_host(&gs, &params, &state, 3, &path).unwrap();
+        let (p2, s2, step) = load_host(&gs, &path).unwrap();
+        assert_eq!(step, 3);
+        assert_eq!(p2, params);
+        assert_eq!(s2, state); // includes the exact f64 wide accumulators
+
+        // Wrong group list must be rejected.
+        let other = vec![GroupSpec::new("w2", &[4, 4]), GroupSpec::new("b", &[4])];
+        assert!(load_host(&other, &path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn host_load_rejects_etck_files() {
+        let dir = std::env::temp_dir().join(format!("ethc-x-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.hck");
+        std::fs::write(&path, b"ETCK\x01\x00\x00\x00").unwrap();
+        assert!(load_host(&[], &path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -2,7 +2,7 @@
 //! budgets. Parsed from TOML (`util::config`) with CLI overrides.
 
 use crate::optim::Schedule;
-use crate::tensoring::OptimizerKind;
+use crate::tensoring::{OptimizerKind, StateBackend};
 use crate::util::config::Config;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -42,6 +42,9 @@ pub struct RunConfig {
     /// artifact and the update is applied by the (sharded) pure-rust
     /// optimizer suite instead of the fused train-step artifact.
     pub host_optimizer: Option<OptimizerKind>,
+    /// Physical storage for host-optimizer state: `f32` (default) or
+    /// `q8`/`q8/<block>` for 8-bit block-quantized buffers.
+    pub state_backend: StateBackend,
 }
 
 impl Default for RunConfig {
@@ -66,6 +69,7 @@ impl Default for RunConfig {
             trace_every: 10,
             shards: 1,
             host_optimizer: None,
+            state_backend: StateBackend::DenseF32,
         }
     }
 }
@@ -112,6 +116,11 @@ impl RunConfig {
                 ),
                 None => None,
             },
+            state_backend: match cfg.get("run.state_backend").and_then(|v| v.as_str()) {
+                Some(s) => StateBackend::parse(s)
+                    .with_context(|| format!("unknown state backend '{s}' (f32|q8|q8/<block>)"))?,
+                None => StateBackend::DenseF32,
+            },
         })
     }
 }
@@ -147,17 +156,27 @@ schedule = "constant:0.05"
 artifact = "lm_tiny_et2"
 shards = 4
 host_optimizer = "et2"
+state_backend = "q8"
 "#,
         )
         .unwrap();
         let rc = RunConfig::from_config(&cfg).unwrap();
         assert_eq!(rc.shards, 4);
         assert_eq!(rc.host_optimizer, Some(OptimizerKind::Et(2)));
-        // default: single shard, fused-artifact training
+        assert_eq!(rc.state_backend, StateBackend::q8());
+        // default: single shard, fused-artifact training, dense f32 state
         let plain = Config::parse("[run]\nartifact = \"a\"").unwrap();
         let rc = RunConfig::from_config(&plain).unwrap();
         assert_eq!(rc.shards, 1);
         assert_eq!(rc.host_optimizer, None);
+        assert_eq!(rc.state_backend, StateBackend::DenseF32);
+    }
+
+    #[test]
+    fn rejects_bad_state_backend() {
+        let cfg =
+            Config::parse("[run]\nartifact = \"a\"\nstate_backend = \"q4\"").unwrap();
+        assert!(RunConfig::from_config(&cfg).is_err());
     }
 
     #[test]

@@ -253,8 +253,12 @@ impl Trainer {
     /// artifact; the update is applied by the pure-rust optimizer engine,
     /// fanned out over `cfg.shards` persistent workers
     /// ([`crate::shard::ShardedOptimizer`]). Parameters live as host
-    /// vectors; optimizer state lives shard-local inside the workers and
-    /// never crosses a shard boundary. With `shards = 1` this is
+    /// vectors; optimizer state lives shard-local inside the workers (in
+    /// the storage backend `cfg.state_backend` selects) and crosses a
+    /// shard boundary only for checkpoints: with `checkpoint_every > 0`
+    /// the worker-local state is fanned in and written as a
+    /// shard-count-independent `latest.hck`/`final.hck`
+    /// ([`checkpoint::save_host`]). With `shards = 1` this is
     /// bitwise-identical to running the plain optimizer in-thread.
     fn run_host(&mut self) -> Result<RunResult> {
         let kind = self.cfg.host_optimizer.context("host_optimizer not set")?;
@@ -285,27 +289,20 @@ impl Trainer {
             gm.opt_state.iter().map(|s| vec![0.0f32; s.numel()]).collect();
         let groups = gm.group_specs();
         let shards = self.cfg.shards.max(1);
-        let mut opt = ShardedOptimizer::new(kind, &groups, &Hyper::default(), shards)?;
-        // Optimizer state lives shard-local inside the workers; extracting
-        // it for checkpoints is future work (see ROADMAP), so be loud
-        // rather than silently skipping.
-        if self.cfg.checkpoint_every > 0 {
-            crate::warnln!(
-                "[{}] checkpoint_every is ignored in host-optimizer mode \
-                 (worker-local state extraction not implemented)",
-                self.cfg.name
-            );
-        }
+        let hyper = Hyper { backend: self.cfg.state_backend, ..Hyper::default() };
+        let mut opt = ShardedOptimizer::new(kind, &groups, &hyper, shards)?;
         let mut tracker = if self.cfg.track_traces {
             Some(self.build_tracker()?)
         } else {
             None
         };
         crate::info!(
-            "[{}] host optimizer {} ({} state scalars, peak {} per shard)",
+            "[{}] host optimizer {} ({} state scalars, {} state bytes [{}], peak {} per shard)",
             self.cfg.name,
             opt.name(),
             opt.state_scalars(),
+            opt.state_bytes(),
+            self.cfg.state_backend.name(),
             opt.peak_state_scalars()
         );
 
@@ -370,6 +367,19 @@ impl Trainer {
                 crate::info!("[{}] step {step} val ppl {:.2}", self.cfg.name, rec.ppl());
                 eval_history.push(rec);
             }
+
+            if self.cfg.checkpoint_every > 0 && step % self.cfg.checkpoint_every == 0 {
+                // Shard-aware checkpoint: fan worker-local state in as one
+                // global, shard-count-independent snapshot.
+                let state = opt.export_state()?;
+                checkpoint::save_host(
+                    &groups,
+                    &params,
+                    &state,
+                    step,
+                    run_dir.join("latest.hck"),
+                )?;
+            }
         }
 
         // Final eval at the final parameters.
@@ -383,6 +393,11 @@ impl Trainer {
         } else {
             f64::NAN
         };
+
+        if self.cfg.checkpoint_every > 0 {
+            let state = opt.export_state()?;
+            checkpoint::save_host(&groups, &params, &state, step, run_dir.join("final.hck"))?;
+        }
 
         let summary = RunSummary {
             name: self.cfg.name.clone(),

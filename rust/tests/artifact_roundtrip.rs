@@ -176,9 +176,13 @@ fn artifact_update_matches_rust_oracle() -> Result<()> {
     // HLO-side gradients at the initial params.
     let (_, grads) = grad.grad_step(&state, &[DataArg::I32(&tokens)])?;
 
-    // Rust oracle: ET2 on the same groups.
+    // Rust oracle: ET2 on the same groups (externalized-state suite).
     let groups: Vec<GroupSpec> = train.manifest.group_specs();
-    let mut oracle = extensor::optim::extreme::ExtremeTensoring::new(&groups, 2, 1e-8, None);
+    let mut oracle = extensor::optim::build(
+        extensor::tensoring::OptimizerKind::Et(2),
+        &groups,
+        &extensor::optim::Hyper::default(),
+    );
     let mut oracle_params = params_host.clone();
     for (gi, (p, g)) in oracle_params.iter_mut().zip(&grads).enumerate() {
         oracle.step(gi, p, g, 0.05)?;

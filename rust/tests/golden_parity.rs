@@ -1,0 +1,564 @@
+//! Golden-value parity for the externalized-state refactor: for every
+//! `OptimizerKind`, the new `OptState`-backed `step` must reproduce the
+//! pre-refactor update **bitwise** on fixed seeded inputs.
+//!
+//! The goldens are captured as code, not numbers: the `reference` module
+//! below is the pre-refactor embedded-state arithmetic, copied verbatim
+//! from the seed optimizers (same loop structure, same operation order —
+//! float summation order matters for bitwise equality). Comparing against
+//! a re-run of the old arithmetic instead of hard-coded vectors keeps the
+//! test exact on any platform/libm.
+
+use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
+use extensor::tensoring::OptimizerKind;
+use extensor::util::rng::Pcg64;
+
+/// Pre-refactor update rules, verbatim. One struct per kind, each owning
+/// its state privately — exactly the shape the suite had before the
+/// externalized-state API.
+mod reference {
+    use extensor::optim::GroupSpec;
+    use extensor::tensoring::{natural_dims, plan, Level};
+    use extensor::util::math::sq_norm;
+
+    pub trait RefOptimizer {
+        fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32);
+        fn next_step(&mut self) {}
+        fn state_scalars(&self) -> usize;
+    }
+
+    pub struct Sgd;
+
+    impl RefOptimizer for Sgd {
+        fn step(&mut self, _gi: usize, x: &mut [f32], g: &[f32], lr: f32) {
+            for (xi, &gi_) in x.iter_mut().zip(g) {
+                *xi -= lr * gi_;
+            }
+        }
+        fn state_scalars(&self) -> usize {
+            0
+        }
+    }
+
+    pub struct AdaGrad {
+        eps: f32,
+        s: Vec<Vec<f32>>,
+    }
+
+    impl AdaGrad {
+        pub fn new(groups: &[GroupSpec], eps: f32) -> Self {
+            AdaGrad { eps, s: groups.iter().map(|g| vec![0.0; g.numel()]).collect() }
+        }
+    }
+
+    impl RefOptimizer for AdaGrad {
+        fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) {
+            let s = &mut self.s[gi];
+            for i in 0..s.len() {
+                s[i] += g[i] * g[i];
+                x[i] -= lr * g[i] / (self.eps + s[i]).sqrt();
+            }
+        }
+        fn state_scalars(&self) -> usize {
+            self.s.iter().map(|v| v.len()).sum()
+        }
+    }
+
+    pub struct Adam {
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        t: u64,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    }
+
+    impl Adam {
+        pub fn new(groups: &[GroupSpec], beta1: f32, beta2: f32, eps: f32) -> Self {
+            Adam {
+                beta1,
+                beta2,
+                eps,
+                t: 0,
+                m: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
+                v: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
+            }
+        }
+    }
+
+    impl RefOptimizer for Adam {
+        fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) {
+            let (m, v) = (&mut self.m[gi], &mut self.v[gi]);
+            let t = self.t.max(1) as i32;
+            let bc1 = 1.0 - self.beta1.powi(t);
+            let bc2 = 1.0 - self.beta2.powi(t);
+            for i in 0..m.len() {
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                x[i] -= lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+        fn next_step(&mut self) {
+            self.t += 1;
+        }
+        fn state_scalars(&self) -> usize {
+            self.m.iter().map(|v| v.len()).sum::<usize>() * 2
+        }
+    }
+
+    pub struct RmsProp {
+        beta2: f32,
+        eps: f32,
+        v: Vec<Vec<f32>>,
+    }
+
+    impl RmsProp {
+        pub fn new(groups: &[GroupSpec], beta2: f32, eps: f32) -> Self {
+            RmsProp { beta2, eps, v: groups.iter().map(|g| vec![0.0; g.numel()]).collect() }
+        }
+    }
+
+    impl RefOptimizer for RmsProp {
+        fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) {
+            let v = &mut self.v[gi];
+            for i in 0..v.len() {
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+                x[i] -= lr * g[i] / (v[i].sqrt() + self.eps);
+            }
+        }
+        fn state_scalars(&self) -> usize {
+            self.v.iter().map(|v| v.len()).sum()
+        }
+    }
+
+    pub struct AdaDelta {
+        rho: f32,
+        eps: f32,
+        eg2: Vec<Vec<f32>>,
+        ex2: Vec<Vec<f32>>,
+    }
+
+    impl AdaDelta {
+        pub fn new(groups: &[GroupSpec], rho: f32, eps: f32) -> Self {
+            AdaDelta {
+                rho,
+                eps,
+                eg2: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
+                ex2: groups.iter().map(|g| vec![0.0; g.numel()]).collect(),
+            }
+        }
+    }
+
+    impl RefOptimizer for AdaDelta {
+        fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) {
+            let (eg2, ex2) = (&mut self.eg2[gi], &mut self.ex2[gi]);
+            for i in 0..eg2.len() {
+                eg2[i] = self.rho * eg2[i] + (1.0 - self.rho) * g[i] * g[i];
+                let dx = ((ex2[i] + self.eps) / (eg2[i] + self.eps)).sqrt() * g[i];
+                ex2[i] = self.rho * ex2[i] + (1.0 - self.rho) * dx * dx;
+                x[i] -= lr * dx;
+            }
+        }
+        fn state_scalars(&self) -> usize {
+            self.eg2.iter().map(|v| v.len()).sum::<usize>() * 2
+        }
+    }
+
+    enum FactorState {
+        Factored { rows: usize, cols: usize, r: Vec<f32>, c: Vec<f32> },
+        Full(Vec<f32>),
+    }
+
+    pub struct Adafactor {
+        beta2: Option<f32>,
+        eps: f32,
+        state: Vec<FactorState>,
+    }
+
+    impl Adafactor {
+        pub fn new(groups: &[GroupSpec], beta2: Option<f32>, eps: f32) -> Self {
+            let state = groups
+                .iter()
+                .map(|g| {
+                    let nat = natural_dims(&g.shape);
+                    if nat.len() >= 2 {
+                        let cols = nat[nat.len() - 1];
+                        let rows: usize = nat[..nat.len() - 1].iter().product();
+                        FactorState::Factored {
+                            rows,
+                            cols,
+                            r: vec![0.0; rows],
+                            c: vec![0.0; cols],
+                        }
+                    } else {
+                        FactorState::Full(vec![0.0; g.numel()])
+                    }
+                })
+                .collect();
+            Adafactor { beta2, eps, state }
+        }
+    }
+
+    impl RefOptimizer for Adafactor {
+        fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) {
+            match &mut self.state[gi] {
+                FactorState::Full(v) => {
+                    for i in 0..v.len() {
+                        let sq = g[i] * g[i];
+                        v[i] = match self.beta2 {
+                            Some(b2) => b2 * v[i] + (1.0 - b2) * sq,
+                            None => v[i] + sq,
+                        };
+                        x[i] -= lr * g[i] / (v[i] + self.eps).sqrt();
+                    }
+                }
+                FactorState::Factored { rows, cols, r, c } => {
+                    let (rows, cols) = (*rows, *cols);
+                    let mut row_ms = vec![0.0f32; rows];
+                    let mut col_ms = vec![0.0f32; cols];
+                    for i in 0..rows {
+                        let grow = &g[i * cols..(i + 1) * cols];
+                        let mut acc = 0.0f32;
+                        for (j, &v) in grow.iter().enumerate() {
+                            let sq = v * v;
+                            acc += sq;
+                            col_ms[j] += sq;
+                        }
+                        row_ms[i] = acc / cols as f32;
+                    }
+                    for v in col_ms.iter_mut() {
+                        *v /= rows as f32;
+                    }
+                    match self.beta2 {
+                        Some(b2) => {
+                            for i in 0..rows {
+                                r[i] = b2 * r[i] + (1.0 - b2) * row_ms[i];
+                            }
+                            for j in 0..cols {
+                                c[j] = b2 * c[j] + (1.0 - b2) * col_ms[j];
+                            }
+                        }
+                        None => {
+                            for i in 0..rows {
+                                r[i] += row_ms[i];
+                            }
+                            for j in 0..cols {
+                                c[j] += col_ms[j];
+                            }
+                        }
+                    }
+                    let mean_r: f32 = r.iter().sum::<f32>() / rows as f32;
+                    let inv_mean_r = if mean_r > 0.0 { 1.0 / mean_r } else { 0.0 };
+                    for i in 0..rows {
+                        let ri = r[i] * inv_mean_r;
+                        let xrow = &mut x[i * cols..(i + 1) * cols];
+                        let grow = &g[i * cols..(i + 1) * cols];
+                        for j in 0..cols {
+                            let vhat = ri * c[j];
+                            xrow[j] -= lr * grow[j] / (vhat + self.eps).sqrt();
+                        }
+                    }
+                }
+            }
+        }
+        fn state_scalars(&self) -> usize {
+            self.state
+                .iter()
+                .map(|s| match s {
+                    FactorState::Factored { r, c, .. } => r.len() + c.len(),
+                    FactorState::Full(v) => v.len(),
+                })
+                .sum()
+        }
+    }
+
+    /// `x^(-1/(2p))` exactly as the seed accumulator computed it.
+    fn inv_root_2p(x: f32, p: usize) -> f32 {
+        match p {
+            1 => 1.0 / x.sqrt(),
+            2 => 1.0 / x.sqrt().sqrt(),
+            4 => 1.0 / x.sqrt().sqrt().sqrt(),
+            8 => 1.0 / x.sqrt().sqrt().sqrt().sqrt(),
+            _ => x.powf(-1.0 / (2.0 * p as f32)),
+        }
+    }
+
+    /// Seed extreme tensoring (non-decayed, Algorithm-1 eps-inside-product
+    /// form — the `Hyper::default()` configuration): slice-sum accumulate
+    /// in the seed's exact branch/order structure, then the prefix-product
+    /// preconditioner walk.
+    pub struct ExtremeTensoring {
+        eps: f32,
+        dims: Vec<Vec<usize>>,
+        s: Vec<Vec<Vec<f32>>>,
+    }
+
+    impl ExtremeTensoring {
+        pub fn new(groups: &[GroupSpec], level: u8, eps: f32) -> Self {
+            let dims: Vec<Vec<usize>> =
+                groups.iter().map(|g| plan(&g.shape, Level::Et(level))).collect();
+            let s = dims
+                .iter()
+                .map(|d| d.iter().map(|&di| vec![0.0f32; di]).collect())
+                .collect();
+            ExtremeTensoring { eps, dims, s }
+        }
+    }
+
+    impl RefOptimizer for ExtremeTensoring {
+        fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) {
+            let dims = self.dims[gi].clone();
+            let s = &mut self.s[gi];
+            // accumulate (w = 1, no decay) — seed branch structure
+            match dims.len() {
+                1 => {
+                    let s0 = &mut s[0];
+                    for (j, &gj) in g.iter().enumerate() {
+                        s0[j] += gj * gj;
+                    }
+                }
+                2 => {
+                    let (d0, d1) = (dims[0], dims[1]);
+                    let (s01, s1x) = s.split_at_mut(1);
+                    let (s0, s1) = (&mut s01[0], &mut s1x[0]);
+                    for r in 0..d0 {
+                        let row = &g[r * d1..(r + 1) * d1];
+                        let mut acc = 0.0f32;
+                        for (c, &grc) in row.iter().enumerate() {
+                            let sq = grc * grc;
+                            acc += sq;
+                            s1[c] += sq;
+                        }
+                        s0[r] += acc;
+                    }
+                }
+                _ => {
+                    let p = dims.len();
+                    let mut coords = vec![0usize; p];
+                    for &gj in g.iter() {
+                        let sq = gj * gj;
+                        for i in 0..p {
+                            s[i][coords[i]] += sq;
+                        }
+                        for i in (0..p).rev() {
+                            coords[i] += 1;
+                            if coords[i] < dims[i] {
+                                break;
+                            }
+                            coords[i] = 0;
+                        }
+                    }
+                }
+            }
+            // apply (InsideProduct eps, prefix-product walk) — seed order
+            let p = dims.len();
+            let n: usize = dims.iter().product();
+            let mut coords = vec![0usize; p];
+            let mut prefix = vec![0.0f32; p];
+            let mut rebuild_from = 0usize;
+            for j in 0..n {
+                for i in rebuild_from..p {
+                    let base = if i == 0 { 1.0 } else { prefix[i - 1] };
+                    prefix[i] = base * s[i][coords[i]];
+                }
+                let denom = self.eps + prefix[p - 1];
+                x[j] -= lr * inv_root_2p(denom, p) * g[j];
+                rebuild_from = p;
+                for i in (0..p).rev() {
+                    coords[i] += 1;
+                    if coords[i] < dims[i] {
+                        rebuild_from = i;
+                        break;
+                    }
+                    coords[i] = 0;
+                }
+            }
+        }
+        fn state_scalars(&self) -> usize {
+            self.dims.iter().flatten().sum()
+        }
+    }
+
+    pub struct EtInf {
+        eps: f32,
+        s: Vec<f64>,
+    }
+
+    impl EtInf {
+        pub fn new(groups: &[GroupSpec], eps: f32) -> Self {
+            EtInf { eps, s: vec![0.0; groups.len()] }
+        }
+    }
+
+    impl RefOptimizer for EtInf {
+        fn step(&mut self, gi: usize, x: &mut [f32], g: &[f32], lr: f32) {
+            self.s[gi] += sq_norm(g);
+            let rate = lr / (self.eps as f64 + self.s[gi]).sqrt() as f32;
+            for (xi, &gj) in x.iter_mut().zip(g) {
+                *xi -= rate * gj;
+            }
+        }
+        fn state_scalars(&self) -> usize {
+            self.s.len()
+        }
+    }
+}
+
+/// Transformer-flavored group mix: big matrices, a conv kernel, and a tail
+/// of small vectors — exercises the 1-D, 2-D, and general-p accumulate
+/// branches and Adafactor's factored + full paths.
+fn groups() -> Vec<GroupSpec> {
+    vec![
+        GroupSpec::new("embed", &[50, 16]),
+        GroupSpec::new("wq", &[16, 16]),
+        GroupSpec::new("ln1", &[16]),
+        GroupSpec::new("ff1", &[16, 32]),
+        GroupSpec::new("ff1b", &[32]),
+        GroupSpec::new("conv", &[8, 4, 3, 3]),
+        GroupSpec::new("ln_f", &[16]),
+    ]
+}
+
+fn grad_stream(gs: &[GroupSpec], steps: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..steps)
+        .map(|_| {
+            gs.iter()
+                .map(|g| {
+                    let mut v = vec![0.0f32; g.numel()];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn init_params(gs: &[GroupSpec], seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed ^ 0xA11CE);
+    gs.iter()
+        .map(|g| {
+            let mut v = vec![0.0f32; g.numel()];
+            rng.fill_uniform(&mut v, -0.5, 0.5);
+            v
+        })
+        .collect()
+}
+
+/// Run the *new* externalized-state optimizer.
+fn run_new(
+    kind: OptimizerKind,
+    gs: &[GroupSpec],
+    stream: &[Vec<Vec<f32>>],
+    lr: f32,
+) -> Vec<Vec<f32>> {
+    let mut opt = optim::build(kind, gs, &Hyper::default());
+    let mut params = init_params(gs, 1);
+    for grads in stream {
+        opt.next_step();
+        for (gi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            opt.step(gi, p, g, lr).unwrap();
+        }
+    }
+    params
+}
+
+/// Run a pre-refactor reference implementation on the same inputs.
+fn run_reference(
+    opt: &mut dyn reference::RefOptimizer,
+    gs: &[GroupSpec],
+    stream: &[Vec<Vec<f32>>],
+    lr: f32,
+) -> Vec<Vec<f32>> {
+    let mut params = init_params(gs, 1);
+    for grads in stream {
+        opt.next_step();
+        for (gi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            opt.step(gi, p, g, lr);
+        }
+    }
+    params
+}
+
+fn assert_bitwise_eq(kind: OptimizerKind, want: &[Vec<f32>], got: &[Vec<f32>]) {
+    assert_eq!(want.len(), got.len(), "{kind:?}: group count");
+    for (gi, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.len(), g.len(), "{kind:?}: group {gi} length");
+        for (j, (a, b)) in w.iter().zip(g).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{kind:?}: group {gi} coord {j}: reference {a} vs new {b}"
+            );
+        }
+    }
+}
+
+/// The satellite acceptance test: every kind, multi-step seeded run,
+/// bitwise equality against the pre-refactor arithmetic. Resolved
+/// hyperparameters mirror `optim::build` under `Hyper::default()`
+/// (beta2 = 0.999 everywhere it applies, eps = 1e-8, ET non-decayed).
+#[test]
+fn externalized_state_matches_pre_refactor_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 5, 7);
+    let eps = Hyper::EPS;
+    let b2 = Hyper::ADAM_BETA2;
+    let cases: Vec<(OptimizerKind, Box<dyn reference::RefOptimizer>, f32)> = vec![
+        (OptimizerKind::Sgd, Box::new(reference::Sgd), 0.05),
+        (OptimizerKind::AdaGrad, Box::new(reference::AdaGrad::new(&gs, eps)), 0.05),
+        (OptimizerKind::Adam, Box::new(reference::Adam::new(&gs, Hyper::BETA1, b2, eps)), 0.05),
+        (OptimizerKind::RmsProp, Box::new(reference::RmsProp::new(&gs, b2, eps)), 0.05),
+        (OptimizerKind::AdaDelta, Box::new(reference::AdaDelta::new(&gs, b2, eps)), 1.0),
+        (OptimizerKind::Adafactor, Box::new(reference::Adafactor::new(&gs, Some(b2), eps)), 0.05),
+        (OptimizerKind::Et(1), Box::new(reference::ExtremeTensoring::new(&gs, 1, eps)), 0.05),
+        (OptimizerKind::Et(2), Box::new(reference::ExtremeTensoring::new(&gs, 2, eps)), 0.05),
+        (OptimizerKind::Et(3), Box::new(reference::ExtremeTensoring::new(&gs, 3, eps)), 0.05),
+        (OptimizerKind::EtInf, Box::new(reference::EtInf::new(&gs, eps)), 0.05),
+    ];
+    for (kind, mut reference_opt, lr) in cases {
+        let want = run_reference(reference_opt.as_mut(), &gs, &stream, lr);
+        let got = run_new(kind, &gs, &stream, lr);
+        assert_bitwise_eq(kind, &want, &got);
+        let new_opt = optim::build(kind, &gs, &Hyper::default());
+        assert_eq!(
+            new_opt.state_scalars(),
+            reference_opt.state_scalars(),
+            "{kind:?}: state accounting drifted"
+        );
+    }
+}
+
+/// The batched `step_all` path must be bitwise-equal to the reference too
+/// (it is the path the trainer and shard workers actually run).
+#[test]
+fn step_all_matches_pre_refactor_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 4, 13);
+    for (kind, lr) in [
+        (OptimizerKind::AdaGrad, 0.05f32),
+        (OptimizerKind::Adam, 0.05),
+        (OptimizerKind::Et(2), 0.05),
+        (OptimizerKind::EtInf, 0.05),
+    ] {
+        let mut reference_opt: Box<dyn reference::RefOptimizer> = match kind {
+            OptimizerKind::AdaGrad => Box::new(reference::AdaGrad::new(&gs, Hyper::EPS)),
+            OptimizerKind::Adam => {
+                Box::new(reference::Adam::new(&gs, Hyper::BETA1, Hyper::ADAM_BETA2, Hyper::EPS))
+            }
+            OptimizerKind::Et(2) => Box::new(reference::ExtremeTensoring::new(&gs, 2, Hyper::EPS)),
+            _ => Box::new(reference::EtInf::new(&gs, Hyper::EPS)),
+        };
+        let want = run_reference(reference_opt.as_mut(), &gs, &stream, lr);
+
+        let mut opt = optim::build(kind, &gs, &Hyper::default());
+        let mut got = init_params(&gs, 1);
+        for grads in &stream {
+            opt.next_step();
+            opt.step_all(&mut got, grads, lr).unwrap();
+        }
+        assert_bitwise_eq(kind, &want, &got);
+    }
+}

@@ -1,0 +1,206 @@
+//! Shard-aware host-optimizer checkpointing, end to end: run the sharded
+//! engine, snapshot params + externalized optimizer state to disk
+//! (`checkpoint::save_host`), restore into a *fresh* engine
+//! (`checkpoint::load_host` + `ShardedOptimizer::import_state`), and
+//! assert training continues **bitwise-identically** to an uninterrupted
+//! run — for every optimizer kind, at `run.shards` ∈ {1, 2, 4}, and across
+//! shard-count changes (a snapshot taken at 2 shards restores at 1 or 4).
+//!
+//! No artifacts required: this drives the pure-rust suite on seeded
+//! synthetic gradients, exactly like `sharded_parity.rs`.
+
+use extensor::optim::{GroupSpec, Hyper, Optimizer};
+use extensor::shard::ShardedOptimizer;
+use extensor::tensoring::OptimizerKind;
+use extensor::train::checkpoint;
+use extensor::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn groups() -> Vec<GroupSpec> {
+    vec![
+        GroupSpec::new("embed", &[50, 16]),
+        GroupSpec::new("wq", &[16, 16]),
+        GroupSpec::new("ln1", &[16]),
+        GroupSpec::new("ff1", &[16, 32]),
+        GroupSpec::new("ff1b", &[32]),
+        GroupSpec::new("conv", &[8, 4, 3, 3]),
+        GroupSpec::new("ln_f", &[16]),
+    ]
+}
+
+fn all_kinds() -> Vec<OptimizerKind> {
+    vec![
+        OptimizerKind::Sgd,
+        OptimizerKind::AdaGrad,
+        OptimizerKind::Adam,
+        OptimizerKind::RmsProp,
+        OptimizerKind::AdaDelta,
+        OptimizerKind::Adafactor,
+        OptimizerKind::Et(1),
+        OptimizerKind::Et(2),
+        OptimizerKind::Et(3),
+        OptimizerKind::EtInf,
+    ]
+}
+
+fn grad_stream(gs: &[GroupSpec], steps: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..steps)
+        .map(|_| {
+            gs.iter()
+                .map(|g| {
+                    let mut v = vec![0.0f32; g.numel()];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn init_params(gs: &[GroupSpec]) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(0xBEEF);
+    gs.iter()
+        .map(|g| {
+            let mut v = vec![0.0f32; g.numel()];
+            rng.fill_uniform(&mut v, -0.5, 0.5);
+            v
+        })
+        .collect()
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ethc-it-{}-{tag}.hck", std::process::id()))
+}
+
+/// Uninterrupted reference trajectory.
+fn run_uninterrupted(
+    kind: OptimizerKind,
+    gs: &[GroupSpec],
+    stream: &[Vec<Vec<f32>>],
+    lr: f32,
+    shards: usize,
+) -> Vec<Vec<f32>> {
+    let mut opt = ShardedOptimizer::new(kind, gs, &Hyper::default(), shards).unwrap();
+    let mut params = init_params(gs);
+    for grads in stream {
+        opt.next_step();
+        opt.step_all(&mut params, grads, lr).unwrap();
+    }
+    params
+}
+
+/// Run `split` steps, checkpoint to disk, tear everything down, restore
+/// into a fresh engine with `restore_shards` workers, finish the stream.
+fn run_with_restart(
+    kind: OptimizerKind,
+    gs: &[GroupSpec],
+    stream: &[Vec<Vec<f32>>],
+    lr: f32,
+    save_shards: usize,
+    restore_shards: usize,
+    tag: &str,
+) -> Vec<Vec<f32>> {
+    let path = tmp_path(tag);
+    let split = stream.len() / 2;
+    {
+        let mut opt = ShardedOptimizer::new(kind, gs, &Hyper::default(), save_shards).unwrap();
+        let mut params = init_params(gs);
+        for grads in &stream[..split] {
+            opt.next_step();
+            opt.step_all(&mut params, grads, lr).unwrap();
+        }
+        let state = opt.export_state().unwrap();
+        checkpoint::save_host(gs, &params, &state, split as u64, &path).unwrap();
+        // Engine dropped here: workers shut down, state only lives on disk.
+    }
+    let (mut params, state, step) = checkpoint::load_host(gs, &path).unwrap();
+    assert_eq!(step, split as u64);
+    let mut opt = ShardedOptimizer::new(kind, gs, &Hyper::default(), restore_shards).unwrap();
+    opt.import_state(&state).unwrap();
+    for grads in &stream[split..] {
+        opt.next_step();
+        opt.step_all(&mut params, grads, lr).unwrap();
+    }
+    std::fs::remove_file(&path).ok();
+    params
+}
+
+/// The satellite acceptance test: save/load at 1, 2, and 4 shards; the
+/// restarted run must be bitwise-identical to the uninterrupted one for
+/// every optimizer kind.
+#[test]
+fn checkpoint_roundtrip_is_bitwise_at_1_2_4_shards() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 6, 41);
+    for kind in all_kinds() {
+        let lr = if kind == OptimizerKind::AdaDelta { 1.0 } else { 0.05 };
+        for shards in [1usize, 2, 4] {
+            let want = run_uninterrupted(kind, &gs, &stream, lr, shards);
+            let got = run_with_restart(
+                kind,
+                &gs,
+                &stream,
+                lr,
+                shards,
+                shards,
+                &format!("{kind:?}-{shards}"),
+            );
+            assert_eq!(
+                want, got,
+                "kind {kind:?} at {shards} shards: restart diverged from uninterrupted run"
+            );
+        }
+    }
+}
+
+/// A checkpoint is shard-count independent: saved at 2 shards, restored at
+/// 1 and 4 (the uninterrupted reference is itself shard-count invariant by
+/// the parity contract, so any mismatch is the checkpoint path's fault).
+#[test]
+fn checkpoint_migrates_across_shard_counts() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 6, 43);
+    for kind in [OptimizerKind::Adam, OptimizerKind::Et(2), OptimizerKind::EtInf] {
+        let want = run_uninterrupted(kind, &gs, &stream, 0.05, 2);
+        for restore_shards in [1usize, 4] {
+            let got = run_with_restart(
+                kind,
+                &gs,
+                &stream,
+                0.05,
+                2,
+                restore_shards,
+                &format!("mig-{kind:?}-{restore_shards}"),
+            );
+            assert_eq!(
+                want, got,
+                "kind {kind:?}: 2-shard checkpoint restored at {restore_shards} diverged"
+            );
+        }
+    }
+}
+
+/// A checkpoint from one optimizer kind must not restore into another.
+#[test]
+fn checkpoint_rejects_wrong_kind() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 2, 47);
+    let path = tmp_path("wrong-kind");
+    {
+        let mut opt =
+            ShardedOptimizer::new(OptimizerKind::Adam, &gs, &Hyper::default(), 2).unwrap();
+        let mut params = init_params(&gs);
+        for grads in &stream {
+            opt.next_step();
+            opt.step_all(&mut params, grads, 0.05).unwrap();
+        }
+        let state = opt.export_state().unwrap();
+        checkpoint::save_host(&gs, &params, &state, 2, &path).unwrap();
+    }
+    let (_, state, _) = checkpoint::load_host(&gs, &path).unwrap();
+    let mut other =
+        ShardedOptimizer::new(OptimizerKind::AdaGrad, &gs, &Hyper::default(), 2).unwrap();
+    assert!(other.import_state(&state).is_err());
+    std::fs::remove_file(&path).ok();
+}
