@@ -1,0 +1,62 @@
+//! Scheduler overhead and scaling: one fixed batch of convex jobs run
+//! through `session::run_batch` at increasing worker counts. Measures the
+//! end-to-end batch wall time — job execution plus queueing, admission,
+//! and event plumbing — so regressions in the scheduler's coordination
+//! cost show up directly. The jobs share one session-cached dataset, so
+//! the sweep also exercises the cache under contention.
+
+use extensor::convex::ConvexConfig;
+use extensor::session::{
+    run_batch, ConvexOpt, ConvexSpec, JobSpec, SchedulerOptions, Session,
+};
+use extensor::tensoring::OptimizerKind;
+use extensor::testing::bench::{bench, header};
+
+fn batch() -> Vec<JobSpec> {
+    let data = ConvexConfig { n: 1000, d: 64, k: 4, cond: 1e3, householder: 2, seed: 11 };
+    let kinds = [
+        OptimizerKind::AdaGrad,
+        OptimizerKind::Adam,
+        OptimizerKind::Et(1),
+        OptimizerKind::Et(2),
+        OptimizerKind::Et(3),
+        OptimizerKind::EtInf,
+        OptimizerKind::Adafactor,
+        OptimizerKind::RmsProp,
+    ];
+    kinds
+        .iter()
+        .enumerate()
+        .map(|(i, &kind)| {
+            JobSpec::convex(
+                format!("bench{i}"),
+                ConvexSpec {
+                    data: data.clone(),
+                    iters: 60,
+                    lr: if kind == OptimizerKind::EtInf { 0.5 } else { 0.05 },
+                    opt: ConvexOpt::Kind(kind),
+                    ..ConvexSpec::default()
+                },
+            )
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    extensor::util::logging::set_verbosity(extensor::util::logging::Level::Warn);
+    let specs = batch();
+    header(&format!("scheduler — {}-job convex batch, workers sweep", specs.len()));
+    for workers in [1usize, 2, 4, 8] {
+        // One warm session per worker count: the dataset is synthesized in
+        // the warmup iteration, so the timed iterations measure scheduling
+        // + execution, not corpus synthesis.
+        let session = Session::new();
+        let opts = SchedulerOptions { workers, mem_budget: None, log_path: None };
+        let r = bench(&format!("run_batch/workers={workers}"), 1, 5, || {
+            let report = run_batch(&session, &specs, &opts).unwrap();
+            assert!(report.failed().is_empty());
+        });
+        r.report_with_rate(specs.len() as f64, "jobs/s");
+    }
+    Ok(())
+}

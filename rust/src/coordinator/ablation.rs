@@ -11,57 +11,83 @@
 //! 3. **tensor-index granularity at fixed memory** — two different depth-2
 //!    factorizations of the same matrix with (near-)equal state size,
 //!    isolating *which* slices are aggregated from *how much* memory.
+//!
+//! Every cell is one `Workload::Convex` job with the `Ablate` driver
+//! (selectable eps mode over the raw slice accumulators); the whole sweep
+//! is a single scheduler batch sharing one session-cached dataset.
 
-use crate::convex::{ConvexConfig, ConvexDataset, SoftmaxRegression};
+use super::experiments::ExpOptions;
+use crate::convex::ConvexConfig;
 use crate::coordinator::report::{save_json, Table};
-use crate::tensoring::{EpsMode, SliceAccumulators, TensorIndex};
+use crate::session::{ConvexOpt, ConvexSpec, JobSpec, Session};
 use crate::util::json::Json;
-use anyhow::Result;
-use std::path::Path;
+use anyhow::{Context, Result};
 
-/// A minimal ET optimizer with selectable eps mode (the library optimizer
-/// fixes InsideProduct — Algorithm 1 as printed).
-struct EtAblate {
-    acc: SliceAccumulators,
-}
-
-impl EtAblate {
-    fn new(dims: &[usize], eps: f32, beta2: Option<f32>, mode: EpsMode) -> Result<Self> {
-        Ok(EtAblate {
-            acc: SliceAccumulators::new(TensorIndex::new(dims)?, eps, beta2, mode),
-        })
-    }
-
-    fn step(&mut self, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        self.acc.accumulate(g)?;
-        self.acc.apply_update_bias_corrected(x, g, lr);
-        Ok(())
-    }
-}
-
-fn train(
-    obj: &SoftmaxRegression<'_>,
-    idx: &[usize],
-    mut opt: EtAblate,
-    lr: f32,
+fn ablate_spec(
+    data: &ConvexConfig,
     iters: usize,
-) -> Result<f64> {
-    let mut w = vec![0.0f32; obj.dim()];
-    let mut grad = vec![0.0f32; obj.dim()];
-    let mut last = f64::NAN;
-    for _ in 0..iters {
-        last = obj.loss_grad(&w, idx, &mut grad);
-        opt.step(&mut w, &grad, lr)?;
+    dims: &[usize],
+    eps: f32,
+    beta2: Option<f32>,
+    per_factor_eps: bool,
+) -> ConvexSpec {
+    ConvexSpec {
+        data: data.clone(),
+        iters,
+        lr: 0.05,
+        opt: ConvexOpt::Ablate { dims: dims.to_vec(), eps, beta2, per_factor_eps },
+        // Ablations report the last in-loop loss (pre-final-update), like
+        // Figure 3.
+        measure_after: false,
+        curve_every: 0,
+        ..ConvexSpec::default()
     }
-    Ok(last)
 }
 
-pub fn run(out_dir: &Path, iters: usize, seed: u64) -> Result<()> {
-    let cfg = ConvexConfig { n: 4000, d: 512, k: 10, cond: 1e4, householder: 8, seed };
-    let ds = ConvexDataset::generate(&cfg);
-    let obj = SoftmaxRegression::new(&ds);
-    let idx: Vec<usize> = (0..ds.n).collect();
+pub fn run(session: &Session, opts: &ExpOptions) -> Result<()> {
+    let data =
+        ConvexConfig { n: 4000, d: 512, k: 10, cond: 1e4, householder: 8, seed: opts.seed };
+    let iters = opts.steps as usize;
     let dims = [10usize, 16, 32];
+    let eps_grid = [1e-8f32, 1e-4, 1e-1];
+    let beta2_grid: [(&str, Option<f32>); 4] = [
+        ("none (cumulative)", None),
+        ("0.999", Some(0.999f32)),
+        ("0.99", Some(0.99)),
+        ("0.9", Some(0.9)),
+    ];
+    let dims_grid: [Vec<usize>; 4] =
+        [vec![10usize, 16, 32], vec![10, 32, 16], vec![10, 4, 128], vec![10, 512]];
+
+    // One batch for all three ablation families.
+    let mut specs = Vec::new();
+    for (i, &eps) in eps_grid.iter().enumerate() {
+        specs.push(JobSpec::convex(
+            format!("abl_eps{i}_inside"),
+            ablate_spec(&data, iters, &dims, eps, None, false),
+        ));
+        specs.push(JobSpec::convex(
+            format!("abl_eps{i}_perfactor"),
+            ablate_spec(&data, iters, &dims, eps, None, true),
+        ));
+    }
+    for (i, (_, beta2)) in beta2_grid.iter().enumerate() {
+        specs.push(JobSpec::convex(
+            format!("abl_beta2_{i}"),
+            ablate_spec(&data, iters, &dims, 1e-8, *beta2, false),
+        ));
+    }
+    for (i, d) in dims_grid.iter().enumerate() {
+        specs.push(JobSpec::convex(
+            format!("abl_dims_{i}"),
+            ablate_spec(&data, iters, d, 1e-8, None, false),
+        ));
+    }
+    let report = super::experiments::submit(session, opts, &specs, "ablation")?;
+    let loss_of = |name: &str| -> Result<f64> {
+        Ok(report.outcome(name)?.as_convex().context("convex outcome")?.final_loss)
+    };
+
     let mut results = Vec::new();
 
     // --- 1. eps placement, across eps magnitudes ---
@@ -69,9 +95,9 @@ pub fn run(out_dir: &Path, iters: usize, seed: u64) -> Result<()> {
         "Ablation 1 — eps inside the product (Algorithm 1) vs per factor (Lemma 4.3)",
         &["eps", "final loss (inside)", "final loss (per-factor)"],
     );
-    for eps in [1e-8f32, 1e-4, 1e-1] {
-        let li = train(&obj, &idx, EtAblate::new(&dims, eps, None, EpsMode::InsideProduct)?, 0.05, iters)?;
-        let lp = train(&obj, &idx, EtAblate::new(&dims, eps, None, EpsMode::PerFactor)?, 0.05, iters)?;
+    for (i, &eps) in eps_grid.iter().enumerate() {
+        let li = loss_of(&format!("abl_eps{i}_inside"))?;
+        let lp = loss_of(&format!("abl_eps{i}_perfactor"))?;
         t1.row(vec![format!("{eps:.0e}"), format!("{li:.4}"), format!("{lp:.4}")]);
         results.push(Json::obj(vec![
             ("ablation", Json::str("eps_mode")),
@@ -87,10 +113,8 @@ pub fn run(out_dir: &Path, iters: usize, seed: u64) -> Result<()> {
         "Ablation 2 — second-moment decay (paper: no decay for LM, 0.99 for vision)",
         &["beta2", "final loss"],
     );
-    for (label, beta2) in
-        [("none (cumulative)", None), ("0.999", Some(0.999f32)), ("0.99", Some(0.99)), ("0.9", Some(0.9))]
-    {
-        let l = train(&obj, &idx, EtAblate::new(&dims, 1e-8, beta2, EpsMode::InsideProduct)?, 0.05, iters)?;
+    for (i, (label, beta2)) in beta2_grid.iter().enumerate() {
+        let l = loss_of(&format!("abl_beta2_{i}"))?;
         t2.row(vec![label.to_string(), format!("{l:.4}")]);
         results.push(Json::obj(vec![
             ("ablation", Json::str("beta2")),
@@ -105,48 +129,61 @@ pub fn run(out_dir: &Path, iters: usize, seed: u64) -> Result<()> {
         "Ablation 3 — which axes are aggregated, at near-equal state size",
         &["index dims", "state scalars", "final loss"],
     );
-    for dims in [vec![10usize, 16, 32], vec![10, 32, 16], vec![10, 4, 128], vec![10, 512]] {
-        let state: usize = dims.iter().sum();
-        let l = train(&obj, &idx, EtAblate::new(&dims, 1e-8, None, EpsMode::InsideProduct)?, 0.05, iters)?;
-        t3.row(vec![format!("{dims:?}"), state.to_string(), format!("{l:.4}")]);
+    for (i, d) in dims_grid.iter().enumerate() {
+        let state: usize = d.iter().sum();
+        let l = loss_of(&format!("abl_dims_{i}"))?;
+        t3.row(vec![format!("{d:?}"), state.to_string(), format!("{l:.4}")]);
         results.push(Json::obj(vec![
             ("ablation", Json::str("granularity")),
-            ("dims", Json::Arr(dims.iter().map(|&d| Json::num(d as f64)).collect())),
+            ("dims", Json::Arr(d.iter().map(|&x| Json::num(x as f64)).collect())),
             ("state", Json::num(state as f64)),
             ("loss", Json::num(l)),
         ]));
     }
     println!("{}", t3.render());
 
-    save_json(out_dir.join("ablations.json"), &Json::Arr(results))?;
+    save_json(opts.out_dir.join("ablations.json"), &Json::Arr(results))?;
     Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::convex::ConvexConfig;
+    use crate::session::{run_job, EventSink, JobOutcome};
+
+    fn tiny() -> ConvexConfig {
+        ConvexConfig { n: 300, d: 32, k: 4, cond: 100.0, householder: 2, seed: 9 }
+    }
+
+    fn run_loss(spec: ConvexSpec) -> f64 {
+        let session = Session::new();
+        let job = JobSpec::convex("t", spec);
+        let out = run_job(&job, &session, &EventSink::discard("t")).unwrap();
+        match out {
+            JobOutcome::Convex(c) => c.final_loss,
+            _ => panic!("expected convex outcome"),
+        }
+    }
 
     #[test]
     fn eps_modes_agree_at_tiny_eps() {
-        let cfg = ConvexConfig { n: 300, d: 32, k: 4, cond: 100.0, householder: 2, seed: 9 };
-        let ds = ConvexDataset::generate(&cfg);
-        let obj = SoftmaxRegression::new(&ds);
-        let idx: Vec<usize> = (0..ds.n).collect();
-        let dims = [4usize, 4, 8];
-        let li = train(&obj, &idx, EtAblate::new(&dims, 1e-10, None, EpsMode::InsideProduct).unwrap(), 0.05, 40).unwrap();
-        let lp = train(&obj, &idx, EtAblate::new(&dims, 1e-10, None, EpsMode::PerFactor).unwrap(), 0.05, 40).unwrap();
+        let data = tiny();
+        let li = run_loss(ablate_spec(&data, 40, &[4, 4, 8], 1e-10, None, false));
+        let lp = run_loss(ablate_spec(&data, 40, &[4, 4, 8], 1e-10, None, true));
         assert!((li - lp).abs() < 1e-3 * li.max(1e-9), "inside {li} vs per-factor {lp}");
     }
 
     #[test]
     fn ablation_optimizer_descends() {
-        let cfg = ConvexConfig { n: 300, d: 32, k: 4, cond: 100.0, householder: 2, seed: 9 };
-        let ds = ConvexDataset::generate(&cfg);
-        let obj = SoftmaxRegression::new(&ds);
+        let data = tiny();
+        let session = Session::new();
+        let (ds, _) = session.convex_dataset(&data);
+        let obj = crate::convex::SoftmaxRegression::new(&ds);
         let idx: Vec<usize> = (0..ds.n).collect();
         let l0 = obj.loss(&vec![0.0; obj.dim()], &idx);
-        let l = train(&obj, &idx, EtAblate::new(&[4, 4, 8], 1e-8, None, EpsMode::InsideProduct).unwrap(), 0.1, 80).unwrap();
+        let mut spec = ablate_spec(&data, 80, &[4, 4, 8], 1e-8, None, false);
+        spec.lr = 0.1;
+        let l = run_loss(spec);
         assert!(l < l0 * 0.8, "{l0} -> {l}");
     }
 }

@@ -2,20 +2,30 @@
 //! evaluation, each regenerating the corresponding rows/series at this
 //! testbed's scale (see DESIGN.md §4 for the index and §3 for workload
 //! substitutions).
+//!
+//! Every sweep is expressed as a batch of [`JobSpec`]s submitted to the
+//! session scheduler: runs within a sweep share one PJRT client, one
+//! compiled engine per artifact, and one synthesized corpus/dataset per
+//! parameter set (the session caches), and execute concurrently under
+//! `--jobs N` with `--mem-budget` admission control. Table rows are built
+//! from the typed [`JobOutcome`]s in submission order, so for step-bounded
+//! runs the reported rows are identical at any worker count (timing
+//! columns aside); the few wall-clock-budgeted runs (table2's equal-time
+//! column) always execute serially so the budget stays uncontended.
 
-use crate::convex::{ConvexConfig, ConvexDataset, SoftmaxRegression};
+use crate::convex::ConvexConfig;
 use crate::coordinator::report::{fmt_mem, fmt_ppl, save_json, Table};
-use crate::optim::{self, GroupSpec, Hyper, Optimizer, Schedule};
-use crate::runtime::Client;
-use crate::shard::ShardedOptimizer;
-use crate::tensoring::{MemoryReport, OptimizerKind};
-use crate::train::vision::VisionTrainer;
-use crate::train::{RunConfig, Trainer};
+use crate::optim::Schedule;
+use crate::session::{
+    run_batch, BatchReport, ConvexOpt, ConvexSpec, JobOutcome, JobSpec, SchedulerOptions, Session,
+    ShardBenchSpec, VisionSpec,
+};
+use crate::tensoring::{MemoryReport, OptimizerKind, StateBackend};
+use crate::train::{RunConfig, RunResult};
 use crate::util::json::Json;
-use crate::util::rng::Pcg64;
-use crate::util::timer::Timer;
 use crate::vision::VisionConfig;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::path::PathBuf;
 
 /// Shared experiment options (from the CLI).
@@ -33,6 +43,12 @@ pub struct ExpOptions {
     /// Max worker-shard count for the sharded-engine scaling experiment
     /// (the sweep covers powers of two up to this value).
     pub shards: usize,
+    /// Concurrent scheduler workers (`--jobs`). 1 = the classic serial
+    /// walk; higher values overlap runs within each sweep.
+    pub jobs: usize,
+    /// Total admission budget in bytes for concurrently running jobs
+    /// (`--mem-budget`); `None` = unlimited.
+    pub mem_budget: Option<u64>,
 }
 
 impl Default for ExpOptions {
@@ -45,6 +61,8 @@ impl Default for ExpOptions {
             csv: false,
             tune: false,
             shards: 8,
+            jobs: 1,
+            mem_budget: None,
         }
     }
 }
@@ -68,7 +86,30 @@ fn default_lm_scale(kind: &str) -> f64 {
     }
 }
 
-fn lm_run(
+/// Submit one sweep's batch through the scheduler; the event stream is
+/// appended to `out_dir/schedule/<tag>.jsonl`.
+pub(crate) fn submit(
+    session: &Session,
+    opts: &ExpOptions,
+    specs: &[JobSpec],
+    tag: &str,
+) -> Result<BatchReport> {
+    let sched = SchedulerOptions {
+        workers: opts.jobs.max(1),
+        mem_budget: opts.mem_budget,
+        log_path: Some(opts.out_dir.join("schedule").join(format!("{tag}.jsonl"))),
+    };
+    let budget = match opts.mem_budget {
+        Some(b) => format!(", budget {}", fmt_mem(b as usize)),
+        None => String::new(),
+    };
+    crate::info!("[{tag}] {} jobs on {} workers{budget}", specs.len(), sched.workers);
+    run_batch(session, specs, &sched)
+}
+
+/// The [`JobSpec`] for one scaled LM run (the former `lm_run` config,
+/// unchanged field for field).
+fn lm_spec(
     opts: &ExpOptions,
     artifact: &str,
     eval_artifact: &str,
@@ -77,7 +118,7 @@ fn lm_run(
     steps: u64,
     max_seconds: f64,
     track_traces: bool,
-) -> Result<crate::train::RunResult> {
+) -> JobSpec {
     // Schedule geometry always follows the *nominal* step budget
     // (opts.steps), not `steps`: time-budgeted runs pass a sentinel step
     // cap, and deriving the warmup from it would freeze the LR near zero.
@@ -102,62 +143,108 @@ fn lm_run(
         trace_every: (nominal / 32).max(1),
         ..RunConfig::default()
     };
-    Trainer::new(cfg)?.run()
+    JobSpec::lm(name, cfg)
 }
 
-/// Short probe runs over an LR grid; returns the best scale by final loss.
-fn tune_lm_scale(opts: &ExpOptions, artifact: &str, eval_artifact: &str) -> Result<f64> {
+/// Unpack a batch of LM jobs into run results, in submission order; any
+/// failed job is a hard error naming the run.
+fn lm_results(report: BatchReport) -> Result<Vec<RunResult>> {
+    report
+        .into_outcomes()?
+        .into_iter()
+        .map(|o| match o {
+            JobOutcome::Lm(r) => Ok(*r),
+            _ => bail!("expected an LM outcome"),
+        })
+        .collect()
+}
+
+/// Batched `--tune`: every (optimizer, grid-scale) probe is one job; the
+/// best finite final loss per optimizer wins, grid order breaking ties —
+/// the same selection the old serial probes made. Diverged or failed
+/// probes simply lose.
+fn tune_scales(
+    session: &Session,
+    opts: &ExpOptions,
+    kinds: &[&str],
+) -> Result<HashMap<String, f64>> {
     let grid = [0.1, 0.3, 1.0, 3.0];
     let probe_steps = (opts.steps / 4).clamp(20, 120);
-    let mut best = (f64::INFINITY, grid[0]);
-    for &c in &grid {
-        let name = format!("tune_{artifact}_{c}");
-        match lm_run(opts, artifact, eval_artifact, &name, c, probe_steps, 0.0, false) {
-            Ok(res) if res.summary.final_train_loss.is_finite() => {
-                if res.summary.final_train_loss < best.0 {
-                    best = (res.summary.final_train_loss, c);
-                }
-            }
-            _ => {} // diverged probes lose
+    let mut specs = Vec::new();
+    for kind in kinds {
+        let artifact = format!("lm_tiny_{kind}");
+        for &c in &grid {
+            let name = format!("tune_{kind}_{}", c.to_string().replace('.', "p"));
+            specs.push(lm_spec(
+                opts,
+                &artifact,
+                "lm_tiny_eval",
+                &name,
+                c,
+                probe_steps,
+                0.0,
+                false,
+            ));
         }
     }
-    crate::info!("[tune] {artifact}: best c = {} (loss {:.3})", best.1, best.0);
-    Ok(best.1)
+    let report = submit(session, opts, &specs, "tune")?;
+    let mut best = HashMap::new();
+    let mut idx = 0usize;
+    for kind in kinds {
+        let mut choice = (f64::INFINITY, grid[0]);
+        for &c in &grid {
+            if let Ok(JobOutcome::Lm(res)) = &report.results[idx].outcome {
+                let loss = res.summary.final_train_loss;
+                if loss.is_finite() && loss < choice.0 {
+                    choice = (loss, c);
+                }
+            }
+            idx += 1;
+        }
+        crate::info!("[tune] lm_tiny_{kind}: best c = {} (loss {:.3})", choice.1, choice.0);
+        best.insert(kind.to_string(), choice.1);
+    }
+    Ok(best)
 }
 
 // ---------------------------------------------------------------------------
 // Table 1 / Figure 1 — memory-performance tradeoff on the LM task
 // ---------------------------------------------------------------------------
 
-pub fn table1(opts: &ExpOptions) -> Result<()> {
+pub fn table1(session: &Session, opts: &ExpOptions) -> Result<()> {
     let kinds = ["adagrad", "et1", "et2", "et3", "etinf", "sgd", "adam", "adafactor"];
+    let tuned = if opts.tune { Some(tune_scales(session, opts, &kinds)?) } else { None };
+    let specs: Vec<JobSpec> = kinds
+        .iter()
+        .map(|kind| {
+            let scale = tuned
+                .as_ref()
+                .and_then(|m| m.get(*kind).copied())
+                .unwrap_or_else(|| default_lm_scale(kind));
+            lm_spec(
+                opts,
+                &format!("lm_tiny_{kind}"),
+                "lm_tiny_eval",
+                &format!("table1_{kind}"),
+                scale,
+                opts.steps,
+                0.0,
+                false,
+            )
+        })
+        .collect();
+    let runs = lm_results(submit(session, opts, &specs, "table1")?)?;
+
     let mut table = Table::new(
         "Table 1 — GBW-scale LM (scaled): optimizer memory vs final validation ppl",
         &["Optimizer", "Opt. param count", "Final val ppl", "Final train loss", "tok/s"],
     );
     let mut fig1 = Table::new("Figure 1 series", &["optimizer", "opt_params", "val_ppl"]);
     let mut results = Vec::new();
-    for kind in kinds {
-        let artifact = format!("lm_tiny_{kind}");
-        let scale = if opts.tune {
-            tune_lm_scale(opts, &artifact, "lm_tiny_eval")?
-        } else {
-            default_lm_scale(kind)
-        };
-        let res = lm_run(
-            opts,
-            &artifact,
-            "lm_tiny_eval",
-            &format!("table1_{kind}"),
-            scale,
-            opts.steps,
-            0.0,
-            false,
-        )
-        .with_context(|| format!("table1 run {kind}"))?;
+    for (kind, res) in kinds.iter().zip(&runs) {
         let s = &res.summary;
         // Paper convention: SGD reports 1 scalar (the global lr).
-        let mem = if kind == "sgd" { 1 } else { s.optimizer_scalars };
+        let mem = if *kind == "sgd" { 1 } else { s.optimizer_scalars };
         table.row(vec![
             s.optimizer.clone(),
             fmt_mem(mem),
@@ -187,49 +274,75 @@ pub fn table1(opts: &ExpOptions) -> Result<()> {
 // Table 2 — doubling the model with the freed memory (§5.2)
 // ---------------------------------------------------------------------------
 
-pub fn table2(opts: &ExpOptions) -> Result<()> {
-    // Equal-time budget: measured from a reference small-model run.
+pub fn table2(session: &Session, opts: &ExpOptions) -> Result<()> {
+    // Equal-time budget: measured from a reference small-model run (run
+    // alone, so the budget is uncontended even when --jobs > 1).
     let kinds = ["et1", "et2", "et3", "etinf"];
-    let reference = lm_run(
+    let reference = lm_results(submit(
+        session,
         opts,
-        "lm_tiny_et1",
-        "lm_tiny_eval",
-        "table2_ref_small",
-        default_lm_scale("et1"),
-        opts.steps,
-        0.0,
-        false,
-    )?;
-    let budget_secs = reference.summary.wall_seconds;
+        &[lm_spec(
+            opts,
+            "lm_tiny_et1",
+            "lm_tiny_eval",
+            "table2_ref_small",
+            default_lm_scale("et1"),
+            opts.steps,
+            0.0,
+            false,
+        )],
+        "table2_ref",
+    )?)?;
+    let budget_secs = reference[0].summary.wall_seconds;
+
+    // The equal-time runs measure steps-within-a-wall-clock-budget, so
+    // concurrency would contaminate the result ("equal time" on a
+    // contended core is not equal compute). They always run serially,
+    // regardless of --jobs; only the step-bounded equal-iteration runs
+    // parallelize.
+    let timed_specs: Vec<JobSpec> = kinds
+        .iter()
+        .map(|kind| {
+            lm_spec(
+                opts,
+                &format!("lm_big_{kind}"),
+                "lm_big_eval",
+                &format!("table2_{kind}_time"),
+                default_lm_scale(kind),
+                u64::MAX / 2,
+                budget_secs,
+                false,
+            )
+        })
+        .collect();
+    let serial = ExpOptions { jobs: 1, ..opts.clone() };
+    let timed_runs = lm_results(submit(session, &serial, &timed_specs, "table2_timed")?)?;
+
+    let iter_specs: Vec<JobSpec> = kinds
+        .iter()
+        .map(|kind| {
+            lm_spec(
+                opts,
+                &format!("lm_big_{kind}"),
+                "lm_big_eval",
+                &format!("table2_{kind}_iters"),
+                default_lm_scale(kind),
+                opts.steps,
+                0.0,
+                false,
+            )
+        })
+        .collect();
+    let iter_runs = lm_results(submit(session, opts, &iter_specs, "table2")?)?;
 
     let mut table = Table::new(
         "Table 2 — doubled model (2x layers), equal time vs equal iterations",
         &["Optimizer", "ppl (equal time)", "ppl (equal iters)", "Opt. params"],
     );
     let mut results = Vec::new();
-    for kind in kinds {
-        let artifact = format!("lm_big_{kind}");
-        let scale = default_lm_scale(kind);
-        let timed = lm_run(
-            opts,
-            &artifact,
-            "lm_big_eval",
-            &format!("table2_{kind}_time"),
-            scale,
-            u64::MAX / 2,
-            budget_secs,
-            false,
-        )?;
-        let iters = lm_run(
-            opts,
-            &artifact,
-            "lm_big_eval",
-            &format!("table2_{kind}_iters"),
-            scale,
-            opts.steps,
-            0.0,
-            false,
-        )?;
+    for (i, _kind) in kinds.iter().enumerate() {
+        let timed = &timed_runs[i];
+        let iters = &iter_runs[i];
         table.row(vec![
             timed.summary.optimizer.clone(),
             fmt_ppl(timed.summary.final_eval_ppl),
@@ -253,24 +366,32 @@ pub fn table2(opts: &ExpOptions) -> Result<()> {
 // Figure 2 — Tr(H_T) vs Tr(Ĥ_T) and the regret-bound gap (§5.3)
 // ---------------------------------------------------------------------------
 
-pub fn fig2(opts: &ExpOptions) -> Result<()> {
+pub fn fig2(session: &Session, opts: &ExpOptions) -> Result<()> {
+    let kinds = ["et1", "et2", "et3"];
+    let specs: Vec<JobSpec> = kinds
+        .iter()
+        .map(|kind| {
+            lm_spec(
+                opts,
+                &format!("lm_tiny_{kind}"),
+                "lm_tiny_eval",
+                &format!("fig2_{kind}"),
+                default_lm_scale(kind),
+                opts.steps,
+                0.0,
+                true, // track traces
+            )
+        })
+        .collect();
+    let runs = lm_results(submit(session, opts, &specs, "fig2")?)?;
+
     let mut table = Table::new(
         "Figure 2 — trace comparison (log scale in the paper); gap = sqrt(TrH/TrĤ)",
         &["ET level", "Tr(H_T)", "Tr(H_hat_T)", "sqrt ratio"],
     );
     let mut results = Vec::new();
-    for kind in ["et1", "et2", "et3"] {
-        let res = lm_run(
-            opts,
-            &format!("lm_tiny_{kind}"),
-            "lm_tiny_eval",
-            &format!("fig2_{kind}"),
-            default_lm_scale(kind),
-            opts.steps,
-            0.0,
-            true, // track traces
-        )?;
-        let tr = res.trace_report.context("trace tracking was on")?;
+    for (kind, res) in kinds.iter().zip(&runs) {
+        let tr = res.trace_report.as_ref().context("trace tracking was on")?;
         table.row(vec![
             kind.to_uppercase(),
             format!("{:.3e}", tr.trace_h),
@@ -278,7 +399,7 @@ pub fn fig2(opts: &ExpOptions) -> Result<()> {
             format!("{:.2}", tr.ratio),
         ]);
         results.push(Json::obj(vec![
-            ("level", Json::str(kind)),
+            ("level", Json::str(*kind)),
             ("trace_h", Json::num(tr.trace_h)),
             ("trace_h_hat", Json::num(tr.trace_h_hat)),
             ("ratio", Json::num(tr.ratio)),
@@ -294,36 +415,52 @@ pub fn fig2(opts: &ExpOptions) -> Result<()> {
 // Figure 3 — synthetic convex problem (§5.4), pure rust
 // ---------------------------------------------------------------------------
 
-pub fn fig3(opts: &ExpOptions) -> Result<()> {
-    let cfg = ConvexConfig { seed: opts.seed ^ 0x54, ..ConvexConfig::default() };
-    crate::info!("generating convex dataset (n={}, d={}, cond={})", cfg.n, cfg.d, cfg.cond);
-    let ds = ConvexDataset::generate(&cfg);
-    let obj = SoftmaxRegression::new(&ds);
-    let idx: Vec<usize> = (0..ds.n).collect();
-    let groups = vec![GroupSpec::new("w", &[cfg.k, cfg.d])];
+pub fn fig3(session: &Session, opts: &ExpOptions) -> Result<()> {
+    let data = ConvexConfig { seed: opts.seed ^ 0x54, ..ConvexConfig::default() };
     let iters = opts.steps.max(100) as usize;
-
+    let curve_every = (iters / 50).max(1);
     // The paper's tensor indices along the feature dimension of W.
-    let variants: Vec<(String, Box<dyn Fn() -> Box<dyn optim::Optimizer>>, f64)> = vec![
-        ("SGD".into(),
-         Box::new({ let g = groups.clone(); move || optim::build(OptimizerKind::Sgd, &g, &Hyper::default()) }),
-         0.003),
-        ("AdaGrad".into(),
-         Box::new({ let g = groups.clone(); move || optim::build(OptimizerKind::AdaGrad, &g, &Hyper::default()) }),
-         0.05),
-        ("ET depth 1 (10,512)".into(),
-         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::custom_et(&g, vec![vec![10, 512]], 1e-8, None).expect("dims cover")) as Box<dyn optim::Optimizer> }),
-         0.05),
-        ("ET depth 2 (10,16,32)".into(),
-         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::custom_et(&g, vec![vec![10, 16, 32]], 1e-8, None).expect("dims cover")) as Box<dyn optim::Optimizer> }),
-         0.05),
-        ("ET depth 3 (10,8,8,8)".into(),
-         Box::new({ let g = groups.clone(); move || Box::new(optim::extreme::custom_et(&g, vec![vec![10, 8, 8, 8]], 1e-8, None).expect("dims cover")) as Box<dyn optim::Optimizer> }),
-         0.05),
-        ("ET-inf".into(),
-         Box::new({ let g = groups.clone(); move || optim::build(OptimizerKind::EtInf, &g, &Hyper::default()) }),
-         0.5),
+    let variants: Vec<(&str, &str, ConvexOpt, f64)> = vec![
+        ("fig3_sgd", "SGD", ConvexOpt::Kind(OptimizerKind::Sgd), 0.003),
+        ("fig3_adagrad", "AdaGrad", ConvexOpt::Kind(OptimizerKind::AdaGrad), 0.05),
+        (
+            "fig3_et1",
+            "ET depth 1 (10,512)",
+            ConvexOpt::CustomEt { dims: vec![10, 512] },
+            0.05,
+        ),
+        (
+            "fig3_et2",
+            "ET depth 2 (10,16,32)",
+            ConvexOpt::CustomEt { dims: vec![10, 16, 32] },
+            0.05,
+        ),
+        (
+            "fig3_et3",
+            "ET depth 3 (10,8,8,8)",
+            ConvexOpt::CustomEt { dims: vec![10, 8, 8, 8] },
+            0.05,
+        ),
+        ("fig3_etinf", "ET-inf", ConvexOpt::Kind(OptimizerKind::EtInf), 0.5),
     ];
+    let specs: Vec<JobSpec> = variants
+        .iter()
+        .map(|(name, _, opt, lr)| {
+            JobSpec::convex(
+                *name,
+                ConvexSpec {
+                    data: data.clone(),
+                    iters,
+                    lr: *lr as f32,
+                    opt: opt.clone(),
+                    measure_after: false, // Figure 3 reports the last in-loop loss
+                    curve_every,
+                    ..ConvexSpec::default()
+                },
+            )
+        })
+        .collect();
+    let report = submit(session, opts, &specs, "fig3")?;
 
     let mut table = Table::new(
         "Figure 3 — convex logistic regression: final loss vs optimizer memory",
@@ -331,33 +468,23 @@ pub fn fig3(opts: &ExpOptions) -> Result<()> {
     );
     let mut curves = Table::new("fig3 curves", &["optimizer", "iter", "loss"]);
     let mut results = Vec::new();
-    for (name, make, lr) in &variants {
-        let mut o = make();
-        let mut w = vec![0.0f32; obj.dim()];
-        let mut grad = vec![0.0f32; obj.dim()];
-        let mut final_loss = f64::NAN;
-        for t in 0..iters {
-            let loss = obj.loss_grad(&w, &idx, &mut grad);
-            o.next_step();
-            o.step(0, &mut w, &grad, *lr as f32)?;
-            final_loss = loss;
-            if t % (iters / 50).max(1) == 0 {
-                curves.row(vec![name.clone(), t.to_string(), format!("{loss:.6}")]);
-            }
+    for (name, label, _, _) in &variants {
+        let out = report.outcome(name)?.as_convex().context("convex outcome")?;
+        let mem = if *label == "SGD" { 1 } else { out.state_scalars };
+        for (t, loss) in &out.curve {
+            curves.row(vec![label.to_string(), t.to_string(), format!("{loss:.6}")]);
         }
-        let acc = obj.accuracy(&w, &idx);
-        let mem = if name == "SGD" { 1 } else { o.state_scalars() };
         table.row(vec![
-            name.clone(),
+            label.to_string(),
             fmt_mem(mem),
-            format!("{final_loss:.4}"),
-            format!("{:.3}", acc),
+            format!("{:.4}", out.final_loss),
+            format!("{:.3}", out.accuracy),
         ]);
         results.push(Json::obj(vec![
-            ("optimizer", Json::str(name.clone())),
+            ("optimizer", Json::str(label.to_string())),
             ("opt_params", Json::num(mem as f64)),
-            ("final_loss", Json::num(final_loss)),
-            ("accuracy", Json::num(acc)),
+            ("final_loss", Json::num(out.final_loss)),
+            ("accuracy", Json::num(out.accuracy)),
         ]));
     }
     println!("{}", table.render());
@@ -373,7 +500,7 @@ pub fn fig3(opts: &ExpOptions) -> Result<()> {
 // Table 4 / Figure 4 — vision experiment (appendix A)
 // ---------------------------------------------------------------------------
 
-pub fn table4(opts: &ExpOptions) -> Result<()> {
+pub fn table4(session: &Session, opts: &ExpOptions) -> Result<()> {
     let kinds = ["adam", "et1", "et2", "et3", "etinf", "sgd"];
     // Harder-than-default data (heavy pixel noise, fewer samples) so the
     // task does not saturate at 0% for every optimizer within the step
@@ -387,7 +514,31 @@ pub fn table4(opts: &ExpOptions) -> Result<()> {
         test: 512,
         ..VisionConfig::default()
     };
-    let client = Client::cpu()?;
+    let specs: Vec<JobSpec> = kinds
+        .iter()
+        .map(|kind| {
+            let lr = match *kind {
+                "sgd" => 0.05,
+                "adam" => 0.002,
+                "etinf" => 0.5,
+                _ => 0.05,
+            };
+            JobSpec::vision(
+                format!("table4_{kind}"),
+                VisionSpec {
+                    optimizer: kind.to_string(),
+                    lr,
+                    steps: opts.steps,
+                    eval_every: (opts.steps / 5).max(1),
+                    seed: opts.seed,
+                    artifact_dir: opts.artifact_dir.clone(),
+                    data: data_cfg.clone(),
+                },
+            )
+        })
+        .collect();
+    let report = submit(session, opts, &specs, "table4")?;
+
     let mut table = Table::new(
         "Table 4 — synthetic-CIFAR convnet: optimizer memory vs test error (%)",
         &["Optimizer", "Opt. param count", "Best test error", "Final test error"],
@@ -395,14 +546,10 @@ pub fn table4(opts: &ExpOptions) -> Result<()> {
     let mut fig4 = Table::new("Figure 4 series", &["optimizer", "opt_params", "test_error"]);
     let mut results = Vec::new();
     for kind in kinds {
-        let lr = match kind {
-            "sgd" => 0.05,
-            "adam" => 0.002,
-            "etinf" => 0.5,
-            _ => 0.05,
-        };
-        let mut t = VisionTrainer::new(&client, &opts.artifact_dir, kind, &data_cfg)?;
-        let run = t.run(opts.steps, lr, (opts.steps / 5).max(1), opts.seed)?;
+        let run = report
+            .outcome(&format!("table4_{kind}"))?
+            .as_vision()
+            .context("vision outcome")?;
         let mem = if kind == "sgd" { 1 } else { run.optimizer_scalars };
         table.row(vec![
             run.optimizer.clone(),
@@ -436,15 +583,13 @@ pub fn table4(opts: &ExpOptions) -> Result<()> {
 
 /// The shard-scaling experiment: the paper's memory result turned into a
 /// throughput result. Pure rust, no artifacts needed — transformer-shaped
-/// groups, one full optimizer step per iteration through
-/// [`ShardedOptimizer`], sweeping shard count (powers of two up to
-/// `opts.shards`) x ET level. Reports steps/sec and the *peak per-shard*
-/// optimizer footprint in bytes; one table + CSV per shard count through
-/// the standard report pipeline (the `shards` context column), plus a
-/// combined `sharding.json`.
-pub fn sharding(opts: &ExpOptions) -> Result<()> {
-    let groups = crate::testing::transformer_groups(4, 2000, 512, 2048);
-    let total: usize = groups.iter().map(|g| g.numel()).sum();
+/// groups, one full optimizer step per iteration through the sharded
+/// engine, sweeping shard count (powers of two up to `opts.shards`) x ET
+/// level. Each (shard count, optimizer) configuration is one job; at
+/// `--jobs 1` the sweep times exactly like the old serial walk, while
+/// higher worker counts trade timing isolation for wall-clock (the
+/// memory columns are load-independent either way).
+pub fn sharding(session: &Session, opts: &ExpOptions) -> Result<()> {
     let kinds = [OptimizerKind::Et(1), OptimizerKind::Et(3), OptimizerKind::EtInf];
     let mut shard_counts = vec![1usize];
     while shard_counts.last().unwrap() * 2 <= opts.shards.max(1) {
@@ -452,6 +597,14 @@ pub fn sharding(opts: &ExpOptions) -> Result<()> {
         shard_counts.push(next);
     }
     let iters = (opts.steps as usize).clamp(5, 30);
+    let bench = ShardBenchSpec { iters, seed: opts.seed, ..ShardBenchSpec::default() };
+    let groups = crate::testing::transformer_groups(
+        bench.layers,
+        bench.vocab,
+        bench.d_model,
+        bench.d_ff,
+    );
+    let total: usize = groups.iter().map(|g| g.numel()).sum();
     crate::info!(
         "[sharding] {} params in {} groups, {} timed steps per config",
         total,
@@ -459,18 +612,18 @@ pub fn sharding(opts: &ExpOptions) -> Result<()> {
         iters
     );
 
-    let mut rng = Pcg64::seeded(opts.seed);
-    let grads: Vec<Vec<f32>> = groups
-        .iter()
-        .map(|g| {
-            let mut v = vec![0.0f32; g.numel()];
-            rng.fill_normal(&mut v, 1.0);
-            v
-        })
-        .collect();
-    let base_params: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+    let job_name = |shards: usize, kind: OptimizerKind| format!("shard{}_{}", shards, kind.name());
+    let mut specs = Vec::new();
+    for &shards in &shard_counts {
+        for &kind in &kinds {
+            specs.push(JobSpec::shard_bench(
+                job_name(shards, kind),
+                ShardBenchSpec { kind, shards, ..bench.clone() },
+            ));
+        }
+    }
+    let report = submit(session, opts, &specs, "sharding")?;
 
-    let hyper = Hyper::default();
     let mut results = Vec::new();
     for &shards in &shard_counts {
         let mut table = Table::new(
@@ -479,53 +632,24 @@ pub fn sharding(opts: &ExpOptions) -> Result<()> {
         );
         table.set_shards(shards);
         for &kind in &kinds {
-            let mut opt = ShardedOptimizer::new(kind, &groups, &hyper, shards)?;
-            let mut params = base_params.clone();
-            for _ in 0..2 {
-                opt.next_step();
-                opt.step_all(&mut params, &grads, 1e-3)?;
-            }
-            let timer = Timer::start();
-            for _ in 0..iters {
-                opt.next_step();
-                opt.step_all(&mut params, &grads, 1e-3)?;
-            }
-            let secs = timer.elapsed_secs();
-            let steps_per_sec = iters as f64 / secs.max(1e-12);
-            // Real per-shard bytes, not scalars*4 — ET∞'s wide accumulator
-            // is an f64, so the two differ (see tensoring::memory).
-            let peak_bytes = opt
-                .plan()
-                .shards
-                .iter()
-                .map(|owned| {
-                    owned
-                        .iter()
-                        .map(|&gi| {
-                            crate::tensoring::group_state_bytes(
-                                kind,
-                                &groups[gi].shape,
-                                crate::tensoring::StateBackend::DenseF32,
-                            )
-                        })
-                        .sum::<usize>()
-                })
-                .max()
-                .unwrap_or(0);
+            let out = report
+                .outcome(&job_name(shards, kind))?
+                .as_shard_bench()
+                .context("shard-bench outcome")?;
             table.row(vec![
-                kind.name(),
-                format!("{steps_per_sec:.2}"),
-                format!("{:.1}", steps_per_sec * total as f64 / 1e6),
-                fmt_mem(peak_bytes),
-                fmt_mem(opt.state_scalars()),
+                out.optimizer.clone(),
+                format!("{:.2}", out.steps_per_sec),
+                format!("{:.1}", out.steps_per_sec * out.total_params as f64 / 1e6),
+                fmt_mem(out.peak_state_bytes_per_shard),
+                fmt_mem(out.total_state_scalars),
             ]);
             results.push(Json::obj(vec![
-                ("optimizer", Json::str(kind.name())),
+                ("optimizer", Json::str(out.optimizer.clone())),
                 ("shards", Json::num(shards as f64)),
-                ("steps_per_sec", Json::num(steps_per_sec)),
-                ("peak_opt_bytes_per_shard", Json::num(peak_bytes as f64)),
-                ("total_opt_scalars", Json::num(opt.state_scalars() as f64)),
-                ("work_imbalance", Json::num(opt.plan().work_imbalance())),
+                ("steps_per_sec", Json::num(out.steps_per_sec)),
+                ("peak_opt_bytes_per_shard", Json::num(out.peak_state_bytes_per_shard as f64)),
+                ("total_opt_scalars", Json::num(out.total_state_scalars as f64)),
+                ("work_imbalance", Json::num(out.work_imbalance)),
             ]));
         }
         println!("{}", table.render());
@@ -551,21 +675,13 @@ pub fn sharding(opts: &ExpOptions) -> Result<()> {
 /// accuracy. This is the memory/quality axis the externalized-state API
 /// opens: quantization composes with ET, so "ET level x backend" spans
 /// from AdaGrad/f32 (4d bytes) down to ET3/q8.
-pub fn quantized_state(opts: &ExpOptions) -> Result<()> {
-    use crate::tensoring::StateBackend;
-    let cfg = ConvexConfig { seed: opts.seed ^ 0x9a, ..ConvexConfig::default() };
-    crate::info!(
-        "generating convex dataset (n={}, d={}, cond={})",
-        cfg.n,
-        cfg.d,
-        cfg.cond
-    );
-    let ds = ConvexDataset::generate(&cfg);
-    let obj = SoftmaxRegression::new(&ds);
-    let idx: Vec<usize> = (0..ds.n).collect();
-    let groups = vec![GroupSpec::new("w", &[cfg.k, cfg.d])];
+///
+/// All 14 (optimizer, backend) cells are independent jobs over one shared
+/// (session-cached) dataset; the reported rows are bitwise identical at
+/// any `--jobs` level.
+pub fn quantized_state(session: &Session, opts: &ExpOptions) -> Result<()> {
+    let data = ConvexConfig { seed: opts.seed ^ 0x9a, ..ConvexConfig::default() };
     let iters = opts.steps.max(100) as usize;
-
     let kinds = [
         OptimizerKind::AdaGrad,
         OptimizerKind::Adam,
@@ -581,6 +697,29 @@ pub fn quantized_state(opts: &ExpOptions) -> Result<()> {
         OptimizerKind::Adam => 0.01,
         _ => 0.05,
     };
+    let job_name = |kind: OptimizerKind, backend: StateBackend| {
+        format!("qs_{}_{}", kind.name(), backend.name().replace('/', "-"))
+    };
+    let mut specs = Vec::new();
+    for kind in kinds {
+        for backend in backends {
+            specs.push(JobSpec::convex(
+                job_name(kind, backend),
+                ConvexSpec {
+                    data: data.clone(),
+                    iters,
+                    lr: lr_for(kind) as f32,
+                    backend,
+                    opt: ConvexOpt::Kind(kind),
+                    // Measure *after* the last update so the final step
+                    // counts.
+                    measure_after: true,
+                    curve_every: 0,
+                },
+            ));
+        }
+    }
+    let report = submit(session, opts, &specs, "quantized-state")?;
 
     let mut table = Table::new(
         "Quantized optimizer state — backend x optimizer on the convex task",
@@ -589,36 +728,27 @@ pub fn quantized_state(opts: &ExpOptions) -> Result<()> {
     let mut results = Vec::new();
     for kind in kinds {
         for backend in backends {
-            let hyper = Hyper { backend, ..Hyper::default() };
-            let mut o = optim::build(kind, &groups, &hyper);
-            let lr = lr_for(kind) as f32;
-            let mut w = vec![0.0f32; obj.dim()];
-            let mut grad = vec![0.0f32; obj.dim()];
-            for _ in 0..iters {
-                obj.loss_grad(&w, &idx, &mut grad);
-                o.next_step();
-                o.step(0, &mut w, &grad, lr)?;
-            }
-            // Measure *after* the last update so the final step counts.
-            let final_loss = obj.loss(&w, &idx);
-            let acc = obj.accuracy(&w, &idx);
-            let bytes = o.state_bytes();
+            let out = report
+                .outcome(&job_name(kind, backend))?
+                .as_convex()
+                .context("convex outcome")?;
+            let bytes = out.state_bytes;
             table.row(vec![
-                o.name(),
+                out.optimizer.clone(),
                 backend.name(),
                 fmt_mem(bytes),
                 format!("{:.1}", bytes as f64 / 4.0),
-                format!("{final_loss:.4}"),
-                format!("{acc:.3}"),
+                format!("{:.4}", out.final_loss),
+                format!("{:.3}", out.accuracy),
             ]);
             results.push(Json::obj(vec![
-                ("optimizer", Json::str(o.name())),
+                ("optimizer", Json::str(out.optimizer.clone())),
                 ("backend", Json::str(backend.name())),
                 ("state_bytes", Json::num(bytes as f64)),
                 ("f32_equiv_scalars", Json::num(bytes as f64 / 4.0)),
-                ("opt_scalars", Json::num(o.state_scalars() as f64)),
-                ("final_loss", Json::num(final_loss)),
-                ("accuracy", Json::num(acc)),
+                ("opt_scalars", Json::num(out.state_scalars as f64)),
+                ("final_loss", Json::num(out.final_loss)),
+                ("accuracy", Json::num(out.accuracy)),
             ]));
         }
     }

@@ -1,6 +1,11 @@
 //! L3 coordinator: the experiment registry mapping each paper table/figure
 //! to a runnable regeneration, plus reporting utilities. The `ettrain`
 //! binary (rust/src/main.rs) is the CLI over this module.
+//!
+//! Every sweep builds a batch of `session::JobSpec`s and submits it to the
+//! session scheduler (`session::run_batch`), so experiments share compiled
+//! artifacts and synthesized datasets through one `session::Session` and
+//! run concurrently under `--jobs`/`--mem-budget`.
 
 pub mod ablation;
 pub mod experiments;

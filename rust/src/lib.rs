@@ -42,6 +42,32 @@
 //! (`rust/tests/host_checkpoint.rs` proves bitwise resume at 1/2/4
 //! shards, including shard-count migration).
 //!
+//! All execution flows through the **session layer** (`session`):
+//!
+//! ```text
+//! JobSpec ──▶ Session ──▶ Scheduler ──▶ JobEvent stream
+//! (what to   (one PJRT    (N workers,   (queued → admitted →
+//!  run:       client,      memory-       progress →
+//!  typed,     Engine +     budget        finished/failed,
+//!  validated, corpus       admission     + cache-hit events;
+//!  TOML-able) caches)      control)      CLI + JSONL)
+//! ```
+//!
+//! A `session::JobSpec` describes any workload the coordinator runs (LM
+//! artifact runs, the convex substrate, shard benchmarks, vision);
+//! `session::Session` owns what concurrent jobs share — the PJRT client,
+//! compiled-artifact engines, synthesized corpora/datasets — handing out
+//! `Arc`s with cache-hit accounting; `session::run_batch` executes a batch
+//! on a worker pool whose admission control is costed in bytes by
+//! `tensoring::memory` (the paper's accounting, now used to decide how
+//! many preconditioned runs fit on a host at once). `ettrain train` and
+//! every `ettrain experiment` sweep are thin wrappers that build specs and
+//! submit them; `ettrain batch <jobs.toml>` runs user-authored batches.
+//! Per-run results of step-bounded jobs are bitwise independent of the
+//! worker count (`rust/tests/scheduler.rs`); wall-clock-budgeted runs
+//! (table2's equal-time column) always execute serially so their budget
+//! stays uncontended.
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -51,6 +77,7 @@ pub mod data;
 pub mod optim;
 pub mod regret;
 pub mod runtime;
+pub mod session;
 pub mod shard;
 pub mod tensoring;
 pub mod testing;

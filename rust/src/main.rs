@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   train          run a training job from a TOML config
-//!   experiment     regenerate a paper table/figure (table1|table2|fig2|fig3|table4)
+//!   experiment     regenerate a paper table/figure (table1|table2|fig2|fig3|table4|...)
+//!   batch          run a user-authored batch of jobs from a jobs TOML
 //!   plan-index     print the Table 3 / B.1 factorization tables
 //!   memory-report  per-optimizer state accounting for a transformer config
 //!   list-artifacts show compiled AOT artifacts and their shapes
@@ -12,8 +13,10 @@
 use anyhow::{bail, Context, Result};
 use extensor::coordinator::experiments;
 use extensor::coordinator::ExpOptions;
+use extensor::session::{self, Session};
 use extensor::train::{RunConfig, Trainer};
-use extensor::util::cli::{Args, Spec};
+use extensor::util::cli::{parse_set_overrides, Args, Spec};
+use extensor::util::config::Config;
 use std::path::PathBuf;
 
 fn main() {
@@ -33,6 +36,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "experiment" => cmd_experiment(rest),
+        "batch" => cmd_batch(rest),
         "plan-index" => cmd_plan_index(rest),
         "memory-report" => cmd_memory_report(rest),
         "list-artifacts" => cmd_list_artifacts(rest),
@@ -50,13 +54,19 @@ fn print_help() {
 
 USAGE: ettrain <subcommand> [options]
 
-  train <config.toml> [--set k=v ...]   run a training job
-        (run.shards + run.host_optimizer train host-side via the sharded engine)
-  experiment <id> [--steps N] [--csv]   regenerate a paper table/figure
+  train <config.toml> [--set k=v ...] [--resume]   run a training job
+        (run.shards + run.host_optimizer train host-side via the sharded engine;
+         --resume continues from runs/<name>/latest.hck (host) or latest.ck)
+  experiment <id> [--steps N] [--csv] [--jobs N] [--mem-budget BYTES]
+        regenerate a paper table/figure as a concurrent job batch
         ids: table1 fig1 table2 fig2 fig3 table4 fig4 sharding quantized-state
              ablation all
         (sharding sweeps the worker-shard engine; --shards caps the sweep;
-         quantized-state sweeps state backend x optimizer, memory vs quality)
+         quantized-state sweeps state backend x optimizer, memory vs quality;
+         --jobs runs N jobs concurrently, --mem-budget bounds their summed
+         optimizer-state/param bytes via admission control)
+  batch <jobs.toml> [--jobs N] [--mem-budget BYTES]  run a custom job batch
+        (each [job.<name>] section is one lm|convex|shard-bench|vision job)
   plan-index --preset resnet18|transformer
   memory-report [--layers N] [--vocab V] [--d-model D] [--d-ff F]
   list-artifacts [--dir artifacts]
@@ -70,7 +80,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         name: "train",
         about: "run a training job from a TOML config",
         options: vec![("set", None, "override config key=value (comma separated)")],
-        flags: vec![("quiet", "reduce logging")],
+        flags: vec![
+            ("quiet", "reduce logging"),
+            ("resume", "resume from runs/<name>/latest.hck (host) or latest.ck (fused)"),
+        ],
         positional: vec![("config", "path to run config TOML")],
     };
     let args = Args::parse(&spec, argv)?;
@@ -81,15 +94,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .positional
         .first()
         .context("missing <config> (see configs/ for examples)")?;
-    let overrides: Vec<(String, String)> = args
-        .get("set")
-        .map(|s| {
-            s.split(',')
-                .filter_map(|kv| kv.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
-                .collect()
-        })
-        .unwrap_or_default();
-    let cfg = RunConfig::load(config_path, &overrides)?;
+    let overrides = match args.get("set") {
+        Some(s) => parse_set_overrides(s)?,
+        None => Vec::new(),
+    };
+    let mut cfg = RunConfig::load(config_path, &overrides)?;
+    cfg.resume |= args.flag("resume");
     let name = cfg.name.clone();
     let result = Trainer::new(cfg)?.run()?;
     let s = &result.summary;
@@ -109,19 +119,40 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
         csv: args.flag("csv"),
         tune: args.flag("tune"),
         shards: args.get_usize("shards")?.max(1),
+        jobs: args.get_usize("jobs")?.max(1),
+        mem_budget: parse_mem_budget(args.get("mem-budget"))?,
     })
+}
+
+/// Parse `--mem-budget` (plain bytes, or with a k/m/g suffix).
+fn parse_mem_budget(raw: Option<&str>) -> Result<Option<u64>> {
+    let Some(raw) = raw else { return Ok(None) };
+    let s = raw.trim().to_ascii_lowercase();
+    let (digits, mult): (&str, u64) = match s.chars().last() {
+        Some('k') => (&s[..s.len() - 1], 1 << 10),
+        Some('m') => (&s[..s.len() - 1], 1 << 20),
+        Some('g') => (&s[..s.len() - 1], 1 << 30),
+        _ => (s.as_str(), 1),
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--mem-budget: expected BYTES[k|m|g], got '{raw}'"))?;
+    Ok(Some(n.saturating_mul(mult)))
 }
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
     let spec = Spec {
         name: "experiment",
-        about: "regenerate a paper table/figure",
+        about: "regenerate a paper table/figure as a scheduler job batch",
         options: vec![
             ("steps", Some("300"), "training steps per run"),
             ("seed", Some("42"), "experiment seed"),
             ("artifact-dir", Some("artifacts"), "AOT artifact directory"),
             ("out-dir", Some("results"), "output directory"),
             ("shards", Some("8"), "max worker-shard count for the sharding sweep"),
+            ("jobs", Some("1"), "concurrent scheduler workers"),
+            ("mem-budget", None, "admission budget in bytes (k/m/g suffix ok)"),
         ],
         flags: vec![
             ("csv", "also write figure CSV series"),
@@ -135,36 +166,96 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
     let args = Args::parse(&spec, argv)?;
     let id = args.positional.first().context("missing experiment id")?.as_str();
     let mut opts = exp_options(&args)?;
+    // One session per invocation: artifacts compile once and corpora
+    // synthesize once across every sub-experiment of `all`.
+    let session = Session::new();
     match id {
         "table1" | "fig1" => {
             opts.csv |= id == "fig1";
-            experiments::table1(&opts)
+            experiments::table1(&session, &opts)
         }
-        "table2" => experiments::table2(&opts),
-        "fig2" => experiments::fig2(&opts),
-        "fig3" => experiments::fig3(&opts),
-        "sharding" => experiments::sharding(&opts),
-        "quantized-state" => experiments::quantized_state(&opts),
+        "table2" => experiments::table2(&session, &opts),
+        "fig2" => experiments::fig2(&session, &opts),
+        "fig3" => experiments::fig3(&session, &opts),
+        "sharding" => experiments::sharding(&session, &opts),
+        "quantized-state" => experiments::quantized_state(&session, &opts),
         "table4" | "fig4" => {
             opts.csv |= id == "fig4";
-            experiments::table4(&opts)
+            experiments::table4(&session, &opts)
         }
-        "ablation" => {
-            extensor::coordinator::ablation::run(&opts.out_dir, opts.steps as usize, opts.seed)
-        }
+        "ablation" => extensor::coordinator::ablation::run(&session, &opts),
         "all" => {
             opts.csv = true;
-            experiments::table1(&opts)?;
-            experiments::table2(&opts)?;
-            experiments::fig2(&opts)?;
-            experiments::fig3(&opts)?;
-            experiments::table4(&opts)?;
-            experiments::sharding(&opts)?;
-            experiments::quantized_state(&opts)?;
-            extensor::coordinator::ablation::run(&opts.out_dir, opts.steps as usize, opts.seed)
+            experiments::table1(&session, &opts)?;
+            experiments::table2(&session, &opts)?;
+            experiments::fig2(&session, &opts)?;
+            experiments::fig3(&session, &opts)?;
+            experiments::table4(&session, &opts)?;
+            experiments::sharding(&session, &opts)?;
+            experiments::quantized_state(&session, &opts)?;
+            extensor::coordinator::ablation::run(&session, &opts)
         }
         other => bail!("unknown experiment '{other}'"),
     }
+}
+
+fn cmd_batch(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "batch",
+        about: "run a custom batch of jobs from a jobs TOML",
+        options: vec![
+            ("jobs", Some("1"), "concurrent scheduler workers"),
+            ("mem-budget", None, "admission budget in bytes (k/m/g suffix ok)"),
+            ("out-dir", Some("results"), "output directory (schedule log)"),
+        ],
+        flags: vec![("quiet", "reduce logging")],
+        positional: vec![("jobs_toml", "batch file: one [job.<name>] section per job")],
+    };
+    let args = Args::parse(&spec, argv)?;
+    if args.flag("quiet") {
+        extensor::util::logging::set_verbosity(extensor::util::logging::Level::Warn);
+    }
+    let path = args.positional.first().context("missing <jobs_toml>")?;
+    let cfg = Config::load(path)?;
+    let specs = session::batch_from_config(&cfg)?;
+    let out_dir = PathBuf::from(args.get("out-dir").unwrap_or("results"));
+    let sched = session::SchedulerOptions {
+        workers: args.get_usize("jobs")?.max(1),
+        mem_budget: parse_mem_budget(args.get("mem-budget"))?,
+        log_path: Some(out_dir.join("schedule").join("batch.jsonl")),
+    };
+    let session = Session::new();
+    let report = session::run_batch(&session, &specs, &sched)?;
+
+    let mut table = extensor::coordinator::report::Table::new(
+        &format!("batch '{path}' — {} jobs in {:.1}s", specs.len(), report.wall_seconds),
+        &["Job", "Kind", "Status", "Wall s"],
+    );
+    for (r, s) in report.results.iter().zip(&specs) {
+        table.row(vec![
+            r.name.clone(),
+            s.workload_label().to_string(),
+            match &r.outcome {
+                Ok(_) => "ok".to_string(),
+                Err(e) => format!("FAILED: {e}"),
+            },
+            format!("{:.1}", r.wall_seconds),
+        ]);
+    }
+    println!("{}", table.render());
+    let counts = report.cache_counts();
+    println!(
+        "cache: {} artifact hits / {} loads, {} corpus hits / {} syntheses",
+        counts.artifact_hits,
+        counts.artifact_misses,
+        counts.corpus_hits,
+        counts.corpus_misses
+    );
+    let failed = report.failed();
+    if !failed.is_empty() {
+        bail!("{} of {} jobs failed", failed.len(), specs.len());
+    }
+    Ok(())
 }
 
 fn cmd_plan_index(argv: &[String]) -> Result<()> {

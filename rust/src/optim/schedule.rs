@@ -54,6 +54,10 @@ impl Schedule {
             ["warmup_rsqrt", c, w] => {
                 Some(Schedule::scaled_lm(c.parse().ok()?, w.parse().ok()?))
             }
+            ["warmup_slope", c, s] => Some(Schedule::WarmupRsqrt {
+                c: c.parse().ok()?,
+                warmup_slope: s.parse().ok()?,
+            }),
             ["paper_lm", c] => Some(Schedule::paper_lm(c.parse().ok()?)),
             ["step", c, d, e] => Some(Schedule::StepDecay {
                 c: c.parse().ok()?,
@@ -61,6 +65,21 @@ impl Schedule {
                 every: e.parse().ok()?,
             }),
             _ => None,
+        }
+    }
+
+    /// The config spelling of this schedule, such that
+    /// `Schedule::parse(&s.spec()) == Some(s)` exactly (Rust's default
+    /// float formatting round-trips). Warmup-rsqrt schedules serialize via
+    /// the raw-slope form because `scaled_lm` derives the slope from the
+    /// warmup-step count irreversibly in general.
+    pub fn spec(&self) -> String {
+        match self {
+            Schedule::Constant(c) => format!("constant:{c}"),
+            Schedule::WarmupRsqrt { c, warmup_slope } => {
+                format!("warmup_slope:{c}:{warmup_slope}")
+            }
+            Schedule::StepDecay { c, decay, every } => format!("step:{c}:{decay}:{every}"),
         }
     }
 }
@@ -100,6 +119,21 @@ mod tests {
         ));
         assert!(matches!(Schedule::parse("paper_lm:0.1"), Some(Schedule::WarmupRsqrt { .. })));
         assert!(Schedule::parse("bogus").is_none());
+    }
+
+    /// `spec()` must round-trip every variant exactly (JobSpec TOML relies
+    /// on it).
+    #[test]
+    fn spec_roundtrips_exactly() {
+        for s in [
+            Schedule::Constant(0.05),
+            Schedule::scaled_lm(0.15, 40),
+            Schedule::paper_lm(2.0),
+            Schedule::WarmupRsqrt { c: 0.3, warmup_slope: 1.7e-5 },
+            Schedule::StepDecay { c: 1.0, decay: 0.5, every: 10 },
+        ] {
+            assert_eq!(Schedule::parse(&s.spec()), Some(s.clone()), "{}", s.spec());
+        }
     }
 
     /// Property: all schedules are positive and, after warmup, non-increasing.

@@ -1,0 +1,244 @@
+//! The structured event stream a scheduler run emits: every job's life
+//! cycle (`queued → admitted → progress → finished|failed`), plus the
+//! session-cache observations (`artifact-cache` / `corpus-cache` hits) that
+//! make resource reuse auditable. Events are timestamped against the batch
+//! clock, narrated to the CLI as they happen, appended to a JSONL log, and
+//! returned in-order inside [`crate::session::BatchReport`] so tests can
+//! assert on scheduling behavior (admission order, overlap, cache-hit
+//! counts).
+
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+/// One scheduler event. Every variant names the job it concerns.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobEvent {
+    /// The job entered the queue with its admission cost.
+    Queued { job: String, cost_bytes: u64 },
+    /// The job was admitted and started executing; `in_use_bytes` is the
+    /// budget consumption *including* this job.
+    Admitted { job: String, cost_bytes: u64, in_use_bytes: u64 },
+    /// The job could not be admitted right now (budget exhausted) and
+    /// stays queued. Emitted at most once per job.
+    Deferred { job: String, cost_bytes: u64, available_bytes: u64 },
+    /// Periodic step progress from inside a running job.
+    Progress { job: String, step: u64, of: u64, loss: f64 },
+    /// The job asked the session for a compiled artifact engine.
+    ArtifactCache { job: String, artifact: String, hit: bool },
+    /// The job asked the session for a synthesized corpus/dataset.
+    CorpusCache { job: String, key: String, hit: bool },
+    /// The job completed successfully.
+    Finished { job: String, wall_seconds: f64 },
+    /// The job failed (the batch continues; the error is also in the
+    /// job's [`crate::session::JobResult`]).
+    Failed { job: String, error: String },
+}
+
+impl JobEvent {
+    /// The job this event concerns.
+    pub fn job(&self) -> &str {
+        match self {
+            JobEvent::Queued { job, .. }
+            | JobEvent::Admitted { job, .. }
+            | JobEvent::Deferred { job, .. }
+            | JobEvent::Progress { job, .. }
+            | JobEvent::ArtifactCache { job, .. }
+            | JobEvent::CorpusCache { job, .. }
+            | JobEvent::Finished { job, .. }
+            | JobEvent::Failed { job, .. } => job,
+        }
+    }
+
+    /// The event-kind tag used in the JSONL log.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobEvent::Queued { .. } => "queued",
+            JobEvent::Admitted { .. } => "admitted",
+            JobEvent::Deferred { .. } => "deferred",
+            JobEvent::Progress { .. } => "progress",
+            JobEvent::ArtifactCache { .. } => "artifact_cache",
+            JobEvent::CorpusCache { .. } => "corpus_cache",
+            JobEvent::Finished { .. } => "finished",
+            JobEvent::Failed { .. } => "failed",
+        }
+    }
+
+    fn fields(&self) -> Vec<(&'static str, Json)> {
+        match self {
+            JobEvent::Queued { cost_bytes, .. } => {
+                vec![("cost_bytes", Json::num(*cost_bytes as f64))]
+            }
+            JobEvent::Admitted { cost_bytes, in_use_bytes, .. } => vec![
+                ("cost_bytes", Json::num(*cost_bytes as f64)),
+                ("in_use_bytes", Json::num(*in_use_bytes as f64)),
+            ],
+            JobEvent::Deferred { cost_bytes, available_bytes, .. } => vec![
+                ("cost_bytes", Json::num(*cost_bytes as f64)),
+                ("available_bytes", Json::num(*available_bytes as f64)),
+            ],
+            JobEvent::Progress { step, of, loss, .. } => vec![
+                ("step", Json::num(*step as f64)),
+                ("of", Json::num(*of as f64)),
+                ("loss", Json::num(*loss)),
+            ],
+            JobEvent::ArtifactCache { artifact, hit, .. } => vec![
+                ("artifact", Json::str(artifact.clone())),
+                ("hit", Json::Bool(*hit)),
+            ],
+            JobEvent::CorpusCache { key, hit, .. } => {
+                vec![("key", Json::str(key.clone())), ("hit", Json::Bool(*hit))]
+            }
+            JobEvent::Finished { wall_seconds, .. } => {
+                vec![("wall_seconds", Json::num(*wall_seconds))]
+            }
+            JobEvent::Failed { error, .. } => vec![("error", Json::str(error.clone()))],
+        }
+    }
+}
+
+/// A [`JobEvent`] stamped with seconds since the batch started — the
+/// wall-clock axis that makes job overlap visible in the run log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StampedEvent {
+    /// Seconds since the batch clock started.
+    pub t: f64,
+    pub event: JobEvent,
+}
+
+impl StampedEvent {
+    /// JSONL record: `{"t":…, "event":…, "job":…, …fields}`.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("t", Json::num(self.t)),
+            ("event", Json::str(self.event.kind())),
+            ("job", Json::str(self.event.job().to_string())),
+        ];
+        pairs.extend(self.event.fields());
+        Json::obj(pairs)
+    }
+}
+
+/// A cheap, clonable handle a running job uses to emit events for itself.
+/// Sending never blocks and never fails loudly: if the collector is gone
+/// (or the sink was built with [`EventSink::discard`]) events vanish.
+#[derive(Clone)]
+pub struct EventSink {
+    job: String,
+    tx: Sender<StampedEvent>,
+    clock: Arc<Timer>,
+}
+
+impl EventSink {
+    /// A sink feeding a collector channel; `clock` is the shared batch
+    /// timer events are stamped against.
+    pub fn new(job: impl Into<String>, tx: Sender<StampedEvent>, clock: Arc<Timer>) -> EventSink {
+        EventSink { job: job.into(), tx, clock }
+    }
+
+    /// A sink whose events go nowhere — for driving job executors outside
+    /// a scheduler (tests, examples).
+    pub fn discard(job: impl Into<String>) -> EventSink {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        EventSink { job: job.into(), tx, clock: Arc::new(Timer::start()) }
+    }
+
+    /// The job this sink reports for.
+    pub fn job(&self) -> &str {
+        &self.job
+    }
+
+    /// Emit an arbitrary event (the scheduler's own life-cycle events).
+    pub fn emit(&self, event: JobEvent) {
+        let _ = self.tx.send(StampedEvent { t: self.clock.elapsed_secs(), event });
+    }
+
+    /// Report step progress.
+    pub fn progress(&self, step: u64, of: u64, loss: f64) {
+        self.emit(JobEvent::Progress { job: self.job.clone(), step, of, loss });
+    }
+
+    /// Report an artifact-engine cache lookup.
+    pub fn artifact_cache(&self, artifact: &str, hit: bool) {
+        self.emit(JobEvent::ArtifactCache {
+            job: self.job.clone(),
+            artifact: artifact.to_string(),
+            hit,
+        });
+    }
+
+    /// Report a corpus/dataset cache lookup.
+    pub fn corpus_cache(&self, key: &str, hit: bool) {
+        self.emit(JobEvent::CorpusCache { job: self.job.clone(), key: key.to_string(), hit });
+    }
+}
+
+/// Cache-lookup totals extracted from an event stream — the counters the
+/// acceptance checks assert on ("each artifact loaded and each corpus
+/// synthesized at most once per batch").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounts {
+    pub artifact_hits: usize,
+    pub artifact_misses: usize,
+    pub corpus_hits: usize,
+    pub corpus_misses: usize,
+}
+
+impl CacheCounts {
+    /// Tally the cache events in `events`.
+    pub fn from_events(events: &[StampedEvent]) -> CacheCounts {
+        let mut c = CacheCounts::default();
+        for e in events {
+            match &e.event {
+                JobEvent::ArtifactCache { hit: true, .. } => c.artifact_hits += 1,
+                JobEvent::ArtifactCache { hit: false, .. } => c.artifact_misses += 1,
+                JobEvent::CorpusCache { hit: true, .. } => c.corpus_hits += 1,
+                JobEvent::CorpusCache { hit: false, .. } => c.corpus_misses += 1,
+                _ => {}
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn events_carry_job_and_kind() {
+        let e = JobEvent::Admitted { job: "a".into(), cost_bytes: 10, in_use_bytes: 10 };
+        assert_eq!(e.job(), "a");
+        assert_eq!(e.kind(), "admitted");
+        let s = StampedEvent { t: 0.5, event: e };
+        let j = s.to_json();
+        assert_eq!(j.get("event").and_then(|v| v.as_str()), Some("admitted"));
+        assert_eq!(j.get("job").and_then(|v| v.as_str()), Some("a"));
+    }
+
+    #[test]
+    fn sink_stamps_and_delivers() {
+        let (tx, rx) = channel();
+        let sink = EventSink::new("j", tx, Arc::new(Timer::start()));
+        sink.progress(3, 10, 1.25);
+        sink.artifact_cache("lm_tiny_et1", true);
+        sink.corpus_cache("lm:v1900", false);
+        drop(sink);
+        let got: Vec<StampedEvent> = rx.iter().collect();
+        assert_eq!(got.len(), 3);
+        assert!(got.iter().all(|e| e.event.job() == "j"));
+        let counts = CacheCounts::from_events(&got);
+        assert_eq!(
+            counts,
+            CacheCounts { artifact_hits: 1, artifact_misses: 0, corpus_hits: 0, corpus_misses: 1 }
+        );
+    }
+
+    #[test]
+    fn discard_sink_is_silent() {
+        let sink = EventSink::discard("x");
+        sink.progress(1, 2, 0.0); // must not panic on the closed channel
+    }
+}

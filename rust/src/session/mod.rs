@@ -1,0 +1,602 @@
+//! The unified run-execution layer: `JobSpec → Session → Scheduler`.
+//!
+//! ```text
+//!   JobSpec (spec)          what to run: typed, validated, serializable
+//!      │                    (LM artifact run | convex | shard-bench | vision)
+//!      ▼
+//!   Session (this module)   process-wide shared resources: one PJRT
+//!      │                    client, an artifact/Engine cache keyed by
+//!      │                    path+name, corpus & convex-dataset caches
+//!      │                    keyed by synthesis params (cache-hit counters
+//!      ▼                    surface as JobEvents)
+//!   Scheduler (scheduler)   N worker threads, memory-budget admission
+//!      │                    control costed by tensoring::memory
+//!      ▼
+//!   JobEvent stream (events): queued → admitted → progress → finished/failed,
+//!   narrated to the CLI and appended to a JSONL log
+//! ```
+//!
+//! Before this layer existed, every entry point (`Trainer::new(cfg)?.run()`,
+//! the `ExpOptions` experiment functions, `ablation::run`) re-created its
+//! own PJRT client, re-compiled artifacts, and re-synthesized corpora, and
+//! everything ran strictly serially. Now `ettrain train`/`experiment` are
+//! thin wrappers over this API, every table/figure sweep submits a
+//! `JobSpec` batch, and `ettrain batch <jobs.toml>` runs user-authored
+//! fleets — with the paper's own memory accounting
+//! ([`crate::tensoring::memory`]) deciding how many preconditioned runs fit
+//! in a host budget at once.
+//!
+//! Determinism: a job's results depend only on its spec (per-job seeds,
+//! no shared mutable state), so `--jobs 4` produces bitwise-identical
+//! per-run metrics and checkpoints to `--jobs 1`
+//! (`rust/tests/scheduler.rs`).
+
+pub mod events;
+pub mod scheduler;
+pub mod spec;
+
+pub use events::{CacheCounts, EventSink, JobEvent, StampedEvent};
+pub use scheduler::{run_batch, Admission, BatchReport, JobResult, SchedulerOptions};
+pub use spec::{
+    batch_from_config, batch_to_toml, ConvexOpt, ConvexSpec, JobSpec, ShardBenchSpec, VisionSpec,
+    Workload,
+};
+
+use crate::convex::{ConvexConfig, ConvexDataset, SoftmaxRegression};
+use crate::data::{Corpus, SyntheticConfig, Tokenizer};
+use crate::optim::{self, GroupSpec, Hyper, Optimizer};
+use crate::runtime::{Client, Engine};
+use crate::shard::ShardedOptimizer;
+use crate::tensoring::{EpsMode, SliceAccumulators, StateBackend, TensorIndex};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Timer;
+use crate::vision::{VisionConfig, VisionDataset};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Lock a session cache, recovering from poisoning: the caches only ever
+/// hold fully-constructed `Arc`s (a panicking insert-path job leaves at
+/// worst a missing entry), so a poisoned lock must not cascade into
+/// failing every later job in the batch.
+fn lock_cache<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Session: shared process-wide resources
+// ---------------------------------------------------------------------------
+
+/// A synthesized LM corpus with its fitted tokenizer, shared read-only
+/// between jobs.
+pub struct LmData {
+    pub corpus: Corpus,
+    pub tokenizer: Tokenizer,
+}
+
+#[derive(Clone, Hash, PartialEq, Eq)]
+struct LmKey {
+    vocab: usize,
+    sentences: usize,
+    mean_len: usize,
+    branching: usize,
+    seed: u64,
+}
+
+#[derive(Clone, Hash, PartialEq, Eq)]
+struct ConvexKey {
+    n: usize,
+    d: usize,
+    k: usize,
+    cond_bits: u64,
+    householder: usize,
+    seed: u64,
+}
+
+/// Generated vision train/test datasets, shared read-only between jobs.
+pub struct VisionData {
+    pub train: VisionDataset,
+    pub test: VisionDataset,
+}
+
+#[derive(Clone, Hash, PartialEq, Eq)]
+struct VisionKey {
+    classes: usize,
+    train: usize,
+    test: usize,
+    blobs: usize,
+    noise_bits: u32,
+    mix_max_bits: u32,
+    seed: u64,
+}
+
+/// Point-in-time cache counters (process totals, across batches).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub artifact_hits: usize,
+    pub artifact_misses: usize,
+    pub corpus_hits: usize,
+    pub corpus_misses: usize,
+}
+
+/// Owner of everything concurrent jobs share: the PJRT client (created
+/// once, lazily), compiled artifact engines keyed by `dir::name`, and
+/// synthesized datasets keyed by their synthesis parameters. All lookups
+/// return `(Arc<resource>, cache_hit)` so callers can surface
+/// [`JobEvent::ArtifactCache`]/[`JobEvent::CorpusCache`] events; process
+/// totals are also tracked in [`SessionStats`].
+#[derive(Default)]
+pub struct Session {
+    client: Mutex<Option<Client>>,
+    engines: Mutex<HashMap<String, Arc<Engine>>>,
+    lm_data: Mutex<HashMap<LmKey, Arc<LmData>>>,
+    convex: Mutex<HashMap<ConvexKey, Arc<ConvexDataset>>>,
+    vision: Mutex<HashMap<VisionKey, Arc<VisionData>>>,
+    artifact_hits: AtomicUsize,
+    artifact_misses: AtomicUsize,
+    corpus_hits: AtomicUsize,
+    corpus_misses: AtomicUsize,
+}
+
+impl Session {
+    pub fn new() -> Session {
+        Session::default()
+    }
+
+    /// The shared PJRT client (created on first use; clones share one
+    /// underlying client).
+    pub fn client(&self) -> Result<Client> {
+        let mut guard = lock_cache(&self.client);
+        if let Some(c) = &*guard {
+            return Ok(c.clone());
+        }
+        let c = Client::cpu()?;
+        *guard = Some(c.clone());
+        Ok(c)
+    }
+
+    /// The compiled engine for `dir/<name>`, loading and compiling at most
+    /// once per session. Returns `(engine, cache_hit)`.
+    ///
+    /// The cache lock is held across a miss's load+compile, which
+    /// serializes concurrent artifact loads — deliberate: it also
+    /// guarantees an artifact is never compiled twice by racing jobs.
+    pub fn engine(&self, dir: &Path, name: &str) -> Result<(Arc<Engine>, bool)> {
+        let key = format!("{}::{name}", dir.display());
+        let mut cache = lock_cache(&self.engines);
+        if let Some(e) = cache.get(&key) {
+            self.artifact_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((e.clone(), true));
+        }
+        let client = self.client()?;
+        let engine = Arc::new(Engine::load(&client, dir, name)?);
+        cache.insert(key, engine.clone());
+        self.artifact_misses.fetch_add(1, Ordering::Relaxed);
+        Ok((engine, false))
+    }
+
+    /// The synthesized LM corpus + tokenizer for `cfg`, generated at most
+    /// once per session. Returns `(data, cache_hit)`.
+    pub fn lm_data(&self, cfg: &SyntheticConfig) -> (Arc<LmData>, bool) {
+        let key = LmKey {
+            vocab: cfg.vocab,
+            sentences: cfg.sentences,
+            mean_len: cfg.mean_len,
+            branching: cfg.branching,
+            seed: cfg.seed,
+        };
+        let mut cache = lock_cache(&self.lm_data);
+        if let Some(d) = cache.get(&key) {
+            self.corpus_hits.fetch_add(1, Ordering::Relaxed);
+            return (d.clone(), true);
+        }
+        let corpus = Corpus::synthetic(cfg);
+        let tokenizer = Tokenizer::from_corpus(&corpus);
+        let data = Arc::new(LmData { corpus, tokenizer });
+        cache.insert(key, data.clone());
+        self.corpus_misses.fetch_add(1, Ordering::Relaxed);
+        (data, false)
+    }
+
+    /// The event-log label for an LM corpus cache lookup.
+    pub fn lm_data_key(cfg: &SyntheticConfig) -> String {
+        format!("lm:v{}:s{}:seed{:x}", cfg.vocab, cfg.sentences, cfg.seed)
+    }
+
+    /// The convex dataset for `cfg`, generated at most once per session.
+    /// Returns `(dataset, cache_hit)`.
+    pub fn convex_dataset(&self, cfg: &ConvexConfig) -> (Arc<ConvexDataset>, bool) {
+        let key = ConvexKey {
+            n: cfg.n,
+            d: cfg.d,
+            k: cfg.k,
+            cond_bits: cfg.cond.to_bits(),
+            householder: cfg.householder,
+            seed: cfg.seed,
+        };
+        let mut cache = lock_cache(&self.convex);
+        if let Some(d) = cache.get(&key) {
+            self.corpus_hits.fetch_add(1, Ordering::Relaxed);
+            return (d.clone(), true);
+        }
+        crate::info!(
+            "generating convex dataset (n={}, d={}, cond={})",
+            cfg.n,
+            cfg.d,
+            cfg.cond
+        );
+        let data = Arc::new(ConvexDataset::generate(cfg));
+        cache.insert(key, data.clone());
+        self.corpus_misses.fetch_add(1, Ordering::Relaxed);
+        (data, false)
+    }
+
+    /// The event-log label for a convex dataset cache lookup.
+    pub fn convex_key(cfg: &ConvexConfig) -> String {
+        format!("convex:n{}:d{}:k{}:seed{:x}", cfg.n, cfg.d, cfg.k, cfg.seed)
+    }
+
+    /// The vision train/test datasets for `cfg`, generated at most once
+    /// per session. Returns `(data, cache_hit)`.
+    pub fn vision_data(&self, cfg: &VisionConfig) -> (Arc<VisionData>, bool) {
+        let key = VisionKey {
+            classes: cfg.classes,
+            train: cfg.train,
+            test: cfg.test,
+            blobs: cfg.blobs,
+            noise_bits: cfg.noise.to_bits(),
+            mix_max_bits: cfg.mix_max.to_bits(),
+            seed: cfg.seed,
+        };
+        let mut cache = lock_cache(&self.vision);
+        if let Some(d) = cache.get(&key) {
+            self.corpus_hits.fetch_add(1, Ordering::Relaxed);
+            return (d.clone(), true);
+        }
+        let (train, test) = VisionDataset::generate(cfg);
+        let data = Arc::new(VisionData { train, test });
+        cache.insert(key, data.clone());
+        self.corpus_misses.fetch_add(1, Ordering::Relaxed);
+        (data, false)
+    }
+
+    /// The event-log label for a vision dataset cache lookup.
+    pub fn vision_key(cfg: &VisionConfig) -> String {
+        format!("vision:c{}:tr{}:te{}:seed{:x}", cfg.classes, cfg.train, cfg.test, cfg.seed)
+    }
+
+    /// Process-total cache counters.
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            artifact_hits: self.artifact_hits.load(Ordering::Relaxed),
+            artifact_misses: self.artifact_misses.load(Ordering::Relaxed),
+            corpus_hits: self.corpus_hits.load(Ordering::Relaxed),
+            corpus_misses: self.corpus_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Job outcomes + the executor
+// ---------------------------------------------------------------------------
+
+/// The typed result a completed job hands back to the batch submitter.
+pub enum JobOutcome {
+    Lm(Box<crate::train::RunResult>),
+    Convex(Box<ConvexOutcome>),
+    ShardBench(ShardBenchOutcome),
+    Vision(Box<crate::train::vision::VisionRun>),
+}
+
+impl JobOutcome {
+    pub fn as_lm(&self) -> Option<&crate::train::RunResult> {
+        match self {
+            JobOutcome::Lm(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn as_convex(&self) -> Option<&ConvexOutcome> {
+        match self {
+            JobOutcome::Convex(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn as_shard_bench(&self) -> Option<&ShardBenchOutcome> {
+        match self {
+            JobOutcome::ShardBench(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    pub fn as_vision(&self) -> Option<&crate::train::vision::VisionRun> {
+        match self {
+            JobOutcome::Vision(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+/// Result of a convex-workload job.
+#[derive(Clone, Debug)]
+pub struct ConvexOutcome {
+    /// Display name of the optimizer that ran.
+    pub optimizer: String,
+    pub state_scalars: usize,
+    pub state_bytes: usize,
+    pub final_loss: f64,
+    pub accuracy: f64,
+    /// Sampled `(iter, pre-update loss)` curve (empty unless requested).
+    pub curve: Vec<(usize, f64)>,
+    /// Final weights — the job's "checkpoint", compared bitwise by the
+    /// scheduler determinism tests.
+    pub w: Vec<f32>,
+}
+
+/// Result of a shard-bench job.
+#[derive(Clone, Debug)]
+pub struct ShardBenchOutcome {
+    pub optimizer: String,
+    pub shards: usize,
+    pub steps_per_sec: f64,
+    pub total_params: usize,
+    pub peak_state_bytes_per_shard: usize,
+    pub total_state_scalars: usize,
+    pub work_imbalance: f64,
+}
+
+/// Execute one job against the session, emitting progress and cache events
+/// through `sink`. This is the single entry point the scheduler workers
+/// call; it is also usable directly (with [`EventSink::discard`]) to run a
+/// spec without a scheduler.
+pub fn run_job(spec: &JobSpec, session: &Session, sink: &EventSink) -> Result<JobOutcome> {
+    spec.validate()?;
+    match &spec.workload {
+        Workload::Lm(cfg) => {
+            let mut t =
+                crate::train::Trainer::with_session((**cfg).clone(), session, Some(sink.clone()))?;
+            Ok(JobOutcome::Lm(Box::new(t.run()?)))
+        }
+        Workload::Convex(c) => Ok(JobOutcome::Convex(Box::new(run_convex(c, session, sink)?))),
+        Workload::ShardBench(s) => Ok(JobOutcome::ShardBench(run_shard_bench(s, sink)?)),
+        Workload::Vision(v) => {
+            let mut t = crate::train::vision::VisionTrainer::with_session(
+                session,
+                &v.artifact_dir,
+                &v.optimizer,
+                &v.data,
+                Some(sink.clone()),
+            )?;
+            Ok(JobOutcome::Vision(Box::new(t.run(v.steps, v.lr, v.eval_every, v.seed)?)))
+        }
+    }
+}
+
+/// The optimizer driver a convex job steps: either a suite [`Optimizer`]
+/// or the raw slice-accumulator (ablation) path.
+enum ConvexDriver {
+    Opt(Box<dyn Optimizer>),
+    /// Accumulators plus their state-scalar count.
+    Acc(SliceAccumulators, usize),
+}
+
+fn run_convex(spec: &ConvexSpec, session: &Session, sink: &EventSink) -> Result<ConvexOutcome> {
+    let (ds, hit) = session.convex_dataset(&spec.data);
+    sink.corpus_cache(&Session::convex_key(&spec.data), hit);
+    let obj = SoftmaxRegression::new(&ds);
+    let idx: Vec<usize> = (0..ds.n).collect();
+    let groups = vec![GroupSpec::new("w", &[spec.data.k, spec.data.d])];
+    let hyper = Hyper { backend: spec.backend, ..Hyper::default() };
+
+    let mut driver = match &spec.opt {
+        ConvexOpt::Kind(kind) => ConvexDriver::Opt(optim::build(*kind, &groups, &hyper)),
+        ConvexOpt::CustomEt { dims } => ConvexDriver::Opt(Box::new(optim::extreme::custom_et(
+            &groups,
+            vec![dims.clone()],
+            hyper.eps,
+            None,
+        )?)),
+        ConvexOpt::Ablate { dims, eps, beta2, per_factor_eps } => {
+            let mode =
+                if *per_factor_eps { EpsMode::PerFactor } else { EpsMode::InsideProduct };
+            ConvexDriver::Acc(
+                SliceAccumulators::new(TensorIndex::new(dims)?, *eps, *beta2, mode),
+                dims.iter().sum(),
+            )
+        }
+    };
+
+    let mut w = vec![0.0f32; obj.dim()];
+    let mut grad = vec![0.0f32; obj.dim()];
+    let mut curve = Vec::new();
+    let mut last_inloop = f64::NAN;
+    let progress_every = (spec.iters / 10).max(1);
+    for t in 0..spec.iters {
+        let loss = obj.loss_grad(&w, &idx, &mut grad);
+        last_inloop = loss;
+        if spec.curve_every > 0 && t % spec.curve_every == 0 {
+            curve.push((t, loss));
+        }
+        if t % progress_every == 0 {
+            sink.progress(t as u64, spec.iters as u64, loss);
+        }
+        match &mut driver {
+            ConvexDriver::Opt(o) => {
+                o.next_step();
+                o.step(0, &mut w, &grad, spec.lr)?;
+            }
+            ConvexDriver::Acc(acc, _) => {
+                acc.accumulate(&grad)?;
+                acc.apply_update_bias_corrected(&mut w, &grad, spec.lr);
+            }
+        }
+    }
+    let final_loss = if spec.measure_after { obj.loss(&w, &idx) } else { last_inloop };
+    let accuracy = obj.accuracy(&w, &idx);
+    let (optimizer, state_scalars, state_bytes) = match &driver {
+        ConvexDriver::Opt(o) => (o.name(), o.state_scalars(), o.state_bytes()),
+        ConvexDriver::Acc(_, s) => ("ET-ablate".to_string(), *s, 4 * *s),
+    };
+    Ok(ConvexOutcome { optimizer, state_scalars, state_bytes, final_loss, accuracy, curve, w })
+}
+
+fn run_shard_bench(spec: &ShardBenchSpec, sink: &EventSink) -> Result<ShardBenchOutcome> {
+    let groups =
+        crate::testing::transformer_groups(spec.layers, spec.vocab, spec.d_model, spec.d_ff);
+    let total: usize = groups.iter().map(|g| g.numel()).sum();
+    let mut rng = Pcg64::seeded(spec.seed);
+    let grads: Vec<Vec<f32>> = groups
+        .iter()
+        .map(|g| {
+            let mut v = vec![0.0f32; g.numel()];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let mut params: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+    let hyper = Hyper::default();
+    let mut opt = ShardedOptimizer::new(spec.kind, &groups, &hyper, spec.shards)?;
+    for _ in 0..2 {
+        opt.next_step();
+        opt.step_all(&mut params, &grads, 1e-3)?;
+    }
+    let timer = Timer::start();
+    for t in 0..spec.iters {
+        opt.next_step();
+        opt.step_all(&mut params, &grads, 1e-3)?;
+        sink.progress(t as u64 + 1, spec.iters as u64, f64::NAN);
+    }
+    let secs = timer.elapsed_secs();
+    // Real per-shard bytes, not scalars*4 — ET∞'s wide accumulator is an
+    // f64, so the two differ (see tensoring::memory).
+    let peak = opt.plan().peak_state_bytes(&groups, StateBackend::DenseF32);
+    Ok(ShardBenchOutcome {
+        optimizer: spec.kind.name(),
+        shards: spec.shards,
+        steps_per_sec: spec.iters as f64 / secs.max(1e-12),
+        total_params: total,
+        peak_state_bytes_per_shard: peak,
+        total_state_scalars: opt.state_scalars(),
+        work_imbalance: opt.plan().work_imbalance(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_convex() -> ConvexConfig {
+        ConvexConfig { n: 200, d: 32, k: 4, cond: 100.0, householder: 2, seed: 9 }
+    }
+
+    #[test]
+    fn dataset_caches_hit_on_same_params() {
+        let s = Session::new();
+        let (a, hit_a) = s.convex_dataset(&tiny_convex());
+        let (b, hit_b) = s.convex_dataset(&tiny_convex());
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        // a different seed is a different dataset
+        let (_, hit_c) = s.convex_dataset(&ConvexConfig { seed: 10, ..tiny_convex() });
+        assert!(!hit_c);
+        assert_eq!(
+            s.stats(),
+            SessionStats { corpus_hits: 1, corpus_misses: 2, ..SessionStats::default() }
+        );
+    }
+
+    #[test]
+    fn lm_data_caches_by_synthesis_params() {
+        let s = Session::new();
+        let cfg = SyntheticConfig { vocab: 50, sentences: 100, seed: 3, ..Default::default() };
+        let (a, hit_a) = s.lm_data(&cfg);
+        let (b, hit_b) = s.lm_data(&cfg);
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.tokenizer.vocab_size() > 0);
+    }
+
+    /// Running the same convex spec twice produces bitwise-identical
+    /// weights (the executor has no hidden state).
+    #[test]
+    fn convex_job_is_deterministic() {
+        let spec = ConvexSpec {
+            data: tiny_convex(),
+            iters: 30,
+            lr: 0.05,
+            opt: ConvexOpt::Kind(crate::tensoring::OptimizerKind::Et(2)),
+            ..ConvexSpec::default()
+        };
+        let session = Session::new();
+        let sink = EventSink::discard("t");
+        let a = run_convex(&spec, &session, &sink).unwrap();
+        let b = run_convex(&spec, &session, &sink).unwrap();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+        assert!(a.final_loss.is_finite());
+    }
+
+    /// The ablation driver agrees with the suite ET optimizer when both
+    /// use the same dims and the inside-product eps (they share the
+    /// accumulator kernels).
+    #[test]
+    fn ablate_matches_custom_et_at_default_eps() {
+        let data = tiny_convex();
+        let dims = vec![4usize, 4, 8];
+        let session = Session::new();
+        let sink = EventSink::discard("t");
+        let a = run_convex(
+            &ConvexSpec {
+                data: data.clone(),
+                iters: 25,
+                lr: 0.05,
+                opt: ConvexOpt::CustomEt { dims: dims.clone() },
+                measure_after: false,
+                ..ConvexSpec::default()
+            },
+            &session,
+            &sink,
+        )
+        .unwrap();
+        let b = run_convex(
+            &ConvexSpec {
+                data,
+                iters: 25,
+                lr: 0.05,
+                opt: ConvexOpt::Ablate {
+                    dims,
+                    eps: crate::optim::Hyper::EPS,
+                    beta2: None,
+                    per_factor_eps: false,
+                },
+                measure_after: false,
+                ..ConvexSpec::default()
+            },
+            &session,
+            &sink,
+        )
+        .unwrap();
+        assert_eq!(a.w, b.w, "custom_et and the ablation driver diverged");
+    }
+
+    #[test]
+    fn shard_bench_runs_and_reports() {
+        let spec = ShardBenchSpec {
+            kind: crate::tensoring::OptimizerKind::Et(1),
+            shards: 2,
+            iters: 2,
+            layers: 1,
+            vocab: 64,
+            d_model: 16,
+            d_ff: 32,
+            seed: 5,
+        };
+        let out = run_shard_bench(&spec, &EventSink::discard("sb")).unwrap();
+        assert_eq!(out.shards, 2);
+        assert!(out.steps_per_sec > 0.0);
+        assert!(out.total_state_scalars > 0);
+    }
+}

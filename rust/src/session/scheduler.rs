@@ -1,0 +1,422 @@
+//! The concurrent multi-run scheduler: executes a batch of [`JobSpec`]s on
+//! a worker pool under memory-budget admission control.
+//!
+//! Each job is costed in resident host bytes by
+//! [`JobSpec::cost_bytes`] (optimizer-state footprint per backend from
+//! `tensoring::memory`, plus parameters/gradients/dataset buffers); a job
+//! is admitted only while the sum of running jobs' costs stays within
+//! `--mem-budget`. A job that does not fit *right now* stays queued (a
+//! [`JobEvent::Deferred`] is emitted) and is retried whenever a running job
+//! releases its reservation; a job that could never fit the total budget
+//! fails at submission with a clear error instead of deadlocking the pool.
+//!
+//! Determinism contract: per-run numerical results are independent of the
+//! worker count. Jobs share no mutable state (per-job seeds, per-run output
+//! directories, read-only `Arc` datasets from the session caches), so the
+//! only things concurrency changes are wall-clock figures and event
+//! interleaving — enforced in `rust/tests/scheduler.rs` by running the same
+//! batch at 1 and 4 workers and comparing outcomes bitwise.
+
+use super::events::{EventSink, JobEvent, StampedEvent};
+use super::spec::JobSpec;
+use super::{run_job, JobOutcome, Session};
+use crate::util::logging::JsonlWriter;
+use crate::util::timer::Timer;
+use anyhow::{bail, Result};
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// How a batch is executed.
+#[derive(Clone, Debug)]
+pub struct SchedulerOptions {
+    /// Concurrent worker threads (`--jobs`). Each runs one job at a time.
+    pub workers: usize,
+    /// Total admission budget in bytes (`--mem-budget`); `None` = no limit.
+    pub mem_budget: Option<u64>,
+    /// Append the stamped event stream to this JSONL file.
+    pub log_path: Option<PathBuf>,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions { workers: 1, mem_budget: None, log_path: None }
+    }
+}
+
+/// Budget bookkeeping, separated from the thread machinery so the
+/// admission policy is unit-testable.
+#[derive(Clone, Debug)]
+pub struct Admission {
+    budget: Option<u64>,
+    in_use: u64,
+}
+
+impl Admission {
+    pub fn new(budget: Option<u64>) -> Admission {
+        Admission { budget, in_use: 0 }
+    }
+
+    /// Would a job of `cost` bytes fit right now?
+    pub fn fits(&self, cost: u64) -> bool {
+        match self.budget {
+            None => true,
+            Some(b) => self.in_use.saturating_add(cost) <= b,
+        }
+    }
+
+    /// Reserve `cost` bytes (caller must have checked [`Admission::fits`]).
+    pub fn acquire(&mut self, cost: u64) {
+        self.in_use = self.in_use.saturating_add(cost);
+    }
+
+    /// Release a reservation.
+    pub fn release(&mut self, cost: u64) {
+        self.in_use = self.in_use.saturating_sub(cost);
+    }
+
+    pub fn in_use(&self) -> u64 {
+        self.in_use
+    }
+
+    /// Bytes still available (`u64::MAX` when unbudgeted).
+    pub fn available(&self) -> u64 {
+        match self.budget {
+            None => u64::MAX,
+            Some(b) => b.saturating_sub(self.in_use),
+        }
+    }
+}
+
+/// One job's terminal state.
+pub struct JobResult {
+    pub name: String,
+    /// The outcome, or the rendered error chain for failed jobs.
+    pub outcome: std::result::Result<JobOutcome, String>,
+    /// Execution wall time (0 for jobs that failed before admission).
+    pub wall_seconds: f64,
+}
+
+/// Everything a finished batch produced: per-job results in submission
+/// order plus the full stamped event stream.
+pub struct BatchReport {
+    pub results: Vec<JobResult>,
+    pub events: Vec<StampedEvent>,
+    pub wall_seconds: f64,
+}
+
+impl BatchReport {
+    /// Cache-lookup totals over the whole batch.
+    pub fn cache_counts(&self) -> super::events::CacheCounts {
+        super::events::CacheCounts::from_events(&self.events)
+    }
+
+    /// The named job's outcome, as a hard error if it failed.
+    pub fn outcome(&self, name: &str) -> Result<&JobOutcome> {
+        let r = self
+            .results
+            .iter()
+            .find(|r| r.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no job '{name}' in batch"))?;
+        match &r.outcome {
+            Ok(o) => Ok(o),
+            Err(e) => bail!("job '{name}' failed: {e}"),
+        }
+    }
+
+    /// Results of jobs that failed.
+    pub fn failed(&self) -> Vec<&JobResult> {
+        self.results.iter().filter(|r| r.outcome.is_err()).collect()
+    }
+
+    /// All outcomes in submission order; errors if any job failed.
+    pub fn into_outcomes(self) -> Result<Vec<JobOutcome>> {
+        self.results
+            .into_iter()
+            .map(|r| match r.outcome {
+                Ok(o) => Ok(o),
+                Err(e) => bail!("job '{}' failed: {e}", r.name),
+            })
+            .collect()
+    }
+}
+
+struct QueueState {
+    /// Indices (into the spec list) still waiting to start, FIFO.
+    pending: Vec<usize>,
+    admission: Admission,
+    results: Vec<Option<JobResult>>,
+    deferred_emitted: Vec<bool>,
+}
+
+/// Execute `specs` to completion and return the batch report. Failed jobs
+/// do not abort the batch; their errors are carried in the results (and
+/// [`BatchReport::into_outcomes`] turns any of them into a hard error).
+pub fn run_batch(
+    session: &Session,
+    specs: &[JobSpec],
+    opts: &SchedulerOptions,
+) -> Result<BatchReport> {
+    let n = specs.len();
+    let mut seen = HashSet::new();
+    for s in specs {
+        s.validate()?;
+        if !seen.insert(s.name.as_str()) {
+            bail!("duplicate job name '{}' in batch", s.name);
+        }
+    }
+
+    let clock = Arc::new(Timer::start());
+    let (tx, rx) = channel::<StampedEvent>();
+
+    // Cost every job up front. A job whose cost cannot be computed (e.g.
+    // missing artifacts) or that exceeds the *total* budget fails here —
+    // the latter would otherwise wait forever.
+    let mut costs = vec![0u64; n];
+    let mut prefailed: Vec<Option<String>> = vec![None; n];
+    for (i, s) in specs.iter().enumerate() {
+        match s.cost_bytes() {
+            Ok(c) => match opts.mem_budget {
+                Some(b) if c > b => {
+                    prefailed[i] =
+                        Some(format!("needs {c} bytes, exceeding the total --mem-budget {b}"));
+                }
+                _ => costs[i] = c,
+            },
+            Err(e) => prefailed[i] = Some(format!("{e:#}")),
+        }
+    }
+
+    let state = Mutex::new(QueueState {
+        pending: (0..n).filter(|&i| prefailed[i].is_none()).collect(),
+        admission: Admission::new(opts.mem_budget),
+        results: (0..n).map(|_| None).collect(),
+        deferred_emitted: vec![false; n],
+    });
+    let cvar = Condvar::new();
+
+    let workers = opts.workers.max(1).min(n.max(1));
+    let log_path = opts.log_path.clone();
+
+    let events = std::thread::scope(|scope| {
+        let collector = scope.spawn(move || collect_events(rx, log_path));
+
+        // Announce the queue (and the pre-failures) before work starts.
+        {
+            let mut q = state.lock().unwrap();
+            for (i, s) in specs.iter().enumerate() {
+                let ev = match &prefailed[i] {
+                    None => JobEvent::Queued { job: s.name.clone(), cost_bytes: costs[i] },
+                    Some(e) => {
+                        q.results[i] = Some(JobResult {
+                            name: s.name.clone(),
+                            outcome: Err(e.clone()),
+                            wall_seconds: 0.0,
+                        });
+                        JobEvent::Failed { job: s.name.clone(), error: e.clone() }
+                    }
+                };
+                let _ = tx.send(StampedEvent { t: clock.elapsed_secs(), event: ev });
+            }
+        }
+
+        let state_ref = &state;
+        let cvar_ref = &cvar;
+        let costs_ref: &[u64] = &costs;
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let clock = clock.clone();
+            handles.push(scope.spawn(move || {
+                worker_loop(specs, costs_ref, state_ref, cvar_ref, session, &tx, &clock)
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        drop(tx);
+        collector.join().expect("event collector panicked")
+    });
+
+    let qs = state.into_inner().unwrap();
+    let results: Vec<JobResult> = qs
+        .results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| {
+            r.unwrap_or_else(|| JobResult {
+                name: specs[i].name.clone(),
+                outcome: Err("job was never executed (worker pool exited early)".into()),
+                wall_seconds: 0.0,
+            })
+        })
+        .collect();
+    Ok(BatchReport { results, events, wall_seconds: clock.elapsed_secs() })
+}
+
+fn worker_loop(
+    specs: &[JobSpec],
+    costs: &[u64],
+    state: &Mutex<QueueState>,
+    cvar: &Condvar,
+    session: &Session,
+    tx: &Sender<StampedEvent>,
+    clock: &Arc<Timer>,
+) {
+    loop {
+        // Claim the first queued job that fits the budget, or wait for a
+        // release. Exits when the queue is drained.
+        let claimed = {
+            let mut q = state.lock().unwrap();
+            loop {
+                if q.pending.is_empty() {
+                    break None;
+                }
+                if let Some(pos) = q.pending.iter().position(|&i| q.admission.fits(costs[i])) {
+                    let i = q.pending.remove(pos);
+                    q.admission.acquire(costs[i]);
+                    break Some((i, q.admission.in_use()));
+                }
+                for pos in 0..q.pending.len() {
+                    let i = q.pending[pos];
+                    if !q.deferred_emitted[i] {
+                        q.deferred_emitted[i] = true;
+                        let _ = tx.send(StampedEvent {
+                            t: clock.elapsed_secs(),
+                            event: JobEvent::Deferred {
+                                job: specs[i].name.clone(),
+                                cost_bytes: costs[i],
+                                available_bytes: q.admission.available(),
+                            },
+                        });
+                    }
+                }
+                q = cvar.wait(q).unwrap();
+            }
+        };
+        let Some((i, in_use)) = claimed else { return };
+
+        let sink = EventSink::new(specs[i].name.clone(), tx.clone(), clock.clone());
+        sink.emit(JobEvent::Admitted {
+            job: specs[i].name.clone(),
+            cost_bytes: costs[i],
+            in_use_bytes: in_use,
+        });
+        let t0 = Timer::start();
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(&specs[i], session, &sink)
+        }));
+        let wall = t0.elapsed_secs();
+        let outcome = match run {
+            Ok(Ok(out)) => {
+                sink.emit(JobEvent::Finished { job: specs[i].name.clone(), wall_seconds: wall });
+                Ok(out)
+            }
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
+                sink.emit(JobEvent::Failed { job: specs[i].name.clone(), error: msg.clone() });
+                Err(msg)
+            }
+            Err(_) => {
+                let msg = "job panicked".to_string();
+                sink.emit(JobEvent::Failed { job: specs[i].name.clone(), error: msg.clone() });
+                Err(msg)
+            }
+        };
+
+        let mut q = state.lock().unwrap();
+        q.admission.release(costs[i]);
+        q.results[i] =
+            Some(JobResult { name: specs[i].name.clone(), outcome, wall_seconds: wall });
+        cvar.notify_all();
+    }
+}
+
+fn collect_events(rx: Receiver<StampedEvent>, log_path: Option<PathBuf>) -> Vec<StampedEvent> {
+    let mut log = match &log_path {
+        Some(p) => match JsonlWriter::create(p) {
+            Ok(w) => Some(w),
+            Err(e) => {
+                crate::warnln!("cannot open schedule log {p:?}: {e:#}");
+                None
+            }
+        },
+        None => None,
+    };
+    let mut events = Vec::new();
+    for ev in rx {
+        narrate(&ev);
+        if let Some(w) = &mut log {
+            let _ = w.write(&ev.to_json());
+        }
+        events.push(ev);
+    }
+    if let Some(w) = &mut log {
+        let _ = w.flush();
+    }
+    events
+}
+
+fn narrate(ev: &StampedEvent) {
+    let t = ev.t;
+    match &ev.event {
+        JobEvent::Admitted { job, cost_bytes, in_use_bytes } => {
+            crate::info!(
+                "[sched +{t:.1}s] run '{job}' ({cost_bytes} bytes; {in_use_bytes} in use)"
+            );
+        }
+        JobEvent::Deferred { job, cost_bytes, available_bytes } => {
+            crate::info!(
+                "[sched +{t:.1}s] defer '{job}' ({cost_bytes} bytes > {available_bytes} free)"
+            );
+        }
+        JobEvent::Finished { job, wall_seconds } => {
+            crate::info!("[sched +{t:.1}s] done '{job}' in {wall_seconds:.1}s");
+        }
+        JobEvent::Failed { job, error } => {
+            crate::warnln!("[sched +{t:.1}s] FAILED '{job}': {error}");
+        }
+        JobEvent::Progress { job, step, of, loss } => {
+            crate::debugln!("[sched +{t:.1}s] '{job}' step {step}/{of} loss {loss:.4}");
+        }
+        JobEvent::Queued { .. }
+        | JobEvent::ArtifactCache { .. }
+        | JobEvent::CorpusCache { .. } => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The admission-control satellite: an over-budget job is not admitted
+    /// while the budget is held, and fits again after release.
+    #[test]
+    fn over_budget_job_waits_for_release() {
+        let mut a = Admission::new(Some(100));
+        assert!(a.fits(60));
+        a.acquire(60);
+        assert_eq!(a.in_use(), 60);
+        assert!(!a.fits(60), "second 60-byte job must not fit a 100-byte budget");
+        assert!(a.fits(40), "a smaller job still fits");
+        a.release(60);
+        assert!(a.fits(60), "after release the job fits again");
+        assert_eq!(a.available(), 100);
+    }
+
+    #[test]
+    fn unbudgeted_admission_always_fits() {
+        let mut a = Admission::new(None);
+        a.acquire(u64::MAX / 2);
+        assert!(a.fits(u64::MAX / 2));
+        assert_eq!(a.available(), u64::MAX);
+    }
+
+    #[test]
+    fn release_never_underflows() {
+        let mut a = Admission::new(Some(10));
+        a.release(5);
+        assert_eq!(a.in_use(), 0);
+    }
+}

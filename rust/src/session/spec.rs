@@ -1,0 +1,756 @@
+//! [`JobSpec`] — the one typed, validated, serializable description of a
+//! unit of work the execution layer runs. It subsumes what used to be
+//! spread across `Trainer::new(RunConfig)`, the `ExpOptions`-driven
+//! experiment functions, and `ablation::run`: every workload the
+//! coordinator knows how to execute is one of the [`Workload`] variants,
+//! every table/figure sweep is a `Vec<JobSpec>` batch, and `ettrain batch
+//! <jobs.toml>` runs user-authored batches through the same scheduler.
+//!
+//! A job is self-contained and seeded: executing it touches no mutable
+//! state shared with other jobs (per-run output directories, per-job RNG
+//! streams), which is what makes the scheduler's concurrency bitwise
+//! invisible in per-run results.
+
+use crate::convex::ConvexConfig;
+use crate::runtime::Manifest;
+use crate::tensoring::{model_state_bytes, OptimizerKind, StateBackend};
+use crate::train::RunConfig;
+use crate::util::config::{Config, Value};
+use crate::vision::VisionConfig;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// A named, schedulable unit of work.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Unique (per batch) job name; doubles as the run name for LM jobs.
+    pub name: String,
+    pub workload: Workload,
+}
+
+/// What a job actually executes.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    /// An artifact-driven LM training run (fused train-step or the
+    /// host-optimizer/sharded path — exactly what `ettrain train` runs).
+    Lm(Box<RunConfig>),
+    /// A pure-rust convex softmax-regression run (§5.4 substrate): the
+    /// Figure 3 variants, the quantized-state sweep, and the ablations.
+    Convex(ConvexSpec),
+    /// A sharded-optimizer throughput measurement (one shard-count ×
+    /// optimizer configuration of the scaling experiment).
+    ShardBench(ShardBenchSpec),
+    /// A synthetic-CIFAR convnet run (appendix A / Table 4).
+    Vision(VisionSpec),
+}
+
+/// Which optimizer a convex job drives.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConvexOpt {
+    /// A suite optimizer built by `optim::build`.
+    Kind(OptimizerKind),
+    /// An ET optimizer with explicit tensor-index dims for the single
+    /// `k x d` weight group (the Figure 3 depth variants).
+    CustomEt { dims: Vec<usize> },
+    /// The raw slice-accumulator driver with a selectable eps placement —
+    /// the Algorithm-1 ablations.
+    Ablate {
+        dims: Vec<usize>,
+        eps: f32,
+        beta2: Option<f32>,
+        /// `true` = per-factor eps (Lemma 4.3 form); `false` = eps inside
+        /// the product (Algorithm 1 as printed).
+        per_factor_eps: bool,
+    },
+}
+
+/// A convex-workload job.
+#[derive(Clone, Debug)]
+pub struct ConvexSpec {
+    pub data: ConvexConfig,
+    pub iters: usize,
+    pub lr: f32,
+    pub backend: StateBackend,
+    pub opt: ConvexOpt,
+    /// `true`: report the loss at the final parameters (quantized-state
+    /// convention). `false`: report the last in-loop loss, i.e. at the
+    /// parameters *before* the final update (Figure 3 / ablation
+    /// convention).
+    pub measure_after: bool,
+    /// Sample an `(iter, loss)` curve point every this many iterations
+    /// (0 = no curve).
+    pub curve_every: usize,
+}
+
+impl Default for ConvexSpec {
+    fn default() -> Self {
+        ConvexSpec {
+            data: ConvexConfig::default(),
+            iters: 300,
+            lr: 0.05,
+            backend: StateBackend::DenseF32,
+            opt: ConvexOpt::Kind(OptimizerKind::AdaGrad),
+            measure_after: true,
+            curve_every: 0,
+        }
+    }
+}
+
+/// One configuration of the sharded-engine scaling benchmark:
+/// transformer-shaped groups, synthetic gradients, timed `step_all`s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardBenchSpec {
+    pub kind: OptimizerKind,
+    pub shards: usize,
+    /// Timed steps (after a 2-step warmup).
+    pub iters: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub seed: u64,
+}
+
+impl Default for ShardBenchSpec {
+    fn default() -> Self {
+        ShardBenchSpec {
+            kind: OptimizerKind::Et(1),
+            shards: 1,
+            iters: 10,
+            layers: 4,
+            vocab: 2000,
+            d_model: 512,
+            d_ff: 2048,
+            seed: 42,
+        }
+    }
+}
+
+/// A vision (synthetic-CIFAR convnet) job.
+#[derive(Clone, Debug)]
+pub struct VisionSpec {
+    /// Optimizer spelling selecting the `cnn_<optimizer>` artifact.
+    pub optimizer: String,
+    pub lr: f32,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub seed: u64,
+    pub artifact_dir: PathBuf,
+    pub data: VisionConfig,
+}
+
+impl JobSpec {
+    /// An LM training job; the job name becomes the run name (and run
+    /// output directory).
+    pub fn lm(name: impl Into<String>, mut cfg: RunConfig) -> JobSpec {
+        let name = name.into();
+        cfg.name = name.clone();
+        JobSpec { name, workload: Workload::Lm(Box::new(cfg)) }
+    }
+
+    /// A convex-workload job.
+    pub fn convex(name: impl Into<String>, spec: ConvexSpec) -> JobSpec {
+        JobSpec { name: name.into(), workload: Workload::Convex(spec) }
+    }
+
+    /// A shard-bench job.
+    pub fn shard_bench(name: impl Into<String>, spec: ShardBenchSpec) -> JobSpec {
+        JobSpec { name: name.into(), workload: Workload::ShardBench(spec) }
+    }
+
+    /// A vision job.
+    pub fn vision(name: impl Into<String>, spec: VisionSpec) -> JobSpec {
+        JobSpec { name: name.into(), workload: Workload::Vision(spec) }
+    }
+
+    /// The workload-kind tag (also the `type` key in batch TOML).
+    pub fn workload_label(&self) -> &'static str {
+        match &self.workload {
+            Workload::Lm(_) => "lm",
+            Workload::Convex(_) => "convex",
+            Workload::ShardBench(_) => "shard-bench",
+            Workload::Vision(_) => "vision",
+        }
+    }
+
+    /// Structural validation (cheap; no filesystem access).
+    pub fn validate(&self) -> Result<()> {
+        if self.name.trim().is_empty() {
+            bail!("job name must be non-empty");
+        }
+        // Allow-list, not deny-list: the name is a `[job.<name>]` TOML
+        // section header and a run-directory component, so anything beyond
+        // alphanumerics, '-' and '_' would break the serialized round trip
+        // or the filesystem layout.
+        if !self.name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_')) {
+            bail!(
+                "job name '{}' may only contain ASCII letters, digits, '-' and '_'",
+                self.name
+            );
+        }
+        match &self.workload {
+            Workload::Lm(cfg) => {
+                if cfg.artifact.trim().is_empty() {
+                    bail!("job '{}': artifact must be non-empty", self.name);
+                }
+                if cfg.steps == 0 {
+                    bail!("job '{}': steps must be >= 1", self.name);
+                }
+            }
+            Workload::Convex(c) => {
+                if c.iters == 0 {
+                    bail!("job '{}': iters must be >= 1", self.name);
+                }
+                if !(c.lr > 0.0 && c.lr.is_finite()) {
+                    bail!("job '{}': lr must be positive and finite", self.name);
+                }
+                match &c.opt {
+                    ConvexOpt::CustomEt { dims } | ConvexOpt::Ablate { dims, .. } => {
+                        if dims.is_empty() || dims.iter().any(|&d| d == 0) {
+                            bail!("job '{}': ET dims must be non-empty and positive", self.name);
+                        }
+                        let numel = c.data.k * c.data.d;
+                        let product: usize = dims.iter().product();
+                        if product != numel {
+                            bail!(
+                                "job '{}': ET dims {:?} do not cover the {}x{} weight group",
+                                self.name,
+                                dims,
+                                c.data.k,
+                                c.data.d
+                            );
+                        }
+                    }
+                    ConvexOpt::Kind(_) => {}
+                }
+            }
+            Workload::ShardBench(s) => {
+                if s.shards == 0 || s.iters == 0 {
+                    bail!("job '{}': shards and iters must be >= 1", self.name);
+                }
+            }
+            Workload::Vision(v) => {
+                if v.optimizer.trim().is_empty() {
+                    bail!("job '{}': optimizer must be non-empty", self.name);
+                }
+                if v.steps == 0 {
+                    bail!("job '{}': steps must be >= 1", self.name);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The job's admission cost in resident host bytes: parameters (and
+    /// gradients where host-resident) plus the optimizer-state footprint
+    /// from [`crate::tensoring::memory`] under the job's state backend,
+    /// plus the dominant dataset buffers. LM/vision costs read the
+    /// artifact manifest (cheap JSON parse, no compilation) and therefore
+    /// fail when artifacts are not built — the scheduler turns that into a
+    /// per-job failure rather than rejecting the whole batch.
+    pub fn cost_bytes(&self) -> Result<u64> {
+        let cost = match &self.workload {
+            Workload::Lm(cfg) => {
+                let m = Manifest::load(&cfg.artifact_dir, &cfg.artifact).with_context(|| {
+                    format!(
+                        "job '{}': cost accounting needs artifact '{}'",
+                        self.name, cfg.artifact
+                    )
+                })?;
+                match cfg.host_optimizer {
+                    // Host path: params + grads live as host vectors; the
+                    // optimizer state lives shard-local under the chosen
+                    // backend (sharding partitions the same total).
+                    Some(kind) => {
+                        let shapes: Vec<Vec<usize>> =
+                            m.params.iter().map(|p| p.shape.clone()).collect();
+                        8 * m.total_params()
+                            + model_state_bytes(kind, &shapes, cfg.state_backend)
+                    }
+                    // Fused path: params + opt state as f32 literals.
+                    None => 4 * (m.total_params() + m.total_opt_state()),
+                }
+            }
+            Workload::Convex(c) => {
+                let data = 4 * c.data.n * c.data.d + 4 * c.data.n;
+                let wg = 8 * c.data.k * c.data.d; // weights + grad
+                let state = match &c.opt {
+                    ConvexOpt::Kind(kind) => model_state_bytes(
+                        *kind,
+                        &[vec![c.data.k, c.data.d]],
+                        c.backend,
+                    ),
+                    ConvexOpt::CustomEt { dims } | ConvexOpt::Ablate { dims, .. } => {
+                        4 * dims.iter().sum::<usize>()
+                    }
+                };
+                data + wg + state
+            }
+            Workload::ShardBench(s) => {
+                let groups =
+                    crate::testing::transformer_groups(s.layers, s.vocab, s.d_model, s.d_ff);
+                let shapes: Vec<Vec<usize>> = groups.iter().map(|g| g.shape.clone()).collect();
+                let numel: usize = groups.iter().map(|g| g.numel()).sum();
+                8 * numel + model_state_bytes(s.kind, &shapes, StateBackend::DenseF32)
+            }
+            Workload::Vision(v) => {
+                let m = Manifest::load(&v.artifact_dir, &format!("cnn_{}", v.optimizer))
+                    .with_context(|| {
+                        format!(
+                            "job '{}': cost accounting needs artifact 'cnn_{}'",
+                            self.name, v.optimizer
+                        )
+                    })?;
+                let pix = crate::vision::CHANNELS * crate::vision::IMG * crate::vision::IMG;
+                4 * (m.total_params() + m.total_opt_state())
+                    + 4 * (v.data.train + v.data.test) * pix
+            }
+        };
+        Ok(cost as u64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch TOML (de)serialization — `ettrain batch <jobs.toml>`
+// ---------------------------------------------------------------------------
+
+fn q(s: &str) -> String {
+    format!("\"{s}\"")
+}
+
+impl JobSpec {
+    /// Serialize as one `[job.<name>]` TOML section (parsable by
+    /// [`batch_from_config`]).
+    pub fn to_toml(&self) -> String {
+        let mut out = format!("[job.{}]\n", self.name);
+        let mut kv = |k: &str, v: String| out.push_str(&format!("{k} = {v}\n"));
+        kv("type", q(self.workload_label()));
+        match &self.workload {
+            Workload::Lm(cfg) => {
+                kv("artifact", q(&cfg.artifact));
+                if let Some(ev) = &cfg.eval_artifact {
+                    kv("eval_artifact", q(ev));
+                }
+                kv("artifact_dir", q(&cfg.artifact_dir.display().to_string()));
+                kv("out_dir", q(&cfg.out_dir.display().to_string()));
+                kv("steps", cfg.steps.to_string());
+                kv("eval_every", cfg.eval_every.to_string());
+                kv("eval_batches", cfg.eval_batches.to_string());
+                kv("log_every", cfg.log_every.to_string());
+                kv("checkpoint_every", cfg.checkpoint_every.to_string());
+                kv("schedule", q(&cfg.schedule.spec()));
+                kv("seed", cfg.seed.to_string());
+                kv("vocab", cfg.corpus_vocab.to_string());
+                kv("sentences", cfg.corpus_sentences.to_string());
+                kv("max_seconds", cfg.max_seconds.to_string());
+                kv("track_traces", cfg.track_traces.to_string());
+                kv("trace_every", cfg.trace_every.to_string());
+                kv("shards", cfg.shards.to_string());
+                if let Some(k) = cfg.host_optimizer {
+                    kv("host_optimizer", q(&k.name()));
+                }
+                kv("state_backend", q(&cfg.state_backend.name()));
+                kv("resume", cfg.resume.to_string());
+            }
+            Workload::Convex(c) => {
+                match &c.opt {
+                    ConvexOpt::Kind(kind) => kv("optimizer", q(&kind.name())),
+                    ConvexOpt::CustomEt { dims } => {
+                        kv("optimizer", q("custom_et"));
+                        kv("dims", format!("{dims:?}"));
+                    }
+                    ConvexOpt::Ablate { dims, eps, beta2, per_factor_eps } => {
+                        kv("optimizer", q("ablate"));
+                        kv("dims", format!("{dims:?}"));
+                        kv("eps", eps.to_string());
+                        if let Some(b2) = beta2 {
+                            kv("beta2", b2.to_string());
+                        }
+                        kv("per_factor_eps", per_factor_eps.to_string());
+                    }
+                }
+                kv("backend", q(&c.backend.name()));
+                kv("lr", c.lr.to_string());
+                kv("iters", c.iters.to_string());
+                kv("n", c.data.n.to_string());
+                kv("d", c.data.d.to_string());
+                kv("k", c.data.k.to_string());
+                kv("cond", c.data.cond.to_string());
+                kv("householder", c.data.householder.to_string());
+                kv("seed", c.data.seed.to_string());
+                kv("measure_after", c.measure_after.to_string());
+                kv("curve_every", c.curve_every.to_string());
+            }
+            Workload::ShardBench(s) => {
+                kv("kind", q(&s.kind.name()));
+                kv("shards", s.shards.to_string());
+                kv("iters", s.iters.to_string());
+                kv("layers", s.layers.to_string());
+                kv("vocab", s.vocab.to_string());
+                kv("d_model", s.d_model.to_string());
+                kv("d_ff", s.d_ff.to_string());
+                kv("seed", s.seed.to_string());
+            }
+            Workload::Vision(v) => {
+                kv("optimizer", q(&v.optimizer));
+                kv("lr", v.lr.to_string());
+                kv("steps", v.steps.to_string());
+                kv("eval_every", v.eval_every.to_string());
+                kv("seed", v.seed.to_string());
+                kv("artifact_dir", q(&v.artifact_dir.display().to_string()));
+                kv("classes", v.data.classes.to_string());
+                kv("train", v.data.train.to_string());
+                kv("test", v.data.test.to_string());
+                kv("blobs", v.data.blobs.to_string());
+                kv("noise", v.data.noise.to_string());
+                kv("mix_max", v.data.mix_max.to_string());
+                kv("data_seed", v.data.seed.to_string());
+            }
+        }
+        out
+    }
+}
+
+/// Serialize a batch as one TOML document.
+pub fn batch_to_toml(specs: &[JobSpec]) -> String {
+    specs.iter().map(|s| s.to_toml()).collect::<Vec<_>>().join("\n")
+}
+
+/// Parse every `[job.<name>]` section of a batch config into specs.
+///
+/// Jobs come back ordered by name (the underlying key map is sorted), so a
+/// batch file defines a deterministic submission order regardless of
+/// section layout. Keys outside `job.*` sections are rejected — a typoed
+/// section must not be silently ignored.
+pub fn batch_from_config(cfg: &Config) -> Result<Vec<JobSpec>> {
+    let mut names: Vec<String> = Vec::new();
+    for key in cfg.keys() {
+        let Some(rest) = key.strip_prefix("job.") else {
+            bail!("unexpected key '{key}' (batch files contain only [job.<name>] sections)");
+        };
+        let Some((name, _)) = rest.split_once('.') else {
+            bail!("key '{key}' is not of the form job.<name>.<key>");
+        };
+        if names.last().map(|n| n.as_str()) != Some(name) {
+            names.push(name.to_string());
+        }
+    }
+    names.dedup();
+    if names.is_empty() {
+        bail!("batch config defines no [job.<name>] sections");
+    }
+    names.iter().map(|n| job_from_config(cfg, n)).collect()
+}
+
+/// Reject unknown keys inside a `[job.<name>]` section — a typoed key
+/// (`step` for `steps`) must be a hard error, not a silently applied
+/// default (the same policy `parse_set_overrides` enforces for `--set`).
+fn check_job_keys(cfg: &Config, prefix: &str, name: &str, allowed: &[&str]) -> Result<()> {
+    let pfx = format!("{prefix}.");
+    for key in cfg.keys() {
+        if let Some(rest) = key.strip_prefix(&pfx) {
+            if !allowed.contains(&rest) {
+                bail!("job '{name}': unknown key '{rest}' (allowed: {allowed:?})");
+            }
+        }
+    }
+    Ok(())
+}
+
+const LM_KEYS: &[&str] = &[
+    "type", "artifact", "eval_artifact", "artifact_dir", "out_dir", "steps", "eval_every",
+    "eval_batches", "log_every", "checkpoint_every", "schedule", "seed", "vocab", "sentences",
+    "max_seconds", "track_traces", "trace_every", "shards", "host_optimizer", "state_backend",
+    "resume",
+];
+const CONVEX_KEYS: &[&str] = &[
+    "type", "optimizer", "dims", "eps", "beta2", "per_factor_eps", "backend", "lr", "iters", "n",
+    "d", "k", "cond", "householder", "seed", "measure_after", "curve_every",
+];
+const SHARD_BENCH_KEYS: &[&str] =
+    &["type", "kind", "shards", "iters", "layers", "vocab", "d_model", "d_ff", "seed"];
+const VISION_KEYS: &[&str] = &[
+    "type", "optimizer", "lr", "steps", "eval_every", "seed", "artifact_dir", "classes", "train",
+    "test", "blobs", "noise", "mix_max", "data_seed",
+];
+
+fn job_from_config(cfg: &Config, name: &str) -> Result<JobSpec> {
+    let p = format!("job.{name}");
+    let key = |k: &str| format!("{p}.{k}");
+    let ty = cfg.req_str(&key("type")).with_context(|| format!("job '{name}'"))?;
+    let allowed = match ty.as_str() {
+        "lm" => LM_KEYS,
+        "convex" => CONVEX_KEYS,
+        "shard-bench" => SHARD_BENCH_KEYS,
+        "vision" => VISION_KEYS,
+        other => bail!("job '{name}': unknown type '{other}' (lm|convex|shard-bench|vision)"),
+    };
+    check_job_keys(cfg, &p, name, allowed)?;
+    let spec = match ty.as_str() {
+        "lm" => {
+            // Remap the flat job keys onto the RunConfig TOML schema and
+            // reuse its loader (single source of truth for defaults and
+            // validation).
+            let mut sub = Config::default();
+            for k in cfg.keys().map(String::from).collect::<Vec<_>>() {
+                let Some(rest) = k.strip_prefix(&format!("{p}.")) else { continue };
+                let mapped = match rest {
+                    "type" => continue,
+                    "vocab" => "data.vocab".to_string(),
+                    "sentences" => "data.sentences".to_string(),
+                    "schedule" => "optim.schedule".to_string(),
+                    other => format!("run.{other}"),
+                };
+                sub.insert(&mapped, cfg.get(&k).expect("key exists").clone());
+            }
+            sub.insert("run.name", Value::Str(name.to_string()));
+            let rc = RunConfig::from_config(&sub).with_context(|| format!("job '{name}'"))?;
+            JobSpec::lm(name, rc)
+        }
+        "convex" => {
+            let d = ConvexSpec::default();
+            let opt_name = cfg.req_str(&key("optimizer"))?;
+            let dims = cfg.get(&key("dims")).and_then(|v| v.as_usize_arr());
+            let opt = match opt_name.as_str() {
+                "custom_et" => ConvexOpt::CustomEt {
+                    dims: dims.context("custom_et needs a dims = [..] array")?,
+                },
+                "ablate" => ConvexOpt::Ablate {
+                    dims: dims.context("ablate needs a dims = [..] array")?,
+                    eps: cfg.f64(&key("eps"), 1e-8) as f32,
+                    beta2: cfg.get(&key("beta2")).and_then(|v| v.as_f64()).map(|b| b as f32),
+                    per_factor_eps: cfg.bool(&key("per_factor_eps"), false),
+                },
+                other => ConvexOpt::Kind(
+                    OptimizerKind::parse(other)
+                        .with_context(|| format!("job '{name}': unknown optimizer '{other}'"))?,
+                ),
+            };
+            let backend_name = cfg.str(&key("backend"), "f32");
+            let dd = ConvexConfig::default();
+            JobSpec::convex(
+                name,
+                ConvexSpec {
+                    data: ConvexConfig {
+                        n: cfg.usize(&key("n"), dd.n),
+                        d: cfg.usize(&key("d"), dd.d),
+                        k: cfg.usize(&key("k"), dd.k),
+                        cond: cfg.f64(&key("cond"), dd.cond),
+                        householder: cfg.usize(&key("householder"), dd.householder),
+                        seed: cfg.usize(&key("seed"), dd.seed as usize) as u64,
+                    },
+                    iters: cfg.usize(&key("iters"), d.iters),
+                    lr: cfg.f64(&key("lr"), d.lr as f64) as f32,
+                    backend: StateBackend::parse(&backend_name)
+                        .with_context(|| format!("job '{name}': bad backend '{backend_name}'"))?,
+                    opt,
+                    measure_after: cfg.bool(&key("measure_after"), d.measure_after),
+                    curve_every: cfg.usize(&key("curve_every"), d.curve_every),
+                },
+            )
+        }
+        "shard-bench" => {
+            let d = ShardBenchSpec::default();
+            let kind_name = cfg.req_str(&key("kind"))?;
+            JobSpec::shard_bench(
+                name,
+                ShardBenchSpec {
+                    kind: OptimizerKind::parse(&kind_name)
+                        .with_context(|| format!("job '{name}': unknown kind '{kind_name}'"))?,
+                    shards: cfg.usize(&key("shards"), d.shards),
+                    iters: cfg.usize(&key("iters"), d.iters),
+                    layers: cfg.usize(&key("layers"), d.layers),
+                    vocab: cfg.usize(&key("vocab"), d.vocab),
+                    d_model: cfg.usize(&key("d_model"), d.d_model),
+                    d_ff: cfg.usize(&key("d_ff"), d.d_ff),
+                    seed: cfg.usize(&key("seed"), d.seed as usize) as u64,
+                },
+            )
+        }
+        "vision" => {
+            let dv = VisionConfig::default();
+            JobSpec::vision(
+                name,
+                VisionSpec {
+                    optimizer: cfg.req_str(&key("optimizer"))?,
+                    lr: cfg.f64(&key("lr"), 0.05) as f32,
+                    steps: cfg.usize(&key("steps"), 300) as u64,
+                    eval_every: cfg.usize(&key("eval_every"), 60) as u64,
+                    seed: cfg.usize(&key("seed"), 42) as u64,
+                    artifact_dir: PathBuf::from(cfg.str(&key("artifact_dir"), "artifacts")),
+                    data: VisionConfig {
+                        classes: cfg.usize(&key("classes"), dv.classes),
+                        train: cfg.usize(&key("train"), dv.train),
+                        test: cfg.usize(&key("test"), dv.test),
+                        blobs: cfg.usize(&key("blobs"), dv.blobs),
+                        noise: cfg.f64(&key("noise"), dv.noise as f64) as f32,
+                        mix_max: cfg.f64(&key("mix_max"), dv.mix_max as f64) as f32,
+                        seed: cfg.usize(&key("data_seed"), dv.seed as usize) as u64,
+                    },
+                },
+            )
+        }
+        _ => unreachable!("job type validated against the allowlist match above"),
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Schedule;
+
+    fn sample_batch() -> Vec<JobSpec> {
+        let lm = RunConfig {
+            artifact: "lm_tiny_et2".into(),
+            eval_artifact: Some("lm_tiny_eval".into()),
+            steps: 120,
+            schedule: Schedule::scaled_lm(0.5, 15),
+            host_optimizer: Some(OptimizerKind::Et(2)),
+            shards: 2,
+            state_backend: StateBackend::q8(),
+            ..RunConfig::default()
+        };
+        vec![
+            JobSpec::lm("lm_a", lm),
+            JobSpec::convex(
+                "qs_adam",
+                ConvexSpec {
+                    opt: ConvexOpt::Kind(OptimizerKind::Adam),
+                    backend: StateBackend::q8(),
+                    data: ConvexConfig { n: 300, d: 32, k: 4, ..ConvexConfig::default() },
+                    iters: 50,
+                    ..ConvexSpec::default()
+                },
+            ),
+            JobSpec::convex(
+                "abl_eps",
+                ConvexSpec {
+                    opt: ConvexOpt::Ablate {
+                        dims: vec![4, 4, 8],
+                        eps: 1e-4,
+                        beta2: Some(0.99),
+                        per_factor_eps: true,
+                    },
+                    data: ConvexConfig { n: 300, d: 32, k: 4, ..ConvexConfig::default() },
+                    iters: 50,
+                    measure_after: false,
+                    ..ConvexSpec::default()
+                },
+            ),
+            JobSpec::shard_bench(
+                "sb_et3",
+                ShardBenchSpec { kind: OptimizerKind::Et(3), shards: 4, ..Default::default() },
+            ),
+        ]
+    }
+
+    #[test]
+    fn toml_roundtrip_preserves_every_field() {
+        let specs = sample_batch();
+        let toml = batch_to_toml(&specs);
+        let cfg = Config::parse(&toml).unwrap();
+        let back = batch_from_config(&cfg).unwrap();
+        // batch_from_config returns jobs sorted by name
+        let mut want: Vec<&JobSpec> = specs.iter().collect();
+        want.sort_by(|a, b| a.name.cmp(&b.name));
+        assert_eq!(back.len(), want.len());
+        for (got, want) in back.iter().zip(want) {
+            assert_eq!(got.name, want.name);
+            match (&got.workload, &want.workload) {
+                (Workload::Lm(a), Workload::Lm(b)) => {
+                    assert_eq!(a.artifact, b.artifact);
+                    assert_eq!(a.eval_artifact, b.eval_artifact);
+                    assert_eq!(a.steps, b.steps);
+                    assert_eq!(a.schedule, b.schedule);
+                    assert_eq!(a.host_optimizer, b.host_optimizer);
+                    assert_eq!(a.shards, b.shards);
+                    assert_eq!(a.state_backend, b.state_backend);
+                    assert_eq!(a.seed, b.seed);
+                }
+                (Workload::Convex(a), Workload::Convex(b)) => {
+                    assert_eq!(a.opt, b.opt);
+                    assert_eq!(a.backend, b.backend);
+                    assert_eq!(a.iters, b.iters);
+                    assert_eq!(a.lr, b.lr);
+                    assert_eq!(a.measure_after, b.measure_after);
+                    assert_eq!(a.data.n, b.data.n);
+                    assert_eq!(a.data.seed, b.data.seed);
+                }
+                (Workload::ShardBench(a), Workload::ShardBench(b)) => assert_eq!(a, b),
+                _ => panic!("workload kind changed in round trip"),
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut j = JobSpec::convex("ok-name_2", ConvexSpec::default());
+        assert!(j.validate().is_ok());
+        for bad in ["has.dot", "has space", "has]bracket", "has\"quote", ""] {
+            j.name = bad.into();
+            assert!(j.validate().is_err(), "name '{bad}' must be rejected");
+        }
+        // ET dims must cover the weight group
+        let bad = JobSpec::convex(
+            "bad",
+            ConvexSpec {
+                opt: ConvexOpt::CustomEt { dims: vec![3, 3] },
+                data: ConvexConfig { n: 10, d: 32, k: 4, ..ConvexConfig::default() },
+                ..ConvexSpec::default()
+            },
+        );
+        assert!(bad.validate().is_err());
+        let zero_steps =
+            JobSpec::lm("z", RunConfig { steps: 0, ..RunConfig::default() });
+        assert!(zero_steps.validate().is_err());
+    }
+
+    #[test]
+    fn batch_parse_rejects_garbage() {
+        assert!(batch_from_config(&Config::parse("[run]\nartifact = \"x\"").unwrap()).is_err());
+        assert!(batch_from_config(&Config::parse("").unwrap()).is_err());
+        let missing_type = Config::parse("[job.a]\nartifact = \"x\"").unwrap();
+        assert!(batch_from_config(&missing_type).is_err());
+        let bad_type = Config::parse("[job.a]\ntype = \"nope\"").unwrap();
+        assert!(batch_from_config(&bad_type).is_err());
+    }
+
+    /// A typoed key inside a job section is a hard error, not a silently
+    /// applied default (`step` instead of `steps`, `iter` vs `iters`).
+    #[test]
+    fn unknown_job_keys_rejected() {
+        let typo_lm = Config::parse(
+            "[job.a]\ntype = \"lm\"\nartifact = \"x\"\nstep = 100",
+        )
+        .unwrap();
+        let err = batch_from_config(&typo_lm).map(|_| ()).unwrap_err().to_string();
+        assert!(err.contains("step"), "error must name the bad key: {err}");
+
+        let typo_convex = Config::parse(
+            "[job.b]\ntype = \"convex\"\noptimizer = \"adam\"\niter = 500",
+        )
+        .unwrap();
+        assert!(batch_from_config(&typo_convex).is_err());
+
+        // All emitted keys are accepted back (the allowlists cover to_toml).
+        let good = Config::parse(&batch_to_toml(&sample_batch())).unwrap();
+        assert!(batch_from_config(&good).is_ok());
+    }
+
+    #[test]
+    fn convex_cost_counts_data_and_state() {
+        let spec = JobSpec::convex(
+            "c",
+            ConvexSpec {
+                data: ConvexConfig { n: 100, d: 16, k: 4, ..ConvexConfig::default() },
+                opt: ConvexOpt::Kind(OptimizerKind::Adam),
+                ..ConvexSpec::default()
+            },
+        );
+        let cost = spec.cost_bytes().unwrap();
+        // data (100x16 f32 + labels) + w/grad (2 * 64 f32) + Adam state (2 * 64 f32)
+        assert_eq!(cost, (4 * 100 * 16 + 4 * 100 + 8 * 64 + 8 * 64) as u64);
+    }
+}

@@ -73,6 +73,34 @@ impl ShardPlan {
         self.state_scalars.iter().sum()
     }
 
+    /// Physical optimizer-state bytes held by one shard under `backend`.
+    /// `groups` must be the same list the plan was built from.
+    pub fn shard_state_bytes(
+        &self,
+        shard: usize,
+        groups: &[GroupSpec],
+        backend: crate::tensoring::StateBackend,
+    ) -> usize {
+        self.shards[shard]
+            .iter()
+            .map(|&gi| crate::tensoring::group_state_bytes(self.kind, &groups[gi].shape, backend))
+            .sum()
+    }
+
+    /// Largest physical optimizer-state footprint on any single shard —
+    /// what the scaling experiment reports and what the session scheduler
+    /// uses when costing shard placement for admission control.
+    pub fn peak_state_bytes(
+        &self,
+        groups: &[GroupSpec],
+        backend: crate::tensoring::StateBackend,
+    ) -> usize {
+        (0..self.n_shards())
+            .map(|s| self.shard_state_bytes(s, groups, backend))
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Max/mean work ratio across shards (1.0 = perfectly balanced).
     pub fn work_imbalance(&self) -> f64 {
         let max = self.work.iter().copied().max().unwrap_or(0) as f64;
@@ -199,6 +227,25 @@ mod tests {
             let want: usize = gs.iter().map(|g| group_state_scalars(kind, &g.shape)).sum();
             assert_eq!(plan.total_state_scalars(), want, "kind {kind:?}");
             assert!(plan.peak_state_scalars() <= want);
+        }
+    }
+
+    #[test]
+    fn byte_accounting_matches_memory_model() {
+        use crate::tensoring::{group_state_bytes, StateBackend};
+        let gs = transformer_groups();
+        for backend in [StateBackend::DenseF32, StateBackend::q8()] {
+            for kind in [OptimizerKind::Adam, OptimizerKind::Et(2), OptimizerKind::EtInf] {
+                let plan = partition(kind, &gs, 3, None).unwrap();
+                let total: usize = (0..plan.n_shards())
+                    .map(|s| plan.shard_state_bytes(s, &gs, backend))
+                    .sum();
+                let want: usize =
+                    gs.iter().map(|g| group_state_bytes(kind, &g.shape, backend)).sum();
+                assert_eq!(total, want, "kind {kind:?} backend {backend:?}");
+                assert!(plan.peak_state_bytes(&gs, backend) <= want);
+                assert!(plan.peak_state_bytes(&gs, backend) > 0 || want == 0);
+            }
         }
     }
 

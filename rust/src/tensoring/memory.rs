@@ -162,6 +162,18 @@ pub fn group_state_bytes(kind: OptimizerKind, shape: &[usize], backend: StateBac
         + group_wide_scalars(kind) * 8
 }
 
+/// Physical optimizer-state bytes for a whole model (one shape per
+/// parameter group) under `kind` stored via `backend` — the quantity the
+/// session scheduler charges against its `--mem-budget` when admitting
+/// concurrent jobs.
+pub fn model_state_bytes(
+    kind: OptimizerKind,
+    shapes: &[Vec<usize>],
+    backend: StateBackend,
+) -> usize {
+    shapes.iter().map(|s| group_state_bytes(kind, s, backend)).sum()
+}
+
 /// Footprint in `f32`-equivalents — the paper's scalar units — which is
 /// fractional under quantized backends (a q8 scalar costs ~0.28 of an f32).
 pub fn group_state_fractional_scalars(
@@ -332,6 +344,18 @@ mod tests {
         let frac =
             group_state_fractional_scalars(OptimizerKind::AdaGrad, &[512, 512], StateBackend::q8());
         assert!((frac - q8 as f64 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_bytes_sum_group_bytes() {
+        let shapes = vec![vec![512, 2048], vec![512], vec![8, 4, 3, 3]];
+        for backend in [StateBackend::DenseF32, StateBackend::q8()] {
+            for kind in [OptimizerKind::Adam, OptimizerKind::Et(2), OptimizerKind::EtInf] {
+                let want: usize =
+                    shapes.iter().map(|s| group_state_bytes(kind, s, backend)).sum();
+                assert_eq!(model_state_bytes(kind, &shapes, backend), want, "{kind:?}");
+            }
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub use accumulator::{
 pub use index::{Odometer, TensorIndex};
 pub use memory::{
     group_state_buffer_lens, group_state_bytes, group_state_fractional_scalars,
-    group_state_scalars, group_wide_scalars, MemoryReport, OptimizerKind, StateBackend,
+    group_state_scalars, group_wide_scalars, model_state_bytes, MemoryReport, OptimizerKind,
+    StateBackend,
 };
 pub use planner::{natural_dims, plan, plan_flat, plan_index, Level};

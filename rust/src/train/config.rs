@@ -45,6 +45,11 @@ pub struct RunConfig {
     /// Physical storage for host-optimizer state: `f32` (default) or
     /// `q8`/`q8/<block>` for 8-bit block-quantized buffers.
     pub state_backend: StateBackend,
+    /// Resume from the run's latest checkpoint (`runs/<name>/latest.hck`
+    /// for host-optimizer runs via the ETHC loader, `latest.ck` for fused
+    /// artifact runs). Missing checkpoint = hard error, so a typoed run
+    /// name cannot silently restart from scratch.
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -70,6 +75,7 @@ impl Default for RunConfig {
             shards: 1,
             host_optimizer: None,
             state_backend: StateBackend::DenseF32,
+            resume: false,
         }
     }
 }
@@ -121,6 +127,7 @@ impl RunConfig {
                     .with_context(|| format!("unknown state backend '{s}' (f32|q8|q8/<block>)"))?,
                 None => StateBackend::DenseF32,
             },
+            resume: cfg.bool("run.resume", false),
         })
     }
 }
@@ -164,6 +171,7 @@ state_backend = "q8"
         assert_eq!(rc.shards, 4);
         assert_eq!(rc.host_optimizer, Some(OptimizerKind::Et(2)));
         assert_eq!(rc.state_backend, StateBackend::q8());
+        assert!(!rc.resume);
         // default: single shard, fused-artifact training, dense f32 state
         let plain = Config::parse("[run]\nartifact = \"a\"").unwrap();
         let rc = RunConfig::from_config(&plain).unwrap();

@@ -9,15 +9,17 @@
 use super::checkpoint;
 use super::config::RunConfig;
 use super::metrics::{EvalRecord, PplAccumulator, RunSummary, StepRecord};
-use crate::data::{Batcher, Corpus, Loader, SyntheticConfig, Tokenizer};
+use crate::data::{Batcher, Loader, SyntheticConfig};
 use crate::optim::{Hyper, Optimizer};
 use crate::regret::TraceTracker;
 use crate::runtime::{Client, DataArg, Engine, TrainState};
+use crate::session::{EventSink, LmData, Session};
 use crate::shard::ShardedOptimizer;
 use crate::util::json::Json;
 use crate::util::logging::JsonlWriter;
 use crate::util::timer::{EmaRate, Timer};
 use anyhow::{Context, Result};
+use std::sync::Arc;
 
 /// Outcome of a completed run.
 pub struct RunResult {
@@ -27,22 +29,51 @@ pub struct RunResult {
     pub trace_report: Option<crate::regret::TraceReport>,
 }
 
-/// LM trainer bound to one artifact + corpus.
+/// LM trainer bound to one artifact + corpus. Engines and the corpus are
+/// shared, read-only session resources (`Arc`), so concurrent trainers in
+/// one [`Session`] compile each artifact and synthesize each corpus at
+/// most once.
 pub struct Trainer {
     pub cfg: RunConfig,
     client: Client,
-    engine: Engine,
-    eval_engine: Option<Engine>,
-    grad_engine: Option<Engine>,
+    engine: Arc<Engine>,
+    eval_engine: Option<Arc<Engine>>,
+    grad_engine: Option<Arc<Engine>>,
+    data: Arc<LmData>,
+    sink: Option<EventSink>,
 }
 
 impl Trainer {
+    /// Standalone constructor: a private one-off [`Session`] (the
+    /// compatibility path for `ettrain train` and library users).
     pub fn new(cfg: RunConfig) -> Result<Trainer> {
-        let client = Client::cpu()?;
-        let engine = Engine::load(&client, &cfg.artifact_dir, &cfg.artifact)
+        let session = Session::new();
+        Self::with_session(cfg, &session, None)
+    }
+
+    /// Construct against shared session resources, optionally reporting
+    /// progress and cache lookups through `sink`.
+    pub fn with_session(
+        cfg: RunConfig,
+        session: &Session,
+        sink: Option<EventSink>,
+    ) -> Result<Trainer> {
+        let client = session.client()?;
+        let report = |artifact: &str, hit: bool| {
+            if let Some(s) = &sink {
+                s.artifact_cache(artifact, hit);
+            }
+        };
+        let (engine, hit) = session
+            .engine(&cfg.artifact_dir, &cfg.artifact)
             .with_context(|| format!("load artifact '{}'", cfg.artifact))?;
+        report(&cfg.artifact, hit);
         let eval_engine = match &cfg.eval_artifact {
-            Some(name) => Some(Engine::load(&client, &cfg.artifact_dir, name)?),
+            Some(name) => {
+                let (e, hit) = session.engine(&cfg.artifact_dir, name)?;
+                report(name, hit);
+                Some(e)
+            }
             None => None,
         };
         // grad artifact: derive name `<family>_grad` from the train
@@ -54,11 +85,24 @@ impl Trainer {
                 .rsplit_once('_')
                 .map(|(b, _)| b.to_string())
                 .unwrap_or_else(|| cfg.artifact.clone());
-            Some(Engine::load(&client, &cfg.artifact_dir, &format!("{base}_grad"))?)
+            let name = format!("{base}_grad");
+            let (e, hit) = session.engine(&cfg.artifact_dir, &name)?;
+            report(&name, hit);
+            Some(e)
         } else {
             None
         };
-        Ok(Trainer { cfg, client, engine, eval_engine, grad_engine })
+        let data_cfg = SyntheticConfig {
+            vocab: cfg.corpus_vocab,
+            sentences: cfg.corpus_sentences,
+            seed: cfg.seed ^ 0xc0a9,
+            ..SyntheticConfig::default()
+        };
+        let (data, hit) = session.lm_data(&data_cfg);
+        if let Some(s) = &sink {
+            s.corpus_cache(&Session::lm_data_key(&data_cfg), hit);
+        }
+        Ok(Trainer { cfg, client, engine, eval_engine, grad_engine, data, sink })
     }
 
     pub fn engine(&self) -> &Engine {
@@ -69,8 +113,8 @@ impl Trainer {
         &self.client
     }
 
-    /// Build the corpus/batcher pipeline matching the artifact's token
-    /// geometry.
+    /// Build the batcher pipeline matching the artifact's token geometry
+    /// over the (session-cached) corpus.
     pub fn build_data(&self) -> Result<(Batcher, Batcher)> {
         let m = &self.engine.manifest;
         let tokens = &m.data_inputs[0];
@@ -81,23 +125,24 @@ impl Trainer {
             .get("vocab")
             .and_then(|v| v.as_usize())
             .context("manifest missing model.vocab")?;
-        let corpus = Corpus::synthetic(&SyntheticConfig {
-            vocab: self.cfg.corpus_vocab,
-            sentences: self.cfg.corpus_sentences,
-            seed: self.cfg.seed ^ 0xc0a9,
-            ..SyntheticConfig::default()
-        });
-        let tok = Tokenizer::from_corpus(&corpus);
+        let tok = &self.data.tokenizer;
         anyhow::ensure!(
             tok.vocab_size() <= vocab,
             "tokenizer vocab {} exceeds model vocab {vocab}",
             tok.vocab_size()
         );
-        let (train, valid) = corpus.split(10);
+        let (train, valid) = self.data.corpus.split(10);
         Ok((
-            Batcher::new(&tok, &train, seq, rows),
-            Batcher::new(&tok, &valid, seq, rows),
+            Batcher::new(tok, &train, seq, rows),
+            Batcher::new(tok, &valid, seq, rows),
         ))
+    }
+
+    /// Emit a progress event (no-op without a sink).
+    fn progress(&self, step: u64, loss: f64) {
+        if let Some(s) = &self.sink {
+            s.progress(step, self.cfg.steps, loss);
+        }
     }
 
     /// Run the configured training job.
@@ -114,7 +159,23 @@ impl Trainer {
         let mut loader =
             Loader::spawn(train_batcher, self.cfg.seed, self.cfg.steps as usize, 4);
 
-        let mut state = self.engine.init_state(self.cfg.seed)?;
+        let mut state = if self.cfg.resume {
+            let path = run_dir.join("latest.ck");
+            let st = checkpoint::load(&self.engine, &path)
+                .with_context(|| format!("--resume: load checkpoint {path:?}"))?;
+            // Fast-forward the deterministic batch stream so the resumed
+            // run consumes exactly the batches the uninterrupted run would
+            // have seen from this step on.
+            for _ in 0..st.step {
+                if loader.next().is_none() {
+                    break;
+                }
+            }
+            crate::info!("[{}] resumed from {path:?} at step {}", self.cfg.name, st.step);
+            st
+        } else {
+            self.engine.init_state(self.cfg.seed)?
+        };
 
         // Trace tracker mirrors the artifact's planned tensor indices.
         let mut tracker = if self.cfg.track_traces {
@@ -163,6 +224,7 @@ impl Trainer {
                 };
                 log.write(&rec.to_json())?;
                 loss_history.push((state.step, last_loss));
+                self.progress(state.step, last_loss);
                 crate::debugln!(
                     "step {} loss {:.4} lr {:.2e} {:.0} tok/s",
                     state.step,
@@ -306,12 +368,31 @@ impl Trainer {
             opt.peak_state_scalars()
         );
 
+        let mut step: u64 = 0;
+        if self.cfg.resume {
+            let path = run_dir.join("latest.hck");
+            let (saved_params, export, saved_step) = checkpoint::load_host(&groups, &path)
+                .with_context(|| format!("--resume: load host checkpoint {path:?}"))?;
+            opt.import_state(&export)
+                .with_context(|| format!("--resume: restore optimizer state from {path:?}"))?;
+            params = saved_params;
+            step = saved_step;
+            // Align the deterministic batch stream with the uninterrupted
+            // run (`rust/tests/host_checkpoint.rs` pins the arithmetic;
+            // this pins the data).
+            for _ in 0..step {
+                if loader.next().is_none() {
+                    break;
+                }
+            }
+            crate::info!("[{}] resumed from {path:?} at step {step}", self.cfg.name);
+        }
+
         let wall = Timer::start();
         let mut step_ema = EmaRate::new(0.1);
         let mut loss_history = Vec::new();
         let mut eval_history = Vec::new();
         let mut last_loss = f64::NAN;
-        let mut step: u64 = 0;
 
         while step < self.cfg.steps {
             if self.cfg.max_seconds > 0.0 && wall.elapsed_secs() >= self.cfg.max_seconds {
@@ -350,6 +431,7 @@ impl Trainer {
                 };
                 log.write(&rec.to_json())?;
                 loss_history.push((step, last_loss));
+                self.progress(step, last_loss);
                 crate::debugln!(
                     "step {step} loss {last_loss:.4} lr {lr:.2e} {tps:.0} tok/s [host/{shards}sh]"
                 );

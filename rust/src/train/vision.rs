@@ -4,9 +4,11 @@
 //! so it gets its own compact loop.
 
 use crate::runtime::{Client, DataArg, Engine, TrainState};
+use crate::session::{EventSink, Session, VisionData};
 use crate::util::rng::Pcg64;
 use crate::vision::{VisionConfig, VisionDataset, CHANNELS, IMG};
 use anyhow::{Context, Result};
+use std::sync::Arc;
 
 pub struct VisionRun {
     pub optimizer: String,
@@ -20,11 +22,11 @@ pub struct VisionRun {
 }
 
 pub struct VisionTrainer {
-    engine: Engine,
-    eval: Engine,
-    train_set: VisionDataset,
-    test_set: VisionDataset,
+    engine: Arc<Engine>,
+    eval: Arc<Engine>,
+    data: Arc<VisionData>,
     batch: usize,
+    sink: Option<EventSink>,
 }
 
 impl VisionTrainer {
@@ -34,11 +36,42 @@ impl VisionTrainer {
         optimizer: &str,
         data_cfg: &VisionConfig,
     ) -> Result<VisionTrainer> {
-        let engine = Engine::load(client, artifact_dir, &format!("cnn_{optimizer}"))?;
-        let eval = Engine::load(client, artifact_dir, "cnn_eval")?;
+        let engine = Arc::new(Engine::load(client, artifact_dir, &format!("cnn_{optimizer}"))?);
+        let eval = Arc::new(Engine::load(client, artifact_dir, "cnn_eval")?);
+        let (train, test) = VisionDataset::generate(data_cfg);
+        Self::from_parts(engine, eval, Arc::new(VisionData { train, test }), None)
+    }
+
+    /// Construct against shared session resources: the `cnn_*` engines are
+    /// compiled and the dataset synthesized at most once per session;
+    /// cache lookups are reported through `sink`.
+    pub fn with_session(
+        session: &Session,
+        artifact_dir: &std::path::Path,
+        optimizer: &str,
+        data_cfg: &VisionConfig,
+        sink: Option<EventSink>,
+    ) -> Result<VisionTrainer> {
+        let train_name = format!("cnn_{optimizer}");
+        let (engine, hit) = session.engine(artifact_dir, &train_name)?;
+        let (eval, eval_hit) = session.engine(artifact_dir, "cnn_eval")?;
+        let (data, data_hit) = session.vision_data(data_cfg);
+        if let Some(s) = &sink {
+            s.artifact_cache(&train_name, hit);
+            s.artifact_cache("cnn_eval", eval_hit);
+            s.corpus_cache(&Session::vision_key(data_cfg), data_hit);
+        }
+        Self::from_parts(engine, eval, data, sink)
+    }
+
+    fn from_parts(
+        engine: Arc<Engine>,
+        eval: Arc<Engine>,
+        data: Arc<VisionData>,
+        sink: Option<EventSink>,
+    ) -> Result<VisionTrainer> {
         let batch = engine.manifest.data_inputs[0].shape[0];
-        let (train_set, test_set) = VisionDataset::generate(data_cfg);
-        Ok(VisionTrainer { engine, eval, train_set, test_set, batch })
+        Ok(VisionTrainer { engine, eval, data, batch, sink })
     }
 
     fn gather_batch(&self, set: &VisionDataset, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
@@ -58,8 +91,8 @@ impl VisionTrainer {
     pub fn run(&mut self, steps: u64, lr: f32, eval_every: u64, seed: u64) -> Result<VisionRun> {
         let mut rng = Pcg64::seeded(seed);
         let mut state = self.engine.init_state(seed)?;
-        let mut order: Vec<usize> = (0..self.train_set.n).collect();
-        let mut cursor = self.train_set.n; // force initial shuffle
+        let mut order: Vec<usize> = (0..self.data.train.n).collect();
+        let mut cursor = self.data.train.n; // force initial shuffle
         let mut best_err = f64::INFINITY;
         let mut last_loss = f64::NAN;
         let mut loss_history = Vec::new();
@@ -71,7 +104,7 @@ impl VisionTrainer {
             }
             let idx = &order[cursor..cursor + self.batch];
             cursor += self.batch;
-            let (images, labels) = self.gather_batch(&self.train_set, idx);
+            let (images, labels) = self.gather_batch(&self.data.train, idx);
             let out = self.engine.train_step(
                 &mut state,
                 &[DataArg::F32(&images), DataArg::I32(&labels)],
@@ -81,6 +114,9 @@ impl VisionTrainer {
             anyhow::ensure!(last_loss.is_finite(), "vision loss diverged at {}", state.step);
             if state.step % 10 == 0 {
                 loss_history.push((state.step, last_loss));
+                if let Some(sink) = &self.sink {
+                    sink.progress(state.step, steps, last_loss);
+                }
             }
             if eval_every > 0 && state.step % eval_every == 0 {
                 best_err = best_err.min(self.test_error(&state)?);
@@ -120,9 +156,9 @@ impl VisionTrainer {
         let mut wrong = 0.0f64;
         let mut total = 0.0f64;
         let mut i = 0;
-        while i + self.batch <= self.test_set.n {
+        while i + self.batch <= self.data.test.n {
             let idx: Vec<usize> = (i..i + self.batch).collect();
-            let (images, labels) = self.gather_batch(&self.test_set, &idx);
+            let (images, labels) = self.gather_batch(&self.data.test, &idx);
             let out = self
                 .eval
                 .eval_step(state, &[DataArg::F32(&images), DataArg::I32(&labels)])

@@ -126,6 +126,25 @@ impl Args {
     }
 }
 
+/// Parse a comma-separated `--set key=value,key2=value2` override list.
+///
+/// Every token must contain `=` with a non-empty key; a malformed token is
+/// a hard error naming the offender (it used to be silently dropped, which
+/// made a typoed override indistinguishable from an applied one).
+pub fn parse_set_overrides(raw: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for tok in raw.split(',') {
+        let tok = tok.trim();
+        match tok.split_once('=') {
+            Some((k, v)) if !k.trim().is_empty() => {
+                out.push((k.trim().to_string(), v.trim().to_string()));
+            }
+            _ => bail!("--set: malformed override '{tok}' (expected key=value)"),
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +188,27 @@ mod tests {
         assert!(Args::parse(&spec(), &sv(&["--bogus", "1"])).is_err());
         assert!(Args::parse(&spec(), &sv(&["a", "b"])).is_err());
         assert!(Args::parse(&spec(), &sv(&["--steps"])).is_err());
+    }
+
+    #[test]
+    fn set_overrides_parse_or_fail_loudly() {
+        assert_eq!(
+            parse_set_overrides("run.steps=5, run.name = x").unwrap(),
+            vec![
+                ("run.steps".to_string(), "5".to_string()),
+                ("run.name".to_string(), "x".to_string())
+            ]
+        );
+        // values may themselves contain '='
+        assert_eq!(
+            parse_set_overrides("optim.schedule=constant:0.1").unwrap(),
+            vec![("optim.schedule".to_string(), "constant:0.1".to_string())]
+        );
+        // no '=' at all, empty key, and stray trailing comma are all errors
+        assert!(parse_set_overrides("run.steps").is_err());
+        assert!(parse_set_overrides("=5").is_err());
+        assert!(parse_set_overrides("a=1,,b=2").is_err());
+        assert!(parse_set_overrides("a=1,b").is_err());
     }
 
     #[test]

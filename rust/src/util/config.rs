@@ -133,6 +133,13 @@ impl Config {
         Ok(())
     }
 
+    /// Insert an already-typed value (programmatic config construction,
+    /// e.g. remapping `job.<name>.*` keys onto `run.*` for the batch
+    /// runner).
+    pub fn insert(&mut self, key: &str, value: Value) {
+        self.values.insert(key.to_string(), value);
+    }
+
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(|s| s.as_str())
     }

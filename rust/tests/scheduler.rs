@@ -1,0 +1,309 @@
+//! Session-scheduler contract tests, all artifact-free (convex and
+//! shard-bench workloads only):
+//!
+//! * **Determinism** — the same `JobSpec` batch run at `--jobs 1` and
+//!   `--jobs 4` produces bitwise-identical per-run metrics and final
+//!   weights ("checkpoints"): seeds are per-job and jobs share no mutable
+//!   state, so worker count may only change wall-clock and event
+//!   interleaving.
+//! * **Admission control** — under a `--mem-budget` that fits one job at a
+//!   time, an over-budget job queues (`Deferred`) instead of running, and
+//!   only starts after a running job releases its reservation; a job that
+//!   could never fit fails at submission instead of deadlocking.
+//! * **Resource caching** — the session synthesizes each dataset at most
+//!   once per batch, visible through the cache-hit counters in the event
+//!   stream (the acceptance counters for `experiment quantized-state`).
+
+use extensor::convex::ConvexConfig;
+use extensor::session::{
+    run_batch, ConvexOpt, ConvexSpec, JobEvent, JobOutcome, JobSpec, SchedulerOptions, Session,
+};
+use extensor::tensoring::{OptimizerKind, StateBackend};
+
+fn tiny_data(seed: u64) -> ConvexConfig {
+    ConvexConfig { n: 400, d: 32, k: 4, cond: 1e3, householder: 2, seed }
+}
+
+/// A mixed batch: several optimizers x backends over a shared dataset,
+/// plus one job with its own dataset/seed.
+fn mixed_batch() -> Vec<JobSpec> {
+    let shared = tiny_data(7);
+    let mut specs = Vec::new();
+    for (i, (kind, backend)) in [
+        (OptimizerKind::AdaGrad, StateBackend::DenseF32),
+        (OptimizerKind::Adam, StateBackend::q8()),
+        (OptimizerKind::Et(2), StateBackend::DenseF32),
+        (OptimizerKind::Et(3), StateBackend::q8()),
+        (OptimizerKind::EtInf, StateBackend::DenseF32),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        specs.push(JobSpec::convex(
+            format!("job{i}"),
+            ConvexSpec {
+                data: shared.clone(),
+                iters: 40,
+                lr: if kind == OptimizerKind::EtInf { 0.5 } else { 0.05 },
+                backend,
+                opt: ConvexOpt::Kind(kind),
+                measure_after: true,
+                curve_every: 10,
+            },
+        ));
+    }
+    specs.push(JobSpec::convex(
+        "job_own_data",
+        ConvexSpec {
+            data: tiny_data(99),
+            iters: 40,
+            lr: 0.05,
+            opt: ConvexOpt::CustomEt { dims: vec![4, 4, 8] },
+            ..ConvexSpec::default()
+        },
+    ));
+    specs
+}
+
+fn outcomes(specs: &[JobSpec], workers: usize) -> Vec<(String, u64, u64, Vec<u32>)> {
+    // Fresh session per run: caches must not leak between the compared
+    // executions.
+    let session = Session::new();
+    let report = run_batch(
+        &session,
+        specs,
+        &SchedulerOptions { workers, mem_budget: None, log_path: None },
+    )
+    .unwrap();
+    report
+        .results
+        .iter()
+        .map(|r| {
+            let out = r.outcome.as_ref().expect("job failed");
+            let c = match out {
+                JobOutcome::Convex(c) => c,
+                _ => panic!("expected convex outcome"),
+            };
+            (
+                r.name.clone(),
+                c.final_loss.to_bits(),
+                c.accuracy.to_bits(),
+                c.w.iter().map(|x| x.to_bits()).collect(),
+            )
+        })
+        .collect()
+}
+
+/// The determinism satellite: jobs=1 vs jobs=4, bitwise.
+#[test]
+fn batch_results_identical_at_1_and_4_workers() {
+    let specs = mixed_batch();
+    let serial = outcomes(&specs, 1);
+    let parallel = outcomes(&specs, 4);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.0, b.0, "submission order changed");
+        assert_eq!(a.1, b.1, "{}: final loss differs bitwise", a.0);
+        assert_eq!(a.2, b.2, "{}: accuracy differs bitwise", a.0);
+        assert_eq!(a.3, b.3, "{}: final weights (checkpoint) differ bitwise", a.0);
+    }
+}
+
+/// Shard-bench memory columns are also worker-count independent (timing
+/// columns are not, and are not compared).
+#[test]
+fn shard_bench_memory_columns_deterministic() {
+    use extensor::session::ShardBenchSpec;
+    let spec = |shards: usize| {
+        JobSpec::shard_bench(
+            format!("sb{shards}"),
+            ShardBenchSpec {
+                kind: OptimizerKind::Et(2),
+                shards,
+                iters: 2,
+                layers: 1,
+                vocab: 64,
+                d_model: 16,
+                d_ff: 32,
+                seed: 3,
+            },
+        )
+    };
+    let specs = vec![spec(1), spec(2)];
+    let run = |workers: usize| {
+        let session = Session::new();
+        run_batch(
+            &session,
+            &specs,
+            &SchedulerOptions { workers, mem_budget: None, log_path: None },
+        )
+        .unwrap()
+        .into_outcomes()
+        .unwrap()
+        .into_iter()
+        .map(|o| match o {
+            JobOutcome::ShardBench(s) => {
+                (s.shards, s.peak_state_bytes_per_shard, s.total_state_scalars)
+            }
+            _ => panic!("expected shard-bench outcome"),
+        })
+        .collect::<Vec<_>>()
+    };
+    assert_eq!(run(1), run(2));
+}
+
+/// The session synthesizes each distinct dataset exactly once per batch;
+/// every other lookup is a cache hit (the acceptance counters).
+#[test]
+fn datasets_synthesized_at_most_once_per_batch() {
+    let specs = mixed_batch(); // 5 jobs share one dataset + 1 own dataset
+    let session = Session::new();
+    let report = run_batch(
+        &session,
+        &specs,
+        &SchedulerOptions { workers: 4, mem_budget: None, log_path: None },
+    )
+    .unwrap();
+    let counts = report.cache_counts();
+    assert_eq!(counts.corpus_misses, 2, "two distinct datasets -> two syntheses");
+    assert_eq!(counts.corpus_hits, 4, "the other four lookups must hit the cache");
+    assert_eq!(session.stats().corpus_misses, 2);
+}
+
+/// The admission-control satellite, end to end: with a budget that fits
+/// one job at a time, the second job defers and runs only after the first
+/// releases.
+#[test]
+fn over_budget_job_queues_instead_of_running() {
+    // Long enough per job (~hundreds of ms) that the pool provably
+    // overlaps the first job's execution with the second job's admission
+    // attempt.
+    let data = ConvexConfig { n: 2000, ..tiny_data(5) };
+    let specs: Vec<JobSpec> = (0..2)
+        .map(|i| {
+            JobSpec::convex(
+                format!("budget{i}"),
+                ConvexSpec {
+                    data: data.clone(),
+                    iters: 300,
+                    opt: ConvexOpt::Kind(OptimizerKind::AdaGrad),
+                    ..ConvexSpec::default()
+                },
+            )
+        })
+        .collect();
+    let cost = specs[0].cost_bytes().unwrap();
+    // Budget fits one job, not two.
+    let budget = cost + cost / 2;
+    let session = Session::new();
+    let report = run_batch(
+        &session,
+        &specs,
+        &SchedulerOptions { workers: 4, mem_budget: Some(budget), log_path: None },
+    )
+    .unwrap();
+    assert!(report.failed().is_empty(), "both jobs must eventually run");
+
+    // Exactly one job was deferred, and no two jobs ever ran concurrently:
+    // in the event order, the second admission comes after a finish.
+    let seq: Vec<&JobEvent> = report.events.iter().map(|e| &e.event).collect();
+    let deferred = seq.iter().filter(|e| matches!(e, JobEvent::Deferred { .. })).count();
+    assert_eq!(deferred, 1, "the over-budget job must defer exactly once");
+    let mut running = 0usize;
+    for e in &seq {
+        match e {
+            JobEvent::Admitted { in_use_bytes, .. } => {
+                running += 1;
+                assert!(running <= 1, "two jobs admitted concurrently under the budget");
+                assert!(*in_use_bytes <= budget, "admission exceeded the budget");
+            }
+            JobEvent::Finished { .. } | JobEvent::Failed { .. } => {
+                running = running.saturating_sub(1);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// A job that can never fit the total budget fails at submission with a
+/// clear error (instead of deadlocking the queue); the rest of the batch
+/// still runs.
+#[test]
+fn impossible_job_fails_cleanly() {
+    let specs = vec![
+        JobSpec::convex(
+            "small",
+            ConvexSpec {
+                data: tiny_data(1),
+                iters: 10,
+                opt: ConvexOpt::Kind(OptimizerKind::AdaGrad),
+                ..ConvexSpec::default()
+            },
+        ),
+        JobSpec::convex(
+            "huge",
+            ConvexSpec {
+                data: ConvexConfig { n: 100_000, d: 512, ..tiny_data(2) },
+                iters: 10,
+                opt: ConvexOpt::Kind(OptimizerKind::AdaGrad),
+                ..ConvexSpec::default()
+            },
+        ),
+    ];
+    let budget = specs[0].cost_bytes().unwrap() + 1024;
+    let session = Session::new();
+    let report = run_batch(
+        &session,
+        &specs,
+        &SchedulerOptions { workers: 2, mem_budget: Some(budget), log_path: None },
+    )
+    .unwrap();
+    assert!(report.outcome("small").is_ok());
+    let err = match report.outcome("huge") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("the impossible job must fail"),
+    };
+    assert!(err.contains("mem-budget"), "unexpected error: {err}");
+}
+
+/// Duplicate job names are rejected up front.
+#[test]
+fn duplicate_names_rejected() {
+    let spec = JobSpec::convex(
+        "dup",
+        ConvexSpec { data: tiny_data(1), iters: 5, ..ConvexSpec::default() },
+    );
+    let session = Session::new();
+    let err = run_batch(
+        &session,
+        &[spec.clone(), spec],
+        &SchedulerOptions::default(),
+    );
+    assert!(err.is_err());
+}
+
+/// The schedule JSONL log is written and parseable.
+#[test]
+fn schedule_log_is_valid_jsonl() {
+    let dir = std::env::temp_dir().join(format!("et-sched-{}", std::process::id()));
+    let log = dir.join("schedule.jsonl");
+    let specs = vec![JobSpec::convex(
+        "logged",
+        ConvexSpec { data: tiny_data(3), iters: 10, ..ConvexSpec::default() },
+    )];
+    let session = Session::new();
+    run_batch(
+        &session,
+        &specs,
+        &SchedulerOptions { workers: 1, mem_budget: None, log_path: Some(log.clone()) },
+    )
+    .unwrap();
+    let records = extensor::util::logging::read_jsonl(&log).unwrap();
+    assert!(!records.is_empty());
+    let kinds: Vec<&str> =
+        records.iter().filter_map(|r| r.get("event").and_then(|v| v.as_str())).collect();
+    assert!(kinds.contains(&"queued"));
+    assert!(kinds.contains(&"admitted"));
+    assert!(kinds.contains(&"finished"));
+    std::fs::remove_dir_all(&dir).ok();
+}
