@@ -3,17 +3,30 @@
 //! equivalent of the paper's "optimizer overhead" concern — ET's update
 //! must stay bandwidth-bound and within a small factor of SGD.
 //!
-//! Two variants per kind measure the dispatch overhead the batched API
-//! removes:
+//! Three sections:
 //!
 //! * `loop/...` — the legacy shape: one `Box<dyn Optimizer>` virtual call
-//!   per *group* per step;
-//! * `step_all/...` — one virtual call per *step*; the per-group loop runs
-//!   statically dispatched inside the update rule.
+//!   per *group* per step (dense backend);
+//! * `step_all/<kind>/<backend>` — one virtual call per *step*, for both
+//!   the dense `f32` and the block-quantized `q8` state backend (the q8
+//!   rows measure the decode/encode round trip through the reusable
+//!   scratch);
+//! * `apply/p<p>/<mode>/...` — the ET apply kernel in isolation, reference
+//!   per-element walker vs the fused kernel (`tensoring::kernels`), per
+//!   tensor order and eps mode. The PerFactor rows are the separable
+//!   root-factor win (O(sum d_i) transcendentals instead of O(numel));
+//!   the acceptance gate is >= 2x at p >= 2.
+//!
+//! Besides the human-readable report, the run emits a machine-readable
+//! `BENCH_optim.json` (override with `BENCH_OPTIM_OUT`) — ns/element per
+//! optimizer kind x tensor order x state backend plus steps/sec — which CI
+//! uploads as an artifact so future PRs have a perf trajectory to compare
+//! against (see EXPERIMENTS.md §Perf).
 
 use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
-use extensor::tensoring::OptimizerKind;
+use extensor::tensoring::{kernels, plan, EpsMode, Level, OptimizerKind, StateBackend};
 use extensor::testing::bench::{bench, header};
+use extensor::util::json::Json;
 use extensor::util::rng::Pcg64;
 
 fn main() {
@@ -37,9 +50,10 @@ fn main() {
         })
         .collect();
 
+    let mut records: Vec<Json> = Vec::new();
+
     header(&format!("optim_hot — one full step over {total} parameters"));
-    let hyper = Hyper::default();
-    for kind in [
+    let kinds = [
         OptimizerKind::Sgd,
         OptimizerKind::AdaGrad,
         OptimizerKind::Adam,
@@ -48,8 +62,11 @@ fn main() {
         OptimizerKind::Et(2),
         OptimizerKind::Et(3),
         OptimizerKind::EtInf,
-    ] {
-        // Per-group dynamic-dispatch loop (the pre-refactor driver shape).
+    ];
+    for kind in kinds {
+        // Per-group dynamic-dispatch loop (the pre-refactor driver shape),
+        // dense backend only — it exists to show the dispatch overhead.
+        let hyper = Hyper::default();
         let mut opt = optim::build(kind, &groups, &hyper);
         let mut params: Vec<Vec<f32>> =
             groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
@@ -60,19 +77,126 @@ fn main() {
             }
         });
         r.report_with_rate(total as f64, "elem/s");
+        records.push(step_record("loop", kind, &groups, StateBackend::DenseF32, &r, total));
 
-        // Batched entry point: one dynamic dispatch for the whole step.
-        let mut opt = optim::build(kind, &groups, &hyper);
-        let mut params: Vec<Vec<f32>> =
-            groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
-        let r = bench(&format!("step_all/{}", kind.name()), 3, 30, || {
-            opt.next_step();
-            opt.step_all(&mut params, &grads, 1e-4).unwrap();
-        });
-        r.report_with_rate(total as f64, "elem/s");
+        // Batched entry point: one dynamic dispatch for the whole step —
+        // under both state backends.
+        for backend in [StateBackend::DenseF32, StateBackend::q8()] {
+            let hyper = Hyper { backend, ..Hyper::default() };
+            let mut opt = optim::build(kind, &groups, &hyper);
+            let mut params: Vec<Vec<f32>> =
+                groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+            let r = bench(
+                &format!("step_all/{}/{}", kind.name(), backend.name()),
+                3,
+                30,
+                || {
+                    opt.next_step();
+                    opt.step_all(&mut params, &grads, 1e-4).unwrap();
+                },
+            );
+            r.report_with_rate(total as f64, "elem/s");
+            records.push(step_record("step_all", kind, &groups, backend, &r, total));
+        }
+    }
+
+    header("ET apply kernel — reference walker vs fused kernel, per (p, eps mode)");
+    let kernel_dims: Vec<Vec<usize>> = vec![
+        vec![512, 512],
+        vec![64, 64, 64],
+        vec![32, 16, 32, 16],
+        vec![4, 4, 4, 4, 4, 4, 4, 4],
+    ];
+    for dims in &kernel_dims {
+        let p = dims.len();
+        let n: usize = dims.iter().product();
+        let mut g = vec![0.0f32; n];
+        rng.fill_normal(&mut g, 1.0);
+        let mut s: Vec<Vec<f32>> = dims.iter().map(|&d| vec![0.0f32; d]).collect();
+        let mut scratch = kernels::Scratch::new();
+        for _ in 0..3 {
+            kernels::accumulate(dims, &mut s, None, &g, &mut scratch).unwrap();
+        }
+        for mode in [EpsMode::InsideProduct, EpsMode::PerFactor] {
+            let mode_name = match mode {
+                EpsMode::InsideProduct => "inside",
+                EpsMode::PerFactor => "perfactor",
+            };
+            let mut x = vec![0.0f32; n];
+            let r_ref = bench(&format!("apply/p{p}/{mode_name}/reference"), 3, 50, || {
+                kernels::reference::apply(dims, &s, 1e-8, mode, None, 1, &mut x, &g, 1e-6);
+            });
+            r_ref.report_with_rate(n as f64, "elem/s");
+            let mut x = vec![0.0f32; n];
+            let r_ker = bench(&format!("apply/p{p}/{mode_name}/kernel"), 3, 50, || {
+                kernels::apply(dims, &s, 1e-8, mode, None, 1, &mut x, &g, 1e-6, &mut scratch);
+            });
+            r_ker.report_with_rate(n as f64, "elem/s");
+            let speedup = r_ref.median_ns / r_ker.median_ns.max(1.0);
+            println!("{:<40} {speedup:>11.2}x", format!("  -> speedup p={p} {mode_name}"));
+            for (variant, r) in [("reference", &r_ref), ("kernel", &r_ker)] {
+                records.push(Json::obj(vec![
+                    ("section", Json::str("kernel_apply")),
+                    ("name", Json::str(format!("apply/p{p}/{mode_name}/{variant}"))),
+                    ("p", Json::num(p as f64)),
+                    ("eps_mode", Json::str(mode_name)),
+                    ("variant", Json::str(variant)),
+                    ("numel", Json::num(n as f64)),
+                    ("ns_per_element", Json::num(r.median_ns / n as f64)),
+                    ("elements_per_sec", Json::num(r.throughput(n as f64))),
+                    ("speedup_vs_reference", Json::num(r_ref.median_ns / r.median_ns.max(1.0))),
+                ]));
+            }
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("schema", Json::str("bench_optim/v1")),
+        ("total_params", Json::num(total as f64)),
+        ("records", Json::Arr(records)),
+    ]);
+    let path =
+        std::env::var("BENCH_OPTIM_OUT").unwrap_or_else(|_| "BENCH_optim.json".to_string());
+    match std::fs::write(&path, out.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
     println!(
-        "\n(ET overhead vs SGD is the paper's 'negligible memory AND compute' claim;\n \
-         loop-vs-step_all is the per-group dispatch overhead the batched API removes)"
+        "(ET overhead vs SGD is the paper's 'negligible memory AND compute' claim;\n \
+         loop-vs-step_all is the per-group dispatch overhead the batched API removes;\n \
+         apply/*/kernel-vs-reference is the fused-kernel win — see EXPERIMENTS.md §Perf)"
     );
+}
+
+/// One machine-readable record for a full-step benchmark.
+fn step_record(
+    section: &str,
+    kind: OptimizerKind,
+    groups: &[GroupSpec],
+    backend: StateBackend,
+    r: &extensor::testing::bench::BenchResult,
+    total: usize,
+) -> Json {
+    // The "tensor order" axis: the largest planned index order across
+    // groups for ET kinds (deeper levels split into higher orders), 1
+    // otherwise.
+    let order = match kind {
+        OptimizerKind::Et(level) => groups
+            .iter()
+            .map(|g| plan(&g.shape, Level::Et(level)).len())
+            .max()
+            .unwrap_or(1),
+        _ => 1,
+    };
+    Json::obj(vec![
+        ("section", Json::str("step")),
+        ("name", Json::str(format!("{section}/{}/{}", kind.name(), backend.name()))),
+        ("variant", Json::str(section)),
+        ("kind", Json::str(kind.name())),
+        ("backend", Json::str(backend.name())),
+        ("max_index_order", Json::num(order as f64)),
+        ("ns_per_element", Json::num(r.median_ns / total as f64)),
+        ("elements_per_sec", Json::num(r.throughput(total as f64))),
+        ("steps_per_sec", Json::num(1e9 / r.median_ns.max(1.0))),
+    ])
 }

@@ -27,6 +27,17 @@
 //! dispatch; `rust/tests/golden_parity.rs` pins the dense backend to the
 //! pre-refactor arithmetic bitwise.
 //!
+//! The ET inner loops live in a fused **kernel layer**
+//! (`tensoring::kernels`): chunked slice-sum accumulate, hoisted-prefix
+//! apply, and separable per-mode root factors for the `PerFactor` eps mode
+//! (O(Σ dᵢ) transcendentals per step instead of O(numel)), all running on
+//! a per-state scratch arena (`optim::StepScratch`) so steady-state
+//! `step_all` performs zero heap allocations under both dense and
+//! quantized backends (`rust/tests/alloc_regression.rs`). Accumulate and
+//! the default `InsideProduct` apply are bitwise-identical to the seed
+//! walkers; the separable path carries a property-tested ≤1e-5 relative
+//! contract (see the kernel module docs and EXPERIMENTS.md §Perf).
+//!
 //! The suite also runs *sharded*: `shard` bin-packs parameter groups
 //! across persistent worker threads using the footprint accounting, each
 //! worker owning its groups' complete optimizer state

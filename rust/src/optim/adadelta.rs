@@ -18,10 +18,10 @@ impl UpdateRule for AdaDeltaRule {
     }
 
     fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let gs = st.group_mut(gi);
+        let (gs, scratch) = st.group_and_scratch(gi);
         anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
         let (rho, eps) = (self.rho, self.eps);
-        gs.with_bufs(|bufs| {
+        gs.with_bufs_in(&mut scratch.decode, |bufs| {
             let (eg2, ex2) = bufs.split_at_mut(1);
             let (eg2, ex2) = (&mut *eg2[0], &mut *ex2[0]);
             for i in 0..eg2.len() {

@@ -38,13 +38,13 @@ impl UpdateRule for AdafactorRule {
     }
 
     fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let gs = st.group_mut(gi);
+        let (gs, scratch) = st.group_and_scratch(gi);
         let factored = gs.n_bufs() == 2;
         let numel = gs.numel;
         let (beta2, eps) = (self.beta2, self.eps);
         if !factored {
             anyhow::ensure!(x.len() == numel && g.len() == numel);
-            gs.with_bufs(|bufs| {
+            gs.with_bufs_in(&mut scratch.decode, |bufs| {
                 let v = &mut *bufs[0];
                 for i in 0..v.len() {
                     let sq = g[i] * g[i];
@@ -59,7 +59,7 @@ impl UpdateRule for AdafactorRule {
         }
         let (rows, cols) = (gs.buf(0).len(), gs.buf(1).len());
         anyhow::ensure!(x.len() == rows * cols && g.len() == rows * cols);
-        gs.with_bufs(|bufs| {
+        gs.with_bufs_in(&mut scratch.decode, |bufs| {
             let (r, c) = bufs.split_at_mut(1);
             let (r, c) = (&mut *r[0], &mut *c[0]);
             // row/col mean squared gradients

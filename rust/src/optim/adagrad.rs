@@ -16,10 +16,10 @@ impl UpdateRule for AdaGradRule {
     }
 
     fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let gs = st.group_mut(gi);
+        let (gs, scratch) = st.group_and_scratch(gi);
         anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
         let eps = self.eps;
-        gs.with_bufs(|bufs| {
+        gs.with_bufs_in(&mut scratch.decode, |bufs| {
             let s = &mut *bufs[0];
             for i in 0..s.len() {
                 s[i] += g[i] * g[i];

@@ -24,12 +24,12 @@ impl UpdateRule for AdamRule {
 
     fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
         let t = st.step.max(1) as i32;
-        let gs = st.group_mut(gi);
+        let (gs, scratch) = st.group_and_scratch(gi);
         anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
         let (beta1, beta2, eps) = (self.beta1, self.beta2, self.eps);
         let bc1 = 1.0 - beta1.powi(t);
         let bc2 = 1.0 - beta2.powi(t);
-        gs.with_bufs(|bufs| {
+        gs.with_bufs_in(&mut scratch.decode, |bufs| {
             let (m, v) = bufs.split_at_mut(1);
             let (m, v) = (&mut *m[0], &mut *v[0]);
             for i in 0..m.len() {

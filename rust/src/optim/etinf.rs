@@ -6,7 +6,9 @@
 //!
 //! State: one *wide* (`f64`, never quantized) scalar per group — the whole
 //! group's adaptivity flows through it, so it stays in full precision
-//! under every [`crate::tensoring::StateBackend`].
+//! under every [`crate::tensoring::StateBackend`]. The step touches no
+//! state buffers at all, so it is allocation-free under both backends by
+//! construction (pinned alongside ET in `rust/tests/alloc_regression.rs`).
 
 use super::state::{OptState, UpdateRule};
 use crate::tensoring::OptimizerKind;

@@ -2,18 +2,22 @@
 //! indices chosen by the factorization planner at the requested level (or
 //! supplied explicitly, as the synthetic §5.4 experiment does), with the
 //! mode accumulators living externally in an [`OptState`] (one `s{i}`
-//! buffer per mode). The slice-sum arithmetic itself is the shared
-//! borrowed-state core in [`crate::tensoring::accumulator`], so this rule
-//! is bitwise-identical to the legacy [`SliceAccumulators`] path by
-//! construction.
+//! buffer per mode). The slice-sum arithmetic is the fused kernel layer in
+//! [`crate::tensoring::kernels`] (bitwise-identical to the legacy
+//! [`SliceAccumulators`] path on this `InsideProduct` configuration —
+//! pinned by `rust/tests/golden_parity.rs`), driven directly rather than
+//! through the `with_bufs` closure so the steady state performs **zero
+//! heap allocations**: dense buffers are updated in place through their
+//! `f32` views, quantized buffers round-trip through the reusable decode
+//! scratch owned by the [`OptState`]
+//! (`rust/tests/alloc_regression.rs` pins both backends).
 //!
 //! [`SliceAccumulators`]: crate::tensoring::SliceAccumulators
 
-use super::state::{OptState, StateOptimizer, UpdateRule};
+use super::state::{OptState, StateOptimizer, StepScratch, UpdateRule};
 use super::GroupSpec;
 use crate::tensoring::{
-    accumulate_slices, apply_update_bias_corrected_slices, plan, EpsMode, Level, OptimizerKind,
-    StateBackend, TensorIndex,
+    kernels, plan, EpsMode, Level, OptimizerKind, StateBackend, TensorIndex,
 };
 use anyhow::{Context, Result};
 
@@ -94,7 +98,7 @@ impl UpdateRule for EtRule {
 
     fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
         let ix = &self.indices[gi];
-        let gs = st.group_mut(gi);
+        let (gs, scratch) = st.group_and_scratch(gi);
         anyhow::ensure!(x.len() == ix.numel() && g.len() == ix.numel());
         // Per-group accumulate count drives the (optional) bias correction,
         // exactly like `SliceAccumulators::steps` did.
@@ -102,9 +106,12 @@ impl UpdateRule for EtRule {
         let steps = gs.steps;
         let (eps, beta2) = (self.eps, self.beta2);
         let dims = ix.dims();
-        gs.with_bufs(|bufs| -> Result<()> {
-            accumulate_slices(dims, &mut *bufs, beta2, g)?;
-            apply_update_bias_corrected_slices(
+        let StepScratch { kernel, decode } = scratch;
+        if gs.all_dense() {
+            // In-place f32 views — no copies, no allocations.
+            let bufs = gs.bufs_mut();
+            kernels::accumulate(dims, &mut *bufs, beta2, g, kernel)?;
+            kernels::apply(
                 dims,
                 &*bufs,
                 eps,
@@ -114,9 +121,30 @@ impl UpdateRule for EtRule {
                 x,
                 g,
                 lr,
+                kernel,
             );
-            Ok(())
-        })
+        } else {
+            // Quantized: decode into the state-owned scratch (grown on
+            // warm-up, reused thereafter), update, re-encode.
+            gs.decode_bufs(decode);
+            let n_bufs = gs.n_bufs();
+            let views = &mut decode[..n_bufs];
+            kernels::accumulate(dims, &mut *views, beta2, g, kernel)?;
+            kernels::apply(
+                dims,
+                &*views,
+                eps,
+                EpsMode::InsideProduct,
+                beta2,
+                steps,
+                x,
+                g,
+                lr,
+                kernel,
+            );
+            gs.encode_bufs(&decode[..n_bufs]);
+        }
+        Ok(())
     }
 }
 

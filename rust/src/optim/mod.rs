@@ -51,7 +51,8 @@ pub mod state;
 
 pub use schedule::Schedule;
 pub use state::{
-    GroupExport, GroupState, OptState, Q8Buf, StateBuf, StateExport, StateOptimizer, UpdateRule,
+    GroupExport, GroupState, OptState, Q8Buf, StateBuf, StateExport, StateOptimizer, StepScratch,
+    UpdateRule,
 };
 
 use crate::tensoring::{OptimizerKind, StateBackend};

@@ -54,10 +54,10 @@ impl UpdateRule for SgdMomentumRule {
     }
 
     fn step(&self, st: &mut OptState, gi: usize, x: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
-        let gs = st.group_mut(gi);
+        let (gs, scratch) = st.group_and_scratch(gi);
         anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
         let mu = self.mu;
-        gs.with_bufs(|bufs| {
+        gs.with_bufs_in(&mut scratch.decode, |bufs| {
             let v = &mut *bufs[0];
             for i in 0..v.len() {
                 v[i] = mu * v[i] + g[i];

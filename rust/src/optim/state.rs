@@ -27,6 +27,7 @@
 //! (`rust/tests/golden_parity.rs`).
 
 use super::{GroupSpec, Optimizer};
+use crate::tensoring::kernels::Scratch as KernelScratch;
 use crate::tensoring::memory::{group_state_buffer_lens, group_wide_scalars};
 use crate::tensoring::{OptimizerKind, StateBackend};
 use anyhow::Result;
@@ -68,9 +69,19 @@ impl StateBuf {
 
     /// Decode to dense `f32` (exact for the dense backend).
     pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Decode into a reusable buffer (cleared first). Allocation-free once
+    /// `out`'s capacity has reached this buffer's length — the hot-path
+    /// form behind the per-step decode scratch in [`StepScratch`].
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        out.clear();
         match self {
-            StateBuf::Dense(v) => v.clone(),
-            StateBuf::Q8(q) => q.decode_vec(),
+            StateBuf::Dense(v) => out.extend_from_slice(v),
+            StateBuf::Q8(q) => q.decode_into(out),
         }
     }
 
@@ -94,6 +105,30 @@ impl StateBuf {
     }
 }
 
+// Zero-copy dense views for the allocation-free hot path
+// (`optim::extreme::EtRule` and the kernel layer's `AsRef`/`AsMut`
+// bounds). Only valid for the dense backend — callers gate on
+// [`GroupState::all_dense`] and route quantized buffers through the decode
+// scratch instead; a quantized buffer has no in-place `f32` view, so these
+// panic rather than silently decode.
+impl AsRef<[f32]> for StateBuf {
+    fn as_ref(&self) -> &[f32] {
+        match self {
+            StateBuf::Dense(v) => v,
+            StateBuf::Q8(_) => panic!("dense view of a quantized state buffer; decode it first"),
+        }
+    }
+}
+
+impl AsMut<[f32]> for StateBuf {
+    fn as_mut(&mut self) -> &mut [f32] {
+        match self {
+            StateBuf::Dense(v) => v,
+            StateBuf::Q8(_) => panic!("dense view of a quantized state buffer; decode it first"),
+        }
+    }
+}
+
 /// Affine 8-bit quantization: per block of `block` scalars, `x ≈ offset +
 /// scale * q` with `q ∈ [0, 255]`. All-equal blocks (including fresh zeros)
 /// round-trip exactly via `scale = 0`.
@@ -113,16 +148,19 @@ impl Q8Buf {
         Q8Buf { block, len, q: vec![0; len], scale: vec![0.0; blocks], offset: vec![0.0; blocks] }
     }
 
-    fn decode_vec(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.len];
-        for (bi, chunk) in out.chunks_mut(self.block).enumerate() {
+    /// Decode into a reusable buffer (cleared first); allocation-free once
+    /// `out` has capacity for `self.len` scalars. Decoded values are pushed
+    /// directly (no zero-fill pass — this runs per buffer per step on the
+    /// quantized hot path).
+    fn decode_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len);
+        for (bi, chunk) in self.q.chunks(self.block).enumerate() {
             let (s, o) = (self.scale[bi], self.offset[bi]);
-            let qs = &self.q[bi * self.block..bi * self.block + chunk.len()];
-            for (x, &q) in chunk.iter_mut().zip(qs) {
-                *x = o + s * q as f32;
+            for &q in chunk {
+                out.push(o + s * q as f32);
             }
         }
-        out
     }
 
     fn encode(&mut self, src: &[f32]) {
@@ -175,7 +213,8 @@ pub struct GroupState {
     pub steps: u64,
     /// High-precision scalar state, never quantized (ET∞'s accumulator).
     pub wide: Vec<f64>,
-    bufs: Vec<(String, StateBuf)>,
+    buf_names: Vec<String>,
+    bufs: Vec<StateBuf>,
 }
 
 impl GroupState {
@@ -184,50 +223,114 @@ impl GroupState {
     }
 
     pub fn buf(&self, bi: usize) -> &StateBuf {
-        &self.bufs[bi].1
+        &self.bufs[bi]
     }
 
     pub fn buf_name(&self, bi: usize) -> &str {
-        &self.bufs[bi].0
+        &self.buf_names[bi]
+    }
+
+    /// Whether every buffer is dense `f32` — the gate for the zero-copy,
+    /// zero-allocation view path (the crate-internal `bufs_mut` accessor
+    /// and the `AsRef`/`AsMut` impls on [`StateBuf`]).
+    pub fn all_dense(&self) -> bool {
+        self.bufs.iter().all(|b| matches!(b, StateBuf::Dense(_)))
+    }
+
+    /// Direct mutable access to the buffers, for rules that drive the
+    /// kernel layer without the closure indirection (the ET hot path).
+    /// Callers must check [`Self::all_dense`] before treating these as
+    /// dense views.
+    pub(crate) fn bufs_mut(&mut self) -> &mut [StateBuf] {
+        &mut self.bufs
+    }
+
+    /// Decode every buffer into the reusable per-step scratch (grown on
+    /// warm-up, allocation-free thereafter). Pairs with
+    /// [`Self::encode_bufs`].
+    pub(crate) fn decode_bufs(&self, out: &mut Vec<Vec<f32>>) {
+        if out.len() < self.bufs.len() {
+            out.resize_with(self.bufs.len(), Vec::new);
+        }
+        for (b, dst) in self.bufs.iter().zip(out.iter_mut()) {
+            b.decode_into(dst);
+        }
+    }
+
+    /// Re-encode buffers updated in the decode scratch.
+    pub(crate) fn encode_bufs(&mut self, src: &[Vec<f32>]) {
+        for (b, s) in self.bufs.iter_mut().zip(src) {
+            b.write(s);
+        }
     }
 
     /// Run `f` over in-place `f32` views of every state buffer. Dense
     /// buffers are borrowed directly (zero copy — this is what keeps the
     /// dense path bitwise-identical to the embedded-state implementations);
-    /// quantized buffers are decoded into scratch and re-encoded after.
-    pub fn with_bufs<R>(&mut self, f: impl FnOnce(&mut [&mut [f32]]) -> R) -> R {
-        let all_dense = self.bufs.iter().all(|(_, b)| matches!(b, StateBuf::Dense(_)));
-        if all_dense {
+    /// quantized buffers are decoded into the caller's reusable `decode`
+    /// scratch and re-encoded after, so the decode round trip itself
+    /// allocates nothing in steady state. (The per-call `Vec` of views
+    /// collected for the closure still allocates — the fully
+    /// allocation-free path is the ET rule's direct kernel drive; see the
+    /// ROADMAP follow-up for extending that to the other rules.)
+    pub fn with_bufs_in<R>(
+        &mut self,
+        decode: &mut Vec<Vec<f32>>,
+        f: impl FnOnce(&mut [&mut [f32]]) -> R,
+    ) -> R {
+        if self.all_dense() {
             let mut views: Vec<&mut [f32]> = self
                 .bufs
                 .iter_mut()
-                .map(|(_, b)| match b {
+                .map(|b| match b {
                     StateBuf::Dense(v) => v.as_mut_slice(),
                     StateBuf::Q8(_) => unreachable!(),
                 })
                 .collect();
             f(&mut views)
         } else {
-            let mut scratch: Vec<Vec<f32>> = self.bufs.iter().map(|(_, b)| b.to_vec()).collect();
+            self.decode_bufs(decode);
+            let n = self.bufs.len();
             let r = {
                 let mut views: Vec<&mut [f32]> =
-                    scratch.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    decode[..n].iter_mut().map(|v| v.as_mut_slice()).collect();
                 f(&mut views)
             };
-            for ((_, b), s) in self.bufs.iter_mut().zip(&scratch) {
-                b.write(s);
-            }
+            self.encode_bufs(&decode[..n]);
             r
         }
     }
 
+    /// [`Self::with_bufs_in`] with a call-local decode scratch. Fine off
+    /// the hot path; per-step callers thread the [`StepScratch`] owned by
+    /// their [`OptState`] instead.
+    pub fn with_bufs<R>(&mut self, f: impl FnOnce(&mut [&mut [f32]]) -> R) -> R {
+        let mut decode = Vec::new();
+        self.with_bufs_in(&mut decode, f)
+    }
+
     fn state_scalars(&self) -> usize {
-        self.bufs.iter().map(|(_, b)| b.len()).sum::<usize>() + self.wide.len()
+        self.bufs.iter().map(|b| b.len()).sum::<usize>() + self.wide.len()
     }
 
     fn state_bytes(&self) -> usize {
-        self.bufs.iter().map(|(_, b)| b.bytes()).sum::<usize>() + self.wide.len() * 8
+        self.bufs.iter().map(|b| b.bytes()).sum::<usize>() + self.wide.len() * 8
     }
+}
+
+/// Per-step scratch arena owned by every [`OptState`]: the kernel-layer
+/// buffers (odometer coords, row accumulators, separable root factors) plus
+/// the reusable q8 decode buffers that replace the old fresh-`Vec`-per-
+/// buffer-per-step round trip. Shared across all groups of the state (the
+/// buffers grow to the high-water mark during the first full step and are
+/// allocation-free thereafter — pinned by `rust/tests/alloc_regression.rs`).
+/// Never serialized: exports and checkpoints don't see it.
+#[derive(Clone, Debug, Default)]
+pub struct StepScratch {
+    /// Kernel-layer scratch (`tensoring::kernels`).
+    pub kernel: KernelScratch,
+    /// Reusable dense decode buffers for quantized state.
+    pub decode: Vec<Vec<f32>>,
 }
 
 /// Whole-model optimizer state: one [`GroupState`] per parameter group plus
@@ -240,6 +343,7 @@ pub struct OptState {
     /// Shared optimizer-step counter.
     pub step: u64,
     groups: Vec<GroupState>,
+    scratch: StepScratch,
 }
 
 impl OptState {
@@ -271,19 +375,21 @@ impl OptState {
             .enumerate()
             .map(|(gi, g)| {
                 let (bufs, wide) = layout(gi, g);
+                let (buf_names, bufs) = bufs
+                    .into_iter()
+                    .map(|(name, len)| (name, StateBuf::zeros(len, backend)))
+                    .unzip();
                 GroupState {
                     name: g.name.clone(),
                     numel: g.numel(),
                     steps: 0,
                     wide: vec![0.0; wide],
-                    bufs: bufs
-                        .into_iter()
-                        .map(|(name, len)| (name, StateBuf::zeros(len, backend)))
-                        .collect(),
+                    buf_names,
+                    bufs,
                 }
             })
             .collect();
-        OptState { kind, backend, step: 0, groups }
+        OptState { kind, backend, step: 0, groups, scratch: StepScratch::default() }
     }
 
     pub fn kind(&self) -> OptimizerKind {
@@ -304,6 +410,13 @@ impl OptState {
 
     pub fn group_mut(&mut self, gi: usize) -> &mut GroupState {
         &mut self.groups[gi]
+    }
+
+    /// Split borrow of one group and the per-step scratch arena — what
+    /// update rules use so their hot loops can reuse the state-owned
+    /// buffers instead of allocating per call.
+    pub fn group_and_scratch(&mut self, gi: usize) -> (&mut GroupState, &mut StepScratch) {
+        (&mut self.groups[gi], &mut self.scratch)
     }
 
     /// Logical optimizer-state scalars (the paper's "optimizer parameter
@@ -334,8 +447,9 @@ impl OptState {
                     steps: g.steps,
                     wide: g.wide.clone(),
                     bufs: g
-                        .bufs
+                        .buf_names
                         .iter()
+                        .zip(&g.bufs)
                         .map(|(name, b)| (name.clone(), b.to_vec()))
                         .collect(),
                 })
@@ -371,7 +485,7 @@ impl OptState {
                 "state import: group '{}' layout mismatch",
                 g.name
             );
-            for ((name, b), (ename, data)) in g.bufs.iter().zip(&ge.bufs) {
+            for ((name, b), (ename, data)) in g.buf_names.iter().zip(&g.bufs).zip(&ge.bufs) {
                 anyhow::ensure!(
                     name == ename && b.len() == data.len(),
                     "state import: group '{}' buffer '{}' ({} scalars) vs '{}' ({})",
@@ -387,7 +501,7 @@ impl OptState {
         for (g, ge) in self.groups.iter_mut().zip(&e.groups) {
             g.steps = ge.steps;
             g.wide.copy_from_slice(&ge.wide);
-            for ((_, b), (_, data)) in g.bufs.iter_mut().zip(&ge.bufs) {
+            for (b, (_, data)) in g.bufs.iter_mut().zip(&ge.bufs) {
                 b.write(data);
             }
         }

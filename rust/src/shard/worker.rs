@@ -4,8 +4,11 @@
 //! Each worker builds a concrete [`crate::optim::StateOptimizer`] over
 //! exactly the groups its shard owns, so *all* of a group's optimizer
 //! state (slice accumulators, moments, ...) lives on one thread, with no
-//! `Box<dyn Optimizer>` indirection in front of the update rule. State no
-//! longer has to die with the thread:
+//! `Box<dyn Optimizer>` indirection in front of the update rule — and the
+//! per-step scratch arena (`optim::StepScratch`) lives with it, so each
+//! shard's steady-state ET steps are allocation-free with zero cross-shard
+//! contention (the arena warms up per worker, over that worker's groups
+//! only). State no longer has to die with the thread:
 //! [`Request::ExportState`] snapshots the shard-local [`StateExport`] and
 //! [`Request::ImportState`] restores one, which is what the executor's
 //! checkpoint fan-out/fan-in is built from. Requests arrive over a bounded

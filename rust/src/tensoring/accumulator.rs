@@ -14,25 +14,19 @@
 //! `prod_i (eps + S^(i)[I_i])^(-1/(2p))`, the exact form whose spectral
 //! bound Lemma 4.3 proves; the two coincide as `eps -> 0` and we expose both
 //! so the Lemma 4.3 property test can be exact.
+//!
+//! The arithmetic itself lives in [`super::kernels`] — fused, chunked,
+//! allocation-free loops with an explicit numeric contract (accumulate and
+//! the `InsideProduct` apply are bitwise-identical to the seed walkers;
+//! the `PerFactor` apply uses separable per-mode root factors within 1e-5
+//! relative error, see the kernel module docs). The free functions here
+//! are thin wrappers over those kernels with a call-local scratch; the
+//! zero-allocation hot path (`optim::EtRule`) calls the kernels directly
+//! with the scratch arena owned by its `OptState`.
 
 use super::index::TensorIndex;
+use super::kernels::{self, inv_root_2p, Scratch};
 use anyhow::Result;
-
-/// `x^(-1/(2p))` with the `powf` avoided when `p` is a power of two
-/// (p=1,2,4,8 cover every planner output): `x^(-1/2)` is one sqrt,
-/// `x^(-1/4)` two, etc. Measured ~4x faster per element than `powf` on
-/// this CPU — the dominant cost of the apply loop (see EXPERIMENTS.md
-/// §Perf).
-#[inline(always)]
-fn inv_root_2p(x: f32, p: usize) -> f32 {
-    match p {
-        1 => 1.0 / x.sqrt(),
-        2 => 1.0 / x.sqrt().sqrt(),
-        4 => 1.0 / x.sqrt().sqrt().sqrt(),
-        8 => 1.0 / x.sqrt().sqrt().sqrt().sqrt(),
-        _ => x.powf(-1.0 / (2.0 * p as f32)),
-    }
-}
 
 /// Where the `eps` damping enters the step-size product.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,79 +50,15 @@ pub enum EpsMode {
 
 /// Accumulate one gradient (flat, row-major w.r.t. `dims`) into the mode
 /// accumulators `s` (`s[i].len() == dims[i]`), optionally `beta2`-decayed.
+/// Thin wrapper over [`kernels::accumulate`] (bitwise-identical to the
+/// seed walk) with a call-local scratch.
 pub fn accumulate_slices<S: AsMut<[f32]>>(
     dims: &[usize],
     s: &mut [S],
     beta2: Option<f32>,
     g: &[f32],
 ) -> Result<()> {
-    let numel: usize = dims.iter().product();
-    anyhow::ensure!(
-        g.len() == numel,
-        "gradient len {} != index numel {}",
-        g.len(),
-        numel
-    );
-    anyhow::ensure!(s.len() == dims.len(), "mode count mismatch");
-    // Decayed (Adam/RMSprop-style) accumulators use the standard
-    // exponential moving average `S <- b2*S + (1-b2)*slice_sums`; the
-    // cumulative (AdaGrad-style) setting adds the raw slice sums.
-    let w = match beta2 {
-        Some(b2) => {
-            for sv in s.iter_mut() {
-                for x in sv.as_mut().iter_mut() {
-                    *x *= b2;
-                }
-            }
-            1.0 - b2
-        }
-        None => 1.0,
-    };
-    match dims.len() {
-        1 => {
-            let s0 = s[0].as_mut();
-            for (j, &gj) in g.iter().enumerate() {
-                s0[j] += w * gj * gj;
-            }
-        }
-        2 => {
-            // Matrix case: row sums into s[0], column sums into s[1].
-            let (d0, d1) = (dims[0], dims[1]);
-            let (s01, s1x) = s.split_at_mut(1);
-            let (s0, s1) = (s01[0].as_mut(), s1x[0].as_mut());
-            for r in 0..d0 {
-                let row = &g[r * d1..(r + 1) * d1];
-                let mut acc = 0.0f32;
-                for (c, &grc) in row.iter().enumerate() {
-                    let sq = w * grc * grc;
-                    acc += sq;
-                    s1[c] += sq;
-                }
-                s0[r] += acc;
-            }
-        }
-        _ => {
-            // General p: odometer walk, p bucket adds per element. The
-            // bucket vectors total sum_i d_i floats — they stay in L1.
-            let p = dims.len();
-            let mut coords = vec![0usize; p];
-            for &gj in g.iter() {
-                let sq = w * gj * gj;
-                for i in 0..p {
-                    s[i].as_mut()[coords[i]] += sq;
-                }
-                // advance odometer
-                for i in (0..p).rev() {
-                    coords[i] += 1;
-                    if coords[i] < dims[i] {
-                        break;
-                    }
-                    coords[i] = 0;
-                }
-            }
-        }
-    }
-    Ok(())
+    kernels::accumulate(dims, s, beta2, g, &mut Scratch::new())
 }
 
 /// Walk coordinates in flat order calling `f(flat, denominator)` where
@@ -183,7 +113,10 @@ pub fn for_each_denominator_slices<S: AsRef<[f32]>>(
 }
 
 /// Fused preconditioned SGD update over borrowed mode accumulators:
-/// `x -= lr * delta * g` with `delta = denom^(-1/2p)`.
+/// `x -= lr * delta * g` with `delta = denom^(-1/2p)`. Thin wrapper over
+/// [`kernels::apply`] (bitwise-exact for [`EpsMode::InsideProduct`],
+/// separable ≤1e-5-relative root factors for [`EpsMode::PerFactor`]) with
+/// a call-local scratch.
 pub fn apply_update_slices<S: AsRef<[f32]>>(
     dims: &[usize],
     s: &[S],
@@ -193,13 +126,7 @@ pub fn apply_update_slices<S: AsRef<[f32]>>(
     g: &[f32],
     lr: f32,
 ) {
-    let n: usize = dims.iter().product();
-    assert_eq!(x.len(), n);
-    assert_eq!(g.len(), n);
-    let p = dims.len();
-    for_each_denominator_slices(dims, s, eps, eps_mode, |j, denom| {
-        x[j] -= lr * inv_root_2p(denom, p) * g[j];
-    });
+    kernels::apply(dims, s, eps, eps_mode, None, 0, x, g, lr, &mut Scratch::new());
 }
 
 /// Bias-corrected variant for the decayed (`beta2 < 1`) setting, in the
@@ -216,23 +143,7 @@ pub fn apply_update_bias_corrected_slices<S: AsRef<[f32]>>(
     g: &[f32],
     lr: f32,
 ) {
-    match beta2 {
-        None => apply_update_slices(dims, s, eps, eps_mode, x, g, lr),
-        Some(b2) => {
-            let n: usize = dims.iter().product();
-            assert_eq!(x.len(), n);
-            assert_eq!(g.len(), n);
-            let p = dims.len();
-            let corr = 1.0 - b2.powi(steps.max(1) as i32);
-            // Each of the p factors is divided by corr; the product of p
-            // factors to the power 1/2p gives corr^(1/2) overall, i.e.
-            // exactly Adam's sqrt bias correction.
-            let scale = corr.sqrt();
-            for_each_denominator_slices(dims, s, eps, eps_mode, |j, denom| {
-                x[j] -= lr * scale * inv_root_2p(denom, p) * g[j];
-            });
-        }
-    }
+    kernels::apply(dims, s, eps, eps_mode, beta2, steps, x, g, lr, &mut Scratch::new());
 }
 
 /// Second-moment state for one tensor-indexed parameter group.

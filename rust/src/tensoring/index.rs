@@ -68,14 +68,16 @@ impl TensorIndex {
     /// `I^{-1}(coords)`: tensor coordinates -> flat index.
     pub fn ravel(&self, coords: &[usize]) -> usize {
         debug_assert_eq!(coords.len(), self.dims.len());
-        coords
-            .iter()
-            .zip(&self.strides)
-            .map(|(&c, &s)| {
-                debug_assert!(c < self.dims[self.strides.iter().position(|x| *x == s).unwrap()]);
-                c * s
-            })
-            .sum()
+        // Indexed zip over (coords, dims, strides): the old stride-lookup
+        // bounds check (`strides.iter().position(|x| *x == s)`) was O(p^2)
+        // and resolved the *wrong* dim whenever strides collide (any dims
+        // containing 1s), so it validated the wrong axis.
+        let mut flat = 0;
+        for ((&c, &d), &s) in coords.iter().zip(&self.dims).zip(&self.strides) {
+            debug_assert!(c < d, "coordinate {c} out of range for dim {d}");
+            flat += c * s;
+        }
+        flat
     }
 
     /// Number of coordinates in each mode-`i` slice (`d / d_i`): the count of
@@ -150,6 +152,33 @@ mod tests {
             assert_eq!(c[0], j);
             assert_eq!(ix.ravel(&c), j);
         }
+    }
+
+    /// Regression: with colliding strides (dims containing 1s), the old
+    /// ravel bounds check resolved the wrong dim and admitted
+    /// out-of-range coordinates on the 1-sized axes. Valid coordinates
+    /// must still round-trip...
+    #[test]
+    fn ravel_validates_correct_axis_with_ones() {
+        let ix = TensorIndex::new(&[3, 1, 4]).unwrap(); // strides [4, 4, 1]
+        let mut c = [0; 3];
+        for j in 0..12 {
+            ix.unravel(j, &mut c);
+            assert_eq!(ix.ravel(&c), j);
+        }
+    }
+
+    /// ...and an out-of-range coordinate on a collided (1-sized) axis must
+    /// trip the debug assert instead of slipping through the wrong-axis
+    /// check.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of range")]
+    fn ravel_rejects_out_of_range_on_collided_axis() {
+        let ix = TensorIndex::new(&[3, 1, 4]).unwrap();
+        // Mode 1 has dim 1; coordinate 2 is invalid but the old check
+        // compared it against dim 0 (= 3) because strides 0 and 1 collide.
+        ix.ravel(&[0, 2, 0]);
     }
 
     #[test]

@@ -1,0 +1,730 @@
+//! Fused, allocation-free update kernels for the extreme-tensoring hot
+//! path — the loops every optimizer step runs through.
+//!
+//! The seed implementation ([`reference`], kept verbatim below as the
+//! parity baseline) pays three per-element costs that this module removes:
+//!
+//! 1. **Scattered odometer accumulate** (general `p`): `p` read-modify-
+//!    write bucket adds per element, each through an `as_mut()` indirection
+//!    and an odometer branch. [`accumulate`] views the gradient as
+//!    `(d/d_p, d_p)` rows: the contiguous last mode is accumulated
+//!    directly, and the outer-mode buckets — whose coordinates are fixed
+//!    within a row — are held in a tiny scratch buffer that is loaded once
+//!    and stored once per row. Crucially the outer buckets still receive
+//!    *per-element* adds (into the scratch register copy), so every bucket
+//!    sees exactly the seed's f32 addition sequence and the result is
+//!    **bitwise identical** to [`reference::accumulate`] — pinned by
+//!    `rust/tests/golden_parity.rs` and the property tests below.
+//! 2. **Per-element odometer in the apply loop**: [`apply`] hoists the
+//!    prefix product of the outer-mode factors out of the inner loop, which
+//!    then runs contiguously over the last mode with no branches — for
+//!    [`EpsMode::InsideProduct`] the products associate exactly as the
+//!    seed's incremental prefix walk, so this path is also **bitwise
+//!    identical** to [`reference::apply`].
+//! 3. **Per-element transcendentals** ([`EpsMode::PerFactor`]): the
+//!    preconditioner factors exactly, `delta[I] = prod_i (eps +
+//!    S_i[c_i])^(-1/2p)`, so the per-mode root vectors `t_i[c] = (eps +
+//!    S_i[c])^(-1/2p)` are computed once per step — `O(sum_i d_i)`
+//!    transcendentals instead of `O(numel)` — and the element loop is pure
+//!    multiplies. This reassociates the rounding (roots of factors instead
+//!    of a root of the product), so the path ships under an explicit
+//!    numeric contract instead of bitwise equality:
+//!
+//! # Numeric contract
+//!
+//! * [`accumulate`]: bitwise-identical to [`reference::accumulate`] for
+//!   every order, both decayed and cumulative (property-tested here,
+//!   golden-pinned in `golden_parity`).
+//! * [`apply`] with [`EpsMode::InsideProduct`]: bitwise-identical to
+//!   [`reference::apply`] (the `Hyper::default()` / Algorithm-1 path the
+//!   trainer runs).
+//! * [`apply`] with [`EpsMode::PerFactor`]: within `1e-5` relative error of
+//!   [`reference::apply`] per coordinate, property-tested across
+//!   `p ∈ {1,2,3,4,8}`, decayed/cumulative, and dims containing 1s —
+//!   provided the reference's factor product stays finite in `f32`. Where
+//!   that product overflows (huge accumulators at large `p`), the
+//!   reference collapses to a zero step through `inf`; the separable form
+//!   stays finite and is strictly better behaved (unit-tested below).
+//!
+//! All kernels take a caller-owned [`Scratch`] arena, so the steady-state
+//! hot path performs **zero heap allocations** (pinned by
+//! `rust/tests/alloc_regression.rs`; the arena lives in
+//! `optim::OptState` and is threaded through `step_all`).
+
+use super::accumulator::EpsMode;
+use anyhow::Result;
+
+/// `x^(-1/(2p))` with the `powf` avoided when `p` is a power of two
+/// (p=1,2,4,8 cover every planner output): `x^(-1/2)` is one sqrt,
+/// `x^(-1/4)` two, etc. Measured ~4x faster per element than `powf` on
+/// this CPU — formerly the dominant cost of the apply loop (see
+/// EXPERIMENTS.md §Perf).
+#[inline(always)]
+pub fn inv_root_2p(x: f32, p: usize) -> f32 {
+    match p {
+        1 => 1.0 / x.sqrt(),
+        2 => 1.0 / x.sqrt().sqrt(),
+        4 => 1.0 / x.sqrt().sqrt().sqrt(),
+        8 => 1.0 / x.sqrt().sqrt().sqrt().sqrt(),
+        _ => x.powf(-1.0 / (2.0 * p as f32)),
+    }
+}
+
+/// Reusable scratch for the kernels: odometer coordinates, per-row
+/// outer-mode accumulators, and the separable root-factor vectors
+/// (`sum_i d_i` floats at most). After one warm-up pass over every group
+/// the buffers reach their high-water capacity and later steps allocate
+/// nothing.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    /// Odometer coordinates over the outer (all but last) modes.
+    coords: Vec<usize>,
+    /// Per-row register copies of the outer-mode accumulator buckets.
+    row_acc: Vec<f32>,
+    /// Separable per-mode root factors, concatenated mode-major.
+    factors: Vec<f32>,
+    /// Start offset of each mode's factor vector in `factors`.
+    offsets: Vec<usize>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+/// Accumulate one gradient (flat, row-major w.r.t. `dims`) into the mode
+/// accumulators `s` (`s[i].len() == dims[i]`), optionally `beta2`-decayed.
+///
+/// Bitwise-identical to [`reference::accumulate`] (see the module-level
+/// numeric contract): the 1-D and 2-D fast paths are the seed's verbatim,
+/// and the general-`p` path replays exactly the seed's per-bucket f32
+/// addition sequence while touching each outer bucket's memory only twice
+/// per row.
+pub fn accumulate<S: AsMut<[f32]>>(
+    dims: &[usize],
+    s: &mut [S],
+    beta2: Option<f32>,
+    g: &[f32],
+    scratch: &mut Scratch,
+) -> Result<()> {
+    anyhow::ensure!(
+        !dims.is_empty() && dims.iter().all(|&d| d > 0),
+        "tensor dims must be non-empty and positive, got {dims:?}"
+    );
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(
+        g.len() == numel,
+        "gradient len {} != index numel {}",
+        g.len(),
+        numel
+    );
+    anyhow::ensure!(s.len() == dims.len(), "mode count mismatch");
+    // Decayed (Adam/RMSprop-style) accumulators use the standard
+    // exponential moving average `S <- b2*S + (1-b2)*slice_sums`; the
+    // cumulative (AdaGrad-style) setting adds the raw slice sums.
+    let w = match beta2 {
+        Some(b2) => {
+            for sv in s.iter_mut() {
+                for x in sv.as_mut().iter_mut() {
+                    *x *= b2;
+                }
+            }
+            1.0 - b2
+        }
+        None => 1.0,
+    };
+    match dims.len() {
+        1 => {
+            let s0 = s[0].as_mut();
+            for (j, &gj) in g.iter().enumerate() {
+                s0[j] += w * gj * gj;
+            }
+        }
+        2 => {
+            // Matrix case: row sums into s[0], column sums into s[1].
+            let (d0, d1) = (dims[0], dims[1]);
+            let (s01, s1x) = s.split_at_mut(1);
+            let (s0, s1) = (s01[0].as_mut(), s1x[0].as_mut());
+            for r in 0..d0 {
+                let row = &g[r * d1..(r + 1) * d1];
+                let mut acc = 0.0f32;
+                for (c, &grc) in row.iter().enumerate() {
+                    let sq = w * grc * grc;
+                    acc += sq;
+                    s1[c] += sq;
+                }
+                s0[r] += acc;
+            }
+        }
+        _ => {
+            // General p, chunked: the last mode is contiguous (1 add per
+            // element, no odometer); the outer buckets — constant within a
+            // row — are folded in `row_acc` and written back once per row.
+            let p = dims.len();
+            let d_last = dims[p - 1];
+            let Scratch { coords, row_acc, .. } = scratch;
+            coords.clear();
+            coords.resize(p - 1, 0);
+            let (outer, last) = s.split_at_mut(p - 1);
+            let s_last = last[0].as_mut();
+            for row in g.chunks_exact(d_last) {
+                row_acc.clear();
+                for (i, sv) in outer.iter_mut().enumerate() {
+                    row_acc.push(sv.as_mut()[coords[i]]);
+                }
+                for (c, &gj) in row.iter().enumerate() {
+                    let sq = w * gj * gj;
+                    s_last[c] += sq;
+                    for a in row_acc.iter_mut() {
+                        *a += sq;
+                    }
+                }
+                for (i, sv) in outer.iter_mut().enumerate() {
+                    sv.as_mut()[coords[i]] = row_acc[i];
+                }
+                // Advance the outer odometer (once per row, not per
+                // element).
+                for i in (0..p - 1).rev() {
+                    coords[i] += 1;
+                    if coords[i] < dims[i] {
+                        break;
+                    }
+                    coords[i] = 0;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fused preconditioned update over borrowed mode accumulators:
+/// `x -= lr * scale * delta * g`, with `delta = denom^(-1/2p)` and the
+/// optional Adam-style `1/sqrt(1 - beta2^t)` bias correction folded into
+/// the learning rate exactly as the reference forms it. Dispatches to the
+/// hoisted-prefix loop ([`EpsMode::InsideProduct`], bitwise-exact) or the
+/// separable root-factor loop ([`EpsMode::PerFactor`], ≤1e-5 relative —
+/// see the module-level numeric contract).
+pub fn apply<S: AsRef<[f32]>>(
+    dims: &[usize],
+    s: &[S],
+    eps: f32,
+    eps_mode: EpsMode,
+    beta2: Option<f32>,
+    steps: u64,
+    x: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    scratch: &mut Scratch,
+) {
+    let p = dims.len();
+    assert!(
+        p > 0 && dims.iter().all(|&d| d > 0),
+        "tensor dims must be non-empty and positive, got {dims:?}"
+    );
+    let n: usize = dims.iter().product();
+    assert_eq!(x.len(), n);
+    assert_eq!(g.len(), n);
+    assert_eq!(s.len(), p, "mode count mismatch");
+    // The inner loops zip against the mode vectors, which would silently
+    // truncate on a malformed layout where the reference walker's direct
+    // indexing panicked — keep the failure loud.
+    for (i, (sv, &d)) in s.iter().zip(dims).enumerate() {
+        assert_eq!(sv.as_ref().len(), d, "mode {i} accumulator length mismatch");
+    }
+    // Each of the p factors is divided by corr; the product of p factors
+    // to the power 1/2p gives corr^(1/2) overall, i.e. exactly Adam's
+    // sqrt bias correction. `lr * scale` is the first product the
+    // reference forms per element, so folding it here is bitwise-neutral.
+    let lr_eff = match beta2 {
+        None => lr,
+        Some(b2) => lr * (1.0 - b2.powi(steps.max(1) as i32)).sqrt(),
+    };
+    match eps_mode {
+        EpsMode::InsideProduct => apply_inside_product(dims, s, eps, x, g, lr_eff, scratch),
+        EpsMode::PerFactor => apply_per_factor(dims, s, eps, x, g, lr_eff, scratch),
+    }
+}
+
+/// `delta = (eps + prod_i S_i[c_i])^(-1/2p)` — Algorithm 1 as printed.
+/// The outer-mode prefix product is hoisted out of the contiguous inner
+/// loop; the products associate exactly as the seed's incremental prefix
+/// walk (`((1.0 * f_0) * f_1) * ...`), so the result is bitwise-identical
+/// to [`reference::apply`].
+fn apply_inside_product<S: AsRef<[f32]>>(
+    dims: &[usize],
+    s: &[S],
+    eps: f32,
+    x: &mut [f32],
+    g: &[f32],
+    lr_eff: f32,
+    scratch: &mut Scratch,
+) {
+    let p = dims.len();
+    let d_last = dims[p - 1];
+    let (outer, last) = s.split_at(p - 1);
+    let s_last = last[0].as_ref();
+    let coords = &mut scratch.coords;
+    coords.clear();
+    coords.resize(p - 1, 0);
+    for (x_row, g_row) in x.chunks_exact_mut(d_last).zip(g.chunks_exact(d_last)) {
+        let mut pre = 1.0f32;
+        for (i, sv) in outer.iter().enumerate() {
+            pre *= sv.as_ref()[coords[i]];
+        }
+        for ((xj, &gj), &sc) in x_row.iter_mut().zip(g_row).zip(s_last) {
+            let denom = eps + pre * sc;
+            *xj -= lr_eff * inv_root_2p(denom, p) * gj;
+        }
+        for i in (0..p - 1).rev() {
+            coords[i] += 1;
+            if coords[i] < dims[i] {
+                break;
+            }
+            coords[i] = 0;
+        }
+    }
+}
+
+/// `delta = prod_i (eps + S_i[c_i])^(-1/2p)` — the Lemma 4.3 form, which
+/// factors exactly: the per-mode root vectors `t_i` are computed once
+/// (`O(sum_i d_i)` transcendentals), then the element loop is pure
+/// multiplies with the outer-mode prefix (and the learning rate) hoisted.
+fn apply_per_factor<S: AsRef<[f32]>>(
+    dims: &[usize],
+    s: &[S],
+    eps: f32,
+    x: &mut [f32],
+    g: &[f32],
+    lr_eff: f32,
+    scratch: &mut Scratch,
+) {
+    let p = dims.len();
+    let Scratch { coords, factors, offsets, .. } = scratch;
+    factors.clear();
+    offsets.clear();
+    for sv in s {
+        offsets.push(factors.len());
+        for &v in sv.as_ref() {
+            factors.push(inv_root_2p(eps + v, p));
+        }
+    }
+    let factors: &[f32] = factors;
+    let offsets: &[usize] = offsets;
+    let d_last = dims[p - 1];
+    let t_last = &factors[offsets[p - 1]..];
+    coords.clear();
+    coords.resize(p - 1, 0);
+    for (x_row, g_row) in x.chunks_exact_mut(d_last).zip(g.chunks_exact(d_last)) {
+        let mut pre = lr_eff;
+        for (i, &off) in offsets[..p - 1].iter().enumerate() {
+            pre *= factors[off + coords[i]];
+        }
+        for ((xj, &gj), &t) in x_row.iter_mut().zip(g_row).zip(t_last) {
+            *xj -= pre * t * gj;
+        }
+        for i in (0..p - 1).rev() {
+            coords[i] += 1;
+            if coords[i] < dims[i] {
+                break;
+            }
+            coords[i] = 0;
+        }
+    }
+}
+
+/// The pre-kernel per-element walkers, kept verbatim as the numeric
+/// baseline the kernels are tested (and benchmarked) against. Not used on
+/// any hot path.
+pub mod reference {
+    use super::super::accumulator::{for_each_denominator_slices, EpsMode};
+    use super::inv_root_2p;
+    use anyhow::Result;
+
+    /// Seed slice-sum accumulate: 1-D/2-D fast paths plus the scattered
+    /// odometer walk (`p` bucket adds per element) for general `p`.
+    pub fn accumulate<S: AsMut<[f32]>>(
+        dims: &[usize],
+        s: &mut [S],
+        beta2: Option<f32>,
+        g: &[f32],
+    ) -> Result<()> {
+        let numel: usize = dims.iter().product();
+        anyhow::ensure!(
+            g.len() == numel,
+            "gradient len {} != index numel {}",
+            g.len(),
+            numel
+        );
+        anyhow::ensure!(s.len() == dims.len(), "mode count mismatch");
+        let w = match beta2 {
+            Some(b2) => {
+                for sv in s.iter_mut() {
+                    for x in sv.as_mut().iter_mut() {
+                        *x *= b2;
+                    }
+                }
+                1.0 - b2
+            }
+            None => 1.0,
+        };
+        match dims.len() {
+            1 => {
+                let s0 = s[0].as_mut();
+                for (j, &gj) in g.iter().enumerate() {
+                    s0[j] += w * gj * gj;
+                }
+            }
+            2 => {
+                let (d0, d1) = (dims[0], dims[1]);
+                let (s01, s1x) = s.split_at_mut(1);
+                let (s0, s1) = (s01[0].as_mut(), s1x[0].as_mut());
+                for r in 0..d0 {
+                    let row = &g[r * d1..(r + 1) * d1];
+                    let mut acc = 0.0f32;
+                    for (c, &grc) in row.iter().enumerate() {
+                        let sq = w * grc * grc;
+                        acc += sq;
+                        s1[c] += sq;
+                    }
+                    s0[r] += acc;
+                }
+            }
+            _ => {
+                let p = dims.len();
+                let mut coords = vec![0usize; p];
+                for &gj in g.iter() {
+                    let sq = w * gj * gj;
+                    for i in 0..p {
+                        s[i].as_mut()[coords[i]] += sq;
+                    }
+                    for i in (0..p).rev() {
+                        coords[i] += 1;
+                        if coords[i] < dims[i] {
+                            break;
+                        }
+                        coords[i] = 0;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Seed fused update: the per-element prefix-product walk with one
+    /// root per element, optional Adam-style bias correction.
+    pub fn apply<S: AsRef<[f32]>>(
+        dims: &[usize],
+        s: &[S],
+        eps: f32,
+        eps_mode: EpsMode,
+        beta2: Option<f32>,
+        steps: u64,
+        x: &mut [f32],
+        g: &[f32],
+        lr: f32,
+    ) {
+        let n: usize = dims.iter().product();
+        assert_eq!(x.len(), n);
+        assert_eq!(g.len(), n);
+        let p = dims.len();
+        match beta2 {
+            None => {
+                for_each_denominator_slices(dims, s, eps, eps_mode, |j, denom| {
+                    x[j] -= lr * inv_root_2p(denom, p) * g[j];
+                });
+            }
+            Some(b2) => {
+                let corr = 1.0 - b2.powi(steps.max(1) as i32);
+                let scale = corr.sqrt();
+                for_each_denominator_slices(dims, s, eps, eps_mode, |j, denom| {
+                    x[j] -= lr * scale * inv_root_2p(denom, p) * g[j];
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{props, Gen};
+
+    /// Fresh zeroed accumulators for `dims`.
+    fn zeros(dims: &[usize]) -> Vec<Vec<f32>> {
+        dims.iter().map(|&d| vec![0.0f32; d]).collect()
+    }
+
+    /// Random dims of exactly order `p`, biased to include 1s.
+    fn dims_of_order(g: &mut Gen, p: usize, max_dim: usize) -> Vec<usize> {
+        (0..p)
+            .map(|_| if g.usize_in(0, 3) == 0 { 1 } else { g.usize_in(1, max_dim) })
+            .collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: coord {j}: {x} vs {y}");
+        }
+    }
+
+    /// Property: the chunked accumulate is bitwise-identical to the seed
+    /// scattered walk, for every order, decayed and cumulative, multi-step.
+    #[test]
+    fn prop_accumulate_bitwise_matches_reference() {
+        props("kernel_accumulate_bitwise", 120, |g: &mut Gen| {
+            for &p in &[1usize, 2, 3, 4, 8] {
+                let max_dim = if p >= 8 { 3 } else { 5 };
+                let dims = dims_of_order(g, p, max_dim);
+                let n: usize = dims.iter().product();
+                let beta2 = if g.bool() { Some(g.f32_in(0.8, 0.999)) } else { None };
+                let mut want = zeros(&dims);
+                let mut got = zeros(&dims);
+                let mut scratch = Scratch::new();
+                for _ in 0..g.usize_in(1, 3) {
+                    let grad = g.grad_vec(n);
+                    reference::accumulate(&dims, &mut want, beta2, &grad).unwrap();
+                    accumulate(&dims, &mut got, beta2, &grad, &mut scratch).unwrap();
+                }
+                for (i, (w, o)) in want.iter().zip(&got).enumerate() {
+                    assert_bits_eq(w, o, &format!("dims {dims:?} mode {i}"));
+                }
+            }
+        });
+    }
+
+    /// Property: the hoisted InsideProduct apply is bitwise-identical to
+    /// the seed per-element prefix walk (the golden-parity path).
+    #[test]
+    fn prop_apply_inside_product_bitwise_matches_reference() {
+        props("kernel_apply_inside_bitwise", 120, |g: &mut Gen| {
+            for &p in &[1usize, 2, 3, 4, 8] {
+                let max_dim = if p >= 8 { 3 } else { 5 };
+                let dims = dims_of_order(g, p, max_dim);
+                let n: usize = dims.iter().product();
+                let beta2 = if g.bool() { Some(g.f32_in(0.8, 0.999)) } else { None };
+                let steps = g.usize_in(0, 5) as u64;
+                let eps = 10f32.powf(g.f32_in(-8.0, -2.0));
+                let mut s = zeros(&dims);
+                let mut scratch = Scratch::new();
+                let grad = g.grad_vec(n);
+                accumulate(&dims, &mut s, beta2, &grad, &mut scratch).unwrap();
+                let mut want = vec![0.3f32; n];
+                let mut got = want.clone();
+                reference::apply(
+                    &dims,
+                    &s,
+                    eps,
+                    EpsMode::InsideProduct,
+                    beta2,
+                    steps,
+                    &mut want,
+                    &grad,
+                    0.1,
+                );
+                apply(
+                    &dims,
+                    &s,
+                    eps,
+                    EpsMode::InsideProduct,
+                    beta2,
+                    steps,
+                    &mut got,
+                    &grad,
+                    0.1,
+                    &mut scratch,
+                );
+                assert_bits_eq(&want, &got, &format!("dims {dims:?}"));
+            }
+        });
+    }
+
+    /// Property (the separable-apply numeric contract): the PerFactor
+    /// root-factor path stays within 1e-5 relative error of the seed
+    /// per-element walk, across orders, eps, decay, and dims with 1s.
+    /// Gradients are standard-normal so the reference's factor product
+    /// stays finite in f32 (the regime where the contract applies — see
+    /// `separable_stays_finite_where_reference_overflows` for the other
+    /// regime).
+    #[test]
+    fn prop_apply_per_factor_within_1e5_of_reference() {
+        props("kernel_apply_per_factor_rel", 120, |g: &mut Gen| {
+            for &p in &[1usize, 2, 3, 4, 8] {
+                let max_dim = if p >= 8 { 3 } else { 5 };
+                let dims = dims_of_order(g, p, max_dim);
+                let n: usize = dims.iter().product();
+                let beta2 = if g.bool() { Some(g.f32_in(0.8, 0.999)) } else { None };
+                let steps = g.usize_in(0, 5) as u64;
+                let eps = 10f32.powf(g.f32_in(-8.0, -2.0));
+                let mut s = zeros(&dims);
+                let mut scratch = Scratch::new();
+                let mut grad = vec![0.0f32; n];
+                for _ in 0..g.usize_in(1, 3) {
+                    g.rng.fill_normal(&mut grad, 1.0);
+                    accumulate(&dims, &mut s, beta2, &grad, &mut scratch).unwrap();
+                }
+                let mut want = vec![0.0f32; n];
+                let mut got = vec![0.0f32; n];
+                reference::apply(
+                    &dims,
+                    &s,
+                    eps,
+                    EpsMode::PerFactor,
+                    beta2,
+                    steps,
+                    &mut want,
+                    &grad,
+                    1.0,
+                );
+                apply(
+                    &dims,
+                    &s,
+                    eps,
+                    EpsMode::PerFactor,
+                    beta2,
+                    steps,
+                    &mut got,
+                    &grad,
+                    1.0,
+                    &mut scratch,
+                );
+                for j in 0..n {
+                    let denom = want[j].abs().max(1e-30);
+                    let rel = (want[j] - got[j]).abs() / denom;
+                    assert!(
+                        rel <= 1e-5,
+                        "dims {dims:?} coord {j}: reference {} vs separable {} (rel {rel})",
+                        want[j],
+                        got[j]
+                    );
+                }
+            }
+        });
+    }
+
+    /// Where the reference's InsideProduct-style factor product overflows
+    /// f32 (possible at large p with huge accumulators), the separable
+    /// PerFactor form stays finite: roots are taken before multiplying.
+    /// This is the one documented divergence from the reference walk.
+    #[test]
+    fn separable_stays_finite_where_reference_overflows() {
+        let dims = [2usize, 2, 2, 2];
+        // Four factors of ~1e20 overflow f32 when multiplied (1e80 > f32
+        // max), so the reference computes inv_root(inf) = 0.
+        let s: Vec<Vec<f32>> = dims.iter().map(|&d| vec![1e20f32; d]).collect();
+        let n: usize = dims.iter().product();
+        let g = vec![1.0f32; n];
+        let mut want = vec![0.0f32; n];
+        let mut got = vec![0.0f32; n];
+        reference::apply(&dims, &s, 0.0, EpsMode::PerFactor, None, 0, &mut want, &g, 1.0);
+        let mut scratch = Scratch::new();
+        apply(&dims, &s, 0.0, EpsMode::PerFactor, None, 0, &mut got, &g, 1.0, &mut scratch);
+        // Reference collapses to a zero step through inf.
+        assert!(want.iter().all(|&x| x == 0.0), "{want:?}");
+        // Separable: each root is (1e20)^(-1/8) = 10^(-2.5); four of them
+        // give ~1e-10 — small but finite and mathematically correct.
+        for &x in &got {
+            assert!(x.is_finite() && x < 0.0, "{got:?}");
+            assert!((x.abs() - 1e-10).abs() / 1e-10 < 1e-3, "{x}");
+        }
+    }
+
+    /// One Scratch reused across groups of different orders and sizes
+    /// produces exactly the same results as fresh scratch per call.
+    #[test]
+    fn scratch_reuse_across_shapes_is_exact() {
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![6],
+            vec![4, 5],
+            vec![3, 1, 4],
+            vec![2, 3, 2, 2],
+            vec![2, 1, 2, 1, 2, 1, 2, 2],
+        ];
+        let mut shared = Scratch::new();
+        for (k, dims) in shapes.iter().enumerate() {
+            let n: usize = dims.iter().product();
+            let grad: Vec<f32> = (0..n).map(|j| ((j * 7 + k) % 11) as f32 * 0.3 - 1.0).collect();
+            let mut s_shared = zeros(dims);
+            let mut s_fresh = zeros(dims);
+            accumulate(dims, &mut s_shared, None, &grad, &mut shared).unwrap();
+            accumulate(dims, &mut s_fresh, None, &grad, &mut Scratch::new()).unwrap();
+            for (a, b) in s_shared.iter().zip(&s_fresh) {
+                assert_bits_eq(a, b, &format!("accumulate dims {dims:?}"));
+            }
+            for mode in [EpsMode::InsideProduct, EpsMode::PerFactor] {
+                let mut x_shared = vec![0.5f32; n];
+                let mut x_fresh = vec![0.5f32; n];
+                apply(dims, &s_shared, 1e-8, mode, None, 1, &mut x_shared, &grad, 0.1, &mut shared);
+                apply(
+                    dims,
+                    &s_fresh,
+                    1e-8,
+                    mode,
+                    None,
+                    1,
+                    &mut x_fresh,
+                    &grad,
+                    0.1,
+                    &mut Scratch::new(),
+                );
+                assert_bits_eq(&x_shared, &x_fresh, &format!("apply {mode:?} dims {dims:?}"));
+            }
+        }
+    }
+
+    /// Explicit 1-containing dims (the stride-collision shapes that broke
+    /// `TensorIndex::ravel`'s old debug_assert) run both kernels end to
+    /// end against the reference.
+    #[test]
+    fn dims_with_ones_match_reference() {
+        for dims in [vec![1usize], vec![1, 1, 1], vec![3, 1, 4], vec![1, 5, 1, 2]] {
+            let n: usize = dims.iter().product();
+            let grad: Vec<f32> = (0..n).map(|j| (j as f32) * 0.25 - 1.0).collect();
+            let mut want_s = zeros(&dims);
+            let mut got_s = zeros(&dims);
+            let mut scratch = Scratch::new();
+            reference::accumulate(&dims, &mut want_s, None, &grad).unwrap();
+            accumulate(&dims, &mut got_s, None, &grad, &mut scratch).unwrap();
+            for (a, b) in want_s.iter().zip(&got_s) {
+                assert_bits_eq(a, b, &format!("dims {dims:?}"));
+            }
+            let mut want = vec![1.0f32; n];
+            let mut got = vec![1.0f32; n];
+            reference::apply(
+                &dims,
+                &want_s,
+                1e-6,
+                EpsMode::InsideProduct,
+                None,
+                0,
+                &mut want,
+                &grad,
+                0.2,
+            );
+            apply(
+                &dims,
+                &got_s,
+                1e-6,
+                EpsMode::InsideProduct,
+                None,
+                0,
+                &mut got,
+                &grad,
+                0.2,
+                &mut scratch,
+            );
+            assert_bits_eq(&want, &got, &format!("apply dims {dims:?}"));
+        }
+    }
+
+    #[test]
+    fn accumulate_rejects_bad_inputs() {
+        let mut scratch = Scratch::new();
+        let mut s = zeros(&[2, 3]);
+        assert!(accumulate(&[2, 3], &mut s, None, &[0.0; 5], &mut scratch).is_err());
+        assert!(accumulate(&[], &mut Vec::<Vec<f32>>::new(), None, &[], &mut scratch).is_err());
+        assert!(accumulate(&[2, 0], &mut s, None, &[], &mut scratch).is_err());
+        let mut one = zeros(&[6]);
+        assert!(accumulate(&[2, 3], &mut one, None, &[0.0; 6], &mut scratch).is_err());
+    }
+}

@@ -1,9 +1,10 @@
 //! Extreme tensoring core: tensor indices, factorization planning, slice-sum
-//! accumulators, and optimizer memory accounting (the paper's Algorithm 1
-//! and its memory model).
+//! accumulators, the fused update kernels behind them, and optimizer memory
+//! accounting (the paper's Algorithm 1 and its memory model).
 
 pub mod accumulator;
 pub mod index;
+pub mod kernels;
 pub mod memory;
 pub mod planner;
 

@@ -1,0 +1,116 @@
+//! Allocation regression for the optimizer hot path: after a warm-up pass
+//! (which grows the `OptState`-owned scratch arena to its high-water mark),
+//! a full `step_all` over ET and ET∞ performs **zero** heap allocations —
+//! under both the dense `f32` and the block-quantized `q8` state backend.
+//!
+//! The counter is a thread-local inside a wrapping global allocator, so
+//! only allocations made by *this* test's thread are counted (the harness
+//! may run other threads). `Cell<u64>` is const-initialized and has no
+//! destructor, so the counter itself never allocates or recurses.
+
+use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
+use extensor::tensoring::{OptimizerKind, StateBackend};
+use extensor::util::rng::Pcg64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Transformer-flavored groups, deliberately including a general-p conv
+/// shape so the chunked accumulate path (not just the 1-D/2-D fast paths)
+/// is exercised.
+fn groups() -> Vec<GroupSpec> {
+    vec![
+        GroupSpec::new("embed", &[200, 64]),
+        GroupSpec::new("wq", &[64, 64]),
+        GroupSpec::new("ln", &[64]),
+        GroupSpec::new("conv", &[8, 4, 3, 3]),
+    ]
+}
+
+#[test]
+fn et_step_all_is_allocation_free_after_warmup() {
+    let gs = groups();
+    let mut rng = Pcg64::seeded(42);
+    let grads: Vec<Vec<f32>> = gs
+        .iter()
+        .map(|g| {
+            let mut v = vec![0.0f32; g.numel()];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+
+    let kinds =
+        [OptimizerKind::Et(1), OptimizerKind::Et(2), OptimizerKind::Et(3), OptimizerKind::EtInf];
+    for backend in [StateBackend::DenseF32, StateBackend::q8()] {
+        for kind in kinds {
+            let hyper = Hyper { backend, ..Hyper::default() };
+            let mut opt = optim::build_state(kind, &gs, &hyper);
+            let mut params: Vec<Vec<f32>> =
+                gs.iter().map(|g| vec![0.1f32; g.numel()]).collect();
+            // Warm-up: grows the scratch arena (kernel buffers + q8 decode
+            // vectors) to its high-water mark across all groups.
+            for _ in 0..3 {
+                opt.next_step();
+                opt.step_all(&mut params, &grads, 1e-3).unwrap();
+            }
+            // Steady state: zero heap allocations over several full steps.
+            let before = allocs();
+            for _ in 0..5 {
+                opt.next_step();
+                opt.step_all(&mut params, &grads, 1e-3).unwrap();
+            }
+            let after = allocs();
+            assert_eq!(
+                after - before,
+                0,
+                "{kind:?} under {backend:?}: {} allocations in 5 steady-state steps",
+                after - before
+            );
+        }
+    }
+}
+
+/// The counter itself must observe ordinary allocations, or the zero
+/// assertion above would be vacuous.
+#[test]
+fn counter_sees_allocations() {
+    let before = allocs();
+    let v: Vec<u64> = (0..100).collect();
+    std::hint::black_box(&v);
+    let after = allocs();
+    assert!(after > before, "counting allocator not engaged");
+}
