@@ -1,0 +1,199 @@
+//! Plan execution: turn a [`StatePlan`] into a live [`StateOptimizer`]
+//! whose per-group update rule and per-buffer storage follow the plan.
+//!
+//! The rule is a per-group dispatch over the *existing* stateless rules —
+//! [`EtRule`] (with the planned tensor-index dims), [`AdaGradRule`], and
+//! [`EtInfRule`] — so a plan that happens to be uniform reproduces today's
+//! `StateOptimizer` arithmetic **bitwise** (the parity contract in
+//! `rust/tests/budget_plan.rs`): there is no separate "planned" arithmetic
+//! to drift. Mixed per-buffer storage comes from
+//! [`OptState::with_buf_layout`]; the quantized buffers round-trip through
+//! the same decode scratch the uniform quantized path uses.
+
+use super::solver::StatePlan;
+use crate::optim::adagrad::AdaGradRule;
+use crate::optim::etinf::EtInfRule;
+use crate::optim::extreme::EtRule;
+use crate::optim::{GroupSpec, Hyper, OptState, StateOptimizer, UpdateRule};
+use crate::tensoring::{group_state_buffer_lens, plan as plan_dims, Level, OptimizerKind,
+    StateBackend};
+use anyhow::Result;
+
+/// Per-group dispatch over the suite's stateless rules, driven by a
+/// [`StatePlan`]. Reports as the ET family (the same convention custom-dims
+/// ET uses): the plan, not the kind tag, is the source of truth.
+pub struct PlanRule {
+    kinds: Vec<OptimizerKind>,
+    et: EtRule,
+    ada: AdaGradRule,
+    inf: EtInfRule,
+}
+
+impl UpdateRule for PlanRule {
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::Et(1) // ET-family convention for non-uniform rules
+    }
+
+    fn name(&self) -> String {
+        "ET-plan".into()
+    }
+
+    fn step(
+        &self,
+        st: &mut OptState,
+        gi: usize,
+        x: &mut [f32],
+        g: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        match self.kinds[gi] {
+            OptimizerKind::Et(_) => self.et.step(st, gi, x, g, lr),
+            OptimizerKind::AdaGrad => self.ada.step(st, gi, x, g, lr),
+            OptimizerKind::EtInf => self.inf.step(st, gi, x, g, lr),
+            other => anyhow::bail!("state plan cannot execute kind {}", other.name()),
+        }
+    }
+}
+
+/// Metadata-only validation that `plan` is executable over `groups`: same
+/// names/shapes/order, plannable kinds only, per-buffer backend lists
+/// matching each kind's layout. Allocates nothing — callers that only need
+/// the check (e.g. `ShardedOptimizer::with_state_plan` before spawning
+/// workers) use this instead of building and discarding an optimizer.
+pub fn validate_plan(groups: &[GroupSpec], plan: &StatePlan) -> Result<()> {
+    anyhow::ensure!(
+        groups.len() == plan.per_group.len(),
+        "state plan covers {} groups, model has {}",
+        plan.per_group.len(),
+        groups.len()
+    );
+    for (g, c) in groups.iter().zip(&plan.per_group) {
+        anyhow::ensure!(
+            g.name == c.group && g.shape == c.shape,
+            "state plan group '{}' {:?} does not match model group '{}' {:?}",
+            c.group,
+            c.shape,
+            g.name,
+            g.shape
+        );
+        anyhow::ensure!(
+            matches!(
+                c.kind,
+                OptimizerKind::Et(_) | OptimizerKind::AdaGrad | OptimizerKind::EtInf
+            ),
+            "group '{}': state plan cannot execute kind {}",
+            g.name,
+            c.kind.name()
+        );
+        let expected = group_state_buffer_lens(c.kind, &g.shape).len();
+        anyhow::ensure!(
+            c.buf_backends.len() == expected,
+            "group '{}': plan lists {} buffer backends, layout has {} buffers",
+            g.name,
+            c.buf_backends.len(),
+            expected
+        );
+    }
+    Ok(())
+}
+
+/// Build a [`StateOptimizer`] executing `plan` over `groups`. The plan must
+/// describe exactly these groups (same names, shapes, order) and only
+/// plannable kinds (ET levels, AdaGrad, ET∞); `hyper.backend` is ignored —
+/// storage follows the plan's per-buffer backends.
+pub fn build_planned(
+    groups: &[GroupSpec],
+    plan: &StatePlan,
+    hyper: &Hyper,
+) -> Result<StateOptimizer> {
+    validate_plan(groups, plan)?;
+    // Tensor-index dims per group: the planner's dims for ET choices, a
+    // flat placeholder for the groups the EtRule never touches.
+    let dims: Vec<Vec<usize>> = groups
+        .iter()
+        .zip(&plan.per_group)
+        .map(|(g, c)| match c.kind {
+            OptimizerKind::Et(k) => plan_dims(&g.shape, Level::Et(k)),
+            _ => vec![g.numel()],
+        })
+        .collect();
+    let et = EtRule::with_dims(groups, &dims, hyper.eps, hyper.et_beta2)?;
+    let kinds: Vec<OptimizerKind> = plan.per_group.iter().map(|c| c.kind).collect();
+    let rule = PlanRule {
+        kinds,
+        et,
+        ada: AdaGradRule { eps: hyper.eps },
+        inf: EtInfRule { eps: hyper.eps },
+    };
+    let state =
+        OptState::with_buf_layout(OptimizerKind::Et(1), groups, StateBackend::DenseF32, |gi, g| {
+            let c = &plan.per_group[gi];
+            match c.kind {
+                OptimizerKind::EtInf => (Vec::new(), 1),
+                OptimizerKind::AdaGrad => {
+                    (vec![("s".to_string(), g.numel(), c.buf_backends[0])], 0)
+                }
+                _ => (
+                    dims[gi]
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &l)| (format!("s{i}"), l, c.buf_backends[i]))
+                        .collect(),
+                    0,
+                ),
+            }
+        });
+    Ok(StateOptimizer::from_parts(Box::new(rule), state))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Optimizer;
+    use crate::tensoring::StateBackend;
+
+    fn groups() -> Vec<GroupSpec> {
+        vec![GroupSpec::new("w", &[16, 32]), GroupSpec::new("b", &[32])]
+    }
+
+    #[test]
+    fn planned_bytes_match_live_allocation() {
+        let gs = groups();
+        let p = super::super::plan(&gs, 4096, &super::super::PlannerOptions::default()).unwrap();
+        let opt = build_planned(&gs, &p, &Hyper::default()).unwrap();
+        assert_eq!(opt.state_bytes(), p.total_bytes());
+    }
+
+    #[test]
+    fn rejects_mismatched_plans() {
+        let gs = groups();
+        let p = StatePlan::uniform(OptimizerKind::Et(2), StateBackend::DenseF32, &gs).unwrap();
+        // Wrong group order / membership.
+        let reversed: Vec<GroupSpec> = gs.iter().rev().cloned().collect();
+        assert!(build_planned(&reversed, &p, &Hyper::default()).is_err());
+        // Truncated plan.
+        let mut short = p.clone();
+        short.per_group.pop();
+        assert!(build_planned(&gs, &short, &Hyper::default()).is_err());
+        // Non-plannable kind.
+        let mut bad = p;
+        bad.per_group[0].kind = OptimizerKind::Adam;
+        assert!(build_planned(&gs, &bad, &Hyper::default()).is_err());
+    }
+
+    #[test]
+    fn planned_optimizer_descends() {
+        let gs = vec![GroupSpec::new("x", &[8, 8])];
+        let p = super::super::plan(&gs, 600, &super::super::PlannerOptions::default()).unwrap();
+        let mut opt = build_planned(&gs, &p, &Hyper::default()).unwrap();
+        let mut x = vec![1.5f32; 64];
+        let loss = |x: &[f32]| x.iter().map(|&v| 0.5 * v * v).sum::<f32>();
+        let initial = loss(&x);
+        for _ in 0..400 {
+            let g: Vec<f32> = x.to_vec();
+            opt.next_step();
+            opt.step(0, &mut x, &g, 0.1).unwrap();
+        }
+        assert!(loss(&x) < initial * 0.2, "{initial} -> {}", loss(&x));
+    }
+}

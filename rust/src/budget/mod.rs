@@ -1,0 +1,45 @@
+//! Budget planner: auto-configure **ET level × state backend per parameter
+//! group** under a byte budget.
+//!
+//! The paper's central result is a memory/expressivity tradeoff — an
+//! optimizer needs very little memory to benefit from preconditioning, but
+//! *how little* is a per-group choice the configuration surface used to
+//! force globally by hand (`run.host_optimizer` + `run.state_backend`).
+//! This subsystem turns that tradeoff into a solvable planning problem:
+//! given `run.opt_memory_budget`, pick the best `(kind, backend)` per group.
+//!
+//! ```text
+//!   GroupSpecs ──▶ model      per-group candidate ladders:
+//!                  (model.rs)  {ET1..ET4, ET∞, AdaGrad} × {f32, q8, nf4},
+//!                              costed in exact bytes (tensoring::memory's
+//!                              try_* entry points), scored in preconditioner
+//!                              DOF × backend fidelity, Pareto-pruned
+//!        │
+//!        ▼
+//!   solver (solver.rs)        greedy-by-marginal-DOF-per-byte jumps along
+//!        │                    each ladder (exact-ish DP for small group
+//!        ▼                    counts) — budget-respecting + budget-monotone
+//!   StatePlan                 (rust/tests/budget_plan.rs)
+//!        │
+//!        ▼
+//!   exec (exec.rs)            build_planned: per-group rule dispatch over
+//!                             the existing stateless rules + per-buffer
+//!                             mixed StateBuf backends; uniform plans are
+//!                             bitwise-identical to the plain StateOptimizer
+//! ```
+//!
+//! Consumers: `ettrain plan` (print the chosen plan without running),
+//! `run.opt_memory_budget` in the trainer config / `JobSpec` (host runs
+//! execute the plan, sharded via `ShardedOptimizer::with_state_plan` whose
+//! placement is costed from the plan's per-group bytes), the convex
+//! `planned` optimizer spelling, and `ettrain experiment pareto` (the
+//! memory-vs-quality frontier, `BENCH_pareto.json`).
+
+pub mod exec;
+pub mod model;
+pub mod solver;
+
+pub use exec::{build_planned, validate_plan, PlanRule};
+pub use model::{backend_fidelity, candidates, preconditioner_dof, CandidateConfig,
+    PlannerOptions};
+pub use solver::{plan, GroupChoice, StatePlan};

@@ -1,0 +1,241 @@
+//! The cost/benefit model: everything the solver knows about one candidate
+//! `(ET level, state backend)` configuration of one parameter group.
+//!
+//! **Cost** is exact physical bytes, from the same
+//! [`crate::tensoring::memory`] accounting the paper's tables report —
+//! per buffer, because a candidate may mix backends (quantize only the
+//! large mode-0 accumulators, keep small factors dense). The `try_*`
+//! accounting entry points gate unrepresentable configs (e.g. a quantized
+//! backend on ET∞'s wide-scalar-only state) out of the candidate set as
+//! typed, group-named errors.
+//!
+//! **Benefit** is an expressivity score: the preconditioner's degrees of
+//! freedom — how many independent second-moment estimates it maintains for
+//! the group, the quantity the paper's §3 regret bounds degrade in as
+//! tensoring deepens. Full AdaGrad has `numel` DOF, ET with index dims
+//! `(d_1..d_p)` has `Σ dᵢ`, ET∞ has one. Quantized storage scales each
+//! buffer's DOF by a fidelity factor (one quantization bin of the code
+//! range), so an 8-bit accumulator is worth slightly less than a dense one
+//! and a 4-bit accumulator less still:
+//!
+//! ```text
+//! expressivity = Σ_buffers fidelity(backend_i) · dof_i  (+ wide scalars at 1.0)
+//! ```
+
+use crate::optim::GroupSpec;
+use crate::tensoring::memory::try_group_state_bytes;
+use crate::tensoring::{group_state_buffer_lens, group_wide_scalars, OptimizerKind, StateBackend};
+
+/// DOF multiplier for a storage backend: `1 − 1/levels`, i.e. one
+/// quantization bin of the code range. Dense `f32` is the reference (1.0);
+/// stochastic-rounding variants share their base backend's fidelity (SR
+/// changes the rounding statistics, not the resolution).
+pub fn backend_fidelity(backend: StateBackend) -> f64 {
+    match backend {
+        StateBackend::DenseF32 => 1.0,
+        StateBackend::QuantizedQ8 { .. } => 1.0 - 1.0 / 255.0,
+        StateBackend::QuantizedNf4 { .. } => 1.0 - 1.0 / 15.0,
+    }
+}
+
+/// Preconditioner degrees of freedom for `kind` on a group of `shape` —
+/// the number of independent accumulator scalars (wide scalars included).
+pub fn preconditioner_dof(kind: OptimizerKind, shape: &[usize]) -> usize {
+    group_state_buffer_lens(kind, shape).iter().sum::<usize>() + group_wide_scalars(kind)
+}
+
+/// One candidate configuration of one group: a choice of optimizer kind
+/// (ET level / AdaGrad / ET∞) and storage backend, costed in exact bytes
+/// and scored in effective DOF. `buf_backends` records the per-buffer
+/// mixed-backend assignment the candidate actually uses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CandidateConfig {
+    pub kind: OptimizerKind,
+    /// The nominal backend the candidate was generated for (what config
+    /// strings and tables display).
+    pub backend: StateBackend,
+    /// Actual per-buffer storage: buffers shorter than
+    /// [`PlannerOptions::min_quant_len`] stay dense even under a quantized
+    /// nominal backend (the block-header overhead would cancel the saving
+    /// and the small factors carry outsized signal).
+    pub buf_backends: Vec<StateBackend>,
+    pub bytes: usize,
+    pub expressivity: f64,
+}
+
+/// Knobs for candidate enumeration and the solver.
+#[derive(Clone, Debug)]
+pub struct PlannerOptions {
+    /// Deepest ET level enumerated (the paper's tables stop at ET3; the
+    /// planner also offers ET4 for very large groups).
+    pub max_level: u8,
+    /// Nominal backends enumerated per level.
+    pub backends: Vec<StateBackend>,
+    /// Buffers shorter than this stay dense under quantized candidates.
+    pub min_quant_len: usize,
+    /// Group counts up to this use the exact-ish DP solver; larger models
+    /// use greedy-by-marginal-expressivity-per-byte over concave ladders.
+    pub dp_max_groups: usize,
+}
+
+impl Default for PlannerOptions {
+    fn default() -> Self {
+        PlannerOptions {
+            max_level: 4,
+            backends: vec![StateBackend::DenseF32, StateBackend::q8(), StateBackend::nf4()],
+            min_quant_len: 256,
+            dp_max_groups: 8,
+        }
+    }
+}
+
+/// Exact bytes and expressivity score for one group under an explicit
+/// per-buffer backend assignment (`buf_backends` parallel to the kind's
+/// buffer layout) — the single costing formula shared by candidate
+/// enumeration and forced uniform plans, so the two can never diverge.
+pub(crate) fn cost_and_score(
+    kind: OptimizerKind,
+    shape: &[usize],
+    buf_backends: &[StateBackend],
+) -> (usize, f64) {
+    let lens = group_state_buffer_lens(kind, shape);
+    debug_assert_eq!(lens.len(), buf_backends.len());
+    let wide = group_wide_scalars(kind);
+    let bytes =
+        lens.iter().zip(buf_backends).map(|(&l, bb)| bb.buf_bytes(l)).sum::<usize>() + wide * 8;
+    let score = lens
+        .iter()
+        .zip(buf_backends)
+        .map(|(&l, bb)| backend_fidelity(*bb) * l as f64)
+        .sum::<f64>()
+        + wide as f64;
+    (bytes, score)
+}
+
+/// Build one candidate, or `None` when the accounting rejects the
+/// (kind, backend) pair as unrepresentable for this group.
+fn candidate(
+    group: &GroupSpec,
+    kind: OptimizerKind,
+    backend: StateBackend,
+    opts: &PlannerOptions,
+) -> Option<CandidateConfig> {
+    try_group_state_bytes(&group.name, kind, &group.shape, backend).ok()?;
+    let buf_backends: Vec<StateBackend> = group_state_buffer_lens(kind, &group.shape)
+        .iter()
+        .map(|&l| {
+            if backend.is_quantized() && l < opts.min_quant_len {
+                StateBackend::DenseF32
+            } else {
+                backend
+            }
+        })
+        .collect();
+    let (bytes, expressivity) = cost_and_score(kind, &group.shape, &buf_backends);
+    Some(CandidateConfig { kind, backend, buf_backends, bytes, expressivity })
+}
+
+/// Enumerate the Pareto-optimal candidate ladder for one group, sorted by
+/// ascending bytes with strictly increasing expressivity. Element 0 is the
+/// cheapest feasible configuration (the degenerate-budget fallback).
+pub fn candidates(group: &GroupSpec, opts: &PlannerOptions) -> Vec<CandidateConfig> {
+    let mut out = Vec::new();
+    // ET∞ is f32-only: its single wide scalar is never quantized, so a
+    // quantized ET∞ "candidate" would be indistinguishable from the dense
+    // one (and the try_ accounting rejects it).
+    out.extend(candidate(group, OptimizerKind::EtInf, StateBackend::DenseF32, opts));
+    // Shallow levels first so an equal-cost tie resolves to the shallowest
+    // level (ET3 over an ET4 whose extra split was a no-op).
+    for k in 1..=opts.max_level.max(1) {
+        for &backend in &opts.backends {
+            out.extend(candidate(group, OptimizerKind::Et(k), backend, opts));
+        }
+    }
+    for &backend in &opts.backends {
+        out.extend(candidate(group, OptimizerKind::AdaGrad, backend, opts));
+    }
+    // Pareto prune: sort by (bytes asc, expressivity desc), keep only
+    // strictly expressivity-improving entries. Ties resolve to the earliest
+    // generated candidate (stable sort), deterministically.
+    out.sort_by(|a, b| {
+        a.bytes
+            .cmp(&b.bytes)
+            .then(b.expressivity.partial_cmp(&a.expressivity).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    let mut pruned: Vec<CandidateConfig> = Vec::with_capacity(out.len());
+    let mut best = f64::NEG_INFINITY;
+    for c in out {
+        if c.expressivity > best {
+            best = c.expressivity;
+            pruned.push(c);
+        }
+    }
+    pruned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_pareto_sorted() {
+        let g = GroupSpec::new("w", &[512, 512]);
+        let lad = candidates(&g, &PlannerOptions::default());
+        assert!(lad.len() >= 4, "expected a rich ladder, got {}", lad.len());
+        for pair in lad.windows(2) {
+            assert!(pair[0].bytes < pair[1].bytes, "bytes not strictly increasing");
+            assert!(
+                pair[0].expressivity < pair[1].expressivity,
+                "expressivity not strictly increasing"
+            );
+        }
+        // The cheapest entry is ET∞ (8 bytes of wide f64), the richest is
+        // full AdaGrad in f32 (numel scalars).
+        assert_eq!(lad[0].kind, OptimizerKind::EtInf);
+        assert_eq!(lad[0].bytes, 8);
+        let top = lad.last().unwrap();
+        assert_eq!(top.kind, OptimizerKind::AdaGrad);
+        assert_eq!(top.backend, StateBackend::DenseF32);
+        assert_eq!(top.bytes, 512 * 512 * 4);
+    }
+
+    #[test]
+    fn small_buffers_stay_dense_under_quantized_candidates() {
+        let g = GroupSpec::new("w", &[512, 512]);
+        let opts = PlannerOptions::default();
+        let lad = candidates(&g, &opts);
+        // ET2 dims for 512x512 are [16,32,16,32] — all below min_quant_len,
+        // so every quantized ET2 candidate collapses onto the dense one and
+        // is pruned; any surviving quantized candidate has at least one
+        // genuinely quantized buffer.
+        for c in &lad {
+            if c.backend.is_quantized() {
+                assert!(
+                    c.buf_backends.iter().any(|b| b.is_quantized()),
+                    "{c:?} is nominally quantized but stores everything dense"
+                );
+            }
+            for (bb, &len) in
+                c.buf_backends.iter().zip(group_state_buffer_lens(c.kind, &g.shape).iter())
+            {
+                if len < opts.min_quant_len {
+                    assert_eq!(*bb, StateBackend::DenseF32, "small buffer quantized: {c:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fidelity_orders_backends() {
+        assert!(backend_fidelity(StateBackend::DenseF32) > backend_fidelity(StateBackend::q8()));
+        assert!(backend_fidelity(StateBackend::q8()) > backend_fidelity(StateBackend::nf4()));
+        assert_eq!(backend_fidelity(StateBackend::q8()), backend_fidelity(StateBackend::q8sr()));
+    }
+
+    #[test]
+    fn dof_matches_paper_accounting() {
+        assert_eq!(preconditioner_dof(OptimizerKind::AdaGrad, &[10, 512]), 5120);
+        assert_eq!(preconditioner_dof(OptimizerKind::Et(1), &[10, 512]), 522);
+        assert_eq!(preconditioner_dof(OptimizerKind::EtInf, &[10, 512]), 1);
+    }
+}

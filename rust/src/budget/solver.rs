@@ -1,0 +1,487 @@
+//! The budget solver: pick one candidate configuration per group so the
+//! summed bytes respect `run.opt_memory_budget` and the summed expressivity
+//! is (near-)maximal.
+//!
+//! Two regimes, chosen by group count only (never by budget, so the
+//! answer is monotone in the budget by construction):
+//!
+//! * **DP** (small models, `≤ dp_max_groups`): a multiple-choice-knapsack
+//!   sweep that merges per-group ladders into a Pareto frontier of
+//!   `(total bytes, total expressivity)` states, deterministically thinned
+//!   to a budget-independent cap. The answer for budget `B` is the richest
+//!   state with `bytes ≤ B` — a fixed state set, so more budget can never
+//!   select a poorer state.
+//! * **Greedy** (everything else): start every group at its cheapest
+//!   feasible config, then repeatedly apply the affordable upgrade jump
+//!   with the best marginal expressivity per byte — jumps may skip
+//!   intermediate ladder entries, so a group can leap straight to a
+//!   far configuration whose intermediate steps are poor value. Within a
+//!   few percent of the DP answer on transformer-shaped group sets.
+//!
+//! Both paths are pinned by the property tests in
+//! `rust/tests/budget_plan.rs`: the budget is never exceeded, expressivity
+//! is monotone in the budget, and degenerate budgets (below the summed
+//! cheapest configs) fail with an error naming the shortfall.
+
+use super::model::{candidates, CandidateConfig, PlannerOptions};
+use crate::optim::GroupSpec;
+use crate::tensoring::memory::try_group_state_bytes;
+use crate::tensoring::{group_state_buffer_lens, OptimizerKind, StateBackend};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// The chosen configuration of one parameter group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupChoice {
+    pub group: String,
+    pub shape: Vec<usize>,
+    pub kind: OptimizerKind,
+    pub backend: StateBackend,
+    /// Per-state-buffer storage (mixed backends: small buffers may stay
+    /// dense under a quantized nominal backend).
+    pub buf_backends: Vec<StateBackend>,
+    pub bytes: usize,
+    pub expressivity: f64,
+}
+
+/// A solved (or forced) per-group state configuration — the serializable
+/// artifact `ettrain plan` prints and the planned execution paths consume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatePlan {
+    /// The budget the plan was solved under (`None` for forced plans).
+    pub budget_bytes: Option<u64>,
+    pub per_group: Vec<GroupChoice>,
+}
+
+impl StatePlan {
+    pub fn total_bytes(&self) -> usize {
+        self.per_group.iter().map(|c| c.bytes).sum()
+    }
+
+    pub fn total_expressivity(&self) -> f64 {
+        self.per_group.iter().map(|c| c.expressivity).sum()
+    }
+
+    /// Force a uniform `(kind, backend)` across every group — the bridge to
+    /// the pre-planner configuration surface (`run.host_optimizer` +
+    /// `run.state_backend`), and the configuration the parity tests pin:
+    /// a uniform-f32 plan executes bitwise-identically to the plain
+    /// `StateOptimizer` of the same kind.
+    pub fn uniform(
+        kind: OptimizerKind,
+        backend: StateBackend,
+        groups: &[GroupSpec],
+    ) -> Result<StatePlan> {
+        if !matches!(kind, OptimizerKind::Et(_) | OptimizerKind::AdaGrad | OptimizerKind::EtInf) {
+            bail!("a state plan can only force ET levels, AdaGrad, or ET∞ (got {})", kind.name());
+        }
+        let per_group = groups
+            .iter()
+            .map(|g| {
+                try_group_state_bytes(&g.name, kind, &g.shape, backend)
+                    .map_err(anyhow::Error::new)?;
+                let buf_backends =
+                    vec![backend; group_state_buffer_lens(kind, &g.shape).len()];
+                let (bytes, expressivity) =
+                    super::model::cost_and_score(kind, &g.shape, &buf_backends);
+                Ok(GroupChoice {
+                    group: g.name.clone(),
+                    shape: g.shape.clone(),
+                    kind,
+                    backend,
+                    buf_backends,
+                    bytes,
+                    expressivity,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StatePlan { budget_bytes: None, per_group })
+    }
+
+    /// Serialize (schema `state_plan/v1`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("state_plan/v1")),
+            (
+                "budget_bytes",
+                match self.budget_bytes {
+                    Some(b) => Json::num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("total_bytes", Json::num(self.total_bytes() as f64)),
+            ("total_expressivity", Json::num(self.total_expressivity())),
+            (
+                "groups",
+                Json::Arr(
+                    self.per_group
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("group", Json::str(c.group.clone())),
+                                (
+                                    "shape",
+                                    Json::Arr(
+                                        c.shape.iter().map(|&d| Json::num(d as f64)).collect(),
+                                    ),
+                                ),
+                                ("kind", Json::str(c.kind.name())),
+                                ("backend", Json::str(c.backend.name())),
+                                (
+                                    "buf_backends",
+                                    Json::Arr(
+                                        c.buf_backends
+                                            .iter()
+                                            .map(|b| Json::str(b.name()))
+                                            .collect(),
+                                    ),
+                                ),
+                                ("bytes", Json::num(c.bytes as f64)),
+                                ("expressivity", Json::num(c.expressivity)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a `state_plan/v1` document (the inverse of
+    /// [`StatePlan::to_json`]).
+    pub fn from_json(j: &Json) -> Result<StatePlan> {
+        let budget_bytes = match j.get("budget_bytes") {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(v.as_f64().context("budget_bytes must be a number")? as u64),
+        };
+        let groups = j
+            .get("groups")
+            .and_then(|g| g.as_arr())
+            .context("state plan missing 'groups' array")?;
+        let per_group = groups
+            .iter()
+            .map(|g| {
+                let name =
+                    g.get("group").and_then(|v| v.as_str()).context("choice missing 'group'")?;
+                let kind_s =
+                    g.get("kind").and_then(|v| v.as_str()).context("choice missing 'kind'")?;
+                let backend_s = g
+                    .get("backend")
+                    .and_then(|v| v.as_str())
+                    .context("choice missing 'backend'")?;
+                let buf_backends = g
+                    .get("buf_backends")
+                    .and_then(|v| v.as_arr())
+                    .context("choice missing 'buf_backends'")?
+                    .iter()
+                    .map(|b| {
+                        b.as_str()
+                            .and_then(StateBackend::parse)
+                            .with_context(|| format!("group '{name}': bad buffer backend"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(GroupChoice {
+                    group: name.to_string(),
+                    shape: g
+                        .get("shape")
+                        .and_then(|v| v.as_shape())
+                        .context("choice missing 'shape'")?,
+                    kind: OptimizerKind::parse(kind_s)
+                        .with_context(|| format!("group '{name}': unknown kind '{kind_s}'"))?,
+                    backend: StateBackend::parse(backend_s).with_context(|| {
+                        format!("group '{name}': unknown backend '{backend_s}'")
+                    })?,
+                    buf_backends,
+                    bytes: g
+                        .get("bytes")
+                        .and_then(|v| v.as_usize())
+                        .context("choice missing 'bytes'")?,
+                    expressivity: g
+                        .get("expressivity")
+                        .and_then(|v| v.as_f64())
+                        .context("choice missing 'expressivity'")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StatePlan { budget_bytes, per_group })
+    }
+}
+
+/// Solve: pick one candidate per group with `Σ bytes ≤ budget_bytes`,
+/// maximizing summed expressivity. A budget below the summed cheapest
+/// feasible configs is an error naming the shortfall.
+pub fn plan(
+    groups: &[GroupSpec],
+    budget_bytes: u64,
+    opts: &PlannerOptions,
+) -> Result<StatePlan> {
+    if groups.is_empty() {
+        bail!("budget plan: no parameter groups");
+    }
+    let ladders: Vec<Vec<CandidateConfig>> =
+        groups.iter().map(|g| candidates(g, opts)).collect();
+    for (g, lad) in groups.iter().zip(&ladders) {
+        if lad.is_empty() {
+            bail!("budget plan: group '{}' has no feasible configuration", g.name);
+        }
+    }
+    let min_total: u64 = ladders.iter().map(|l| l[0].bytes as u64).sum();
+    if budget_bytes < min_total {
+        let (worst_g, worst_lad) = groups
+            .iter()
+            .zip(&ladders)
+            .max_by_key(|(_, l)| l[0].bytes)
+            .expect("groups non-empty");
+        bail!(
+            "opt memory budget {budget_bytes} B is below the cheapest feasible total of \
+             {min_total} B for {} groups (largest minimum: group '{}' at {} B); raise the \
+             budget or drop groups",
+            groups.len(),
+            worst_g.name,
+            worst_lad[0].bytes
+        );
+    }
+    let picks = if groups.len() <= opts.dp_max_groups {
+        solve_dp(&ladders, budget_bytes)
+    } else {
+        solve_greedy(&ladders, budget_bytes)
+    };
+    let per_group = groups
+        .iter()
+        .zip(&ladders)
+        .zip(&picks)
+        .map(|((g, lad), &ci)| {
+            let c = &lad[ci];
+            GroupChoice {
+                group: g.name.clone(),
+                shape: g.shape.clone(),
+                kind: c.kind,
+                backend: c.backend,
+                buf_backends: c.buf_backends.clone(),
+                bytes: c.bytes,
+                expressivity: c.expressivity,
+            }
+        })
+        .collect();
+    let plan = StatePlan { budget_bytes: Some(budget_bytes), per_group };
+    debug_assert!(plan.total_bytes() as u64 <= budget_bytes);
+    Ok(plan)
+}
+
+/// Greedy-by-marginal-expressivity-per-byte: start every group at its
+/// cheapest config, then repeatedly apply the single *affordable* upgrade
+/// jump (from a group's current config to any later ladder point) with the
+/// highest Δexpressivity/Δbytes, deterministic tie-break toward the lower
+/// group index and the smaller jump. Considering jumps to *every* later
+/// point — not only the next one — is what lets a group leap straight to a
+/// far ladder entry when its intermediate steps are poor value. Returns one
+/// ladder index per group. Budget-respect is by construction (only
+/// affordable jumps apply); monotonicity in the budget is pinned by the
+/// property suite in `rust/tests/budget_plan.rs`.
+fn solve_greedy(ladders: &[Vec<CandidateConfig>], budget_bytes: u64) -> Vec<usize> {
+    let n = ladders.len();
+    let mut pick = vec![0usize; n];
+    let mut remaining =
+        budget_bytes - ladders.iter().map(|l| l[0].bytes as u64).sum::<u64>();
+    loop {
+        // (ratio, gi, target ladder index)
+        let mut best: Option<(f64, usize, usize)> = None;
+        for (gi, ladder) in ladders.iter().enumerate() {
+            let cur = &ladder[pick[gi]];
+            for (j, cand) in ladder.iter().enumerate().skip(pick[gi] + 1) {
+                let dbytes = (cand.bytes - cur.bytes) as u64;
+                if dbytes > remaining {
+                    break; // ladder bytes ascend: later jumps cost more
+                }
+                let ratio = (cand.expressivity - cur.expressivity) / dbytes as f64;
+                let better = match best {
+                    None => true,
+                    Some((r, bg, bj)) => {
+                        ratio > r || (ratio == r && (gi, j) < (bg, bj))
+                    }
+                };
+                if better {
+                    best = Some((ratio, gi, j));
+                }
+            }
+        }
+        let Some((_, gi, j)) = best else { break };
+        remaining -= (ladders[gi][j].bytes - ladders[gi][pick[gi]].bytes) as u64;
+        pick[gi] = j;
+    }
+    pick
+}
+
+/// Budget-independent cap on the DP frontier size. Thinning keeps the
+/// endpoints and an even stride, so the state set — and therefore the
+/// budget → answer mapping — is a fixed, monotone step function.
+const DP_STATE_CAP: usize = 2048;
+
+#[derive(Clone)]
+struct DpState {
+    bytes: u64,
+    expr: f64,
+    picks: Vec<usize>,
+}
+
+/// Multiple-choice knapsack over the per-group ladders with Pareto pruning.
+/// Precondition (checked by [`plan`]): the all-cheapest combination fits.
+fn solve_dp(ladders: &[Vec<CandidateConfig>], budget_bytes: u64) -> Vec<usize> {
+    let mut states = vec![DpState { bytes: 0, expr: 0.0, picks: Vec::new() }];
+    for ladder in ladders {
+        let mut next: Vec<DpState> = Vec::with_capacity(states.len() * ladder.len());
+        for s in &states {
+            for (ci, c) in ladder.iter().enumerate() {
+                let mut picks = Vec::with_capacity(s.picks.len() + 1);
+                picks.extend_from_slice(&s.picks);
+                picks.push(ci);
+                next.push(DpState {
+                    bytes: s.bytes + c.bytes as u64,
+                    expr: s.expr + c.expressivity,
+                    picks,
+                });
+            }
+        }
+        next.sort_by(|a, b| {
+            a.bytes
+                .cmp(&b.bytes)
+                .then(b.expr.partial_cmp(&a.expr).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        let mut pruned: Vec<DpState> = Vec::with_capacity(next.len().min(DP_STATE_CAP));
+        let mut best = f64::NEG_INFINITY;
+        for s in next {
+            if s.expr > best {
+                best = s.expr;
+                pruned.push(s);
+            }
+        }
+        if pruned.len() > DP_STATE_CAP {
+            let last = pruned.len() - 1;
+            let mut thinned = Vec::with_capacity(DP_STATE_CAP);
+            let mut prev = usize::MAX;
+            for j in 0..DP_STATE_CAP {
+                let idx = j * last / (DP_STATE_CAP - 1);
+                if idx != prev {
+                    thinned.push(pruned[idx].clone());
+                    prev = idx;
+                }
+            }
+            pruned = thinned;
+        }
+        states = pruned;
+    }
+    // Frontier expressivity increases with bytes: take the richest state
+    // that fits. The all-cheapest state (index 0) fits by precondition.
+    states
+        .iter()
+        .rev()
+        .find(|s| s.bytes <= budget_bytes)
+        .expect("caller verified the cheapest combination fits")
+        .picks
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn groups() -> Vec<GroupSpec> {
+        vec![
+            GroupSpec::new("embed", &[2000, 512]),
+            GroupSpec::new("w", &[512, 512]),
+            GroupSpec::new("ln", &[512]),
+        ]
+    }
+
+    #[test]
+    fn plan_respects_budget_and_records_it() {
+        let gs = groups();
+        let opts = PlannerOptions::default();
+        for budget in [64u64, 4096, 1 << 20, 1 << 26] {
+            let p = plan(&gs, budget, &opts).unwrap();
+            assert!(p.total_bytes() as u64 <= budget, "budget {budget}");
+            assert_eq!(p.budget_bytes, Some(budget));
+            assert_eq!(p.per_group.len(), gs.len());
+        }
+    }
+
+    #[test]
+    fn huge_budget_buys_full_per_coordinate_f32() {
+        let gs = groups();
+        let p = plan(&gs, 1 << 30, &PlannerOptions::default()).unwrap();
+        for (c, g) in p.per_group.iter().zip(&gs) {
+            // Every group gets numel dense DOF — full AdaGrad for matrices
+            // (for a vector, ET1 is the same configuration and wins ties).
+            assert_eq!(c.backend, StateBackend::DenseF32, "{c:?}");
+            assert_eq!(c.bytes, g.numel() * 4, "{c:?}");
+            assert!((c.expressivity - g.numel() as f64).abs() < 1e-6, "{c:?}");
+        }
+        assert_eq!(p.per_group[0].kind, OptimizerKind::AdaGrad); // embed matrix
+        let numel: usize = gs.iter().map(|g| g.numel()).sum();
+        assert_eq!(p.total_bytes(), numel * 4);
+    }
+
+    #[test]
+    fn tiny_budget_is_a_clear_error() {
+        let gs = groups();
+        let err = plan(&gs, 10, &PlannerOptions::default()).unwrap_err().to_string();
+        assert!(err.contains("budget 10"), "{err}");
+        assert!(err.contains("cheapest feasible total"), "{err}");
+        // The exact floor (every group at its cheapest) succeeds.
+        let min: u64 = gs
+            .iter()
+            .map(|g| candidates(g, &PlannerOptions::default())[0].bytes as u64)
+            .sum();
+        let p = plan(&gs, min, &PlannerOptions::default()).unwrap();
+        assert_eq!(p.total_bytes() as u64, min);
+    }
+
+    #[test]
+    fn greedy_and_dp_agree_on_direction() {
+        // Same inputs through both solvers (forced by dp_max_groups): the
+        // DP answer is never worse than greedy's.
+        let gs = groups();
+        let dp_opts = PlannerOptions { dp_max_groups: 8, ..PlannerOptions::default() };
+        let greedy_opts = PlannerOptions { dp_max_groups: 0, ..PlannerOptions::default() };
+        for budget in [512u64, 8192, 1 << 18] {
+            let dp = plan(&gs, budget, &dp_opts).unwrap();
+            let gr = plan(&gs, budget, &greedy_opts).unwrap();
+            assert!(
+                dp.total_expressivity() >= gr.total_expressivity() - 1e-9,
+                "budget {budget}: dp {} < greedy {}",
+                dp.total_expressivity(),
+                gr.total_expressivity()
+            );
+            assert!(gr.total_bytes() as u64 <= budget);
+        }
+    }
+
+    #[test]
+    fn uniform_plan_covers_every_group() {
+        let gs = groups();
+        let p = StatePlan::uniform(OptimizerKind::Et(2), StateBackend::DenseF32, &gs).unwrap();
+        assert_eq!(p.per_group.len(), gs.len());
+        for (c, g) in p.per_group.iter().zip(&gs) {
+            assert_eq!(c.kind, OptimizerKind::Et(2));
+            assert_eq!(c.group, g.name);
+            assert!(c.buf_backends.iter().all(|b| *b == StateBackend::DenseF32));
+        }
+        // Quantized ET∞ is unrepresentable — typed error names the group.
+        let err = StatePlan::uniform(OptimizerKind::EtInf, StateBackend::nf4(), &gs)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("embed"), "{err}");
+        // Non-plannable kinds are rejected.
+        assert!(StatePlan::uniform(OptimizerKind::Adam, StateBackend::DenseF32, &gs).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let gs = groups();
+        let p = plan(&gs, 1 << 16, &PlannerOptions::default()).unwrap();
+        let j = p.to_json();
+        let back = StatePlan::from_json(&j).unwrap();
+        assert_eq!(back, p);
+        let forced = StatePlan::uniform(OptimizerKind::Et(1), StateBackend::q8(), &gs).unwrap();
+        assert_eq!(StatePlan::from_json(&forced.to_json()).unwrap(), forced);
+    }
+}

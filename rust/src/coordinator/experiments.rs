@@ -763,6 +763,111 @@ pub fn quantized_state(session: &Session, opts: &ExpOptions) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Pareto frontier — budget x task, the paper's memory-vs-quality curve
+// ---------------------------------------------------------------------------
+
+/// The budget-planner frontier: sweep `opt_memory_budget` × convex task,
+/// each cell solving a `budget::StatePlan` for the weight group and
+/// training under it (`ConvexOpt::Planned`). The output is the paper-style
+/// memory-vs-quality curve with the x-axis in *planned bytes* — ET∞ at
+/// 8 B up through full AdaGrad in f32 — written to
+/// `results/pareto.json` and, machine-readable next to `BENCH_optim.json`,
+/// to `BENCH_pareto.json` (schema `bench_pareto/v1`; `BENCH_PARETO_OUT`
+/// overrides the path). Pure rust, no artifacts needed.
+pub fn pareto(session: &Session, opts: &ExpOptions) -> Result<()> {
+    use crate::budget::{plan as solve_plan, PlannerOptions};
+    // Smaller-than-default data so the full sweep stays CI-sized; the
+    // group is still big enough that the ladder spans three decades of
+    // bytes (ET∞ at 8 B up to full AdaGrad/f32 at 10 KiB).
+    let base = ConvexConfig { n: 2000, d: 256, k: 10, ..ConvexConfig::default() };
+    let tasks: Vec<(&str, ConvexConfig)> = vec![
+        ("convex", ConvexConfig { seed: opts.seed ^ 0x7a12, ..base.clone() }),
+        ("convex-hard", ConvexConfig { cond: 1e6, seed: opts.seed ^ 0x7a13, ..base }),
+    ];
+    // Ladder from the ET∞ floor past full AdaGrad/f32 (k·d·4 = 10240 B for
+    // the 10x256 group), so the frontier saturates visibly at the top.
+    let budgets: [u64; 6] = [16, 256, 1024, 4096, 10 << 10, 16 << 10];
+    let iters = opts.steps.max(100) as usize;
+    let job_name = |task: &str, budget: u64| format!("pareto_{task}_{budget}");
+    let mut specs = Vec::new();
+    for (task, data) in &tasks {
+        for &budget in &budgets {
+            specs.push(JobSpec::convex(
+                job_name(task, budget),
+                ConvexSpec {
+                    data: data.clone(),
+                    iters,
+                    lr: 0.05,
+                    opt: ConvexOpt::Planned { budget },
+                    measure_after: true,
+                    curve_every: 0,
+                    ..ConvexSpec::default()
+                },
+            ));
+        }
+    }
+    let report = submit(session, opts, &specs, "pareto")?;
+
+    let mut table = Table::new(
+        "Pareto frontier — opt-memory budget vs quality (budget::plan per cell)",
+        &["Task", "Budget", "Plan bytes", "Choice", "Expressivity", "Final loss", "Accuracy"],
+    );
+    let mut rows = Vec::new();
+    for (task, data) in &tasks {
+        let groups = vec![crate::optim::GroupSpec::new("w", &[data.k, data.d])];
+        for &budget in &budgets {
+            let out = report
+                .outcome(&job_name(task, budget))?
+                .as_convex()
+                .context("convex outcome")?;
+            // Re-solve for display: the planner is deterministic, so this
+            // is exactly the plan the job executed.
+            let plan = solve_plan(&groups, budget, &PlannerOptions::default())?;
+            let c = &plan.per_group[0];
+            let choice = format!("{}/{}", c.kind.name(), c.backend.name());
+            anyhow::ensure!(
+                plan.total_bytes() == out.state_bytes,
+                "pareto {task}/{budget}: plan bytes {} != live bytes {}",
+                plan.total_bytes(),
+                out.state_bytes
+            );
+            table.row(vec![
+                task.to_string(),
+                fmt_mem(budget as usize),
+                fmt_mem(plan.total_bytes()),
+                choice.clone(),
+                format!("{:.0}", plan.total_expressivity()),
+                format!("{:.4}", out.final_loss),
+                format!("{:.3}", out.accuracy),
+            ]);
+            rows.push(Json::obj(vec![
+                ("task", Json::str(*task)),
+                ("budget_bytes", Json::num(budget as f64)),
+                ("plan_bytes", Json::num(plan.total_bytes() as f64)),
+                ("choice", Json::str(choice)),
+                ("expressivity", Json::num(plan.total_expressivity())),
+                ("final_loss", Json::num(out.final_loss)),
+                ("accuracy", Json::num(out.accuracy)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+    println!("(budget ≥ plan bytes always; the gap is what the ladder could not spend)");
+    save_json(opts.out_dir.join("pareto.json"), &Json::Arr(rows.clone()))?;
+    let bench = Json::obj(vec![
+        ("schema", Json::str("bench_pareto/v1")),
+        ("iters", Json::num(iters as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let bench_path =
+        std::env::var("BENCH_PARETO_OUT").unwrap_or_else(|_| "BENCH_pareto.json".to_string());
+    std::fs::write(&bench_path, bench.to_string_pretty())
+        .with_context(|| format!("write {bench_path}"))?;
+    println!("wrote {bench_path}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // plan-index / memory-report — Tables 3 & B.1 and §5.2 memory accounting
 // ---------------------------------------------------------------------------
 

@@ -79,9 +79,24 @@
 //! (table2's equal-time column) always execute serially so their budget
 //! stays uncontended.
 //!
+//! The memory/expressivity tradeoff itself is a solvable planning problem:
+//! the **budget planner** (`budget`) enumerates per-group candidate
+//! configurations — ET level ∈ {1..4, ∞, full AdaGrad} × state backend ∈
+//! {f32, q8, nf4 (4-bit quantile), with stochastic-rounding variants} —
+//! costed in exact bytes by `tensoring::memory` and scored by
+//! preconditioner degrees of freedom, then solves for the best plan under
+//! `run.opt_memory_budget` (greedy-by-marginal-DOF-per-byte with a DP
+//! fallback). The resulting `budget::StatePlan` executes through the same
+//! stateless rules with per-buffer mixed storage (`ettrain plan` prints it;
+//! uniform-f32 plans are bitwise-identical to the plain optimizer path —
+//! `rust/tests/budget_plan.rs`), and `ettrain experiment pareto` sweeps
+//! budget × task into the paper-style memory-vs-quality frontier
+//! (`BENCH_pareto.json`).
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod budget;
 pub mod convex;
 pub mod coordinator;
 pub mod data;

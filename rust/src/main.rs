@@ -37,6 +37,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "experiment" => cmd_experiment(rest),
         "batch" => cmd_batch(rest),
+        "plan" => cmd_plan(rest),
         "plan-index" => cmd_plan_index(rest),
         "memory-report" => cmd_memory_report(rest),
         "list-artifacts" => cmd_list_artifacts(rest),
@@ -60,13 +61,18 @@ USAGE: ettrain <subcommand> [options]
   experiment <id> [--steps N] [--csv] [--jobs N] [--mem-budget BYTES]
         regenerate a paper table/figure as a concurrent job batch
         ids: table1 fig1 table2 fig2 fig3 table4 fig4 sharding quantized-state
-             ablation all
+             pareto ablation all
         (sharding sweeps the worker-shard engine; --shards caps the sweep;
          quantized-state sweeps state backend x optimizer, memory vs quality;
-         --jobs runs N jobs concurrently, --mem-budget bounds their summed
-         optimizer-state/param bytes via admission control)
+         pareto sweeps opt-memory budget x task via the budget planner and
+         emits BENCH_pareto.json; --jobs runs N jobs concurrently,
+         --mem-budget bounds their summed optimizer-state/param bytes via
+         admission control)
   batch <jobs.toml> [--jobs N] [--mem-budget BYTES]  run a custom job batch
         (each [job.<name>] section is one lm|convex|shard-bench|vision job)
+  plan [--budget 64m | --set run.opt_memory_budget=64m] [--layers N ...]
+        solve and print the per-group (ET level x backend) state plan for a
+        transformer under an optimizer-memory budget, without running
   plan-index --preset resnet18|transformer
   memory-report [--layers N] [--vocab V] [--d-model D] [--d-ff F]
   list-artifacts [--dir artifacts]
@@ -127,18 +133,9 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
 /// Parse `--mem-budget` (plain bytes, or with a k/m/g suffix).
 fn parse_mem_budget(raw: Option<&str>) -> Result<Option<u64>> {
     let Some(raw) = raw else { return Ok(None) };
-    let s = raw.trim().to_ascii_lowercase();
-    let (digits, mult): (&str, u64) = match s.chars().last() {
-        Some('k') => (&s[..s.len() - 1], 1 << 10),
-        Some('m') => (&s[..s.len() - 1], 1 << 20),
-        Some('g') => (&s[..s.len() - 1], 1 << 30),
-        _ => (s.as_str(), 1),
-    };
-    let n: u64 = digits
-        .trim()
-        .parse()
-        .map_err(|_| anyhow::anyhow!("--mem-budget: expected BYTES[k|m|g], got '{raw}'"))?;
-    Ok(Some(n.saturating_mul(mult)))
+    let n = extensor::util::cli::parse_byte_size(raw)
+        .map_err(|e| anyhow::anyhow!("--mem-budget: {e}"))?;
+    Ok(Some(n))
 }
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
@@ -160,7 +157,8 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
         ],
         positional: vec![(
             "id",
-            "table1|fig1|table2|fig2|fig3|table4|fig4|sharding|quantized-state|ablation|all",
+            "table1|fig1|table2|fig2|fig3|table4|fig4|sharding|quantized-state|pareto|\
+             ablation|all",
         )],
     };
     let args = Args::parse(&spec, argv)?;
@@ -179,6 +177,7 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
         "fig3" => experiments::fig3(&session, &opts),
         "sharding" => experiments::sharding(&session, &opts),
         "quantized-state" => experiments::quantized_state(&session, &opts),
+        "pareto" => experiments::pareto(&session, &opts),
         "table4" | "fig4" => {
             opts.csv |= id == "fig4";
             experiments::table4(&session, &opts)
@@ -193,6 +192,7 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
             experiments::table4(&session, &opts)?;
             experiments::sharding(&session, &opts)?;
             experiments::quantized_state(&session, &opts)?;
+            experiments::pareto(&session, &opts)?;
             extensor::coordinator::ablation::run(&session, &opts)
         }
         other => bail!("unknown experiment '{other}'"),
@@ -254,6 +254,109 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
     let failed = report.failed();
     if !failed.is_empty() {
         bail!("{} of {} jobs failed", failed.len(), specs.len());
+    }
+    Ok(())
+}
+
+/// `ettrain plan` — solve and print the per-group state plan for a
+/// transformer-shaped model under an optimizer-memory budget, without
+/// running anything. The budget comes from `--budget 64m` or the
+/// config-key spelling `--set run.opt_memory_budget=64m` (both accept
+/// k/m/g suffixes).
+fn cmd_plan(argv: &[String]) -> Result<()> {
+    use extensor::budget::{plan, PlannerOptions};
+    let spec = Spec {
+        name: "plan",
+        about: "solve the per-group (ET level x backend) plan for a byte budget",
+        options: vec![
+            ("budget", None, "optimizer-state byte budget (k/m/g suffix ok)"),
+            ("set", None, "config-style override; only run.opt_memory_budget is meaningful"),
+            ("layers", Some("6"), "transformer layers"),
+            ("vocab", Some("2000"), "vocabulary size"),
+            ("d-model", Some("512"), "model width"),
+            ("d-ff", Some("2048"), "feed-forward width"),
+            ("json", None, "also write the serialized StatePlan to this path"),
+        ],
+        flags: vec![],
+        positional: vec![],
+    };
+    let args = Args::parse(&spec, argv)?;
+    let mut budget: Option<u64> = match args.get("budget") {
+        Some(raw) => Some(
+            extensor::util::cli::parse_byte_size(raw)
+                .map_err(|e| anyhow::anyhow!("--budget: {e}"))?,
+        ),
+        None => None,
+    };
+    if let Some(raw) = args.get("set") {
+        for (k, v) in parse_set_overrides(raw)? {
+            match k.as_str() {
+                "run.opt_memory_budget" => {
+                    budget = Some(
+                        extensor::util::cli::parse_byte_size(&v)
+                            .map_err(|e| anyhow::anyhow!("--set {k}: {e}"))?,
+                    );
+                }
+                other => bail!(
+                    "plan: --set key '{other}' has no effect here \
+                     (only run.opt_memory_budget)"
+                ),
+            }
+        }
+    }
+    let budget = budget.context(
+        "plan needs a budget: --budget 64m or --set run.opt_memory_budget=64m",
+    )?;
+    let groups = extensor::testing::transformer_groups(
+        args.get_usize("layers")?,
+        args.get_usize("vocab")?,
+        args.get_usize("d-model")?,
+        args.get_usize("d-ff")?,
+    );
+    let solved = plan(&groups, budget, &PlannerOptions::default())?;
+
+    let mut table = extensor::coordinator::report::Table::new(
+        &format!(
+            "State plan under {} B budget — {} B planned, expressivity {:.0}",
+            budget,
+            solved.total_bytes(),
+            solved.total_expressivity()
+        ),
+        &["Group", "Shape", "ET level", "Dims", "Backend", "Bytes", "DOF/param"],
+    );
+    for (g, c) in groups.iter().zip(&solved.per_group) {
+        let dims = match c.kind {
+            extensor::tensoring::OptimizerKind::Et(k) => format!(
+                "{:?}",
+                extensor::tensoring::plan(&g.shape, extensor::tensoring::Level::Et(k))
+            ),
+            extensor::tensoring::OptimizerKind::AdaGrad => "per-coordinate".to_string(),
+            _ => "group scalar".to_string(),
+        };
+        table.row(vec![
+            c.group.clone(),
+            format!("{:?}", c.shape),
+            c.kind.name(),
+            dims,
+            c.backend.name(),
+            c.bytes.to_string(),
+            format!("{:.4}", c.expressivity / g.numel().max(1) as f64),
+        ]);
+    }
+    println!("{}", table.render());
+    let params: usize = groups.iter().map(|g| g.numel()).sum();
+    println!(
+        "{} groups, {} params; plan uses {:.2}% of the budget \
+         ({:.4} opt scalars/param in f32-equivalents)",
+        groups.len(),
+        params,
+        100.0 * solved.total_bytes() as f64 / budget as f64,
+        solved.total_bytes() as f64 / 4.0 / params as f64
+    );
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, solved.to_json().to_string_pretty())
+            .with_context(|| format!("write {path}"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }

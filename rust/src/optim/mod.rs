@@ -51,8 +51,8 @@ pub mod state;
 
 pub use schedule::Schedule;
 pub use state::{
-    GroupExport, GroupState, OptState, Q8Buf, StateBuf, StateExport, StateOptimizer, StepScratch,
-    UpdateRule,
+    GroupExport, GroupState, Nf4Buf, OptState, Q8Buf, StateBuf, StateExport, StateOptimizer,
+    StepScratch, UpdateRule, NF4_LEVELS,
 };
 
 use crate::tensoring::{OptimizerKind, StateBackend};

@@ -393,6 +393,14 @@ fn run_convex(spec: &ConvexSpec, session: &Session, sink: &EventSink) -> Result<
 
     let mut driver = match &spec.opt {
         ConvexOpt::Kind(kind) => ConvexDriver::Opt(optim::build(*kind, &groups, &hyper)),
+        ConvexOpt::Planned { budget } => {
+            let plan = crate::budget::plan(
+                &groups,
+                *budget,
+                &crate::budget::PlannerOptions::default(),
+            )?;
+            ConvexDriver::Opt(Box::new(crate::budget::build_planned(&groups, &plan, &hyper)?))
+        }
         ConvexOpt::CustomEt { dims } => ConvexDriver::Opt(Box::new(optim::extreme::custom_et(
             &groups,
             vec![dims.clone()],

@@ -49,6 +49,10 @@ pub enum Workload {
 pub enum ConvexOpt {
     /// A suite optimizer built by `optim::build`.
     Kind(OptimizerKind),
+    /// A budget-planned optimizer: `budget::plan` picks the best
+    /// (ET level, backend) for the weight group within `budget` bytes and
+    /// the job executes the plan (the `ettrain experiment pareto` cell).
+    Planned { budget: u64 },
     /// An ET optimizer with explicit tensor-index dims for the single
     /// `k x d` weight group (the Figure 3 depth variants).
     CustomEt { dims: Vec<usize> },
@@ -222,6 +226,11 @@ impl JobSpec {
                         }
                     }
                     ConvexOpt::Kind(_) => {}
+                    ConvexOpt::Planned { budget } => {
+                        if *budget == 0 {
+                            bail!("job '{}': planned budget must be >= 1 byte", self.name);
+                        }
+                    }
                 }
             }
             Workload::ShardBench(s) => {
@@ -257,18 +266,33 @@ impl JobSpec {
                         self.name, cfg.artifact
                     )
                 })?;
-                match cfg.host_optimizer {
+                match (cfg.opt_memory_budget, cfg.host_optimizer) {
+                    // Budget-planned host path: the optimizer-state charge
+                    // is the solved plan's exact bytes (≤ the budget), not
+                    // a uniform-backend estimate.
+                    (Some(budget), _) => {
+                        let groups = m.group_specs();
+                        let plan = crate::budget::plan(
+                            &groups,
+                            budget,
+                            &crate::budget::PlannerOptions::default(),
+                        )
+                        .with_context(|| {
+                            format!("job '{}': cost accounting for the state plan", self.name)
+                        })?;
+                        8 * m.total_params() + plan.total_bytes()
+                    }
                     // Host path: params + grads live as host vectors; the
                     // optimizer state lives shard-local under the chosen
                     // backend (sharding partitions the same total).
-                    Some(kind) => {
+                    (None, Some(kind)) => {
                         let shapes: Vec<Vec<usize>> =
                             m.params.iter().map(|p| p.shape.clone()).collect();
                         8 * m.total_params()
                             + model_state_bytes(kind, &shapes, cfg.state_backend)
                     }
                     // Fused path: params + opt state as f32 literals.
-                    None => 4 * (m.total_params() + m.total_opt_state()),
+                    (None, None) => 4 * (m.total_params() + m.total_opt_state()),
                 }
             }
             Workload::Convex(c) => {
@@ -280,6 +304,19 @@ impl JobSpec {
                         &[vec![c.data.k, c.data.d]],
                         c.backend,
                     ),
+                    ConvexOpt::Planned { budget } => {
+                        let groups =
+                            vec![crate::optim::GroupSpec::new("w", &[c.data.k, c.data.d])];
+                        crate::budget::plan(
+                            &groups,
+                            *budget,
+                            &crate::budget::PlannerOptions::default(),
+                        )
+                        .with_context(|| {
+                            format!("job '{}': cost accounting for the state plan", self.name)
+                        })?
+                        .total_bytes()
+                    }
                     ConvexOpt::CustomEt { dims } | ConvexOpt::Ablate { dims, .. } => {
                         4 * dims.iter().sum::<usize>()
                     }
@@ -350,11 +387,18 @@ impl JobSpec {
                     kv("host_optimizer", q(&k.name()));
                 }
                 kv("state_backend", q(&cfg.state_backend.name()));
+                if let Some(b) = cfg.opt_memory_budget {
+                    kv("opt_memory_budget", b.to_string());
+                }
                 kv("resume", cfg.resume.to_string());
             }
             Workload::Convex(c) => {
                 match &c.opt {
                     ConvexOpt::Kind(kind) => kv("optimizer", q(&kind.name())),
+                    ConvexOpt::Planned { budget } => {
+                        kv("optimizer", q("planned"));
+                        kv("budget", budget.to_string());
+                    }
                     ConvexOpt::CustomEt { dims } => {
                         kv("optimizer", q("custom_et"));
                         kv("dims", format!("{dims:?}"));
@@ -461,11 +505,11 @@ const LM_KEYS: &[&str] = &[
     "type", "artifact", "eval_artifact", "artifact_dir", "out_dir", "steps", "eval_every",
     "eval_batches", "log_every", "checkpoint_every", "schedule", "seed", "vocab", "sentences",
     "max_seconds", "track_traces", "trace_every", "shards", "host_optimizer", "state_backend",
-    "resume",
+    "opt_memory_budget", "resume",
 ];
 const CONVEX_KEYS: &[&str] = &[
-    "type", "optimizer", "dims", "eps", "beta2", "per_factor_eps", "backend", "lr", "iters", "n",
-    "d", "k", "cond", "householder", "seed", "measure_after", "curve_every",
+    "type", "optimizer", "dims", "eps", "beta2", "per_factor_eps", "backend", "budget", "lr",
+    "iters", "n", "d", "k", "cond", "householder", "seed", "measure_after", "curve_every",
 ];
 const SHARD_BENCH_KEYS: &[&str] =
     &["type", "kind", "shards", "iters", "layers", "vocab", "d_model", "d_ff", "seed"];
@@ -512,6 +556,23 @@ fn job_from_config(cfg: &Config, name: &str) -> Result<JobSpec> {
             let opt_name = cfg.req_str(&key("optimizer"))?;
             let dims = cfg.get(&key("dims")).and_then(|v| v.as_usize_arr());
             let opt = match opt_name.as_str() {
+                "planned" => {
+                    let raw = cfg
+                        .get(&key("budget"))
+                        .context("planned needs a budget = <bytes> key")?;
+                    let budget = match raw {
+                        Value::Int(i) if *i > 0 => *i as u64,
+                        // Accept the same "64m"-style spelling as
+                        // run.opt_memory_budget.
+                        Value::Str(s) => crate::util::cli::parse_byte_size(s)
+                            .with_context(|| format!("job '{name}': bad budget '{s}'"))?,
+                        other => bail!(
+                            "job '{name}': budget must be positive bytes or a \
+                             \"64m\"-style string, got {other:?}"
+                        ),
+                    };
+                    ConvexOpt::Planned { budget }
+                }
                 "custom_et" => ConvexOpt::CustomEt {
                     dims: dims.context("custom_et needs a dims = [..] array")?,
                 },
@@ -610,10 +671,20 @@ mod tests {
             host_optimizer: Some(OptimizerKind::Et(2)),
             shards: 2,
             state_backend: StateBackend::q8(),
+            opt_memory_budget: Some(64 << 10),
             ..RunConfig::default()
         };
         vec![
             JobSpec::lm("lm_a", lm),
+            JobSpec::convex(
+                "pareto_cell",
+                ConvexSpec {
+                    opt: ConvexOpt::Planned { budget: 4096 },
+                    data: ConvexConfig { n: 300, d: 32, k: 4, ..ConvexConfig::default() },
+                    iters: 50,
+                    ..ConvexSpec::default()
+                },
+            ),
             JobSpec::convex(
                 "qs_adam",
                 ConvexSpec {
@@ -667,6 +738,7 @@ mod tests {
                     assert_eq!(a.host_optimizer, b.host_optimizer);
                     assert_eq!(a.shards, b.shards);
                     assert_eq!(a.state_backend, b.state_backend);
+                    assert_eq!(a.opt_memory_budget, b.opt_memory_budget);
                     assert_eq!(a.seed, b.seed);
                 }
                 (Workload::Convex(a), Workload::Convex(b)) => {
@@ -705,6 +777,11 @@ mod tests {
         let zero_steps =
             JobSpec::lm("z", RunConfig { steps: 0, ..RunConfig::default() });
         assert!(zero_steps.validate().is_err());
+        let zero_budget = JobSpec::convex(
+            "zb",
+            ConvexSpec { opt: ConvexOpt::Planned { budget: 0 }, ..ConvexSpec::default() },
+        );
+        assert!(zero_budget.validate().is_err());
     }
 
     #[test]
@@ -715,6 +792,31 @@ mod tests {
         assert!(batch_from_config(&missing_type).is_err());
         let bad_type = Config::parse("[job.a]\ntype = \"nope\"").unwrap();
         assert!(batch_from_config(&bad_type).is_err());
+    }
+
+    /// Planned budgets reject non-positive values and accept the
+    /// `run.opt_memory_budget` byte-size spelling.
+    #[test]
+    fn planned_budget_parses_strictly() {
+        let neg = Config::parse(
+            "[job.p]\ntype = \"convex\"\noptimizer = \"planned\"\nbudget = -4096",
+        )
+        .unwrap();
+        assert!(batch_from_config(&neg).is_err(), "negative budget must not wrap to u64");
+        let zero = Config::parse(
+            "[job.p]\ntype = \"convex\"\noptimizer = \"planned\"\nbudget = 0",
+        )
+        .unwrap();
+        assert!(batch_from_config(&zero).is_err());
+        let suffixed = Config::parse(
+            "[job.p]\ntype = \"convex\"\noptimizer = \"planned\"\nbudget = \"64k\"",
+        )
+        .unwrap();
+        let specs = batch_from_config(&suffixed).unwrap();
+        match &specs[0].workload {
+            Workload::Convex(c) => assert_eq!(c.opt, ConvexOpt::Planned { budget: 64 << 10 }),
+            _ => panic!("expected convex"),
+        }
     }
 
     /// A typoed key inside a job section is a hard error, not a silently

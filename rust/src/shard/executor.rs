@@ -22,8 +22,9 @@
 //! at 1 or 4 bitwise-identically (`rust/tests/host_checkpoint.rs`).
 
 use super::bucket::{bucketize, Bucket, DEFAULT_MIN_BUCKET_NUMEL};
-use super::partition::{partition, ShardPlan};
-use super::worker::{run_worker, GroupTask, Reply, Request};
+use super::partition::{partition, partition_planned, ShardPlan};
+use super::worker::{run_worker, GroupTask, Reply, Request, WorkerSpec};
+use crate::budget::StatePlan;
 use crate::optim::{GroupExport, GroupSpec, Hyper, Optimizer, StateExport};
 use crate::tensoring::OptimizerKind;
 use anyhow::{bail, Context, Result};
@@ -32,6 +33,9 @@ use std::thread::JoinHandle;
 
 pub struct ShardedOptimizer {
     kind: OptimizerKind,
+    /// Display label: the uniform kind's name, or "ET-plan" for
+    /// plan-driven engines.
+    label: String,
     plan: ShardPlan,
     /// Per-shard dispatch units over that shard's owned groups.
     buckets: Vec<Vec<Bucket>>,
@@ -70,6 +74,68 @@ impl ShardedOptimizer {
         min_bucket_numel: usize,
     ) -> Result<ShardedOptimizer> {
         let plan = partition(kind, groups, n_shards, max_state_per_shard)?;
+        Self::from_parts(kind, kind.name(), groups, plan, min_bucket_numel, |_, shard_groups| {
+            WorkerSpec::Uniform { kind, groups: shard_groups.to_vec(), hyper: hyper.clone() }
+        })
+    }
+
+    /// Plan-driven constructor: each worker executes its groups' chosen
+    /// `(ET level, backend)` configs from a [`crate::budget::StatePlan`],
+    /// and placement is costed from the plan's per-group bytes
+    /// ([`super::partition_planned`]) instead of assuming a uniform
+    /// backend. `hyper.backend` is ignored — storage follows the plan.
+    pub fn with_state_plan(
+        groups: &[GroupSpec],
+        hyper: &Hyper,
+        n_shards: usize,
+        state_plan: &StatePlan,
+    ) -> Result<ShardedOptimizer> {
+        // Validate the plan (metadata only, no allocation) in the caller's
+        // thread, before any worker exists — per-shard worker builds cannot
+        // fail after this.
+        crate::budget::validate_plan(groups, state_plan)?;
+        let plan = partition_planned(state_plan, groups, n_shards, None)?;
+        let shards = plan.shards.clone();
+        Self::from_parts(
+            // ET-family kind tag: the same convention custom-dims ET and
+            // the plan rule use (exports/imports round-trip within it).
+            OptimizerKind::Et(1),
+            "ET-plan".to_string(),
+            groups,
+            plan,
+            DEFAULT_MIN_BUCKET_NUMEL,
+            |s, shard_groups| {
+                // Slice the plan down to this shard's owned groups, in
+                // worker-local order.
+                let sub = StatePlan {
+                    budget_bytes: None,
+                    per_group: shards[s]
+                        .iter()
+                        .map(|&gi| state_plan.per_group[gi].clone())
+                        .collect(),
+                };
+                WorkerSpec::Planned {
+                    groups: shard_groups.to_vec(),
+                    plan: sub,
+                    hyper: hyper.clone(),
+                }
+            },
+        )
+    }
+
+    /// Shared constructor body: spawn one worker per shard, each building
+    /// its own optimizer on-thread from `spec_for(shard, shard_groups)` —
+    /// state allocation stays concurrent and thread-local, exactly as the
+    /// pre-planner engine behaved.
+    fn from_parts(
+        kind: OptimizerKind,
+        label: String,
+        groups: &[GroupSpec],
+        plan: ShardPlan,
+        min_bucket_numel: usize,
+        spec_for: impl Fn(usize, &[GroupSpec]) -> WorkerSpec,
+    ) -> Result<ShardedOptimizer> {
+        let n_shards = plan.n_shards();
         let mut local = vec![(0usize, 0usize); groups.len()];
         for (s, owned) in plan.shards.iter().enumerate() {
             for (li, &gi) in owned.iter().enumerate() {
@@ -93,10 +159,10 @@ impl ShardedOptimizer {
             let (rep_tx, rep_rx) = sync_channel::<Reply>(cap);
             let shard_groups: Vec<GroupSpec> =
                 plan.shards[s].iter().map(|&gi| groups[gi].clone()).collect();
-            let hy = hyper.clone();
+            let spec = spec_for(s, &shard_groups);
             let handle = std::thread::Builder::new()
                 .name(format!("et-shard-{s}"))
-                .spawn(move || run_worker(s, kind, shard_groups, hy, req_rx, rep_tx))
+                .spawn(move || run_worker(s, spec, req_rx, rep_tx))
                 .context("spawn shard worker")?;
             requests.push(req_tx);
             replies.push(rep_rx);
@@ -105,6 +171,7 @@ impl ShardedOptimizer {
 
         let mut engine = ShardedOptimizer {
             kind,
+            label,
             plan,
             buckets,
             local,
@@ -367,7 +434,7 @@ impl Optimizer for ShardedOptimizer {
     }
 
     fn name(&self) -> String {
-        format!("{}/{}sh", self.kind.name(), self.n_shards())
+        format!("{}/{}sh", self.label, self.n_shards())
     }
 
     fn next_step(&mut self) {
@@ -584,6 +651,38 @@ mod tests {
                 fresh.step_all(&mut got, &gr, 0.1).unwrap();
             }
             assert_eq!(want, got, "{shards} shards");
+        }
+    }
+
+    /// Plan-driven sharding is bitwise-identical to the single-threaded
+    /// planned optimizer at any shard count — the same contract the uniform
+    /// engine carries in `rust/tests/sharded_parity.rs`.
+    #[test]
+    fn planned_sharding_matches_single_threaded_plan() {
+        use crate::budget::{build_planned, plan as budget_plan, PlannerOptions};
+        let gs = groups();
+        let gr = grads(&gs, 31);
+        let hyper = Hyper::default();
+        let sp = budget_plan(&gs, 2048, &PlannerOptions::default()).unwrap();
+
+        let mut single = build_planned(&gs, &sp, &hyper).unwrap();
+        let mut want: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.3f32; g.numel()]).collect();
+        for _ in 0..4 {
+            single.next_step();
+            single.step_all(&mut want, &gr, 0.1).unwrap();
+        }
+
+        for shards in [1usize, 2, 4] {
+            let mut sharded =
+                ShardedOptimizer::with_state_plan(&gs, &hyper, shards, &sp).unwrap();
+            let mut got: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.3f32; g.numel()]).collect();
+            for _ in 0..4 {
+                sharded.next_step();
+                sharded.step_all(&mut got, &gr, 0.1).unwrap();
+            }
+            assert_eq!(want, got, "{shards} shards");
+            assert_eq!(sharded.state_bytes(), sp.total_bytes(), "{shards} shards");
+            assert!(sharded.name().contains("ET-plan"));
         }
     }
 

@@ -39,4 +39,6 @@ pub mod worker;
 
 pub use bucket::{bucketize, Bucket, DEFAULT_MIN_BUCKET_NUMEL};
 pub use executor::ShardedOptimizer;
-pub use partition::{group_cost, partition, GroupCost, ShardPlan};
+pub use partition::{
+    group_cost, partition, partition_planned, partition_with_costs, GroupCost, ShardPlan,
+};

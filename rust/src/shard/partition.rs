@@ -101,6 +101,20 @@ impl ShardPlan {
             .unwrap_or(0)
     }
 
+    /// Physical optimizer-state bytes one shard holds under a
+    /// [`StatePlan`] — per-group planned bytes instead of a uniform
+    /// (kind, backend) assumption. `plan` must describe the same group list
+    /// the `ShardPlan` was built from.
+    pub fn shard_planned_bytes(&self, shard: usize, plan: &crate::budget::StatePlan) -> usize {
+        self.shards[shard].iter().map(|&gi| plan.per_group[gi].bytes).sum()
+    }
+
+    /// Largest per-shard planned footprint (see
+    /// [`ShardPlan::shard_planned_bytes`]).
+    pub fn peak_planned_bytes(&self, plan: &crate::budget::StatePlan) -> usize {
+        (0..self.n_shards()).map(|s| self.shard_planned_bytes(s, plan)).max().unwrap_or(0)
+    }
+
     /// Max/mean work ratio across shards (1.0 = perfectly balanced).
     pub fn work_imbalance(&self) -> f64 {
         let max = self.work.iter().copied().max().unwrap_or(0) as f64;
@@ -123,13 +137,66 @@ pub fn partition(
     n_shards: usize,
     max_state_per_shard: Option<usize>,
 ) -> Result<ShardPlan> {
+    let costs: Vec<GroupCost> = groups.iter().map(|g| group_cost(kind, g)).collect();
+    partition_with_costs(kind, groups, &costs, n_shards, max_state_per_shard)
+}
+
+/// [`partition`] with per-group costs taken from a [`crate::budget::StatePlan`]
+/// instead of a uniform (kind, backend): each group is charged its *chosen*
+/// configuration's bytes (as f32-equivalent scalars), so a plan that keeps
+/// one group at full AdaGrad and another at ET3/nf4 places them by their
+/// real footprints. The plan must describe the same group list, in order.
+pub fn partition_planned(
+    plan: &crate::budget::StatePlan,
+    groups: &[GroupSpec],
+    n_shards: usize,
+    max_state_per_shard: Option<usize>,
+) -> Result<ShardPlan> {
+    if plan.per_group.len() != groups.len() {
+        bail!(
+            "partition_planned: plan covers {} groups, model has {}",
+            plan.per_group.len(),
+            groups.len()
+        );
+    }
+    for (c, g) in plan.per_group.iter().zip(groups) {
+        if c.group != g.name {
+            bail!("partition_planned: plan group '{}' does not match '{}'", c.group, g.name);
+        }
+    }
+    let costs: Vec<GroupCost> = groups
+        .iter()
+        .zip(&plan.per_group)
+        .map(|(g, c)| GroupCost {
+            // f32-equivalent scalars, so planned and uniform placements are
+            // commensurable (a q8 scalar weighs ~0.28 of a dense one).
+            state_scalars: c.bytes.div_ceil(4),
+            work: g.numel(),
+        })
+        .collect();
+    // The ET-family kind tag is the mixed-rule convention (see
+    // `budget::exec::PlanRule::kind`); per-group costs above are what
+    // actually drive placement.
+    partition_with_costs(OptimizerKind::Et(1), groups, &costs, n_shards, max_state_per_shard)
+}
+
+/// Core LPT packer over explicit per-group costs.
+pub fn partition_with_costs(
+    kind: OptimizerKind,
+    groups: &[GroupSpec],
+    costs: &[GroupCost],
+    n_shards: usize,
+    max_state_per_shard: Option<usize>,
+) -> Result<ShardPlan> {
     if n_shards == 0 {
         bail!("partition: n_shards must be >= 1");
     }
     if groups.is_empty() {
         bail!("partition: no parameter groups");
     }
-    let costs: Vec<GroupCost> = groups.iter().map(|g| group_cost(kind, g)).collect();
+    if costs.len() != groups.len() {
+        bail!("partition: {} costs for {} groups", costs.len(), groups.len());
+    }
     let mut order: Vec<usize> = (0..groups.len()).collect();
     order.sort_by(|&a, &b| costs[b].load().cmp(&costs[a].load()).then(a.cmp(&b)));
 
@@ -286,6 +353,28 @@ mod tests {
         let gs = transformer_groups();
         assert!(partition(OptimizerKind::Sgd, &gs, 0, None).is_err());
         assert!(partition(OptimizerKind::Sgd, &[], 2, None).is_err());
+    }
+
+    /// Planned placement: per-group bytes come from the chosen configs, so
+    /// a plan that quantizes the big groups packs them where a uniform-f32
+    /// costing would not, and the per-shard planned-bytes accounting sums
+    /// back to the plan total.
+    #[test]
+    fn planned_partition_costs_from_the_plan() {
+        use crate::budget::{plan as budget_plan, PlannerOptions};
+        let gs = transformer_groups();
+        let sp = budget_plan(&gs, 64 * 1024, &PlannerOptions::default()).unwrap();
+        let shard_plan = partition_planned(&sp, &gs, 3, None).unwrap();
+        let total: usize =
+            (0..shard_plan.n_shards()).map(|s| shard_plan.shard_planned_bytes(s, &sp)).sum();
+        assert_eq!(total, sp.total_bytes());
+        assert!(shard_plan.peak_planned_bytes(&sp) <= sp.total_bytes());
+        assert_eq!(
+            shard_plan.total_state_scalars(),
+            sp.per_group.iter().map(|c| c.bytes.div_ceil(4)).sum::<usize>()
+        );
+        // Mismatched group lists are rejected loudly.
+        assert!(partition_planned(&sp, &gs[..3], 2, None).is_err());
     }
 
     #[test]

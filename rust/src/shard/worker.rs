@@ -2,7 +2,9 @@
 //! state.
 //!
 //! Each worker builds a concrete [`crate::optim::StateOptimizer`] over
-//! exactly the groups its shard owns, so *all* of a group's optimizer
+//! exactly the groups its shard owns, from an owned [`WorkerSpec`] — the
+//! uniform suite optimizer or a `budget::StatePlan` slice — so *all* of a
+//! group's optimizer
 //! state (slice accumulators, moments, ...) lives on one thread, with no
 //! `Box<dyn Optimizer>` indirection in front of the update rule — and the
 //! per-step scratch arena (`optim::StepScratch`) lives with it, so each
@@ -16,9 +18,35 @@
 //! which is what lets the executor hand workers raw slice pointers safely
 //! (see the safety contract on [`GroupTask`]).
 
-use crate::optim::{self, GroupSpec, Hyper, Optimizer, StateExport};
+use crate::budget::StatePlan;
+use crate::optim::{GroupSpec, Hyper, Optimizer, StateExport, StateOptimizer};
 use crate::tensoring::OptimizerKind;
 use std::sync::mpsc::{Receiver, SyncSender};
+
+/// What a worker thread builds its shard-local optimizer from. Owned data
+/// (no borrows), so construction happens *on the worker thread* — N shards
+/// allocate their state concurrently and with first-touch locality, as the
+/// pre-planner engine did. Planned specs are validated by the executor
+/// (`budget::validate_plan`) before any thread spawns, so a worker-side
+/// build failure is a bug, not a user error; it is logged and the worker
+/// exits, which the executor's startup reduction reports as a failed shard.
+pub(crate) enum WorkerSpec {
+    Uniform { kind: OptimizerKind, groups: Vec<GroupSpec>, hyper: Hyper },
+    Planned { groups: Vec<GroupSpec>, plan: StatePlan, hyper: Hyper },
+}
+
+impl WorkerSpec {
+    fn build(self) -> anyhow::Result<StateOptimizer> {
+        match self {
+            WorkerSpec::Uniform { kind, groups, hyper } => {
+                Ok(crate::optim::build_state(kind, &groups, &hyper))
+            }
+            WorkerSpec::Planned { groups, plan, hyper } => {
+                crate::budget::build_planned(&groups, &plan, &hyper)
+            }
+        }
+    }
+}
 
 /// One group's update, described by raw slice parts so a persistent worker
 /// can write the caller's buffers in place.
@@ -71,16 +99,24 @@ pub(crate) enum Reply {
     ImportDone(Result<(), String>),
 }
 
-/// Worker main loop. Runs until `Shutdown` or channel disconnect.
+/// Worker main loop. Runs until `Shutdown` or channel disconnect. The
+/// shard-local optimizer is built here, on the worker's own thread, from
+/// the owned [`WorkerSpec`].
 pub(crate) fn run_worker(
     shard: usize,
-    kind: OptimizerKind,
-    groups: Vec<GroupSpec>,
-    hyper: Hyper,
+    spec: WorkerSpec,
     requests: Receiver<Request>,
     replies: SyncSender<Reply>,
 ) {
-    let mut opt = optim::build_state(kind, &groups, &hyper);
+    let mut opt = match spec.build() {
+        Ok(opt) => opt,
+        Err(e) => {
+            // Validated before spawn; reaching this is a bug. Dropping the
+            // reply channel makes the executor's startup query fail loudly.
+            crate::warnln!("shard {shard}: optimizer construction failed: {e:#}");
+            return;
+        }
+    };
     while let Ok(req) = requests.recv() {
         match req {
             Request::Step { lr, tasks } => {
@@ -143,10 +179,12 @@ mod tests {
         let groups = vec![GroupSpec::new("a", &[4]), GroupSpec::new("b", &[2])];
         let (req_tx, req_rx) = sync_channel::<Request>(4);
         let (rep_tx, rep_rx) = sync_channel::<Reply>(4);
-        let worker_groups = groups.clone();
-        let handle = std::thread::spawn(move || {
-            run_worker(0, OptimizerKind::AdaGrad, worker_groups, Hyper::default(), req_rx, rep_tx)
-        });
+        let spec = WorkerSpec::Uniform {
+            kind: OptimizerKind::AdaGrad,
+            groups: groups.clone(),
+            hyper: Hyper::default(),
+        };
+        let handle = std::thread::spawn(move || run_worker(0, spec, req_rx, rep_tx));
 
         let mut x0 = vec![1.0f32; 4];
         let mut x1 = vec![2.0f32; 2];
@@ -225,9 +263,12 @@ mod tests {
         let groups = vec![GroupSpec::new("a", &[4])];
         let (req_tx, req_rx) = sync_channel::<Request>(2);
         let (rep_tx, rep_rx) = sync_channel::<Reply>(2);
-        let handle = std::thread::spawn(move || {
-            run_worker(3, OptimizerKind::Sgd, groups, Hyper::default(), req_rx, rep_tx)
-        });
+        let spec = WorkerSpec::Uniform {
+            kind: OptimizerKind::Sgd,
+            groups,
+            hyper: Hyper::default(),
+        };
+        let handle = std::thread::spawn(move || run_worker(3, spec, req_rx, rep_tx));
         let mut x = vec![0.0f32; 2]; // wrong length for the 4-element group
         let g = vec![0.0f32; 2];
         req_tx

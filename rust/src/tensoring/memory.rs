@@ -65,6 +65,20 @@ pub enum StateBackend {
     QuantizedQ8 {
         /// Scalars per quantization block (scale/offset granularity).
         block: usize,
+        /// Stochastic rounding on encode: round to a neighboring code with
+        /// probability proportional to proximity, so repeated re-encodes of
+        /// an accumulator are unbiased in expectation instead of carrying a
+        /// systematic round-to-nearest drift.
+        sr: bool,
+    },
+    /// 4-bit quantile quantization (Dettmers-style NF4): one 4-bit code per
+    /// scalar (two packed per byte) against a fixed 16-level normal-quantile
+    /// codebook, plus an `f32` absmax per `block` scalars.
+    QuantizedNf4 {
+        /// Scalars per quantization block (absmax granularity).
+        block: usize,
+        /// Stochastic rounding between adjacent quantile levels on encode.
+        sr: bool,
     },
 }
 
@@ -72,33 +86,88 @@ impl StateBackend {
     /// Default quantization granularity: 64 scalars share one scale+offset
     /// pair, so the per-scalar overhead is 8/64 bytes = 1/32 of an `f32`.
     pub const DEFAULT_Q8_BLOCK: usize = 64;
+    /// Default NF4 block (Dettmers' 4-bit optimizers use 64-scalar blocks):
+    /// one `f32` absmax per 64 scalars, so ~0.5625 bytes per scalar.
+    pub const DEFAULT_NF4_BLOCK: usize = 64;
 
     /// The 8-bit backend at the default block size.
     pub fn q8() -> StateBackend {
-        StateBackend::QuantizedQ8 { block: Self::DEFAULT_Q8_BLOCK }
+        StateBackend::QuantizedQ8 { block: Self::DEFAULT_Q8_BLOCK, sr: false }
     }
 
-    /// Display/config spelling: `f32`, `q8`, `q8/128`, ...
+    /// The 8-bit backend with stochastic rounding.
+    pub fn q8sr() -> StateBackend {
+        StateBackend::QuantizedQ8 { block: Self::DEFAULT_Q8_BLOCK, sr: true }
+    }
+
+    /// The 4-bit quantile backend at the default block size.
+    pub fn nf4() -> StateBackend {
+        StateBackend::QuantizedNf4 { block: Self::DEFAULT_NF4_BLOCK, sr: false }
+    }
+
+    /// The 4-bit quantile backend with stochastic rounding.
+    pub fn nf4sr() -> StateBackend {
+        StateBackend::QuantizedNf4 { block: Self::DEFAULT_NF4_BLOCK, sr: true }
+    }
+
+    /// Display/config spelling: `f32`, `q8/64`, `q8sr/64`, `nf4/64`, ...
     pub fn name(&self) -> String {
         match self {
             StateBackend::DenseF32 => "f32".into(),
-            StateBackend::QuantizedQ8 { block } => format!("q8/{block}"),
+            StateBackend::QuantizedQ8 { block, sr } => {
+                format!("q8{}/{block}", if *sr { "sr" } else { "" })
+            }
+            StateBackend::QuantizedNf4 { block, sr } => {
+                format!("nf4{}/{block}", if *sr { "sr" } else { "" })
+            }
         }
     }
 
-    /// Parse the CLI/config spelling (`f32`/`dense`, `q8`, `q8/<block>`).
+    /// Parse the CLI/config spelling: `f32`/`dense`, or any of
+    /// `q8`/`q8sr`/`nf4`/`nf4sr` with an optional `/<block>` suffix.
     pub fn parse(s: &str) -> Option<StateBackend> {
-        match s.to_ascii_lowercase().as_str() {
-            "f32" | "dense" => Some(StateBackend::DenseF32),
-            "q8" => Some(StateBackend::q8()),
-            other => {
-                let block = other.strip_prefix("q8/")?.parse::<usize>().ok()?;
+        let lower = s.to_ascii_lowercase();
+        let (base, block) = match lower.split_once('/') {
+            Some((base, blk)) => {
+                let block = blk.parse::<usize>().ok()?;
                 if block == 0 {
                     return None;
                 }
-                Some(StateBackend::QuantizedQ8 { block })
+                (base, Some(block))
             }
+            None => (lower.as_str(), None),
+        };
+        match base {
+            "f32" | "dense" => {
+                if block.is_some() {
+                    None // `f32/64` is a spelling error, not a request
+                } else {
+                    Some(StateBackend::DenseF32)
+                }
+            }
+            "q8" => Some(StateBackend::QuantizedQ8 {
+                block: block.unwrap_or(Self::DEFAULT_Q8_BLOCK),
+                sr: false,
+            }),
+            "q8sr" => Some(StateBackend::QuantizedQ8 {
+                block: block.unwrap_or(Self::DEFAULT_Q8_BLOCK),
+                sr: true,
+            }),
+            "nf4" => Some(StateBackend::QuantizedNf4 {
+                block: block.unwrap_or(Self::DEFAULT_NF4_BLOCK),
+                sr: false,
+            }),
+            "nf4sr" => Some(StateBackend::QuantizedNf4 {
+                block: block.unwrap_or(Self::DEFAULT_NF4_BLOCK),
+                sr: true,
+            }),
+            _ => None,
         }
+    }
+
+    /// Whether this backend stores lossy codes (anything but dense `f32`).
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, StateBackend::DenseF32)
     }
 
     /// Physical bytes needed to store one buffer of `len` logical state
@@ -106,11 +175,81 @@ impl StateBackend {
     pub fn buf_bytes(&self, len: usize) -> usize {
         match self {
             StateBackend::DenseF32 => len * 4,
-            StateBackend::QuantizedQ8 { block } => {
+            StateBackend::QuantizedQ8 { block, .. } => {
                 len + len.div_ceil((*block).max(1)) * 8
+            }
+            StateBackend::QuantizedNf4 { block, .. } => {
+                len.div_ceil(2) + len.div_ceil((*block).max(1)) * 4
             }
         }
     }
+}
+
+/// A typed accounting error: the requested configuration cannot be
+/// physically represented (as opposed to merely being expensive). Returned
+/// by the `try_*` accounting entry points the budget planner uses, so an
+/// invalid candidate is a skippable, group-named error — never a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MemoryError {
+    /// A quantized backend was requested for a kind whose only state is the
+    /// never-quantized wide `f64` scalars (ET∞): there is no buffer the
+    /// backend could apply to, so honoring the request is impossible.
+    UnsupportedBackend {
+        group: String,
+        kind: OptimizerKind,
+        backend: StateBackend,
+    },
+}
+
+impl std::fmt::Display for MemoryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemoryError::UnsupportedBackend { group, kind, backend } => write!(
+                f,
+                "group '{}': backend {} cannot represent {} state (its only state is \
+                 never-quantized wide scalars; use f32)",
+                group,
+                backend.name(),
+                kind.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MemoryError {}
+
+/// [`group_state_bytes`] with validation: a quantized backend on a kind
+/// that allocates no quantizable buffers but does hold wide scalars (ET∞)
+/// is a typed [`MemoryError`] naming the group. This is the accounting
+/// entry point the budget planner (`crate::budget`) calls when costing
+/// candidate configurations.
+pub fn try_group_state_bytes(
+    group: &str,
+    kind: OptimizerKind,
+    shape: &[usize],
+    backend: StateBackend,
+) -> Result<usize, MemoryError> {
+    if backend.is_quantized()
+        && group_wide_scalars(kind) > 0
+        && group_state_buffer_lens(kind, shape).is_empty()
+    {
+        return Err(MemoryError::UnsupportedBackend { group: group.to_string(), kind, backend });
+    }
+    Ok(group_state_bytes(kind, shape, backend))
+}
+
+/// [`model_state_bytes`] with the same validation as
+/// [`try_group_state_bytes`], applied per named group.
+pub fn try_model_state_bytes(
+    kind: OptimizerKind,
+    groups: &[(String, Vec<usize>)],
+    backend: StateBackend,
+) -> Result<usize, MemoryError> {
+    let mut total = 0usize;
+    for (name, shape) in groups {
+        total += try_group_state_bytes(name, kind, shape, backend)?;
+    }
+    Ok(total)
 }
 
 /// Logical `f32` state-buffer lengths for one parameter group of `shape`
@@ -323,13 +462,81 @@ mod tests {
         for b in [
             StateBackend::DenseF32,
             StateBackend::q8(),
-            StateBackend::QuantizedQ8 { block: 128 },
+            StateBackend::QuantizedQ8 { block: 128, sr: false },
+            StateBackend::q8sr(),
+            StateBackend::nf4(),
+            StateBackend::nf4sr(),
+            StateBackend::QuantizedNf4 { block: 32, sr: true },
         ] {
             assert_eq!(StateBackend::parse(&b.name()), Some(b), "{}", b.name());
         }
         assert_eq!(StateBackend::parse("dense"), Some(StateBackend::DenseF32));
+        assert_eq!(StateBackend::parse("q8sr"), Some(StateBackend::q8sr()));
+        assert_eq!(StateBackend::parse("nf4"), Some(StateBackend::nf4()));
+        assert_eq!(StateBackend::parse("nf4sr/128"),
+            Some(StateBackend::QuantizedNf4 { block: 128, sr: true }));
         assert_eq!(StateBackend::parse("q8/0"), None);
+        assert_eq!(StateBackend::parse("nf4/0"), None);
         assert_eq!(StateBackend::parse("q4"), None);
+        assert_eq!(StateBackend::parse("f32/64"), None);
+    }
+
+    #[test]
+    fn nf4_bytes_below_q8() {
+        let q8 = group_state_bytes(OptimizerKind::AdaGrad, &[512, 512], StateBackend::q8());
+        let nf4 = group_state_bytes(OptimizerKind::AdaGrad, &[512, 512], StateBackend::nf4());
+        // 0.5 bytes/scalar + 4 bytes per 64-scalar block = 0.5625 bytes/scalar.
+        assert_eq!(nf4, 512 * 512 / 2 + (512 * 512 / 64) * 4);
+        assert!(nf4 < q8 / 2 + 1);
+        // Odd lengths round the packed nibbles up.
+        assert_eq!(StateBackend::nf4().buf_bytes(65), 33 + 2 * 4);
+        // SR costs nothing extra: same physical layout, different encode.
+        assert_eq!(
+            StateBackend::nf4sr().buf_bytes(1000),
+            StateBackend::nf4().buf_bytes(1000)
+        );
+        assert_eq!(
+            StateBackend::q8sr().buf_bytes(1000),
+            StateBackend::q8().buf_bytes(1000)
+        );
+    }
+
+    #[test]
+    fn try_accounting_rejects_quantized_wide_only_state() {
+        // ET∞ state is one wide f64 scalar — a quantized backend has
+        // nothing to apply to, so the try_ entry point is a typed error
+        // naming the group.
+        let err = try_group_state_bytes("embed", OptimizerKind::EtInf, &[512, 512],
+            StateBackend::nf4())
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("embed") && msg.contains("nf4"), "{msg}");
+        // Dense is always representable; quantized on buffer-holding kinds
+        // matches the plain accounting.
+        assert_eq!(
+            try_group_state_bytes("embed", OptimizerKind::EtInf, &[512, 512],
+                StateBackend::DenseF32),
+            Ok(8)
+        );
+        assert_eq!(
+            try_group_state_bytes("w", OptimizerKind::Et(2), &[512, 512], StateBackend::nf4()),
+            Ok(group_state_bytes(OptimizerKind::Et(2), &[512, 512], StateBackend::nf4()))
+        );
+        // SGD holds nothing at all: 0 bytes under any backend, not an error.
+        assert_eq!(
+            try_group_state_bytes("b", OptimizerKind::Sgd, &[64], StateBackend::q8()),
+            Ok(0)
+        );
+        let groups = vec![("w".to_string(), vec![16, 16]), ("g".to_string(), vec![16])];
+        assert!(try_model_state_bytes(OptimizerKind::EtInf, &groups, StateBackend::q8()).is_err());
+        assert_eq!(
+            try_model_state_bytes(OptimizerKind::Adam, &groups, StateBackend::q8()),
+            Ok(model_state_bytes(
+                OptimizerKind::Adam,
+                &[vec![16, 16], vec![16]],
+                StateBackend::q8()
+            ))
+        );
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub use accumulator::{
 pub use index::{Odometer, TensorIndex};
 pub use memory::{
     group_state_buffer_lens, group_state_bytes, group_state_fractional_scalars,
-    group_state_scalars, group_wide_scalars, model_state_bytes, MemoryReport, OptimizerKind,
-    StateBackend,
+    group_state_scalars, group_wide_scalars, model_state_bytes, try_group_state_bytes,
+    try_model_state_bytes, MemoryError, MemoryReport, OptimizerKind, StateBackend,
 };
 pub use planner::{natural_dims, plan, plan_flat, plan_index, Level};

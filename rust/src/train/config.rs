@@ -42,9 +42,16 @@ pub struct RunConfig {
     /// artifact and the update is applied by the (sharded) pure-rust
     /// optimizer suite instead of the fused train-step artifact.
     pub host_optimizer: Option<OptimizerKind>,
-    /// Physical storage for host-optimizer state: `f32` (default) or
-    /// `q8`/`q8/<block>` for 8-bit block-quantized buffers.
+    /// Physical storage for host-optimizer state: `f32` (default),
+    /// `q8`/`q8/<block>` (8-bit block-quantized), `nf4` (4-bit quantile),
+    /// or the stochastic-rounding variants `q8sr`/`nf4sr`.
     pub state_backend: StateBackend,
+    /// Optimizer-state byte budget (`"64m"`, `"512k"`, or plain bytes).
+    /// When set, the run trains host-side under a `budget::StatePlan`: the
+    /// planner picks the best (ET level, backend) per parameter group
+    /// within the budget, overriding the uniform
+    /// `host_optimizer`/`state_backend` pair.
+    pub opt_memory_budget: Option<u64>,
     /// Resume from the run's latest checkpoint (`runs/<name>/latest.hck`
     /// for host-optimizer runs via the ETHC loader, `latest.ck` for fused
     /// artifact runs). Missing checkpoint = hard error, so a typoed run
@@ -75,6 +82,7 @@ impl Default for RunConfig {
             shards: 1,
             host_optimizer: None,
             state_backend: StateBackend::DenseF32,
+            opt_memory_budget: None,
             resume: false,
         }
     }
@@ -83,10 +91,32 @@ impl Default for RunConfig {
 impl RunConfig {
     /// Load from a TOML file; `overrides` are `key=value` pairs applied on
     /// top (CLI `--set`).
+    /// Config keys whose values are strings the CLI should accept unquoted
+    /// (`--set run.state_backend=nf4`, `--set run.opt_memory_budget=64m`).
+    /// Only string-typed keys are listed: auto-quoting a numeric key would
+    /// turn a typo like `run.steps=1o0` into a silently ignored string.
+    /// Every listed key's value is still validated by `from_config`, so a
+    /// bad spelling remains a hard error.
+    const STRING_KEYS: &'static [&'static str] = &[
+        "run.name",
+        "run.artifact",
+        "run.eval_artifact",
+        "run.artifact_dir",
+        "run.out_dir",
+        "run.host_optimizer",
+        "run.state_backend",
+        "run.opt_memory_budget",
+        "optim.schedule",
+    ];
+
     pub fn load(path: &str, overrides: &[(String, String)]) -> Result<RunConfig> {
         let mut cfg = Config::load(path).with_context(|| format!("load config {path}"))?;
         for (k, v) in overrides {
-            cfg.set(k, v)?;
+            if Self::STRING_KEYS.contains(&k.as_str()) && !v.starts_with('"') {
+                cfg.set(k, &format!("\"{v}\""))?;
+            } else {
+                cfg.set(k, v)?;
+            }
         }
         Self::from_config(&cfg)
     }
@@ -123,9 +153,30 @@ impl RunConfig {
                 None => None,
             },
             state_backend: match cfg.get("run.state_backend").and_then(|v| v.as_str()) {
-                Some(s) => StateBackend::parse(s)
-                    .with_context(|| format!("unknown state backend '{s}' (f32|q8|q8/<block>)"))?,
+                Some(s) => StateBackend::parse(s).with_context(|| {
+                    format!(
+                        "unknown state backend '{s}' \
+                         (f32|q8|q8sr|nf4|nf4sr, optionally /<block>)"
+                    )
+                })?,
                 None => StateBackend::DenseF32,
+            },
+            opt_memory_budget: match cfg.get("run.opt_memory_budget") {
+                None => None,
+                Some(v) => {
+                    let raw = match v {
+                        crate::util::config::Value::Str(s) => s.clone(),
+                        crate::util::config::Value::Int(i) => i.to_string(),
+                        other => anyhow::bail!(
+                            "run.opt_memory_budget must be bytes or a \"64m\"-style string, \
+                             got {other:?}"
+                        ),
+                    };
+                    let bytes = crate::util::cli::parse_byte_size(&raw)
+                        .with_context(|| format!("bad run.opt_memory_budget '{raw}'"))?;
+                    anyhow::ensure!(bytes > 0, "run.opt_memory_budget must be positive");
+                    Some(bytes)
+                }
             },
             resume: cfg.bool("run.resume", false),
         })
@@ -178,6 +229,64 @@ state_backend = "q8"
         assert_eq!(rc.shards, 1);
         assert_eq!(rc.host_optimizer, None);
         assert_eq!(rc.state_backend, StateBackend::DenseF32);
+    }
+
+    #[test]
+    fn cli_overrides_accept_unquoted_string_keys() {
+        let dir = std::env::temp_dir().join("ettrain_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("base.toml");
+        std::fs::write(&path, "[run]\nartifact = \"a\"\n").unwrap();
+        let overrides = vec![
+            ("run.state_backend".to_string(), "nf4".to_string()),
+            ("run.opt_memory_budget".to_string(), "64m".to_string()),
+            ("run.steps".to_string(), "77".to_string()),
+        ];
+        let rc = RunConfig::load(path.to_str().unwrap(), &overrides).unwrap();
+        assert_eq!(rc.state_backend, StateBackend::nf4());
+        assert_eq!(rc.opt_memory_budget, Some(64 << 20));
+        assert_eq!(rc.steps, 77);
+        // A typoed numeric value stays a hard error (no auto-quoting).
+        let bad = vec![("run.steps".to_string(), "1o0".to_string())];
+        assert!(RunConfig::load(path.to_str().unwrap(), &bad).is_err());
+        // A bad string value is still rejected downstream.
+        let bad_backend = vec![("run.state_backend".to_string(), "q4".to_string())];
+        assert!(RunConfig::load(path.to_str().unwrap(), &bad_backend).is_err());
+    }
+
+    #[test]
+    fn parses_opt_memory_budget() {
+        let cfg = Config::parse(
+            "[run]\nartifact = \"a\"\nopt_memory_budget = \"64m\"",
+        )
+        .unwrap();
+        let rc = RunConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.opt_memory_budget, Some(64 << 20));
+        // Plain integer bytes also accepted.
+        let cfg = Config::parse("[run]\nartifact = \"a\"\nopt_memory_budget = 4096").unwrap();
+        assert_eq!(RunConfig::from_config(&cfg).unwrap().opt_memory_budget, Some(4096));
+        // Garbage is a hard error.
+        let cfg =
+            Config::parse("[run]\nartifact = \"a\"\nopt_memory_budget = \"64q\"").unwrap();
+        assert!(RunConfig::from_config(&cfg).is_err());
+        // Default: no budget.
+        let cfg = Config::parse("[run]\nartifact = \"a\"").unwrap();
+        assert_eq!(RunConfig::from_config(&cfg).unwrap().opt_memory_budget, None);
+    }
+
+    #[test]
+    fn parses_new_backends() {
+        for (s, want) in [
+            ("nf4", StateBackend::nf4()),
+            ("nf4sr", StateBackend::nf4sr()),
+            ("q8sr", StateBackend::q8sr()),
+        ] {
+            let cfg = Config::parse(&format!(
+                "[run]\nartifact = \"a\"\nstate_backend = \"{s}\""
+            ))
+            .unwrap();
+            assert_eq!(RunConfig::from_config(&cfg).unwrap().state_backend, want, "{s}");
+        }
     }
 
     #[test]

@@ -78,8 +78,12 @@ impl Trainer {
         };
         // grad artifact: derive name `<family>_grad` from the train
         // artifact. Needed for trace mirroring and for host-optimizer
-        // training (where it replaces the fused train step entirely).
-        let grad_engine = if cfg.track_traces || cfg.host_optimizer.is_some() {
+        // training (where it replaces the fused train step entirely) —
+        // budget-planned runs are host runs too.
+        let grad_engine = if cfg.track_traces
+            || cfg.host_optimizer.is_some()
+            || cfg.opt_memory_budget.is_some()
+        {
             let base = cfg
                 .artifact
                 .rsplit_once('_')
@@ -147,7 +151,7 @@ impl Trainer {
 
     /// Run the configured training job.
     pub fn run(&mut self) -> Result<RunResult> {
-        if self.cfg.host_optimizer.is_some() {
+        if self.cfg.host_optimizer.is_some() || self.cfg.opt_memory_budget.is_some() {
             return self.run_host();
         }
         let run_dir = self.cfg.out_dir.join(&self.cfg.name);
@@ -323,7 +327,6 @@ impl Trainer {
     /// ([`checkpoint::save_host`]). With `shards = 1` this is
     /// bitwise-identical to running the plain optimizer in-thread.
     fn run_host(&mut self) -> Result<RunResult> {
-        let kind = self.cfg.host_optimizer.context("host_optimizer not set")?;
         let grad_engine = self
             .grad_engine
             .as_ref()
@@ -352,11 +355,48 @@ impl Trainer {
         let groups = gm.group_specs();
         let shards = self.cfg.shards.max(1);
         let hyper = Hyper { backend: self.cfg.state_backend, ..Hyper::default() };
-        let mut opt = ShardedOptimizer::new(kind, &groups, &hyper, shards)?;
+        // Budget-planned runs solve for (ET level, backend) per group and
+        // execute the plan; otherwise the uniform host_optimizer kind runs.
+        let mut opt = match self.cfg.opt_memory_budget {
+            Some(budget) => {
+                let plan =
+                    crate::budget::plan(&groups, budget, &crate::budget::PlannerOptions::default())
+                        .with_context(|| {
+                            format!("[{}] solve run.opt_memory_budget", self.cfg.name)
+                        })?;
+                crate::info!(
+                    "[{}] budget {} B: planned {} B over {} groups (expressivity {:.0}); \
+                     run `ettrain plan` for the table",
+                    self.cfg.name,
+                    budget,
+                    plan.total_bytes(),
+                    plan.per_group.len(),
+                    plan.total_expressivity()
+                );
+                if self.cfg.host_optimizer.is_some() {
+                    crate::info!(
+                        "[{}] run.opt_memory_budget overrides run.host_optimizer/state_backend",
+                        self.cfg.name
+                    );
+                }
+                ShardedOptimizer::with_state_plan(&groups, &hyper, shards, &plan)?
+            }
+            None => {
+                let kind = self.cfg.host_optimizer.context("host_optimizer not set")?;
+                ShardedOptimizer::new(kind, &groups, &hyper, shards)?
+            }
+        };
         let mut tracker = if self.cfg.track_traces {
             Some(self.build_tracker()?)
         } else {
             None
+        };
+        // Label the storage honestly: planned runs mix per-buffer backends
+        // from the plan, so cfg.state_backend would be misleading there.
+        let storage = if self.cfg.opt_memory_budget.is_some() {
+            "planned/mixed".to_string()
+        } else {
+            self.cfg.state_backend.name()
         };
         crate::info!(
             "[{}] host optimizer {} ({} state scalars, {} state bytes [{}], peak {} per shard)",
@@ -364,7 +404,7 @@ impl Trainer {
             opt.name(),
             opt.state_scalars(),
             opt.state_bytes(),
-            self.cfg.state_backend.name(),
+            storage,
             opt.peak_state_scalars()
         );
 

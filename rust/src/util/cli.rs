@@ -126,6 +126,24 @@ impl Args {
     }
 }
 
+/// Parse a human byte size: plain bytes, or with a binary `k`/`m`/`g`
+/// suffix (`64m` = 64 MiB). Shared by `--mem-budget`, `ettrain plan
+/// --budget`, and the `run.opt_memory_budget` config key.
+pub fn parse_byte_size(raw: &str) -> Result<u64> {
+    let s = raw.trim().to_ascii_lowercase();
+    let (digits, mult): (&str, u64) = match s.chars().last() {
+        Some('k') => (&s[..s.len() - 1], 1 << 10),
+        Some('m') => (&s[..s.len() - 1], 1 << 20),
+        Some('g') => (&s[..s.len() - 1], 1 << 30),
+        _ => (s.as_str(), 1),
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("expected BYTES[k|m|g], got '{raw}'"))?;
+    Ok(n.saturating_mul(mult))
+}
+
 /// Parse a comma-separated `--set key=value,key2=value2` override list.
 ///
 /// Every token must contain `=` with a non-empty key; a malformed token is
@@ -188,6 +206,16 @@ mod tests {
         assert!(Args::parse(&spec(), &sv(&["--bogus", "1"])).is_err());
         assert!(Args::parse(&spec(), &sv(&["a", "b"])).is_err());
         assert!(Args::parse(&spec(), &sv(&["--steps"])).is_err());
+    }
+
+    #[test]
+    fn byte_sizes_parse() {
+        assert_eq!(parse_byte_size("4096").unwrap(), 4096);
+        assert_eq!(parse_byte_size("64m").unwrap(), 64 << 20);
+        assert_eq!(parse_byte_size("2K").unwrap(), 2048);
+        assert_eq!(parse_byte_size(" 1g ").unwrap(), 1 << 30);
+        assert!(parse_byte_size("64q").is_err());
+        assert!(parse_byte_size("").is_err());
     }
 
     #[test]

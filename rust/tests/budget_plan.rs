@@ -1,0 +1,271 @@
+//! Budget-planner contracts:
+//!
+//! 1. **Budget respect** — for random group sets and budgets, the solved
+//!    plan's total bytes never exceed the budget (both solver regimes).
+//! 2. **Monotonicity** — more budget never decreases total expressivity
+//!    (both regimes; the DP frontier is monotone by construction, the
+//!    greedy walk by its concave-ladder ordering).
+//! 3. **Degenerate budgets** — below the summed cheapest configs the
+//!    solver fails with an error naming the shortfall; at exactly the
+//!    floor it returns every group's cheapest config.
+//! 4. **Uniform-f32 parity** — a plan forcing uniform (kind, f32) executes
+//!    bitwise-identically to today's `StateOptimizer` of that kind, for
+//!    every plannable kind (the planned path adds no arithmetic of its
+//!    own). Uniform q8 plans match the uniform q8 optimizer the same way.
+//! 5. **NF4 backend** — round-trips export/import exactly (idempotent
+//!    re-encode) and still optimizes the convex task.
+
+use extensor::budget::{build_planned, candidates, plan, PlannerOptions, StatePlan};
+use extensor::convex::ConvexConfig;
+use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
+use extensor::session::{run_job, ConvexOpt, ConvexSpec, EventSink, JobSpec, Session};
+use extensor::tensoring::{OptimizerKind, StateBackend};
+use extensor::testing::prop::{props, Gen};
+use extensor::util::rng::Pcg64;
+
+fn random_groups(g: &mut Gen, n: usize) -> Vec<GroupSpec> {
+    (0..n)
+        .map(|i| {
+            let rank = g.usize_in(1, 3);
+            let shape: Vec<usize> = (0..rank).map(|_| g.usize_in(1, 96)).collect();
+            GroupSpec::new(format!("g{i}"), &shape)
+        })
+        .collect()
+}
+
+fn min_feasible(groups: &[GroupSpec], opts: &PlannerOptions) -> u64 {
+    groups.iter().map(|g| candidates(g, opts)[0].bytes as u64).sum()
+}
+
+/// Both solver regimes on the same inputs: DP (forced via a high
+/// `dp_max_groups`) and greedy (forced via 0).
+fn regimes() -> [(&'static str, PlannerOptions); 2] {
+    [
+        ("dp", PlannerOptions { dp_max_groups: 64, ..PlannerOptions::default() }),
+        ("greedy", PlannerOptions { dp_max_groups: 0, ..PlannerOptions::default() }),
+    ]
+}
+
+#[test]
+fn prop_budget_is_never_exceeded() {
+    props("budget_respected", 120, |g: &mut Gen| {
+        let groups = random_groups(g, g.usize_in(1, 12));
+        for (label, opts) in regimes() {
+            let floor = min_feasible(&groups, &opts);
+            let budget = floor + g.usize_in(0, 1 << 20) as u64;
+            let p = plan(&groups, budget, &opts).unwrap();
+            assert!(
+                p.total_bytes() as u64 <= budget,
+                "[{label}] {} > {budget} for {} groups",
+                p.total_bytes(),
+                groups.len()
+            );
+            assert_eq!(p.per_group.len(), groups.len());
+            // Per-group bytes agree with the recorded choices.
+            for c in &p.per_group {
+                assert!(c.bytes > 0 || c.expressivity == 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_expressivity_is_monotone_in_budget() {
+    props("budget_monotone", 120, |g: &mut Gen| {
+        let groups = random_groups(g, g.usize_in(1, 12));
+        for (label, opts) in regimes() {
+            let floor = min_feasible(&groups, &opts);
+            let b1 = floor + g.usize_in(0, 1 << 18) as u64;
+            let b2 = b1 + g.usize_in(0, 1 << 18) as u64;
+            let p1 = plan(&groups, b1, &opts).unwrap();
+            let p2 = plan(&groups, b2, &opts).unwrap();
+            assert!(
+                p2.total_expressivity() >= p1.total_expressivity() - 1e-9,
+                "[{label}] budget {b1} -> {b2} lost expressivity: {} -> {}",
+                p1.total_expressivity(),
+                p2.total_expressivity()
+            );
+        }
+    });
+}
+
+#[test]
+fn degenerate_budgets_fail_clearly_or_fall_back_to_cheapest() {
+    let groups = vec![
+        GroupSpec::new("embed", &[500, 64]),
+        GroupSpec::new("w", &[64, 64]),
+        GroupSpec::new("b", &[64]),
+    ];
+    for (label, opts) in regimes() {
+        let floor = min_feasible(&groups, &opts);
+        // Below the floor: a clear, named error — never a panic, never a
+        // silently over-budget plan.
+        let err = plan(&groups, floor - 1, &opts).unwrap_err().to_string();
+        assert!(err.contains("cheapest feasible"), "[{label}] {err}");
+        assert!(err.contains(&format!("{floor}")), "[{label}] floor not named: {err}");
+        let err0 = plan(&groups, 0, &opts).unwrap_err().to_string();
+        assert!(err0.contains("budget 0"), "[{label}] {err0}");
+        // Exactly the floor: every group at its cheapest feasible config.
+        let p = plan(&groups, floor, &opts).unwrap();
+        assert_eq!(p.total_bytes() as u64, floor, "[{label}]");
+        for (c, g) in p.per_group.iter().zip(&groups) {
+            assert_eq!(c.bytes, candidates(g, &opts)[0].bytes, "[{label}] {}", g.name);
+        }
+        // Empty group lists are rejected.
+        assert!(plan(&[], 1 << 20, &opts).is_err());
+    }
+}
+
+fn random_grad_stream(groups: &[GroupSpec], seed: u64, steps: usize) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..steps)
+        .map(|_| {
+            groups
+                .iter()
+                .map(|g| {
+                    let mut v = vec![0.0f32; g.numel()];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// A plan forcing uniform (kind, backend) must reproduce the plain
+/// `StateOptimizer` trajectory **bitwise** — the acceptance contract that
+/// keeps golden_parity/sharded_parity/host_checkpoint meaningful under
+/// planned execution.
+#[test]
+fn uniform_plans_match_state_optimizer_bitwise() {
+    let groups = vec![
+        GroupSpec::new("w", &[16, 32]),
+        GroupSpec::new("b", &[32]),
+        GroupSpec::new("conv", &[8, 4, 3, 3]),
+        GroupSpec::new("ln", &[16]),
+    ];
+    let stream = random_grad_stream(&groups, 0xb1d6, 5);
+    let cases: Vec<(OptimizerKind, StateBackend)> = vec![
+        (OptimizerKind::AdaGrad, StateBackend::DenseF32),
+        (OptimizerKind::Et(1), StateBackend::DenseF32),
+        (OptimizerKind::Et(2), StateBackend::DenseF32),
+        (OptimizerKind::Et(3), StateBackend::DenseF32),
+        (OptimizerKind::EtInf, StateBackend::DenseF32),
+        (OptimizerKind::AdaGrad, StateBackend::q8()),
+        (OptimizerKind::Et(2), StateBackend::q8()),
+        (OptimizerKind::Et(2), StateBackend::nf4()),
+    ];
+    for (kind, backend) in cases {
+        let hyper = Hyper { backend, ..Hyper::default() };
+        let mut reference = optim::build_state(kind, &groups, &hyper);
+        let mut want: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.4f32; g.numel()]).collect();
+        for grads in &stream {
+            reference.next_step();
+            reference.step_all(&mut want, grads, 0.07).unwrap();
+        }
+
+        let forced = StatePlan::uniform(kind, backend, &groups).unwrap();
+        let mut planned = build_planned(&groups, &forced, &hyper).unwrap();
+        let mut got: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.4f32; g.numel()]).collect();
+        for grads in &stream {
+            planned.next_step();
+            planned.step_all(&mut got, grads, 0.07).unwrap();
+        }
+        assert_eq!(want, got, "{kind:?} under {backend:?} diverged from StateOptimizer");
+        assert_eq!(
+            planned.state_bytes(),
+            reference.state_bytes(),
+            "{kind:?} under {backend:?}: byte accounting diverged"
+        );
+    }
+}
+
+/// NF4 state survives an export/import round trip exactly (decode →
+/// re-encode is idempotent: the block absmax maps to the ±1.0 code, every
+/// other value to its own level) and the restored optimizer continues
+/// bitwise.
+#[test]
+fn nf4_state_roundtrips_export_import() {
+    let groups = vec![GroupSpec::new("w", &[16, 32]), GroupSpec::new("b", &[32])];
+    let hyper = Hyper { backend: StateBackend::nf4(), ..Hyper::default() };
+    let stream = random_grad_stream(&groups, 0x4f4, 6);
+
+    let mut full = optim::build_state(OptimizerKind::AdaGrad, &groups, &hyper);
+    let mut want: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.3f32; g.numel()]).collect();
+    for grads in &stream {
+        full.next_step();
+        full.step_all(&mut want, grads, 0.05).unwrap();
+    }
+
+    let mut first = optim::build_state(OptimizerKind::AdaGrad, &groups, &hyper);
+    let mut got: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.3f32; g.numel()]).collect();
+    for grads in &stream[..3] {
+        first.next_step();
+        first.step_all(&mut got, grads, 0.05).unwrap();
+    }
+    let snapshot = first.export();
+    // The snapshot is dense; importing re-encodes into fresh NF4 buffers
+    // without drift.
+    let mut second = optim::build_state(OptimizerKind::AdaGrad, &groups, &hyper);
+    second.import(&snapshot).unwrap();
+    assert_eq!(second.export(), snapshot, "NF4 re-encode of a decode drifted");
+    for grads in &stream[3..] {
+        second.next_step();
+        second.step_all(&mut got, grads, 0.05).unwrap();
+    }
+    assert_eq!(want, got, "NF4 resume diverged");
+}
+
+/// NF4-backed state still optimizes the paper's convex task, and a
+/// budget-planned convex job stays within its budget end to end.
+#[test]
+fn nf4_and_planned_jobs_descend_on_the_convex_task() {
+    let session = Session::new();
+    let sink = EventSink::discard("budget_plan_test");
+    let data = ConvexConfig { n: 400, d: 64, k: 4, cond: 1e3, householder: 4, seed: 11 };
+    let run = |opt: ConvexOpt, backend: StateBackend, iters: usize| {
+        let spec = JobSpec::convex(
+            "cell",
+            ConvexSpec {
+                data: data.clone(),
+                iters,
+                lr: 0.05,
+                backend,
+                opt,
+                measure_after: true,
+                curve_every: 0,
+            },
+        );
+        let out = run_job(&spec, &session, &sink).unwrap();
+        out.as_convex().expect("convex outcome").clone()
+    };
+    // NF4 AdaGrad: loss after 200 iters beats loss after 2.
+    let early = run(ConvexOpt::Kind(OptimizerKind::AdaGrad), StateBackend::nf4(), 2);
+    let late = run(ConvexOpt::Kind(OptimizerKind::AdaGrad), StateBackend::nf4(), 200);
+    assert!(late.final_loss.is_finite() && early.final_loss.is_finite());
+    assert!(
+        late.final_loss < early.final_loss * 0.9,
+        "nf4 AdaGrad did not descend: {} -> {}",
+        early.final_loss,
+        late.final_loss
+    );
+    // Stochastic-rounding variant descends too.
+    let sr = run(ConvexOpt::Kind(OptimizerKind::AdaGrad), StateBackend::nf4sr(), 200);
+    assert!(
+        sr.final_loss < early.final_loss * 0.9,
+        "nf4sr AdaGrad did not descend: {} -> {}",
+        early.final_loss,
+        sr.final_loss
+    );
+    // A planned job's live state respects its budget.
+    let budget = 2048u64;
+    let planned = run(ConvexOpt::Planned { budget }, StateBackend::DenseF32, 200);
+    assert!(planned.state_bytes as u64 <= budget, "{} > {budget}", planned.state_bytes);
+    assert!(planned.final_loss.is_finite());
+    assert!(
+        planned.final_loss < early.final_loss,
+        "planned optimizer did not descend: {} vs {}",
+        planned.final_loss,
+        early.final_loss
+    );
+}
