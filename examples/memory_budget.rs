@@ -8,14 +8,17 @@
 //!     cargo run --release --example memory_budget [budget, e.g. 64k]
 //!
 //! Prints the plan table, proves the bytes respect the budget, then runs a
-//! few hundred synthetic steps through the planned optimizer to show the
-//! mixed configuration actually trains.
+//! budget-planned convex job through the session executor — twice, so the
+//! drained event stream shows the progress counters and the session's
+//! dataset cache going from miss to hit.
 
-use extensor::budget::{build_planned, plan, PlannerOptions};
-use extensor::optim::{Hyper, Optimizer};
+use extensor::budget::{plan, PlannerOptions};
+use extensor::convex::ConvexConfig;
+use extensor::session::{
+    run_job, CacheCounts, ConvexOpt, ConvexSpec, EventSink, JobEvent, JobSpec, Session,
+};
 use extensor::tensoring::{model_state_bytes, OptimizerKind, StateBackend};
 use extensor::util::cli::parse_byte_size;
-use extensor::util::rng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
     let budget = parse_byte_size(
@@ -61,33 +64,46 @@ fn main() -> anyhow::Result<()> {
     let et3 = model_state_bytes(OptimizerKind::Et(3), &shapes, StateBackend::DenseF32);
     println!("uniform AdaGrad/f32 would need {adagrad} B; uniform ET3/f32 {et3} B");
 
-    // And the plan is executable: a few synthetic steps through the planned
-    // (possibly mixed f32/q8/nf4) optimizer descend a quadratic.
-    let mut opt = build_planned(&groups, &solved, &Hyper::default())?;
-    let mut rng = Pcg64::seeded(7);
-    let mut params: Vec<Vec<f32>> = groups
-        .iter()
-        .map(|g| {
-            let mut v = vec![0.0f32; g.numel()];
-            rng.fill_normal(&mut v, 0.5);
-            v
-        })
-        .collect();
-    let loss = |ps: &[Vec<f32>]| -> f64 {
-        ps.iter().flatten().map(|&x| 0.5 * x as f64 * x as f64).sum()
+    // And a plan is executable: run a budget-planned convex job through
+    // the session executor with a collecting sink, so the same progress
+    // and cache events a scheduled batch logs are visible here.
+    let data = ConvexConfig { n: 1000, d: 128, k: 10, cond: 1e3, householder: 2, seed: 7 };
+    let job = |name: &str| {
+        JobSpec::convex(
+            name,
+            ConvexSpec {
+                data: data.clone(),
+                iters: 200,
+                lr: 0.05,
+                opt: ConvexOpt::Planned { budget },
+                measure_after: true,
+                ..ConvexSpec::default()
+            },
+        )
     };
-    let initial = loss(&params);
-    for _ in 0..200 {
-        let grads: Vec<Vec<f32>> = params.to_vec(); // grad of 0.5 x^2
-        opt.next_step();
-        opt.step_all(&mut params, &grads, 0.1)?;
-    }
-    let fin = loss(&params);
+    let session = Session::new();
+    let (sink, events) = EventSink::collect("planned_demo");
+    let out = run_job(&job("planned_demo"), &session, &sink)?;
+    let out = out.as_convex().expect("convex outcome");
+    let drained = events.drain();
+    let progress =
+        drained.iter().filter(|e| matches!(e.event, JobEvent::Progress { .. })).count();
+    let first = CacheCounts::from_events(&drained);
     println!(
-        "\nplanned optimizer ({} B live state): loss {initial:.1} -> {fin:.3} in 200 steps",
-        opt.state_bytes()
+        "\nplanned job ({} via {} B live state): final loss {:.4}, accuracy {:.3}",
+        out.optimizer, out.state_bytes, out.final_loss, out.accuracy
     );
-    assert!(fin < initial * 0.5, "planned optimizer failed to descend");
+    println!("event stream: {progress} progress events, cache counters {first:?}");
+    assert!(progress > 0, "the executor must report step progress");
+    assert_eq!(first.corpus_misses, 1, "first run synthesizes the dataset");
+    assert!(out.accuracy > 0.5, "planned optimizer failed to learn");
+
+    // Same dataset, same session: the second run hits the corpus cache.
+    let (sink, events) = EventSink::collect("planned_demo_again");
+    run_job(&job("planned_demo_again"), &session, &sink)?;
+    let again = CacheCounts::from_events(&events.drain());
+    println!("second run on the same session: cache counters {again:?}");
+    assert_eq!(again.corpus_hits, 1, "second run must reuse the cached dataset");
     println!("=> the budget bought preconditioning exactly where it pays (paper §5.2, solved)");
     Ok(())
 }

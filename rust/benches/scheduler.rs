@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         // the warmup iteration, so the timed iterations measure scheduling
         // + execution, not corpus synthesis.
         let session = Session::new();
-        let opts = SchedulerOptions { workers, mem_budget: None, log_path: None };
+        let opts = SchedulerOptions { workers, ..Default::default() };
         let r = bench(&format!("run_batch/workers={workers}"), 1, 5, || {
             let report = run_batch(&session, &specs, &opts).unwrap();
             assert!(report.failed().is_empty());

@@ -98,6 +98,7 @@ pub(crate) fn submit(
         workers: opts.jobs.max(1),
         mem_budget: opts.mem_budget,
         log_path: Some(opts.out_dir.join("schedule").join(format!("{tag}.jsonl"))),
+        registry_dir: Some(opts.out_dir.join("registry")),
     };
     let budget = match opts.mem_budget {
         Some(b) => format!(", budget {}", fmt_mem(b as usize)),

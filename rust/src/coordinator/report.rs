@@ -87,6 +87,23 @@ impl Table {
         out
     }
 
+    /// Render as a GitHub-flavored Markdown table (`### title`, header,
+    /// separator, rows) — the dashboard format of `ettrain registry
+    /// report`. Pipes inside cells are escaped.
+    pub fn render_markdown(&self) -> String {
+        let (headers, rows) = self.effective();
+        let esc = |c: &String| c.replace('|', "\\|");
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        out.push_str(&format!("| {} |\n", headers.iter().map(esc).collect::<Vec<_>>().join(" | ")));
+        out.push_str(&format!("|{}\n", " --- |".repeat(headers.len())));
+        for row in &rows {
+            out.push_str(&format!("| {} |\n", row.iter().map(esc).collect::<Vec<_>>().join(" | ")));
+        }
+        out.push('\n');
+        out
+    }
+
     /// Write rows as CSV (figures are plotted from these files).
     pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
         if let Some(parent) = path.as_ref().parent() {
@@ -154,6 +171,18 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "a,b\n1,2\n");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn markdown_render_escapes_and_aligns() {
+        let mut t = Table::new("Traj", &["commit", "note"]);
+        t.row(vec!["abc123".into(), "a|b".into()]);
+        t.set_shards(2);
+        let md = t.render_markdown();
+        assert!(md.starts_with("### Traj\n\n| commit | note | shards |\n"));
+        assert!(md.contains("| --- | --- | --- |"));
+        assert!(md.contains("a\\|b"));
+        assert!(md.trim_end().ends_with("| abc123 | a\\|b | 2 |"));
     }
 
     #[test]

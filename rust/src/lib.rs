@@ -79,6 +79,21 @@
 //! (table2's equal-time column) always execute serially so their budget
 //! stays uncontended.
 //!
+//! Every executed batch is also **recorded** (`registry`): `run_batch`
+//! appends one `registry/v1` record per job — run id, git commit, UTC
+//! timestamp, the canonical spec TOML, the solved `StatePlan` (when the
+//! job planned one), final metrics, cache counters, wall/queue seconds,
+//! and the schedule-log path — to `results/registry/registry.{jsonl,csv}`,
+//! so `ettrain train|batch|experiment` invocations are reproducible from
+//! the registry alone (`rust/tests/registry.rs` re-executes a recorded
+//! spec and checks the metrics bitwise). On top of the records sit the
+//! **golden perf gate** (`registry::gate`, `ettrain gate`), which joins
+//! fresh `BENCH_optim.json`/`BENCH_pareto.json` rows to checked-in
+//! goldens and fails CI on regressions beyond a tolerance band, and the
+//! **trajectory dashboard** (`registry::dashboard`, `ettrain registry
+//! report`), which folds records + event logs into per-commit
+//! steps/sec, peak-bytes, cache-hit-rate, and queue-wait tables.
+//!
 //! The memory/expressivity tradeoff itself is a solvable planning problem:
 //! the **budget planner** (`budget`) enumerates per-group candidate
 //! configurations — ET level ∈ {1..4, ∞, full AdaGrad} × state backend ∈
@@ -101,6 +116,7 @@ pub mod convex;
 pub mod coordinator;
 pub mod data;
 pub mod optim;
+pub mod registry;
 pub mod regret;
 pub mod runtime;
 pub mod session;

@@ -4,6 +4,8 @@
 //!   train          run a training job from a TOML config
 //!   experiment     regenerate a paper table/figure (table1|table2|fig2|fig3|table4|...)
 //!   batch          run a user-authored batch of jobs from a jobs TOML
+//!   gate           compare fresh BENCH files against checked-in goldens
+//!   registry       report per-commit run trajectories from the registry
 //!   plan-index     print the Table 3 / B.1 factorization tables
 //!   memory-report  per-optimizer state accounting for a transformer config
 //!   list-artifacts show compiled AOT artifacts and their shapes
@@ -14,7 +16,7 @@ use anyhow::{bail, Context, Result};
 use extensor::coordinator::experiments;
 use extensor::coordinator::ExpOptions;
 use extensor::session::{self, Session};
-use extensor::train::{RunConfig, Trainer};
+use extensor::train::RunConfig;
 use extensor::util::cli::{parse_set_overrides, Args, Spec};
 use extensor::util::config::Config;
 use std::path::PathBuf;
@@ -37,6 +39,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "experiment" => cmd_experiment(rest),
         "batch" => cmd_batch(rest),
+        "gate" => cmd_gate(rest),
+        "registry" => cmd_registry(rest),
         "plan" => cmd_plan(rest),
         "plan-index" => cmd_plan_index(rest),
         "memory-report" => cmd_memory_report(rest),
@@ -70,6 +74,15 @@ USAGE: ettrain <subcommand> [options]
          admission control)
   batch <jobs.toml> [--jobs N] [--mem-budget BYTES]  run a custom job batch
         (each [job.<name>] section is one lm|convex|shard-bench|vision job)
+  gate [--tolerance 10%] [--goldens goldens] [--bless | --schema-only]
+        diff fresh BENCH_optim.json / BENCH_pareto.json against the
+        checked-in goldens and fail on regressions beyond the band
+        (--bless re-pins the goldens from the fresh outputs;
+         --schema-only validates the bench JSON invariants, no goldens)
+  registry report [--dir results/registry] [--out dashboards]
+        fold registry records + schedule logs into per-commit trajectory
+        tables (every train/batch/experiment run is recorded automatically
+        under results/registry/)
   plan [--budget 64m | --set run.opt_memory_budget=64m] [--layers N ...]
         solve and print the per-group (ET level x backend) state plan for a
         transformer under an optimizer-memory budget, without running
@@ -107,8 +120,19 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let mut cfg = RunConfig::load(config_path, &overrides)?;
     cfg.resume |= args.flag("resume");
     let name = cfg.name.clone();
-    let result = Trainer::new(cfg)?.run()?;
-    let s = &result.summary;
+    // Route the single run through the scheduler so it lands in the run
+    // registry (and the schedule log) exactly like batch/experiment jobs.
+    let spec = session::JobSpec::lm(name.clone(), cfg);
+    let sched = session::SchedulerOptions {
+        workers: 1,
+        mem_budget: None,
+        log_path: Some(PathBuf::from("results/schedule/train.jsonl")),
+        registry_dir: Some(PathBuf::from("results/registry")),
+    };
+    let session = Session::new();
+    let report = session::run_batch(&session, &[spec], &sched)?;
+    let outcome = report.outcome(&name)?;
+    let s = &outcome.as_lm().context("train: expected an LM outcome")?.summary;
     println!(
         "run '{name}': {} steps, final loss {:.4}, val ppl {:.2}, {:.1}s, {:.0} tok/s",
         s.steps, s.final_train_loss, s.final_eval_ppl, s.wall_seconds, s.tokens_per_sec
@@ -223,6 +247,7 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
         workers: args.get_usize("jobs")?.max(1),
         mem_budget: parse_mem_budget(args.get("mem-budget"))?,
         log_path: Some(out_dir.join("schedule").join("batch.jsonl")),
+        registry_dir: Some(out_dir.join("registry")),
     };
     let session = Session::new();
     let report = session::run_batch(&session, &specs, &sched)?;
@@ -256,6 +281,59 @@ fn cmd_batch(argv: &[String]) -> Result<()> {
         bail!("{} of {} jobs failed", failed.len(), specs.len());
     }
     Ok(())
+}
+
+/// `ettrain gate` — the golden perf gate (see `extensor::registry::gate`).
+fn cmd_gate(argv: &[String]) -> Result<()> {
+    use extensor::registry::gate::{parse_tolerance, run_gate, GateOptions};
+    let spec = Spec {
+        name: "gate",
+        about: "compare fresh BENCH files against checked-in goldens",
+        options: vec![
+            ("tolerance", Some("10%"), "allowed regression band (e.g. 10% or 0.1)"),
+            ("goldens", Some("goldens"), "directory holding the golden BENCH files"),
+            ("optim", Some("BENCH_optim.json"), "fresh optim bench JSON"),
+            ("pareto", Some("BENCH_pareto.json"), "fresh pareto bench JSON"),
+        ],
+        flags: vec![
+            ("bless", "re-pin the goldens from the fresh bench outputs"),
+            ("schema-only", "validate the bench JSON invariants only (no goldens)"),
+        ],
+        positional: vec![],
+    };
+    let args = Args::parse(&spec, argv)?;
+    let opts = GateOptions {
+        tolerance: parse_tolerance(args.get("tolerance").unwrap_or("10%"))?,
+        goldens_dir: PathBuf::from(args.get("goldens").unwrap_or("goldens")),
+        optim_path: PathBuf::from(args.get("optim").unwrap_or("BENCH_optim.json")),
+        pareto_path: PathBuf::from(args.get("pareto").unwrap_or("BENCH_pareto.json")),
+        bless: args.flag("bless"),
+        schema_only: args.flag("schema-only"),
+    };
+    run_gate(&opts)
+}
+
+/// `ettrain registry report` — the trajectory dashboard (see
+/// `extensor::registry::dashboard`).
+fn cmd_registry(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "registry",
+        about: "inspect the run registry",
+        options: vec![
+            ("dir", Some("results/registry"), "registry directory"),
+            ("out", None, "also write dashboard.md + trajectory.csv here"),
+        ],
+        flags: vec![],
+        positional: vec![("action", "report")],
+    };
+    let args = Args::parse(&spec, argv)?;
+    match args.positional.first().map(String::as_str).unwrap_or("report") {
+        "report" => extensor::registry::dashboard::report(
+            &PathBuf::from(args.get("dir").unwrap_or("results/registry")),
+            args.get("out").map(std::path::Path::new),
+        ),
+        other => bail!("unknown registry action '{other}' (try 'report')"),
+    }
 }
 
 /// `ettrain plan` — solve and print the per-group state plan for a

@@ -1,0 +1,261 @@
+//! The run-trajectory summarizer behind `ettrain registry report`: folds
+//! registry records (+ the schedule event logs they reference) into
+//! per-commit trajectories — steps/sec, peak budget occupancy, cache hit
+//! rate, queue wait, failure counts — rendered through
+//! [`coordinator::report::Table`](crate::coordinator::report::Table) as
+//! aligned text, Markdown (`dashboard.md`), and CSV series
+//! (`trajectory.csv`).
+
+use super::record::{Registry, RunRecord};
+use crate::coordinator::report::Table;
+use crate::util::logging::read_jsonl;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One commit's aggregated slice of the registry.
+struct CommitSlice<'a> {
+    commit: &'a str,
+    first_seen: u64,
+    records: Vec<&'a RunRecord>,
+}
+
+fn by_commit(records: &[RunRecord]) -> Vec<CommitSlice<'_>> {
+    let mut slices: Vec<CommitSlice<'_>> = Vec::new();
+    for r in records {
+        match slices.iter_mut().find(|s| s.commit == r.commit) {
+            Some(s) => {
+                s.first_seen = s.first_seen.min(r.started_unix);
+                s.records.push(r);
+            }
+            None => slices.push(CommitSlice {
+                commit: &r.commit,
+                first_seen: r.started_unix,
+                records: vec![r],
+            }),
+        }
+    }
+    slices.sort_by(|a, b| a.first_seen.cmp(&b.first_seen).then(a.commit.cmp(b.commit)));
+    slices
+}
+
+fn metric(r: &RunRecord, key: &str) -> Option<f64> {
+    r.metrics.get(key).and_then(|v| v.as_f64())
+}
+
+/// Throughput figure for one run: LM jobs report tokens/sec, shard-bench
+/// jobs steps/sec; convex/vision runs have no rate metric.
+fn rate_of(r: &RunRecord) -> Option<f64> {
+    metric(r, "steps_per_sec").or_else(|| metric(r, "tokens_per_sec"))
+}
+
+fn mean(xs: &[f64]) -> Option<f64> {
+    (!xs.is_empty()).then(|| xs.iter().sum::<f64>() / xs.len() as f64)
+}
+
+/// Peak scheduler budget occupancy per commit, reconstructed from the
+/// `admitted` events of the schedule logs the records point at.
+/// Best-effort: unreadable or absent logs contribute nothing.
+pub fn peak_bytes_by_commit(records: &[RunRecord]) -> BTreeMap<String, u64> {
+    let mut peaks: BTreeMap<String, u64> = BTreeMap::new();
+    let mut seen: Vec<(&str, &str)> = Vec::new();
+    for r in records {
+        if r.event_log.is_empty() || seen.contains(&(r.commit.as_str(), r.event_log.as_str())) {
+            continue;
+        }
+        seen.push((&r.commit, &r.event_log));
+        let Ok(events) = read_jsonl(&r.event_log) else { continue };
+        let peak = events
+            .iter()
+            .filter(|e| e.get("event").and_then(|v| v.as_str()) == Some("admitted"))
+            .filter_map(|e| e.get("in_use_bytes").and_then(|v| v.as_i64()))
+            .filter_map(|v| u64::try_from(v).ok())
+            .max()
+            .unwrap_or(0);
+        let entry = peaks.entry(r.commit.clone()).or_insert(0);
+        *entry = (*entry).max(peak);
+    }
+    peaks
+}
+
+/// Fold records into the dashboard tables: a per-commit trajectory plus a
+/// per-workload breakdown. Pure (peaks are passed in) so the folding is
+/// unit-testable without touching disk.
+pub fn build_tables(records: &[RunRecord], peaks: &BTreeMap<String, u64>) -> Vec<Table> {
+    let mut traj = Table::new(
+        "Run trajectory by commit",
+        &[
+            "commit",
+            "first utc",
+            "jobs",
+            "failed",
+            "steps/s",
+            "peak bytes",
+            "cache hit %",
+            "queue s",
+            "wall s",
+        ],
+    );
+    for s in by_commit(records) {
+        let failed = s.records.iter().filter(|r| r.status != "ok").count();
+        let rates: Vec<f64> = s.records.iter().filter_map(|r| rate_of(r)).collect();
+        let hits: u64 = s.records.iter().map(|r| r.artifact_hits + r.corpus_hits).sum();
+        let lookups: u64 = hits
+            + s.records.iter().map(|r| r.artifact_misses + r.corpus_misses).sum::<u64>();
+        // Peak from the event logs when available, else the largest
+        // per-run optimizer-state figure the metrics carry.
+        let peak = peaks.get(s.commit).copied().filter(|&p| p > 0).or_else(|| {
+            s.records
+                .iter()
+                .filter_map(|r| {
+                    metric(r, "state_bytes").or_else(|| metric(r, "peak_state_bytes_per_shard"))
+                })
+                .map(|b| b as u64)
+                .max()
+        });
+        let utc = s.records.iter().min_by_key(|r| r.started_unix).map(|r| r.utc.clone());
+        traj.row(vec![
+            short_commit(s.commit),
+            utc.unwrap_or_default(),
+            s.records.len().to_string(),
+            failed.to_string(),
+            mean(&rates).map(|r| format!("{r:.1}")).unwrap_or_else(|| "-".into()),
+            peak.map(|p| p.to_string()).unwrap_or_else(|| "-".into()),
+            if lookups > 0 {
+                format!("{:.0}", 100.0 * hits as f64 / lookups as f64)
+            } else {
+                "-".into()
+            },
+            format!(
+                "{:.3}",
+                mean(&s.records.iter().map(|r| r.queue_seconds).collect::<Vec<_>>())
+                    .unwrap_or(0.0)
+            ),
+            format!("{:.2}", s.records.iter().map(|r| r.wall_seconds).sum::<f64>()),
+        ]);
+    }
+
+    let mut kinds = Table::new(
+        "Breakdown by workload",
+        &["kind", "runs", "ok", "failed", "mean wall s", "mean queue s"],
+    );
+    let mut names: Vec<&str> = records.iter().map(|r| r.kind.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    for kind in names {
+        let rs: Vec<&RunRecord> = records.iter().filter(|r| r.kind == kind).collect();
+        let ok = rs.iter().filter(|r| r.status == "ok").count();
+        kinds.row(vec![
+            kind.to_string(),
+            rs.len().to_string(),
+            ok.to_string(),
+            (rs.len() - ok).to_string(),
+            format!(
+                "{:.2}",
+                mean(&rs.iter().map(|r| r.wall_seconds).collect::<Vec<_>>()).unwrap_or(0.0)
+            ),
+            format!(
+                "{:.3}",
+                mean(&rs.iter().map(|r| r.queue_seconds).collect::<Vec<_>>()).unwrap_or(0.0)
+            ),
+        ]);
+    }
+    vec![traj, kinds]
+}
+
+fn short_commit(c: &str) -> String {
+    if c.len() > 12 && c.bytes().all(|b| b.is_ascii_hexdigit()) {
+        c[..12].to_string()
+    } else {
+        c.to_string()
+    }
+}
+
+/// The `ettrain registry report` entry point: load the registry at
+/// `dir`, print the trajectory tables, and (with `--out`) write
+/// `dashboard.md` + `trajectory.csv` under `out`.
+pub fn report(dir: &Path, out: Option<&Path>) -> Result<()> {
+    let records = Registry::load(dir)?;
+    let peaks = peak_bytes_by_commit(&records);
+    let tables = build_tables(&records, &peaks);
+    for t in &tables {
+        print!("{}", t.render());
+    }
+    println!("\n{} record(s) in {:?}", records.len(), dir.join("registry.jsonl"));
+    if let Some(out) = out {
+        std::fs::create_dir_all(out)?;
+        let md: String = tables.iter().map(|t| t.render_markdown()).collect();
+        let md_path = out.join("dashboard.md");
+        std::fs::write(&md_path, format!("# ettrain run trajectories\n\n{md}"))?;
+        tables[0].write_csv(out.join("trajectory.csv"))?;
+        println!("wrote {:?} and {:?}", md_path, out.join("trajectory.csv"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn rec(commit: &str, job: &str, started: u64, ok: bool, rate: Option<f64>) -> RunRecord {
+        let mut metrics = vec![("final_loss", Json::num(0.5))];
+        if let Some(r) = rate {
+            metrics.push(("steps_per_sec", Json::num(r)));
+        }
+        RunRecord {
+            run_id: format!("{started}-0-{job}"),
+            job: job.to_string(),
+            kind: "convex".to_string(),
+            commit: commit.to_string(),
+            started_unix: started,
+            utc: super::super::utc_string(started),
+            spec_toml: String::new(),
+            plan: None,
+            status: if ok { "ok" } else { "failed" }.to_string(),
+            error: String::new(),
+            metrics: Json::obj(metrics),
+            artifact_hits: 1,
+            artifact_misses: 1,
+            corpus_hits: 2,
+            corpus_misses: 0,
+            wall_seconds: 2.0,
+            queue_seconds: 0.25,
+            event_log: String::new(),
+        }
+    }
+
+    #[test]
+    fn trajectory_groups_and_orders_by_commit() {
+        let records = vec![
+            rec("bbbb", "j3", 200, true, Some(10.0)),
+            rec("aaaa", "j1", 100, true, Some(20.0)),
+            rec("aaaa", "j2", 120, false, None),
+        ];
+        let tables = build_tables(&records, &BTreeMap::new());
+        assert_eq!(tables.len(), 2);
+        let traj = &tables[0];
+        assert_eq!(traj.rows.len(), 2, "two commits -> two rows");
+        // Ordered by first-seen time: aaaa (100) before bbbb (200).
+        assert_eq!(traj.rows[0][0], "aaaa");
+        assert_eq!(traj.rows[0][2], "2", "two jobs on aaaa");
+        assert_eq!(traj.rows[0][3], "1", "one failure on aaaa");
+        assert_eq!(traj.rows[0][4], "20.0", "mean of the one rated job");
+        // 3 hits + 1 miss per record, two records -> 6/8 = 75%.
+        assert_eq!(traj.rows[0][6], "75");
+        assert_eq!(traj.rows[1][0], "bbbb");
+    }
+
+    #[test]
+    fn per_kind_breakdown_counts() {
+        let records =
+            vec![rec("c", "a", 1, true, None), rec("c", "b", 2, false, None)];
+        let tables = build_tables(&records, &BTreeMap::new());
+        let kinds = &tables[1];
+        assert_eq!(kinds.rows.len(), 1);
+        assert_eq!(kinds.rows[0][0], "convex");
+        assert_eq!(kinds.rows[0][1], "2");
+        assert_eq!(kinds.rows[0][2], "1");
+        assert_eq!(kinds.rows[0][3], "1");
+    }
+}

@@ -1,0 +1,680 @@
+//! The golden perf gate behind `ettrain gate`.
+//!
+//! Joins fresh `BENCH_optim.json` / `BENCH_pareto.json` rows to the
+//! checked-in `goldens/` copies by row key and fails (non-zero exit,
+//! named offending row + delta) on regressions beyond a tolerance band.
+//!
+//! Join keys: optim rows join by `name` (which already encodes
+//! kind × backend for step rows and p × eps-mode × variant for kernel
+//! rows); pareto rows join by `(task, budget_bytes)`.
+//!
+//! Cross-machine noise: raw ns/element is not comparable between hosts,
+//! so the optim gate normalizes by the **median drift** — it computes
+//! the ratio `current/golden` per joined row, takes the median ratio
+//! `m` (the machine-speed factor), and fails rows whose ratio exceeds
+//! `m * (1 + tolerance)`. A uniformly slower runner passes; a single
+//! regressed kernel stands out. `speedup_vs_reference` and all pareto
+//! quality metrics are machine-relative already and gate directly
+//! against the band.
+//!
+//! Bootstrap goldens: a golden file with `"pinned": false` (the state
+//! this repo checks in before a reference machine has run the suites)
+//! downgrades comparison failures to warnings — run
+//! `ettrain gate --bless` on the reference machine to pin real numbers.
+
+use crate::coordinator::report::Table;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Typed gate failures; `Display` is the user-facing message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GateError {
+    /// A golden row has no counterpart in the fresh bench output.
+    MissingRow { file: String, key: String },
+    /// The fresh bench output grew a row the goldens don't know.
+    ExtraRow { file: String, key: String },
+    /// A joined row moved beyond the tolerance band.
+    Regression {
+        file: String,
+        key: String,
+        metric: String,
+        golden: String,
+        current: String,
+        delta_pct: f64,
+    },
+    /// The bench file itself is malformed.
+    Schema { file: String, msg: String },
+}
+
+impl fmt::Display for GateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GateError::MissingRow { file, key } => {
+                write!(f, "{file}: golden row '{key}' missing from current bench")
+            }
+            GateError::ExtraRow { file, key } => {
+                write!(f, "{file}: row '{key}' not present in goldens (bless to accept)")
+            }
+            GateError::Regression { file, key, metric, golden, current, delta_pct } => {
+                write!(
+                    f,
+                    "{file}: '{key}' {metric} regressed {delta_pct:+.1}% \
+                     (golden {golden} -> current {current})"
+                )
+            }
+            GateError::Schema { file, msg } => write!(f, "{file}: {msg}"),
+        }
+    }
+}
+
+/// One joined row for the delta table (shown for every row, pass or
+/// fail, so a near-miss is visible before it regresses).
+#[derive(Clone, Debug)]
+pub struct DeltaRow {
+    pub key: String,
+    pub metric: String,
+    pub golden: f64,
+    pub current: f64,
+    pub delta_pct: f64,
+    pub ok: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct GateOptions {
+    /// Allowed fractional regression (0.10 = 10%).
+    pub tolerance: f64,
+    /// Directory holding the golden `BENCH_*.json` copies.
+    pub goldens_dir: PathBuf,
+    /// Fresh bench outputs (the paths the suites write to).
+    pub optim_path: PathBuf,
+    pub pareto_path: PathBuf,
+    /// Re-pin the goldens from the fresh outputs instead of comparing.
+    pub bless: bool,
+    /// Schema validation only (the CI replacement for the inline
+    /// Python asserts) — no goldens needed.
+    pub schema_only: bool,
+}
+
+impl Default for GateOptions {
+    fn default() -> Self {
+        GateOptions {
+            tolerance: 0.10,
+            goldens_dir: PathBuf::from("goldens"),
+            optim_path: PathBuf::from("BENCH_optim.json"),
+            pareto_path: PathBuf::from("BENCH_pareto.json"),
+            bless: false,
+            schema_only: false,
+        }
+    }
+}
+
+/// Accept `"10%"` or a bare fraction `"0.1"`.
+pub fn parse_tolerance(s: &str) -> Result<f64> {
+    let t = s.trim();
+    let v = if let Some(pct) = t.strip_suffix('%') {
+        pct.trim().parse::<f64>().map(|p| p / 100.0)
+    } else {
+        t.parse::<f64>()
+    }
+    .with_context(|| format!("bad tolerance '{s}' (want e.g. '10%' or '0.1')"))?;
+    if !v.is_finite() || v <= 0.0 || v >= 10.0 {
+        bail!("tolerance '{s}' out of range (0, 1000%)");
+    }
+    Ok(v)
+}
+
+fn str_field<'a>(r: &'a Json, k: &str) -> Option<&'a str> {
+    r.get(k).and_then(|v| v.as_str())
+}
+
+fn num_field(r: &Json, k: &str) -> Option<f64> {
+    r.get(k).and_then(|v| v.as_f64())
+}
+
+/// The `bench_optim/v1` invariants — a faithful port of the former CI
+/// inline-Python asserts.
+pub fn check_optim_schema(doc: &Json, file: &str) -> Vec<GateError> {
+    let mut errs = Vec::new();
+    let schema = |msg: String| GateError::Schema { file: file.to_string(), msg };
+    if str_field(doc, "schema") != Some("bench_optim/v1") {
+        errs.push(schema(format!(
+            "schema tag is {:?}, want \"bench_optim/v1\"",
+            str_field(doc, "schema")
+        )));
+        return errs;
+    }
+    let Some(records) = doc.get("records").and_then(|v| v.as_arr()) else {
+        errs.push(schema("missing 'records' array".to_string()));
+        return errs;
+    };
+    if records.is_empty() {
+        errs.push(schema("no records".to_string()));
+    }
+    for r in records {
+        let name = str_field(r, "name").unwrap_or("<unnamed>");
+        for k in ["name", "ns_per_element", "elements_per_sec"] {
+            if r.get(k).is_none() {
+                errs.push(schema(format!("record '{name}' missing '{k}'")));
+            }
+        }
+        if let Some(ns) = num_field(r, "ns_per_element") {
+            if ns.is_nan() || ns <= 0.0 {
+                errs.push(schema(format!("record '{name}': ns_per_element {ns} not > 0")));
+            }
+        }
+    }
+    errs
+}
+
+/// Keys every `bench_pareto/v1` row must carry.
+const PARETO_KEYS: [&str; 7] =
+    ["task", "budget_bytes", "plan_bytes", "choice", "expressivity", "final_loss", "accuracy"];
+
+/// The `bench_pareto/v1` invariants (same provenance as above).
+pub fn check_pareto_schema(doc: &Json, file: &str) -> Vec<GateError> {
+    let mut errs = Vec::new();
+    let schema = |msg: String| GateError::Schema { file: file.to_string(), msg };
+    if str_field(doc, "schema") != Some("bench_pareto/v1") {
+        errs.push(schema(format!(
+            "schema tag is {:?}, want \"bench_pareto/v1\"",
+            str_field(doc, "schema")
+        )));
+        return errs;
+    }
+    let Some(rows) = doc.get("rows").and_then(|v| v.as_arr()) else {
+        errs.push(schema("missing 'rows' array".to_string()));
+        return errs;
+    };
+    if rows.is_empty() {
+        errs.push(schema("no rows".to_string()));
+    }
+    for r in rows {
+        let task = str_field(r, "task").unwrap_or("<untasked>");
+        for k in PARETO_KEYS {
+            if r.get(k).is_none() {
+                errs.push(schema(format!("row '{task}' missing '{k}'")));
+            }
+        }
+        if let (Some(p), Some(b)) = (num_field(r, "plan_bytes"), num_field(r, "budget_bytes")) {
+            if p > b {
+                errs.push(schema(format!("row '{task}': plan_bytes {p} over budget {b}")));
+            }
+        }
+    }
+    errs
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = xs.len();
+    if n == 0 {
+        return 1.0;
+    }
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+fn keyed<'a>(
+    rows: &'a [Json],
+    key_of: impl Fn(&Json) -> Option<String>,
+) -> Vec<(String, &'a Json)> {
+    rows.iter().filter_map(|r| key_of(r).map(|k| (k, r))).collect()
+}
+
+fn join_errors(
+    file: &str,
+    golden: &[(String, &Json)],
+    current: &[(String, &Json)],
+) -> Vec<GateError> {
+    let mut errs = Vec::new();
+    for (k, _) in golden {
+        if !current.iter().any(|(c, _)| c == k) {
+            errs.push(GateError::MissingRow { file: file.to_string(), key: k.clone() });
+        }
+    }
+    for (k, _) in current {
+        if !golden.iter().any(|(g, _)| g == k) {
+            errs.push(GateError::ExtraRow { file: file.to_string(), key: k.clone() });
+        }
+    }
+    errs
+}
+
+/// Compare fresh optim records against goldens. Returns the typed
+/// failures plus the full delta table (every joined row).
+pub fn compare_optim(
+    golden: &Json,
+    current: &Json,
+    tolerance: f64,
+) -> (Vec<GateError>, Vec<DeltaRow>) {
+    let file = "BENCH_optim.json";
+    let empty = Vec::new();
+    let g_rows = golden.get("records").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let c_rows = current.get("records").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let key_of = |r: &Json| str_field(r, "name").map(|s| s.to_string());
+    let g = keyed(g_rows, key_of);
+    let c = keyed(c_rows, key_of);
+    let mut errs = join_errors(file, &g, &c);
+
+    let joined: Vec<(&str, &Json, &Json)> = g
+        .iter()
+        .filter_map(|(k, gr)| {
+            c.iter().find(|(ck, _)| ck == k).map(|(_, cr)| (k.as_str(), *gr, *cr))
+        })
+        .collect();
+
+    // Median current/golden ns ratio = the machine-drift factor.
+    let ratios: Vec<f64> = joined
+        .iter()
+        .filter_map(|(_, gr, cr)| {
+            let g = num_field(gr, "ns_per_element")?;
+            let c = num_field(cr, "ns_per_element")?;
+            (g > 0.0 && c > 0.0).then_some(c / g)
+        })
+        .collect();
+    let drift = median(ratios);
+
+    let mut deltas = Vec::new();
+    for (k, gr, cr) in &joined {
+        if let (Some(g), Some(c)) =
+            (num_field(gr, "ns_per_element"), num_field(cr, "ns_per_element"))
+        {
+            let ratio = if g > 0.0 { c / g } else { 1.0 };
+            // Drift-normalized slowdown relative to the fleet median.
+            let rel = if drift > 0.0 { ratio / drift } else { 1.0 };
+            let ok = rel <= 1.0 + tolerance;
+            let delta_pct = (rel - 1.0) * 100.0;
+            deltas.push(DeltaRow {
+                key: k.to_string(),
+                metric: "ns/element (drift-normalized)".to_string(),
+                golden: g,
+                current: c,
+                delta_pct,
+                ok,
+            });
+            if !ok {
+                errs.push(GateError::Regression {
+                    file: file.to_string(),
+                    key: k.to_string(),
+                    metric: "ns_per_element".to_string(),
+                    golden: format!("{g:.2}"),
+                    current: format!("{c:.2}"),
+                    delta_pct,
+                });
+            }
+        }
+        // Kernel rows carry a machine-relative speedup; gate directly.
+        if let (Some(g), Some(c)) =
+            (num_field(gr, "speedup_vs_reference"), num_field(cr, "speedup_vs_reference"))
+        {
+            let ok = c >= g * (1.0 - tolerance);
+            let delta_pct = if g != 0.0 { (c / g - 1.0) * 100.0 } else { 0.0 };
+            deltas.push(DeltaRow {
+                key: k.to_string(),
+                metric: "speedup_vs_reference".to_string(),
+                golden: g,
+                current: c,
+                delta_pct,
+                ok,
+            });
+            if !ok {
+                errs.push(GateError::Regression {
+                    file: file.to_string(),
+                    key: k.to_string(),
+                    metric: "speedup_vs_reference".to_string(),
+                    golden: format!("{g:.3}"),
+                    current: format!("{c:.3}"),
+                    delta_pct,
+                });
+            }
+        }
+    }
+    (errs, deltas)
+}
+
+/// Compare fresh pareto rows against goldens: plan bytes and planner
+/// choice must match exactly (the planner is deterministic); quality
+/// metrics gate on the band.
+pub fn compare_pareto(
+    golden: &Json,
+    current: &Json,
+    tolerance: f64,
+) -> (Vec<GateError>, Vec<DeltaRow>) {
+    let file = "BENCH_pareto.json";
+    let empty = Vec::new();
+    let g_rows = golden.get("rows").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let c_rows = current.get("rows").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let key_of = |r: &Json| {
+        let task = str_field(r, "task")?;
+        let budget = num_field(r, "budget_bytes")?;
+        Some(format!("{task}/{budget}"))
+    };
+    let g = keyed(g_rows, key_of);
+    let c = keyed(c_rows, key_of);
+    let mut errs = join_errors(file, &g, &c);
+    let mut deltas = Vec::new();
+
+    for (k, gr) in &g {
+        let Some((_, cr)) = c.iter().find(|(ck, _)| ck == k) else { continue };
+        // Exact planner determinism: same budget -> same plan.
+        for metric in ["plan_bytes", "choice"] {
+            let (gv, cv) = (gr.get(metric), cr.get(metric));
+            if gv != cv {
+                errs.push(GateError::Regression {
+                    file: file.to_string(),
+                    key: k.clone(),
+                    metric: metric.to_string(),
+                    golden: gv.map(|v| v.to_string()).unwrap_or_default(),
+                    current: cv.map(|v| v.to_string()).unwrap_or_default(),
+                    delta_pct: 0.0,
+                });
+            }
+        }
+        // Quality band: lower loss / higher accuracy / higher
+        // expressivity is better.
+        let checks: [(&str, bool); 3] =
+            [("expressivity", true), ("accuracy", true), ("final_loss", false)];
+        for (metric, higher_is_better) in checks {
+            let (Some(gv), Some(cv)) = (num_field(gr, metric), num_field(cr, metric)) else {
+                continue;
+            };
+            let delta_pct = if gv != 0.0 { (cv / gv - 1.0) * 100.0 } else { 0.0 };
+            let ok = if higher_is_better {
+                cv >= gv * (1.0 - tolerance)
+            } else {
+                cv <= gv * (1.0 + tolerance)
+            };
+            deltas.push(DeltaRow {
+                key: k.clone(),
+                metric: metric.to_string(),
+                golden: gv,
+                current: cv,
+                delta_pct,
+                ok,
+            });
+            if !ok {
+                errs.push(GateError::Regression {
+                    file: file.to_string(),
+                    key: k.clone(),
+                    metric: metric.to_string(),
+                    golden: format!("{gv:.6}"),
+                    current: format!("{cv:.6}"),
+                    delta_pct,
+                });
+            }
+        }
+    }
+    (errs, deltas)
+}
+
+fn load_json(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))
+}
+
+/// `"pinned": false` marks bootstrap goldens (structure only, numbers
+/// not yet from a reference machine); absent means pinned.
+fn is_pinned(doc: &Json) -> bool {
+    doc.get("pinned").and_then(|v| v.as_bool()).unwrap_or(true)
+}
+
+fn delta_table(title: &str, deltas: &[DeltaRow]) -> Table {
+    let mut t = Table::new(title, &["row", "metric", "golden", "current", "delta %", "status"]);
+    for d in deltas {
+        t.row(vec![
+            d.key.clone(),
+            d.metric.clone(),
+            format!("{:.4}", d.golden),
+            format!("{:.4}", d.current),
+            format!("{:+.1}", d.delta_pct),
+            if d.ok { "ok".to_string() } else { "FAIL".to_string() },
+        ]);
+    }
+    t
+}
+
+fn bless_one(src: &Path, dst_dir: &Path, check: impl Fn(&Json) -> Vec<GateError>) -> Result<()> {
+    let mut doc = load_json(src)?;
+    let errs = check(&doc);
+    if let Some(e) = errs.first() {
+        bail!("refusing to bless malformed bench output: {e}");
+    }
+    if let Json::Obj(map) = &mut doc {
+        map.insert("pinned".to_string(), Json::Bool(true));
+        map.insert("blessed_commit".to_string(), Json::str(&super::commit_string()));
+        map.insert("blessed_host".to_string(), Json::str(&super::host()));
+    }
+    std::fs::create_dir_all(dst_dir)?;
+    let dst = dst_dir.join(src.file_name().context("bless: bench path has no file name")?);
+    std::fs::write(&dst, doc.to_string_pretty() + "\n")
+        .with_context(|| format!("write {dst:?}"))?;
+    println!("blessed {dst:?}");
+    Ok(())
+}
+
+/// The `ettrain gate` entry point. Non-zero exit (an `Err`) names the
+/// first offending row; the full delta table prints either way.
+pub fn run_gate(opts: &GateOptions) -> Result<()> {
+    if opts.bless {
+        bless_one(&opts.optim_path, &opts.goldens_dir, |d| {
+            check_optim_schema(d, "BENCH_optim.json")
+        })?;
+        bless_one(&opts.pareto_path, &opts.goldens_dir, |d| {
+            check_pareto_schema(d, "BENCH_pareto.json")
+        })?;
+        return Ok(());
+    }
+
+    let optim = load_json(&opts.optim_path)?;
+    let pareto = load_json(&opts.pareto_path)?;
+    let mut schema_errs = check_optim_schema(&optim, "BENCH_optim.json");
+    schema_errs.extend(check_pareto_schema(&pareto, "BENCH_pareto.json"));
+    if let Some(e) = schema_errs.first() {
+        for e in &schema_errs {
+            eprintln!("schema: {e}");
+        }
+        bail!("gate: schema validation failed: {e}");
+    }
+    if opts.schema_only {
+        let n_opt = optim.get("records").and_then(|v| v.as_arr()).map_or(0, |r| r.len());
+        let n_par = pareto.get("rows").and_then(|v| v.as_arr()).map_or(0, |r| r.len());
+        println!("ok: {n_opt} optim records, {n_par} pareto rows");
+        return Ok(());
+    }
+
+    let g_optim = load_json(&opts.goldens_dir.join("BENCH_optim.json"))?;
+    let g_pareto = load_json(&opts.goldens_dir.join("BENCH_pareto.json"))?;
+    let pinned = is_pinned(&g_optim) && is_pinned(&g_pareto);
+
+    let (mut errs, optim_deltas) = compare_optim(&g_optim, &optim, opts.tolerance);
+    let (pareto_errs, pareto_deltas) = compare_pareto(&g_pareto, &pareto, opts.tolerance);
+    errs.extend(pareto_errs);
+
+    print!(
+        "{}",
+        delta_table(
+            &format!("optim vs goldens (tolerance {:.0}%)", opts.tolerance * 100.0),
+            &optim_deltas
+        )
+        .render()
+    );
+    print!("{}", delta_table("pareto vs goldens", &pareto_deltas).render());
+
+    if errs.is_empty() {
+        println!(
+            "gate: ok ({} optim rows, {} pareto checks within the band)",
+            optim_deltas.len(),
+            pareto_deltas.len()
+        );
+        return Ok(());
+    }
+    if !pinned {
+        for e in &errs {
+            crate::warnln!("gate (unpinned goldens): {e}");
+        }
+        println!(
+            "gate: goldens are bootstrap (pinned = false) — {} difference(s) reported as \
+             warnings. Run the bench suites on a reference machine and `ettrain gate --bless` \
+             to pin real numbers.",
+            errs.len()
+        );
+        return Ok(());
+    }
+    for e in &errs {
+        eprintln!("gate: {e}");
+    }
+    bail!("gate: {} regression(s); first: {}", errs.len(), errs[0]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn optim_doc(rows: &[(&str, f64, f64)]) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("bench_optim/v1")),
+            (
+                "records",
+                Json::Arr(
+                    rows.iter()
+                        .map(|(name, ns, speedup)| {
+                            Json::obj(vec![
+                                ("name", Json::str(name)),
+                                ("ns_per_element", Json::num(*ns)),
+                                ("elements_per_sec", Json::num(1e9 / ns)),
+                                ("speedup_vs_reference", Json::num(*speedup)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn tolerance_spellings() {
+        assert!((parse_tolerance("10%").unwrap() - 0.10).abs() < 1e-12);
+        assert!((parse_tolerance("0.25").unwrap() - 0.25).abs() < 1e-12);
+        assert!(parse_tolerance("-1").is_err());
+        assert!(parse_tolerance("nope").is_err());
+    }
+
+    #[test]
+    fn identical_files_pass() {
+        let doc = optim_doc(&[("a", 2.0, 1.5), ("b", 3.0, 2.0), ("c", 4.0, 1.0)]);
+        let (errs, deltas) = compare_optim(&doc, &doc, 0.10);
+        assert!(errs.is_empty(), "{errs:?}");
+        assert!(deltas.iter().all(|d| d.ok));
+    }
+
+    #[test]
+    fn uniform_machine_drift_passes_single_row_regression_fails() {
+        let golden = optim_doc(&[("a", 2.0, 1.5), ("b", 3.0, 2.0), ("c", 4.0, 1.0)]);
+        // Everything 3x slower: a slower runner, not a regression.
+        let slower = optim_doc(&[("a", 6.0, 1.5), ("b", 9.0, 2.0), ("c", 12.0, 1.0)]);
+        let (errs, _) = compare_optim(&golden, &slower, 0.10);
+        assert!(errs.is_empty(), "uniform drift must pass: {errs:?}");
+        // Only row b 10x slower: a real regression, named.
+        let one_bad = optim_doc(&[("a", 2.0, 1.5), ("b", 30.0, 2.0), ("c", 4.0, 1.0)]);
+        let (errs, _) = compare_optim(&golden, &one_bad, 0.10);
+        assert!(
+            errs.iter().any(|e| matches!(
+                e,
+                GateError::Regression { key, metric, .. }
+                    if key == "b" && metric == "ns_per_element"
+            )),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn speedup_loss_fails_directly() {
+        let golden = optim_doc(&[("a", 2.0, 3.0), ("b", 3.0, 1.0)]);
+        let worse = optim_doc(&[("a", 2.0, 1.1), ("b", 3.0, 1.0)]);
+        let (errs, _) = compare_optim(&golden, &worse, 0.10);
+        assert!(errs.iter().any(|e| matches!(
+            e,
+            GateError::Regression { key, metric, .. }
+                if key == "a" && metric == "speedup_vs_reference"
+        )));
+    }
+
+    #[test]
+    fn missing_and_extra_rows_are_typed() {
+        let golden = optim_doc(&[("a", 2.0, 1.0), ("b", 3.0, 1.0)]);
+        let current = optim_doc(&[("a", 2.0, 1.0), ("new", 1.0, 1.0)]);
+        let (errs, _) = compare_optim(&golden, &current, 0.10);
+        assert!(errs
+            .iter()
+            .any(|e| matches!(e, GateError::MissingRow { key, .. } if key == "b")));
+        assert!(errs
+            .iter()
+            .any(|e| matches!(e, GateError::ExtraRow { key, .. } if key == "new")));
+    }
+
+    fn pareto_doc(rows: &[(&str, f64, f64, &str, f64, f64, f64)]) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("bench_pareto/v1")),
+            (
+                "rows",
+                Json::Arr(
+                    rows.iter()
+                        .map(|(task, budget, plan, choice, expr, loss, acc)| {
+                            Json::obj(vec![
+                                ("task", Json::str(task)),
+                                ("budget_bytes", Json::num(*budget)),
+                                ("plan_bytes", Json::num(*plan)),
+                                ("choice", Json::str(choice)),
+                                ("expressivity", Json::num(*expr)),
+                                ("final_loss", Json::num(*loss)),
+                                ("accuracy", Json::num(*acc)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn pareto_loss_regression_fails() {
+        let golden = pareto_doc(&[("convex", 4096.0, 4000.0, "ET2/f32", 128.0, 0.50, 0.90)]);
+        let ok = pareto_doc(&[("convex", 4096.0, 4000.0, "ET2/f32", 128.0, 0.52, 0.89)]);
+        let (errs, _) = compare_pareto(&golden, &ok, 0.10);
+        assert!(errs.is_empty(), "{errs:?}");
+        let bad = pareto_doc(&[("convex", 4096.0, 4000.0, "ET2/f32", 128.0, 0.80, 0.90)]);
+        let (errs, _) = compare_pareto(&golden, &bad, 0.10);
+        assert!(errs.iter().any(|e| matches!(
+            e,
+            GateError::Regression { metric, .. } if metric == "final_loss"
+        )));
+    }
+
+    #[test]
+    fn pareto_plan_change_is_exact_failure() {
+        let golden = pareto_doc(&[("convex", 4096.0, 4000.0, "ET2/f32", 128.0, 0.5, 0.9)]);
+        let drifted = pareto_doc(&[("convex", 4096.0, 3800.0, "ET2/f32", 128.0, 0.5, 0.9)]);
+        let (errs, _) = compare_pareto(&golden, &drifted, 0.10);
+        assert!(errs.iter().any(|e| matches!(
+            e,
+            GateError::Regression { metric, .. } if metric == "plan_bytes"
+        )));
+    }
+
+    #[test]
+    fn schema_checks_match_the_old_ci_asserts() {
+        let good = optim_doc(&[("a", 2.0, 1.0)]);
+        assert!(check_optim_schema(&good, "f").is_empty());
+        let bad_tag = Json::obj(vec![("schema", Json::str("nope"))]);
+        assert!(!check_optim_schema(&bad_tag, "f").is_empty());
+        let zero_ns = optim_doc(&[("a", 0.0, 1.0)]);
+        assert!(!check_optim_schema(&zero_ns, "f").is_empty());
+        let over = pareto_doc(&[("convex", 100.0, 200.0, "c", 1.0, 1.0, 1.0)]);
+        assert!(!check_pareto_schema(&over, "f").is_empty());
+    }
+}

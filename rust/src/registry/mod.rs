@@ -1,0 +1,181 @@
+//! The cross-commit observability layer: every batch the session executes
+//! leaves a durable, deterministic trace.
+//!
+//! ```text
+//!   session::run_batch ──▶ registry/v1 records ──▶ results/registry/
+//!        │                 (one per JobSpec:        registry.jsonl + .csv
+//!        │                  run id, commit, UTC,
+//!        │                  canonical spec TOML,
+//!        │                  solved StatePlan,
+//!        │                  metrics, cache counts,
+//!        │                  wall/queue seconds)
+//!        │
+//!        ├──▶ gate    ettrain gate — diff BENCH_optim.json/BENCH_pareto.json
+//!        │            against checked-in goldens/ with a tolerance band
+//!        │            (--bless re-pins, --schema-only replaces the old CI
+//!        │            inline asserts)
+//!        │
+//!        └──▶ dashboard    ettrain registry report — fold records + event
+//!                          logs into per-commit trajectories (Markdown +
+//!                          CSV via coordinator::report::Table)
+//! ```
+//!
+//! Three pieces:
+//!
+//! * [`record`] — the [`record::RunRecord`] type and the `registry/v1`
+//!   CSV + JSONL encodings (pure-std via [`crate::util::json`]; the CSV
+//!   codec does real RFC-4180-style quoting because spec TOML contains
+//!   commas, quotes, and newlines). [`record_batch`] is the single entry
+//!   point `session::run_batch` writes through, so every
+//!   `ettrain train|batch|experiment` invocation is recorded for free.
+//! * [`gate`] — the golden perf gate: join new bench rows to goldens by
+//!   row key and fail on regressions beyond the band, with typed
+//!   [`gate::GateError`]s for missing/extra rows and a per-row delta
+//!   table.
+//! * [`dashboard`] — the trajectory summarizer behind
+//!   `ettrain registry report`.
+//!
+//! Determinism contract: a record's `spec_toml` is the canonical
+//! [`crate::session::JobSpec::to_toml`] serialization, and re-executing it
+//! reproduces the recorded metrics bitwise for step-bounded workloads
+//! (`rust/tests/registry.rs`, the ASM `rep_det` pattern).
+
+pub mod dashboard;
+pub mod gate;
+pub mod record;
+
+pub use record::{record_batch, Registry, RunRecord, REGISTRY_SCHEMA};
+
+use std::path::Path;
+
+/// The git commit the process is running from: `ETTRAIN_COMMIT` env
+/// override first (CI, tests), else a pure-std parse of `.git/HEAD`
+/// walking up from the current directory (no `git` subprocess — the
+/// registry must not fork on every batch).
+pub fn git_commit() -> Option<String> {
+    if let Ok(c) = std::env::var("ETTRAIN_COMMIT") {
+        let c = c.trim().to_string();
+        if !c.is_empty() {
+            return Some(c);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let git = dir.join(".git");
+        if git.is_dir() {
+            return read_head(&git);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn read_head(git: &Path) -> Option<String> {
+    let head = std::fs::read_to_string(git.join("HEAD")).ok()?;
+    let head = head.trim();
+    let Some(r) = head.strip_prefix("ref: ") else {
+        // Detached HEAD: the file holds the hash itself.
+        return if head.is_empty() { None } else { Some(head.to_string()) };
+    };
+    let r = r.trim();
+    if let Ok(s) = std::fs::read_to_string(git.join(r)) {
+        let s = s.trim().to_string();
+        if !s.is_empty() {
+            return Some(s);
+        }
+    }
+    // Loose ref absent — look through packed-refs.
+    let packed = std::fs::read_to_string(git.join("packed-refs")).ok()?;
+    for line in packed.lines() {
+        let line = line.trim();
+        if line.starts_with('#') || line.starts_with('^') {
+            continue;
+        }
+        if let Some((hash, name)) = line.split_once(' ') {
+            if name.trim() == r {
+                return Some(hash.to_string());
+            }
+        }
+    }
+    None
+}
+
+/// [`git_commit`] with an `"unknown"` fallback, for record fields that
+/// must always be present.
+pub fn commit_string() -> String {
+    git_commit().unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Seconds since the unix epoch (0 if the clock is before 1970).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Best-effort host name for log headers: `HOSTNAME` env, then
+/// `/etc/hostname`, then `"unknown"`.
+pub fn host() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        let h = h.trim().to_string();
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    if let Ok(h) = std::fs::read_to_string("/etc/hostname") {
+        let h = h.trim().to_string();
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    "unknown".to_string()
+}
+
+/// Format a unix timestamp as an ISO-8601 UTC string
+/// (`1970-01-01T00:00:00Z`), pure std. Uses the standard civil-from-days
+/// conversion (Howard Hinnant's algorithm), exact for any date this
+/// codebase will ever log.
+pub fn utc_string(unix: u64) -> String {
+    let days = unix / 86_400;
+    let secs = unix % 86_400;
+    let (h, m, s) = (secs / 3600, (secs / 60) % 60, secs % 60);
+    let z = days + 719_468;
+    let era = z / 146_097;
+    let doe = z - era * 146_097;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let month = if mp < 10 { mp + 3 } else { mp - 9 };
+    let year = yoe + era * 400 + u64::from(month <= 2);
+    format!("{year:04}-{month:02}-{d:02}T{h:02}:{m:02}:{s:02}Z")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utc_epoch_and_leap_day() {
+        assert_eq!(utc_string(0), "1970-01-01T00:00:00Z");
+        // 2000-02-29 00:00:00 UTC — a century leap day.
+        assert_eq!(utc_string(951_782_400), "2000-02-29T00:00:00Z");
+        assert_eq!(utc_string(951_782_400 + 3661), "2000-02-29T01:01:01Z");
+        // 2026-08-08 00:00:00 UTC (day 20673 since the epoch).
+        assert_eq!(utc_string(20_673 * 86_400), "2026-08-08T00:00:00Z");
+    }
+
+    #[test]
+    fn commit_env_override_wins() {
+        std::env::set_var("ETTRAIN_COMMIT", "deadbeef");
+        assert_eq!(commit_string(), "deadbeef");
+        std::env::remove_var("ETTRAIN_COMMIT");
+    }
+
+    #[test]
+    fn host_is_nonempty() {
+        assert!(!host().is_empty());
+    }
+}

@@ -1,0 +1,513 @@
+//! The `registry/v1` run record and its two on-disk encodings.
+//!
+//! One [`RunRecord`] per executed [`JobSpec`], appended to both
+//! `registry.jsonl` (authoritative, header record
+//! `{"schema":"registry/v1"}` on first write) and `registry.csv` (a
+//! mirror for spreadsheet tooling, `#schema=registry/v1` comment line +
+//! column header). The CSV codec does RFC-4180-style quoting — spec TOML
+//! carries commas, quotes, and newlines, so the naive
+//! `coordinator::report::Table::write_csv` join is not enough here.
+//!
+//! Both encodings round-trip bitwise: integers print as integers and
+//! f64s go through Rust's shortest-round-trip `Display`, so
+//! `load(append(r)) == r` including float bits (covered in
+//! `rust/tests/registry.rs`).
+
+use crate::session::{BatchReport, ConvexOpt, JobEvent, JobSpec, Workload};
+use crate::util::json::Json;
+use crate::util::logging::{read_jsonl, JsonlWriter};
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Schema tag carried by the header record of both encodings.
+pub const REGISTRY_SCHEMA: &str = "registry/v1";
+
+/// CSV column order (also the field order of the JSONL objects).
+const COLUMNS: [&str; 18] = [
+    "run_id",
+    "job",
+    "kind",
+    "commit",
+    "started_unix",
+    "utc",
+    "spec_toml",
+    "plan",
+    "status",
+    "error",
+    "metrics",
+    "artifact_hits",
+    "artifact_misses",
+    "corpus_hits",
+    "corpus_misses",
+    "wall_seconds",
+    "queue_seconds",
+    "event_log",
+];
+
+/// Process-wide sequence number so run ids stay unique when several
+/// batches record within the same second.
+static RUN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One executed job: provenance (commit, UTC, canonical spec), the
+/// solved state plan when the job was budget-planned, outcome metrics,
+/// and scheduler accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunRecord {
+    /// `"<started_unix>-<seq>-<job>"` — unique per process lifetime.
+    pub run_id: String,
+    /// Job name within its batch.
+    pub job: String,
+    /// Workload label: `lm`, `convex`, `shard-bench`, or `vision`.
+    pub kind: String,
+    /// Git commit of the producing checkout (`"unknown"` off-repo).
+    pub commit: String,
+    /// Batch start, seconds since the unix epoch.
+    pub started_unix: u64,
+    /// `started_unix` as an ISO-8601 UTC string.
+    pub utc: String,
+    /// Canonical [`JobSpec::to_toml`] serialization — re-executing this
+    /// reproduces `metrics` bitwise for step-bounded workloads.
+    pub spec_toml: String,
+    /// Solved `state_plan/v1` JSON for budget-planned jobs, else `None`.
+    pub plan: Option<Json>,
+    /// `"ok"` or `"failed"`.
+    pub status: String,
+    /// Failure message (empty when `status == "ok"`).
+    pub error: String,
+    /// Workload-specific final metrics as a JSON object (empty on
+    /// failure).
+    pub metrics: Json,
+    pub artifact_hits: u64,
+    pub artifact_misses: u64,
+    pub corpus_hits: u64,
+    pub corpus_misses: u64,
+    pub wall_seconds: f64,
+    /// Defer→admit wait inside the scheduler queue.
+    pub queue_seconds: f64,
+    /// Path of the schedule JSONL this run's events went to (empty when
+    /// the batch ran without a log).
+    pub event_log: String,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("run_id", Json::str(&self.run_id)),
+            ("job", Json::str(&self.job)),
+            ("kind", Json::str(&self.kind)),
+            ("commit", Json::str(&self.commit)),
+            ("started_unix", Json::num(self.started_unix as f64)),
+            ("utc", Json::str(&self.utc)),
+            ("spec_toml", Json::str(&self.spec_toml)),
+            ("plan", self.plan.clone().unwrap_or(Json::Null)),
+            ("status", Json::str(&self.status)),
+            ("error", Json::str(&self.error)),
+            ("metrics", self.metrics.clone()),
+            ("artifact_hits", Json::num(self.artifact_hits as f64)),
+            ("artifact_misses", Json::num(self.artifact_misses as f64)),
+            ("corpus_hits", Json::num(self.corpus_hits as f64)),
+            ("corpus_misses", Json::num(self.corpus_misses as f64)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("queue_seconds", Json::num(self.queue_seconds)),
+            ("event_log", Json::str(&self.event_log)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("registry record: missing string '{k}'"))?
+                .to_string())
+        };
+        let u = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(|v| v.as_i64())
+                .and_then(|v| u64::try_from(v).ok())
+                .with_context(|| format!("registry record: missing count '{k}'"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("registry record: missing number '{k}'"))
+        };
+        let plan = match j.get("plan") {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(p.clone()),
+        };
+        let metrics = j.get("metrics").cloned().unwrap_or_else(|| Json::obj(vec![]));
+        if metrics.as_obj().is_none() {
+            bail!("registry record: 'metrics' must be an object");
+        }
+        Ok(RunRecord {
+            run_id: s("run_id")?,
+            job: s("job")?,
+            kind: s("kind")?,
+            commit: s("commit")?,
+            started_unix: u("started_unix")?,
+            utc: s("utc")?,
+            spec_toml: s("spec_toml")?,
+            plan,
+            status: s("status")?,
+            error: s("error")?,
+            metrics,
+            artifact_hits: u("artifact_hits")?,
+            artifact_misses: u("artifact_misses")?,
+            corpus_hits: u("corpus_hits")?,
+            corpus_misses: u("corpus_misses")?,
+            wall_seconds: f("wall_seconds")?,
+            queue_seconds: f("queue_seconds")?,
+            event_log: s("event_log")?,
+        })
+    }
+
+    fn csv_row(&self) -> String {
+        let cells = [
+            self.run_id.clone(),
+            self.job.clone(),
+            self.kind.clone(),
+            self.commit.clone(),
+            self.started_unix.to_string(),
+            self.utc.clone(),
+            self.spec_toml.clone(),
+            self.plan.as_ref().map(|p| p.to_string()).unwrap_or_default(),
+            self.status.clone(),
+            self.error.clone(),
+            self.metrics.to_string(),
+            self.artifact_hits.to_string(),
+            self.artifact_misses.to_string(),
+            self.corpus_hits.to_string(),
+            self.corpus_misses.to_string(),
+            format!("{}", self.wall_seconds),
+            format!("{}", self.queue_seconds),
+            self.event_log.clone(),
+        ];
+        cells.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",")
+    }
+
+    fn from_cells(cells: &[String]) -> Result<RunRecord> {
+        if cells.len() != COLUMNS.len() {
+            bail!("registry csv: expected {} cells, got {}", COLUMNS.len(), cells.len());
+        }
+        let u = |i: usize| -> Result<u64> {
+            cells[i]
+                .parse::<u64>()
+                .with_context(|| format!("registry csv: bad {} '{}'", COLUMNS[i], cells[i]))
+        };
+        let f = |i: usize| -> Result<f64> {
+            cells[i]
+                .parse::<f64>()
+                .with_context(|| format!("registry csv: bad {} '{}'", COLUMNS[i], cells[i]))
+        };
+        let plan = if cells[7].is_empty() {
+            None
+        } else {
+            Some(Json::parse(&cells[7]).context("registry csv: bad plan JSON")?)
+        };
+        Ok(RunRecord {
+            run_id: cells[0].clone(),
+            job: cells[1].clone(),
+            kind: cells[2].clone(),
+            commit: cells[3].clone(),
+            started_unix: u(4)?,
+            utc: cells[5].clone(),
+            spec_toml: cells[6].clone(),
+            plan,
+            status: cells[8].clone(),
+            error: cells[9].clone(),
+            metrics: Json::parse(&cells[10]).context("registry csv: bad metrics JSON")?,
+            artifact_hits: u(11)?,
+            artifact_misses: u(12)?,
+            corpus_hits: u(13)?,
+            corpus_misses: u(14)?,
+            wall_seconds: f(15)?,
+            queue_seconds: f(16)?,
+            event_log: cells[17].clone(),
+        })
+    }
+}
+
+/// Quote a CSV cell iff it contains a separator, quote, or newline;
+/// embedded quotes double.
+fn csv_escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') || cell.contains('\r') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Parse a whole CSV document into rows of cells. A state machine rather
+/// than line splitting: quoted cells may span lines.
+fn csv_parse(text: &str) -> Result<Vec<Vec<String>>> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut cell = String::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    let mut any = false;
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        cell.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                _ => cell.push(c),
+            }
+            continue;
+        }
+        match c {
+            '"' => in_quotes = true,
+            ',' => row.push(std::mem::take(&mut cell)),
+            '\r' => {} // swallowed; \n terminates the row
+            '\n' => {
+                row.push(std::mem::take(&mut cell));
+                rows.push(std::mem::take(&mut row));
+            }
+            _ => cell.push(c),
+        }
+    }
+    if in_quotes {
+        bail!("registry csv: unterminated quoted cell");
+    }
+    // A final row without a trailing newline.
+    if any && (!cell.is_empty() || !row.is_empty()) {
+        row.push(cell);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// The on-disk registry: a directory holding `registry.jsonl`
+/// (authoritative) and `registry.csv` (mirror), both append-only.
+pub struct Registry {
+    dir: PathBuf,
+}
+
+impl Registry {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("create registry dir {dir:?}"))?;
+        Ok(Registry { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn jsonl_path(&self) -> PathBuf {
+        self.dir.join("registry.jsonl")
+    }
+
+    pub fn csv_path(&self) -> PathBuf {
+        self.dir.join("registry.csv")
+    }
+
+    /// Append records to both encodings, writing the versioned headers
+    /// first when a file does not exist yet (or is empty).
+    pub fn append(&self, records: &[RunRecord]) -> Result<()> {
+        let jsonl = self.jsonl_path();
+        let fresh = std::fs::metadata(&jsonl).map(|m| m.len() == 0).unwrap_or(true);
+        let mut w = JsonlWriter::create(&jsonl)?;
+        if fresh {
+            w.write(&Json::obj(vec![("schema", Json::str(REGISTRY_SCHEMA))]))?;
+        }
+        for r in records {
+            w.write(&r.to_json())?;
+        }
+        w.flush()?;
+
+        let csv = self.csv_path();
+        let fresh = std::fs::metadata(&csv).map(|m| m.len() == 0).unwrap_or(true);
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&csv)
+            .with_context(|| format!("open {csv:?}"))?;
+        let mut buf = String::new();
+        if fresh {
+            buf.push_str(&format!("#schema={REGISTRY_SCHEMA}\n"));
+            buf.push_str(&COLUMNS.join(","));
+            buf.push('\n');
+        }
+        for r in records {
+            buf.push_str(&r.csv_row());
+            buf.push('\n');
+        }
+        f.write_all(buf.as_bytes())?;
+        Ok(())
+    }
+
+    /// Load every record from `registry.jsonl`, verifying the header.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Vec<RunRecord>> {
+        let path = dir.as_ref().join("registry.jsonl");
+        let raw = read_jsonl(&path)?;
+        let Some(first) = raw.first() else {
+            bail!("registry {path:?}: empty file");
+        };
+        if first.get("schema").and_then(|v| v.as_str()) != Some(REGISTRY_SCHEMA) {
+            bail!("registry {path:?}: missing {REGISTRY_SCHEMA} header record");
+        }
+        raw.iter()
+            .skip(1)
+            .filter(|j| j.get("run_id").is_some()) // tolerate repeated headers
+            .map(RunRecord::from_json)
+            .collect()
+    }
+
+    /// Load the CSV mirror (round-trip checks; JSONL stays authoritative).
+    pub fn load_csv(dir: impl AsRef<Path>) -> Result<Vec<RunRecord>> {
+        let path = dir.as_ref().join("registry.csv");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("open {path:?}"))?;
+        let rows = csv_parse(&text)?;
+        let header = format!("#schema={REGISTRY_SCHEMA}");
+        if rows.len() < 2 || rows[0].first() != Some(&header) {
+            bail!("registry {path:?}: missing {header} header");
+        }
+        let want: Vec<String> = COLUMNS.iter().map(|c| c.to_string()).collect();
+        if rows[1] != want {
+            bail!("registry {path:?}: unexpected column header {:?}", rows[1]);
+        }
+        rows[2..].iter().map(|r| RunRecord::from_cells(r)).collect()
+    }
+}
+
+/// Re-solve the state plan a budget-planned job executes, for the
+/// record's `plan` field. Best-effort: planning failures (or LM jobs
+/// whose artifact is gone) record `None` rather than failing the write.
+fn solved_plan(spec: &JobSpec) -> Option<Json> {
+    let opts = crate::budget::PlannerOptions::default();
+    match &spec.workload {
+        Workload::Convex(c) => match &c.opt {
+            ConvexOpt::Planned { budget } => {
+                let groups =
+                    vec![crate::optim::GroupSpec::new("w", &[c.data.k, c.data.d])];
+                crate::budget::plan(&groups, *budget, &opts).ok().map(|p| p.to_json())
+            }
+            _ => None,
+        },
+        Workload::Lm(cfg) => {
+            let budget = cfg.opt_memory_budget?;
+            let m = crate::data::Manifest::load(&cfg.artifact_dir, &cfg.artifact).ok()?;
+            crate::budget::plan(&m.group_specs(), budget, &opts).ok().map(|p| p.to_json())
+        }
+        _ => None,
+    }
+}
+
+/// Write one `registry/v1` record per job in `report` (executed and
+/// prefailed alike — `status` tells them apart). Called by
+/// `session::run_batch` when [`crate::session::SchedulerOptions::registry_dir`]
+/// is set; returns the number of records written.
+pub fn record_batch(
+    dir: &Path,
+    specs: &[JobSpec],
+    report: &BatchReport,
+    event_log: Option<&Path>,
+) -> Result<usize> {
+    let registry = Registry::open(dir)?;
+    let commit = super::commit_string();
+    let started = super::unix_now().saturating_sub(report.wall_seconds as u64);
+    let utc = super::utc_string(started);
+    let log = event_log.map(|p| p.display().to_string()).unwrap_or_default();
+
+    let mut records = Vec::with_capacity(report.results.len());
+    for res in &report.results {
+        let Some(spec) = specs.iter().find(|s| s.name == res.name) else {
+            continue; // cannot happen: results are assembled from specs
+        };
+        // Per-job cache tallies out of the shared event stream.
+        let (mut ah, mut am, mut ch, mut cm) = (0u64, 0u64, 0u64, 0u64);
+        for e in &report.events {
+            if e.event.job() != res.name {
+                continue;
+            }
+            match &e.event {
+                JobEvent::ArtifactCache { hit, .. } => {
+                    if *hit {
+                        ah += 1;
+                    } else {
+                        am += 1;
+                    }
+                }
+                JobEvent::CorpusCache { hit, .. } => {
+                    if *hit {
+                        ch += 1;
+                    } else {
+                        cm += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let (status, error, metrics) = match &res.outcome {
+            Ok(out) => ("ok".to_string(), String::new(), out.metrics_json()),
+            Err(e) => ("failed".to_string(), e.clone(), Json::obj(vec![])),
+        };
+        let seq = RUN_SEQ.fetch_add(1, Ordering::Relaxed);
+        records.push(RunRecord {
+            run_id: format!("{started}-{seq}-{}", res.name),
+            job: res.name.clone(),
+            kind: spec.workload_label().to_string(),
+            commit: commit.clone(),
+            started_unix: started,
+            utc: utc.clone(),
+            spec_toml: spec.to_toml(),
+            plan: solved_plan(spec),
+            status,
+            error,
+            metrics,
+            artifact_hits: ah,
+            artifact_misses: am,
+            corpus_hits: ch,
+            corpus_misses: cm,
+            wall_seconds: res.wall_seconds,
+            queue_seconds: res.queue_seconds,
+            event_log: log.clone(),
+        });
+    }
+    registry.append(&records)?;
+    Ok(records.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_escape_quotes_only_when_needed() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_escape("two\nlines"), "\"two\nlines\"");
+    }
+
+    #[test]
+    fn csv_parse_handles_quoted_newlines_and_crlf() {
+        let rows = csv_parse("a,\"b,\nc\",d\r\ne,\"f\"\"g\",h\n").unwrap();
+        assert_eq!(
+            rows,
+            vec![
+                vec!["a".to_string(), "b,\nc".to_string(), "d".to_string()],
+                vec!["e".to_string(), "f\"g".to_string(), "h".to_string()],
+            ]
+        );
+        assert!(csv_parse("a,\"open").is_err());
+    }
+
+    #[test]
+    fn csv_parse_last_row_without_newline() {
+        let rows = csv_parse("a,b\nc,d").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec!["c".to_string(), "d".to_string()]);
+    }
+}

@@ -29,6 +29,10 @@ pub enum JobEvent {
     ArtifactCache { job: String, artifact: String, hit: bool },
     /// The job asked the session for a synthesized corpus/dataset.
     CorpusCache { job: String, key: String, hit: bool },
+    /// An admitted job returned its budget reservation; `in_use_bytes`
+    /// is the consumption *after* the release, so budget occupancy is
+    /// reconstructible from the log alone (pair with [`JobEvent::Admitted`]).
+    Released { job: String, in_use_bytes: u64 },
     /// The job completed successfully.
     Finished { job: String, wall_seconds: f64 },
     /// The job failed (the batch continues; the error is also in the
@@ -46,6 +50,7 @@ impl JobEvent {
             | JobEvent::Progress { job, .. }
             | JobEvent::ArtifactCache { job, .. }
             | JobEvent::CorpusCache { job, .. }
+            | JobEvent::Released { job, .. }
             | JobEvent::Finished { job, .. }
             | JobEvent::Failed { job, .. } => job,
         }
@@ -60,6 +65,7 @@ impl JobEvent {
             JobEvent::Progress { .. } => "progress",
             JobEvent::ArtifactCache { .. } => "artifact_cache",
             JobEvent::CorpusCache { .. } => "corpus_cache",
+            JobEvent::Released { .. } => "released",
             JobEvent::Finished { .. } => "finished",
             JobEvent::Failed { .. } => "failed",
         }
@@ -89,6 +95,9 @@ impl JobEvent {
             ],
             JobEvent::CorpusCache { key, hit, .. } => {
                 vec![("key", Json::str(key.clone())), ("hit", Json::Bool(*hit))]
+            }
+            JobEvent::Released { in_use_bytes, .. } => {
+                vec![("in_use_bytes", Json::num(*in_use_bytes as f64))]
             }
             JobEvent::Finished { wall_seconds, .. } => {
                 vec![("wall_seconds", Json::num(*wall_seconds))]
@@ -138,10 +147,21 @@ impl EventSink {
     }
 
     /// A sink whose events go nowhere — for driving job executors outside
-    /// a scheduler (tests, examples).
+    /// a scheduler when the event stream genuinely doesn't matter. When
+    /// it does (examples asserting on their own cache/progress counters),
+    /// use [`EventSink::collect`] instead.
     pub fn discard(job: impl Into<String>) -> EventSink {
         let (tx, _rx) = std::sync::mpsc::channel();
         EventSink { job: job.into(), tx, clock: Arc::new(Timer::start()) }
+    }
+
+    /// A sink buffering its events in-process, plus the drain handle to
+    /// read them back — the standalone-executor counterpart of the
+    /// scheduler's collector thread.
+    pub fn collect(job: impl Into<String>) -> (EventSink, CollectedEvents) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sink = EventSink { job: job.into(), tx, clock: Arc::new(Timer::start()) };
+        (sink, CollectedEvents { rx })
     }
 
     /// The job this sink reports for.
@@ -171,6 +191,19 @@ impl EventSink {
     /// Report a corpus/dataset cache lookup.
     pub fn corpus_cache(&self, key: &str, hit: bool) {
         self.emit(JobEvent::CorpusCache { job: self.job.clone(), key: key.to_string(), hit });
+    }
+}
+
+/// The drain side of [`EventSink::collect`]: buffers every event the
+/// paired sink emitted until [`CollectedEvents::drain`] is called.
+pub struct CollectedEvents {
+    rx: std::sync::mpsc::Receiver<StampedEvent>,
+}
+
+impl CollectedEvents {
+    /// Every event emitted so far, in order, without blocking.
+    pub fn drain(&self) -> Vec<StampedEvent> {
+        self.rx.try_iter().collect()
     }
 }
 
@@ -240,5 +273,27 @@ mod tests {
     fn discard_sink_is_silent() {
         let sink = EventSink::discard("x");
         sink.progress(1, 2, 0.0); // must not panic on the closed channel
+    }
+
+    #[test]
+    fn collect_sink_buffers_and_drains() {
+        let (sink, events) = EventSink::collect("c");
+        sink.progress(1, 4, 2.0);
+        sink.corpus_cache("k", false);
+        let got = events.drain();
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|e| e.event.job() == "c"));
+        assert!(events.drain().is_empty(), "drain must not replay");
+        sink.progress(2, 4, 1.5);
+        assert_eq!(events.drain().len(), 1);
+    }
+
+    #[test]
+    fn released_event_shape() {
+        let e = JobEvent::Released { job: "r".into(), in_use_bytes: 64 };
+        assert_eq!(e.kind(), "released");
+        assert_eq!(e.job(), "r");
+        let j = StampedEvent { t: 1.0, event: e }.to_json();
+        assert_eq!(j.get("in_use_bytes").and_then(|v| v.as_usize()), Some(64));
     }
 }

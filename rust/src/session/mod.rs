@@ -35,7 +35,7 @@ pub mod events;
 pub mod scheduler;
 pub mod spec;
 
-pub use events::{CacheCounts, EventSink, JobEvent, StampedEvent};
+pub use events::{CacheCounts, CollectedEvents, EventSink, JobEvent, StampedEvent};
 pub use scheduler::{run_batch, Admission, BatchReport, JobResult, SchedulerOptions};
 pub use spec::{
     batch_from_config, batch_to_toml, ConvexOpt, ConvexSpec, JobSpec, ShardBenchSpec, VisionSpec,
@@ -316,6 +316,54 @@ impl JobOutcome {
         match self {
             JobOutcome::Vision(r) => Some(r),
             _ => None,
+        }
+    }
+
+    /// Workload-specific final metrics as a flat JSON object — what the
+    /// run registry records for a finished job (see [`crate::registry`]).
+    pub fn metrics_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        match self {
+            JobOutcome::Lm(r) => {
+                let s = &r.summary;
+                Json::obj(vec![
+                    ("optimizer", Json::str(s.optimizer.clone())),
+                    ("optimizer_scalars", Json::num(s.optimizer_scalars as f64)),
+                    ("model_params", Json::num(s.model_params as f64)),
+                    ("steps", Json::num(s.steps as f64)),
+                    ("final_train_loss", Json::num(s.final_train_loss)),
+                    ("final_eval_ppl", Json::num(s.final_eval_ppl)),
+                    ("tokens_per_sec", Json::num(s.tokens_per_sec)),
+                ])
+            }
+            JobOutcome::Convex(c) => Json::obj(vec![
+                ("optimizer", Json::str(c.optimizer.clone())),
+                ("state_scalars", Json::num(c.state_scalars as f64)),
+                ("state_bytes", Json::num(c.state_bytes as f64)),
+                ("final_loss", Json::num(c.final_loss)),
+                ("accuracy", Json::num(c.accuracy)),
+            ]),
+            JobOutcome::ShardBench(s) => Json::obj(vec![
+                ("optimizer", Json::str(s.optimizer.clone())),
+                ("shards", Json::num(s.shards as f64)),
+                ("steps_per_sec", Json::num(s.steps_per_sec)),
+                ("total_params", Json::num(s.total_params as f64)),
+                (
+                    "peak_state_bytes_per_shard",
+                    Json::num(s.peak_state_bytes_per_shard as f64),
+                ),
+                ("total_state_scalars", Json::num(s.total_state_scalars as f64)),
+                ("work_imbalance", Json::num(s.work_imbalance)),
+            ]),
+            JobOutcome::Vision(v) => Json::obj(vec![
+                ("optimizer", Json::str(v.optimizer.clone())),
+                ("optimizer_scalars", Json::num(v.optimizer_scalars as f64)),
+                ("model_params", Json::num(v.model_params as f64)),
+                ("steps", Json::num(v.steps as f64)),
+                ("final_test_error", Json::num(v.final_test_error)),
+                ("best_test_error", Json::num(v.best_test_error)),
+                ("final_train_loss", Json::num(v.final_train_loss)),
+            ]),
         }
     }
 }

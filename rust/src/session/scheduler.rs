@@ -20,6 +20,7 @@
 use super::events::{EventSink, JobEvent, StampedEvent};
 use super::spec::JobSpec;
 use super::{run_job, JobOutcome, Session};
+use crate::util::json::Json;
 use crate::util::logging::JsonlWriter;
 use crate::util::timer::Timer;
 use anyhow::{bail, Result};
@@ -37,11 +38,15 @@ pub struct SchedulerOptions {
     pub mem_budget: Option<u64>,
     /// Append the stamped event stream to this JSONL file.
     pub log_path: Option<PathBuf>,
+    /// Append one `registry/v1` record per executed job to the registry
+    /// under this directory (see [`crate::registry`]). `None` = no
+    /// registry write.
+    pub registry_dir: Option<PathBuf>,
 }
 
 impl Default for SchedulerOptions {
     fn default() -> Self {
-        SchedulerOptions { workers: 1, mem_budget: None, log_path: None }
+        SchedulerOptions { workers: 1, mem_budget: None, log_path: None, registry_dir: None }
     }
 }
 
@@ -96,6 +101,10 @@ pub struct JobResult {
     pub outcome: std::result::Result<JobOutcome, String>,
     /// Execution wall time (0 for jobs that failed before admission).
     pub wall_seconds: f64,
+    /// Time spent queued before admission — ≈0 for immediately admitted
+    /// jobs, the full defer→admit wait for budget-deferred ones (0 for
+    /// jobs that failed before admission).
+    pub queue_seconds: f64,
 }
 
 /// Everything a finished batch produced: per-job results in submission
@@ -148,6 +157,9 @@ struct QueueState {
     admission: Admission,
     results: Vec<Option<JobResult>>,
     deferred_emitted: Vec<bool>,
+    /// Batch-clock instant each job entered the queue, for
+    /// [`JobResult::queue_seconds`].
+    queued_t: Vec<f64>,
 }
 
 /// Execute `specs` to completion and return the batch report. Failed jobs
@@ -193,6 +205,7 @@ pub fn run_batch(
         admission: Admission::new(opts.mem_budget),
         results: (0..n).map(|_| None).collect(),
         deferred_emitted: vec![false; n],
+        queued_t: vec![0.0; n],
     });
     let cvar = Condvar::new();
 
@@ -207,12 +220,16 @@ pub fn run_batch(
             let mut q = state.lock().unwrap();
             for (i, s) in specs.iter().enumerate() {
                 let ev = match &prefailed[i] {
-                    None => JobEvent::Queued { job: s.name.clone(), cost_bytes: costs[i] },
+                    None => {
+                        q.queued_t[i] = clock.elapsed_secs();
+                        JobEvent::Queued { job: s.name.clone(), cost_bytes: costs[i] }
+                    }
                     Some(e) => {
                         q.results[i] = Some(JobResult {
                             name: s.name.clone(),
                             outcome: Err(e.clone()),
                             wall_seconds: 0.0,
+                            queue_seconds: 0.0,
                         });
                         JobEvent::Failed { job: s.name.clone(), error: e.clone() }
                     }
@@ -249,10 +266,20 @@ pub fn run_batch(
                 name: specs[i].name.clone(),
                 outcome: Err("job was never executed (worker pool exited early)".into()),
                 wall_seconds: 0.0,
+                queue_seconds: 0.0,
             })
         })
         .collect();
-    Ok(BatchReport { results, events, wall_seconds: clock.elapsed_secs() })
+    let report = BatchReport { results, events, wall_seconds: clock.elapsed_secs() };
+    // Registry writes are observability, never a batch failure.
+    if let Some(dir) = &opts.registry_dir {
+        if let Err(e) =
+            crate::registry::record_batch(dir, specs, &report, opts.log_path.as_deref())
+        {
+            crate::warnln!("registry write to {dir:?} failed: {e:#}");
+        }
+    }
+    Ok(report)
 }
 
 fn worker_loop(
@@ -276,7 +303,8 @@ fn worker_loop(
                 if let Some(pos) = q.pending.iter().position(|&i| q.admission.fits(costs[i])) {
                     let i = q.pending.remove(pos);
                     q.admission.acquire(costs[i]);
-                    break Some((i, q.admission.in_use()));
+                    let waited = (clock.elapsed_secs() - q.queued_t[i]).max(0.0);
+                    break Some((i, q.admission.in_use(), waited));
                 }
                 for pos in 0..q.pending.len() {
                     let i = q.pending[pos];
@@ -295,7 +323,7 @@ fn worker_loop(
                 q = cvar.wait(q).unwrap();
             }
         };
-        let Some((i, in_use)) = claimed else { return };
+        let Some((i, in_use, queue_seconds)) = claimed else { return };
 
         let sink = EventSink::new(specs[i].name.clone(), tx.clone(), clock.clone());
         sink.emit(JobEvent::Admitted {
@@ -327,8 +355,21 @@ fn worker_loop(
 
         let mut q = state.lock().unwrap();
         q.admission.release(costs[i]);
-        q.results[i] =
-            Some(JobResult { name: specs[i].name.clone(), outcome, wall_seconds: wall });
+        // Post-release occupancy, so the log alone reconstructs budget
+        // residency between Admitted/Released pairs.
+        let _ = tx.send(StampedEvent {
+            t: clock.elapsed_secs(),
+            event: JobEvent::Released {
+                job: specs[i].name.clone(),
+                in_use_bytes: q.admission.in_use(),
+            },
+        });
+        q.results[i] = Some(JobResult {
+            name: specs[i].name.clone(),
+            outcome,
+            wall_seconds: wall,
+            queue_seconds,
+        });
         cvar.notify_all();
     }
 }
@@ -336,7 +377,19 @@ fn worker_loop(
 fn collect_events(rx: Receiver<StampedEvent>, log_path: Option<PathBuf>) -> Vec<StampedEvent> {
     let mut log = match &log_path {
         Some(p) => match JsonlWriter::create(p) {
-            Ok(w) => Some(w),
+            Ok(mut w) => {
+                // Header record first: `StampedEvent.t` is batch-relative,
+                // so the absolute start (+ commit/host) lives here. Event
+                // records after it are byte-identical to the pre-header
+                // format.
+                let _ = w.write(&Json::obj(vec![
+                    ("schema", Json::str("job_events/v1")),
+                    ("commit", Json::str(crate::registry::commit_string())),
+                    ("started_unix", Json::num(crate::registry::unix_now() as f64)),
+                    ("host", Json::str(crate::registry::host())),
+                ]));
+                Some(w)
+            }
             Err(e) => {
                 crate::warnln!("cannot open schedule log {p:?}: {e:#}");
                 None
@@ -379,6 +432,9 @@ fn narrate(ev: &StampedEvent) {
         }
         JobEvent::Progress { job, step, of, loss } => {
             crate::debugln!("[sched +{t:.1}s] '{job}' step {step}/{of} loss {loss:.4}");
+        }
+        JobEvent::Released { job, in_use_bytes } => {
+            crate::debugln!("[sched +{t:.1}s] release '{job}' ({in_use_bytes} bytes in use)");
         }
         JobEvent::Queued { .. }
         | JobEvent::ArtifactCache { .. }

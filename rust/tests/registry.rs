@@ -1,0 +1,258 @@
+//! Run-registry contract tests (artifact-free, convex workloads only):
+//!
+//! * **Determinism** — a recorded `spec_toml` re-executed on a fresh
+//!   session reproduces the recorded metrics bitwise: the registry is a
+//!   replayable experiment log, not just bookkeeping.
+//! * **Completeness** — `run_batch` with `registry_dir` set writes exactly
+//!   one `registry/v1` record per job, prefailed jobs included, and the
+//!   records re-load through both encodings.
+//! * **Codec** — the CSV mirror round-trips cells carrying commas,
+//!   quotes, and newlines (spec TOML has all three), and f64 metrics
+//!   survive both encodings bit-for-bit.
+//! * **Event stream** — the schedule JSONL leads with a
+//!   `job_events/v1` header record; `Released` events balance `Admitted`
+//!   ones so the log alone reconstructs budget occupancy; deferred jobs
+//!   report their queue wait.
+
+use extensor::convex::ConvexConfig;
+use extensor::registry::gate::{check_optim_schema, check_pareto_schema};
+use extensor::registry::{dashboard, Registry, RunRecord};
+use extensor::session::{
+    batch_from_config, run_batch, run_job, ConvexOpt, ConvexSpec, EventSink, JobEvent, JobSpec,
+    SchedulerOptions, Session,
+};
+use extensor::tensoring::OptimizerKind;
+use extensor::util::config::Config;
+use extensor::util::json::Json;
+use extensor::util::logging::read_jsonl;
+use std::path::{Path, PathBuf};
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("et-registry-{tag}-{}", std::process::id()))
+}
+
+fn convex_job(name: &str, data: ConvexConfig, iters: usize, opt: ConvexOpt) -> JobSpec {
+    JobSpec::convex(
+        name,
+        ConvexSpec { data, iters, lr: 0.05, opt, measure_after: true, ..ConvexSpec::default() },
+    )
+}
+
+/// The tentpole acceptance check: re-execute a recorded spec TOML on a
+/// fresh session and compare the metrics to the record bit-for-bit.
+#[test]
+fn recorded_spec_reexecutes_bitwise() {
+    let dir = tmp("bitwise");
+    std::fs::remove_dir_all(&dir).ok();
+    let data = ConvexConfig { n: 400, d: 32, k: 4, cond: 1e3, householder: 2, seed: 11 };
+    let specs = vec![convex_job("replayed", data, 60, ConvexOpt::Planned { budget: 1024 })];
+    let report = run_batch(
+        &Session::new(),
+        &specs,
+        &SchedulerOptions { registry_dir: Some(dir.clone()), ..Default::default() },
+    )
+    .unwrap();
+    assert!(report.failed().is_empty());
+
+    let records = Registry::load(&dir).unwrap();
+    assert_eq!(records.len(), 1);
+    let rec = &records[0];
+    assert_eq!(rec.job, "replayed");
+    assert_eq!(rec.kind, "convex");
+    assert_eq!(rec.status, "ok");
+    assert!(rec.utc.ends_with('Z'), "utc {:?} not ISO-8601", rec.utc);
+    assert!(rec.run_id.ends_with("-replayed"));
+    let plan = rec.plan.as_ref().expect("planned job records its solved StatePlan");
+    assert_eq!(plan.get("schema").and_then(|v| v.as_str()), Some("state_plan/v1"));
+
+    // Replay: parse the canonical TOML back into a spec and run it.
+    let cfg = Config::parse(&rec.spec_toml).unwrap();
+    let replay = batch_from_config(&cfg).unwrap();
+    assert_eq!(replay.len(), 1);
+    assert_eq!(replay[0].name, "replayed");
+    let sink = EventSink::discard("replayed");
+    let out = run_job(&replay[0], &Session::new(), &sink).unwrap();
+    let out = out.as_convex().unwrap();
+    let bits = |k: &str| {
+        rec.metrics.get(k).and_then(|v| v.as_f64()).unwrap_or_else(|| panic!("metric {k}"))
+    };
+    assert_eq!(bits("final_loss").to_bits(), out.final_loss.to_bits());
+    assert_eq!(bits("accuracy").to_bits(), out.accuracy.to_bits());
+    assert_eq!(bits("state_bytes") as u64, out.state_bytes as u64);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One record per job — prefailed included — plus the event-stream
+/// satellites: `job_events/v1` header, Released/Admitted balance, and the
+/// deferred job's queue wait. The records re-load through the dashboard.
+#[test]
+fn batch_records_every_job_and_event_log_reconstructs_occupancy() {
+    let dir = tmp("batch");
+    std::fs::remove_dir_all(&dir).ok();
+    let log = dir.join("schedule.jsonl");
+    let data = ConvexConfig { n: 2000, d: 64, k: 8, cond: 1e3, householder: 2, seed: 3 };
+    let a = convex_job("a", data.clone(), 300, ConvexOpt::Kind(OptimizerKind::AdaGrad));
+    let b = convex_job(
+        "b",
+        ConvexConfig { seed: 4, ..data.clone() },
+        300,
+        ConvexOpt::Kind(OptimizerKind::AdaGrad),
+    );
+    // Same shape, so equal costs: a 1.5x budget admits one at a time.
+    let cost = a.cost_bytes().unwrap();
+    let huge = convex_job(
+        "huge",
+        ConvexConfig { n: 8000, d: 256, k: 32, ..data },
+        10,
+        ConvexOpt::Kind(OptimizerKind::Sgd),
+    );
+    assert!(huge.cost_bytes().unwrap() > cost + cost / 2, "huge must exceed the budget");
+
+    let specs = vec![a, b, huge];
+    let report = run_batch(
+        &Session::new(),
+        &specs,
+        &SchedulerOptions {
+            workers: 2,
+            mem_budget: Some(cost + cost / 2),
+            log_path: Some(log.clone()),
+            registry_dir: Some(dir.clone()),
+        },
+    )
+    .unwrap();
+    assert_eq!(report.failed().len(), 1, "only 'huge' fails");
+
+    // Exactly one record per job, status telling them apart.
+    let records = Registry::load(&dir).unwrap();
+    assert_eq!(records.len(), 3);
+    for name in ["a", "b", "huge"] {
+        assert_eq!(records.iter().filter(|r| r.job == name).count(), 1, "one record for {name}");
+    }
+    let failed = records.iter().find(|r| r.job == "huge").unwrap();
+    assert_eq!(failed.status, "failed");
+    assert!(failed.error.contains("exceeding"), "error {:?}", failed.error);
+    assert_eq!(failed.metrics, Json::obj(vec![]));
+    for r in records.iter().filter(|r| r.status == "ok") {
+        assert!(r.spec_toml.starts_with("[job."), "canonical spec TOML recorded");
+        assert!(r.metrics.get("final_loss").is_some());
+        assert_eq!(r.event_log, log.display().to_string());
+    }
+
+    // Budget contention: one of a/b deferred, and its record carries the
+    // defer->admit wait (bitwise equal to the in-memory report's figure).
+    let deferred: Vec<&str> = report
+        .events
+        .iter()
+        .filter_map(|e| match &e.event {
+            JobEvent::Deferred { job, .. } => Some(job.as_str()),
+            _ => None,
+        })
+        .collect();
+    assert!(!deferred.is_empty(), "1.5x budget must defer the second job");
+    let waited = records.iter().find(|r| r.job == deferred[0]).unwrap();
+    assert!(waited.queue_seconds > 0.0, "deferred job waited {}", waited.queue_seconds);
+    let in_memory = report.results.iter().find(|r| r.name == deferred[0]).unwrap();
+    assert_eq!(waited.queue_seconds.to_bits(), in_memory.queue_seconds.to_bits());
+
+    // Released balances Admitted (huge was never admitted), and the final
+    // release returns the budget to zero.
+    let admitted = report
+        .events
+        .iter()
+        .filter(|e| matches!(e.event, JobEvent::Admitted { .. }))
+        .count();
+    let released: Vec<u64> = report
+        .events
+        .iter()
+        .filter_map(|e| match &e.event {
+            JobEvent::Released { in_use_bytes, .. } => Some(*in_use_bytes),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(admitted, 2);
+    assert_eq!(released.len(), 2);
+    assert_eq!(*released.last().unwrap(), 0, "all reservations returned");
+
+    // Schedule log: header record first, events byte-identical after it.
+    let raw = read_jsonl(&log).unwrap();
+    let head = &raw[0];
+    assert_eq!(head.get("schema").and_then(|v| v.as_str()), Some("job_events/v1"));
+    for k in ["commit", "started_unix", "host"] {
+        assert!(head.get(k).is_some(), "header missing {k}");
+    }
+    for ev in &raw[1..] {
+        assert!(ev.get("schema").is_none(), "only the first record is a header");
+        assert!(ev.get("event").is_some() && ev.get("t").is_some());
+    }
+
+    // The registry is re-loadable by `ettrain registry report`.
+    let out = dir.join("dash");
+    dashboard::report(&dir, Some(out.as_path())).unwrap();
+    let md = std::fs::read_to_string(out.join("dashboard.md")).unwrap();
+    assert!(md.contains("Run trajectory by commit"));
+    assert!(out.join("trajectory.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Both encodings round-trip records whose cells carry commas, quotes,
+/// and newlines, including float bits; headers are written exactly once
+/// across appends.
+#[test]
+fn jsonl_and_csv_roundtrip_tricky_cells() {
+    let dir = tmp("roundtrip");
+    std::fs::remove_dir_all(&dir).ok();
+    let rec = |id: &str| RunRecord {
+        run_id: format!("1-{id}-weird"),
+        job: "weird".to_string(),
+        kind: "convex".to_string(),
+        commit: "deadbeef".to_string(),
+        started_unix: 1,
+        utc: "1970-01-01T00:00:01Z".to_string(),
+        spec_toml: "[job.weird]\ntype = \"convex\"\nnote = \"a,b\"\n".to_string(),
+        plan: Some(Json::obj(vec![("schema", Json::str("state_plan/v1"))])),
+        status: "failed".to_string(),
+        error: "line one\nline \"two\", with commas".to_string(),
+        metrics: Json::obj(vec![
+            ("final_loss", Json::num(0.1 + 0.2)),
+            ("accuracy", Json::num(std::f64::consts::PI)),
+        ]),
+        artifact_hits: 3,
+        artifact_misses: 1,
+        corpus_hits: 0,
+        corpus_misses: 2,
+        wall_seconds: 1.0 / 3.0,
+        queue_seconds: 0.062_5,
+        event_log: String::new(),
+    };
+    let (r0, r1) = (rec("0"), rec("1"));
+    let registry = Registry::open(&dir).unwrap();
+    registry.append(std::slice::from_ref(&r0)).unwrap();
+    registry.append(std::slice::from_ref(&r1)).unwrap();
+
+    let jsonl = Registry::load(&dir).unwrap();
+    assert_eq!(jsonl, vec![r0.clone(), r1.clone()], "JSONL round trip (incl. float bits)");
+    let csv = Registry::load_csv(&dir).unwrap();
+    assert_eq!(csv, vec![r0, r1], "CSV round trip (incl. float bits)");
+
+    // Headers appear exactly once even across two appends.
+    let text = std::fs::read_to_string(dir.join("registry.csv")).unwrap();
+    assert_eq!(text.matches("#schema=registry/v1").count(), 1);
+    let raw = read_jsonl(dir.join("registry.jsonl")).unwrap();
+    assert_eq!(raw.iter().filter(|j| j.get("schema").is_some()).count(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The checked-in bootstrap goldens must satisfy the same schema
+/// invariants `ettrain gate --schema-only` enforces on fresh bench runs.
+#[test]
+fn checked_in_goldens_pass_schema_checks() {
+    let goldens = Path::new(env!("CARGO_MANIFEST_DIR")).join("../goldens");
+    let optim = Json::parse(&std::fs::read_to_string(goldens.join("BENCH_optim.json")).unwrap())
+        .unwrap();
+    let errs = check_optim_schema(&optim, "goldens/BENCH_optim.json");
+    assert!(errs.is_empty(), "{errs:?}");
+    let pareto = Json::parse(&std::fs::read_to_string(goldens.join("BENCH_pareto.json")).unwrap())
+        .unwrap();
+    let errs = check_pareto_schema(&pareto, "goldens/BENCH_pareto.json");
+    assert!(errs.is_empty(), "{errs:?}");
+}

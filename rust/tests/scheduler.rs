@@ -72,7 +72,7 @@ fn outcomes(specs: &[JobSpec], workers: usize) -> Vec<(String, u64, u64, Vec<u32
     let report = run_batch(
         &session,
         specs,
-        &SchedulerOptions { workers, mem_budget: None, log_path: None },
+        &SchedulerOptions { workers, mem_budget: None, log_path: None, registry_dir: None },
     )
     .unwrap();
     report
@@ -135,7 +135,7 @@ fn shard_bench_memory_columns_deterministic() {
         run_batch(
             &session,
             &specs,
-            &SchedulerOptions { workers, mem_budget: None, log_path: None },
+            &SchedulerOptions { workers, mem_budget: None, log_path: None, registry_dir: None },
         )
         .unwrap()
         .into_outcomes()
@@ -161,7 +161,7 @@ fn datasets_synthesized_at_most_once_per_batch() {
     let report = run_batch(
         &session,
         &specs,
-        &SchedulerOptions { workers: 4, mem_budget: None, log_path: None },
+        &SchedulerOptions { workers: 4, mem_budget: None, log_path: None, registry_dir: None },
     )
     .unwrap();
     let counts = report.cache_counts();
@@ -199,7 +199,7 @@ fn over_budget_job_queues_instead_of_running() {
     let report = run_batch(
         &session,
         &specs,
-        &SchedulerOptions { workers: 4, mem_budget: Some(budget), log_path: None },
+        &SchedulerOptions { workers: 4, mem_budget: Some(budget), ..Default::default() },
     )
     .unwrap();
     assert!(report.failed().is_empty(), "both jobs must eventually run");
@@ -255,7 +255,7 @@ fn impossible_job_fails_cleanly() {
     let report = run_batch(
         &session,
         &specs,
-        &SchedulerOptions { workers: 2, mem_budget: Some(budget), log_path: None },
+        &SchedulerOptions { workers: 2, mem_budget: Some(budget), ..Default::default() },
     )
     .unwrap();
     assert!(report.outcome("small").is_ok());
@@ -295,7 +295,7 @@ fn schedule_log_is_valid_jsonl() {
     run_batch(
         &session,
         &specs,
-        &SchedulerOptions { workers: 1, mem_budget: None, log_path: Some(log.clone()) },
+        &SchedulerOptions { workers: 1, log_path: Some(log.clone()), ..Default::default() },
     )
     .unwrap();
     let records = extensor::util::logging::read_jsonl(&log).unwrap();
