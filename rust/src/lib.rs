@@ -39,19 +39,36 @@
 //! contract (see the kernel module docs and EXPERIMENTS.md §Perf).
 //!
 //! The suite also runs *sharded*: `shard` bin-packs parameter groups
-//! across persistent worker threads using the footprint accounting, each
-//! worker owning its groups' complete optimizer state
-//! (`shard::ShardedOptimizer`). Determinism contract: sharded execution is
-//! bitwise-identical to the single-threaded engine at any shard count — a
-//! group's update is computed by exactly one worker with the
+//! across persistent workers using the footprint accounting, each worker
+//! owning its groups' complete optimizer state
+//! (`shard::ShardedOptimizer`). How the executor reaches its workers is a
+//! pluggable **transport layer** (`transport`):
+//!
+//! ```text
+//! ShardedOptimizer ──▶ ShardTransport ──▶ ShardConnection (per shard)
+//! (partition,          ├─ InProcess: worker threads + bounded channels
+//!  buckets,            │  (zero-copy GroupTask pointer handoff)
+//!  ack barrier)        └─ SocketTransport: `ettrain shard-worker` child
+//!                         processes over UNIX sockets (length-prefixed
+//!                         frames, ETSS snapshot streams, timeouts +
+//!                         typed errors + crash recovery)
+//! ```
+//!
+//! Determinism contract: sharded execution is bitwise-identical to the
+//! single-threaded engine at any shard count *and over either transport*
+//! — a group's update is computed by exactly one worker with the
 //! single-threaded arithmetic, and the fan-in is a pure ack barrier with
 //! no cross-shard math to reorder (enforced in
 //! `rust/tests/sharded_parity.rs`). Externalized state makes the shard
-//! engine checkpointable: `export_state`/`import_state` fan worker-local
-//! snapshots in/out as one shard-count-independent `StateExport`, which
-//! `train::checkpoint::{save_host, load_host}` round-trips to disk
-//! (`rust/tests/host_checkpoint.rs` proves bitwise resume at 1/2/4
-//! shards, including shard-count migration).
+//! engine checkpointable and *elastic*: `export_state`/`import_state` fan
+//! worker-local snapshots in/out as one shard-count-independent
+//! `StateExport`, which `train::checkpoint::{save_host, load_host}`
+//! round-trips to disk (`rust/tests/host_checkpoint.rs` proves bitwise
+//! resume at 1/2/4 shards, including shard-count migration), snapshots
+//! stream with bounded buffering as chunk-framed ETSS (`optim::stream`),
+//! and `reshard`/`take_snapshot`/`recover` grow, shrink, or rebuild the
+//! worker set mid-run without a restart
+//! (`rust/tests/transport_recovery.rs`).
 //!
 //! All execution flows through the **session layer** (`session`):
 //!
@@ -124,5 +141,6 @@ pub mod shard;
 pub mod tensoring;
 pub mod testing;
 pub mod train;
+pub mod transport;
 pub mod util;
 pub mod vision;

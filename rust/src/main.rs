@@ -41,6 +41,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "batch" => cmd_batch(rest),
         "gate" => cmd_gate(rest),
         "registry" => cmd_registry(rest),
+        "shard-worker" => cmd_shard_worker(rest),
         "plan" => cmd_plan(rest),
         "plan-index" => cmd_plan_index(rest),
         "memory-report" => cmd_memory_report(rest),
@@ -75,14 +76,23 @@ USAGE: ettrain <subcommand> [options]
   batch <jobs.toml> [--jobs N] [--mem-budget BYTES]  run a custom job batch
         (each [job.<name>] section is one lm|convex|shard-bench|vision job)
   gate [--tolerance 10%] [--goldens goldens] [--bless | --schema-only]
+       [--require-pinned]
         diff fresh BENCH_optim.json / BENCH_pareto.json against the
         checked-in goldens and fail on regressions beyond the band
         (--bless re-pins the goldens from the fresh outputs;
-         --schema-only validates the bench JSON invariants, no goldens)
+         --schema-only validates the bench JSON invariants, no goldens;
+         --require-pinned makes unpinned goldens a hard failure)
   registry report [--dir results/registry] [--out dashboards]
         fold registry records + schedule logs into per-commit trajectory
         tables (every train/batch/experiment run is recorded automatically
         under results/registry/)
+  registry compact [--dir results/registry] [--keep N]
+        rewrite the registry keeping only the last N runs per distinct
+        job spec (JSONL + CSV, atomically)
+  shard-worker --connect <path> [--shard N]
+        run one out-of-process shard worker serving the transport wire
+        protocol on a UNIX socket (spawned by the socket transport; not
+        normally run by hand)
   plan [--budget 64m | --set run.opt_memory_budget=64m] [--layers N ...]
         solve and print the per-group (ET level x backend) state plan for a
         transformer under an optimizer-memory budget, without running
@@ -298,6 +308,7 @@ fn cmd_gate(argv: &[String]) -> Result<()> {
         flags: vec![
             ("bless", "re-pin the goldens from the fresh bench outputs"),
             ("schema-only", "validate the bench JSON invariants only (no goldens)"),
+            ("require-pinned", "fail (instead of warn) when goldens are not pinned"),
         ],
         positional: vec![],
     };
@@ -309,6 +320,7 @@ fn cmd_gate(argv: &[String]) -> Result<()> {
         pareto_path: PathBuf::from(args.get("pareto").unwrap_or("BENCH_pareto.json")),
         bless: args.flag("bless"),
         schema_only: args.flag("schema-only"),
+        require_pinned: args.flag("require-pinned"),
     };
     run_gate(&opts)
 }
@@ -322,18 +334,49 @@ fn cmd_registry(argv: &[String]) -> Result<()> {
         options: vec![
             ("dir", Some("results/registry"), "registry directory"),
             ("out", None, "also write dashboard.md + trajectory.csv here"),
+            ("keep", Some("20"), "compact: runs to keep per distinct spec"),
         ],
         flags: vec![],
-        positional: vec![("action", "report")],
+        positional: vec![("action", "report | compact")],
     };
     let args = Args::parse(&spec, argv)?;
+    let dir = PathBuf::from(args.get("dir").unwrap_or("results/registry"));
     match args.positional.first().map(String::as_str).unwrap_or("report") {
         "report" => extensor::registry::dashboard::report(
-            &PathBuf::from(args.get("dir").unwrap_or("results/registry")),
+            &dir,
             args.get("out").map(std::path::Path::new),
         ),
-        other => bail!("unknown registry action '{other}' (try 'report')"),
+        "compact" => {
+            let keep = args.get_usize("keep")?.max(1);
+            let registry = extensor::registry::Registry::open(&dir)?;
+            let stats = registry.compact(keep)?;
+            println!(
+                "registry compact: kept {} of {} runs across {} distinct specs (keep {keep})",
+                stats.kept, stats.total, stats.specs
+            );
+            Ok(())
+        }
+        other => bail!("unknown registry action '{other}' (try 'report' or 'compact')"),
     }
+}
+
+/// `ettrain shard-worker` — one out-of-process shard worker (spawned by
+/// `extensor::transport::SocketTransport`; see `extensor::transport::socket`).
+fn cmd_shard_worker(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "shard-worker",
+        about: "serve the shard transport wire protocol on a UNIX socket",
+        options: vec![
+            ("connect", None, "socket path to connect back to (required)"),
+            ("shard", Some("0"), "shard index, for log/error labels"),
+        ],
+        flags: vec![],
+        positional: vec![],
+    };
+    let args = Args::parse(&spec, argv)?;
+    let path = args.get("connect").context("shard-worker: missing --connect <path>")?;
+    let shard = args.get_usize("shard")?;
+    extensor::transport::run_socket_worker(std::path::Path::new(path), shard)
 }
 
 /// `ettrain plan` — solve and print the per-group state plan for a

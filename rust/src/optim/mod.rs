@@ -48,6 +48,7 @@ pub mod rmsprop;
 pub mod schedule;
 pub mod sgd;
 pub mod state;
+pub mod stream;
 
 pub use schedule::Schedule;
 pub use state::{

@@ -100,6 +100,39 @@ impl StateBuf {
         }
     }
 
+    /// Decode the `n` logical scalars starting at `start` into `out`
+    /// (cleared first), bitwise-identical to the corresponding slice of
+    /// [`Self::decode_into`]'s output. For quantized backends `start` must
+    /// be a multiple of [`Self::block_align`] — the per-block scale
+    /// metadata makes blocks self-contained, so a block-aligned range
+    /// decodes without touching its neighbors. This is what lets the
+    /// streaming exporter ([`crate::optim::stream`]) move a buffer in
+    /// bounded-memory chunks instead of materializing it whole.
+    pub fn decode_range_into(&self, start: usize, n: usize, out: &mut Vec<f32>) {
+        assert!(start + n <= self.len(), "state buffer range out of bounds");
+        assert!(
+            start % self.block_align() == 0,
+            "chunk start {start} not aligned to quantization block {}",
+            self.block_align()
+        );
+        out.clear();
+        match self {
+            StateBuf::Dense(v) => out.extend_from_slice(&v[start..start + n]),
+            StateBuf::Q8(q) => q.decode_range_into(start, n, out),
+            StateBuf::Nf4(q) => q.decode_range_into(start, n, out),
+        }
+    }
+
+    /// The alignment chunk starts must respect for
+    /// [`Self::decode_range_into`]: the quantization block (1 for dense).
+    pub fn block_align(&self) -> usize {
+        match self {
+            StateBuf::Dense(_) => 1,
+            StateBuf::Q8(q) => q.block,
+            StateBuf::Nf4(q) => q.block,
+        }
+    }
+
     /// Overwrite from a dense `f32` slice (encoding under the backend).
     pub fn write(&mut self, src: &[f32]) {
         match self {
@@ -211,6 +244,24 @@ impl Q8Buf {
             for &q in chunk {
                 out.push(o + s * q as f32);
             }
+        }
+    }
+
+    /// Block-aligned range decode (see [`StateBuf::decode_range_into`]);
+    /// same per-block arithmetic as [`Self::decode_into`], so the chunks
+    /// concatenate bitwise-identically to a full decode.
+    fn decode_range_into(&self, start: usize, n: usize, out: &mut Vec<f32>) {
+        out.reserve(n);
+        let end = start + n;
+        let mut i = start;
+        while i < end {
+            let bi = i / self.block;
+            let (s, o) = (self.scale[bi], self.offset[bi]);
+            let bend = ((bi + 1) * self.block).min(end);
+            for &q in &self.q[i..bend] {
+                out.push(o + s * q as f32);
+            }
+            i = bend;
         }
     }
 
@@ -337,6 +388,22 @@ impl Nf4Buf {
             for i in start..end {
                 out.push(m * NF4_LEVELS[self.code_at(i)]);
             }
+        }
+    }
+
+    /// Block-aligned range decode (see [`StateBuf::decode_range_into`]).
+    fn decode_range_into(&self, start: usize, n: usize, out: &mut Vec<f32>) {
+        out.reserve(n);
+        let end = start + n;
+        let mut i = start;
+        while i < end {
+            let bi = i / self.block;
+            let m = self.absmax[bi];
+            let bend = ((bi + 1) * self.block).min(end);
+            for j in i..bend {
+                out.push(m * NF4_LEVELS[self.code_at(j)]);
+            }
+            i = bend;
         }
     }
 
@@ -681,20 +748,24 @@ impl OptState {
         StateExport {
             kind: self.kind,
             step: self.step,
-            groups: self
-                .groups
+            groups: (0..self.groups.len()).map(|gi| self.export_group(gi)).collect(),
+        }
+    }
+
+    /// Dense snapshot of a single group — the unit the streaming exporter
+    /// and the per-group transport requests move, so a multi-group state
+    /// never has to materialize whole on either end.
+    pub fn export_group(&self, gi: usize) -> GroupExport {
+        let g = &self.groups[gi];
+        GroupExport {
+            name: g.name.clone(),
+            steps: g.steps,
+            wide: g.wide.clone(),
+            bufs: g
+                .buf_names
                 .iter()
-                .map(|g| GroupExport {
-                    name: g.name.clone(),
-                    steps: g.steps,
-                    wide: g.wide.clone(),
-                    bufs: g
-                        .buf_names
-                        .iter()
-                        .zip(&g.bufs)
-                        .map(|(name, b)| (name.clone(), b.to_vec()))
-                        .collect(),
-                })
+                .zip(&g.bufs)
+                .map(|(name, b)| (name.clone(), b.to_vec()))
                 .collect(),
         }
     }
@@ -716,38 +787,59 @@ impl OptState {
             self.groups.len()
         );
         for (g, ge) in self.groups.iter().zip(&e.groups) {
-            anyhow::ensure!(
-                g.name == ge.name,
-                "state import: group '{}' does not match '{}'",
-                ge.name,
-                g.name
-            );
-            anyhow::ensure!(
-                g.wide.len() == ge.wide.len() && g.bufs.len() == ge.bufs.len(),
-                "state import: group '{}' layout mismatch",
-                g.name
-            );
-            for ((name, b), (ename, data)) in g.buf_names.iter().zip(&g.bufs).zip(&ge.bufs) {
-                anyhow::ensure!(
-                    name == ename && b.len() == data.len(),
-                    "state import: group '{}' buffer '{}' ({} scalars) vs '{}' ({})",
-                    g.name,
-                    ename,
-                    data.len(),
-                    name,
-                    b.len()
-                );
-            }
+            validate_group_import(g, ge)?;
         }
         self.step = e.step;
         for (g, ge) in self.groups.iter_mut().zip(&e.groups) {
-            g.steps = ge.steps;
-            g.wide.copy_from_slice(&ge.wide);
-            for (b, (_, data)) in g.bufs.iter_mut().zip(&ge.bufs) {
-                b.write(data);
-            }
+            write_group_import(g, ge);
         }
         Ok(())
+    }
+
+    /// Restore a single group from its export (validating name, layout and
+    /// buffer lengths). Unlike [`Self::import`] this does not touch the
+    /// shared step counter — stream importers set [`OptState::step`] from
+    /// the stream header themselves. The bounded-memory twin of
+    /// [`Self::export_group`].
+    pub fn import_group(&mut self, gi: usize, ge: &GroupExport) -> Result<()> {
+        anyhow::ensure!(gi < self.groups.len(), "state import: group index {gi} out of range");
+        validate_group_import(&self.groups[gi], ge)?;
+        write_group_import(&mut self.groups[gi], ge);
+        Ok(())
+    }
+}
+
+fn validate_group_import(g: &GroupState, ge: &GroupExport) -> Result<()> {
+    anyhow::ensure!(
+        g.name == ge.name,
+        "state import: group '{}' does not match '{}'",
+        ge.name,
+        g.name
+    );
+    anyhow::ensure!(
+        g.wide.len() == ge.wide.len() && g.bufs.len() == ge.bufs.len(),
+        "state import: group '{}' layout mismatch",
+        g.name
+    );
+    for ((name, b), (ename, data)) in g.buf_names.iter().zip(&g.bufs).zip(&ge.bufs) {
+        anyhow::ensure!(
+            name == ename && b.len() == data.len(),
+            "state import: group '{}' buffer '{}' ({} scalars) vs '{}' ({})",
+            g.name,
+            ename,
+            data.len(),
+            name,
+            b.len()
+        );
+    }
+    Ok(())
+}
+
+fn write_group_import(g: &mut GroupState, ge: &GroupExport) {
+    g.steps = ge.steps;
+    g.wide.copy_from_slice(&ge.wide);
+    for (b, (_, data)) in g.bufs.iter_mut().zip(&ge.bufs) {
+        b.write(data);
     }
 }
 

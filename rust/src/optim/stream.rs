@@ -1,0 +1,498 @@
+//! Streaming state export — the ETSS chunk framing.
+//!
+//! [`super::state::OptState::export`] materializes the whole optimizer
+//! state as dense `f32` vectors, which is fine for tests but exactly wrong
+//! for the things a snapshot is *for*: writing a multi-GB checkpoint and
+//! moving state between shard workers over a wire. This module frames the
+//! same logical snapshot as a stream of bounded-size chunks, so peak
+//! buffering on the producing side is one chunk — [`STREAM_CHUNK_NUMEL`]
+//! scalars — regardless of model size:
+//!
+//! ```text
+//! magic "ETSS" | version u32 | kind str | step u64 | n_groups u32
+//! per group:
+//!   op u32 = GROUP | name str | steps u64 | n_wide u32 | f64 data | n_bufs u32
+//!   per buf: name str | total u64
+//!     then: op u32 = CHUNK | n u64 | raw f32 data     (chunks cover total, in order)
+//! op u32 = END | checksum u64
+//! ```
+//!
+//! The per-chunk count `n` never exceeds the chunk cap (rounded to the
+//! buffer's quantization block, so a block-aligned range decode needs no
+//! neighbor context — see [`StateBuf::decode_range_into`]). The trailing
+//! checksum is an order-sensitive FNV-1a fold over every logical value
+//! (names, counters, wide `f64` bits, buffer `f32` bits), so a truncated or
+//! corrupted stream fails loudly instead of importing garbage. Chunk
+//! *boundaries* are a transport detail and are deliberately excluded: a
+//! stream written from a materialized [`StateExport`] and one decoded
+//! range-by-range out of a live [`OptState`] carry the same checksum.
+//!
+//! Consumers: `train::checkpoint` (ETHC v2 state section) and the socket
+//! shard transport (`transport::wire`) both speak exactly this framing, so
+//! a checkpoint on disk and a snapshot on the wire are byte-identical for
+//! the same state.
+
+use super::state::{GroupExport, OptState, StateBuf, StateExport};
+use crate::tensoring::OptimizerKind;
+use crate::util::codec::{
+    read_f32_data, read_f64, read_str, read_u32, read_u64, write_f32_data, write_f64, write_str,
+    write_u32, write_u64,
+};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+pub const STREAM_MAGIC: &[u8; 4] = b"ETSS";
+pub const STREAM_VERSION: u32 = 1;
+
+/// Default chunk cap: 16 Ki scalars = 64 KiB of payload per frame. A
+/// multiple of every default quantization block (64), so block alignment
+/// never forces an oversized chunk in practice.
+pub const STREAM_CHUNK_NUMEL: usize = 1 << 14;
+
+const OP_GROUP: u32 = 1;
+const OP_CHUNK: u32 = 2;
+const OP_END: u32 = 3;
+
+/// No state layout in the suite has more than a handful of buffers per
+/// group (ET levels are single digits); more means corruption.
+const MAX_GROUP_BUFS: usize = 4096;
+/// Matches the ETHC plausibility bound for the never-quantized f64 tail.
+const MAX_WIDE: usize = 16;
+
+/// Order-sensitive FNV-1a fold over the stream's logical values.
+#[derive(Clone, Debug)]
+pub struct StreamChecksum(u64);
+
+impl Default for StreamChecksum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamChecksum {
+    pub fn new() -> StreamChecksum {
+        StreamChecksum(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0 = (self.0 ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        for &b in s.as_bytes() {
+            self.u64(b as u64);
+        }
+    }
+
+    fn f32s(&mut self, xs: &[f32]) {
+        for x in xs {
+            self.u64(x.to_bits() as u64);
+        }
+    }
+
+    fn f64s(&mut self, xs: &[f64]) {
+        for x in xs {
+            self.u64(x.to_bits());
+        }
+    }
+}
+
+/// The chunk step for a buffer: the cap rounded down to the buffer's block
+/// alignment (and at least one block, so a pathological `block > cap`
+/// configuration still makes progress — its chunks are then one block).
+fn chunk_step(align: usize, chunk_numel: usize) -> usize {
+    let chunk = chunk_numel.max(1);
+    if align <= 1 {
+        chunk
+    } else {
+        (chunk - chunk % align).max(align)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writers
+// ---------------------------------------------------------------------------
+
+pub fn write_header(
+    w: &mut impl Write,
+    kind: OptimizerKind,
+    step: u64,
+    n_groups: usize,
+    ck: &mut StreamChecksum,
+) -> Result<()> {
+    w.write_all(STREAM_MAGIC)?;
+    write_u32(w, STREAM_VERSION)?;
+    let name = kind.name();
+    write_str(w, &name)?;
+    write_u64(w, step)?;
+    write_u32(w, n_groups as u32)?;
+    ck.str(&name);
+    ck.u64(step);
+    ck.u64(n_groups as u64);
+    Ok(())
+}
+
+fn write_group_frame(
+    w: &mut impl Write,
+    name: &str,
+    steps: u64,
+    wide: &[f64],
+    n_bufs: usize,
+    ck: &mut StreamChecksum,
+) -> Result<()> {
+    write_u32(w, OP_GROUP)?;
+    write_str(w, name)?;
+    write_u64(w, steps)?;
+    write_u32(w, wide.len() as u32)?;
+    for &x in wide {
+        write_f64(w, x)?;
+    }
+    write_u32(w, n_bufs as u32)?;
+    ck.str(name);
+    ck.u64(steps);
+    ck.f64s(wide);
+    Ok(())
+}
+
+fn write_buf_header(
+    w: &mut impl Write,
+    name: &str,
+    total: usize,
+    ck: &mut StreamChecksum,
+) -> Result<()> {
+    write_str(w, name)?;
+    write_u64(w, total as u64)?;
+    ck.str(name);
+    ck.u64(total as u64);
+    Ok(())
+}
+
+fn write_chunk(w: &mut impl Write, data: &[f32], ck: &mut StreamChecksum) -> Result<()> {
+    write_u32(w, OP_CHUNK)?;
+    write_u64(w, data.len() as u64)?;
+    write_f32_data(w, data)?;
+    ck.f32s(data);
+    Ok(())
+}
+
+/// Write one group straight out of a live [`OptState`], decoding each
+/// buffer range-by-range into `scratch` — peak buffering is one chunk.
+pub fn write_group_from_state(
+    w: &mut impl Write,
+    st: &OptState,
+    gi: usize,
+    chunk_numel: usize,
+    scratch: &mut Vec<f32>,
+    ck: &mut StreamChecksum,
+) -> Result<()> {
+    let g = st.group(gi);
+    write_group_frame(w, &g.name, g.steps, &g.wide, g.n_bufs(), ck)?;
+    for bi in 0..g.n_bufs() {
+        let b: &StateBuf = g.buf(bi);
+        let total = b.len();
+        write_buf_header(w, g.buf_name(bi), total, ck)?;
+        let step = chunk_step(b.block_align(), chunk_numel);
+        let mut start = 0;
+        while start < total {
+            let n = step.min(total - start);
+            b.decode_range_into(start, n, scratch);
+            write_chunk(w, scratch, ck)?;
+            start += n;
+        }
+    }
+    Ok(())
+}
+
+/// Write one group from a materialized [`GroupExport`] (the executor's
+/// fan-in path), chunked at exactly `chunk_numel`.
+pub fn write_group_export(
+    w: &mut impl Write,
+    ge: &GroupExport,
+    chunk_numel: usize,
+    ck: &mut StreamChecksum,
+) -> Result<()> {
+    write_group_frame(w, &ge.name, ge.steps, &ge.wide, ge.bufs.len(), ck)?;
+    let step = chunk_numel.max(1);
+    for (name, data) in &ge.bufs {
+        write_buf_header(w, name, data.len(), ck)?;
+        for chunk in data.chunks(step) {
+            write_chunk(w, chunk, ck)?;
+        }
+    }
+    Ok(())
+}
+
+pub fn write_end(w: &mut impl Write, ck: &StreamChecksum) -> Result<()> {
+    write_u32(w, OP_END)?;
+    write_u64(w, ck.value())?;
+    Ok(())
+}
+
+/// Stream a live state end to end, never materializing more than one chunk.
+pub fn write_state_stream(w: &mut impl Write, st: &OptState, chunk_numel: usize) -> Result<()> {
+    let mut ck = StreamChecksum::new();
+    let mut scratch = Vec::with_capacity(chunk_numel.max(1));
+    write_header(w, st.kind(), st.step, st.n_groups(), &mut ck)?;
+    for gi in 0..st.n_groups() {
+        write_group_from_state(w, st, gi, chunk_numel, &mut scratch, &mut ck)?;
+    }
+    write_end(w, &ck)
+}
+
+/// Stream a materialized export end to end (same frames, same checksum).
+pub fn write_export_stream(
+    w: &mut impl Write,
+    e: &StateExport,
+    chunk_numel: usize,
+) -> Result<()> {
+    let mut ck = StreamChecksum::new();
+    write_header(w, e.kind, e.step, e.groups.len(), &mut ck)?;
+    for ge in &e.groups {
+        write_group_export(w, ge, chunk_numel, &mut ck)?;
+    }
+    write_end(w, &ck)
+}
+
+// ---------------------------------------------------------------------------
+// Readers
+// ---------------------------------------------------------------------------
+
+/// Read and validate the stream header: `(kind, step, n_groups)`.
+pub fn read_stream_header(
+    r: &mut impl Read,
+    ck: &mut StreamChecksum,
+) -> Result<(OptimizerKind, u64, usize)> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != STREAM_MAGIC {
+        bail!("not an ETSS state stream");
+    }
+    let version = read_u32(r)?;
+    if version != STREAM_VERSION {
+        bail!("unsupported state-stream version {version}");
+    }
+    let kind_name = read_str(r)?;
+    let kind = OptimizerKind::parse(&kind_name)
+        .with_context(|| format!("unknown optimizer kind '{kind_name}' in state stream"))?;
+    let step = read_u64(r)?;
+    let n_groups = read_u32(r)? as usize;
+    ck.str(&kind_name);
+    ck.u64(step);
+    ck.u64(n_groups as u64);
+    Ok((kind, step, n_groups))
+}
+
+/// Read one group frame plus its chunked buffers. `max_buf_numel` bounds
+/// any single buffer's declared length *before* allocating (the receiver
+/// always knows its group shapes, so the bound is tight in practice).
+pub fn read_stream_group(
+    r: &mut impl Read,
+    max_buf_numel: usize,
+    ck: &mut StreamChecksum,
+) -> Result<GroupExport> {
+    let op = read_u32(r)?;
+    if op != OP_GROUP {
+        bail!("state stream: expected a group frame, got opcode {op}");
+    }
+    let name = read_str(r)?;
+    let steps = read_u64(r)?;
+    let n_wide = read_u32(r)? as usize;
+    anyhow::ensure!(
+        n_wide <= MAX_WIDE,
+        "state stream: group '{name}' has implausible {n_wide} wide scalars"
+    );
+    let mut wide = Vec::with_capacity(n_wide);
+    for _ in 0..n_wide {
+        wide.push(read_f64(r)?);
+    }
+    let n_bufs = read_u32(r)? as usize;
+    anyhow::ensure!(
+        n_bufs <= MAX_GROUP_BUFS,
+        "state stream: group '{name}' has implausible {n_bufs} buffers"
+    );
+    ck.str(&name);
+    ck.u64(steps);
+    ck.f64s(&wide);
+    let mut bufs = Vec::with_capacity(n_bufs);
+    for _ in 0..n_bufs {
+        let bname = read_str(r)?;
+        let total = read_u64(r)? as usize;
+        anyhow::ensure!(
+            total <= max_buf_numel,
+            "state stream: buffer '{name}/{bname}' of {total} scalars exceeds the \
+             plausible bound {max_buf_numel}"
+        );
+        ck.str(&bname);
+        ck.u64(total as u64);
+        let mut data = vec![0.0f32; total];
+        let mut got = 0usize;
+        while got < total {
+            let op = read_u32(r)?;
+            if op != OP_CHUNK {
+                bail!("state stream: expected a chunk frame, got opcode {op}");
+            }
+            let n = read_u64(r)? as usize;
+            anyhow::ensure!(
+                n > 0 && n <= total - got,
+                "state stream: chunk of {n} scalars overruns buffer '{name}/{bname}' \
+                 ({got}/{total} received)"
+            );
+            read_f32_data(r, &mut data[got..got + n])?;
+            ck.f32s(&data[got..got + n]);
+            got += n;
+        }
+        bufs.push((bname, data));
+    }
+    Ok(GroupExport { name, steps, wide, bufs })
+}
+
+/// Read the end frame and verify the checksum.
+pub fn read_stream_end(r: &mut impl Read, ck: &StreamChecksum) -> Result<()> {
+    let op = read_u32(r)?;
+    if op != OP_END {
+        bail!("state stream: expected the end frame, got opcode {op}");
+    }
+    let got = read_u64(r)?;
+    anyhow::ensure!(
+        got == ck.value(),
+        "state stream checksum mismatch: stream says {got:#018x}, computed {:#018x}",
+        ck.value()
+    );
+    Ok(())
+}
+
+/// Materialize a whole stream as a [`StateExport`] (checksum-verified).
+pub fn read_export_stream(r: &mut impl Read, max_buf_numel: usize) -> Result<StateExport> {
+    let mut ck = StreamChecksum::new();
+    let (kind, step, n_groups) = read_stream_header(r, &mut ck)?;
+    let mut groups = Vec::with_capacity(n_groups.min(1 << 20));
+    for _ in 0..n_groups {
+        groups.push(read_stream_group(r, max_buf_numel, &mut ck)?);
+    }
+    read_stream_end(r, &ck)?;
+    Ok(StateExport { kind, step, groups })
+}
+
+/// Import a stream directly into a live state, group by group — peak
+/// buffering is one group, not the whole snapshot. Validates kind and group
+/// count up front and every group's layout on arrival; on any error
+/// (including a trailing checksum mismatch) the state may be partially
+/// written and must be treated as unusable by the caller.
+pub fn import_stream(r: &mut impl Read, st: &mut OptState) -> Result<()> {
+    let mut ck = StreamChecksum::new();
+    let (kind, step, n_groups) = read_stream_header(r, &mut ck)?;
+    anyhow::ensure!(
+        kind == st.kind(),
+        "state stream import: kind {kind:?} does not match {:?}",
+        st.kind()
+    );
+    anyhow::ensure!(
+        n_groups == st.n_groups(),
+        "state stream import: {n_groups} groups, expected {}",
+        st.n_groups()
+    );
+    let cap = (0..st.n_groups())
+        .flat_map(|gi| (0..st.group(gi).n_bufs()).map(move |bi| (gi, bi)))
+        .map(|(gi, bi)| st.group(gi).buf(bi).len())
+        .max()
+        .unwrap_or(0);
+    for gi in 0..st.n_groups() {
+        let ge = read_stream_group(r, cap, &mut ck)?;
+        st.import_group(gi, &ge)?;
+    }
+    read_stream_end(r, &ck)?;
+    st.step = step;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{self, GroupSpec, Hyper, Optimizer};
+    use crate::tensoring::StateBackend;
+
+    fn stepped_state(backend: StateBackend) -> (Vec<GroupSpec>, crate::optim::StateOptimizer) {
+        let gs = vec![
+            GroupSpec::new("embed", &[40, 8]),
+            GroupSpec::new("ff", &[8, 24]),
+            GroupSpec::new("bias", &[24]),
+        ];
+        let hyper = Hyper { backend, ..Hyper::default() };
+        let mut opt = optim::build_state(OptimizerKind::Adam, &gs, &hyper);
+        let mut params: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.3f32; g.numel()]).collect();
+        let grads: Vec<Vec<f32>> = gs
+            .iter()
+            .map(|g| (0..g.numel()).map(|i| ((i % 13) as f32 - 6.0) * 0.05).collect())
+            .collect();
+        for _ in 0..4 {
+            opt.next_step();
+            opt.step_all(&mut params, &grads, 0.01).unwrap();
+        }
+        (gs, opt)
+    }
+
+    #[test]
+    fn stream_roundtrips_bitwise_for_all_backends() {
+        for backend in [StateBackend::DenseF32, StateBackend::q8(), StateBackend::nf4()] {
+            let (_, opt) = stepped_state(backend);
+            let export = opt.export();
+            // Live-state writer and materialized-export writer agree.
+            let mut a = Vec::new();
+            write_state_stream(&mut a, opt.state(), 100).unwrap();
+            let back = read_export_stream(&mut a.as_slice(), 1 << 20).unwrap();
+            assert_eq!(back, export, "{backend:?}: live stream lost data");
+            let mut b = Vec::new();
+            write_export_stream(&mut b, &export, 100).unwrap();
+            let back2 = read_export_stream(&mut b.as_slice(), 1 << 20).unwrap();
+            assert_eq!(back2, export, "{backend:?}: export stream lost data");
+        }
+    }
+
+    #[test]
+    fn import_stream_restores_live_state() {
+        let (gs, opt) = stepped_state(StateBackend::q8());
+        let mut bytes = Vec::new();
+        write_state_stream(&mut bytes, opt.state(), 64).unwrap();
+        let hyper = Hyper { backend: StateBackend::q8(), ..Hyper::default() };
+        let mut fresh = optim::build_state(OptimizerKind::Adam, &gs, &hyper);
+        import_stream(&mut bytes.as_slice(), fresh.state_mut()).unwrap();
+        assert_eq!(fresh.export(), opt.export());
+    }
+
+    #[test]
+    fn corrupted_stream_fails_checksum() {
+        let (_, opt) = stepped_state(StateBackend::DenseF32);
+        let mut bytes = Vec::new();
+        write_state_stream(&mut bytes, opt.state(), 32).unwrap();
+        // Flip one payload byte near the middle: structure parses, data is
+        // wrong, so only the checksum can catch it.
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = read_export_stream(&mut bytes.as_slice(), 1 << 20);
+        assert!(err.is_err(), "corrupted stream must not import");
+    }
+
+    #[test]
+    fn truncated_stream_is_an_error() {
+        let (_, opt) = stepped_state(StateBackend::DenseF32);
+        let mut bytes = Vec::new();
+        write_state_stream(&mut bytes, opt.state(), 32).unwrap();
+        bytes.truncate(bytes.len() - 9);
+        assert!(read_export_stream(&mut bytes.as_slice(), 1 << 20).is_err());
+    }
+
+    #[test]
+    fn wrong_kind_rejected_on_import() {
+        let (gs, opt) = stepped_state(StateBackend::DenseF32);
+        let mut bytes = Vec::new();
+        write_state_stream(&mut bytes, opt.state(), 32).unwrap();
+        let hyper = Hyper::default();
+        let mut other = optim::build_state(OptimizerKind::AdaGrad, &gs, &hyper);
+        assert!(import_stream(&mut bytes.as_slice(), other.state_mut()).is_err());
+    }
+}

@@ -95,6 +95,10 @@ pub struct GateOptions {
     /// Schema validation only (the CI replacement for the inline
     /// Python asserts) — no goldens needed.
     pub schema_only: bool,
+    /// Fail (instead of warn-and-pass) when the goldens are still
+    /// bootstrap placeholders (`pinned: false`). Release CI sets this so
+    /// a branch can't ship against numbers nobody has blessed.
+    pub require_pinned: bool,
 }
 
 impl Default for GateOptions {
@@ -106,6 +110,7 @@ impl Default for GateOptions {
             pareto_path: PathBuf::from("BENCH_pareto.json"),
             bless: false,
             schema_only: false,
+            require_pinned: false,
         }
     }
 }
@@ -490,6 +495,21 @@ pub fn run_gate(opts: &GateOptions) -> Result<()> {
     let g_optim = load_json(&opts.goldens_dir.join("BENCH_optim.json"))?;
     let g_pareto = load_json(&opts.goldens_dir.join("BENCH_pareto.json"))?;
     let pinned = is_pinned(&g_optim) && is_pinned(&g_pareto);
+    if opts.require_pinned && !pinned {
+        let which = [
+            (!is_pinned(&g_optim)).then_some("BENCH_optim.json"),
+            (!is_pinned(&g_pareto)).then_some("BENCH_pareto.json"),
+        ]
+        .into_iter()
+        .flatten()
+        .collect::<Vec<_>>()
+        .join(", ");
+        bail!(
+            "gate: --require-pinned is set but goldens are bootstrap (pinned = false): {which}. \
+             Run the bench suites on a reference machine and `ettrain gate --bless` to pin \
+             real numbers."
+        );
+    }
 
     let (mut errs, optim_deltas) = compare_optim(&g_optim, &optim, opts.tolerance);
     let (pareto_errs, pareto_deltas) = compare_pareto(&g_pareto, &pareto, opts.tolerance);
@@ -664,6 +684,44 @@ mod tests {
             e,
             GateError::Regression { metric, .. } if metric == "plan_bytes"
         )));
+    }
+
+    #[test]
+    fn require_pinned_turns_bootstrap_warnings_into_failure() {
+        let dir = std::env::temp_dir().join(format!("etgate-pin-{}", std::process::id()));
+        let goldens = dir.join("goldens");
+        std::fs::create_dir_all(&goldens).unwrap();
+
+        let mut g_optim = optim_doc(&[("a", 2.0, 1.5)]);
+        if let Json::Obj(map) = &mut g_optim {
+            map.insert("pinned".to_string(), Json::Bool(false));
+        }
+        let g_pareto = pareto_doc(&[("convex", 4096.0, 4000.0, "ET2/f32", 128.0, 0.5, 0.9)]);
+        std::fs::write(goldens.join("BENCH_optim.json"), g_optim.to_string_pretty()).unwrap();
+        std::fs::write(goldens.join("BENCH_pareto.json"), g_pareto.to_string_pretty()).unwrap();
+
+        // Fresh outputs identical to the goldens: zero regressions either way.
+        let optim_path = dir.join("BENCH_optim.json");
+        let pareto_path = dir.join("BENCH_pareto.json");
+        std::fs::write(&optim_path, optim_doc(&[("a", 2.0, 1.5)]).to_string_pretty()).unwrap();
+        std::fs::write(&pareto_path, g_pareto.to_string_pretty()).unwrap();
+
+        let opts = GateOptions {
+            goldens_dir: goldens,
+            optim_path,
+            pareto_path,
+            ..GateOptions::default()
+        };
+        // Unpinned goldens pass (warn-only) without the flag...
+        run_gate(&opts).unwrap();
+        // ...and hard-fail with it, naming the unpinned file.
+        let strict = GateOptions { require_pinned: true, ..opts };
+        let err = run_gate(&strict).unwrap_err().to_string();
+        assert!(err.contains("--require-pinned"), "{err}");
+        assert!(err.contains("BENCH_optim.json"), "{err}");
+        assert!(!err.contains("BENCH_pareto.json"), "{err}");
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

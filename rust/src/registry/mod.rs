@@ -44,7 +44,7 @@ pub mod dashboard;
 pub mod gate;
 pub mod record;
 
-pub use record::{record_batch, Registry, RunRecord, REGISTRY_SCHEMA};
+pub use record::{record_batch, CompactStats, Registry, RunRecord, REGISTRY_SCHEMA};
 
 use std::path::Path;
 

@@ -379,6 +379,67 @@ impl Registry {
         }
         rows[2..].iter().map(|r| RunRecord::from_cells(r)).collect()
     }
+
+    /// Retention: keep only the newest `keep_per_spec` records for each
+    /// distinct `spec_toml` and atomically rewrite both encodings
+    /// (tmp-file + rename, headers re-emitted). "Newest" is append
+    /// order — the registry is append-only, so file order *is* run
+    /// order. Surviving records keep their relative order, so a
+    /// compacted registry loads and round-trips exactly like an
+    /// append-built one.
+    pub fn compact(&self, keep_per_spec: usize) -> Result<CompactStats> {
+        let records = Registry::load(&self.dir)?;
+        let total = records.len();
+
+        // Count per spec, then keep the *last* `keep_per_spec` of each
+        // in one forward pass (a record survives when fewer than
+        // `keep_per_spec` records of its spec come after it).
+        let mut remaining: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+        for r in &records {
+            *remaining.entry(r.spec_toml.as_str()).or_insert(0) += 1;
+        }
+        let specs = remaining.len();
+        let kept: Vec<&RunRecord> = records
+            .iter()
+            .filter(|r| {
+                let n = remaining.get_mut(r.spec_toml.as_str()).expect("counted above");
+                *n -= 1;
+                *n < keep_per_spec
+            })
+            .collect();
+
+        let mut jsonl = String::new();
+        jsonl.push_str(&Json::obj(vec![("schema", Json::str(REGISTRY_SCHEMA))]).to_string());
+        jsonl.push('\n');
+        let mut csv = format!("#schema={REGISTRY_SCHEMA}\n{}\n", COLUMNS.join(","));
+        for r in &kept {
+            jsonl.push_str(&r.to_json().to_string());
+            jsonl.push('\n');
+            csv.push_str(&r.csv_row());
+            csv.push('\n');
+        }
+        replace_file(&self.jsonl_path(), &jsonl)?;
+        replace_file(&self.csv_path(), &csv)?;
+        Ok(CompactStats { kept: kept.len(), total, specs })
+    }
+}
+
+/// What [`Registry::compact`] did: how many records survived out of how
+/// many, across how many distinct specs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompactStats {
+    pub kept: usize,
+    pub total: usize,
+    pub specs: usize,
+}
+
+/// Atomically replace `path` with `content` via a sibling tmp file +
+/// rename, so a crash mid-compact never leaves a truncated registry.
+fn replace_file(path: &Path, content: &str) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, content).with_context(|| format!("write {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    Ok(())
 }
 
 /// Re-solve the state plan a budget-planned job executes, for the
@@ -502,6 +563,70 @@ mod tests {
             ]
         );
         assert!(csv_parse("a,\"open").is_err());
+    }
+
+    fn record(run_id: &str, spec: &str) -> RunRecord {
+        RunRecord {
+            run_id: run_id.to_string(),
+            job: "j".to_string(),
+            kind: "convex".to_string(),
+            commit: "deadbeef".to_string(),
+            started_unix: 1,
+            utc: "1970-01-01T00:00:01Z".to_string(),
+            spec_toml: spec.to_string(),
+            plan: None,
+            status: "ok".to_string(),
+            error: String::new(),
+            metrics: Json::obj(vec![("loss", Json::num(0.5))]),
+            artifact_hits: 0,
+            artifact_misses: 0,
+            corpus_hits: 0,
+            corpus_misses: 0,
+            wall_seconds: 1.5,
+            queue_seconds: 0.25,
+            event_log: String::new(),
+        }
+    }
+
+    #[test]
+    fn compact_keeps_last_n_per_spec_and_round_trips() {
+        let dir = std::env::temp_dir().join(format!("etreg-compact-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let registry = Registry::open(&dir).unwrap();
+        // Two specs interleaved: a0..a3 and b0..b1.
+        let mut all = Vec::new();
+        for (id, spec) in
+            [("a0", "A"), ("b0", "B"), ("a1", "A"), ("a2", "A"), ("b1", "B"), ("a3", "A")]
+        {
+            all.push(record(id, spec));
+        }
+        registry.append(&all).unwrap();
+
+        let stats = registry.compact(2).unwrap();
+        assert_eq!(stats, CompactStats { kept: 4, total: 6, specs: 2 });
+
+        // Survivors are the newest 2 per spec, in original file order,
+        // and both encodings still load and agree bitwise.
+        let jsonl = Registry::load(&dir).unwrap();
+        let ids: Vec<&str> = jsonl.iter().map(|r| r.run_id.as_str()).collect();
+        assert_eq!(ids, ["b0", "a2", "b1", "a3"]);
+        let csv = Registry::load_csv(&dir).unwrap();
+        assert_eq!(jsonl, csv);
+
+        // Appending after a compact must not re-emit headers.
+        registry.append(&[record("a4", "A")]).unwrap();
+        let after = Registry::load(&dir).unwrap();
+        assert_eq!(after.len(), 5);
+        assert_eq!(after.last().unwrap().run_id, "a4");
+
+        // compact(1) keeps exactly one (the newest) per spec.
+        let stats = registry.compact(1).unwrap();
+        assert_eq!(stats, CompactStats { kept: 2, total: 5, specs: 2 });
+        let ids: Vec<String> =
+            Registry::load(&dir).unwrap().into_iter().map(|r| r.run_id).collect();
+        assert_eq!(ids, ["b1", "a4"]);
+
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

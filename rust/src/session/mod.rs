@@ -51,7 +51,7 @@ use crate::tensoring::{EpsMode, SliceAccumulators, StateBackend, TensorIndex};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Timer;
 use crate::vision::{VisionConfig, VisionDataset};
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -499,6 +499,19 @@ fn run_convex(spec: &ConvexSpec, session: &Session, sink: &EventSink) -> Result<
     Ok(ConvexOutcome { optimizer, state_scalars, state_bytes, final_loss, accuracy, curve, w })
 }
 
+/// A [`crate::transport::SocketTransport`] rooted in a per-process temp
+/// directory. The worker binary is `ETTRAIN_WORKER_BIN` when set (CI and
+/// integration tests point it at the freshly built `ettrain`), else the
+/// running executable itself.
+fn socket_transport_for(tag: &str) -> Result<crate::transport::SocketTransport> {
+    let bin = match std::env::var_os("ETTRAIN_WORKER_BIN") {
+        Some(p) if !p.is_empty() => std::path::PathBuf::from(p),
+        _ => std::env::current_exe().context("socket transport: resolve worker binary")?,
+    };
+    let dir = std::env::temp_dir().join(format!("ettrain-sock-{}-{tag}", std::process::id()));
+    Ok(crate::transport::SocketTransport::new(dir, bin))
+}
+
 fn run_shard_bench(spec: &ShardBenchSpec, sink: &EventSink) -> Result<ShardBenchOutcome> {
     let groups =
         crate::testing::transformer_groups(spec.layers, spec.vocab, spec.d_model, spec.d_ff);
@@ -514,7 +527,26 @@ fn run_shard_bench(spec: &ShardBenchSpec, sink: &EventSink) -> Result<ShardBench
         .collect();
     let mut params: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
     let hyper = Hyper::default();
-    let mut opt = ShardedOptimizer::new(spec.kind, &groups, &hyper, spec.shards)?;
+    let mut opt = match spec.transport {
+        crate::transport::TransportKind::InProcess => {
+            ShardedOptimizer::new(spec.kind, &groups, &hyper, spec.shards)?
+        }
+        crate::transport::TransportKind::Socket => {
+            ShardedOptimizer::with_transport(
+                spec.kind,
+                &groups,
+                &hyper,
+                spec.shards,
+                None,
+                crate::shard::DEFAULT_MIN_BUCKET_NUMEL,
+                std::sync::Arc::new(socket_transport_for(&format!(
+                    "bench-{}-{}",
+                    spec.kind.name(),
+                    spec.shards
+                ))?),
+            )?
+        }
+    };
     for _ in 0..2 {
         opt.next_step();
         opt.step_all(&mut params, &grads, 1e-3)?;

@@ -5,10 +5,13 @@
 //! [`JobSpec::cost_bytes`] (optimizer-state footprint per backend from
 //! `tensoring::memory`, plus parameters/gradients/dataset buffers); a job
 //! is admitted only while the sum of running jobs' costs stays within
-//! `--mem-budget`. A job that does not fit *right now* stays queued (a
-//! [`JobEvent::Deferred`] is emitted) and is retried whenever a running job
-//! releases its reservation; a job that could never fit the total budget
-//! fails at submission with a clear error instead of deadlocking the pool.
+//! `--mem-budget`. Admission is strictly FIFO: a job that does not fit
+//! *right now* stays queued (a [`JobEvent::Deferred`] is emitted), keeps
+//! its place at the head of the queue, and has first claim — at its full
+//! requested bytes — whenever a running job releases its reservation, so a
+//! stream of small jobs can never starve a large deferred one. A job that
+//! could never fit the total budget fails at submission with a clear error
+//! instead of deadlocking the pool.
 //!
 //! Determinism contract: per-run numerical results are independent of the
 //! worker count. Jobs share no mutable state (per-job seeds, per-run output
@@ -292,33 +295,36 @@ fn worker_loop(
     clock: &Arc<Timer>,
 ) {
     loop {
-        // Claim the first queued job that fits the budget, or wait for a
-        // release. Exits when the queue is drained.
+        // Claim the job at the head of the queue when it fits the budget,
+        // or wait for a release. Admission is strictly FIFO: a job that
+        // does not fit blocks everything behind it (announced as Deferred
+        // once) and keeps first claim on released bytes, so a stream of
+        // small jobs can never starve a large deferred one. Jobs that can
+        // never fit the total budget were already failed at submission, so
+        // head-of-line blocking cannot deadlock. Exits when the queue is
+        // drained.
         let claimed = {
             let mut q = state.lock().unwrap();
             loop {
-                if q.pending.is_empty() {
+                let Some(&front) = q.pending.first() else {
                     break None;
+                };
+                if q.admission.fits(costs[front]) {
+                    q.pending.remove(0);
+                    q.admission.acquire(costs[front]);
+                    let waited = (clock.elapsed_secs() - q.queued_t[front]).max(0.0);
+                    break Some((front, q.admission.in_use(), waited));
                 }
-                if let Some(pos) = q.pending.iter().position(|&i| q.admission.fits(costs[i])) {
-                    let i = q.pending.remove(pos);
-                    q.admission.acquire(costs[i]);
-                    let waited = (clock.elapsed_secs() - q.queued_t[i]).max(0.0);
-                    break Some((i, q.admission.in_use(), waited));
-                }
-                for pos in 0..q.pending.len() {
-                    let i = q.pending[pos];
-                    if !q.deferred_emitted[i] {
-                        q.deferred_emitted[i] = true;
-                        let _ = tx.send(StampedEvent {
-                            t: clock.elapsed_secs(),
-                            event: JobEvent::Deferred {
-                                job: specs[i].name.clone(),
-                                cost_bytes: costs[i],
-                                available_bytes: q.admission.available(),
-                            },
-                        });
-                    }
+                if !q.deferred_emitted[front] {
+                    q.deferred_emitted[front] = true;
+                    let _ = tx.send(StampedEvent {
+                        t: clock.elapsed_secs(),
+                        event: JobEvent::Deferred {
+                            job: specs[front].name.clone(),
+                            cost_bytes: costs[front],
+                            available_bytes: q.admission.available(),
+                        },
+                    });
                 }
                 q = cvar.wait(q).unwrap();
             }

@@ -15,6 +15,7 @@ use crate::convex::ConvexConfig;
 use crate::runtime::Manifest;
 use crate::tensoring::{model_state_bytes, OptimizerKind, StateBackend};
 use crate::train::RunConfig;
+use crate::transport::TransportKind;
 use crate::util::config::{Config, Value};
 use crate::vision::VisionConfig;
 use anyhow::{bail, Context, Result};
@@ -113,6 +114,9 @@ pub struct ShardBenchSpec {
     pub d_model: usize,
     pub d_ff: usize,
     pub seed: u64,
+    /// How workers are launched: in-process threads (default) or
+    /// `ettrain shard-worker` child processes over UNIX sockets.
+    pub transport: TransportKind,
 }
 
 impl Default for ShardBenchSpec {
@@ -126,6 +130,7 @@ impl Default for ShardBenchSpec {
             d_model: 512,
             d_ff: 2048,
             seed: 42,
+            transport: TransportKind::InProcess,
         }
     }
 }
@@ -328,7 +333,18 @@ impl JobSpec {
                     crate::testing::transformer_groups(s.layers, s.vocab, s.d_model, s.d_ff);
                 let shapes: Vec<Vec<usize>> = groups.iter().map(|g| g.shape.clone()).collect();
                 let numel: usize = groups.iter().map(|g| g.numel()).sum();
-                8 * numel + model_state_bytes(s.kind, &shapes, StateBackend::DenseF32)
+                match s.transport {
+                    TransportKind::InProcess => {
+                        8 * numel + model_state_bytes(s.kind, &shapes, StateBackend::DenseF32)
+                    }
+                    // Socket workers hold the optimizer state in their own
+                    // processes; this process keeps params + grads plus a
+                    // bounded per-shard serialization buffer (one ETSS
+                    // chunk each way).
+                    TransportKind::Socket => {
+                        8 * numel + s.shards * 8 * crate::optim::stream::STREAM_CHUNK_NUMEL
+                    }
+                }
             }
             Workload::Vision(v) => {
                 let m = Manifest::load(&v.artifact_dir, &format!("cnn_{}", v.optimizer))
@@ -434,6 +450,7 @@ impl JobSpec {
                 kv("d_model", s.d_model.to_string());
                 kv("d_ff", s.d_ff.to_string());
                 kv("seed", s.seed.to_string());
+                kv("transport", q(s.transport.name()));
             }
             Workload::Vision(v) => {
                 kv("optimizer", q(&v.optimizer));
@@ -511,8 +528,9 @@ const CONVEX_KEYS: &[&str] = &[
     "type", "optimizer", "dims", "eps", "beta2", "per_factor_eps", "backend", "budget", "lr",
     "iters", "n", "d", "k", "cond", "householder", "seed", "measure_after", "curve_every",
 ];
-const SHARD_BENCH_KEYS: &[&str] =
-    &["type", "kind", "shards", "iters", "layers", "vocab", "d_model", "d_ff", "seed"];
+const SHARD_BENCH_KEYS: &[&str] = &[
+    "type", "kind", "shards", "iters", "layers", "vocab", "d_model", "d_ff", "seed", "transport",
+];
 const VISION_KEYS: &[&str] = &[
     "type", "optimizer", "lr", "steps", "eval_every", "seed", "artifact_dir", "classes", "train",
     "test", "blobs", "noise", "mix_max", "data_seed",
@@ -625,6 +643,11 @@ fn job_from_config(cfg: &Config, name: &str) -> Result<JobSpec> {
                     d_model: cfg.usize(&key("d_model"), d.d_model),
                     d_ff: cfg.usize(&key("d_ff"), d.d_ff),
                     seed: cfg.usize(&key("seed"), d.seed as usize) as u64,
+                    transport: {
+                        let t = cfg.str(&key("transport"), d.transport.name());
+                        TransportKind::parse(&t)
+                            .with_context(|| format!("job '{name}': bad transport '{t}'"))?
+                    },
                 },
             )
         }
@@ -713,6 +736,15 @@ mod tests {
             JobSpec::shard_bench(
                 "sb_et3",
                 ShardBenchSpec { kind: OptimizerKind::Et(3), shards: 4, ..Default::default() },
+            ),
+            JobSpec::shard_bench(
+                "sb_sock",
+                ShardBenchSpec {
+                    kind: OptimizerKind::AdaGrad,
+                    shards: 2,
+                    transport: TransportKind::Socket,
+                    ..Default::default()
+                },
             ),
         ]
     }

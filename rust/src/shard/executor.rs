@@ -3,33 +3,59 @@
 //! [`ShardedOptimizer`] implements the ordinary [`Optimizer`] trait, so it
 //! drops into every call site the single-threaded suite serves; its
 //! [`Optimizer::step_all`] override is the hot path that updates *all*
-//! groups in one fan-out. Work travels as [`Bucket`]s over bounded
-//! channels; the call returns only after every bucket is acknowledged,
-//! which is both the memory-safety barrier for the raw slice handoff and
-//! the reason the reduction is trivially deterministic: each group is
-//! computed by exactly one worker with exactly the single-threaded
-//! per-group arithmetic, and no cross-shard arithmetic exists to reorder.
-//! Sharded results are therefore bitwise-identical to the single-threaded
-//! engine at any shard count (`rust/tests/sharded_parity.rs` checks every
-//! optimizer kind).
+//! groups in one fan-out. Work travels as [`Bucket`]s over a
+//! [`ShardConnection`] per shard; the call returns only after every bucket
+//! is acknowledged, which is both the memory-safety barrier for the raw
+//! slice handoff and the reason the reduction is trivially deterministic:
+//! each group is computed by exactly one worker with exactly the
+//! single-threaded per-group arithmetic, and no cross-shard arithmetic
+//! exists to reorder. Sharded results are therefore bitwise-identical to
+//! the single-threaded engine at any shard count — and over any transport
+//! (`rust/tests/sharded_parity.rs` checks every optimizer kind over both
+//! the in-process and the socket transport).
 //!
-//! Because each worker owns an externalized [`crate::optim::OptState`],
-//! shard-local state is no longer trapped on its thread:
-//! [`ShardedOptimizer::export_state`] fans in every worker's snapshot and
-//! merges them into one global, shard-count-independent [`StateExport`]
-//! (groups in global order), and [`ShardedOptimizer::import_state`] fans a
-//! global snapshot back out — so a checkpoint taken at 2 shards restores
-//! at 1 or 4 bitwise-identically (`rust/tests/host_checkpoint.rs`).
+//! The executor no longer owns threads: it holds one
+//! [`ShardConnection`] per shard, built by a [`ShardTransport`]
+//! ([`crate::transport::InProcess`] by default;
+//! [`crate::transport::SocketTransport`] runs each worker as an
+//! `ettrain shard-worker` child process). Because each worker owns an
+//! externalized [`crate::optim::OptState`], shard-local state is not
+//! trapped with its worker: [`ShardedOptimizer::export_state`] fans in
+//! every worker's snapshot and merges them into one global,
+//! shard-count-independent [`StateExport`] (groups in global order), and
+//! [`ShardedOptimizer::import_state`] fans a global snapshot back out —
+//! so a checkpoint taken at 2 shards restores at 1 or 4
+//! bitwise-identically (`rust/tests/host_checkpoint.rs`).
+//!
+//! That shard-count independence is also what makes the worker set
+//! *elastic*: [`ShardedOptimizer::reshard`] grows or shrinks the engine at
+//! a step boundary (export → rebuild → import, no restart), and
+//! [`ShardedOptimizer::take_snapshot`] + [`ShardedOptimizer::recover`]
+//! survive worker death by rebuilding over the surviving connection count
+//! and replaying from the last snapshot.
 
 use super::bucket::{bucketize, Bucket, DEFAULT_MIN_BUCKET_NUMEL};
 use super::partition::{partition, partition_planned, ShardPlan};
-use super::worker::{run_worker, GroupTask, Reply, Request, WorkerSpec};
 use crate::budget::StatePlan;
 use crate::optim::{GroupExport, GroupSpec, Hyper, Optimizer, StateExport};
 use crate::tensoring::OptimizerKind;
+use crate::transport::{
+    GroupTask, InProcess, ShardConnection, ShardTransport, WorkerSpec,
+};
 use anyhow::{bail, Context, Result};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::thread::JoinHandle;
+use std::sync::Arc;
+
+/// What each worker's optimizer is built from — kept by the executor so it
+/// can rebuild the worker set at a different shard count ([`reshard`],
+/// [`recover`]).
+///
+/// [`reshard`]: ShardedOptimizer::reshard
+/// [`recover`]: ShardedOptimizer::recover
+#[derive(Clone)]
+enum SpecSource {
+    Uniform { kind: OptimizerKind },
+    Planned { plan: StatePlan },
+}
 
 pub struct ShardedOptimizer {
     kind: OptimizerKind,
@@ -44,16 +70,24 @@ pub struct ShardedOptimizer {
     group_numels: Vec<usize>,
     /// Global group names, for validating state imports.
     group_names: Vec<String>,
-    requests: Vec<SyncSender<Request>>,
-    replies: Vec<Receiver<Reply>>,
-    handles: Vec<Option<JoinHandle<()>>>,
+    conns: Vec<Box<dyn ShardConnection>>,
     total_state_scalars: usize,
     total_state_bytes: usize,
+    // Rebuild inputs, for elastic resharding and crash recovery.
+    groups: Vec<GroupSpec>,
+    hyper: Hyper,
+    source: SpecSource,
+    max_state_per_shard: Option<usize>,
+    min_bucket_numel: usize,
+    transport: Arc<dyn ShardTransport>,
+    /// Last state snapshot taken via [`ShardedOptimizer::take_snapshot`];
+    /// the recovery point after a worker dies.
+    last_snapshot: Option<StateExport>,
 }
 
 impl ShardedOptimizer {
-    /// Partition `groups` onto `n_shards` workers with default bucketing
-    /// and no per-shard state budget.
+    /// Partition `groups` onto `n_shards` in-process workers with default
+    /// bucketing and no per-shard state budget.
     pub fn new(
         kind: OptimizerKind,
         groups: &[GroupSpec],
@@ -73,10 +107,36 @@ impl ShardedOptimizer {
         max_state_per_shard: Option<usize>,
         min_bucket_numel: usize,
     ) -> Result<ShardedOptimizer> {
-        let plan = partition(kind, groups, n_shards, max_state_per_shard)?;
-        Self::from_parts(kind, kind.name(), groups, plan, min_bucket_numel, |_, shard_groups| {
-            WorkerSpec::Uniform { kind, groups: shard_groups.to_vec(), hyper: hyper.clone() }
-        })
+        Self::with_transport(
+            kind,
+            groups,
+            hyper,
+            n_shards,
+            max_state_per_shard,
+            min_bucket_numel,
+            Arc::new(InProcess),
+        )
+    }
+
+    /// Uniform engine over an explicit transport.
+    pub fn with_transport(
+        kind: OptimizerKind,
+        groups: &[GroupSpec],
+        hyper: &Hyper,
+        n_shards: usize,
+        max_state_per_shard: Option<usize>,
+        min_bucket_numel: usize,
+        transport: Arc<dyn ShardTransport>,
+    ) -> Result<ShardedOptimizer> {
+        Self::build_engine(
+            SpecSource::Uniform { kind },
+            groups,
+            hyper,
+            n_shards,
+            max_state_per_shard,
+            min_bucket_numel,
+            transport,
+        )
     }
 
     /// Plan-driven constructor: each worker executes its groups' chosen
@@ -90,51 +150,58 @@ impl ShardedOptimizer {
         n_shards: usize,
         state_plan: &StatePlan,
     ) -> Result<ShardedOptimizer> {
-        // Validate the plan (metadata only, no allocation) in the caller's
-        // thread, before any worker exists — per-shard worker builds cannot
-        // fail after this.
-        crate::budget::validate_plan(groups, state_plan)?;
-        let plan = partition_planned(state_plan, groups, n_shards, None)?;
-        let shards = plan.shards.clone();
-        Self::from_parts(
-            // ET-family kind tag: the same convention custom-dims ET and
-            // the plan rule use (exports/imports round-trip within it).
-            OptimizerKind::Et(1),
-            "ET-plan".to_string(),
+        Self::with_state_plan_transport(groups, hyper, n_shards, state_plan, Arc::new(InProcess))
+    }
+
+    /// Plan-driven engine over an explicit transport.
+    pub fn with_state_plan_transport(
+        groups: &[GroupSpec],
+        hyper: &Hyper,
+        n_shards: usize,
+        state_plan: &StatePlan,
+        transport: Arc<dyn ShardTransport>,
+    ) -> Result<ShardedOptimizer> {
+        Self::build_engine(
+            SpecSource::Planned { plan: state_plan.clone() },
             groups,
-            plan,
+            hyper,
+            n_shards,
+            None,
             DEFAULT_MIN_BUCKET_NUMEL,
-            |s, shard_groups| {
-                // Slice the plan down to this shard's owned groups, in
-                // worker-local order.
-                let sub = StatePlan {
-                    budget_bytes: None,
-                    per_group: shards[s]
-                        .iter()
-                        .map(|&gi| state_plan.per_group[gi].clone())
-                        .collect(),
-                };
-                WorkerSpec::Planned {
-                    groups: shard_groups.to_vec(),
-                    plan: sub,
-                    hyper: hyper.clone(),
-                }
-            },
+            transport,
         )
     }
 
-    /// Shared constructor body: spawn one worker per shard, each building
-    /// its own optimizer on-thread from `spec_for(shard, shard_groups)` —
-    /// state allocation stays concurrent and thread-local, exactly as the
-    /// pre-planner engine behaved.
-    fn from_parts(
-        kind: OptimizerKind,
-        label: String,
+    /// Shared constructor body: partition, connect one worker per shard
+    /// (each building its own optimizer from an owned [`WorkerSpec`] —
+    /// state allocation stays concurrent and worker-local), then run the
+    /// deterministic startup reduction in shard order.
+    fn build_engine(
+        source: SpecSource,
         groups: &[GroupSpec],
-        plan: ShardPlan,
+        hyper: &Hyper,
+        n_shards: usize,
+        max_state_per_shard: Option<usize>,
         min_bucket_numel: usize,
-        spec_for: impl Fn(usize, &[GroupSpec]) -> WorkerSpec,
+        transport: Arc<dyn ShardTransport>,
     ) -> Result<ShardedOptimizer> {
+        let (kind, label, plan) = match &source {
+            SpecSource::Uniform { kind } => {
+                let plan = partition(*kind, groups, n_shards, max_state_per_shard)?;
+                (*kind, kind.name(), plan)
+            }
+            SpecSource::Planned { plan: state_plan } => {
+                // Validate the plan (metadata only, no allocation) before
+                // any worker exists — per-shard worker builds cannot fail
+                // after this.
+                crate::budget::validate_plan(groups, state_plan)?;
+                let plan = partition_planned(state_plan, groups, n_shards, None)?;
+                // ET-family kind tag: the same convention custom-dims ET
+                // and the plan rule use (exports/imports round-trip
+                // within it).
+                (OptimizerKind::Et(1), "ET-plan".to_string(), plan)
+            }
+        };
         let n_shards = plan.n_shards();
         let mut local = vec![(0usize, 0usize); groups.len()];
         for (s, owned) in plan.shards.iter().enumerate() {
@@ -148,25 +215,37 @@ impl ShardedOptimizer {
             .map(|owned| bucketize(owned, groups, min_bucket_numel.max(1)))
             .collect();
 
-        let mut requests = Vec::with_capacity(n_shards);
-        let mut replies = Vec::with_capacity(n_shards);
-        let mut handles = Vec::with_capacity(n_shards);
+        let mut conns: Vec<Box<dyn ShardConnection>> = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
-            // Channel capacity covers a full step's buckets plus control
+            // Queue capacity covers a full step's buckets plus control
             // messages, so fan-out never blocks on a slow sibling shard.
             let cap = buckets[s].len().max(1) + 2;
-            let (req_tx, req_rx) = sync_channel::<Request>(cap);
-            let (rep_tx, rep_rx) = sync_channel::<Reply>(cap);
             let shard_groups: Vec<GroupSpec> =
                 plan.shards[s].iter().map(|&gi| groups[gi].clone()).collect();
-            let spec = spec_for(s, &shard_groups);
-            let handle = std::thread::Builder::new()
-                .name(format!("et-shard-{s}"))
-                .spawn(move || run_worker(s, spec, req_rx, rep_tx))
-                .context("spawn shard worker")?;
-            requests.push(req_tx);
-            replies.push(rep_rx);
-            handles.push(Some(handle));
+            let spec = match &source {
+                SpecSource::Uniform { kind } => WorkerSpec::Uniform {
+                    kind: *kind,
+                    groups: shard_groups,
+                    hyper: hyper.clone(),
+                },
+                SpecSource::Planned { plan: state_plan } => {
+                    // Slice the plan down to this shard's owned groups, in
+                    // worker-local order.
+                    let sub = StatePlan {
+                        budget_bytes: None,
+                        per_group: plan.shards[s]
+                            .iter()
+                            .map(|&gi| state_plan.per_group[gi].clone())
+                            .collect(),
+                    };
+                    WorkerSpec::Planned { groups: shard_groups, plan: sub, hyper: hyper.clone() }
+                }
+            };
+            conns.push(
+                transport
+                    .connect(s, spec, cap)
+                    .map_err(|e| anyhow::anyhow!("shard {s}: worker launch failed: {e}"))?,
+            );
         }
 
         let mut engine = ShardedOptimizer {
@@ -177,25 +256,27 @@ impl ShardedOptimizer {
             local,
             group_numels: groups.iter().map(|g| g.numel()).collect(),
             group_names: groups.iter().map(|g| g.name.clone()).collect(),
-            requests,
-            replies,
-            handles,
+            conns,
             total_state_scalars: 0,
             total_state_bytes: 0,
+            groups: groups.to_vec(),
+            hyper: hyper.clone(),
+            source,
+            max_state_per_shard,
+            min_bucket_numel,
+            transport,
+            last_snapshot: None,
         };
         // Deterministic startup reduction: query workers in shard order.
+        // The first query is also the readiness check — a worker whose
+        // optimizer build failed reports here as a dead connection.
         let (mut scalars, mut bytes) = (0usize, 0usize);
         for s in 0..n_shards {
-            engine.requests[s]
-                .send(Request::StateScalars)
-                .map_err(|_| anyhow::anyhow!("shard {s}: worker unavailable at startup"))?;
-            match engine.replies[s].recv() {
-                Ok(Reply::StateScalars { scalars: sc, bytes: by }) => {
-                    scalars += sc;
-                    bytes += by;
-                }
-                _ => bail!("shard {s}: worker failed at startup"),
-            }
+            let (sc, by) = engine.conns[s]
+                .state_scalars()
+                .map_err(|e| anyhow::anyhow!("shard {s}: worker failed at startup: {e}"))?;
+            scalars += sc;
+            bytes += by;
         }
         engine.total_state_scalars = scalars;
         engine.total_state_bytes = bytes;
@@ -215,6 +296,11 @@ impl ShardedOptimizer {
         self.plan.peak_state_scalars()
     }
 
+    /// The transport label this engine's workers run over.
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
     /// Fan in every worker's shard-local state snapshot and merge them
     /// into one global [`StateExport`] with groups in *global* group order
     /// — independent of the shard count, so the result can be restored
@@ -224,13 +310,11 @@ impl ShardedOptimizer {
         let n_shards = self.n_shards();
         let mut per_shard: Vec<StateExport> = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
-            if self.requests[s].send(Request::ExportState).is_err() {
-                bail!("shard {s}: worker channel closed");
-            }
-            match self.replies[s].recv() {
-                Ok(Reply::State(e)) => per_shard.push(*e),
-                _ => bail!("shard {s}: worker died during state export"),
-            }
+            per_shard.push(
+                self.conns[s]
+                    .export_state()
+                    .map_err(|e| anyhow::anyhow!("state export failed: {e}"))?,
+            );
         }
         let step = per_shard.first().map(|e| e.step).unwrap_or(0);
         let mut groups: Vec<Option<GroupExport>> = vec![None; self.group_numels.len()];
@@ -286,9 +370,6 @@ impl ShardedOptimizer {
             );
         }
         let n_shards = self.n_shards();
-        // Fan out shard-local slices, then drain every ack (even on error —
-        // a half-imported engine must still leave the channels clean).
-        let mut pending = vec![false; n_shards];
         let mut errs: Vec<String> = Vec::new();
         for s in 0..n_shards {
             let shard_export = StateExport {
@@ -299,26 +380,86 @@ impl ShardedOptimizer {
                     .map(|&gi| export.groups[gi].clone())
                     .collect(),
             };
-            if self.requests[s].send(Request::ImportState(Box::new(shard_export))).is_err() {
-                errs.push(format!("shard {s}: worker channel closed"));
-                continue;
-            }
-            pending[s] = true;
-        }
-        for s in 0..n_shards {
-            if !pending[s] {
-                continue;
-            }
-            match self.replies[s].recv() {
-                Ok(Reply::ImportDone(Ok(()))) => {}
-                Ok(Reply::ImportDone(Err(e))) => errs.push(e),
-                _ => errs.push(format!("shard {s}: worker died during state import")),
+            if let Err(e) = self.conns[s].import_state(shard_export) {
+                errs.push(e.to_string());
             }
         }
         if !errs.is_empty() {
             bail!("sharded state import failed: {}", errs.join("; "));
         }
         Ok(())
+    }
+
+    /// Record the engine's current optimizer state as the recovery point
+    /// for [`ShardedOptimizer::recover`]. Returns the snapshot's step
+    /// counter. Call at a step boundary (after `step_all`, before the next
+    /// `next_step`).
+    pub fn take_snapshot(&mut self) -> Result<u64> {
+        let snapshot = self.export_state()?;
+        let step = snapshot.step;
+        self.last_snapshot = Some(snapshot);
+        Ok(step)
+    }
+
+    /// The step counter of the held recovery snapshot, if any.
+    pub fn snapshot_step(&self) -> Option<u64> {
+        self.last_snapshot.as_ref().map(|s| s.step)
+    }
+
+    /// Change the worker-set size at a step boundary without a restart:
+    /// export the (shard-count-independent) global state, rebuild the
+    /// engine at `n_shards` over the same transport, and import the state
+    /// back. The trajectory continues bitwise-identically to an engine
+    /// that ran at a fixed shard count throughout.
+    pub fn reshard(&mut self, n_shards: usize) -> Result<()> {
+        anyhow::ensure!(n_shards >= 1, "reshard: need at least one shard");
+        let snapshot = self.export_state().context("reshard: exporting state")?;
+        let mut fresh = Self::build_engine(
+            self.source.clone(),
+            &self.groups,
+            &self.hyper,
+            n_shards,
+            self.max_state_per_shard,
+            self.min_bucket_numel,
+            Arc::clone(&self.transport),
+        )
+        .with_context(|| format!("reshard: rebuilding at {n_shards} shards"))?;
+        fresh.import_state(&snapshot).context("reshard: importing state")?;
+        fresh.last_snapshot = self.last_snapshot.take();
+        // Old connections shut their workers down on drop.
+        *self = fresh;
+        Ok(())
+    }
+
+    /// Crash recovery: rebuild the engine over however many connections
+    /// are still alive and restore the last [`take_snapshot`] state.
+    /// Returns the snapshot's step counter; the caller rewinds its
+    /// parameters to that step (from its own copy — parameters live with
+    /// the caller, not the workers) and replays forward.
+    ///
+    /// [`take_snapshot`]: ShardedOptimizer::take_snapshot
+    pub fn recover(&mut self) -> Result<u64> {
+        let survivors = self.conns.iter().filter(|c| c.is_alive()).count();
+        anyhow::ensure!(survivors >= 1, "recover: no surviving shard workers");
+        let snapshot = self
+            .last_snapshot
+            .take()
+            .context("recover: no snapshot held (call take_snapshot at a step boundary)")?;
+        let step = snapshot.step;
+        let mut fresh = Self::build_engine(
+            self.source.clone(),
+            &self.groups,
+            &self.hyper,
+            survivors,
+            self.max_state_per_shard,
+            self.min_bucket_numel,
+            Arc::clone(&self.transport),
+        )
+        .with_context(|| format!("recover: rebuilding at {survivors} shards"))?;
+        fresh.import_state(&snapshot).context("recover: importing snapshot")?;
+        fresh.last_snapshot = Some(snapshot);
+        *self = fresh;
+        Ok(step)
     }
 }
 
@@ -340,14 +481,10 @@ impl Optimizer for ShardedOptimizer {
             g: g.as_ptr(),
             g_len: g.len(),
         };
-        if self.requests[s].send(Request::Step { lr, tasks: vec![task] }).is_err() {
-            bail!("shard {s}: worker channel closed");
-        }
-        match self.replies[s].recv() {
-            Ok(Reply::StepDone(Ok(()))) => Ok(()),
-            Ok(Reply::StepDone(Err(e))) => bail!("{e}"),
-            _ => bail!("shard {s}: worker died mid-step"),
-        }
+        self.conns[s]
+            .send_step(lr, vec![task])
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.conns[s].recv_step_ack().map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     /// One full optimizer step over every group: fan buckets out to the
@@ -357,8 +494,8 @@ impl Optimizer for ShardedOptimizer {
     /// entirely by its owning worker — so the result is independent of
     /// shard completion order and bitwise-equal to the single-threaded
     /// engine. The barrier is also the safety contract for the raw slice
-    /// handoff (see `shard::worker::GroupTask`): `params`/`grads` stay
-    /// borrowed until every worker is done with them.
+    /// handoff (see [`crate::transport::GroupTask`]): `params`/`grads`
+    /// stay borrowed until every worker is done with them.
     fn step_all(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32) -> Result<()> {
         let n = self.group_numels.len();
         anyhow::ensure!(
@@ -392,8 +529,8 @@ impl Optimizer for ShardedOptimizer {
                     let (g, g_len) = gs[gi];
                     tasks.push(GroupTask { local_gi: li, x, x_len, g, g_len });
                 }
-                if self.requests[s].send(Request::Step { lr, tasks }).is_err() {
-                    errs.push(format!("shard {s}: worker channel closed"));
+                if let Err(e) = self.conns[s].send_step(lr, tasks) {
+                    errs.push(e.to_string());
                     break;
                 }
                 pending[s] += 1;
@@ -401,16 +538,20 @@ impl Optimizer for ShardedOptimizer {
         }
         // Fan-in: drain *every* dispatched ack before returning, even on
         // error — returning early would let borrowed pointers outlive the
-        // call while workers still hold them.
+        // call while workers still hold them. (A fatal transport error
+        // closes the connection, which guarantees the worker side will
+        // never touch the remaining queued tasks; only then may the drain
+        // stop early.)
         for s in 0..n_shards {
             for _ in 0..pending[s] {
-                match self.replies[s].recv() {
-                    Ok(Reply::StepDone(Ok(()))) => {}
-                    Ok(Reply::StepDone(Err(e))) => errs.push(e),
-                    Ok(_) => errs.push(format!("shard {s}: protocol error")),
-                    Err(_) => {
-                        errs.push(format!("shard {s}: worker died mid-step"));
-                        break;
+                match self.conns[s].recv_step_ack() {
+                    Ok(()) => {}
+                    Err(e) => {
+                        let fatal = e.is_fatal();
+                        errs.push(e.to_string());
+                        if fatal {
+                            break;
+                        }
                     }
                 }
             }
@@ -438,23 +579,10 @@ impl Optimizer for ShardedOptimizer {
     }
 
     fn next_step(&mut self) {
-        // Ordered before any later Step by each worker's request channel;
-        // no ack needed.
-        for tx in &self.requests {
-            let _ = tx.send(Request::NextStep);
-        }
-    }
-}
-
-impl Drop for ShardedOptimizer {
-    fn drop(&mut self) {
-        for tx in &self.requests {
-            let _ = tx.send(Request::Shutdown);
-        }
-        for h in self.handles.iter_mut() {
-            if let Some(h) = h.take() {
-                let _ = h.join();
-            }
+        // Ordered before any later Step by each connection's serial
+        // request stream; no ack needed.
+        for conn in &mut self.conns {
+            let _ = conn.next_step();
         }
     }
 }
@@ -696,5 +824,83 @@ mod tests {
         let fewer: Vec<GroupSpec> = gs[..2].to_vec();
         let small = optim::build_state(OptimizerKind::Adam, &fewer, &hyper);
         assert!(engine.import_state(&small.export()).is_err(), "group count must fail");
+    }
+
+    /// Elastic resharding mid-run (grow and shrink) continues the
+    /// trajectory bitwise-identically to a fixed-shard engine.
+    #[test]
+    fn reshard_mid_run_is_bitwise_transparent() {
+        let gs = groups();
+        let gr = grads(&gs, 41);
+        let hyper = Hyper::default();
+
+        let mut fixed = ShardedOptimizer::new(OptimizerKind::Adam, &gs, &hyper, 2).unwrap();
+        let mut want: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.2f32; g.numel()]).collect();
+        for _ in 0..6 {
+            fixed.next_step();
+            fixed.step_all(&mut want, &gr, 0.1).unwrap();
+        }
+
+        let mut elastic = ShardedOptimizer::new(OptimizerKind::Adam, &gs, &hyper, 2).unwrap();
+        let mut got: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.2f32; g.numel()]).collect();
+        for step in 0..6 {
+            if step == 2 {
+                elastic.reshard(4).unwrap();
+                assert_eq!(elastic.n_shards(), 4);
+            }
+            if step == 4 {
+                elastic.reshard(1).unwrap();
+                assert_eq!(elastic.n_shards(), 1);
+            }
+            elastic.next_step();
+            elastic.step_all(&mut got, &gr, 0.1).unwrap();
+        }
+        assert_eq!(want, got);
+    }
+
+    /// take_snapshot + recover restores the optimizer state held at the
+    /// snapshot step (in-process workers don't die, so recovery rebuilds
+    /// at the full connection count).
+    #[test]
+    fn snapshot_and_recover_replays_bitwise() {
+        let gs = groups();
+        let gr = grads(&gs, 47);
+        let hyper = Hyper::default();
+
+        let mut engine = ShardedOptimizer::new(OptimizerKind::Et(2), &gs, &hyper, 2).unwrap();
+        let mut params: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.3f32; g.numel()]).collect();
+        for _ in 0..3 {
+            engine.next_step();
+            engine.step_all(&mut params, &gr, 0.1).unwrap();
+        }
+        let step = engine.take_snapshot().unwrap();
+        assert_eq!(engine.snapshot_step(), Some(step));
+        let params_at_snapshot = params.clone();
+
+        // Run two more steps to the reference end state.
+        for _ in 0..2 {
+            engine.next_step();
+            engine.step_all(&mut params, &gr, 0.1).unwrap();
+        }
+        let want = params.clone();
+
+        // "Crash": recover rewinds optimizer state to the snapshot; the
+        // caller rewinds params from its own copy and replays.
+        let recovered_step = engine.recover().unwrap();
+        assert_eq!(recovered_step, step);
+        let mut replay = params_at_snapshot;
+        for _ in 0..2 {
+            engine.next_step();
+            engine.step_all(&mut replay, &gr, 0.1).unwrap();
+        }
+        assert_eq!(want, replay);
+    }
+
+    #[test]
+    fn recover_without_snapshot_fails_cleanly() {
+        let gs = groups();
+        let hyper = Hyper::default();
+        let mut engine = ShardedOptimizer::new(OptimizerKind::Sgd, &gs, &hyper, 2).unwrap();
+        assert!(engine.recover().is_err());
     }
 }

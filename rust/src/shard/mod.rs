@@ -13,9 +13,14 @@
 //!   placement rather than numel alone;
 //! * [`bucketize`] — fuses small groups (biases, layer norms) into one
 //!   dispatch unit to amortize channel overhead;
-//! * [`ShardedOptimizer`] — persistent `std::thread` workers, each owning
-//!   shard-local state for any `OptimizerKind`, driven by fan-out/fan-in
-//!   over bounded channels.
+//! * [`ShardedOptimizer`] — persistent workers behind a
+//!   [`crate::transport::ShardTransport`] (in-process threads by default,
+//!   `ettrain shard-worker` child processes over UNIX sockets via
+//!   [`crate::transport::SocketTransport`]), each owning shard-local state
+//!   for any `OptimizerKind`, driven by fan-out/fan-in with an ack
+//!   barrier. The engine is elastic: `reshard` grows or shrinks the
+//!   worker set at a step boundary, and `take_snapshot`/`recover` survive
+//!   worker death.
 //!
 //! **Determinism contract:** sharded execution is bitwise-identical to
 //! the single-threaded optimizer at any shard count. Each group's update
@@ -35,7 +40,6 @@
 pub mod bucket;
 pub mod executor;
 pub mod partition;
-pub mod worker;
 
 pub use bucket::{bucketize, Bucket, DEFAULT_MIN_BUCKET_NUMEL};
 pub use executor::ShardedOptimizer;

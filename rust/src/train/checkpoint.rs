@@ -19,22 +19,25 @@
 //! Tensor order and names must match the artifact manifest; `load` verifies
 //! both, so a checkpoint can never be silently applied to the wrong model.
 //!
-//! ETHC format (little-endian; strings are `len u32 | bytes`):
+//! ETHC v2 format (little-endian; strings are `len u32 | bytes`):
 //! ```text
-//! magic "ETHC" | version u32 | step u64 | kind str | opt_step u64 |
-//! n_params u32 |
+//! magic "ETHC" | version u32 | step u64 | n_params u32 |
 //!   per param: name | numel u64 | f32 data
-//! n_state_groups u32 |
-//!   per group: name | steps u64 | n_wide u32 | f64 data |
-//!              n_bufs u32 | per buf: name | numel u64 | f32 data
+//! ETSS state stream (see `optim::stream`): kind, opt_step, chunk-framed
+//!   group snapshots, trailing checksum
 //! ```
-//! Counters (`opt_step`, per-group `steps`) are stored as exact `u64`s —
-//! never rounded through `f32` — so restored training continues
+//! The optimizer-state section is the chunk-framed streaming export — the
+//! exact bytes the socket shard transport puts on the wire — written
+//! straight out of the in-memory snapshot with bounded buffering and
+//! verified by the stream's trailing checksum on load. Counters
+//! (`opt_step`, per-group `steps`) are stored as exact `u64`s — never
+//! rounded through `f32` — so restored training continues
 //! bitwise-identically (`rust/tests/host_checkpoint.rs`).
 
-use crate::optim::{GroupExport, GroupSpec, StateExport};
+use crate::optim::stream::{read_export_stream, write_export_stream, STREAM_CHUNK_NUMEL};
+use crate::optim::{GroupSpec, StateExport};
 use crate::runtime::{Engine, TrainState};
-use crate::tensoring::OptimizerKind;
+use crate::util::codec::{read_f32s, read_str, read_u32, read_u64, write_f32s, write_str};
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -42,7 +45,7 @@ use std::path::Path;
 const MAGIC: &[u8; 4] = b"ETCK";
 const VERSION: u32 = 1;
 const HOST_MAGIC: &[u8; 4] = b"ETHC";
-const HOST_VERSION: u32 = 1;
+const HOST_VERSION: u32 = 2;
 
 pub fn save(engine: &Engine, state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
     let path = path.as_ref();
@@ -148,63 +151,13 @@ pub fn load(engine: &Engine, path: impl AsRef<Path>) -> Result<TrainState> {
 // Host-optimizer checkpoints (ETHC)
 // ---------------------------------------------------------------------------
 
-fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
-    w.write_all(&(s.len() as u32).to_le_bytes())?;
-    w.write_all(s.as_bytes())?;
-    Ok(())
-}
-
-fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
-    w.write_all(&(data.len() as u64).to_le_bytes())?;
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    w.write_all(bytes)?;
-    Ok(())
-}
-
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn read_str(r: &mut impl Read) -> Result<String> {
-    let len = read_u32(r)? as usize;
-    // Same corruption invariant as read_f32s: a garbage length field must
-    // fail cleanly, not allocate gigabytes. No tensor/group name comes
-    // anywhere near this bound.
-    anyhow::ensure!(len <= 4096, "checkpoint string of {len} bytes is implausible");
-    let mut buf = vec![0u8; len];
-    r.read_exact(&mut buf)?;
-    String::from_utf8(buf).context("checkpoint string not utf8")
-}
-
-/// Read a length-prefixed f32 tensor, refusing lengths above `max_numel`
-/// *before* allocating — a corrupted length field must produce a clean
-/// error, not a multi-gigabyte allocation (same invariant the ETCK loader
-/// enforces by checking numel against the manifest first).
-fn read_f32s(r: &mut impl Read, max_numel: usize) -> Result<Vec<f32>> {
-    let numel = read_u64(r)? as usize;
-    anyhow::ensure!(
-        numel <= max_numel,
-        "checkpoint tensor of {numel} scalars exceeds the plausible bound {max_numel}"
-    );
-    let mut data = vec![0.0f32; numel];
-    let bytes: &mut [u8] =
-        unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4) };
-    r.read_exact(bytes)?;
-    Ok(data)
-}
+// The length-prefixed primitives live in `util::codec`, shared with the
+// streaming state export and the shard-transport wire format so all three
+// encodings stay byte-compatible.
 
 /// Save a host-optimizer checkpoint: parameters (one flat vector per
-/// `groups` entry, in order) plus the optimizer-state snapshot. Atomic
-/// (tmp + rename), like [`save`].
+/// `groups` entry, in order) plus the optimizer-state snapshot, written as
+/// the chunk-framed ETSS stream. Atomic (tmp + rename), like [`save`].
 pub fn save_host(
     groups: &[GroupSpec],
     params: &[Vec<f32>],
@@ -228,8 +181,6 @@ pub fn save_host(
         w.write_all(HOST_MAGIC)?;
         w.write_all(&HOST_VERSION.to_le_bytes())?;
         w.write_all(&step.to_le_bytes())?;
-        write_str(&mut w, &state.kind.name())?;
-        w.write_all(&state.step.to_le_bytes())?;
         w.write_all(&(groups.len() as u32).to_le_bytes())?;
         for (g, p) in groups.iter().zip(params) {
             anyhow::ensure!(
@@ -242,20 +193,7 @@ pub fn save_host(
             write_str(&mut w, &g.name)?;
             write_f32s(&mut w, p)?;
         }
-        w.write_all(&(state.groups.len() as u32).to_le_bytes())?;
-        for ge in &state.groups {
-            write_str(&mut w, &ge.name)?;
-            w.write_all(&ge.steps.to_le_bytes())?;
-            w.write_all(&(ge.wide.len() as u32).to_le_bytes())?;
-            for &x in &ge.wide {
-                w.write_all(&x.to_le_bytes())?;
-            }
-            w.write_all(&(ge.bufs.len() as u32).to_le_bytes())?;
-            for (name, data) in &ge.bufs {
-                write_str(&mut w, name)?;
-                write_f32s(&mut w, data)?;
-            }
-        }
+        write_export_stream(&mut w, state, STREAM_CHUNK_NUMEL)?;
         w.flush()?;
     }
     std::fs::rename(&tmp, path)?; // atomic replace
@@ -283,10 +221,6 @@ pub fn load_host(
         bail!("unsupported host checkpoint version {version}");
     }
     let step = read_u64(&mut r)?;
-    let kind_name = read_str(&mut r)?;
-    let kind = OptimizerKind::parse(&kind_name)
-        .with_context(|| format!("unknown optimizer kind '{kind_name}' in checkpoint"))?;
-    let opt_step = read_u64(&mut r)?;
 
     let n_params = read_u32(&mut r)? as usize;
     if n_params != groups.len() {
@@ -309,43 +243,27 @@ pub fn load_host(
         params.push(data);
     }
 
-    // Every state layout has exactly one state group per parameter group,
-    // and no single buffer exceeds 2x the group's numel (Adam/Adadelta hold
-    // two d-sized buffers; ET mode vectors and Adafactor factors are all
-    // <= d). Bound the reads accordingly so corrupted counts fail cleanly.
-    let n_state = read_u32(&mut r)? as usize;
-    if n_state != groups.len() {
-        bail!("host checkpoint has {n_state} state groups, expected {}", groups.len());
+    // The state section is the checksum-verified ETSS stream. Every state
+    // layout has exactly one state group per parameter group, and no single
+    // buffer exceeds 2x the group's numel (Adam/Adadelta hold two d-sized
+    // buffers; ET mode vectors and Adafactor factors are all <= d) — bound
+    // the stream reads accordingly so corrupted counts fail cleanly.
+    let max_buf = 2 * groups.iter().map(|g| g.numel()).max().unwrap_or(0);
+    let state = read_export_stream(&mut r, max_buf)
+        .context("host checkpoint optimizer-state stream")?;
+    if state.groups.len() != groups.len() {
+        bail!(
+            "host checkpoint has {} state groups, expected {}",
+            state.groups.len(),
+            groups.len()
+        );
     }
-    let mut state_groups = Vec::with_capacity(n_state);
-    for g in groups {
-        let name = read_str(&mut r)?;
-        if name != g.name {
-            bail!("host checkpoint state group '{name}', expected '{}'", g.name);
+    for (ge, g) in state.groups.iter().zip(groups) {
+        if ge.name != g.name {
+            bail!("host checkpoint state group '{}', expected '{}'", ge.name, g.name);
         }
-        let steps = read_u64(&mut r)?;
-        let n_wide = read_u32(&mut r)? as usize;
-        if n_wide > 16 {
-            bail!("host checkpoint state group '{name}': implausible {n_wide} wide scalars");
-        }
-        let mut wide = Vec::with_capacity(n_wide);
-        for _ in 0..n_wide {
-            let mut b = [0u8; 8];
-            r.read_exact(&mut b)?;
-            wide.push(f64::from_le_bytes(b));
-        }
-        let n_bufs = read_u32(&mut r)? as usize;
-        if n_bufs > g.numel().max(16) {
-            bail!("host checkpoint state group '{name}': implausible {n_bufs} buffers");
-        }
-        let mut bufs = Vec::with_capacity(n_bufs);
-        for _ in 0..n_bufs {
-            let bname = read_str(&mut r)?;
-            bufs.push((bname, read_f32s(&mut r, 2 * g.numel())?));
-        }
-        state_groups.push(GroupExport { name, steps, wide, bufs });
     }
-    Ok((params, StateExport { kind, step: opt_step, groups: state_groups }, step))
+    Ok((params, state, step))
 }
 
 #[cfg(test)]
@@ -374,6 +292,7 @@ mod tests {
     #[test]
     fn host_checkpoint_roundtrips_exactly() {
         use crate::optim::{self, Hyper, Optimizer};
+        use crate::tensoring::OptimizerKind;
         let dir = std::env::temp_dir().join(format!("ethc-{}", std::process::id()));
         let path = dir.join("host.hck");
         let gs = vec![GroupSpec::new("w", &[4, 4]), GroupSpec::new("b", &[4])];

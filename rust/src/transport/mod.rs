@@ -1,0 +1,211 @@
+//! The shard transport layer: how the sharded optimizer executor talks to
+//! its workers.
+//!
+//! PR 1's sharded engine hard-wired workers to `std::thread`s behind an
+//! in-process channel. This module abstracts that protocol behind two
+//! traits so "a shard" no longer implies "a thread in this process":
+//!
+//! * [`ShardConnection`] — one live worker: pipelined step dispatch with an
+//!   explicit ack barrier, a fire-and-forget step-counter advance, state
+//!   scalars, and snapshot export/import;
+//! * [`ShardTransport`] — the factory that turns a [`WorkerSpec`] into a
+//!   connection, one per shard.
+//!
+//! Two implementations ship:
+//!
+//! * [`InProcess`] ([`proto`]) — the refactored PR-1 protocol: a persistent
+//!   thread per shard behind bounded `sync_channel`s, handing raw slice
+//!   pointers ([`GroupTask`]) to the worker. Zero-copy and bitwise-
+//!   identical to the pre-refactor engine (`rust/tests/sharded_parity.rs`
+//!   passes unchanged).
+//! * [`SocketTransport`] ([`socket`]) — out-of-process workers over UNIX
+//!   domain sockets, spawned as `ettrain shard-worker` child processes.
+//!   The wire format ([`wire`]) is length-prefixed little-endian frames
+//!   reusing the `util::codec` primitives, and snapshots travel as the
+//!   same chunk-framed ETSS stream (`optim::stream`) that ETHC checkpoints
+//!   embed. Per-request read timeouts, connect retry with backoff, and
+//!   typed [`TransportError`]s make worker death (socket EOF / process
+//!   kill) a recoverable condition — see
+//!   `ShardedOptimizer::{take_snapshot, recover}`.
+//!
+//! The determinism contract carries over unchanged from the in-process
+//! engine: each group is updated by exactly one worker with single-threaded
+//! arithmetic, and fan-in is a pure ack barrier, so results are bitwise
+//! identical across transports and shard counts.
+
+pub mod proto;
+pub mod socket;
+pub mod wire;
+
+pub use proto::{GroupTask, InProcess, WorkerSpec};
+pub use socket::{run_socket_worker, SocketTransport};
+
+use crate::optim::StateExport;
+use anyhow::{bail, Result as AnyResult};
+
+/// Which transport a job should run its shard workers over. The spec-level
+/// spelling of the [`ShardTransport`] choice: TOML-able, cheap to compare,
+/// and resolved to an actual transport only at execution time (the socket
+/// transport needs a scratch directory and a worker binary path).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Worker threads in this process (the default; zero-copy).
+    #[default]
+    InProcess,
+    /// `ettrain shard-worker` child processes over UNIX sockets.
+    Socket,
+}
+
+impl TransportKind {
+    /// Canonical spelling, matching [`ShardTransport::name`].
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "inproc",
+            TransportKind::Socket => "socket",
+        }
+    }
+
+    /// Parse a config spelling (accepts a few aliases).
+    pub fn parse(s: &str) -> AnyResult<TransportKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "inproc" | "in-process" | "inprocess" | "thread" => Ok(TransportKind::InProcess),
+            "socket" | "unix" | "uds" => Ok(TransportKind::Socket),
+            other => bail!("unknown transport '{other}' (inproc|socket)"),
+        }
+    }
+}
+
+/// What went wrong talking to a shard worker. `Worker` is an
+/// application-level failure reported *by* a healthy worker (a failing
+/// update rule, a rejected import); everything else means the transport
+/// itself broke.
+#[derive(Debug)]
+pub enum TransportError {
+    /// An I/O error on the underlying channel.
+    Io { shard: usize, context: &'static str, source: std::io::Error },
+    /// The worker is gone: thread exited, socket EOF, process dead.
+    Disconnected { shard: usize, context: &'static str },
+    /// A reply did not arrive within the transport's read timeout.
+    Timeout { shard: usize, context: &'static str },
+    /// The worker answered, but with a frame the protocol does not allow
+    /// here.
+    Protocol { shard: usize, message: String },
+    /// The worker reports an application-level failure.
+    Worker { shard: usize, message: String },
+}
+
+impl TransportError {
+    pub fn shard(&self) -> usize {
+        match self {
+            TransportError::Io { shard, .. }
+            | TransportError::Disconnected { shard, .. }
+            | TransportError::Timeout { shard, .. }
+            | TransportError::Protocol { shard, .. }
+            | TransportError::Worker { shard, .. } => *shard,
+        }
+    }
+
+    /// Whether the connection is unusable after this error (as opposed to a
+    /// clean worker-side failure report on a healthy channel).
+    pub fn is_fatal(&self) -> bool {
+        !matches!(self, TransportError::Worker { .. })
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Io { shard, context, source } => {
+                write!(f, "shard {shard}: i/o error during {context}: {source}")
+            }
+            TransportError::Disconnected { shard, context } => {
+                write!(f, "shard {shard}: worker disconnected during {context}")
+            }
+            TransportError::Timeout { shard, context } => {
+                write!(f, "shard {shard}: worker timed out during {context}")
+            }
+            TransportError::Protocol { shard, message } => {
+                write!(f, "shard {shard}: protocol violation: {message}")
+            }
+            TransportError::Worker { shard, message } => {
+                write!(f, "shard {shard}: worker failure: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// One live shard worker. Step dispatch is pipelined: any number of
+/// [`ShardConnection::send_step`]s (bounded by the connection's queue
+/// capacity) may be in flight before the matching
+/// [`ShardConnection::recv_step_ack`]s are drained, and the executor MUST
+/// drain one ack per send before releasing the parameter/gradient borrows
+/// behind the dispatched [`GroupTask`]s — that barrier is the safety
+/// contract that makes raw-pointer tasks sound on every transport.
+pub trait ShardConnection: Send {
+    /// Dispatch one bucket of group updates at learning rate `lr`.
+    fn send_step(&mut self, lr: f32, tasks: Vec<GroupTask>) -> Result<(), TransportError>;
+
+    /// Receive one step ack (FIFO with respect to `send_step`s).
+    fn recv_step_ack(&mut self) -> Result<(), TransportError>;
+
+    /// Advance the worker optimizer's shared step counter. Ordered before
+    /// subsequent steps; never acked.
+    fn next_step(&mut self) -> Result<(), TransportError>;
+
+    /// The worker's allocated state footprint `(scalars, bytes)`. Also the
+    /// startup readiness check: the first call proves the worker built its
+    /// optimizer.
+    fn state_scalars(&mut self) -> Result<(usize, usize), TransportError>;
+
+    /// Snapshot the shard-local optimizer state (worker-local group order).
+    fn export_state(&mut self) -> Result<StateExport, TransportError>;
+
+    /// Replace the shard-local optimizer state.
+    fn import_state(&mut self, state: StateExport) -> Result<(), TransportError>;
+
+    /// Whether the worker is still believed reachable. Cheap; used by crash
+    /// recovery to pick the surviving worker set.
+    fn is_alive(&self) -> bool;
+
+    /// Graceful shutdown (also attempted on drop).
+    fn shutdown(&mut self) -> Result<(), TransportError>;
+}
+
+/// A way of launching shard workers. `queue_cap` bounds the number of
+/// unacked in-flight requests the connection must tolerate (the executor
+/// passes its per-shard bucket count plus slack).
+pub trait ShardTransport: Send + Sync {
+    fn connect(
+        &self,
+        shard: usize,
+        spec: WorkerSpec,
+        queue_cap: usize,
+    ) -> Result<Box<dyn ShardConnection>, TransportError>;
+
+    /// Short label for executor names and logs (`"inproc"`, `"socket"`).
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_round_trips_and_rejects_junk() {
+        for k in [TransportKind::InProcess, TransportKind::Socket] {
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(TransportKind::parse("unix").unwrap(), TransportKind::Socket);
+        assert_eq!(TransportKind::default(), TransportKind::InProcess);
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+    }
+}

@@ -1,42 +1,46 @@
-//! The shard worker: a persistent thread owning one shard's optimizer
-//! state.
+//! The worker protocol and the in-process transport.
 //!
-//! Each worker builds a concrete [`crate::optim::StateOptimizer`] over
-//! exactly the groups its shard owns, from an owned [`WorkerSpec`] — the
-//! uniform suite optimizer or a `budget::StatePlan` slice — so *all* of a
-//! group's optimizer
-//! state (slice accumulators, moments, ...) lives on one thread, with no
-//! `Box<dyn Optimizer>` indirection in front of the update rule — and the
-//! per-step scratch arena (`optim::StepScratch`) lives with it, so each
-//! shard's steady-state ET steps are allocation-free with zero cross-shard
-//! contention (the arena warms up per worker, over that worker's groups
-//! only). State no longer has to die with the thread:
-//! [`Request::ExportState`] snapshots the shard-local [`StateExport`] and
-//! [`Request::ImportState`] restores one, which is what the executor's
-//! checkpoint fan-out/fan-in is built from. Requests arrive over a bounded
-//! channel; every [`Request::Step`] is acknowledged on the reply channel,
-//! which is what lets the executor hand workers raw slice pointers safely
-//! (see the safety contract on [`GroupTask`]).
+//! This is PR 1's shard worker, refactored out of `shard::worker` behind
+//! the [`ShardTransport`]/[`ShardConnection`] traits. Each worker builds a
+//! concrete [`crate::optim::StateOptimizer`] over exactly the groups its
+//! shard owns, from an owned [`WorkerSpec`] — the uniform suite optimizer
+//! or a `budget::StatePlan` slice — so *all* of a group's optimizer state
+//! lives with one worker, with no `Box<dyn Optimizer>` indirection in
+//! front of the update rule, and the per-step scratch arena
+//! (`optim::StepScratch`) lives with it: each shard's steady-state ET
+//! steps are allocation-free with zero cross-shard contention.
+//!
+//! [`InProcess`] is the channel transport: a persistent thread per shard,
+//! requests over a bounded `sync_channel`, every [`Request::Step`]
+//! acknowledged on the reply channel — which is what lets the executor
+//! hand workers raw slice pointers safely (see the safety contract on
+//! [`GroupTask`]). The socket transport (`super::socket`) reuses
+//! [`WorkerSpec`] and the same request/ack shapes over a wire format
+//! instead of a channel.
 
+use super::{ShardConnection, ShardTransport, TransportError};
 use crate::budget::StatePlan;
 use crate::optim::{GroupSpec, Hyper, Optimizer, StateExport, StateOptimizer};
 use crate::tensoring::OptimizerKind;
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
 
-/// What a worker thread builds its shard-local optimizer from. Owned data
-/// (no borrows), so construction happens *on the worker thread* — N shards
-/// allocate their state concurrently and with first-touch locality, as the
-/// pre-planner engine did. Planned specs are validated by the executor
-/// (`budget::validate_plan`) before any thread spawns, so a worker-side
-/// build failure is a bug, not a user error; it is logged and the worker
-/// exits, which the executor's startup reduction reports as a failed shard.
-pub(crate) enum WorkerSpec {
+/// What a worker builds its shard-local optimizer from. Owned data (no
+/// borrows), so construction happens *on the worker* — N shards allocate
+/// their state concurrently and with first-touch locality in-process, and
+/// an out-of-process worker can receive the whole spec over the wire
+/// (`super::wire::write_worker_spec`). Planned specs are validated by the
+/// executor (`budget::validate_plan`) before any worker launches, so a
+/// worker-side build failure is a bug, not a user error; it is logged and
+/// the worker exits, which the executor's startup reduction reports as a
+/// failed shard.
+pub enum WorkerSpec {
     Uniform { kind: OptimizerKind, groups: Vec<GroupSpec>, hyper: Hyper },
     Planned { groups: Vec<GroupSpec>, plan: StatePlan, hyper: Hyper },
 }
 
 impl WorkerSpec {
-    fn build(self) -> anyhow::Result<StateOptimizer> {
+    pub(crate) fn build(self) -> anyhow::Result<StateOptimizer> {
         match self {
             WorkerSpec::Uniform { kind, groups, hyper } => {
                 Ok(crate::optim::build_state(kind, &groups, &hyper))
@@ -45,6 +49,19 @@ impl WorkerSpec {
                 crate::budget::build_planned(&groups, &plan, &hyper)
             }
         }
+    }
+
+    /// The groups this worker owns, in worker-local order.
+    pub fn groups(&self) -> &[GroupSpec] {
+        match self {
+            WorkerSpec::Uniform { groups, .. } | WorkerSpec::Planned { groups, .. } => groups,
+        }
+    }
+
+    /// Largest single group (the plausibility bound for wire-side buffer
+    /// reads: no state buffer exceeds 2x its group's numel).
+    pub fn max_group_numel(&self) -> usize {
+        self.groups().iter().map(|g| g.numel()).max().unwrap_or(0)
     }
 }
 
@@ -58,8 +75,10 @@ impl WorkerSpec {
 /// in-flight tasks, and (3) block until the worker acknowledges the step
 /// before letting the underlying borrows end. `ShardedOptimizer::step_all`
 /// upholds all three: groups are partitioned disjointly and the call does
-/// not return until every dispatched bucket is acked.
-pub(crate) struct GroupTask {
+/// not return until every dispatched bucket is acked. The socket transport
+/// additionally relies on the same window to *read* `x`/`g` at dispatch
+/// time and write the updated `x` back at ack time.
+pub struct GroupTask {
     /// Index into the *worker-local* optimizer's group list.
     pub local_gi: usize,
     pub x: *mut f32,
@@ -158,7 +177,7 @@ pub(crate) fn run_worker(
                 let outcome = opt
                     .import(&export)
                     .map_err(|e| format!("shard {shard}: state import: {e:#}"));
-                if replies.send(Reply::ImportDone(outcome)).is_err() {
+                if replies.send(reply_import(outcome)).is_err() {
                     return;
                 }
             }
@@ -167,10 +186,144 @@ pub(crate) fn run_worker(
     }
 }
 
+fn reply_import(outcome: Result<(), String>) -> Reply {
+    Reply::ImportDone(outcome)
+}
+
+// ---------------------------------------------------------------------------
+// The in-process transport
+// ---------------------------------------------------------------------------
+
+/// The channel transport: each `connect` spawns a persistent worker thread
+/// (`et-shard-{s}`) wired up with bounded request/reply channels. This is
+/// byte-for-byte the PR-1 execution path — raw-pointer tasks, zero copies,
+/// in-place parameter writes on the worker thread.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InProcess;
+
+impl ShardTransport for InProcess {
+    fn connect(
+        &self,
+        shard: usize,
+        spec: WorkerSpec,
+        queue_cap: usize,
+    ) -> Result<Box<dyn ShardConnection>, TransportError> {
+        let (req_tx, req_rx) = sync_channel::<Request>(queue_cap.max(1));
+        let (rep_tx, rep_rx) = sync_channel::<Reply>(queue_cap.max(1));
+        let handle = std::thread::Builder::new()
+            .name(format!("et-shard-{shard}"))
+            .spawn(move || run_worker(shard, spec, req_rx, rep_tx))
+            .map_err(|e| TransportError::Io { shard, context: "thread spawn", source: e })?;
+        Ok(Box::new(InProcConnection {
+            shard,
+            requests: req_tx,
+            replies: rep_rx,
+            handle: Some(handle),
+        }))
+    }
+
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+}
+
+/// Parent-side handle to one in-process worker thread.
+pub struct InProcConnection {
+    shard: usize,
+    requests: SyncSender<Request>,
+    replies: Receiver<Reply>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl InProcConnection {
+    fn gone(&self, context: &'static str) -> TransportError {
+        TransportError::Disconnected { shard: self.shard, context }
+    }
+
+    fn unexpected(&self, context: &'static str) -> TransportError {
+        TransportError::Protocol {
+            shard: self.shard,
+            message: format!("unexpected reply to {context}"),
+        }
+    }
+}
+
+impl ShardConnection for InProcConnection {
+    fn send_step(&mut self, lr: f32, tasks: Vec<GroupTask>) -> Result<(), TransportError> {
+        self.requests
+            .send(Request::Step { lr, tasks })
+            .map_err(|_| self.gone("step dispatch"))
+    }
+
+    fn recv_step_ack(&mut self) -> Result<(), TransportError> {
+        match self.replies.recv() {
+            Ok(Reply::StepDone(Ok(()))) => Ok(()),
+            Ok(Reply::StepDone(Err(message))) => {
+                Err(TransportError::Worker { shard: self.shard, message })
+            }
+            Ok(_) => Err(self.unexpected("step")),
+            Err(_) => Err(self.gone("step ack")),
+        }
+    }
+
+    fn next_step(&mut self) -> Result<(), TransportError> {
+        self.requests.send(Request::NextStep).map_err(|_| self.gone("next_step"))
+    }
+
+    fn state_scalars(&mut self) -> Result<(usize, usize), TransportError> {
+        self.requests.send(Request::StateScalars).map_err(|_| self.gone("state query"))?;
+        match self.replies.recv() {
+            Ok(Reply::StateScalars { scalars, bytes }) => Ok((scalars, bytes)),
+            Ok(_) => Err(self.unexpected("state query")),
+            Err(_) => Err(self.gone("state query")),
+        }
+    }
+
+    fn export_state(&mut self) -> Result<StateExport, TransportError> {
+        self.requests.send(Request::ExportState).map_err(|_| self.gone("state export"))?;
+        match self.replies.recv() {
+            Ok(Reply::State(e)) => Ok(*e),
+            Ok(_) => Err(self.unexpected("state export")),
+            Err(_) => Err(self.gone("state export")),
+        }
+    }
+
+    fn import_state(&mut self, state: StateExport) -> Result<(), TransportError> {
+        self.requests
+            .send(Request::ImportState(Box::new(state)))
+            .map_err(|_| self.gone("state import"))?;
+        match self.replies.recv() {
+            Ok(Reply::ImportDone(Ok(()))) => Ok(()),
+            Ok(Reply::ImportDone(Err(message))) => {
+                Err(TransportError::Worker { shard: self.shard, message })
+            }
+            Ok(_) => Err(self.unexpected("state import")),
+            Err(_) => Err(self.gone("state import")),
+        }
+    }
+
+    fn is_alive(&self) -> bool {
+        self.handle.as_ref().is_some_and(|h| !h.is_finished())
+    }
+
+    fn shutdown(&mut self) -> Result<(), TransportError> {
+        let _ = self.requests.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for InProcConnection {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::sync_channel;
 
     /// Drive one worker directly: its update must match the same optimizer
     /// run inline, and the ack must arrive after the write.
@@ -289,5 +442,45 @@ mod tests {
         }
         drop(req_tx); // disconnect also terminates the loop
         handle.join().unwrap();
+    }
+
+    /// The trait surface over the same worker: connect, step, ack, export,
+    /// import, shutdown — with a dead-thread `Disconnected` at the end.
+    #[test]
+    fn inproc_connection_round_trip() {
+        let groups = vec![GroupSpec::new("a", &[4])];
+        let spec = WorkerSpec::Uniform {
+            kind: OptimizerKind::AdaGrad,
+            groups: groups.clone(),
+            hyper: Hyper::default(),
+        };
+        let mut conn = InProcess.connect(0, spec, 4).unwrap();
+        assert!(conn.is_alive());
+        let (scalars, bytes) = conn.state_scalars().unwrap();
+        assert_eq!((scalars, bytes), (4, 16));
+
+        let mut x = vec![1.0f32; 4];
+        let g = vec![0.5f32; 4];
+        conn.next_step().unwrap();
+        conn.send_step(
+            0.1,
+            vec![GroupTask {
+                local_gi: 0,
+                x: x.as_mut_ptr(),
+                x_len: x.len(),
+                g: g.as_ptr(),
+                g_len: g.len(),
+            }],
+        )
+        .unwrap();
+        conn.recv_step_ack().unwrap();
+        let export = conn.export_state().unwrap();
+        conn.import_state(export).unwrap();
+        conn.shutdown().unwrap();
+        assert!(!conn.is_alive());
+        assert!(matches!(
+            conn.state_scalars(),
+            Err(TransportError::Disconnected { .. })
+        ));
     }
 }

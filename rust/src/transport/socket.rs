@@ -1,0 +1,821 @@
+//! Out-of-process shard workers over UNIX domain sockets.
+//!
+//! The parent binds one listener per shard at `<dir>/shard-<s>.sock`,
+//! spawns `ettrain shard-worker --connect <path> --shard <s>` as a child
+//! process, and speaks the [`wire`](super::wire) protocol over the
+//! accepted stream: strictly serial request → reply frames, one
+//! outstanding request per connection.
+//!
+//! The executor's step path is pipelined (many `send_step`s before the
+//! acks are drained), so each connection runs a **proxy thread** that owns
+//! the stream: `send_step` enqueues a job and returns, the proxy
+//! serializes jobs onto the wire one at a time, and `recv_step_ack`
+//! drains the proxy's ack channel. The proxy reads the parameter and
+//! gradient slices behind each [`GroupTask`]'s raw pointers at
+//! job-processing time and writes the worker's updated parameters back at
+//! reply time — both inside the executor's ack barrier, so the borrows
+//! are still live (see the `GroupTask` safety contract).
+//!
+//! Failure handling: reads carry a per-request timeout
+//! ([`TransportError::Timeout`]), EOF / broken pipe classify as
+//! [`TransportError::Disconnected`], and any fatal transport error makes
+//! the proxy drop all queued jobs unprocessed and exit — queued raw
+//! pointers are never dereferenced after an error, and the closed ack
+//! channel surfaces `Disconnected` to the executor. A step error
+//! *reported by the worker* (`OP_STEP_ERR`) is non-fatal, exactly like
+//! the in-process transport; on a failed snapshot import the worker exits
+//! instead, because a half-applied stream leaves its state unusable.
+//!
+//! Snapshots cross the wire as the same chunk-framed ETSS stream that
+//! ETHC checkpoints embed: exports are produced with
+//! [`write_state_stream`] straight from live optimizer state, so the
+//! worker's peak extra memory during an export is one chunk, not a full
+//! dense copy of its shard state.
+
+use super::wire::{
+    read_op, read_worker_spec, write_msg, write_op, write_worker_spec, OP_EXPORT,
+    OP_EXPORT_REPLY, OP_IMPORT, OP_IMPORT_ERR, OP_IMPORT_OK, OP_NEXT, OP_SCALARS,
+    OP_SCALARS_REPLY, OP_SHUTDOWN, OP_SPEC, OP_STEP, OP_STEP_ERR, OP_STEP_OK,
+};
+use super::{GroupTask, ShardConnection, ShardTransport, TransportError, WorkerSpec};
+use crate::optim::stream::{import_stream, read_export_stream, write_export_stream,
+    write_state_stream, STREAM_CHUNK_NUMEL};
+use crate::optim::{Optimizer, StateExport};
+use crate::util::codec::{read_f32s, read_str, read_u32, read_u64, write_f32, write_f32s,
+    write_u32, write_u64};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Upper bound on tasks per step frame (far above any real bucket count).
+const MAX_STEP_TASKS: u32 = 1 << 20;
+
+/// Spawns `ettrain shard-worker` child processes and talks to them over
+/// UNIX sockets in `dir`.
+pub struct SocketTransport {
+    dir: PathBuf,
+    worker_bin: PathBuf,
+    read_timeout: Duration,
+    connect_timeout: Duration,
+    /// PIDs of every worker this transport spawned, in spawn order.
+    /// Exposed for tests that kill workers to exercise crash recovery.
+    pids: Arc<Mutex<Vec<u32>>>,
+}
+
+impl SocketTransport {
+    pub fn new(dir: impl Into<PathBuf>, worker_bin: impl Into<PathBuf>) -> SocketTransport {
+        SocketTransport {
+            dir: dir.into(),
+            worker_bin: worker_bin.into(),
+            read_timeout: Duration::from_secs(60),
+            connect_timeout: Duration::from_secs(10),
+            pids: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    pub fn with_timeouts(mut self, read: Duration, connect: Duration) -> SocketTransport {
+        self.read_timeout = read;
+        self.connect_timeout = connect;
+        self
+    }
+
+    /// Every worker PID this transport has spawned (including exited ones).
+    pub fn spawned_pids(&self) -> Vec<u32> {
+        self.pids.lock().unwrap().clone()
+    }
+
+    /// Accept with a deadline: `UnixListener` has no native accept timeout,
+    /// so poll in non-blocking mode.
+    fn accept_deadline(&self, listener: &UnixListener, shard: usize)
+        -> Result<UnixStream, TransportError>
+    {
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| TransportError::Io { shard, context: "listener setup", source: e })?;
+        let deadline = Instant::now() + self.connect_timeout;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).map_err(|e| TransportError::Io {
+                        shard,
+                        context: "accept",
+                        source: e,
+                    })?;
+                    return Ok(stream);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Timeout { shard, context: "worker connect" });
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    return Err(TransportError::Io { shard, context: "accept", source: e })
+                }
+            }
+        }
+    }
+}
+
+impl ShardTransport for SocketTransport {
+    fn connect(
+        &self,
+        shard: usize,
+        spec: WorkerSpec,
+        queue_cap: usize,
+    ) -> Result<Box<dyn ShardConnection>, TransportError> {
+        let io_err = |context: &'static str| {
+            move |e: std::io::Error| TransportError::Io { shard, context, source: e }
+        };
+        std::fs::create_dir_all(&self.dir).map_err(io_err("socket dir"))?;
+        let sock = self.dir.join(format!("shard-{shard}.sock"));
+        if sock.exists() {
+            std::fs::remove_file(&sock).map_err(io_err("stale socket removal"))?;
+        }
+        let listener = UnixListener::bind(&sock).map_err(io_err("bind"))?;
+        let child = Command::new(&self.worker_bin)
+            .arg("shard-worker")
+            .arg("--connect")
+            .arg(&sock)
+            .arg("--shard")
+            .arg(shard.to_string())
+            .stdin(Stdio::null())
+            .spawn()
+            .map_err(io_err("worker spawn"))?;
+        self.pids.lock().unwrap().push(child.id());
+
+        let stream = self.accept_deadline(&listener, shard)?;
+        stream.set_read_timeout(Some(self.read_timeout)).map_err(io_err("read timeout"))?;
+
+        // Ship the spec before handing the stream to the proxy; the
+        // executor's first state query doubles as the readiness check.
+        let reader = stream.try_clone().map_err(io_err("stream clone"))?;
+        let mut w = BufWriter::new(stream);
+        let max_buf_numel = 2 * spec.max_group_numel();
+        (|| -> Result<()> {
+            write_op(&mut w, OP_SPEC)?;
+            write_worker_spec(&mut w, &spec)?;
+            w.flush()?;
+            Ok(())
+        })()
+        .map_err(|e| classify(shard, "spec send", e))?;
+
+        Ok(Box::new(SocketConnection::launch(
+            shard,
+            BufReader::new(reader),
+            w,
+            child,
+            max_buf_numel,
+            queue_cap,
+        )))
+    }
+
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+}
+
+/// Classify an `anyhow` failure from the codec/wire layer into a typed
+/// transport error by walking the chain for the root `io::Error`.
+fn classify(shard: usize, context: &'static str, e: anyhow::Error) -> TransportError {
+    for cause in e.chain() {
+        if let Some(ioe) = cause.downcast_ref::<std::io::Error>() {
+            return match ioe.kind() {
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                    TransportError::Timeout { shard, context }
+                }
+                std::io::ErrorKind::UnexpectedEof
+                | std::io::ErrorKind::BrokenPipe
+                | std::io::ErrorKind::ConnectionReset => {
+                    TransportError::Disconnected { shard, context }
+                }
+                kind => TransportError::Io {
+                    shard,
+                    context,
+                    source: std::io::Error::new(kind, cause.to_string()),
+                },
+            };
+        }
+    }
+    TransportError::Protocol { shard, message: format!("{context}: {e:#}") }
+}
+
+enum ProxyJob {
+    Step { lr: f32, tasks: Vec<GroupTask> },
+    Next,
+    Scalars,
+    Export,
+    Import(Box<StateExport>),
+    Shutdown,
+}
+
+enum ProxyReply {
+    StepDone,
+    Scalars { scalars: usize, bytes: usize },
+    State(Box<StateExport>),
+    ImportDone,
+}
+
+type ProxyAck = Result<ProxyReply, TransportError>;
+
+/// Parent-side handle to one worker process.
+pub struct SocketConnection {
+    shard: usize,
+    jobs: SyncSender<ProxyJob>,
+    acks: Receiver<ProxyAck>,
+    alive: Arc<AtomicBool>,
+    proxy: Option<JoinHandle<()>>,
+    child: Option<Child>,
+}
+
+impl SocketConnection {
+    fn launch(
+        shard: usize,
+        reader: BufReader<UnixStream>,
+        writer: BufWriter<UnixStream>,
+        child: Child,
+        max_buf_numel: usize,
+        queue_cap: usize,
+    ) -> SocketConnection {
+        let (job_tx, job_rx) = sync_channel::<ProxyJob>(queue_cap.max(1));
+        let (ack_tx, ack_rx) = sync_channel::<ProxyAck>(queue_cap.max(1));
+        let alive = Arc::new(AtomicBool::new(true));
+        let alive_proxy = Arc::clone(&alive);
+        let proxy = std::thread::Builder::new()
+            .name(format!("et-sock-{shard}"))
+            .spawn(move || {
+                run_proxy(shard, reader, writer, max_buf_numel, job_rx, ack_tx, alive_proxy)
+            })
+            .expect("spawn proxy thread");
+        SocketConnection {
+            shard,
+            jobs: job_tx,
+            acks: ack_rx,
+            alive,
+            proxy: Some(proxy),
+            child: Some(child),
+        }
+    }
+
+    fn gone(&self, context: &'static str) -> TransportError {
+        TransportError::Disconnected { shard: self.shard, context }
+    }
+
+    fn unexpected(&self, context: &'static str) -> TransportError {
+        TransportError::Protocol {
+            shard: self.shard,
+            message: format!("unexpected reply to {context}"),
+        }
+    }
+}
+
+impl ShardConnection for SocketConnection {
+    fn send_step(&mut self, lr: f32, tasks: Vec<GroupTask>) -> Result<(), TransportError> {
+        self.jobs
+            .send(ProxyJob::Step { lr, tasks })
+            .map_err(|_| self.gone("step dispatch"))
+    }
+
+    fn recv_step_ack(&mut self) -> Result<(), TransportError> {
+        match self.acks.recv() {
+            Ok(Ok(ProxyReply::StepDone)) => Ok(()),
+            Ok(Ok(_)) => Err(self.unexpected("step")),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(self.gone("step ack")),
+        }
+    }
+
+    fn next_step(&mut self) -> Result<(), TransportError> {
+        self.jobs.send(ProxyJob::Next).map_err(|_| self.gone("next_step"))
+    }
+
+    fn state_scalars(&mut self) -> Result<(usize, usize), TransportError> {
+        self.jobs.send(ProxyJob::Scalars).map_err(|_| self.gone("state query"))?;
+        match self.acks.recv() {
+            Ok(Ok(ProxyReply::Scalars { scalars, bytes })) => Ok((scalars, bytes)),
+            Ok(Ok(_)) => Err(self.unexpected("state query")),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(self.gone("state query")),
+        }
+    }
+
+    fn export_state(&mut self) -> Result<StateExport, TransportError> {
+        self.jobs.send(ProxyJob::Export).map_err(|_| self.gone("state export"))?;
+        match self.acks.recv() {
+            Ok(Ok(ProxyReply::State(e))) => Ok(*e),
+            Ok(Ok(_)) => Err(self.unexpected("state export")),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(self.gone("state export")),
+        }
+    }
+
+    fn import_state(&mut self, state: StateExport) -> Result<(), TransportError> {
+        self.jobs
+            .send(ProxyJob::Import(Box::new(state)))
+            .map_err(|_| self.gone("state import"))?;
+        match self.acks.recv() {
+            Ok(Ok(ProxyReply::ImportDone)) => Ok(()),
+            Ok(Ok(_)) => Err(self.unexpected("state import")),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(self.gone("state import")),
+        }
+    }
+
+    fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    fn shutdown(&mut self) -> Result<(), TransportError> {
+        let clean = self.alive.load(Ordering::SeqCst);
+        let _ = self.jobs.send(ProxyJob::Shutdown);
+        if let Some(h) = self.proxy.take() {
+            let _ = h.join();
+        }
+        self.alive.store(false, Ordering::SeqCst);
+        if let Some(mut c) = self.child.take() {
+            if !clean {
+                // The transport already broke; don't wait on a wedged child.
+                let _ = c.kill();
+            }
+            let _ = c.wait();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SocketConnection {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+/// The connection's I/O thread: strictly serial request → reply. On a
+/// fatal transport error it reports the error, drops every queued job
+/// unprocessed (so queued `GroupTask` pointers are never dereferenced),
+/// and exits, closing both stream halves.
+fn run_proxy(
+    shard: usize,
+    mut r: BufReader<UnixStream>,
+    mut w: BufWriter<UnixStream>,
+    max_buf_numel: usize,
+    jobs: Receiver<ProxyJob>,
+    acks: SyncSender<ProxyAck>,
+    alive: Arc<AtomicBool>,
+) {
+    while let Ok(job) = jobs.recv() {
+        let (context, outcome): (&'static str, Result<ProxyReply>) = match job {
+            ProxyJob::Step { lr, tasks } => ("step", proxy_step(&mut r, &mut w, lr, &tasks)),
+            ProxyJob::Next => {
+                // Fire-and-forget: no ack, but a write failure kills the
+                // connection.
+                match write_op(&mut w, OP_NEXT).and_then(|()| Ok(w.flush()?)) {
+                    Ok(()) => continue,
+                    Err(e) => {
+                        alive.store(false, Ordering::SeqCst);
+                        let _ = acks.send(Err(classify(shard, "next_step", e)));
+                        return;
+                    }
+                }
+            }
+            ProxyJob::Scalars => ("state query", proxy_scalars(&mut r, &mut w)),
+            ProxyJob::Export => ("state export", proxy_export(&mut r, &mut w, max_buf_numel)),
+            ProxyJob::Import(state) => ("state import", proxy_import(&mut r, &mut w, &state)),
+            ProxyJob::Shutdown => {
+                let _ = write_op(&mut w, OP_SHUTDOWN);
+                let _ = w.flush();
+                return;
+            }
+        };
+        match outcome {
+            Ok(reply) => {
+                if acks.send(Ok(reply)).is_err() {
+                    return; // parent gone
+                }
+            }
+            Err(e) => {
+                // Worker-reported failures keep the connection; transport
+                // failures end it.
+                let err = match e.downcast::<WorkerFailure>() {
+                    Ok(wf) => TransportError::Worker { shard, message: wf.0 },
+                    Err(e) => {
+                        let classified = classify(shard, context, e);
+                        alive.store(false, Ordering::SeqCst);
+                        let _ = acks.send(Err(classified));
+                        return;
+                    }
+                };
+                if acks.send(Err(err)).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+    // Parent dropped the job channel: close down quietly.
+    let _ = write_op(&mut w, OP_SHUTDOWN);
+    let _ = w.flush();
+}
+
+/// A failure the worker *reported* over a healthy connection
+/// (`OP_STEP_ERR` / `OP_IMPORT_ERR`), carried through the anyhow layer so
+/// the proxy can keep the connection open.
+#[derive(Debug)]
+struct WorkerFailure(String);
+
+impl std::fmt::Display for WorkerFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for WorkerFailure {}
+
+fn proxy_step(
+    r: &mut BufReader<UnixStream>,
+    w: &mut BufWriter<UnixStream>,
+    lr: f32,
+    tasks: &[GroupTask],
+) -> Result<ProxyReply> {
+    write_op(w, OP_STEP)?;
+    write_f32(w, lr)?;
+    write_u32(w, tasks.len() as u32)?;
+    for t in tasks {
+        // Sound per the GroupTask contract: the executor holds the
+        // parameter/gradient borrows until our ack.
+        let x = unsafe { std::slice::from_raw_parts(t.x as *const f32, t.x_len) };
+        let g = unsafe { std::slice::from_raw_parts(t.g, t.g_len) };
+        write_u32(w, t.local_gi as u32)?;
+        write_f32s(w, x)?;
+        write_f32s(w, g)?;
+    }
+    w.flush()?;
+    match read_op(r)? {
+        OP_STEP_OK => {
+            let n = read_task_count(r, tasks.len())?;
+            for t in tasks.iter().take(n) {
+                let gi = read_u32(r)? as usize;
+                anyhow::ensure!(
+                    gi == t.local_gi,
+                    "step reply group order mismatch: got {gi}, expected {}",
+                    t.local_gi
+                );
+                let updated = read_f32s(r, t.x_len)?;
+                anyhow::ensure!(
+                    updated.len() == t.x_len,
+                    "step reply length mismatch for local group {gi}"
+                );
+                let x = unsafe { std::slice::from_raw_parts_mut(t.x, t.x_len) };
+                x.copy_from_slice(&updated);
+            }
+            Ok(ProxyReply::StepDone)
+        }
+        OP_STEP_ERR => {
+            let msg = read_str(r)?;
+            Err(anyhow::Error::new(WorkerFailure(msg)))
+        }
+        op => bail!("unexpected step reply opcode {op}"),
+    }
+}
+
+/// Read the reply task count and require it to match the request exactly.
+fn read_task_count(r: &mut BufReader<UnixStream>, expect: usize) -> Result<usize> {
+    let n = read_u32(r)? as usize;
+    anyhow::ensure!(n == expect, "step reply has {n} tasks, request had {expect}");
+    Ok(n)
+}
+
+fn proxy_scalars(
+    r: &mut BufReader<UnixStream>,
+    w: &mut BufWriter<UnixStream>,
+) -> Result<ProxyReply> {
+    write_op(w, OP_SCALARS)?;
+    w.flush()?;
+    let op = read_op(r)?;
+    anyhow::ensure!(op == OP_SCALARS_REPLY, "unexpected scalars reply opcode {op}");
+    let scalars = read_u64(r)? as usize;
+    let bytes = read_u64(r)? as usize;
+    Ok(ProxyReply::Scalars { scalars, bytes })
+}
+
+fn proxy_export(
+    r: &mut BufReader<UnixStream>,
+    w: &mut BufWriter<UnixStream>,
+    max_buf_numel: usize,
+) -> Result<ProxyReply> {
+    write_op(w, OP_EXPORT)?;
+    w.flush()?;
+    let op = read_op(r)?;
+    anyhow::ensure!(op == OP_EXPORT_REPLY, "unexpected export reply opcode {op}");
+    let state = read_export_stream(r, max_buf_numel)?;
+    Ok(ProxyReply::State(Box::new(state)))
+}
+
+fn proxy_import(
+    r: &mut BufReader<UnixStream>,
+    w: &mut BufWriter<UnixStream>,
+    state: &StateExport,
+) -> Result<ProxyReply> {
+    write_op(w, OP_IMPORT)?;
+    write_export_stream(w, state, STREAM_CHUNK_NUMEL)?;
+    w.flush()?;
+    match read_op(r)? {
+        OP_IMPORT_OK => Ok(ProxyReply::ImportDone),
+        OP_IMPORT_ERR => {
+            let msg = read_str(r)?;
+            Err(anyhow::Error::new(WorkerFailure(msg)))
+        }
+        op => bail!("unexpected import reply opcode {op}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Entry point for `ettrain shard-worker`: connect to the parent's socket
+/// (retrying with backoff while the parent finishes binding/accepting) and
+/// serve the wire protocol until shutdown or parent exit.
+pub fn run_socket_worker(path: &Path, shard: usize) -> Result<()> {
+    let stream = connect_with_backoff(path)
+        .with_context(|| format!("shard {shard}: connecting to {}", path.display()))?;
+    serve_stream(stream, shard)
+}
+
+/// Total patience ~10s: the parent binds the listener before spawning us,
+/// so in practice the first attempt succeeds; the retry loop covers slow
+/// filesystems and racing restarts.
+fn connect_with_backoff(path: &Path) -> Result<UnixStream> {
+    let mut delay = Duration::from_millis(10);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match UnixStream::connect(path) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() + delay >= deadline {
+                    return Err(e).context("worker connect retries exhausted");
+                }
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+/// Serve one parent connection. Public within the crate so unit tests can
+/// drive it over a `UnixStream::pair` without spawning a process.
+pub(crate) fn serve_stream(stream: UnixStream, shard: usize) -> Result<()> {
+    let mut r = BufReader::new(stream.try_clone().context("worker stream clone")?);
+    let mut w = BufWriter::new(stream);
+
+    let op = read_op(&mut r).context("reading spec frame")?;
+    anyhow::ensure!(op == OP_SPEC, "expected OP_SPEC, got opcode {op}");
+    let spec = read_worker_spec(&mut r).context("decoding worker spec")?;
+    let max_x_numel = spec.groups().iter().map(|g| g.numel()).max().unwrap_or(0);
+    // Validated parent-side before spawn; a failure here still exits
+    // loudly so the parent's first query reports a dead worker.
+    let mut opt = spec.build().with_context(|| format!("shard {shard}: optimizer build"))?;
+
+    loop {
+        let op = match read_op(&mut r) {
+            Ok(op) => op,
+            Err(e) => {
+                if is_eof(&e) {
+                    return Ok(()); // parent exited; normal teardown
+                }
+                return Err(e.context("reading request opcode"));
+            }
+        };
+        match op {
+            OP_STEP => {
+                let lr = crate::util::codec::read_f32(&mut r)?;
+                let n = read_u32(&mut r)?;
+                anyhow::ensure!(n <= MAX_STEP_TASKS, "implausible step task count {n}");
+                // Read the whole request before applying anything so the
+                // stream stays framed even when an update fails.
+                let mut tasks = Vec::with_capacity(n as usize);
+                for _ in 0..n {
+                    let gi = read_u32(&mut r)? as usize;
+                    let x = read_f32s(&mut r, max_x_numel)?;
+                    let g = read_f32s(&mut r, max_x_numel)?;
+                    tasks.push((gi, x, g));
+                }
+                let mut failure: Option<String> = None;
+                for (gi, x, g) in tasks.iter_mut() {
+                    if let Err(e) = opt.step(*gi, x, g, lr) {
+                        failure = Some(format!("shard {shard}, local group {gi}: {e:#}"));
+                        break;
+                    }
+                }
+                match failure {
+                    None => {
+                        write_op(&mut w, OP_STEP_OK)?;
+                        write_u32(&mut w, tasks.len() as u32)?;
+                        for (gi, x, _) in &tasks {
+                            write_u32(&mut w, *gi as u32)?;
+                            write_f32s(&mut w, x)?;
+                        }
+                    }
+                    Some(msg) => {
+                        write_op(&mut w, OP_STEP_ERR)?;
+                        write_msg(&mut w, &msg)?;
+                    }
+                }
+                w.flush()?;
+            }
+            OP_NEXT => opt.next_step(),
+            OP_SCALARS => {
+                write_op(&mut w, OP_SCALARS_REPLY)?;
+                write_u64(&mut w, opt.state_scalars() as u64)?;
+                write_u64(&mut w, opt.state_bytes() as u64)?;
+                w.flush()?;
+            }
+            OP_EXPORT => {
+                write_op(&mut w, OP_EXPORT_REPLY)?;
+                // Streamed straight from live state: peak extra memory is
+                // one chunk, never a dense copy of the shard.
+                write_state_stream(&mut w, opt.state(), STREAM_CHUNK_NUMEL)?;
+                w.flush()?;
+            }
+            OP_IMPORT => {
+                match import_stream(&mut r, opt.state_mut()) {
+                    Ok(()) => {
+                        write_op(&mut w, OP_IMPORT_OK)?;
+                        w.flush()?;
+                    }
+                    Err(e) => {
+                        // A failed stream import may have half-applied; the
+                        // state is unusable, so report and exit.
+                        write_op(&mut w, OP_IMPORT_ERR)?;
+                        write_msg(&mut w, &format!("shard {shard}: state import: {e:#}"))?;
+                        w.flush()?;
+                        bail!("shard {shard}: state import failed: {e:#}");
+                    }
+                }
+            }
+            OP_SHUTDOWN => return Ok(()),
+            // A stray reply opcode or garbage: the stream is unframed, bail.
+            op => bail!("shard {shard}: unexpected request opcode {op}"),
+        }
+    }
+}
+
+fn is_eof(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>()
+            .is_some_and(|ioe| ioe.kind() == std::io::ErrorKind::UnexpectedEof)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{GroupSpec, Hyper};
+    use crate::tensoring::OptimizerKind;
+
+    fn spec() -> WorkerSpec {
+        WorkerSpec::Uniform {
+            kind: OptimizerKind::AdaGrad,
+            groups: vec![GroupSpec::new("a", &[4]), GroupSpec::new("b", &[2])],
+            hyper: Hyper::default(),
+        }
+    }
+
+    /// Drive `serve_stream` over a socketpair with hand-written frames:
+    /// spec, step, scalars, export, import, shutdown.
+    #[test]
+    fn serve_stream_speaks_the_protocol() {
+        let (parent, worker) = UnixStream::pair().unwrap();
+        let server = std::thread::spawn(move || serve_stream(worker, 0));
+
+        let mut w = BufWriter::new(parent.try_clone().unwrap());
+        let mut r = BufReader::new(parent);
+        write_op(&mut w, OP_SPEC).unwrap();
+        write_worker_spec(&mut w, &spec()).unwrap();
+
+        // One step over both groups.
+        write_op(&mut w, OP_STEP).unwrap();
+        write_f32(&mut w, 0.1).unwrap();
+        write_u32(&mut w, 2).unwrap();
+        let x0 = vec![1.0f32; 4];
+        let g0 = vec![0.5f32, -0.5, 1.0, 0.0];
+        let x1 = vec![2.0f32; 2];
+        let g1 = vec![1.0f32, 2.0];
+        write_u32(&mut w, 0).unwrap();
+        write_f32s(&mut w, &x0).unwrap();
+        write_f32s(&mut w, &g0).unwrap();
+        write_u32(&mut w, 1).unwrap();
+        write_f32s(&mut w, &x1).unwrap();
+        write_f32s(&mut w, &g1).unwrap();
+        w.flush().unwrap();
+
+        assert_eq!(read_op(&mut r).unwrap(), OP_STEP_OK);
+        assert_eq!(read_u32(&mut r).unwrap(), 2);
+        assert_eq!(read_u32(&mut r).unwrap(), 0);
+        let got0 = read_f32s(&mut r, 4).unwrap();
+        assert_eq!(read_u32(&mut r).unwrap(), 1);
+        let got1 = read_f32s(&mut r, 2).unwrap();
+
+        // Reference: the same optimizer stepped inline.
+        let groups = vec![GroupSpec::new("a", &[4]), GroupSpec::new("b", &[2])];
+        let mut reference =
+            crate::optim::build(OptimizerKind::AdaGrad, &groups, &Hyper::default());
+        let (mut r0, mut r1) = (x0.clone(), x1.clone());
+        reference.step(0, &mut r0, &g0, 0.1).unwrap();
+        reference.step(1, &mut r1, &g1, 0.1).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got0), bits(&r0));
+        assert_eq!(bits(&got1), bits(&r1));
+
+        write_op(&mut w, OP_SCALARS).unwrap();
+        w.flush().unwrap();
+        assert_eq!(read_op(&mut r).unwrap(), OP_SCALARS_REPLY);
+        assert_eq!(read_u64(&mut r).unwrap(), 6);
+        assert_eq!(read_u64(&mut r).unwrap(), 24);
+
+        write_op(&mut w, OP_EXPORT).unwrap();
+        w.flush().unwrap();
+        assert_eq!(read_op(&mut r).unwrap(), OP_EXPORT_REPLY);
+        let export = read_export_stream(&mut r, 8).unwrap();
+        assert_eq!(export.groups.len(), 2);
+        for (sv, &gv) in export.groups[0].bufs[0].1.iter().zip(&g0) {
+            assert_eq!(*sv, gv * gv);
+        }
+
+        write_op(&mut w, OP_IMPORT).unwrap();
+        write_export_stream(&mut w, &export, STREAM_CHUNK_NUMEL).unwrap();
+        w.flush().unwrap();
+        assert_eq!(read_op(&mut r).unwrap(), OP_IMPORT_OK);
+
+        write_op(&mut w, OP_SHUTDOWN).unwrap();
+        w.flush().unwrap();
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn serve_stream_reports_step_errors_and_survives() {
+        let (parent, worker) = UnixStream::pair().unwrap();
+        let server = std::thread::spawn(move || serve_stream(worker, 3));
+
+        let mut w = BufWriter::new(parent.try_clone().unwrap());
+        let mut r = BufReader::new(parent);
+        write_op(&mut w, OP_SPEC).unwrap();
+        write_worker_spec(&mut w, &spec()).unwrap();
+
+        // Wrong-length x for group 0.
+        write_op(&mut w, OP_STEP).unwrap();
+        write_f32(&mut w, 0.1).unwrap();
+        write_u32(&mut w, 1).unwrap();
+        write_u32(&mut w, 0).unwrap();
+        write_f32s(&mut w, &[0.0f32; 2]).unwrap();
+        write_f32s(&mut w, &[0.0f32; 2]).unwrap();
+        w.flush().unwrap();
+        assert_eq!(read_op(&mut r).unwrap(), OP_STEP_ERR);
+        let msg = read_str(&mut r).unwrap();
+        assert!(msg.contains("shard 3"), "{msg}");
+
+        // The connection must still be usable.
+        write_op(&mut w, OP_SCALARS).unwrap();
+        w.flush().unwrap();
+        assert_eq!(read_op(&mut r).unwrap(), OP_SCALARS_REPLY);
+        let _ = read_u64(&mut r).unwrap();
+        let _ = read_u64(&mut r).unwrap();
+
+        drop(w);
+        drop(r);
+        server.join().unwrap().unwrap(); // EOF is a clean exit
+    }
+
+    /// A worker that accepts the connection but never replies must produce
+    /// `Timeout`, not a hang.
+    #[test]
+    fn read_timeout_classifies_as_timeout() {
+        let (parent, _worker_held_open) = UnixStream::pair().unwrap();
+        parent.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let mut r = BufReader::new(parent);
+        let err = read_op(&mut r).unwrap_err();
+        let classified = classify(7, "state query", err);
+        assert!(
+            matches!(classified, TransportError::Timeout { shard: 7, .. }),
+            "{classified}"
+        );
+    }
+
+    #[test]
+    fn eof_classifies_as_disconnected() {
+        let (parent, worker) = UnixStream::pair().unwrap();
+        drop(worker);
+        let mut r = BufReader::new(parent);
+        let err = read_op(&mut r).unwrap_err();
+        let classified = classify(2, "step", err);
+        assert!(
+            matches!(classified, TransportError::Disconnected { shard: 2, .. }),
+            "{classified}"
+        );
+    }
+}

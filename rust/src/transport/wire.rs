@@ -1,0 +1,320 @@
+//! Wire format for the socket transport.
+//!
+//! Frames are little-endian, length-prefixed, built from the
+//! `util::codec` primitives — the same ones the ETHC/ETCK checkpoint
+//! files use. Every frame starts with a `u32` opcode. Requests flow
+//! parent → worker, replies worker → parent; the protocol is strictly
+//! serial per connection (one outstanding request), so no sequence
+//! numbers are needed.
+//!
+//! Request frames:
+//!
+//! ```text
+//! SPEC     = OP_SPEC worker_spec
+//! STEP     = OP_STEP lr:f32 n:u32 { local_gi:u32 x:f32s g:f32s }*n
+//! NEXT     = OP_NEXT                      (no reply)
+//! SCALARS  = OP_SCALARS
+//! EXPORT   = OP_EXPORT
+//! IMPORT   = OP_IMPORT etss-stream        (optim::stream framing)
+//! SHUTDOWN = OP_SHUTDOWN                  (no reply; worker exits)
+//! ```
+//!
+//! Reply frames:
+//!
+//! ```text
+//! STEP_OK       = OP_STEP_OK n:u32 { local_gi:u32 x:f32s }*n
+//! STEP_ERR      = OP_STEP_ERR msg:str
+//! SCALARS_REPLY = OP_SCALARS_REPLY scalars:u64 bytes:u64
+//! EXPORT_REPLY  = OP_EXPORT_REPLY etss-stream
+//! IMPORT_OK     = OP_IMPORT_OK
+//! IMPORT_ERR    = OP_IMPORT_ERR msg:str
+//! ```
+//!
+//! `f32s` is the codec's `u64`-count-prefixed raw `f32` block; `str` is
+//! the codec's `u32`-length-prefixed UTF-8 (≤ 4096 bytes — error messages
+//! are truncated to fit, the only lossy spot in the protocol). The
+//! [`WorkerSpec`] encoding carries a planned spec's `StatePlan` as its
+//! canonical JSON text under its own `u64` length prefix with a 16 MiB
+//! cap, since plans for many groups can exceed the codec string cap.
+
+use crate::optim::{GroupSpec, Hyper};
+use crate::tensoring::{OptimizerKind, StateBackend};
+use crate::transport::WorkerSpec;
+use crate::util::codec::{
+    read_f32, read_str, read_u32, read_u64, write_f32, write_str, write_u32, write_u64,
+};
+use anyhow::{anyhow, Result};
+use std::io::{Read, Write};
+
+// Requests (parent -> worker).
+pub const OP_SPEC: u32 = 10;
+pub const OP_STEP: u32 = 11;
+pub const OP_NEXT: u32 = 12;
+pub const OP_SCALARS: u32 = 13;
+pub const OP_EXPORT: u32 = 14;
+pub const OP_IMPORT: u32 = 15;
+pub const OP_SHUTDOWN: u32 = 16;
+
+// Replies (worker -> parent).
+pub const OP_STEP_OK: u32 = 20;
+pub const OP_STEP_ERR: u32 = 21;
+pub const OP_SCALARS_REPLY: u32 = 22;
+pub const OP_EXPORT_REPLY: u32 = 23;
+pub const OP_IMPORT_OK: u32 = 24;
+pub const OP_IMPORT_ERR: u32 = 25;
+
+/// Cap on the serialized `StatePlan` JSON inside a planned spec.
+pub const MAX_PLAN_JSON: u64 = 16 << 20;
+/// Plausibility cap on the number of groups in a spec frame.
+const MAX_SPEC_GROUPS: u32 = 1 << 20;
+/// Plausibility cap on a group's rank.
+const MAX_SPEC_DIMS: u32 = 64;
+
+const SPEC_TAG_UNIFORM: u32 = 0;
+const SPEC_TAG_PLANNED: u32 = 1;
+
+fn bad(msg: impl Into<String>) -> anyhow::Error {
+    anyhow!(msg.into())
+}
+
+pub fn write_op<W: Write>(w: &mut W, op: u32) -> Result<()> {
+    write_u32(w, op)
+}
+
+pub fn read_op<R: Read>(r: &mut R) -> Result<u32> {
+    read_u32(r)
+}
+
+/// Write an error message as a codec string, truncating (on a char
+/// boundary) to the codec's string cap.
+pub fn write_msg<W: Write>(w: &mut W, msg: &str) -> Result<()> {
+    let mut end = msg.len().min(crate::util::codec::MAX_STR_LEN);
+    while !msg.is_char_boundary(end) {
+        end -= 1;
+    }
+    write_str(w, &msg[..end])
+}
+
+fn write_opt_f32<W: Write>(w: &mut W, v: Option<f32>) -> Result<()> {
+    match v {
+        Some(x) => {
+            write_u32(w, 1)?;
+            write_f32(w, x)
+        }
+        None => write_u32(w, 0),
+    }
+}
+
+fn read_opt_f32<R: Read>(r: &mut R) -> Result<Option<f32>> {
+    match read_u32(r)? {
+        0 => Ok(None),
+        1 => Ok(Some(read_f32(r)?)),
+        flag => Err(bad(format!("invalid Option<f32> flag {flag}"))),
+    }
+}
+
+fn write_hyper<W: Write>(w: &mut W, h: &Hyper) -> Result<()> {
+    write_f32(w, h.eps)?;
+    write_f32(w, h.beta1)?;
+    write_opt_f32(w, h.beta2)?;
+    write_opt_f32(w, h.et_beta2)?;
+    write_str(w, &h.backend.name())
+}
+
+fn read_hyper<R: Read>(r: &mut R) -> Result<Hyper> {
+    let eps = read_f32(r)?;
+    let beta1 = read_f32(r)?;
+    let beta2 = read_opt_f32(r)?;
+    let et_beta2 = read_opt_f32(r)?;
+    let backend_name = read_str(r)?;
+    let backend = StateBackend::parse(&backend_name)
+        .ok_or_else(|| bad(format!("unknown state backend {backend_name:?}")))?;
+    Ok(Hyper { eps, beta2, beta1, et_beta2, backend })
+}
+
+fn write_groups<W: Write>(w: &mut W, groups: &[GroupSpec]) -> Result<()> {
+    write_u32(w, groups.len() as u32)?;
+    for g in groups {
+        write_str(w, &g.name)?;
+        write_u32(w, g.shape.len() as u32)?;
+        for &d in &g.shape {
+            write_u64(w, d as u64)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_groups<R: Read>(r: &mut R) -> Result<Vec<GroupSpec>> {
+    let n = read_u32(r)?;
+    if n > MAX_SPEC_GROUPS {
+        return Err(bad(format!("implausible group count {n}")));
+    }
+    let mut groups = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let name = read_str(r)?;
+        let ndims = read_u32(r)?;
+        if ndims > MAX_SPEC_DIMS {
+            return Err(bad(format!("implausible rank {ndims} for group {name:?}")));
+        }
+        let mut shape = Vec::with_capacity(ndims as usize);
+        for _ in 0..ndims {
+            shape.push(read_u64(r)? as usize);
+        }
+        groups.push(GroupSpec { name, shape });
+    }
+    Ok(groups)
+}
+
+fn write_plan_json<W: Write>(w: &mut W, json: &str) -> Result<()> {
+    if json.len() as u64 > MAX_PLAN_JSON {
+        return Err(bad(format!("state plan JSON is {} bytes (cap {MAX_PLAN_JSON})", json.len())));
+    }
+    write_u64(w, json.len() as u64)?;
+    w.write_all(json.as_bytes())?;
+    Ok(())
+}
+
+fn read_plan_json<R: Read>(r: &mut R) -> Result<String> {
+    let len = read_u64(r)?;
+    if len > MAX_PLAN_JSON {
+        return Err(bad(format!("implausible state plan length {len} (cap {MAX_PLAN_JSON})")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|_| bad("state plan JSON is not UTF-8"))
+}
+
+/// Serialize a worker spec (the body of an `OP_SPEC` frame).
+pub fn write_worker_spec<W: Write>(w: &mut W, spec: &WorkerSpec) -> Result<()> {
+    match spec {
+        WorkerSpec::Uniform { kind, groups, hyper } => {
+            write_u32(w, SPEC_TAG_UNIFORM)?;
+            write_groups(w, groups)?;
+            write_hyper(w, hyper)?;
+            write_str(w, &kind.name())
+        }
+        WorkerSpec::Planned { groups, plan, hyper } => {
+            write_u32(w, SPEC_TAG_PLANNED)?;
+            write_groups(w, groups)?;
+            write_hyper(w, hyper)?;
+            write_plan_json(w, &plan.to_json().to_string())
+        }
+    }
+}
+
+/// Deserialize a worker spec (after the `OP_SPEC` opcode has been read).
+pub fn read_worker_spec<R: Read>(r: &mut R) -> Result<WorkerSpec> {
+    let tag = read_u32(r)?;
+    let groups = read_groups(r)?;
+    let hyper = read_hyper(r)?;
+    match tag {
+        SPEC_TAG_UNIFORM => {
+            let kind_name = read_str(r)?;
+            let kind = OptimizerKind::parse(&kind_name)
+                .ok_or_else(|| bad(format!("unknown optimizer kind {kind_name:?}")))?;
+            Ok(WorkerSpec::Uniform { kind, groups, hyper })
+        }
+        SPEC_TAG_PLANNED => {
+            let text = read_plan_json(r)?;
+            let json = crate::util::json::Json::parse(&text)
+                .map_err(|e| bad(format!("state plan JSON parse: {e:?}")))?;
+            let plan = crate::budget::StatePlan::from_json(&json)
+                .map_err(|e| bad(format!("state plan decode: {e:#}")))?;
+            Ok(WorkerSpec::Planned { groups, plan, hyper })
+        }
+        tag => Err(bad(format!("unknown worker spec tag {tag}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::{GroupChoice, StatePlan};
+
+    fn groups() -> Vec<GroupSpec> {
+        vec![GroupSpec::new("embed", &[40, 8]), GroupSpec::new("bias", &[24])]
+    }
+
+    #[test]
+    fn uniform_spec_round_trips() {
+        let spec = WorkerSpec::Uniform {
+            kind: OptimizerKind::Et(2),
+            groups: groups(),
+            hyper: Hyper {
+                eps: 1e-8,
+                beta2: Some(0.995),
+                beta1: 0.9,
+                et_beta2: None,
+                backend: StateBackend::q8(),
+            },
+        };
+        let mut buf = Vec::new();
+        write_worker_spec(&mut buf, &spec).unwrap();
+        let got = read_worker_spec(&mut buf.as_slice()).unwrap();
+        match (&spec, &got) {
+            (
+                WorkerSpec::Uniform { kind, groups, hyper },
+                WorkerSpec::Uniform { kind: k2, groups: g2, hyper: h2 },
+            ) => {
+                assert_eq!(kind, k2);
+                assert_eq!(groups, g2);
+                assert_eq!(hyper.eps.to_bits(), h2.eps.to_bits());
+                assert_eq!(hyper.beta1.to_bits(), h2.beta1.to_bits());
+                assert_eq!(hyper.beta2.map(f32::to_bits), h2.beta2.map(f32::to_bits));
+                assert_eq!(hyper.et_beta2, h2.et_beta2);
+                assert_eq!(hyper.backend, h2.backend);
+            }
+            _ => panic!("variant changed across the wire"),
+        }
+    }
+
+    #[test]
+    fn planned_spec_round_trips_via_json() {
+        let gs = groups();
+        let plan = StatePlan {
+            budget_bytes: Some(4096),
+            per_group: gs
+                .iter()
+                .map(|g| GroupChoice {
+                    group: g.name.clone(),
+                    shape: g.shape.clone(),
+                    kind: OptimizerKind::AdaGrad,
+                    backend: StateBackend::DenseF32,
+                    buf_backends: vec![StateBackend::DenseF32],
+                    bytes: 4 * g.numel(),
+                    expressivity: 1.0,
+                })
+                .collect(),
+        };
+        let spec = WorkerSpec::Planned { groups: gs, plan: plan.clone(), hyper: Hyper::default() };
+        let mut buf = Vec::new();
+        write_worker_spec(&mut buf, &spec).unwrap();
+        match read_worker_spec(&mut buf.as_slice()).unwrap() {
+            WorkerSpec::Planned { plan: p2, .. } => assert_eq!(plan, p2),
+            _ => panic!("variant changed across the wire"),
+        }
+    }
+
+    #[test]
+    fn truncated_spec_is_an_error() {
+        let spec = WorkerSpec::Uniform {
+            kind: OptimizerKind::Sgd,
+            groups: groups(),
+            hyper: Hyper::default(),
+        };
+        let mut buf = Vec::new();
+        write_worker_spec(&mut buf, &spec).unwrap();
+        buf.truncate(buf.len() / 2);
+        assert!(read_worker_spec(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn long_error_messages_truncate_on_char_boundary() {
+        let msg = "é".repeat(4096); // 2 bytes per char: must cut at 4096, not mid-char
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let got = read_str(&mut buf.as_slice()).unwrap();
+        assert_eq!(got.len(), 4096);
+        assert!(msg.starts_with(&got));
+    }
+}

@@ -1,0 +1,158 @@
+//! Length-prefixed little-endian binary primitives, shared by the ETHC
+//! host-checkpoint format (`train::checkpoint`), the streaming state-export
+//! framing (`optim::state`), and the shard-transport wire protocol
+//! (`transport::wire`). One codec, three consumers: a checkpoint written on
+//! disk and a snapshot streamed over a socket use byte-identical encodings
+//! for the same data.
+//!
+//! Conventions (all little-endian):
+//! * scalars: raw `to_le_bytes` (`u32`, `u64`, `f32`, `f64`);
+//! * strings: `len u32 | utf8 bytes`, capped at [`MAX_STR_LEN`];
+//! * f32 tensors: `numel u64 | raw f32 data`, with the read side refusing
+//!   lengths above a caller-supplied plausibility bound *before*
+//!   allocating — a corrupted length field must produce a clean error, not
+//!   a multi-gigabyte allocation.
+
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+
+/// No tensor/group/buffer name (or optimizer-kind spelling, or plan JSON
+/// header string) comes anywhere near this bound; longer means corruption.
+pub const MAX_STR_LEN: usize = 4096;
+
+pub fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_f32(w: &mut impl Write, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_f64(w: &mut impl Write, v: f64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+/// `numel u64` prefix followed by the raw f32 bytes (one bulk write).
+pub fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    write_u64(w, data.len() as u64)?;
+    write_f32_data(w, data)
+}
+
+/// The raw f32 bytes of `data` with **no** length prefix — for chunked
+/// framing where the frame header already carries the count.
+pub fn write_f32_data(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+pub fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+pub fn read_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+pub fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    anyhow::ensure!(len <= MAX_STR_LEN, "encoded string of {len} bytes is implausible");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).context("encoded string not utf8")
+}
+
+/// Read a length-prefixed f32 tensor, refusing lengths above `max_numel`
+/// *before* allocating.
+pub fn read_f32s(r: &mut impl Read, max_numel: usize) -> Result<Vec<f32>> {
+    let numel = read_u64(r)? as usize;
+    anyhow::ensure!(
+        numel <= max_numel,
+        "encoded tensor of {numel} scalars exceeds the plausible bound {max_numel}"
+    );
+    let mut data = vec![0.0f32; numel];
+    read_f32_data(r, &mut data)?;
+    Ok(data)
+}
+
+/// Fill `out` from the raw (unprefixed) f32 bytes — the read twin of
+/// [`write_f32_data`].
+pub fn read_f32_data(r: &mut impl Read, out: &mut [f32]) -> Result<()> {
+    let bytes: &mut [u8] =
+        unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4) };
+    r.read_exact(bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_and_str_roundtrip() {
+        let mut buf = Vec::new();
+        write_u32(&mut buf, 7).unwrap();
+        write_u64(&mut buf, u64::MAX - 1).unwrap();
+        write_f32(&mut buf, -0.0).unwrap();
+        write_f64(&mut buf, f64::MIN_POSITIVE).unwrap();
+        write_str(&mut buf, "embed/µ").unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_u32(&mut r).unwrap(), 7);
+        assert_eq!(read_u64(&mut r).unwrap(), u64::MAX - 1);
+        assert_eq!(read_f32(&mut r).unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(read_f64(&mut r).unwrap(), f64::MIN_POSITIVE);
+        assert_eq!(read_str(&mut r).unwrap(), "embed/µ");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn f32s_roundtrip_bitwise_and_bound_check() {
+        let data = vec![1.5f32, -0.0, f32::NAN, 3.0e-40];
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &data).unwrap();
+        let back = read_f32s(&mut buf.as_slice(), 4).unwrap();
+        let bits: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, want);
+        // A plausibility bound below the actual length must fail cleanly.
+        assert!(read_f32s(&mut buf.as_slice(), 3).is_err());
+    }
+
+    #[test]
+    fn implausible_string_rejected_before_alloc() {
+        let mut buf = Vec::new();
+        write_u32(&mut buf, u32::MAX).unwrap();
+        assert!(read_str(&mut buf.as_slice()).is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //! ships the `xla` crate's dependency closure.
 
 pub mod cli;
+pub mod codec;
 pub mod config;
 pub mod json;
 pub mod logging;

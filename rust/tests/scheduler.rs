@@ -8,8 +8,9 @@
 //!   interleaving.
 //! * **Admission control** — under a `--mem-budget` that fits one job at a
 //!   time, an over-budget job queues (`Deferred`) instead of running, and
-//!   only starts after a running job releases its reservation; a job that
-//!   could never fit fails at submission instead of deadlocking.
+//!   only starts after a running job releases its reservation; admission
+//!   is FIFO, so smaller jobs cannot overtake (starve) a deferred one; a
+//!   job that could never fit fails at submission instead of deadlocking.
 //! * **Resource caching** — the session synthesizes each dataset at most
 //!   once per batch, visible through the cache-hit counters in the event
 //!   stream (the acceptance counters for `experiment quantized-state`).
@@ -126,6 +127,7 @@ fn shard_bench_memory_columns_deterministic() {
                 d_model: 16,
                 d_ff: 32,
                 seed: 3,
+                ..ShardBenchSpec::default()
             },
         )
     };
@@ -223,6 +225,74 @@ fn over_budget_job_queues_instead_of_running() {
             _ => {}
         }
     }
+}
+
+/// The starvation fix: admission is FIFO, so a deferred large job is
+/// admitted before any smaller job submitted after it — a stream of small
+/// jobs that would individually fit the leftover budget cannot overtake
+/// (and thereby starve) the large one.
+#[test]
+fn deferred_job_is_not_starved_by_smaller_ones() {
+    let small = |name: &str, seed: u64| {
+        JobSpec::convex(
+            name,
+            ConvexSpec {
+                data: ConvexConfig { n: 2000, ..tiny_data(seed) },
+                iters: 300,
+                opt: ConvexOpt::Kind(OptimizerKind::AdaGrad),
+                ..ConvexSpec::default()
+            },
+        )
+    };
+    let huge = JobSpec::convex(
+        "huge",
+        ConvexSpec {
+            data: ConvexConfig { n: 20_000, ..tiny_data(6) },
+            iters: 20,
+            opt: ConvexOpt::Kind(OptimizerKind::AdaGrad),
+            ..ConvexSpec::default()
+        },
+    );
+    let mut specs = vec![small("small0", 5), huge];
+    for i in 1..=4 {
+        specs.push(small(&format!("small{i}"), 5));
+    }
+    let cost_small = specs[0].cost_bytes().unwrap();
+    let cost_huge = specs[1].cost_bytes().unwrap();
+    assert!(cost_huge > 2 * cost_small, "test shapes must make the huge job dominate");
+    // small0 fits; huge then does not (small0 holds cost_small >
+    // cost_small/2 of slack), and every later small job would fit the
+    // leftover — the exact overtaking scenario.
+    let budget = cost_huge + cost_small / 2;
+    let session = Session::new();
+    let report = run_batch(
+        &session,
+        &specs,
+        &SchedulerOptions { workers: 2, mem_budget: Some(budget), ..Default::default() },
+    )
+    .unwrap();
+    assert!(report.failed().is_empty(), "all jobs must eventually run");
+
+    let admitted: Vec<&str> = report
+        .events
+        .iter()
+        .filter_map(|e| match &e.event {
+            JobEvent::Admitted { job, .. } => Some(job.as_str()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(admitted.len(), specs.len());
+    assert_eq!(admitted[0], "small0");
+    assert_eq!(
+        admitted[1], "huge",
+        "the deferred job must get the next admission (FIFO); order: {admitted:?}"
+    );
+    let huge_deferrals = report
+        .events
+        .iter()
+        .filter(|e| matches!(&e.event, JobEvent::Deferred { job, .. } if job == "huge"))
+        .count();
+    assert_eq!(huge_deferrals, 1, "the huge job defers exactly once, then holds its place");
 }
 
 /// A job that can never fit the total budget fails at submission with a

@@ -2,14 +2,41 @@
 //! optimizer kind in the suite, `ShardedOptimizer` over 1, 2, and 4 shards
 //! must produce parameter updates *bitwise-identical* to the
 //! single-threaded optimizer on the same seeded groups and gradient
-//! stream. There is no tolerance here on purpose — each group's update is
-//! computed by exactly one worker with the single-threaded arithmetic, so
-//! any drift would mean the engine reordered real math.
+//! stream — over both transports (in-process worker threads and
+//! out-of-process `ettrain shard-worker` socket children). There is no
+//! tolerance here on purpose — each group's update is computed by exactly
+//! one worker with the single-threaded arithmetic, so any drift would mean
+//! the engine (or the wire codec) reordered real math.
+//!
+//! The elastic contract rides on the same identity: `reshard` mid-run
+//! (grow 2→4, shrink 4→1) must be bitwise-transparent versus a fixed-shard
+//! run, because snapshots are shard-count-independent.
 
 use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
-use extensor::shard::ShardedOptimizer;
+use extensor::shard::{ShardedOptimizer, DEFAULT_MIN_BUCKET_NUMEL};
 use extensor::tensoring::OptimizerKind;
+use extensor::transport::{InProcess, ShardTransport, SocketTransport};
 use extensor::util::rng::Pcg64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// A fresh socket transport per engine: each gets its own scratch dir so
+/// concurrent engines never collide on `shard-<s>.sock` paths. The worker
+/// binary is the `ettrain` cargo just built for this test run.
+fn socket_transport() -> Arc<dyn ShardTransport> {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "et-parity-sock-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    Arc::new(SocketTransport::new(dir, env!("CARGO_BIN_EXE_ettrain")))
+}
+
+/// Both transports under test, by name.
+fn transports() -> Vec<(&'static str, fn() -> Arc<dyn ShardTransport>)> {
+    vec![("inproc", || Arc::new(InProcess)), ("socket", socket_transport)]
+}
 
 /// Transformer-flavored group mix: big matrices, a conv kernel, and a tail
 /// of small vectors (the bucketing path must fuse those).
@@ -102,8 +129,34 @@ fn run_sharded(
     params
 }
 
+fn run_over_transport(
+    kind: OptimizerKind,
+    gs: &[GroupSpec],
+    stream: &[Vec<Vec<f32>>],
+    lr: f32,
+    shards: usize,
+    transport: Arc<dyn ShardTransport>,
+) -> Vec<Vec<f32>> {
+    let mut opt = ShardedOptimizer::with_transport(
+        kind,
+        gs,
+        &Hyper::default(),
+        shards,
+        None,
+        DEFAULT_MIN_BUCKET_NUMEL,
+        transport,
+    )
+    .unwrap();
+    let mut params = init_params(gs, 1);
+    for grads in stream {
+        opt.next_step();
+        opt.step_all(&mut params, grads, lr).unwrap();
+    }
+    params
+}
+
 /// The acceptance-criterion test: every kind, shards in {1, 2, 4},
-/// bitwise equality after a multi-step run.
+/// bitwise equality after a multi-step run (default in-process transport).
 #[test]
 fn sharded_matches_single_threaded_bitwise() {
     let gs = groups();
@@ -118,6 +171,69 @@ fn sharded_matches_single_threaded_bitwise() {
                 "kind {kind:?} with {shards} shards diverged from single-threaded"
             );
         }
+    }
+}
+
+/// Same identity over every transport: every kind × {1, 2, 4} shards ×
+/// {inproc, socket}, bitwise against the single-threaded run. For the
+/// socket transport this exercises the full wire round trip — spec
+/// serialization, per-step f32 framing, and updated-x readback — for each
+/// optimizer's hyperparameters.
+#[test]
+fn every_transport_matches_single_threaded_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 4, 7);
+    for kind in all_kinds() {
+        let lr = if kind == OptimizerKind::AdaDelta { 1.0 } else { 0.05 };
+        let want = run_single(kind, &gs, &stream, lr);
+        for (tname, make) in transports() {
+            for shards in [1usize, 2, 4] {
+                let got = run_over_transport(kind, &gs, &stream, lr, shards, make());
+                assert_eq!(
+                    want, got,
+                    "kind {kind:?} over {tname} with {shards} shards diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The elastic acceptance criterion: growing 2→4 and shrinking 4→1
+/// mid-run is bitwise-invisible versus fixed-shard runs, on both
+/// transports (snapshots are shard-count-independent, so a reshard is
+/// export → rebuild → import with no arithmetic).
+#[test]
+fn reshard_grow_and_shrink_mid_run_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 6, 11);
+    let kind = OptimizerKind::Et(2);
+    let want = run_single(kind, &gs, &stream, 0.05);
+    for (tname, make) in transports() {
+        let mut opt = ShardedOptimizer::with_transport(
+            kind,
+            &gs,
+            &Hyper::default(),
+            2,
+            None,
+            DEFAULT_MIN_BUCKET_NUMEL,
+            make(),
+        )
+        .unwrap();
+        let mut params = init_params(&gs, 1);
+        for (t, grads) in stream.iter().enumerate() {
+            // Grow 2→4 after step 2, shrink 4→1 after step 4.
+            if t == 2 {
+                opt.reshard(4).unwrap();
+                assert_eq!(opt.n_shards(), 4, "{tname}");
+            }
+            if t == 4 {
+                opt.reshard(1).unwrap();
+                assert_eq!(opt.n_shards(), 1, "{tname}");
+            }
+            opt.next_step();
+            opt.step_all(&mut params, grads, 0.05).unwrap();
+        }
+        assert_eq!(want, params, "mid-run reshard over {tname} changed results");
     }
 }
 

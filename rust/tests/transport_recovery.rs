@@ -1,0 +1,191 @@
+//! Crash recovery over the socket transport, end to end: a shard worker
+//! process is SIGKILLed mid-run, the in-flight step fails with a fatal
+//! transport error, and `take_snapshot`/`recover` rebuild the engine on
+//! the surviving workers — after which replaying from the snapshot step
+//! completes the run *bitwise-identical* to an uninterrupted
+//! single-threaded run. Determinism makes crash recovery testable exactly:
+//! there is no "close enough" after a worker dies.
+
+use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
+use extensor::shard::{ShardedOptimizer, DEFAULT_MIN_BUCKET_NUMEL};
+use extensor::tensoring::OptimizerKind;
+use extensor::transport::SocketTransport;
+use extensor::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const STEPS: usize = 6;
+const SNAP_AT: usize = 3;
+const LR: f32 = 0.05;
+
+fn groups() -> Vec<GroupSpec> {
+    vec![
+        GroupSpec::new("embed", &[40, 16]),
+        GroupSpec::new("ff1", &[16, 24]),
+        GroupSpec::new("ff2", &[24, 16]),
+        GroupSpec::new("bias", &[24]),
+    ]
+}
+
+fn grad_stream(gs: &[GroupSpec], steps: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..steps)
+        .map(|_| {
+            gs.iter()
+                .map(|g| {
+                    let mut v = vec![0.0f32; g.numel()];
+                    rng.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn init_params(gs: &[GroupSpec]) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(0xF00D);
+    gs.iter()
+        .map(|g| {
+            let mut v = vec![0.0f32; g.numel()];
+            rng.fill_uniform(&mut v, -0.5, 0.5);
+            v
+        })
+        .collect()
+}
+
+fn socket_transport(tag: &str) -> Arc<SocketTransport> {
+    let dir = std::env::temp_dir().join(format!("et-recover-{}-{tag}", std::process::id()));
+    Arc::new(
+        SocketTransport::new(dir, env!("CARGO_BIN_EXE_ettrain"))
+            .with_timeouts(Duration::from_secs(20), Duration::from_secs(10)),
+    )
+}
+
+/// The uninterrupted reference: single-threaded, same seeds.
+fn reference_params(gs: &[GroupSpec], stream: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+    let mut opt = optim::build(OptimizerKind::Et(2), gs, &Hyper::default());
+    let mut params = init_params(gs);
+    for grads in stream {
+        opt.next_step();
+        for (gi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            opt.step(gi, p, g, LR).unwrap();
+        }
+    }
+    params
+}
+
+#[test]
+fn killed_socket_worker_recovers_and_completes_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, STEPS, 29);
+    let want = reference_params(&gs, &stream);
+
+    let transport = socket_transport("kill");
+    let mut opt = ShardedOptimizer::with_transport(
+        OptimizerKind::Et(2),
+        &gs,
+        &Hyper::default(),
+        2,
+        None,
+        DEFAULT_MIN_BUCKET_NUMEL,
+        transport.clone(),
+    )
+    .unwrap();
+    assert_eq!(opt.transport_name(), "socket");
+
+    let mut params = init_params(&gs);
+    // Run to the snapshot boundary, then snapshot both the optimizer state
+    // (inside the engine) and our own copy of the parameters — crash
+    // recovery rewinds to the last consistent (params, state) pair.
+    for grads in stream.iter().take(SNAP_AT) {
+        opt.next_step();
+        opt.step_all(&mut params, grads, LR).unwrap();
+    }
+    let snap_step = opt.take_snapshot().unwrap();
+    assert_eq!(snap_step, SNAP_AT as u64);
+    assert_eq!(opt.snapshot_step(), Some(SNAP_AT as u64));
+    let params_at_snapshot = params.clone();
+
+    // Keep running past the snapshot, then SIGKILL shard 1's worker
+    // process. The next dispatch must fail with a *fatal* transport error
+    // (possibly leaving `params` partially updated — that is exactly why
+    // recovery rewinds them).
+    opt.next_step();
+    opt.step_all(&mut params, &stream[SNAP_AT], LR).unwrap();
+
+    let pids = transport.spawned_pids();
+    assert_eq!(pids.len(), 2, "two shards -> two spawned workers");
+    let victim = pids[1];
+    let killed = std::process::Command::new("kill")
+        .args(["-9", &victim.to_string()])
+        .status()
+        .expect("spawn kill");
+    assert!(killed.success(), "kill -9 {victim} failed");
+
+    let mut died = false;
+    for grads in stream.iter().skip(SNAP_AT + 1) {
+        opt.next_step();
+        if opt.step_all(&mut params, grads, LR).is_err() {
+            died = true;
+            break;
+        }
+    }
+    assert!(died, "step_all must fail after a worker is SIGKILLed");
+
+    // Recover onto the survivors and replay from the snapshot.
+    let resume_step = opt.recover().unwrap();
+    assert_eq!(resume_step, SNAP_AT as u64);
+    assert_eq!(opt.n_shards(), 1, "one of two workers died -> rebuilt on the survivor");
+    params = params_at_snapshot;
+    for grads in stream.iter().skip(SNAP_AT) {
+        opt.next_step();
+        opt.step_all(&mut params, grads, LR).unwrap();
+    }
+
+    assert_eq!(
+        want, params,
+        "post-recovery completion diverged from the uninterrupted run"
+    );
+}
+
+/// Snapshot/recover is not tied to a crash: recovering with every worker
+/// alive is just a rebuild-and-replay, and still bitwise.
+#[test]
+fn recover_with_all_workers_alive_replays_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, STEPS, 31);
+    let want = reference_params(&gs, &stream);
+
+    let transport = socket_transport("alive");
+    let mut opt = ShardedOptimizer::with_transport(
+        OptimizerKind::Et(2),
+        &gs,
+        &Hyper::default(),
+        2,
+        None,
+        DEFAULT_MIN_BUCKET_NUMEL,
+        transport,
+    )
+    .unwrap();
+    let mut params = init_params(&gs);
+    for grads in stream.iter().take(SNAP_AT) {
+        opt.next_step();
+        opt.step_all(&mut params, grads, LR).unwrap();
+    }
+    opt.take_snapshot().unwrap();
+    let params_at_snapshot = params.clone();
+    for grads in stream.iter().skip(SNAP_AT) {
+        opt.next_step();
+        opt.step_all(&mut params, grads, LR).unwrap();
+    }
+
+    let resume = opt.recover().unwrap();
+    assert_eq!(resume, SNAP_AT as u64);
+    assert_eq!(opt.n_shards(), 2, "no worker died -> same shard count");
+    params = params_at_snapshot;
+    for grads in stream.iter().skip(SNAP_AT) {
+        opt.next_step();
+        opt.step_all(&mut params, grads, LR).unwrap();
+    }
+    assert_eq!(want, params);
+}
