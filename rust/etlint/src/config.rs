@@ -1,0 +1,238 @@
+//! Minimal TOML-subset parser for `etlint.toml`.
+//!
+//! The offline environment has no `toml` crate, so this parses exactly the
+//! subset the config schema uses: `[table]` and `[[array-of-table]]`
+//! headers, string / bool / integer values, and (possibly multi-line)
+//! arrays of strings. Comments (`#`) are stripped outside quotes. Anything
+//! else is a hard error — the config is checked in, so failing loudly on
+//! an unsupported construct beats silently ignoring it.
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    List(Vec<String>),
+}
+
+/// One `[name]` or `[[name]]` section with its key/value entries, in file
+/// order (no hashing anywhere — parse order is report order).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub name: String,
+    pub entries: Vec<(String, Value)>,
+}
+
+impl Table {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn list(&self, key: &str) -> Vec<String> {
+        match self.get(key) {
+            Some(Value::List(v)) => v.clone(),
+            Some(Value::Str(s)) => vec![s.clone()],
+            _ => Vec::new(),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        match self.get(key) {
+            Some(Value::Int(i)) => *i,
+            _ => default,
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0usize;
+    while i < b.len() {
+        match b[i] {
+            b'\\' if in_str => i += 1,
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// All double-quoted strings in `text`, in order (the item syntax inside
+/// `[` .. `]` arrays).
+fn quoted_strings(text: &str) -> Result<Vec<String>, String> {
+    let b: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] == '"' {
+            let mut s = String::new();
+            i += 1;
+            loop {
+                if i >= b.len() {
+                    return Err("unterminated string".to_string());
+                }
+                match b[i] {
+                    '\\' if i + 1 < b.len() => {
+                        s.push(b[i + 1]);
+                        i += 2;
+                    }
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    c => {
+                        s.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            out.push(s);
+        } else {
+            i += 1;
+        }
+    }
+    Ok(out)
+}
+
+fn parse_scalar(text: &str, line_no: usize) -> Result<Value, String> {
+    let t = text.trim();
+    if let Some(rest) = t.strip_prefix('"') {
+        if let Some(body) = rest.strip_suffix('"') {
+            let strs = quoted_strings(&format!("\"{body}\""))?;
+            return strs
+                .into_iter()
+                .next()
+                .map(Value::Str)
+                .ok_or_else(|| format!("line {line_no}: empty string parse"));
+        }
+        return Err(format!("line {line_no}: unterminated string value"));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    t.parse::<i64>()
+        .map(Value::Int)
+        .map_err(|_| format!("line {line_no}: unsupported value {t:?}"))
+}
+
+/// Parse the config text into tables, in file order.
+pub fn parse(text: &str) -> Result<Vec<Table>, String> {
+    let mut tables: Vec<Table> = Vec::new();
+    let lines: Vec<&str> = text.lines().collect();
+    let mut i = 0usize;
+    while i < lines.len() {
+        let line_no = i + 1;
+        let line = strip_comment(lines[i]).trim().to_string();
+        i += 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest
+                .strip_suffix("]]")
+                .ok_or_else(|| format!("line {line_no}: malformed [[table]] header"))?;
+            tables.push(Table { name: name.trim().to_string(), entries: Vec::new() });
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {line_no}: malformed [table] header"))?;
+            tables.push(Table { name: name.trim().to_string(), entries: Vec::new() });
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {line_no}: expected `key = value`, got {line:?}"))?;
+        let key = line[..eq].trim().to_string();
+        let mut value_text = line[eq + 1..].trim().to_string();
+        let value = if value_text.starts_with('[') {
+            // Array of strings, possibly spanning multiple lines.
+            while !value_text.trim_end().ends_with(']') {
+                if i >= lines.len() {
+                    return Err(format!("line {line_no}: unterminated array for key {key:?}"));
+                }
+                value_text.push(' ');
+                value_text.push_str(strip_comment(lines[i]).trim());
+                i += 1;
+            }
+            Value::List(quoted_strings(&value_text).map_err(|e| format!("line {line_no}: {e}"))?)
+        } else {
+            parse_scalar(&value_text, line_no)?
+        };
+        let table = tables
+            .last_mut()
+            .ok_or_else(|| format!("line {line_no}: key {key:?} before any [table] header"))?;
+        table.entries.push((key, value));
+    }
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_arrays_and_scalars() {
+        let text = r##"
+# comment
+[unsafe_hygiene]
+paths = ["rust/src", "rust/tests"]  # trailing comment
+comment_window = 8
+
+[[no_panic]]
+path = "rust/src/transport"
+check_indexing = true
+
+[[no_panic]]
+path = "rust/src/session/scheduler.rs"
+check_indexing = false
+banned = [
+    ".unwrap()",
+    ".expect(",
+]
+"##;
+        let tables = parse(text).unwrap();
+        assert_eq!(tables.len(), 3);
+        assert_eq!(tables[0].name, "unsafe_hygiene");
+        assert_eq!(tables[0].list("paths"), vec!["rust/src", "rust/tests"]);
+        assert_eq!(tables[0].int_or("comment_window", 0), 8);
+        assert_eq!(tables[1].str("path"), Some("rust/src/transport"));
+        assert!(tables[1].bool_or("check_indexing", false));
+        assert!(!tables[2].bool_or("check_indexing", true));
+        assert_eq!(tables[2].list("banned"), vec![".unwrap()", ".expect("]);
+    }
+
+    #[test]
+    fn hash_inside_quotes_is_not_a_comment() {
+        let tables = parse("[t]\nkey = \"a#b\"\n").unwrap();
+        assert_eq!(tables[0].str("key"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_junk() {
+        assert!(parse("key = 1\n").is_err());
+        assert!(parse("[t]\nkey 1\n").is_err());
+        assert!(parse("[t]\nkey = 1.5\n").is_err());
+    }
+}

@@ -1,0 +1,539 @@
+//! Comment/literal scrubbing and structural region analysis over one Rust
+//! source file.
+//!
+//! The offline toolchain has no `syn`, so etlint works on *scrubbed* text:
+//! a copy of the source where every comment and every string/char literal
+//! body is replaced by spaces (newlines preserved, so line numbers match
+//! the original). Token scans over scrubbed text cannot be fooled by
+//! banned names appearing in docs or log messages, which removes the
+//! classic grep false positives; what remains is a deliberately
+//! conservative approximation of the AST (see each rule's notes on the
+//! residual gap).
+//!
+//! On top of the scrubbed text this module extracts the three structures
+//! the rules need: `#[cfg(test)]`/`#[test]` line regions, named inline
+//! `mod` spans, and `fn` body spans.
+
+use std::path::Path;
+
+/// A named inline module's line range (1-indexed, inclusive).
+#[derive(Debug, Clone)]
+pub struct ModSpan {
+    pub name: String,
+    pub start_line: usize,
+    pub end_line: usize,
+}
+
+/// A function with a body. Lines are 1-indexed, inclusive; the body range
+/// covers the `{`..`}` block only, not the signature.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub sig_line: usize,
+    pub body_start_line: usize,
+    pub body_end_line: usize,
+}
+
+/// One analyzed source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub rel_path: String,
+    /// Original lines — used only for `// SAFETY:` comment lookup, which
+    /// by definition must see comments.
+    pub raw_lines: Vec<String>,
+    /// Scrubbed lines: comments and literal bodies blanked.
+    pub code_lines: Vec<String>,
+    /// Per 0-indexed line: inside a `#[cfg(test)]` or `#[test]` region.
+    test_lines: Vec<bool>,
+    pub mods: Vec<ModSpan>,
+    pub fns: Vec<FnSpan>,
+}
+
+impl SourceFile {
+    pub fn load(root: &Path, rel_path: &str) -> std::io::Result<SourceFile> {
+        let raw = std::fs::read_to_string(root.join(rel_path))?;
+        Ok(SourceFile::parse(rel_path, &raw))
+    }
+
+    pub fn parse(rel_path: &str, raw: &str) -> SourceFile {
+        let code = scrub(raw);
+        let raw_lines: Vec<String> = raw.lines().map(str::to_string).collect();
+        let code_lines: Vec<String> = code.lines().map(str::to_string).collect();
+        let line_of = byte_lines(&code);
+        let n_lines = code_lines.len();
+        let test_lines = test_regions(&code, &line_of, n_lines);
+        let mods = mod_spans(&code, &line_of);
+        let fns = fn_spans(&code, &line_of);
+        SourceFile {
+            rel_path: rel_path.to_string(),
+            raw_lines,
+            code_lines,
+            test_lines,
+            mods,
+            fns,
+        }
+    }
+
+    pub fn is_test_line(&self, line0: usize) -> bool {
+        self.test_lines.get(line0).copied().unwrap_or(false)
+    }
+
+    /// Innermost function whose body contains 0-indexed `line0`.
+    pub fn enclosing_fn(&self, line0: usize) -> Option<&FnSpan> {
+        let line = line0 + 1;
+        self.fns
+            .iter()
+            .filter(|f| f.body_start_line <= line && line <= f.body_end_line)
+            .min_by_key(|f| f.body_end_line - f.body_start_line)
+    }
+
+    /// Whether 0-indexed `line0` is inside a `mod <name> { .. }` block.
+    pub fn in_mod(&self, line0: usize, name: &str) -> bool {
+        let line = line0 + 1;
+        self.mods
+            .iter()
+            .any(|m| m.name == name && m.start_line <= line && line <= m.end_line)
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Replace comments and string/char literal bodies with spaces, preserving
+/// every newline so line numbers stay aligned with the original source.
+pub fn scrub(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(src.len());
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment, with nesting.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // String literals: "", b"", r"", r#""#, br#""#.
+        let prev_ident = i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == '_');
+        if c == '"' || ((c == 'r' || c == 'b') && !prev_ident) {
+            if let Some((content, hashes, raw_str)) = string_open(&b, i) {
+                // Blank the opener too; the rules never need to see quotes.
+                for k in i..content {
+                    out.push(blank(b[k]));
+                }
+                i = content;
+                if raw_str {
+                    // Close on '"' followed by `hashes` '#'s.
+                    'raw: while i < n {
+                        if b[i] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && i + 1 + h < n && b[i + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                for k in i..=(i + hashes).min(n - 1) {
+                                    out.push(blank(b[k]));
+                                }
+                                i += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        out.push(blank(b[i]));
+                        i += 1;
+                    }
+                } else {
+                    while i < n {
+                        if b[i] == '\\' && i + 1 < n {
+                            out.push(' ');
+                            out.push(blank(b[i + 1]));
+                            i += 2;
+                        } else if b[i] == '"' {
+                            out.push(' ');
+                            i += 1;
+                            break;
+                        } else {
+                            out.push(blank(b[i]));
+                            i += 1;
+                        }
+                    }
+                }
+                continue;
+            }
+        }
+        // Char literal vs lifetime: 'x' / '\n' are literals, 'a in
+        // `&'a str` is a lifetime (no closing quote one-or-two ahead).
+        if c == '\'' {
+            let is_char =
+                (i + 1 < n && b[i + 1] == '\\') || (i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'');
+            if is_char {
+                out.push(' ');
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' && i + 1 < n {
+                        out.push(' ');
+                        out.push(blank(b[i + 1]));
+                        i += 2;
+                    } else if b[i] == '\'' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    } else {
+                        out.push(blank(b[i]));
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// If a string literal opens at char index `i`, return
+/// `(content_start, n_hashes, is_raw)`.
+fn string_open(b: &[char], i: usize) -> Option<(usize, usize, bool)> {
+    let n = b.len();
+    let mut j = i;
+    if j < n && b[j] == 'b' {
+        j += 1;
+    }
+    if j < n && b[j] == 'r' {
+        j += 1;
+        let mut hashes = 0usize;
+        while j < n && b[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j < n && b[j] == '"' {
+            return Some((j + 1, hashes, true));
+        }
+        return None;
+    }
+    if j < n && b[j] == '"' {
+        return Some((j + 1, 0, false));
+    }
+    None
+}
+
+/// Map each byte offset of `code` to its 0-indexed line.
+fn byte_lines(code: &str) -> Vec<usize> {
+    let mut v = Vec::with_capacity(code.len());
+    let mut line = 0usize;
+    for &c in code.as_bytes() {
+        v.push(line);
+        if c == b'\n' {
+            line += 1;
+        }
+    }
+    v
+}
+
+fn line_at(line_of: &[usize], idx: usize) -> usize {
+    if line_of.is_empty() {
+        return 0;
+    }
+    line_of[idx.min(line_of.len() - 1)]
+}
+
+/// Byte index of the `}` matching the `{` at `open_idx`.
+fn match_brace(bytes: &[u8], open_idx: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, &c) in bytes.iter().enumerate().skip(open_idx) {
+        match c {
+            b'{' => depth += 1,
+            b'}' => {
+                depth = depth.checked_sub(1)?;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Mark every line covered by a `#[cfg(test)]` or `#[test]` item. The
+/// attribute's item extends to its matched `{ .. }` block, or to a `;` for
+/// braceless items.
+fn test_regions(code: &str, line_of: &[usize], n_lines: usize) -> Vec<bool> {
+    let mut flags = vec![false; n_lines];
+    let bytes = code.as_bytes();
+    for pat in ["#[cfg(test)]", "#[test]"] {
+        let mut from = 0usize;
+        while let Some(off) = code[from..].find(pat) {
+            let start = from + off;
+            from = start + pat.len();
+            let mut k = start + pat.len();
+            let end = loop {
+                if k >= bytes.len() {
+                    break bytes.len().saturating_sub(1);
+                }
+                match bytes[k] {
+                    b'{' => break match_brace(bytes, k).unwrap_or(bytes.len() - 1),
+                    b';' => break k,
+                    _ => k += 1,
+                }
+            };
+            let (ls, le) = (line_at(line_of, start), line_at(line_of, end));
+            for flag in flags.iter_mut().take((le + 1).min(n_lines)).skip(ls) {
+                *flag = true;
+            }
+        }
+    }
+    flags
+}
+
+/// Spans of named inline modules (`mod name { .. }`).
+fn mod_spans(code: &str, line_of: &[usize]) -> Vec<ModSpan> {
+    let bytes = code.as_bytes();
+    let mut spans = Vec::new();
+    let mut from = 0usize;
+    while let Some(off) = code[from..].find("mod") {
+        let start = from + off;
+        from = start + 3;
+        let prev_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let next_ok = start + 3 >= bytes.len() || !is_ident_byte(bytes[start + 3]);
+        if !prev_ok || !next_ok {
+            continue;
+        }
+        let mut k = start + 3;
+        while k < bytes.len() && bytes[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        let name_start = k;
+        while k < bytes.len() && is_ident_byte(bytes[k]) {
+            k += 1;
+        }
+        if k == name_start {
+            continue;
+        }
+        let name = code[name_start..k].to_string();
+        while k < bytes.len() && bytes[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        if k < bytes.len() && bytes[k] == b'{' {
+            if let Some(close) = match_brace(bytes, k) {
+                spans.push(ModSpan {
+                    name,
+                    start_line: line_at(line_of, start) + 1,
+                    end_line: line_at(line_of, close) + 1,
+                });
+            }
+        }
+    }
+    spans
+}
+
+/// Spans of functions with bodies. The body `{` is the first brace at
+/// paren depth 0 after the name (signatures in this codebase never contain
+/// braces); a `;` first means a bodiless trait declaration.
+fn fn_spans(code: &str, line_of: &[usize]) -> Vec<FnSpan> {
+    let bytes = code.as_bytes();
+    let mut spans = Vec::new();
+    let mut from = 0usize;
+    while let Some(off) = code[from..].find("fn") {
+        let start = from + off;
+        from = start + 2;
+        let prev_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let next_ok = start + 2 >= bytes.len() || !is_ident_byte(bytes[start + 2]);
+        if !prev_ok || !next_ok {
+            continue;
+        }
+        let mut k = start + 2;
+        while k < bytes.len() && bytes[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        let name_start = k;
+        while k < bytes.len() && is_ident_byte(bytes[k]) {
+            k += 1;
+        }
+        if k == name_start {
+            // `fn(` pointer type, `impl Fn` etc.
+            continue;
+        }
+        let name = code[name_start..k].to_string();
+        let mut paren = 0i64;
+        let body = loop {
+            if k >= bytes.len() {
+                break None;
+            }
+            match bytes[k] {
+                b'(' => paren += 1,
+                b')' => paren -= 1,
+                b'{' if paren == 0 => break Some(k),
+                b';' if paren == 0 => break None,
+                _ => {}
+            }
+            k += 1;
+        };
+        if let Some(open) = body {
+            if let Some(close) = match_brace(bytes, open) {
+                spans.push(FnSpan {
+                    name,
+                    sig_line: line_at(line_of, start) + 1,
+                    body_start_line: line_at(line_of, open) + 1,
+                    body_end_line: line_at(line_of, close) + 1,
+                });
+            }
+        }
+    }
+    spans
+}
+
+/// Whether `tok` occurs in `line` at an identifier boundary (the char
+/// before a leading ident char and after a trailing ident char must be
+/// non-ident). Tokens that start or end with punctuation skip that side's
+/// check, so `.unwrap()` and `rand::` behave as expected.
+pub fn token_hits(line: &str, tok: &str) -> Option<usize> {
+    let lb = line.as_bytes();
+    let tb = tok.as_bytes();
+    if tb.is_empty() {
+        return None;
+    }
+    let mut from = 0usize;
+    while let Some(off) = line[from..].find(tok) {
+        let s = from + off;
+        from = s + 1;
+        let before_ok = if is_ident_byte(tb[0]) {
+            s == 0 || !is_ident_byte(lb[s - 1])
+        } else {
+            true
+        };
+        let last = tb[tb.len() - 1];
+        let after_ok = if is_ident_byte(last) {
+            s + tb.len() >= lb.len() || !is_ident_byte(lb[s + tb.len()])
+        } else {
+            true
+        };
+        if before_ok && after_ok {
+            return Some(s);
+        }
+    }
+    None
+}
+
+/// Columns of indexing expressions: `[` immediately preceded by an
+/// identifier char, `)`, or `]` — i.e. `x[i]`, `f()[0]`, `m[a][b]` — which
+/// are exactly the bracket uses that can panic. Type positions (`[u8; 4]`,
+/// `&[f32]`), attributes (`#[..]`), and macros (`vec![..]`) are preceded
+/// by punctuation and never match.
+pub fn indexing_cols(line: &str) -> Vec<usize> {
+    let b = line.as_bytes();
+    let mut v = Vec::new();
+    for i in 1..b.len() {
+        if b[i] == b'[' {
+            let p = b[i - 1];
+            if is_ident_byte(p) || p == b')' || p == b']' {
+                v.push(i);
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_comments_and_strings() {
+        let src = "let a = \"HashMap\"; // HashMap here\nlet b = 1; /* vec! */ let c = 2;\n";
+        let out = scrub(src);
+        assert!(!out.contains("HashMap"));
+        assert!(!out.contains("vec!"));
+        assert!(out.contains("let a ="));
+        assert!(out.contains("let c = 2;"));
+        assert_eq!(out.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn scrub_handles_raw_strings_and_char_literals() {
+        let src = "let r = r#\"unsafe { panic!() }\"#;\nlet c = '\\'';\nlet l: &'static str = x;\nlet q = 'a';\n";
+        let out = scrub(src);
+        assert!(!out.contains("panic!"));
+        assert!(!out.contains("unsafe"));
+        assert!(out.contains("'static"), "lifetime survived: {out}");
+        assert!(!out.contains("'a'"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* x /* y */ z */ b\n";
+        let out = scrub(src);
+        assert!(out.contains('a') && out.contains('b'));
+        assert!(!out.contains('x') && !out.contains('y') && !out.contains('z'));
+    }
+
+    #[test]
+    fn test_regions_cover_mod_and_fn() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\n#[test]\nfn solo() { z.unwrap(); }\nfn live2() {}\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.is_test_line(0));
+        assert!(f.is_test_line(2) && f.is_test_line(3) && f.is_test_line(4));
+        assert!(f.is_test_line(6));
+        assert!(!f.is_test_line(7));
+    }
+
+    #[test]
+    fn fn_and_mod_spans() {
+        let src = "mod reference {\n    pub fn apply(x: &[f32]) -> f32 {\n        x[0]\n    }\n}\nfn apply() {\n    ()\n}\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.in_mod(2, "reference"));
+        assert!(!f.in_mod(6, "reference"));
+        let spans: Vec<_> = f.fns.iter().map(|s| (s.name.as_str(), s.sig_line)).collect();
+        assert_eq!(spans, vec![("apply", 2), ("apply", 6)]);
+        assert_eq!(f.enclosing_fn(2).map(|s| s.sig_line), Some(2));
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(token_hits("use std::collections::HashMap;", "HashMap").is_some());
+        assert!(token_hits("let map_of_hashes = 1;", "HashMap").is_none());
+        assert!(token_hits("x.unwrap();", ".unwrap()").is_some());
+        assert!(token_hits("x.unwrap_or_else(f);", ".unwrap()").is_none());
+        assert!(token_hits("rand::thread_rng()", "rand::").is_some());
+        assert!(token_hits("operand::foo()", "rand::").is_none());
+    }
+
+    #[test]
+    fn indexing_detection() {
+        assert_eq!(indexing_cols("let y = xs[i];").len(), 1);
+        assert_eq!(indexing_cols("let y = f()[0];").len(), 1);
+        assert!(indexing_cols("#[derive(Debug)]").is_empty());
+        assert!(indexing_cols("let v: &[f32] = &x;").is_empty());
+        assert!(indexing_cols("vec![0; 4]").is_empty());
+        assert_eq!(indexing_cols("&msg[..end]").len(), 1);
+    }
+}

@@ -1,0 +1,80 @@
+//! etlint — in-repo invariant linter for the extreme-tensoring codebase.
+//!
+//! Enforces five invariants over scrubbed source text (see lexer.rs),
+//! scoped by the checked-in `etlint.toml`:
+//!
+//! 1. determinism      — no HashMap/HashSet/clocks/RNG on the step path
+//! 2. zero-alloc       — no allocating calls in kernel hot-path functions
+//! 3. no-panic         — no unwrap/expect/panic!/indexing in transport code
+//! 4. unsafe-hygiene   — every `unsafe` documented, raw-parts allowlisted
+//! 5. wire-exhaustive  — every frame tag has encode + decode arms + a test
+//!
+//! Usage: `cargo run -p etlint [-- --root <dir> --config <file>]`
+//! Exit codes: 0 clean, 1 findings, 2 usage/config/io error.
+
+mod config;
+mod lexer;
+mod rules;
+
+use rules::Finding;
+use std::path::PathBuf;
+
+fn run() -> Result<Vec<Finding>, String> {
+    let mut root = PathBuf::from(".");
+    let mut config_path = PathBuf::from("etlint.toml");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => {
+                root = PathBuf::from(
+                    args.next().ok_or_else(|| "--root needs a value".to_string())?,
+                );
+            }
+            "--config" => {
+                config_path = PathBuf::from(
+                    args.next().ok_or_else(|| "--config needs a value".to_string())?,
+                );
+            }
+            other => return Err(format!("unknown argument {other:?}")),
+        }
+    }
+    let text = std::fs::read_to_string(&config_path)
+        .map_err(|e| format!("read config {}: {e}", config_path.display()))?;
+    let tables = config::parse(&text)?;
+    if tables.is_empty() {
+        return Err(format!("{}: no rule tables", config_path.display()));
+    }
+
+    let mut findings = Vec::new();
+    for table in &tables {
+        let batch = match table.name.as_str() {
+            "determinism" => rules::determinism(&root, table)?,
+            "zero_alloc" => rules::zero_alloc(&root, table)?,
+            "no_panic" => rules::no_panic(&root, table)?,
+            "unsafe_hygiene" => rules::unsafe_hygiene(&root, table)?,
+            "wire" => rules::wire_exhaustive(&root, table)?,
+            other => return Err(format!("unknown rule table [{other}]")),
+        };
+        findings.extend(batch);
+    }
+    Ok(findings)
+}
+
+fn main() {
+    match run() {
+        Ok(findings) if findings.is_empty() => {
+            println!("etlint: clean");
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("etlint: {} finding(s)", findings.len());
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("etlint: error: {e}");
+            std::process::exit(2);
+        }
+    }
+}

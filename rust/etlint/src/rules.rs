@@ -1,0 +1,415 @@
+//! The five invariant rules. Each rule takes its scope from `etlint.toml`
+//! and emits [`Finding`]s; main.rs renders and counts them.
+
+use crate::config::Table;
+use crate::lexer::{indexing_cols, token_hits, SourceFile};
+use std::path::Path;
+
+/// One rule violation, pointed at a source line.
+#[derive(Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Recursively collect `.rs` files under `rel` (a file or directory path
+/// relative to `root`), sorted for deterministic report order.
+pub fn rs_files(root: &Path, rel: &str) -> Result<Vec<String>, String> {
+    let full = root.join(rel);
+    if full.is_file() {
+        return Ok(vec![rel.to_string()]);
+    }
+    if !full.is_dir() {
+        return Err(format!("scope path {rel:?} is neither a file nor a directory"));
+    }
+    let mut out = Vec::new();
+    let mut stack = vec![rel.to_string()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> = std::fs::read_dir(root.join(&dir))
+            .map_err(|e| format!("read_dir {dir:?}: {e}"))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        entries.sort();
+        for name in entries {
+            let rel_child = format!("{dir}/{name}");
+            let full_child = root.join(&rel_child);
+            if full_child.is_dir() {
+                stack.push(rel_child);
+            } else if name.ends_with(".rs") {
+                out.push(rel_child);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn load(root: &Path, rel: &str) -> Result<SourceFile, String> {
+    SourceFile::load(root, rel).map_err(|e| format!("read {rel:?}: {e}"))
+}
+
+/// Rule 1 — determinism: step-path modules must not name nondeterministic
+/// constructs (hash-order iteration, wall clocks, RNG construction)
+/// outside test code. Banning the names outright (not just iteration) is
+/// deliberate: in these modules there is no legitimate use at all, and a
+/// name ban is checkable without type information.
+pub fn determinism(root: &Path, cfg: &Table) -> Result<Vec<Finding>, String> {
+    let banned = cfg.list("banned");
+    if banned.is_empty() {
+        return Err("[determinism] needs a `banned` token list".to_string());
+    }
+    let mut findings = Vec::new();
+    for scope in cfg.list("paths") {
+        for rel in rs_files(root, &scope)? {
+            let f = load(root, &rel)?;
+            for (l0, line) in f.code_lines.iter().enumerate() {
+                if f.is_test_line(l0) {
+                    continue;
+                }
+                for tok in &banned {
+                    if token_hits(line, tok).is_some() {
+                        findings.push(Finding {
+                            file: rel.clone(),
+                            line: l0 + 1,
+                            rule: "determinism",
+                            message: format!("nondeterministic construct `{tok}` on the step path"),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(findings)
+}
+
+/// Rule 2 — zero-alloc: listed hot-path functions must not contain
+/// allocating calls. Complements the runtime counting-allocator test
+/// (`rust/tests/alloc_regression.rs`): the test proves steady state, this
+/// proves the source can't regress warm-up-only paths into per-step ones.
+pub fn zero_alloc(root: &Path, cfg: &Table) -> Result<Vec<Finding>, String> {
+    let file = cfg
+        .str("file")
+        .ok_or_else(|| "[[zero_alloc]] entry needs `file`".to_string())?;
+    let functions = cfg.list("functions");
+    if functions.is_empty() {
+        return Err(format!("[[zero_alloc]] entry for {file:?} needs `functions`"));
+    }
+    let banned = cfg.list("banned");
+    if banned.is_empty() {
+        return Err(format!("[[zero_alloc]] entry for {file:?} needs `banned`"));
+    }
+    let exclude_mods = cfg.list("exclude_mods");
+    let f = load(root, file)?;
+    let mut findings = Vec::new();
+    for span in &f.fns {
+        if !functions.iter().any(|n| n == &span.name) {
+            continue;
+        }
+        let l0 = span.sig_line - 1;
+        if f.is_test_line(l0) || exclude_mods.iter().any(|m| f.in_mod(l0, m)) {
+            continue;
+        }
+        for l in span.body_start_line..=span.body_end_line {
+            let line = &f.code_lines[l - 1];
+            for tok in &banned {
+                if token_hits(line, tok).is_some() {
+                    findings.push(Finding {
+                        file: file.to_string(),
+                        line: l,
+                        rule: "zero-alloc",
+                        message: format!("allocating call `{tok}` in hot-path fn `{}`", span.name),
+                    });
+                }
+            }
+        }
+    }
+    Ok(findings)
+}
+
+/// Rule 3 — no-panic: transport/codec/scheduler code must propagate typed
+/// errors, never panic. `check_indexing = false` scopes document their
+/// audited loop-bounded indexing in the config.
+pub fn no_panic(root: &Path, cfg: &Table) -> Result<Vec<Finding>, String> {
+    let path = cfg.str("path").ok_or_else(|| "[[no_panic]] entry needs `path`".to_string())?;
+    let banned = cfg.list("banned");
+    if banned.is_empty() {
+        return Err(format!("[[no_panic]] entry for {path:?} needs `banned`"));
+    }
+    let check_indexing = cfg.bool_or("check_indexing", true);
+    let mut findings = Vec::new();
+    for rel in rs_files(root, path)? {
+        let f = load(root, &rel)?;
+        for (l0, line) in f.code_lines.iter().enumerate() {
+            if f.is_test_line(l0) {
+                continue;
+            }
+            for tok in &banned {
+                if token_hits(line, tok).is_some() {
+                    findings.push(Finding {
+                        file: rel.clone(),
+                        line: l0 + 1,
+                        rule: "no-panic",
+                        message: format!("panicking call `{tok}` in no-panic scope"),
+                    });
+                }
+            }
+            if check_indexing && !indexing_cols(line).is_empty() {
+                findings.push(Finding {
+                    file: rel.clone(),
+                    line: l0 + 1,
+                    rule: "no-panic",
+                    message: "slice/array indexing in no-panic scope (use .get()/.get_mut())"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    Ok(findings)
+}
+
+/// Rule 4 — unsafe hygiene: every `unsafe` token needs a `// SAFETY:`
+/// comment within `comment_window` raw lines above (or on the same line),
+/// and every `from_raw_parts` site must sit in an allowlisted function.
+pub fn unsafe_hygiene(root: &Path, cfg: &Table) -> Result<Vec<Finding>, String> {
+    let window = cfg.int_or("comment_window", 8).max(0) as usize;
+    let allow: Vec<String> = cfg.list("allow_from_raw_parts");
+    let mut findings = Vec::new();
+    for scope in cfg.list("paths") {
+        for rel in rs_files(root, &scope)? {
+            let f = load(root, &rel)?;
+            for (l0, line) in f.code_lines.iter().enumerate() {
+                if token_hits(line, "unsafe").is_some() {
+                    let lo = l0.saturating_sub(window);
+                    let documented = f.raw_lines[lo..=l0].iter().any(|r| r.contains("SAFETY:"));
+                    if !documented {
+                        findings.push(Finding {
+                            file: rel.clone(),
+                            line: l0 + 1,
+                            rule: "unsafe-hygiene",
+                            message: format!(
+                                "`unsafe` without a `// SAFETY:` comment within {window} lines"
+                            ),
+                        });
+                    }
+                }
+                // Substring, not token: must also catch `from_raw_parts_mut`.
+                if line.contains("from_raw_parts") {
+                    let site = match f.enclosing_fn(l0) {
+                        Some(span) => format!("{rel}::{}", span.name),
+                        None => format!("{rel}::<file-scope>"),
+                    };
+                    if !allow.iter().any(|a| a == &site) {
+                        findings.push(Finding {
+                            file: rel.clone(),
+                            line: l0 + 1,
+                            rule: "unsafe-hygiene",
+                            message: format!(
+                                "`from_raw_parts` at unaudited site `{site}` (add it to \
+                                 allow_from_raw_parts after review)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(findings)
+}
+
+/// Rule 5 — wire exhaustiveness: every frame tag constant declared in the
+/// wire module must be used at least `min_code_uses` times outside tests
+/// (its encode and decode arms) and at least once in test code, so no tag
+/// can exist without both directions and coverage.
+pub fn wire_exhaustive(root: &Path, cfg: &Table) -> Result<Vec<Finding>, String> {
+    let decl_file = cfg.str("decl_file").ok_or_else(|| "[wire] needs `decl_file`".to_string())?;
+    let prefixes = cfg.list("tag_prefixes");
+    if prefixes.is_empty() {
+        return Err("[wire] needs `tag_prefixes`".to_string());
+    }
+    let use_paths = cfg.list("use_paths");
+    let test_paths = cfg.list("test_paths");
+    let min_code_uses = cfg.int_or("min_code_uses", 2).max(0) as usize;
+
+    let decl = load(root, decl_file)?;
+    // Collect `const NAME` declarations whose name carries a tag prefix.
+    let mut tags: Vec<(String, usize)> = Vec::new();
+    for (l0, line) in decl.code_lines.iter().enumerate() {
+        if decl.is_test_line(l0) {
+            continue;
+        }
+        if let Some(col) = token_hits(line, "const") {
+            let rest = &line[col + 5..];
+            let name: String = rest
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if prefixes.iter().any(|p| name.starts_with(p.as_str())) {
+                tags.push((name, l0 + 1));
+            }
+        }
+    }
+
+    // Count usages across the transport layer and its tests.
+    let mut counts: Vec<(usize, usize)> = vec![(0, 0); tags.len()]; // (code, test)
+    for scope in &use_paths {
+        let scope_is_test = test_paths.iter().any(|t| scope.starts_with(t.as_str()));
+        for rel in rs_files(root, scope)? {
+            let f = load(root, &rel)?;
+            for (l0, line) in f.code_lines.iter().enumerate() {
+                for (ti, (name, decl_line)) in tags.iter().enumerate() {
+                    if token_hits(line, name).is_none() {
+                        continue;
+                    }
+                    if rel == decl_file && l0 + 1 == *decl_line {
+                        continue; // the declaration itself
+                    }
+                    if scope_is_test || f.is_test_line(l0) {
+                        counts[ti].1 += 1;
+                    } else {
+                        counts[ti].0 += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    for ((name, decl_line), (code_uses, test_uses)) in tags.iter().zip(&counts) {
+        if *code_uses < min_code_uses {
+            findings.push(Finding {
+                file: decl_file.to_string(),
+                line: *decl_line,
+                rule: "wire-exhaustive",
+                message: format!(
+                    "tag `{name}` has {code_uses} non-test use(s); needs ≥ {min_code_uses} \
+                     (encode + decode arms)"
+                ),
+            });
+        }
+        if *test_uses == 0 {
+            findings.push(Finding {
+                file: decl_file.to_string(),
+                line: *decl_line,
+                rule: "wire-exhaustive",
+                message: format!("tag `{name}` never appears in a test"),
+            });
+        }
+    }
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use std::path::PathBuf;
+
+    /// Write a throwaway fixture tree and return its root.
+    fn fixture(files: &[(&str, &str)]) -> PathBuf {
+        static NEXT: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        let id = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let root = std::env::temp_dir().join(format!("etlint-fix-{}-{id}", std::process::id()));
+        for (rel, text) in files {
+            let path = root.join(rel);
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(path, text).unwrap();
+        }
+        root
+    }
+
+    fn table(text: &str) -> config::Table {
+        config::parse(text).unwrap().into_iter().next().unwrap()
+    }
+
+    #[test]
+    fn determinism_flags_live_code_not_tests_or_strings() {
+        let root = fixture(&[(
+            "src/step.rs",
+            "use std::collections::HashMap;\nfn f() { let t = std::time::Instant::now(); }\nfn ok() { let s = \"HashMap\"; }\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n",
+        )]);
+        let cfg = table(
+            "[determinism]\npaths = [\"src/step.rs\"]\nbanned = [\"HashMap\", \"Instant::now\"]\n",
+        );
+        let f = determinism(&root, &cfg).unwrap();
+        let lines: Vec<usize> = f.iter().map(|x| x.line).collect();
+        assert_eq!(lines, vec![1, 2], "{f:?}");
+    }
+
+    #[test]
+    fn zero_alloc_scopes_to_named_fns_and_skips_excluded_mods() {
+        let root = fixture(&[(
+            "src/kern.rs",
+            "pub fn apply(s: &mut [f32]) {\n    let v = x.to_vec();\n}\npub fn cold() {\n    let v = vec![0; 4];\n}\npub mod reference {\n    pub fn apply() {\n        let v = vec![0usize; 4];\n    }\n}\n",
+        )]);
+        let cfg = table(
+            "[[zero_alloc]]\nfile = \"src/kern.rs\"\nfunctions = [\"apply\"]\nexclude_mods = [\"reference\"]\nbanned = [\".to_vec()\", \"vec!\"]\n",
+        );
+        let f = zero_alloc(&root, &cfg).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn no_panic_flags_unwrap_and_indexing() {
+        let root = fixture(&[(
+            "src/t.rs",
+            "fn f(v: &[u8]) -> u8 {\n    let a = v.first().unwrap();\n    v[0]\n}\nfn g(v: &[u8]) -> Option<u8> {\n    v.first().copied()\n}\n",
+        )]);
+        let cfg = table(
+            "[[no_panic]]\npath = \"src/t.rs\"\nbanned = [\".unwrap()\", \".expect(\", \"panic!\"]\n",
+        );
+        let f = no_panic(&root, &cfg).unwrap();
+        assert_eq!(f.len(), 2, "{f:?}");
+        let no_idx = table(
+            "[[no_panic]]\npath = \"src/t.rs\"\ncheck_indexing = false\nbanned = [\".unwrap()\"]\n",
+        );
+        assert_eq!(no_panic(&root, &no_idx).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn unsafe_hygiene_wants_safety_comments_and_allowlist() {
+        let root = fixture(&[(
+            "src/u.rs",
+            "fn doc() {\n    // SAFETY: contract here.\n    let x = unsafe { f() };\n}\nfn bare() {\n    let x = unsafe { f() };\n}\nfn raw() {\n    // SAFETY: fine.\n    let s = unsafe { std::slice::from_raw_parts(p, n) };\n}\n",
+        )]);
+        // Window of 2: wide enough to pair each comment with its block,
+        // narrow enough that `bare`'s unsafe can't see `doc`'s comment.
+        let cfg = table(
+            "[unsafe_hygiene]\npaths = [\"src/u.rs\"]\ncomment_window = 2\nallow_from_raw_parts = [\"src/u.rs::raw\"]\n",
+        );
+        let f = unsafe_hygiene(&root, &cfg).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 6);
+        let strict = table("[unsafe_hygiene]\npaths = [\"src/u.rs\"]\ncomment_window = 2\n");
+        let f2 = unsafe_hygiene(&root, &strict).unwrap();
+        assert!(f2.iter().any(|x| x.message.contains("unaudited site")), "{f2:?}");
+    }
+
+    #[test]
+    fn wire_exhaustive_needs_both_arms_and_a_test() {
+        let root = fixture(&[
+            (
+                "src/wire.rs",
+                "pub const OP_A: u32 = 1;\npub const OP_B: u32 = 2;\nfn encode() { put(OP_A); put(OP_B); }\nfn decode() { match op { OP_A => {} OP_B => {} _ => {} } }\n",
+            ),
+            ("tests/wire.rs", "fn t() { assert_eq!(OP_A, 1); }\n"),
+        ]);
+        let cfg = table(
+            "[wire]\ndecl_file = \"src/wire.rs\"\ntag_prefixes = [\"OP_\"]\nuse_paths = [\"src\", \"tests\"]\ntest_paths = [\"tests\"]\n",
+        );
+        let f = wire_exhaustive(&root, &cfg).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("OP_B"));
+        assert!(f[0].message.contains("never appears in a test"));
+    }
+}

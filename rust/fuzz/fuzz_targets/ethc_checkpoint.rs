@@ -1,0 +1,13 @@
+//! Fuzz the ETHC host-checkpoint loader against a fixed group layout
+//! (matching the seed corpus): arbitrary bytes must produce `Ok` or a
+//! typed `Err` — never a panic, never an unbounded allocation.
+#![no_main]
+
+use extensor::optim::GroupSpec;
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let groups = [GroupSpec::new("w", &[4, 3]), GroupSpec::new("b", &[3])];
+    let mut r = data;
+    let _ = extensor::train::checkpoint::read_host(&groups, &mut r);
+});

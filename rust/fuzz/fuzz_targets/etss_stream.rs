@@ -1,0 +1,11 @@
+//! Fuzz the ETSS state-stream importer: arbitrary bytes must produce
+//! `Ok` or a typed `Err` — never a panic, never an unbounded allocation.
+//! The buffer bound mirrors what real callers pass (2x the largest group).
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let mut r = data;
+    let _ = extensor::optim::stream::read_export_stream(&mut r, 1 << 16);
+});

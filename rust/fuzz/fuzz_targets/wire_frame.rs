@@ -1,0 +1,10 @@
+//! Fuzz the worker-spec frame decoder: arbitrary bytes must produce
+//! `Ok` or a typed `Err` — never a panic, never an unbounded allocation.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let mut r = data;
+    let _ = extensor::transport::wire::read_worker_spec(&mut r);
+});

@@ -125,6 +125,28 @@
 //! budget × task into the paper-style memory-vs-quality frontier
 //! (`BENCH_pareto.json`).
 //!
+//! Wrapped around the runtime stack sits a static **analysis layer** that
+//! enforces the contracts the paragraphs above claim:
+//!
+//! ```text
+//! source tree ──▶ etlint (rust/etlint, etlint.toml) ──▶ CI `lint` job
+//!                  determinism · zero-alloc · no-panic ·
+//!                  unsafe-hygiene · wire-exhaustiveness
+//! untrusted bytes ──▶ rust/fuzz targets (wire / ETSS / ETHC decoders)
+//!                  + rust/tests/wire_malformed.rs (corpus regressions)
+//!                  + CI `miri` job (codec / stream / quantization UB check)
+//! ```
+//!
+//! `etlint` is a zero-dependency token scanner over comment/literal-
+//! scrubbed source: the determinism contract bans clocks, hash-order
+//! iteration, and RNG construction from the step path; the zero-alloc
+//! contract pins the kernel hot-path functions; the no-panic contract
+//! keeps transport/codec/scheduler code on typed errors; every `unsafe`
+//! needs a `// SAFETY:` comment and every `from_raw_parts` an allowlist
+//! entry; and every wire opcode must keep its encode arm, decode arm, and
+//! a test. See `EXPERIMENTS.md` §Static analysis for the rule inventory
+//! and run instructions.
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 

@@ -21,9 +21,7 @@ impl UpdateRule for AdaDeltaRule {
         let (gs, scratch) = st.group_and_scratch(gi);
         anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
         let (rho, eps) = (self.rho, self.eps);
-        gs.with_bufs_in(&mut scratch.decode, |bufs| {
-            let (eg2, ex2) = bufs.split_at_mut(1);
-            let (eg2, ex2) = (&mut *eg2[0], &mut *ex2[0]);
+        gs.with_buf2_in(&mut scratch.decode, |eg2, ex2| {
             for i in 0..eg2.len() {
                 eg2[i] = rho * eg2[i] + (1.0 - rho) * g[i] * g[i];
                 let dx = ((ex2[i] + eps) / (eg2[i] + eps)).sqrt() * g[i];

@@ -22,7 +22,7 @@
 //! vectors — the layout [`crate::tensoring::memory::group_state_buffer_lens`]
 //! assigns, so the factored-vs-full decision is shared with the accounting.
 
-use super::state::{OptState, UpdateRule};
+use super::state::{OptState, StepScratch, UpdateRule};
 use crate::tensoring::OptimizerKind;
 use anyhow::Result;
 
@@ -44,8 +44,7 @@ impl UpdateRule for AdafactorRule {
         let (beta2, eps) = (self.beta2, self.eps);
         if !factored {
             anyhow::ensure!(x.len() == numel && g.len() == numel);
-            gs.with_bufs_in(&mut scratch.decode, |bufs| {
-                let v = &mut *bufs[0];
+            gs.with_buf1_in(&mut scratch.decode, |v| {
                 for i in 0..v.len() {
                     let sq = g[i] * g[i];
                     v[i] = match beta2 {
@@ -59,12 +58,19 @@ impl UpdateRule for AdafactorRule {
         }
         let (rows, cols) = (gs.buf(0).len(), gs.buf(1).len());
         anyhow::ensure!(x.len() == rows * cols && g.len() == rows * cols);
-        gs.with_bufs_in(&mut scratch.decode, |bufs| {
-            let (r, c) = bufs.split_at_mut(1);
-            let (r, c) = (&mut *r[0], &mut *c[0]);
+        // Split the scratch so the decode buffers feed the state views while
+        // the factor buffers hold this step's row/col mean squares — reused
+        // across steps, so the matrix path stays allocation-free after
+        // warm-up like every other rule.
+        let StepScratch { decode, factor_rows, factor_cols, .. } = scratch;
+        factor_rows.clear();
+        factor_rows.resize(rows, 0.0);
+        factor_cols.clear();
+        factor_cols.resize(cols, 0.0);
+        gs.with_buf2_in(decode, |r, c| {
             // row/col mean squared gradients
-            let mut row_ms = vec![0.0f32; rows];
-            let mut col_ms = vec![0.0f32; cols];
+            let row_ms: &mut [f32] = factor_rows;
+            let col_ms: &mut [f32] = factor_cols;
             for i in 0..rows {
                 let grow = &g[i * cols..(i + 1) * cols];
                 let mut acc = 0.0f32;

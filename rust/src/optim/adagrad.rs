@@ -19,8 +19,7 @@ impl UpdateRule for AdaGradRule {
         let (gs, scratch) = st.group_and_scratch(gi);
         anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
         let eps = self.eps;
-        gs.with_bufs_in(&mut scratch.decode, |bufs| {
-            let s = &mut *bufs[0];
+        gs.with_buf1_in(&mut scratch.decode, |s| {
             for i in 0..s.len() {
                 s[i] += g[i] * g[i];
                 x[i] -= lr * g[i] / (eps + s[i]).sqrt();

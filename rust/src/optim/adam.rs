@@ -29,9 +29,7 @@ impl UpdateRule for AdamRule {
         let (beta1, beta2, eps) = (self.beta1, self.beta2, self.eps);
         let bc1 = 1.0 - beta1.powi(t);
         let bc2 = 1.0 - beta2.powi(t);
-        gs.with_bufs_in(&mut scratch.decode, |bufs| {
-            let (m, v) = bufs.split_at_mut(1);
-            let (m, v) = (&mut *m[0], &mut *v[0]);
+        gs.with_buf2_in(&mut scratch.decode, |m, v| {
             for i in 0..m.len() {
                 m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
                 v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];

@@ -106,7 +106,7 @@ impl UpdateRule for EtRule {
         let steps = gs.steps;
         let (eps, beta2) = (self.eps, self.beta2);
         let dims = ix.dims();
-        let StepScratch { kernel, decode } = scratch;
+        let StepScratch { kernel, decode, .. } = scratch;
         if gs.all_dense() {
             // In-place f32 views — no copies, no allocations.
             let bufs = gs.bufs_mut();

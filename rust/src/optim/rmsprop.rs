@@ -20,8 +20,7 @@ impl UpdateRule for RmsPropRule {
         let (gs, scratch) = st.group_and_scratch(gi);
         anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
         let (beta2, eps) = (self.beta2, self.eps);
-        gs.with_bufs_in(&mut scratch.decode, |bufs| {
-            let v = &mut *bufs[0];
+        gs.with_buf1_in(&mut scratch.decode, |v| {
             for i in 0..v.len() {
                 v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
                 x[i] -= lr * g[i] / (v[i].sqrt() + eps);

@@ -57,8 +57,7 @@ impl UpdateRule for SgdMomentumRule {
         let (gs, scratch) = st.group_and_scratch(gi);
         anyhow::ensure!(x.len() == gs.numel && g.len() == gs.numel);
         let mu = self.mu;
-        gs.with_bufs_in(&mut scratch.decode, |bufs| {
-            let v = &mut *bufs[0];
+        gs.with_buf1_in(&mut scratch.decode, |v| {
             for i in 0..v.len() {
                 v[i] = mu * v[i] + g[i];
                 x[i] -= lr * v[i];

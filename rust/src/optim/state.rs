@@ -552,9 +552,10 @@ impl GroupState {
     /// quantized buffers are decoded into the caller's reusable `decode`
     /// scratch and re-encoded after, so the decode round trip itself
     /// allocates nothing in steady state. (The per-call `Vec` of views
-    /// collected for the closure still allocates — the fully
-    /// allocation-free path is the ET rule's direct kernel drive; see the
-    /// ROADMAP follow-up for extending that to the other rules.)
+    /// collected for the closure still allocates — per-step rules with a
+    /// fixed buffer count use the fully allocation-free
+    /// [`Self::with_buf1_in`]/[`Self::with_buf2_in`] instead; this general
+    /// form remains for variable-arity callers off the hot path.)
     pub fn with_bufs_in<R>(
         &mut self,
         decode: &mut Vec<Vec<f32>>,
@@ -591,6 +592,51 @@ impl GroupState {
         self.with_bufs_in(&mut decode, f)
     }
 
+    /// Run `f` over the group's single state buffer as an in-place `f32`
+    /// view. Unlike [`Self::with_bufs_in`] this never materializes a `Vec`
+    /// of views, so the dense path performs zero heap allocations — the
+    /// one-buffer analogue of the ET rules' direct kernel drive, used by
+    /// the AdaGrad/RMSprop/SGD-momentum hot paths (pinned by
+    /// `rust/tests/alloc_regression.rs`).
+    pub fn with_buf1_in<R>(
+        &mut self,
+        decode: &mut Vec<Vec<f32>>,
+        f: impl FnOnce(&mut [f32]) -> R,
+    ) -> R {
+        debug_assert_eq!(self.bufs.len(), 1, "with_buf1_in on a {}-buffer group", self.bufs.len());
+        if let StateBuf::Dense(v) = &mut self.bufs[0] {
+            return f(v);
+        }
+        self.decode_bufs(decode);
+        let r = f(&mut decode[0]);
+        self.encode_bufs(&decode[..1]);
+        r
+    }
+
+    /// Two-buffer variant of [`Self::with_buf1_in`] (Adam's `m`/`v`,
+    /// Adadelta's `eg2`/`ex2`): both views are handed out via
+    /// `split_at_mut`, no view `Vec` is collected, and the dense path is
+    /// allocation-free.
+    pub fn with_buf2_in<R>(
+        &mut self,
+        decode: &mut Vec<Vec<f32>>,
+        f: impl FnOnce(&mut [f32], &mut [f32]) -> R,
+    ) -> R {
+        debug_assert_eq!(self.bufs.len(), 2, "with_buf2_in on a {}-buffer group", self.bufs.len());
+        if self.all_dense() {
+            let (a, b) = self.bufs.split_at_mut(1);
+            if let (StateBuf::Dense(va), StateBuf::Dense(vb)) = (&mut a[0], &mut b[0]) {
+                return f(va, vb);
+            }
+            unreachable!("all_dense group with non-dense buffer");
+        }
+        self.decode_bufs(decode);
+        let (da, db) = decode.split_at_mut(1);
+        let r = f(&mut da[0], &mut db[0]);
+        self.encode_bufs(&decode[..2]);
+        r
+    }
+
     fn state_scalars(&self) -> usize {
         self.bufs.iter().map(|b| b.len()).sum::<usize>() + self.wide.len()
     }
@@ -613,6 +659,11 @@ pub struct StepScratch {
     pub kernel: KernelScratch,
     /// Reusable dense decode buffers for quantized state.
     pub decode: Vec<Vec<f32>>,
+    /// Adafactor's per-step row mean-squares (matrix path), sized to the
+    /// largest row count seen.
+    pub factor_rows: Vec<f32>,
+    /// Adafactor's per-step column mean-squares.
+    pub factor_cols: Vec<f32>,
 }
 
 /// Whole-model optimizer state: one [`GroupState`] per parameter group plus

@@ -58,6 +58,10 @@ const OP_END: u32 = 3;
 const MAX_GROUP_BUFS: usize = 4096;
 /// Matches the ETHC plausibility bound for the never-quantized f64 tail.
 const MAX_WIDE: usize = 16;
+/// Cap on the header's group count, mirroring the wire layer's
+/// `MAX_GROUPS`: the count arrives from sockets and checkpoint files, so
+/// it must not size an allocation unchecked.
+pub const MAX_STREAM_GROUPS: usize = 1 << 20;
 
 /// Order-sensitive FNV-1a fold over the stream's logical values.
 #[derive(Clone, Debug)]
@@ -370,7 +374,13 @@ pub fn read_stream_end(r: &mut impl Read, ck: &StreamChecksum) -> Result<()> {
 pub fn read_export_stream(r: &mut impl Read, max_buf_numel: usize) -> Result<StateExport> {
     let mut ck = StreamChecksum::new();
     let (kind, step, n_groups) = read_stream_header(r, &mut ck)?;
-    let mut groups = Vec::with_capacity(n_groups.min(1 << 20));
+    anyhow::ensure!(
+        n_groups <= MAX_STREAM_GROUPS,
+        "implausible stream group count {n_groups} (cap {MAX_STREAM_GROUPS})"
+    );
+    // Bounded pre-reserve: the header count is peer-controlled (sockets,
+    // checkpoints), so growth past this must cost real group frames.
+    let mut groups = Vec::with_capacity(n_groups.min(64));
     for _ in 0..n_groups {
         groups.push(read_stream_group(r, max_buf_numel, &mut ck)?);
     }

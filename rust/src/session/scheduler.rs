@@ -220,7 +220,10 @@ pub fn run_batch(
 
         // Announce the queue (and the pre-failures) before work starts.
         {
-            let mut q = state.lock().unwrap();
+            // Poisoned queue state is still structurally valid (a panicked
+            // worker can't half-apply these field writes), so recover the
+            // data instead of propagating the panic.
+            let mut q = state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             for (i, s) in specs.iter().enumerate() {
                 let ev = match &prefailed[i] {
                     None => {
@@ -256,10 +259,12 @@ pub fn run_batch(
             let _ = h.join();
         }
         drop(tx);
-        collector.join().expect("event collector panicked")
+        // A panicked collector loses the in-memory event copy but must not
+        // take down the batch: the per-job results below are authoritative.
+        collector.join().unwrap_or_default()
     });
 
-    let qs = state.into_inner().unwrap();
+    let qs = state.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     let results: Vec<JobResult> = qs
         .results
         .into_iter()
@@ -304,7 +309,9 @@ fn worker_loop(
         // head-of-line blocking cannot deadlock. Exits when the queue is
         // drained.
         let claimed = {
-            let mut q = state.lock().unwrap();
+            // See run_batch: QueueState stays structurally valid across a
+            // worker panic, so poison recovery is safe here and below.
+            let mut q = state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             loop {
                 let Some(&front) = q.pending.first() else {
                     break None;
@@ -326,7 +333,7 @@ fn worker_loop(
                         },
                     });
                 }
-                q = cvar.wait(q).unwrap();
+                q = cvar.wait(q).unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
         let Some((i, in_use, queue_seconds)) = claimed else { return };
@@ -359,7 +366,7 @@ fn worker_loop(
             }
         };
 
-        let mut q = state.lock().unwrap();
+        let mut q = state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         q.admission.release(costs[i]);
         // Post-release occupancy, so the log alone reconstructs budget
         // residency between Admitted/Released pairs.

@@ -73,7 +73,9 @@ pub fn save(engine: &Engine, state: &TrainState, path: impl AsRef<Path>) -> Resu
             w.write_all(&(name.len() as u32).to_le_bytes())?;
             w.write_all(name.as_bytes())?;
             w.write_all(&(data.len() as u64).to_le_bytes())?;
-            // bulk byte write
+            // SAFETY: `data` is a live `Vec<f32>` owned by this iteration,
+            // so its pointer covers `len * 4` initialized bytes; the u8
+            // view (alignment 1) is read-only and dropped before `data`.
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
             };
@@ -134,6 +136,10 @@ pub fn load(engine: &Engine, path: impl AsRef<Path>) -> Result<TrainState> {
             bail!("tensor '{name}': {numel} values, manifest expects {want_numel}");
         }
         let mut data = vec![0.0f32; numel];
+        // SAFETY: `data` was just allocated with exactly `numel` zeroed
+        // f32s, so the u8 view (alignment 1) covers `numel * 4` valid,
+        // initialized bytes; it is the only live reference to `data` while
+        // `read_exact` fills it, and any bit pattern is a valid f32.
         let bytes: &mut [u8] = unsafe {
             std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
         };
@@ -210,7 +216,17 @@ pub fn load_host(
 ) -> Result<(Vec<Vec<f32>>, StateExport, u64)> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("open host checkpoint {:?}", path.as_ref()))?;
-    let mut r = BufReader::new(f);
+    read_host(groups, &mut BufReader::new(f))
+}
+
+/// [`load_host`] over any reader — the untrusted-byte entry point the
+/// malformed-input tests and the `ethc_checkpoint` fuzz target drive
+/// directly, so "bytes from disk" and "bytes from a fuzzer" take the same
+/// path.
+pub fn read_host(
+    groups: &[GroupSpec],
+    r: &mut impl Read,
+) -> Result<(Vec<Vec<f32>>, StateExport, u64)> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != HOST_MAGIC {

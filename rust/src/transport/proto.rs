@@ -87,9 +87,14 @@ pub struct GroupTask {
     pub g_len: usize,
 }
 
-// Raw pointers are not Send by default; the executor's fan-in barrier (see
-// the safety contract above) is what makes shipping them across the
-// channel sound.
+// SAFETY: raw pointers are not Send by default because the compiler cannot
+// see their lifetime. Here the executor guarantees the invariant the
+// compiler can't: `x`/`g` point into parameter and gradient slices whose
+// borrows the executor holds for the full duration of the step barrier —
+// from `send_step` until the matching `recv_step_ack` drains — and each
+// group appears in at most one in-flight task, so the worker's temporary
+// reconstruction of `&mut [f32]`/`&[f32]` views never aliases another live
+// reference and never outlives the pointee.
 unsafe impl Send for GroupTask {}
 
 pub(crate) enum Request {
@@ -141,10 +146,14 @@ pub(crate) fn run_worker(
             Request::Step { lr, tasks } => {
                 let mut outcome: Result<(), String> = Ok(());
                 for t in &tasks {
-                    // Sound per the GroupTask contract: the executor keeps
-                    // the source buffers borrowed until our ack arrives,
-                    // and no other task aliases this group.
+                    // SAFETY: sound per the GroupTask contract — the
+                    // executor keeps the source `&mut [f32]` parameter
+                    // borrow (length `x_len`) alive until our ack arrives,
+                    // and no other task aliases this group, so the unique
+                    // mutable view cannot overlap another live reference.
                     let x = unsafe { std::slice::from_raw_parts_mut(t.x, t.x_len) };
+                    // SAFETY: same contract for the shared gradient view —
+                    // `g` stays borrowed (and unmutated) until the ack.
                     let g = unsafe { std::slice::from_raw_parts(t.g, t.g_len) };
                     if let Err(e) = opt.step(t.local_gi, x, g, lr) {
                         outcome = Err(format!(

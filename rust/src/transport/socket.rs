@@ -88,7 +88,9 @@ impl SocketTransport {
 
     /// Every worker PID this transport has spawned (including exited ones).
     pub fn spawned_pids(&self) -> Vec<u32> {
-        self.pids.lock().unwrap().clone()
+        // A panicked holder can't corrupt a Vec<u32> push, so poison is
+        // benign: take the data and keep serving.
+        self.pids.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
     }
 
     /// Accept with a deadline: `UnixListener` has no native accept timeout,
@@ -149,7 +151,7 @@ impl ShardTransport for SocketTransport {
             .stdin(Stdio::null())
             .spawn()
             .map_err(io_err("worker spawn"))?;
-        self.pids.lock().unwrap().push(child.id());
+        self.pids.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(child.id());
 
         let stream = self.accept_deadline(&listener, shard)?;
         stream.set_read_timeout(Some(self.read_timeout)).map_err(io_err("read timeout"))?;
@@ -174,7 +176,7 @@ impl ShardTransport for SocketTransport {
             child,
             max_buf_numel,
             queue_cap,
-        )))
+        )?))
     }
 
     fn name(&self) -> &'static str {
@@ -186,6 +188,11 @@ impl ShardTransport for SocketTransport {
 /// transport error by walking the chain for the root `io::Error`.
 fn classify(shard: usize, context: &'static str, e: anyhow::Error) -> TransportError {
     for cause in e.chain() {
+        // Typed framing violations from the wire layer map to Protocol
+        // directly — the channel is intact, the peer's bytes are not.
+        if let Some(v) = cause.downcast_ref::<crate::transport::wire::ProtocolViolation>() {
+            return TransportError::Protocol { shard, message: format!("{context}: {v}") };
+        }
         if let Some(ioe) = cause.downcast_ref::<std::io::Error>() {
             return match ioe.kind() {
                 std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
@@ -243,7 +250,7 @@ impl SocketConnection {
         child: Child,
         max_buf_numel: usize,
         queue_cap: usize,
-    ) -> SocketConnection {
+    ) -> Result<SocketConnection, TransportError> {
         let (job_tx, job_rx) = sync_channel::<ProxyJob>(queue_cap.max(1));
         let (ack_tx, ack_rx) = sync_channel::<ProxyAck>(queue_cap.max(1));
         let alive = Arc::new(AtomicBool::new(true));
@@ -253,15 +260,15 @@ impl SocketConnection {
             .spawn(move || {
                 run_proxy(shard, reader, writer, max_buf_numel, job_rx, ack_tx, alive_proxy)
             })
-            .expect("spawn proxy thread");
-        SocketConnection {
+            .map_err(|e| TransportError::Io { shard, context: "proxy thread spawn", source: e })?;
+        Ok(SocketConnection {
             shard,
             jobs: job_tx,
             acks: ack_rx,
             alive,
             proxy: Some(proxy),
             child: Some(child),
-        }
+        })
     }
 
     fn gone(&self, context: &'static str) -> TransportError {
@@ -446,9 +453,14 @@ fn proxy_step(
     write_f32(w, lr)?;
     write_u32(w, tasks.len() as u32)?;
     for t in tasks {
-        // Sound per the GroupTask contract: the executor holds the
-        // parameter/gradient borrows until our ack.
+        // SAFETY: sound per the GroupTask contract — `t.x`/`t.g` were
+        // created from live `&mut [f32]`/`&[f32]` borrows of length
+        // `x_len`/`g_len` (so they are non-null, aligned, and initialized),
+        // and the executor holds those borrows until it drains our ack, so
+        // the pointees outlive this read and nothing else mutates them
+        // while the frame is serialized.
         let x = unsafe { std::slice::from_raw_parts(t.x as *const f32, t.x_len) };
+        // SAFETY: same contract as `t.x` above, for the gradient slice.
         let g = unsafe { std::slice::from_raw_parts(t.g, t.g_len) };
         write_u32(w, t.local_gi as u32)?;
         write_f32s(w, x)?;
@@ -470,6 +482,10 @@ fn proxy_step(
                     updated.len() == t.x_len,
                     "step reply length mismatch for local group {gi}"
                 );
+                // SAFETY: `t.x` came from a unique `&mut [f32]` borrow of
+                // length `x_len` that the executor keeps alive (and
+                // untouched) until our ack, so reconstructing the mutable
+                // slice here cannot alias another live reference.
                 let x = unsafe { std::slice::from_raw_parts_mut(t.x, t.x_len) };
                 x.copy_from_slice(&updated);
             }

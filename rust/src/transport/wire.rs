@@ -43,7 +43,7 @@ use crate::transport::WorkerSpec;
 use crate::util::codec::{
     read_f32, read_str, read_u32, read_u64, write_f32, write_str, write_u32, write_u64,
 };
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 use std::io::{Read, Write};
 
 // Requests (parent -> worker).
@@ -65,16 +65,41 @@ pub const OP_IMPORT_ERR: u32 = 25;
 
 /// Cap on the serialized `StatePlan` JSON inside a planned spec.
 pub const MAX_PLAN_JSON: u64 = 16 << 20;
-/// Plausibility cap on the number of groups in a spec frame.
-const MAX_SPEC_GROUPS: u32 = 1 << 20;
-/// Plausibility cap on a group's rank.
-const MAX_SPEC_DIMS: u32 = 64;
+/// Cap on the number of groups in a spec frame.
+pub const MAX_GROUPS: u32 = 1 << 20;
+/// Cap on a group's rank (tensor order).
+pub const MAX_NDIMS: u32 = 64;
+/// Cap on a single group's element count: 2^34 f32 scalars is 64 GiB of
+/// parameters, far beyond anything this coordinator schedules, so any
+/// larger product is a corrupt or hostile frame rather than a real model.
+pub const MAX_SHAPE_NUMEL: u64 = 1 << 34;
 
-const SPEC_TAG_UNIFORM: u32 = 0;
-const SPEC_TAG_PLANNED: u32 = 1;
+/// How many group slots to pre-reserve from a peer-controlled count.
+/// Everything beyond this grows by amortized push as frames actually
+/// arrive, so a hostile 4-byte count cannot reserve gigabytes up front.
+const PREALLOC_GROUPS: usize = 64;
+
+pub(crate) const SPEC_TAG_UNIFORM: u32 = 0;
+pub(crate) const SPEC_TAG_PLANNED: u32 = 1;
+
+/// Typed wire-protocol violation. Every malformed-frame failure in this
+/// module carries one at the root of its `anyhow` chain, so transport
+/// callers (`socket::classify`) can map "the peer broke framing" to
+/// [`crate::transport::TransportError::Protocol`] by downcast instead of
+/// by string matching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtocolViolation(pub String);
+
+impl std::fmt::Display for ProtocolViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "protocol violation: {}", self.0)
+    }
+}
+
+impl std::error::Error for ProtocolViolation {}
 
 fn bad(msg: impl Into<String>) -> anyhow::Error {
-    anyhow!(msg.into())
+    anyhow::Error::new(ProtocolViolation(msg.into()))
 }
 
 pub fn write_op<W: Write>(w: &mut W, op: u32) -> Result<()> {
@@ -92,7 +117,9 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &str) -> Result<()> {
     while !msg.is_char_boundary(end) {
         end -= 1;
     }
-    write_str(w, &msg[..end])
+    // The loop above lands on a char boundary, so `get` always succeeds;
+    // the fallback keeps this path panic-free by construction.
+    write_str(w, msg.get(..end).unwrap_or(""))
 }
 
 fn write_opt_f32<W: Write>(w: &mut W, v: Option<f32>) -> Result<()> {
@@ -146,19 +173,33 @@ fn write_groups<W: Write>(w: &mut W, groups: &[GroupSpec]) -> Result<()> {
 
 fn read_groups<R: Read>(r: &mut R) -> Result<Vec<GroupSpec>> {
     let n = read_u32(r)?;
-    if n > MAX_SPEC_GROUPS {
-        return Err(bad(format!("implausible group count {n}")));
+    if n > MAX_GROUPS {
+        return Err(bad(format!("implausible group count {n} (cap {MAX_GROUPS})")));
     }
-    let mut groups = Vec::with_capacity(n as usize);
+    // Bounded pre-reserve: the count is peer-controlled, so reserving all
+    // `n` slots up front would let a 4-byte frame pin ~48 MiB; growing
+    // past PREALLOC_GROUPS costs the peer real bytes per element instead.
+    let mut groups = Vec::with_capacity((n as usize).min(PREALLOC_GROUPS));
     for _ in 0..n {
         let name = read_str(r)?;
         let ndims = read_u32(r)?;
-        if ndims > MAX_SPEC_DIMS {
-            return Err(bad(format!("implausible rank {ndims} for group {name:?}")));
+        if ndims > MAX_NDIMS {
+            return Err(bad(format!("implausible rank {ndims} for group {name:?} (cap {MAX_NDIMS})")));
         }
         let mut shape = Vec::with_capacity(ndims as usize);
+        let mut numel: u64 = 1;
         for _ in 0..ndims {
-            shape.push(read_u64(r)? as usize);
+            let d = read_u64(r)?;
+            // Zero dims count as 1 so a 0 can't mask an oversized product.
+            numel = numel
+                .checked_mul(d.max(1))
+                .filter(|&m| m <= MAX_SHAPE_NUMEL)
+                .ok_or_else(|| {
+                    bad(format!(
+                        "implausible shape for group {name:?}: element count exceeds cap {MAX_SHAPE_NUMEL}"
+                    ))
+                })?;
+            shape.push(d as usize);
         }
         groups.push(GroupSpec { name, shape });
     }
@@ -306,6 +347,48 @@ mod tests {
         write_worker_spec(&mut buf, &spec).unwrap();
         buf.truncate(buf.len() / 2);
         assert!(read_worker_spec(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn opcode_and_tag_values_are_pinned() {
+        // The wire format is cross-process: renumbering any frame tag is a
+        // protocol break between a new parent and an old worker binary.
+        // Pinning the values also gives every tag constant a test-side
+        // reference, which etlint's wire-exhaustiveness rule checks.
+        assert_eq!(
+            [OP_SPEC, OP_STEP, OP_NEXT, OP_SCALARS, OP_EXPORT, OP_IMPORT, OP_SHUTDOWN],
+            [10, 11, 12, 13, 14, 15, 16]
+        );
+        assert_eq!(
+            [OP_STEP_OK, OP_STEP_ERR, OP_SCALARS_REPLY, OP_EXPORT_REPLY, OP_IMPORT_OK, OP_IMPORT_ERR],
+            [20, 21, 22, 23, 24, 25]
+        );
+        assert_eq!([SPEC_TAG_UNIFORM, SPEC_TAG_PLANNED], [0, 1]);
+    }
+
+    #[test]
+    fn oversized_group_count_is_a_typed_protocol_error() {
+        let mut buf = Vec::new();
+        write_u32(&mut buf, 0).unwrap(); // SPEC_TAG_UNIFORM
+        write_u32(&mut buf, MAX_GROUPS + 1).unwrap();
+        let err = read_worker_spec(&mut buf.as_slice()).unwrap_err();
+        assert!(err.chain().any(|c| c.downcast_ref::<ProtocolViolation>().is_some()), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_shape_product_is_rejected_per_dim() {
+        // Each dim fits a u64, but the product overflows the numel cap —
+        // the case a per-dim check alone would miss.
+        let mut buf = Vec::new();
+        write_u32(&mut buf, SPEC_TAG_UNIFORM).unwrap();
+        write_u32(&mut buf, 1).unwrap(); // one group
+        write_str(&mut buf, "huge").unwrap();
+        write_u32(&mut buf, 3).unwrap(); // rank 3
+        for _ in 0..3 {
+            write_u64(&mut buf, 1 << 30).unwrap();
+        }
+        let err = read_worker_spec(&mut buf.as_slice()).unwrap_err();
+        assert!(err.chain().any(|c| c.downcast_ref::<ProtocolViolation>().is_some()), "{err:#}");
     }
 
     #[test]

@@ -55,6 +55,10 @@ pub fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
 /// The raw f32 bytes of `data` with **no** length prefix — for chunked
 /// framing where the frame header already carries the count.
 pub fn write_f32_data(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    // SAFETY: `data` is a live `&[f32]`, so its pointer is non-null and
+    // valid for `len * 4` bytes; u8 has alignment 1, so any f32 pointer is
+    // suitably aligned, and every byte of an f32 is initialized. The view
+    // is read-only and dropped before `data`'s borrow ends.
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     w.write_all(bytes)?;
@@ -109,6 +113,10 @@ pub fn read_f32s(r: &mut impl Read, max_numel: usize) -> Result<Vec<f32>> {
 /// Fill `out` from the raw (unprefixed) f32 bytes — the read twin of
 /// [`write_f32_data`].
 pub fn read_f32_data(r: &mut impl Read, out: &mut [f32]) -> Result<()> {
+    // SAFETY: `out` is a live unique `&mut [f32]` covering `len * 4` bytes
+    // (non-null, aligned — u8 needs alignment 1 — and initialized, so
+    // reading through the view is fine too). The u8 view is the only live
+    // reference while it exists, and any bit pattern is a valid f32.
     let bytes: &mut [u8] =
         unsafe { std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4) };
     r.read_exact(bytes)?;

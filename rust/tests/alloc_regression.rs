@@ -1,6 +1,7 @@
 //! Allocation regression for the optimizer hot path: after a warm-up pass
 //! (which grows the `OptState`-owned scratch arena to its high-water mark),
-//! a full `step_all` over ET and ET∞ performs **zero** heap allocations —
+//! a full `step_all` over every optimizer kind performs **zero** heap
+//! allocations —
 //! under both the dense `f32` and the block-quantized `q8` state backend.
 //!
 //! The counter is a thread-local inside a wrapping global allocator, so
@@ -20,21 +21,28 @@ thread_local! {
 
 struct CountingAlloc;
 
+// SAFETY: every method delegates to `System`, which upholds the
+// `GlobalAlloc` contract; the only addition is a thread-local counter bump,
+// which neither allocates (const-init `Cell`, no destructor) nor unwinds.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller's layout contract is forwarded to `System` unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.with(|c| c.set(c.get() + 1));
         System.alloc(layout)
     }
 
+    // SAFETY: `ptr`/`layout` came from this allocator, which is `System`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: `ptr`/`layout` came from this allocator, which is `System`.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.with(|c| c.set(c.get() + 1));
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: caller's layout contract is forwarded to `System` unchanged.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.with(|c| c.set(c.get() + 1));
         System.alloc_zeroed(layout)
@@ -73,8 +81,21 @@ fn et_step_all_is_allocation_free_after_warmup() {
         })
         .collect();
 
-    let kinds =
-        [OptimizerKind::Et(1), OptimizerKind::Et(2), OptimizerKind::Et(3), OptimizerKind::EtInf];
+    // Every kind, not just ET: after the `with_buf1_in`/`with_buf2_in`
+    // refactor the classical baselines are allocation-free too (Adafactor's
+    // row/col mean-squares live in `StepScratch`, not per-step Vecs).
+    let kinds = [
+        OptimizerKind::Sgd,
+        OptimizerKind::AdaGrad,
+        OptimizerKind::Adam,
+        OptimizerKind::RmsProp,
+        OptimizerKind::AdaDelta,
+        OptimizerKind::Adafactor,
+        OptimizerKind::Et(1),
+        OptimizerKind::Et(2),
+        OptimizerKind::Et(3),
+        OptimizerKind::EtInf,
+    ];
     for backend in [StateBackend::DenseF32, StateBackend::q8()] {
         for kind in kinds {
             let hyper = Hyper { backend, ..Hyper::default() };

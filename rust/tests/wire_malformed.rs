@@ -1,0 +1,220 @@
+//! Malformed-input hardening for the three untrusted-byte decoders:
+//! the wire worker-spec frame, the ETSS state stream, and the ETHC host
+//! checkpoint — plus the codec primitives under them. The contract under
+//! test: arbitrary bytes produce `Ok` or a typed `Err`, never a panic and
+//! never an implausible allocation.
+//!
+//! The fixed cases are the checked-in fuzz seed corpora under
+//! `rust/fuzz/corpus/` — the same files CI's fuzz-smoke job mutates on
+//! nightly are asserted byte-for-byte here on stable, so a corpus seed
+//! that regresses fails every build, not just the fuzz job.
+
+use extensor::optim::stream::read_export_stream;
+use extensor::optim::GroupSpec;
+use extensor::testing::prop::props;
+use extensor::train::checkpoint::read_host;
+use extensor::transport::wire::{read_worker_spec, ProtocolViolation};
+use extensor::util::codec;
+
+fn corpus_dir(target: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("fuzz/corpus").join(target)
+}
+
+fn corpus(target: &str) -> Vec<(String, Vec<u8>)> {
+    let dir = corpus_dir(target);
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("fuzz corpus missing at {dir:?}: {e}"))
+        .map(|e| {
+            let e = e.unwrap();
+            let name = e.file_name().to_string_lossy().into_owned();
+            (name, std::fs::read(e.path()).unwrap())
+        })
+        .collect();
+    out.sort();
+    assert!(!out.is_empty(), "empty fuzz corpus at {dir:?}");
+    out
+}
+
+fn ethc_groups() -> Vec<GroupSpec> {
+    // Must match the layout baked into fuzz_targets/ethc_checkpoint.rs.
+    vec![GroupSpec::new("w", &[4, 3]), GroupSpec::new("b", &[3])]
+}
+
+#[test]
+fn wire_corpus_seeds_decode_as_expected() {
+    for (name, bytes) in corpus("wire_frame") {
+        let res = read_worker_spec(&mut bytes.as_slice());
+        if name.starts_with("uniform_spec") {
+            res.unwrap_or_else(|e| panic!("seed {name} must decode: {e:#}"));
+        } else {
+            let err = res.err().unwrap_or_else(|| panic!("seed {name} must be rejected"));
+            if name.starts_with("oversized") || name.starts_with("unknown_tag") {
+                assert!(
+                    err.chain().any(|c| c.downcast_ref::<ProtocolViolation>().is_some()),
+                    "seed {name}: expected a typed ProtocolViolation, got {err:#}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn etss_corpus_seeds_decode_as_expected() {
+    for (name, bytes) in corpus("etss_stream") {
+        let res = read_export_stream(&mut bytes.as_slice(), 1 << 16);
+        if name.starts_with("valid") {
+            let export = res.unwrap_or_else(|e| panic!("seed {name} must decode: {e:#}"));
+            assert_eq!(export.groups.len(), 2);
+            assert_eq!(export.step, 5);
+        } else {
+            assert!(res.is_err(), "seed {name} must be rejected");
+        }
+    }
+}
+
+#[test]
+fn ethc_corpus_seeds_decode_as_expected() {
+    let groups = ethc_groups();
+    for (name, bytes) in corpus("ethc_checkpoint") {
+        let res = read_host(&groups, &mut bytes.as_slice());
+        if name.starts_with("valid") {
+            let (params, state, step) =
+                res.unwrap_or_else(|e| panic!("seed {name} must decode: {e:#}"));
+            assert_eq!(params.len(), 2);
+            assert_eq!(params[0].len(), 12);
+            assert_eq!(state.groups.len(), 2);
+            assert_eq!(step, 7);
+        } else {
+            assert!(res.is_err(), "seed {name} must be rejected");
+        }
+    }
+}
+
+/// Every proper prefix of a valid frame is a clean error: the decoders hit
+/// EOF (or a checksum mismatch) and report it — no panic, no partial Ok.
+#[test]
+fn every_truncation_of_valid_inputs_errors_cleanly() {
+    let (_, spec) = corpus("wire_frame")
+        .into_iter()
+        .find(|(n, _)| n.starts_with("uniform_spec"))
+        .unwrap();
+    for cut in 0..spec.len() {
+        assert!(
+            read_worker_spec(&mut &spec[..cut]).is_err(),
+            "spec prefix of {cut}/{} bytes decoded",
+            spec.len()
+        );
+    }
+
+    let (_, stream) =
+        corpus("etss_stream").into_iter().find(|(n, _)| n.starts_with("valid")).unwrap();
+    for cut in 0..stream.len() {
+        assert!(
+            read_export_stream(&mut &stream[..cut], 1 << 16).is_err(),
+            "stream prefix of {cut}/{} bytes decoded",
+            stream.len()
+        );
+    }
+
+    let groups = ethc_groups();
+    let (_, ck) =
+        corpus("ethc_checkpoint").into_iter().find(|(n, _)| n.starts_with("valid")).unwrap();
+    for cut in 0..ck.len() {
+        assert!(
+            read_host(&groups, &mut &ck[..cut]).is_err(),
+            "checkpoint prefix of {cut}/{} bytes decoded",
+            ck.len()
+        );
+    }
+}
+
+/// Random corruption of valid frames never panics. Flips inside
+/// checksum-covered regions must be *detected* (Err); flips elsewhere may
+/// legitimately decode, so only the no-panic contract is asserted.
+#[test]
+fn random_bit_flips_never_panic() {
+    let (_, spec) = corpus("wire_frame")
+        .into_iter()
+        .find(|(n, _)| n.starts_with("uniform_spec"))
+        .unwrap();
+    let (_, stream) =
+        corpus("etss_stream").into_iter().find(|(n, _)| n.starts_with("valid")).unwrap();
+    let (_, ck) =
+        corpus("ethc_checkpoint").into_iter().find(|(n, _)| n.starts_with("valid")).unwrap();
+    let groups = ethc_groups();
+
+    props("bit_flips_never_panic", 300, |g| {
+        let (which, base) = match g.usize_in(0, 2) {
+            0 => (0, &spec),
+            1 => (1, &stream),
+            _ => (2, &ck),
+        };
+        let mut bytes = base.clone();
+        for _ in 0..g.usize_in(1, 3) {
+            let i = g.usize_in(0, bytes.len() - 1);
+            let bit = g.usize_in(0, 7);
+            bytes[i] ^= 1 << bit;
+        }
+        match which {
+            0 => {
+                let _ = read_worker_spec(&mut bytes.as_slice());
+            }
+            1 => {
+                let _ = read_export_stream(&mut bytes.as_slice(), 1 << 16);
+            }
+            _ => {
+                let _ = read_host(&groups, &mut bytes.as_slice());
+            }
+        }
+    });
+}
+
+/// Pure random garbage never panics and (except for the degenerate empty
+/// prefix cases) never decodes.
+#[test]
+fn random_garbage_never_panics() {
+    let groups = ethc_groups();
+    props("garbage_never_panics", 300, |g| {
+        let n = g.usize_in(0, 512);
+        let mut bytes = vec![0u8; n];
+        for b in bytes.iter_mut() {
+            *b = g.usize_in(0, 255) as u8;
+        }
+        assert!(read_worker_spec(&mut bytes.as_slice()).is_err() || n >= 8);
+        let _ = read_export_stream(&mut bytes.as_slice(), 1 << 16);
+        let _ = read_host(&groups, &mut bytes.as_slice());
+    });
+}
+
+/// Codec primitives reject implausible or malformed payloads with typed
+/// errors before allocating.
+#[test]
+fn codec_rejects_malformed_payloads() {
+    // String length beyond the cap.
+    let mut buf = Vec::new();
+    codec::write_u32(&mut buf, u32::MAX).unwrap();
+    buf.extend_from_slice(b"xx");
+    assert!(codec::read_str(&mut buf.as_slice()).is_err());
+
+    // Valid length prefix, non-UTF-8 payload.
+    let mut buf = Vec::new();
+    codec::write_u32(&mut buf, 2).unwrap();
+    buf.extend_from_slice(&[0xff, 0xfe]);
+    assert!(codec::read_str(&mut buf.as_slice()).is_err());
+
+    // f32 block declaring more scalars than the caller's bound.
+    let mut buf = Vec::new();
+    codec::write_f32s(&mut buf, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+    assert!(codec::read_f32s(&mut buf.as_slice(), 3).is_err());
+    assert_eq!(codec::read_f32s(&mut buf.as_slice(), 4).unwrap().len(), 4);
+
+    // Truncated scalar reads.
+    assert!(codec::read_u64(&mut [0u8; 3].as_slice()).is_err());
+    assert!(codec::read_f32(&mut [0u8; 2].as_slice()).is_err());
+
+    // Truncated f32 payload behind an honest count.
+    let mut buf = Vec::new();
+    codec::write_f32s(&mut buf, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+    buf.truncate(buf.len() - 5);
+    assert!(codec::read_f32s(&mut buf.as_slice(), 8).is_err());
+}
