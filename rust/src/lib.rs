@@ -42,20 +42,25 @@
 //! across persistent workers using the footprint accounting, each worker
 //! owning its groups' complete optimizer state
 //! (`shard::ShardedOptimizer`). How the executor reaches its workers is a
-//! pluggable **transport layer** (`transport`):
+//! pluggable **transport layer** (`transport`), with a supervision layer
+//! (`shard::SupervisedOptimizer`) on top:
 //!
 //! ```text
-//! ShardedOptimizer ──▶ ShardTransport ──▶ ShardConnection (per shard)
-//! (partition,          ├─ InProcess: worker threads + bounded channels
-//!  buckets,            │  (zero-copy GroupTask pointer handoff)
-//!  ack barrier)        └─ SocketTransport: `ettrain shard-worker` child
-//!                         processes over UNIX sockets (length-prefixed
-//!                         frames, ETSS snapshot streams, timeouts +
-//!                         typed errors + crash recovery)
+//! SupervisedOptimizer ─▶ ShardedOptimizer ─▶ ShardTransport ─▶ ShardConnection
+//! (auto-snapshots,       (partition,         ├─ InProcess: worker threads +
+//!  fault taxonomy,        buckets,           │  bounded channels (zero-copy
+//!  rewind-and-replay      ack barrier)       │  GroupTask pointer handoff)
+//!  recovery)                                 ├─ SocketTransport: shard-worker
+//!                                            │  children over UNIX sockets
+//!                                            ├─ TcpTransport: the same wire
+//!                                            │  protocol over loopback TCP
+//!                                            └─ FaultTransport: deterministic
+//!                                               fault injection (FaultPlan)
+//!                                               wrapped around any of the above
 //! ```
 //!
 //! Determinism contract: sharded execution is bitwise-identical to the
-//! single-threaded engine at any shard count *and over either transport*
+//! single-threaded engine at any shard count *and over every transport*
 //! — a group's update is computed by exactly one worker with the
 //! single-threaded arithmetic, and the fan-in is a pure ack barrier with
 //! no cross-shard math to reorder (enforced in
@@ -67,8 +72,12 @@
 //! resume at 1/2/4 shards, including shard-count migration), snapshots
 //! stream with bounded buffering as chunk-framed ETSS (`optim::stream`),
 //! and `reshard`/`take_snapshot`/`recover` grow, shrink, or rebuild the
-//! worker set mid-run without a restart
-//! (`rust/tests/transport_recovery.rs`).
+//! worker set mid-run without a restart. The supervisor automates that
+//! loop: snapshots at a `RecoveryPolicy` cadence, typed fault
+//! classification (transient timeouts back off, disconnects heal,
+//! worker-reported errors fail fast), and bitwise rewind-and-replay —
+//! a supervised run that survives any injected fault schedule matches
+//! the uninterrupted run exactly (`rust/tests/transport_recovery.rs`).
 //!
 //! All execution flows through the **session layer** (`session`):
 //!

@@ -89,10 +89,11 @@ USAGE: ettrain <subcommand> [options]
   registry compact [--dir results/registry] [--keep N]
         rewrite the registry keeping only the last N runs per distinct
         job spec (JSONL + CSV, atomically)
-  shard-worker --connect <path> [--shard N]
+  shard-worker (--connect <path> | --tcp-connect <addr>) [--shard N]
+               [--retries N] [--backoff-ms N]
         run one out-of-process shard worker serving the transport wire
-        protocol on a UNIX socket (spawned by the socket transport; not
-        normally run by hand)
+        protocol on a UNIX socket or TCP connection (spawned by the
+        socket/tcp transports; not normally run by hand)
   plan [--budget 64m | --set run.opt_memory_budget=64m] [--layers N ...]
         solve and print the per-group (ET level x backend) state plan for a
         transformer under an optimizer-memory budget, without running
@@ -361,22 +362,42 @@ fn cmd_registry(argv: &[String]) -> Result<()> {
 }
 
 /// `ettrain shard-worker` — one out-of-process shard worker (spawned by
-/// `extensor::transport::SocketTransport`; see `extensor::transport::socket`).
+/// `extensor::transport::SocketTransport` over UNIX sockets or
+/// `extensor::transport::TcpTransport` over TCP; see those modules).
 fn cmd_shard_worker(argv: &[String]) -> Result<()> {
     let spec = Spec {
         name: "shard-worker",
-        about: "serve the shard transport wire protocol on a UNIX socket",
+        about: "serve the shard transport wire protocol on a socket",
         options: vec![
-            ("connect", None, "socket path to connect back to (required)"),
+            ("connect", None, "UNIX socket path to connect back to"),
+            ("tcp-connect", None, "TCP address to connect back to (host:port)"),
             ("shard", Some("0"), "shard index, for log/error labels"),
+            ("retries", None, "connect retry attempts (default from TransportTuning)"),
+            ("backoff-ms", None, "base connect retry backoff in ms"),
         ],
         flags: vec![],
         positional: vec![],
     };
     let args = Args::parse(&spec, argv)?;
-    let path = args.get("connect").context("shard-worker: missing --connect <path>")?;
     let shard = args.get_usize("shard")?;
-    extensor::transport::run_socket_worker(std::path::Path::new(path), shard)
+    let mut tuning = extensor::transport::TransportTuning::default();
+    if args.get("retries").is_some() {
+        tuning.connect_retries = args.get_u64("retries")? as u32;
+    }
+    if args.get("backoff-ms").is_some() {
+        tuning.backoff_ms = args.get_u64("backoff-ms")?;
+    }
+    tuning.validate()?;
+    match (args.get("connect"), args.get("tcp-connect")) {
+        (Some(path), None) => {
+            extensor::transport::run_socket_worker(std::path::Path::new(path), shard, tuning)
+        }
+        (None, Some(addr)) => extensor::transport::run_tcp_worker(addr, shard, tuning),
+        (Some(_), Some(_)) => {
+            bail!("shard-worker: --connect and --tcp-connect are mutually exclusive")
+        }
+        (None, None) => bail!("shard-worker: need --connect <path> or --tcp-connect <addr>"),
+    }
 }
 
 /// `ettrain plan` — solve and print the per-group state plan for a

@@ -94,6 +94,7 @@ pub fn build_tables(records: &[RunRecord], peaks: &BTreeMap<String, u64>) -> Vec
             "cache hit %",
             "queue s",
             "wall s",
+            "recov",
         ],
     );
     for s in by_commit(records) {
@@ -132,6 +133,7 @@ pub fn build_tables(records: &[RunRecord], peaks: &BTreeMap<String, u64>) -> Vec
                     .unwrap_or(0.0)
             ),
             format!("{:.2}", s.records.iter().map(|r| r.wall_seconds).sum::<f64>()),
+            s.records.iter().map(|r| r.recoveries).sum::<u64>().to_string(),
         ]);
     }
 
@@ -160,7 +162,34 @@ pub fn build_tables(records: &[RunRecord], peaks: &BTreeMap<String, u64>) -> Vec
             ),
         ]);
     }
-    vec![traj, kinds]
+    // Supervision incidents, split transient (timeout storms that healed
+    // after backoff) vs fatal (disconnects, protocol faults, worker
+    // errors). `healed` runs finished despite the incident; `gave up`
+    // runs exhausted their recovery budget or hit an unrecoverable kind.
+    let mut incidents = Table::new(
+        "Incidents by error kind",
+        &["error kind", "class", "runs", "recoveries", "healed", "gave up"],
+    );
+    let mut faults: Vec<&str> = records
+        .iter()
+        .filter(|r| !r.error_kind.is_empty())
+        .map(|r| r.error_kind.as_str())
+        .collect();
+    faults.sort_unstable();
+    faults.dedup();
+    for kind in faults {
+        let rs: Vec<&RunRecord> = records.iter().filter(|r| r.error_kind == kind).collect();
+        let healed = rs.iter().filter(|r| r.status == "ok").count();
+        incidents.row(vec![
+            kind.to_string(),
+            if kind == "timeout" { "transient" } else { "fatal" }.to_string(),
+            rs.len().to_string(),
+            rs.iter().map(|r| r.recoveries).sum::<u64>().to_string(),
+            healed.to_string(),
+            (rs.len() - healed).to_string(),
+        ]);
+    }
+    vec![traj, kinds, incidents]
 }
 
 fn short_commit(c: &str) -> String {
@@ -222,6 +251,8 @@ mod tests {
             wall_seconds: 2.0,
             queue_seconds: 0.25,
             event_log: String::new(),
+            recoveries: 0,
+            error_kind: String::new(),
         }
     }
 
@@ -233,7 +264,7 @@ mod tests {
             rec("aaaa", "j2", 120, false, None),
         ];
         let tables = build_tables(&records, &BTreeMap::new());
-        assert_eq!(tables.len(), 2);
+        assert_eq!(tables.len(), 3);
         let traj = &tables[0];
         assert_eq!(traj.rows.len(), 2, "two commits -> two rows");
         // Ordered by first-seen time: aaaa (100) before bbbb (200).
@@ -257,5 +288,25 @@ mod tests {
         assert_eq!(kinds.rows[0][1], "2");
         assert_eq!(kinds.rows[0][2], "1");
         assert_eq!(kinds.rows[0][3], "1");
+    }
+
+    #[test]
+    fn incident_table_splits_transient_from_fatal() {
+        let mut healed = rec("c", "a", 1, true, None);
+        healed.recoveries = 2;
+        healed.error_kind = "timeout".to_string();
+        let mut fatal = rec("c", "b", 2, false, None);
+        fatal.recoveries = 4;
+        fatal.error_kind = "disconnected".to_string();
+        let clean = rec("c", "d", 3, true, None);
+        let tables = build_tables(&[healed, fatal, clean], &BTreeMap::new());
+
+        // Trajectory sums recoveries across the commit's runs.
+        assert_eq!(tables[0].rows[0].last().unwrap(), "6");
+
+        let inc = &tables[2];
+        assert_eq!(inc.rows.len(), 2, "clean run contributes no incident row");
+        assert_eq!(inc.rows[0], vec!["disconnected", "fatal", "1", "4", "0", "1"]);
+        assert_eq!(inc.rows[1], vec!["timeout", "transient", "1", "2", "1", "0"]);
     }
 }

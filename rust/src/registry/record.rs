@@ -25,7 +25,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub const REGISTRY_SCHEMA: &str = "registry/v1";
 
 /// CSV column order (also the field order of the JSONL objects).
-const COLUMNS: [&str; 18] = [
+const COLUMNS: [&str; 20] = [
     "run_id",
     "job",
     "kind",
@@ -44,6 +44,8 @@ const COLUMNS: [&str; 18] = [
     "wall_seconds",
     "queue_seconds",
     "event_log",
+    "recoveries",
+    "error_kind",
 ];
 
 /// Process-wide sequence number so run ids stay unique when several
@@ -89,6 +91,13 @@ pub struct RunRecord {
     /// Path of the schedule JSONL this run's events went to (empty when
     /// the batch ran without a log).
     pub event_log: String,
+    /// Supervision incidents healed during the run (count of
+    /// `recovered` recovery events; 0 for unsupervised runs).
+    pub recoveries: u64,
+    /// [`crate::transport::TransportError::kind_label`] of the last
+    /// incident the supervisor reported (empty when fault-free) — lets
+    /// `registry report` split transient timeouts from real failures.
+    pub error_kind: String,
 }
 
 impl RunRecord {
@@ -112,6 +121,8 @@ impl RunRecord {
             ("wall_seconds", Json::num(self.wall_seconds)),
             ("queue_seconds", Json::num(self.queue_seconds)),
             ("event_log", Json::str(&self.event_log)),
+            ("recoveries", Json::num(self.recoveries as f64)),
+            ("error_kind", Json::str(&self.error_kind)),
         ])
     }
 
@@ -160,6 +171,18 @@ impl RunRecord {
             wall_seconds: f("wall_seconds")?,
             queue_seconds: f("queue_seconds")?,
             event_log: s("event_log")?,
+            // Added after the first v1 files shipped; default rather than
+            // fail so pre-existing registries keep loading.
+            recoveries: j
+                .get("recoveries")
+                .and_then(|v| v.as_i64())
+                .and_then(|v| u64::try_from(v).ok())
+                .unwrap_or(0),
+            error_kind: j
+                .get("error_kind")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
         })
     }
 
@@ -183,6 +206,8 @@ impl RunRecord {
             format!("{}", self.wall_seconds),
             format!("{}", self.queue_seconds),
             self.event_log.clone(),
+            self.recoveries.to_string(),
+            self.error_kind.clone(),
         ];
         cells.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",")
     }
@@ -225,6 +250,8 @@ impl RunRecord {
             wall_seconds: f(15)?,
             queue_seconds: f(16)?,
             event_log: cells[17].clone(),
+            recoveries: u(18)?,
+            error_kind: cells[19].clone(),
         })
     }
 }
@@ -486,8 +513,10 @@ pub fn record_batch(
         let Some(spec) = specs.iter().find(|s| s.name == res.name) else {
             continue; // cannot happen: results are assembled from specs
         };
-        // Per-job cache tallies out of the shared event stream.
+        // Per-job cache and recovery tallies out of the shared event
+        // stream.
         let (mut ah, mut am, mut ch, mut cm) = (0u64, 0u64, 0u64, 0u64);
+        let (mut recoveries, mut error_kind) = (0u64, String::new());
         for e in &report.events {
             if e.event.job() != res.name {
                 continue;
@@ -505,6 +534,14 @@ pub fn record_batch(
                         ch += 1;
                     } else {
                         cm += 1;
+                    }
+                }
+                JobEvent::Recovery { phase, kind, .. } => {
+                    if phase == "recovered" {
+                        recoveries += 1;
+                    }
+                    if !kind.is_empty() {
+                        error_kind = kind.clone();
                     }
                 }
                 _ => {}
@@ -534,6 +571,8 @@ pub fn record_batch(
             wall_seconds: res.wall_seconds,
             queue_seconds: res.queue_seconds,
             event_log: log.clone(),
+            recoveries,
+            error_kind,
         });
     }
     registry.append(&records)?;
@@ -585,6 +624,8 @@ mod tests {
             wall_seconds: 1.5,
             queue_seconds: 0.25,
             event_log: String::new(),
+            recoveries: 0,
+            error_kind: String::new(),
         }
     }
 

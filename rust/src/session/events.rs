@@ -33,6 +33,12 @@ pub enum JobEvent {
     /// is the consumption *after* the release, so budget occupancy is
     /// reconstructible from the log alone (pair with [`JobEvent::Admitted`]).
     Released { job: String, in_use_bytes: u64 },
+    /// A supervision decision inside a self-healing sharded job: `phase`
+    /// is the [`crate::shard::RecoveryEvent`] tag (`snapshot`, `incident`,
+    /// `recovered`, `gave-up`), `step` the supervised step it happened at,
+    /// `kind` the transport-error taxonomy bucket (empty for snapshots),
+    /// and `detail` the human-readable account.
+    Recovery { job: String, phase: String, step: u64, kind: String, detail: String },
     /// The job completed successfully.
     Finished { job: String, wall_seconds: f64 },
     /// The job failed (the batch continues; the error is also in the
@@ -51,6 +57,7 @@ impl JobEvent {
             | JobEvent::ArtifactCache { job, .. }
             | JobEvent::CorpusCache { job, .. }
             | JobEvent::Released { job, .. }
+            | JobEvent::Recovery { job, .. }
             | JobEvent::Finished { job, .. }
             | JobEvent::Failed { job, .. } => job,
         }
@@ -66,6 +73,7 @@ impl JobEvent {
             JobEvent::ArtifactCache { .. } => "artifact_cache",
             JobEvent::CorpusCache { .. } => "corpus_cache",
             JobEvent::Released { .. } => "released",
+            JobEvent::Recovery { .. } => "recovery",
             JobEvent::Finished { .. } => "finished",
             JobEvent::Failed { .. } => "failed",
         }
@@ -99,6 +107,12 @@ impl JobEvent {
             JobEvent::Released { in_use_bytes, .. } => {
                 vec![("in_use_bytes", Json::num(*in_use_bytes as f64))]
             }
+            JobEvent::Recovery { phase, step, kind, detail, .. } => vec![
+                ("phase", Json::str(phase.clone())),
+                ("step", Json::num(*step as f64)),
+                ("kind", Json::str(kind.clone())),
+                ("detail", Json::str(detail.clone())),
+            ],
             JobEvent::Finished { wall_seconds, .. } => {
                 vec![("wall_seconds", Json::num(*wall_seconds))]
             }
@@ -191,6 +205,18 @@ impl EventSink {
     /// Report a corpus/dataset cache lookup.
     pub fn corpus_cache(&self, key: &str, hit: bool) {
         self.emit(JobEvent::CorpusCache { job: self.job.clone(), key: key.to_string(), hit });
+    }
+
+    /// Report a supervision decision (snapshot/incident/recovered/gave-up)
+    /// from a self-healing sharded job.
+    pub fn recovery(&self, phase: &str, step: u64, kind: &str, detail: &str) {
+        self.emit(JobEvent::Recovery {
+            job: self.job.clone(),
+            phase: phase.to_string(),
+            step,
+            kind: kind.to_string(),
+            detail: detail.to_string(),
+        });
     }
 }
 
@@ -286,6 +312,19 @@ mod tests {
         assert!(events.drain().is_empty(), "drain must not replay");
         sink.progress(2, 4, 1.5);
         assert_eq!(events.drain().len(), 1);
+    }
+
+    #[test]
+    fn recovery_event_shape() {
+        let (sink, events) = EventSink::collect("sb");
+        sink.recovery("incident", 5, "disconnected", "shard 1: worker disconnected");
+        let got = events.drain();
+        assert_eq!(got.len(), 1);
+        let j = got[0].to_json();
+        assert_eq!(j.get("event").and_then(|v| v.as_str()), Some("recovery"));
+        assert_eq!(j.get("phase").and_then(|v| v.as_str()), Some("incident"));
+        assert_eq!(j.get("step").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("disconnected"));
     }
 
     #[test]

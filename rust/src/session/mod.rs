@@ -343,18 +343,25 @@ impl JobOutcome {
                 ("final_loss", Json::num(c.final_loss)),
                 ("accuracy", Json::num(c.accuracy)),
             ]),
-            JobOutcome::ShardBench(s) => Json::obj(vec![
-                ("optimizer", Json::str(s.optimizer.clone())),
-                ("shards", Json::num(s.shards as f64)),
-                ("steps_per_sec", Json::num(s.steps_per_sec)),
-                ("total_params", Json::num(s.total_params as f64)),
-                (
-                    "peak_state_bytes_per_shard",
-                    Json::num(s.peak_state_bytes_per_shard as f64),
-                ),
-                ("total_state_scalars", Json::num(s.total_state_scalars as f64)),
-                ("work_imbalance", Json::num(s.work_imbalance)),
-            ]),
+            JobOutcome::ShardBench(s) => {
+                let mut fields = vec![
+                    ("optimizer", Json::str(s.optimizer.clone())),
+                    ("shards", Json::num(s.shards as f64)),
+                    ("steps_per_sec", Json::num(s.steps_per_sec)),
+                    ("total_params", Json::num(s.total_params as f64)),
+                    (
+                        "peak_state_bytes_per_shard",
+                        Json::num(s.peak_state_bytes_per_shard as f64),
+                    ),
+                    ("total_state_scalars", Json::num(s.total_state_scalars as f64)),
+                    ("work_imbalance", Json::num(s.work_imbalance)),
+                    ("recoveries", Json::num(s.recoveries as f64)),
+                ];
+                if let Some(kind) = &s.error_kind {
+                    fields.push(("error_kind", Json::str(kind.clone())));
+                }
+                Json::obj(fields)
+            }
             JobOutcome::Vision(v) => Json::obj(vec![
                 ("optimizer", Json::str(v.optimizer.clone())),
                 ("optimizer_scalars", Json::num(v.optimizer_scalars as f64)),
@@ -394,6 +401,11 @@ pub struct ShardBenchOutcome {
     pub peak_state_bytes_per_shard: usize,
     pub total_state_scalars: usize,
     pub work_imbalance: f64,
+    /// Incidents healed by the supervisor (0 for unsupervised runs).
+    pub recoveries: u32,
+    /// [`crate::transport::TransportError::kind_label`] of the last
+    /// incident the supervisor saw, if any.
+    pub error_kind: Option<String>,
 }
 
 /// Execute one job against the session, emitting progress and cache events
@@ -512,6 +524,25 @@ fn socket_transport_for(tag: &str) -> Result<crate::transport::SocketTransport> 
     Ok(crate::transport::SocketTransport::new(dir, bin))
 }
 
+/// A [`crate::transport::TcpTransport`] bound at `addr`, resolving the
+/// worker binary the same way as [`socket_transport_for`].
+fn tcp_transport_for(addr: &str) -> Result<crate::transport::TcpTransport> {
+    let bin = match std::env::var_os("ETTRAIN_WORKER_BIN") {
+        Some(p) if !p.is_empty() => std::path::PathBuf::from(p),
+        _ => std::env::current_exe().context("tcp transport: resolve worker binary")?,
+    };
+    Ok(crate::transport::TcpTransport::new(addr, bin))
+}
+
+/// SIGKILL a spawned worker by pid. Handed to the fault layer for real
+/// (out-of-process) transports so `kill` faults exercise genuine worker
+/// death rather than just severing the proxy.
+fn kill_worker(pid: Option<u32>) {
+    if let Some(pid) = pid {
+        let _ = std::process::Command::new("kill").args(["-9", &pid.to_string()]).status();
+    }
+}
+
 fn run_shard_bench(spec: &ShardBenchSpec, sink: &EventSink) -> Result<ShardBenchOutcome> {
     let groups =
         crate::testing::transformer_groups(spec.layers, spec.vocab, spec.d_model, spec.d_ff);
@@ -527,37 +558,107 @@ fn run_shard_bench(spec: &ShardBenchSpec, sink: &EventSink) -> Result<ShardBench
         .collect();
     let mut params: Vec<Vec<f32>> = groups.iter().map(|g| vec![0.1f32; g.numel()]).collect();
     let hyper = Hyper::default();
-    let mut opt = match spec.transport {
-        crate::transport::TransportKind::InProcess => {
-            ShardedOptimizer::new(spec.kind, &groups, &hyper, spec.shards)?
+
+    // Base transport, plus (for out-of-process kinds) a SIGKILL closure the
+    // fault layer uses so `kill` faults hit the real worker process.
+    use crate::transport::{FaultTransport, ShardTransport, TransportKind};
+    type Killer = Box<dyn Fn(usize) + Send + Sync>;
+    let tag = format!("bench-{}-{}", spec.kind.name(), spec.shards);
+    let (base, killer): (Arc<dyn ShardTransport>, Option<Killer>) = match &spec.transport {
+        TransportKind::InProcess => (Arc::new(crate::transport::InProcess), None),
+        TransportKind::Socket => {
+            let t = Arc::new(socket_transport_for(&tag)?.with_tuning(spec.tuning));
+            let handle = Arc::clone(&t);
+            (t, Some(Box::new(move |shard| kill_worker(handle.pid_of(shard)))))
         }
-        crate::transport::TransportKind::Socket => {
-            ShardedOptimizer::with_transport(
-                spec.kind,
-                &groups,
-                &hyper,
-                spec.shards,
-                None,
-                crate::shard::DEFAULT_MIN_BUCKET_NUMEL,
-                std::sync::Arc::new(socket_transport_for(&format!(
-                    "bench-{}-{}",
-                    spec.kind.name(),
-                    spec.shards
-                ))?),
-            )?
+        TransportKind::Tcp(addr) => {
+            let t = Arc::new(tcp_transport_for(addr)?.with_tuning(spec.tuning));
+            let handle = Arc::clone(&t);
+            (t, Some(Box::new(move |shard| kill_worker(handle.pid_of(shard)))))
         }
     };
-    for _ in 0..2 {
-        opt.next_step();
-        opt.step_all(&mut params, &grads, 1e-3)?;
-    }
-    let timer = Timer::start();
-    for t in 0..spec.iters {
-        opt.next_step();
-        opt.step_all(&mut params, &grads, 1e-3)?;
-        sink.progress(t as u64 + 1, spec.iters as u64, f64::NAN);
-    }
-    let secs = timer.elapsed_secs();
+    let transport: Arc<dyn ShardTransport> = match &spec.fault {
+        Some(plan) => {
+            let ft = FaultTransport::new(base, plan.clone());
+            Arc::new(match killer {
+                Some(kill) => ft.with_killer(move |shard| kill(shard)),
+                None => ft,
+            })
+        }
+        None => base,
+    };
+    let mut opt = ShardedOptimizer::with_transport(
+        spec.kind,
+        &groups,
+        &hyper,
+        spec.shards,
+        None,
+        crate::shard::DEFAULT_MIN_BUCKET_NUMEL,
+        transport,
+    )?;
+
+    let (secs, recoveries, error_kind, opt) = match &spec.recovery {
+        Some(policy) => {
+            // Supervised run: the engine heals itself per the policy, and
+            // every supervision decision lands in the job's event stream.
+            let events = sink.clone();
+            let mut sup = crate::shard::SupervisedOptimizer::new(opt, *policy)?.with_events(
+                move |e| match e {
+                    crate::shard::RecoveryEvent::Snapshot { step } => {
+                        events.recovery("snapshot", *step, "", "replay window reset");
+                    }
+                    crate::shard::RecoveryEvent::Incident { step, kind, transient, detail } => {
+                        let transient = if *transient { " (transient)" } else { "" };
+                        events.recovery("incident", *step, kind, &format!("{detail}{transient}"));
+                    }
+                    crate::shard::RecoveryEvent::Recovered { step, from_step, shards, replayed } => {
+                        events.recovery(
+                            "recovered",
+                            *step,
+                            "",
+                            &format!(
+                                "rewound to step {from_step}, replayed {replayed} step(s) on \
+                                 {shards} shard(s)"
+                            ),
+                        );
+                    }
+                    crate::shard::RecoveryEvent::GaveUp { step, recoveries, kind, detail } => {
+                        events.recovery(
+                            "gave-up",
+                            *step,
+                            kind,
+                            &format!("after {recoveries} recoveries: {detail}"),
+                        );
+                    }
+                },
+            );
+            for _ in 0..2 {
+                sup.run_step(&mut params, &grads, 1e-3)?;
+            }
+            let timer = Timer::start();
+            for t in 0..spec.iters {
+                sup.run_step(&mut params, &grads, 1e-3)?;
+                sink.progress(t as u64 + 1, spec.iters as u64, f64::NAN);
+            }
+            let secs = timer.elapsed_secs();
+            let recoveries = sup.recoveries();
+            let error_kind = sup.last_error_kind().map(str::to_string);
+            (secs, recoveries, error_kind, sup.into_engine())
+        }
+        None => {
+            for _ in 0..2 {
+                opt.next_step();
+                opt.step_all(&mut params, &grads, 1e-3)?;
+            }
+            let timer = Timer::start();
+            for t in 0..spec.iters {
+                opt.next_step();
+                opt.step_all(&mut params, &grads, 1e-3)?;
+                sink.progress(t as u64 + 1, spec.iters as u64, f64::NAN);
+            }
+            (timer.elapsed_secs(), 0u32, None, opt)
+        }
+    };
     // Real per-shard bytes, not scalars*4 — ET∞'s wide accumulator is an
     // f64, so the two differ (see tensoring::memory).
     let peak = opt.plan().peak_state_bytes(&groups, StateBackend::DenseF32);
@@ -569,6 +670,8 @@ fn run_shard_bench(spec: &ShardBenchSpec, sink: &EventSink) -> Result<ShardBench
         peak_state_bytes_per_shard: peak,
         total_state_scalars: opt.state_scalars(),
         work_imbalance: opt.plan().work_imbalance(),
+        recoveries,
+        error_kind,
     })
 }
 
@@ -681,10 +784,51 @@ mod tests {
             d_model: 16,
             d_ff: 32,
             seed: 5,
+            ..Default::default()
         };
         let out = run_shard_bench(&spec, &EventSink::discard("sb")).unwrap();
         assert_eq!(out.shards, 2);
         assert!(out.steps_per_sec > 0.0);
         assert!(out.total_state_scalars > 0);
+        assert_eq!(out.recoveries, 0);
+        assert_eq!(out.error_kind, None);
+    }
+
+    /// A supervised bench with an injected kill heals, finishes, and
+    /// reports the incident in both the outcome and the event stream.
+    #[test]
+    fn shard_bench_supervised_fault_run_heals_and_reports() {
+        let spec = ShardBenchSpec {
+            kind: crate::tensoring::OptimizerKind::Et(1),
+            shards: 2,
+            iters: 6,
+            layers: 1,
+            vocab: 64,
+            d_model: 16,
+            d_ff: 32,
+            seed: 5,
+            recovery: Some(crate::shard::RecoveryPolicy {
+                snapshot_every: 2,
+                max_recoveries: 3,
+                backoff_ms: 0,
+            }),
+            fault: Some(crate::transport::FaultPlan::parse("kill@1:4").unwrap()),
+            ..Default::default()
+        };
+        let (sink, events) = EventSink::collect("sbf");
+        let out = run_shard_bench(&spec, &sink).unwrap();
+        assert!(out.recoveries >= 1, "fault plan should force at least one recovery");
+        assert_eq!(out.error_kind.as_deref(), Some("disconnected"));
+        let phases: Vec<String> = events
+            .drain()
+            .into_iter()
+            .filter_map(|e| match e.event {
+                JobEvent::Recovery { phase, .. } => Some(phase),
+                _ => None,
+            })
+            .collect();
+        assert!(phases.iter().any(|p| p == "snapshot"), "phases: {phases:?}");
+        assert!(phases.iter().any(|p| p == "incident"), "phases: {phases:?}");
+        assert!(phases.iter().any(|p| p == "recovered"), "phases: {phases:?}");
     }
 }

@@ -449,6 +449,13 @@ fn narrate(ev: &StampedEvent) {
         JobEvent::Released { job, in_use_bytes } => {
             crate::debugln!("[sched +{t:.1}s] release '{job}' ({in_use_bytes} bytes in use)");
         }
+        JobEvent::Recovery { job, phase, step, kind, detail } => {
+            if phase == "snapshot" {
+                crate::debugln!("[sched +{t:.1}s] '{job}' snapshot at step {step}");
+            } else {
+                crate::warnln!("[sched +{t:.1}s] '{job}' {phase} at step {step} ({kind}): {detail}");
+            }
+        }
         JobEvent::Queued { .. }
         | JobEvent::ArtifactCache { .. }
         | JobEvent::CorpusCache { .. } => {}

@@ -13,9 +13,10 @@
 
 use crate::convex::ConvexConfig;
 use crate::runtime::Manifest;
+use crate::shard::RecoveryPolicy;
 use crate::tensoring::{model_state_bytes, OptimizerKind, StateBackend};
 use crate::train::RunConfig;
-use crate::transport::TransportKind;
+use crate::transport::{FaultPlan, TransportKind, TransportTuning};
 use crate::util::config::{Config, Value};
 use crate::vision::VisionConfig;
 use anyhow::{bail, Context, Result};
@@ -114,9 +115,22 @@ pub struct ShardBenchSpec {
     pub d_model: usize,
     pub d_ff: usize,
     pub seed: u64,
-    /// How workers are launched: in-process threads (default) or
-    /// `ettrain shard-worker` child processes over UNIX sockets.
+    /// How workers are launched: in-process threads (default), `ettrain
+    /// shard-worker` child processes over UNIX sockets, or the same over
+    /// TCP (`tcp:<addr>`).
     pub transport: TransportKind,
+    /// Transport timing knobs (`run.transport.*`): read timeout, worker
+    /// connect retries and backoff.
+    pub tuning: TransportTuning,
+    /// `Some` runs the bench under [`crate::shard::SupervisedOptimizer`]
+    /// with this policy (`run.recovery.*`): automatic snapshots, fault
+    /// classification, bitwise replay recovery. `None` is the raw engine.
+    pub recovery: Option<RecoveryPolicy>,
+    /// Deterministic fault injection: a parsed
+    /// [`crate::transport::FaultPlan`] wrapped around the transport.
+    /// Requires `recovery` — injecting faults without supervision just
+    /// kills the job.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ShardBenchSpec {
@@ -131,6 +145,9 @@ impl Default for ShardBenchSpec {
             d_ff: 2048,
             seed: 42,
             transport: TransportKind::InProcess,
+            tuning: TransportTuning::default(),
+            recovery: None,
+            fault: None,
         }
     }
 }
@@ -242,6 +259,17 @@ impl JobSpec {
                 if s.shards == 0 || s.iters == 0 {
                     bail!("job '{}': shards and iters must be >= 1", self.name);
                 }
+                s.tuning.validate().with_context(|| format!("job '{}'", self.name))?;
+                if let Some(policy) = &s.recovery {
+                    policy.validate().with_context(|| format!("job '{}'", self.name))?;
+                }
+                if s.fault.is_some() && s.recovery.is_none() {
+                    bail!(
+                        "job '{}': fault_plan needs run.recovery.* (a fault plan without \
+                         supervision just kills the job)",
+                        self.name
+                    );
+                }
             }
             Workload::Vision(v) => {
                 if v.optimizer.trim().is_empty() {
@@ -337,11 +365,11 @@ impl JobSpec {
                     TransportKind::InProcess => {
                         8 * numel + model_state_bytes(s.kind, &shapes, StateBackend::DenseF32)
                     }
-                    // Socket workers hold the optimizer state in their own
-                    // processes; this process keeps params + grads plus a
-                    // bounded per-shard serialization buffer (one ETSS
+                    // Socket/TCP workers hold the optimizer state in their
+                    // own processes; this process keeps params + grads plus
+                    // a bounded per-shard serialization buffer (one ETSS
                     // chunk each way).
-                    TransportKind::Socket => {
+                    TransportKind::Socket | TransportKind::Tcp(_) => {
                         8 * numel + s.shards * 8 * crate::optim::stream::STREAM_CHUNK_NUMEL
                     }
                 }
@@ -450,7 +478,18 @@ impl JobSpec {
                 kv("d_model", s.d_model.to_string());
                 kv("d_ff", s.d_ff.to_string());
                 kv("seed", s.seed.to_string());
-                kv("transport", q(s.transport.name()));
+                kv("transport", q(&s.transport.name()));
+                kv("read_timeout_ms", s.tuning.read_timeout_ms.to_string());
+                kv("connect_retries", s.tuning.connect_retries.to_string());
+                kv("backoff_ms", s.tuning.backoff_ms.to_string());
+                if let Some(r) = &s.recovery {
+                    kv("snapshot_every", r.snapshot_every.to_string());
+                    kv("max_recoveries", r.max_recoveries.to_string());
+                    kv("recovery_backoff_ms", r.backoff_ms.to_string());
+                }
+                if let Some(f) = &s.fault {
+                    kv("fault_plan", q(&f.to_string()));
+                }
             }
             Workload::Vision(v) => {
                 kv("optimizer", q(&v.optimizer));
@@ -529,7 +568,27 @@ const CONVEX_KEYS: &[&str] = &[
     "iters", "n", "d", "k", "cond", "householder", "seed", "measure_after", "curve_every",
 ];
 const SHARD_BENCH_KEYS: &[&str] = &[
-    "type", "kind", "shards", "iters", "layers", "vocab", "d_model", "d_ff", "seed", "transport",
+    "type",
+    "kind",
+    "shards",
+    "iters",
+    "layers",
+    "vocab",
+    "d_model",
+    "d_ff",
+    "seed",
+    "transport",
+    // run.transport.* timing knobs
+    "read_timeout_ms",
+    "connect_retries",
+    "backoff_ms",
+    // run.recovery.* supervision policy (any of these => supervised run)
+    "supervised",
+    "snapshot_every",
+    "max_recoveries",
+    "recovery_backoff_ms",
+    // deterministic fault injection (requires supervision)
+    "fault_plan",
 ];
 const VISION_KEYS: &[&str] = &[
     "type", "optimizer", "lr", "steps", "eval_every", "seed", "artifact_dir", "classes", "train",
@@ -631,6 +690,33 @@ fn job_from_config(cfg: &Config, name: &str) -> Result<JobSpec> {
         "shard-bench" => {
             let d = ShardBenchSpec::default();
             let kind_name = cfg.req_str(&key("kind"))?;
+            let dt = TransportTuning::default();
+            let dr = RecoveryPolicy::default();
+            // Any run.recovery.* key (or supervised = true) turns the
+            // supervision layer on; absent keys fall back to policy
+            // defaults.
+            let supervised = cfg.bool(&key("supervised"), false)
+                || cfg.get(&key("snapshot_every")).is_some()
+                || cfg.get(&key("max_recoveries")).is_some()
+                || cfg.get(&key("recovery_backoff_ms")).is_some();
+            let recovery = supervised.then(|| RecoveryPolicy {
+                snapshot_every: cfg.usize(&key("snapshot_every"), dr.snapshot_every as usize)
+                    as u64,
+                max_recoveries: cfg.usize(&key("max_recoveries"), dr.max_recoveries as usize)
+                    as u32,
+                backoff_ms: cfg.usize(&key("recovery_backoff_ms"), dr.backoff_ms as usize)
+                    as u64,
+            });
+            let fault = match cfg.get(&key("fault_plan")) {
+                Some(Value::Str(plan)) => Some(
+                    FaultPlan::parse(plan)
+                        .with_context(|| format!("job '{name}': bad fault_plan"))?,
+                ),
+                Some(other) => {
+                    bail!("job '{name}': fault_plan must be a string, got {other:?}")
+                }
+                None => None,
+            };
             JobSpec::shard_bench(
                 name,
                 ShardBenchSpec {
@@ -644,10 +730,21 @@ fn job_from_config(cfg: &Config, name: &str) -> Result<JobSpec> {
                     d_ff: cfg.usize(&key("d_ff"), d.d_ff),
                     seed: cfg.usize(&key("seed"), d.seed as usize) as u64,
                     transport: {
-                        let t = cfg.str(&key("transport"), d.transport.name());
+                        let t = cfg.str(&key("transport"), &d.transport.name());
                         TransportKind::parse(&t)
                             .with_context(|| format!("job '{name}': bad transport '{t}'"))?
                     },
+                    tuning: TransportTuning {
+                        read_timeout_ms: cfg
+                            .usize(&key("read_timeout_ms"), dt.read_timeout_ms as usize)
+                            as u64,
+                        connect_retries: cfg
+                            .usize(&key("connect_retries"), dt.connect_retries as usize)
+                            as u32,
+                        backoff_ms: cfg.usize(&key("backoff_ms"), dt.backoff_ms as usize) as u64,
+                    },
+                    recovery,
+                    fault,
                 },
             )
         }
@@ -743,6 +840,26 @@ mod tests {
                     kind: OptimizerKind::AdaGrad,
                     shards: 2,
                     transport: TransportKind::Socket,
+                    tuning: TransportTuning {
+                        read_timeout_ms: 15_000,
+                        connect_retries: 12,
+                        backoff_ms: 20,
+                    },
+                    ..Default::default()
+                },
+            ),
+            JobSpec::shard_bench(
+                "sb_tcp_healed",
+                ShardBenchSpec {
+                    kind: OptimizerKind::Et(2),
+                    shards: 2,
+                    transport: TransportKind::Tcp("127.0.0.1:0".into()),
+                    recovery: Some(RecoveryPolicy {
+                        snapshot_every: 3,
+                        max_recoveries: 2,
+                        backoff_ms: 10,
+                    }),
+                    fault: Some(FaultPlan::parse("kill@1:5;timeout@0:3x2").unwrap()),
                     ..Default::default()
                 },
             ),
@@ -814,6 +931,36 @@ mod tests {
             ConvexSpec { opt: ConvexOpt::Planned { budget: 0 }, ..ConvexSpec::default() },
         );
         assert!(zero_budget.validate().is_err());
+        // A fault plan without supervision is rejected up front.
+        let unsupervised_fault = JobSpec::shard_bench(
+            "uf",
+            ShardBenchSpec {
+                fault: Some(FaultPlan::parse("kill@0:3").unwrap()),
+                ..ShardBenchSpec::default()
+            },
+        );
+        let err = unsupervised_fault.validate().unwrap_err().to_string();
+        assert!(err.contains("run.recovery"), "{err}");
+        // Tuning validation errors name the run.transport.* key.
+        let bad_tuning = JobSpec::shard_bench(
+            "bt",
+            ShardBenchSpec {
+                tuning: TransportTuning { read_timeout_ms: 0, ..TransportTuning::default() },
+                ..ShardBenchSpec::default()
+            },
+        );
+        let err = bad_tuning.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("run.transport.read_timeout_ms"), "{err:#}");
+        // Recovery validation errors name the run.recovery.* key.
+        let bad_policy = JobSpec::shard_bench(
+            "bp",
+            ShardBenchSpec {
+                recovery: Some(RecoveryPolicy { snapshot_every: 0, ..RecoveryPolicy::default() }),
+                ..ShardBenchSpec::default()
+            },
+        );
+        let err = bad_policy.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("run.recovery.snapshot_every"), "{err:#}");
     }
 
     #[test]

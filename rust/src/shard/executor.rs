@@ -40,7 +40,7 @@ use crate::budget::StatePlan;
 use crate::optim::{GroupExport, GroupSpec, Hyper, Optimizer, StateExport};
 use crate::tensoring::OptimizerKind;
 use crate::transport::{
-    GroupTask, InProcess, ShardConnection, ShardTransport, WorkerSpec,
+    GroupTask, InProcess, ShardConnection, ShardTransport, TransportError, WorkerSpec,
 };
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -83,6 +83,11 @@ pub struct ShardedOptimizer {
     /// Last state snapshot taken via [`ShardedOptimizer::take_snapshot`];
     /// the recovery point after a worker dies.
     last_snapshot: Option<StateExport>,
+    /// Typed transport errors from the most recent failed operation
+    /// (`step_all`/`step`/`export_state`/`import_state`). The supervisor's
+    /// error-classification surface: `bail!` flattens causes into one
+    /// string, this keeps the [`TransportError`] taxonomy inspectable.
+    last_errors: Vec<TransportError>,
 }
 
 impl ShardedOptimizer {
@@ -266,6 +271,7 @@ impl ShardedOptimizer {
             min_bucket_numel,
             transport,
             last_snapshot: None,
+            last_errors: Vec::new(),
         };
         // Deterministic startup reduction: query workers in shard order.
         // The first query is also the readiness check — a worker whose
@@ -307,14 +313,18 @@ impl ShardedOptimizer {
     /// into an engine with any other shard count (or into a plain
     /// single-threaded [`crate::optim::StateOptimizer`]).
     pub fn export_state(&mut self) -> Result<StateExport> {
+        self.last_errors.clear();
         let n_shards = self.n_shards();
         let mut per_shard: Vec<StateExport> = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
-            per_shard.push(
-                self.conns[s]
-                    .export_state()
-                    .map_err(|e| anyhow::anyhow!("state export failed: {e}"))?,
-            );
+            match self.conns[s].export_state() {
+                Ok(export) => per_shard.push(export),
+                Err(e) => {
+                    let msg = format!("state export failed: {e}");
+                    self.last_errors.push(e);
+                    bail!("{msg}");
+                }
+            }
         }
         let step = per_shard.first().map(|e| e.step).unwrap_or(0);
         let mut groups: Vec<Option<GroupExport>> = vec![None; self.group_numels.len()];
@@ -370,6 +380,7 @@ impl ShardedOptimizer {
             );
         }
         let n_shards = self.n_shards();
+        self.last_errors.clear();
         let mut errs: Vec<String> = Vec::new();
         for s in 0..n_shards {
             let shard_export = StateExport {
@@ -382,6 +393,7 @@ impl ShardedOptimizer {
             };
             if let Err(e) = self.conns[s].import_state(shard_export) {
                 errs.push(e.to_string());
+                self.last_errors.push(e);
             }
         }
         if !errs.is_empty() {
@@ -404,6 +416,16 @@ impl ShardedOptimizer {
     /// The step counter of the held recovery snapshot, if any.
     pub fn snapshot_step(&self) -> Option<u64> {
         self.last_snapshot.as_ref().map(|s| s.step)
+    }
+
+    /// Typed [`TransportError`]s from the most recent failed
+    /// `step`/`step_all`/`export_state`/`import_state`. Empty after a
+    /// successful operation, or when the failure was a caller-side
+    /// validation error rather than a transport fault. This is what the
+    /// supervision layer classifies to decide between retry, recovery,
+    /// and giving up.
+    pub fn last_errors(&self) -> &[TransportError] {
+        &self.last_errors
     }
 
     /// Change the worker-set size at a step boundary without a restart:
@@ -433,19 +455,23 @@ impl ShardedOptimizer {
 
     /// Crash recovery: rebuild the engine over however many connections
     /// are still alive and restore the last [`take_snapshot`] state.
+    /// With *every* worker dead the engine degrades to a single fresh
+    /// worker rather than giving up — state lives in the snapshot, not
+    /// the workers, so one replacement is always enough to continue.
     /// Returns the snapshot's step counter; the caller rewinds its
     /// parameters to that step (from its own copy — parameters live with
     /// the caller, not the workers) and replays forward.
     ///
     /// [`take_snapshot`]: ShardedOptimizer::take_snapshot
     pub fn recover(&mut self) -> Result<u64> {
-        let survivors = self.conns.iter().filter(|c| c.is_alive()).count();
-        anyhow::ensure!(survivors >= 1, "recover: no surviving shard workers");
-        let snapshot = self
-            .last_snapshot
-            .take()
-            .context("recover: no snapshot held (call take_snapshot at a step boundary)")?;
-        let step = snapshot.step;
+        let survivors = self.conns.iter().filter(|c| c.is_alive()).count().max(1);
+        anyhow::ensure!(
+            self.last_snapshot.is_some(),
+            "recover: no snapshot held (call take_snapshot at a step boundary)"
+        );
+        // Build the replacement engine *before* taking the snapshot out, so
+        // a failure here (or below) leaves the snapshot held and a later
+        // recover() can try again — recovery must itself be recoverable.
         let mut fresh = Self::build_engine(
             self.source.clone(),
             &self.groups,
@@ -456,7 +482,16 @@ impl ShardedOptimizer {
             Arc::clone(&self.transport),
         )
         .with_context(|| format!("recover: rebuilding at {survivors} shards"))?;
-        fresh.import_state(&snapshot).context("recover: importing snapshot")?;
+        let snapshot = match self.last_snapshot.take() {
+            Some(s) => s,
+            None => bail!("recover: no snapshot held"),
+        };
+        let step = snapshot.step;
+        if let Err(e) = fresh.import_state(&snapshot) {
+            self.last_errors = std::mem::take(&mut fresh.last_errors);
+            self.last_snapshot = Some(snapshot);
+            return Err(e.context("recover: importing snapshot"));
+        }
         fresh.last_snapshot = Some(snapshot);
         *self = fresh;
         Ok(step)
@@ -481,10 +516,18 @@ impl Optimizer for ShardedOptimizer {
             g: g.as_ptr(),
             g_len: g.len(),
         };
-        self.conns[s]
-            .send_step(lr, vec![task])
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
-        self.conns[s].recv_step_ack().map_err(|e| anyhow::anyhow!("{e}"))
+        self.last_errors.clear();
+        if let Err(e) = self.conns[s].send_step(lr, vec![task]) {
+            let msg = e.to_string();
+            self.last_errors.push(e);
+            bail!("{msg}");
+        }
+        if let Err(e) = self.conns[s].recv_step_ack() {
+            let msg = e.to_string();
+            self.last_errors.push(e);
+            bail!("{msg}");
+        }
+        Ok(())
     }
 
     /// One full optimizer step over every group: fan buckets out to the
@@ -520,6 +563,7 @@ impl Optimizer for ShardedOptimizer {
         let n_shards = self.n_shards();
         let mut pending = vec![0usize; n_shards];
         let mut errs: Vec<String> = Vec::new();
+        self.last_errors.clear();
         for s in 0..n_shards {
             for bucket in &self.buckets[s] {
                 let mut tasks = Vec::with_capacity(bucket.groups.len());
@@ -531,6 +575,7 @@ impl Optimizer for ShardedOptimizer {
                 }
                 if let Err(e) = self.conns[s].send_step(lr, tasks) {
                     errs.push(e.to_string());
+                    self.last_errors.push(e);
                     break;
                 }
                 pending[s] += 1;
@@ -549,6 +594,7 @@ impl Optimizer for ShardedOptimizer {
                     Err(e) => {
                         let fatal = e.is_fatal();
                         errs.push(e.to_string());
+                        self.last_errors.push(e);
                         if fatal {
                             break;
                         }

@@ -20,7 +20,13 @@
 //!   for any `OptimizerKind`, driven by fan-out/fan-in with an ack
 //!   barrier. The engine is elastic: `reshard` grows or shrinks the
 //!   worker set at a step boundary, and `take_snapshot`/`recover` survive
-//!   worker death.
+//!   worker death;
+//! * [`SupervisedOptimizer`] — the self-healing layer on top: automatic
+//!   snapshots at a [`RecoveryPolicy`] cadence, typed fault
+//!   classification (transient timeouts back off; disconnects heal
+//!   immediately; worker-reported errors fail fast), and
+//!   bitwise-deterministic rewind-and-replay recovery, with every
+//!   decision surfaced as a [`RecoveryEvent`].
 //!
 //! **Determinism contract:** sharded execution is bitwise-identical to
 //! the single-threaded optimizer at any shard count. Each group's update
@@ -40,9 +46,11 @@
 pub mod bucket;
 pub mod executor;
 pub mod partition;
+pub mod supervisor;
 
 pub use bucket::{bucketize, Bucket, DEFAULT_MIN_BUCKET_NUMEL};
 pub use executor::ShardedOptimizer;
 pub use partition::{
     group_cost, partition, partition_planned, partition_with_costs, GroupCost, ShardPlan,
 };
+pub use supervisor::{RecoveryEvent, RecoveryPolicy, SupervisedOptimizer, SupervisorError};

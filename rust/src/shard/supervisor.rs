@@ -1,0 +1,742 @@
+//! Self-healing supervision over [`ShardedOptimizer`]: automatic
+//! snapshots, typed fault classification, and bitwise-deterministic
+//! crash recovery — the driver loop never sees a transient transport
+//! fault.
+//!
+//! The engine already has the recovery *mechanisms* (`take_snapshot`,
+//! `recover`, shard-count-independent state export); what it lacks is
+//! *policy*: when to snapshot, which failures to retry, how many times,
+//! and who replays the lost step window. [`SupervisedOptimizer`] owns
+//! exactly that. A driver replaces
+//!
+//! ```text
+//! opt.next_step();
+//! opt.step_all(&mut params, grads, lr)?;   // dies on any worker fault
+//! ```
+//!
+//! with `sup.run_step(&mut params, grads, lr)?`, and the supervisor:
+//!
+//! 1. **Snapshots** optimizer state (inside the workers) *and* a copy of
+//!    the parameters every [`RecoveryPolicy::snapshot_every`] completed
+//!    steps, clearing the replay window at each boundary.
+//! 2. **Records** every completed step's `(grads, lr)` into the replay
+//!    window, so recovery can replay forward from the snapshot with the
+//!    exact gradient sequence — bitwise, not approximately.
+//! 3. On a step failure, **classifies** the engine's typed
+//!    [`TransportError`]s: worker-reported application errors are
+//!    deterministic and would recur, so they fail fast; timeout storms
+//!    are transient and back off (doubling, clock-free) before healing;
+//!    disconnects/protocol violations heal immediately.
+//! 4. **Heals** through a single unified path regardless of fault kind:
+//!    rebuild the engine on the surviving workers ([`recover`]), rewind
+//!    the caller's parameters to the snapshot copy, replay the window,
+//!    then retry the in-flight step. One path means even a "transient"
+//!    timeout — which may have left *other* shards already updated for
+//!    the failed step — cannot double-apply anything.
+//! 5. **Gives up** with a typed [`SupervisorError`] once
+//!    [`RecoveryPolicy::max_recoveries`] is exhausted (or immediately on
+//!    unrecoverable faults). A fault *during* recovery (the failure mode
+//!    that kills most checkpoint systems) is just another incident: the
+//!    engine keeps its snapshot when an import fails, so healing is
+//!    itself retried under the same budget.
+//!
+//! Every decision is surfaced as a [`RecoveryEvent`] through an optional
+//! callback, which the session layer forwards into the run's JSONL event
+//! stream and the run registry's incident fields. Determinism contract:
+//! a supervised run that survives any schedule of injected faults (see
+//! [`crate::transport::FaultPlan`]) produces final parameters and
+//! optimizer state bitwise-identical to an uninterrupted run — tested in
+//! `rust/tests/transport_recovery.rs`.
+//!
+//! [`recover`]: ShardedOptimizer::recover
+
+use super::ShardedOptimizer;
+use crate::transport::TransportError;
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// Declarative recovery policy for a supervised run. Spec-visible as the
+/// `run.recovery.*` keys of a shard bench.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Take a snapshot every this-many completed steps (and always before
+    /// the first step). Smaller = shorter replay window, more export
+    /// traffic. Must be >= 1.
+    pub snapshot_every: u64,
+    /// Total recovery budget for the run: how many incidents (including
+    /// failures during recovery itself) may be healed before giving up.
+    pub max_recoveries: u32,
+    /// Base backoff before healing a *transient* (all-timeout) incident;
+    /// doubles per incident, capped at 32x. Zero disables backoff.
+    pub backoff_ms: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> RecoveryPolicy {
+        RecoveryPolicy { snapshot_every: 8, max_recoveries: 4, backoff_ms: 25 }
+    }
+}
+
+impl RecoveryPolicy {
+    /// Validate, naming the offending spec key.
+    pub fn validate(&self) -> Result<()> {
+        if self.snapshot_every == 0 {
+            bail!("run.recovery.snapshot_every must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Backoff before healing the `n`-th transient incident (1-based):
+    /// `backoff_ms * 2^(n-1)`, capped at 32x the base. Clock-free and
+    /// deterministic — the delay depends only on the incident count.
+    pub fn backoff_for(&self, incident: u32) -> Duration {
+        let factor = match incident.saturating_sub(1) {
+            shift if shift >= 5 => 32,
+            shift => 1u64 << shift,
+        };
+        Duration::from_millis(self.backoff_ms.saturating_mul(factor))
+    }
+}
+
+/// One supervision decision, in the order it happened. The session layer
+/// forwards these into the run's event stream; tests assert on them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RecoveryEvent {
+    /// Snapshot taken at a step boundary; the replay window restarts here.
+    Snapshot { step: u64 },
+    /// A step (or snapshot) failed. `kind` is the dominant
+    /// [`TransportError::kind_label`]; `transient` means the incident
+    /// backs off before healing.
+    Incident { step: u64, kind: &'static str, transient: bool, detail: String },
+    /// Healed: engine rebuilt on `shards` workers, parameters rewound to
+    /// `from_step`, `replayed` steps replayed bitwise from the window.
+    Recovered { step: u64, from_step: u64, shards: usize, replayed: u64 },
+    /// Supervision ended the run: budget exhausted or the fault class is
+    /// unrecoverable.
+    GaveUp { step: u64, recoveries: u32, kind: &'static str, detail: String },
+}
+
+impl RecoveryEvent {
+    /// Short tag for logs and event streams.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RecoveryEvent::Snapshot { .. } => "snapshot",
+            RecoveryEvent::Incident { .. } => "incident",
+            RecoveryEvent::Recovered { .. } => "recovered",
+            RecoveryEvent::GaveUp { .. } => "gave-up",
+        }
+    }
+}
+
+/// Typed terminal failure of a supervised run. Wrapped in
+/// [`anyhow::Error`]; callers downcast to tell budget exhaustion apart
+/// from unrecoverable faults.
+#[derive(Debug)]
+pub enum SupervisorError {
+    /// The recovery budget ran out; `last` is the final incident.
+    Exhausted { recoveries: u32, kind: &'static str, last: String },
+    /// The fault class cannot be healed by rebuild-and-replay: a
+    /// deterministic worker-side failure would simply recur, and a
+    /// non-transport error has nothing to recover from.
+    Unrecoverable { kind: &'static str, detail: String },
+}
+
+impl SupervisorError {
+    /// The taxonomy bucket of the terminal fault (registry `error_kind`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SupervisorError::Exhausted { kind, .. } => kind,
+            SupervisorError::Unrecoverable { kind, .. } => kind,
+        }
+    }
+}
+
+impl std::fmt::Display for SupervisorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SupervisorError::Exhausted { recoveries, kind, last } => write!(
+                f,
+                "recovery budget exhausted after {recoveries} recoveries ({kind}): {last}"
+            ),
+            SupervisorError::Unrecoverable { kind, detail } => {
+                write!(f, "unrecoverable {kind} failure: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SupervisorError {}
+
+/// How an incident's error set classifies. See
+/// [`SupervisedOptimizer::classify`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Classified {
+    kind: &'static str,
+    transient: bool,
+    recoverable: bool,
+}
+
+type EventSink = Box<dyn FnMut(&RecoveryEvent) + Send>;
+
+/// Supervision wrapper: owns a [`ShardedOptimizer`], a replay window,
+/// and the snapshot-time parameter copy. See the module docs for the
+/// full control flow.
+pub struct SupervisedOptimizer {
+    engine: ShardedOptimizer,
+    policy: RecoveryPolicy,
+    on_event: Option<EventSink>,
+    /// `(grads, lr)` of every step completed since the last snapshot, in
+    /// order — the bitwise replay source.
+    window: Vec<(Vec<Vec<f32>>, f32)>,
+    /// The caller's parameters as of the last snapshot. Parameters live
+    /// with the caller, not the workers, so the supervisor keeps the
+    /// rewind copy itself.
+    params_at_snapshot: Vec<Vec<f32>>,
+    /// Completed supervised steps.
+    step: u64,
+    recoveries: u32,
+    steps_replayed: u64,
+    shards_lost: usize,
+    last_error_kind: Option<&'static str>,
+}
+
+impl SupervisedOptimizer {
+    pub fn new(engine: ShardedOptimizer, policy: RecoveryPolicy) -> Result<SupervisedOptimizer> {
+        policy.validate()?;
+        Ok(SupervisedOptimizer {
+            engine,
+            policy,
+            on_event: None,
+            window: Vec::new(),
+            params_at_snapshot: Vec::new(),
+            step: 0,
+            recoveries: 0,
+            steps_replayed: 0,
+            shards_lost: 0,
+            last_error_kind: None,
+        })
+    }
+
+    /// Install an event callback; every [`RecoveryEvent`] is delivered in
+    /// order, synchronously.
+    pub fn with_events(
+        mut self,
+        sink: impl FnMut(&RecoveryEvent) + Send + 'static,
+    ) -> SupervisedOptimizer {
+        self.on_event = Some(Box::new(sink));
+        self
+    }
+
+    pub fn policy(&self) -> &RecoveryPolicy {
+        &self.policy
+    }
+
+    /// Completed supervised steps.
+    pub fn completed_steps(&self) -> u64 {
+        self.step
+    }
+
+    /// Incidents healed so far (not counting a terminal give-up).
+    pub fn recoveries(&self) -> u32 {
+        self.recoveries
+    }
+
+    /// Total steps replayed from the window across all recoveries.
+    pub fn steps_replayed(&self) -> u64 {
+        self.steps_replayed
+    }
+
+    /// Workers lost across all recoveries (shard-count shrinkage).
+    pub fn shards_lost(&self) -> usize {
+        self.shards_lost
+    }
+
+    /// Taxonomy bucket of the most recent incident, if any.
+    pub fn last_error_kind(&self) -> Option<&'static str> {
+        self.last_error_kind
+    }
+
+    pub fn engine(&self) -> &ShardedOptimizer {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut ShardedOptimizer {
+        &mut self.engine
+    }
+
+    pub fn into_engine(self) -> ShardedOptimizer {
+        self.engine
+    }
+
+    fn emit(&mut self, event: RecoveryEvent) {
+        if let Some(sink) = self.on_event.as_mut() {
+            sink(&event);
+        }
+    }
+
+    /// Classify the engine's typed errors from the operation that just
+    /// failed. An empty error set means the failure was not a transport
+    /// fault (caller-side validation, missing snapshot) — nothing to
+    /// heal. Any worker-reported error is deterministic and unrecoverable
+    /// (replaying the same gradients reproduces it). An all-timeout set
+    /// is transient; anything else heals without backoff.
+    fn classify(errors: &[TransportError]) -> Classified {
+        if errors.is_empty() {
+            return Classified { kind: "internal", transient: false, recoverable: false };
+        }
+        if errors.iter().any(|e| matches!(e, TransportError::Worker { .. })) {
+            return Classified { kind: "worker", transient: false, recoverable: false };
+        }
+        if errors.iter().all(|e| matches!(e, TransportError::Timeout { .. })) {
+            return Classified { kind: "timeout", transient: true, recoverable: true };
+        }
+        // Mixed fatal set: report the first non-timeout error's bucket.
+        let kind = errors
+            .iter()
+            .find(|e| !matches!(e, TransportError::Timeout { .. }))
+            .map(TransportError::kind_label)
+            .unwrap_or("io");
+        Classified { kind, transient: false, recoverable: true }
+    }
+
+    /// One supervised optimizer step: snapshot if due, advance the step
+    /// counter, fan out the update — healing any fault along the way.
+    /// On `Ok`, `params` hold the updated values and the step is recorded
+    /// in the replay window. On `Err`, supervision has given up; the
+    /// error downcasts to [`SupervisorError`].
+    pub fn run_step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32) -> Result<()> {
+        self.maybe_snapshot(params)?;
+        loop {
+            self.engine.next_step();
+            match self.engine.step_all(params, grads, lr) {
+                Ok(()) => {
+                    self.window.push((grads.to_vec(), lr));
+                    self.step += 1;
+                    return Ok(());
+                }
+                Err(err) => self.heal(params, err)?,
+            }
+        }
+    }
+
+    /// Snapshot at the policy cadence: worker-side optimizer state via
+    /// the engine, caller-side parameters into the rewind copy. A failed
+    /// snapshot is an incident like any other — the engine keeps its
+    /// previous snapshot, so healing rewinds to *that* and the snapshot
+    /// is retried once the world is healthy again.
+    fn maybe_snapshot(&mut self, params: &mut [Vec<f32>]) -> Result<()> {
+        if self.step % self.policy.snapshot_every != 0 && !self.params_at_snapshot.is_empty() {
+            return Ok(());
+        }
+        loop {
+            match self.engine.take_snapshot() {
+                Ok(step) => {
+                    self.params_at_snapshot = params.to_vec();
+                    self.window.clear();
+                    self.emit(RecoveryEvent::Snapshot { step });
+                    return Ok(());
+                }
+                Err(err) => self.heal(params, err)?,
+            }
+        }
+    }
+
+    /// The unified heal path. Loops because recovery can itself fail (a
+    /// second fault mid-replay); every attempt draws from the same
+    /// [`RecoveryPolicy::max_recoveries`] budget.
+    fn heal(&mut self, params: &mut [Vec<f32>], first: anyhow::Error) -> Result<()> {
+        let mut err = first;
+        loop {
+            let class = Self::classify(self.engine.last_errors());
+            self.last_error_kind = Some(class.kind);
+            if !class.recoverable {
+                let terminal = SupervisorError::Unrecoverable {
+                    kind: class.kind,
+                    detail: err.to_string(),
+                };
+                self.emit(RecoveryEvent::GaveUp {
+                    step: self.step,
+                    recoveries: self.recoveries,
+                    kind: class.kind,
+                    detail: err.to_string(),
+                });
+                return Err(anyhow::Error::new(terminal));
+            }
+            if self.recoveries >= self.policy.max_recoveries {
+                let terminal = SupervisorError::Exhausted {
+                    recoveries: self.recoveries,
+                    kind: class.kind,
+                    last: err.to_string(),
+                };
+                self.emit(RecoveryEvent::GaveUp {
+                    step: self.step,
+                    recoveries: self.recoveries,
+                    kind: class.kind,
+                    detail: err.to_string(),
+                });
+                return Err(anyhow::Error::new(terminal));
+            }
+            self.recoveries += 1;
+            self.emit(RecoveryEvent::Incident {
+                step: self.step,
+                kind: class.kind,
+                transient: class.transient,
+                detail: err.to_string(),
+            });
+            if class.transient {
+                let pause = self.policy.backoff_for(self.recoveries);
+                if !pause.is_zero() {
+                    std::thread::sleep(pause);
+                }
+            }
+            match self.recover_and_replay(params) {
+                Ok(()) => return Ok(()),
+                Err(next) => err = next,
+            }
+        }
+    }
+
+    /// Rebuild on the survivors, rewind `params` to the snapshot copy,
+    /// replay the window bitwise. Any failure propagates back to
+    /// [`heal`](Self::heal) as the next incident.
+    fn recover_and_replay(&mut self, params: &mut [Vec<f32>]) -> Result<()> {
+        let before = self.engine.n_shards();
+        let from_step = self.engine.recover()?;
+        let after = self.engine.n_shards();
+        self.shards_lost += before.saturating_sub(after);
+        for (p, snap) in params.iter_mut().zip(&self.params_at_snapshot) {
+            p.copy_from_slice(snap);
+        }
+        let mut replayed = 0u64;
+        for (grads, lr) in &self.window {
+            self.engine.next_step();
+            self.engine.step_all(params, grads, *lr)?;
+            replayed += 1;
+        }
+        self.steps_replayed += replayed;
+        self.emit(RecoveryEvent::Recovered {
+            step: self.step,
+            from_step,
+            shards: after,
+            replayed,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{self, GroupSpec, Hyper, Optimizer};
+    use crate::shard::DEFAULT_MIN_BUCKET_NUMEL;
+    use crate::tensoring::OptimizerKind;
+    use crate::transport::{FaultPlan, FaultTransport, InProcess};
+    use crate::util::rng::Pcg64;
+    use std::sync::{Arc, Mutex};
+
+    fn groups() -> Vec<GroupSpec> {
+        vec![
+            GroupSpec::new("w", &[12, 8]),
+            GroupSpec::new("b", &[8]),
+            GroupSpec::new("v", &[6, 5]),
+        ]
+    }
+
+    fn grad_stream(gs: &[GroupSpec], steps: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..steps)
+            .map(|_| {
+                gs.iter()
+                    .map(|g| {
+                        let mut v = vec![0.0f32; g.numel()];
+                        rng.fill_normal(&mut v, 1.0);
+                        v
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn init_params(gs: &[GroupSpec]) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seeded(0xBEEF);
+        gs.iter()
+            .map(|g| {
+                let mut v = vec![0.0f32; g.numel()];
+                rng.fill_uniform(&mut v, -0.5, 0.5);
+                v
+            })
+            .collect()
+    }
+
+    fn reference_params(gs: &[GroupSpec], stream: &[Vec<Vec<f32>>], lr: f32) -> Vec<Vec<f32>> {
+        let mut opt = optim::build(OptimizerKind::Et(2), gs, &Hyper::default());
+        let mut params = init_params(gs);
+        for grads in stream {
+            opt.next_step();
+            opt.step_all(&mut params, grads, lr).unwrap();
+        }
+        params
+    }
+
+    fn engine(transport: Arc<dyn crate::transport::ShardTransport>) -> ShardedOptimizer {
+        ShardedOptimizer::with_transport(
+            OptimizerKind::Et(2),
+            &groups(),
+            &Hyper::default(),
+            2,
+            None,
+            DEFAULT_MIN_BUCKET_NUMEL,
+            transport,
+        )
+        .unwrap()
+    }
+
+    fn policy() -> RecoveryPolicy {
+        RecoveryPolicy { snapshot_every: 3, max_recoveries: 4, backoff_ms: 0 }
+    }
+
+    #[test]
+    fn policy_validation_names_the_offending_key() {
+        let err = RecoveryPolicy { snapshot_every: 0, ..RecoveryPolicy::default() }
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("run.recovery.snapshot_every"), "{err}");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RecoveryPolicy { backoff_ms: 10, ..RecoveryPolicy::default() };
+        assert_eq!(p.backoff_for(1), Duration::from_millis(10));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(20));
+        assert_eq!(p.backoff_for(6), Duration::from_millis(320));
+        assert_eq!(p.backoff_for(60), Duration::from_millis(320));
+    }
+
+    #[test]
+    fn fault_free_supervised_run_is_bitwise_and_snapshots_on_cadence() {
+        let gs = groups();
+        let stream = grad_stream(&gs, 7, 11);
+        let want = reference_params(&gs, &stream, 0.05);
+
+        let events = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&events);
+        let mut sup = SupervisedOptimizer::new(engine(Arc::new(InProcess)), policy())
+            .unwrap()
+            .with_events(move |e| sink.lock().unwrap().push(e.clone()));
+        let mut params = init_params(&gs);
+        for grads in &stream {
+            sup.run_step(&mut params, grads, 0.05).unwrap();
+        }
+        assert_eq!(want, params);
+        assert_eq!(sup.recoveries(), 0);
+        assert_eq!(sup.completed_steps(), 7);
+        let events = events.lock().unwrap();
+        let snaps: Vec<u64> = events
+            .iter()
+            .filter_map(|e| match e {
+                RecoveryEvent::Snapshot { step } => Some(*step),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(snaps, vec![0, 3, 6], "snapshot_every=3 over 7 steps");
+    }
+
+    #[test]
+    fn injected_disconnect_heals_bitwise_inprocess() {
+        let gs = groups();
+        let stream = grad_stream(&gs, 8, 13);
+        let want = reference_params(&gs, &stream, 0.05);
+
+        let plan = FaultPlan::parse("kill@1:5").unwrap();
+        let transport = Arc::new(FaultTransport::new(Arc::new(InProcess), plan));
+        let events = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&events);
+        let mut sup = SupervisedOptimizer::new(engine(transport), policy())
+            .unwrap()
+            .with_events(move |e| sink.lock().unwrap().push(e.clone()));
+        let mut params = init_params(&gs);
+        for grads in &stream {
+            sup.run_step(&mut params, grads, 0.05).unwrap();
+        }
+        assert_eq!(want, params, "healed run diverged from uninterrupted reference");
+        assert_eq!(sup.recoveries(), 1);
+        assert_eq!(sup.last_error_kind(), Some("disconnected"));
+        assert_eq!(sup.engine().n_shards(), 1, "dead shard -> rebuilt on the survivor");
+        let events = events.lock().unwrap();
+        let tags: Vec<&str> = events.iter().map(|e| e.tag()).collect();
+        assert!(tags.contains(&"incident") && tags.contains(&"recovered"), "{tags:?}");
+    }
+
+    #[test]
+    fn timeout_storm_is_transient_and_heals() {
+        let gs = groups();
+        let stream = grad_stream(&gs, 6, 17);
+        let want = reference_params(&gs, &stream, 0.05);
+
+        let plan = FaultPlan::parse("timeout@0:4x2").unwrap();
+        let transport = Arc::new(FaultTransport::new(Arc::new(InProcess), plan));
+        let mut sup = SupervisedOptimizer::new(engine(transport), policy()).unwrap();
+        let mut params = init_params(&gs);
+        for grads in &stream {
+            sup.run_step(&mut params, grads, 0.05).unwrap();
+        }
+        assert_eq!(want, params);
+        assert!(sup.recoveries() >= 1);
+        assert_eq!(sup.last_error_kind(), Some("timeout"));
+        assert_eq!(sup.engine().n_shards(), 2, "timeouts do not kill workers");
+    }
+
+    #[test]
+    fn exhausted_budget_is_a_typed_failure() {
+        let gs = groups();
+        let stream = grad_stream(&gs, 6, 19);
+        // More timeout bursts than the budget can absorb.
+        let plan = FaultPlan::parse("timeout@0:2x100").unwrap();
+        let transport = Arc::new(FaultTransport::new(Arc::new(InProcess), plan));
+        let mut sup = SupervisedOptimizer::new(
+            engine(transport),
+            RecoveryPolicy { snapshot_every: 2, max_recoveries: 1, backoff_ms: 0 },
+        )
+        .unwrap();
+        let mut params = init_params(&gs);
+        let mut failed = None;
+        for grads in &stream {
+            if let Err(e) = sup.run_step(&mut params, grads, 0.05) {
+                failed = Some(e);
+                break;
+            }
+        }
+        let err = failed.expect("budget of 1 cannot absorb 100 timeout bursts");
+        match err.downcast_ref::<SupervisorError>() {
+            Some(SupervisorError::Exhausted { recoveries, kind, .. }) => {
+                assert_eq!(*recoveries, 1);
+                assert_eq!(*kind, "timeout");
+            }
+            other => panic!("expected Exhausted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn double_fault_during_recovery_draws_from_the_same_budget() {
+        let gs = groups();
+        let stream = grad_stream(&gs, 8, 23);
+        let want = reference_params(&gs, &stream, 0.05);
+
+        // First kill at shard 1's step 5; the second fires during the
+        // recovery replay (ordinals are monotonic across rebuilds, so
+        // step 6 of shard 0 lands mid-replay or on the retried step).
+        let plan = FaultPlan::parse("kill@1:5;kill@0:6").unwrap();
+        let transport = Arc::new(FaultTransport::new(Arc::new(InProcess), plan));
+        let events = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&events);
+        let mut sup = SupervisedOptimizer::new(engine(transport), policy())
+            .unwrap()
+            .with_events(move |e| sink.lock().unwrap().push(e.clone()));
+        let mut params = init_params(&gs);
+        for grads in &stream {
+            sup.run_step(&mut params, grads, 0.05).unwrap();
+        }
+        assert_eq!(want, params, "double-fault run diverged");
+        assert_eq!(sup.recoveries(), 2, "each fault is its own incident");
+        let events = events.lock().unwrap();
+        let incidents = events.iter().filter(|e| e.tag() == "incident").count();
+        let recovered = events.iter().filter(|e| e.tag() == "recovered").count();
+        assert_eq!((incidents, recovered), (2, 2));
+    }
+
+    /// Transport that forwards to in-process workers but reports a
+    /// deterministic worker-side application failure on every step ack —
+    /// the fault class supervision must *not* burn budget on.
+    struct WorkerErrTransport(InProcess);
+
+    struct WorkerErrConn {
+        shard: usize,
+        inner: Box<dyn crate::transport::ShardConnection>,
+    }
+
+    impl crate::transport::ShardTransport for WorkerErrTransport {
+        fn connect(
+            &self,
+            shard: usize,
+            spec: crate::transport::WorkerSpec,
+            queue_cap: usize,
+        ) -> std::result::Result<
+            Box<dyn crate::transport::ShardConnection>,
+            crate::transport::TransportError,
+        > {
+            let inner = self.0.connect(shard, spec, queue_cap)?;
+            Ok(Box::new(WorkerErrConn { shard, inner }))
+        }
+
+        fn name(&self) -> &'static str {
+            self.0.name()
+        }
+    }
+
+    impl crate::transport::ShardConnection for WorkerErrConn {
+        fn send_step(
+            &mut self,
+            lr: f32,
+            tasks: Vec<crate::transport::GroupTask>,
+        ) -> std::result::Result<(), TransportError> {
+            self.inner.send_step(lr, tasks)
+        }
+
+        fn recv_step_ack(&mut self) -> std::result::Result<(), TransportError> {
+            // Drain the real ack first (the pointer-safety barrier), then
+            // report the application failure a broken update rule would.
+            self.inner.recv_step_ack()?;
+            Err(TransportError::Worker {
+                shard: self.shard,
+                message: "synthetic update-rule failure".to_string(),
+            })
+        }
+
+        fn next_step(&mut self) -> std::result::Result<(), TransportError> {
+            self.inner.next_step()
+        }
+
+        fn state_scalars(&mut self) -> std::result::Result<(usize, usize), TransportError> {
+            self.inner.state_scalars()
+        }
+
+        fn export_state(
+            &mut self,
+        ) -> std::result::Result<crate::optim::StateExport, TransportError> {
+            self.inner.export_state()
+        }
+
+        fn import_state(
+            &mut self,
+            state: crate::optim::StateExport,
+        ) -> std::result::Result<(), TransportError> {
+            self.inner.import_state(state)
+        }
+
+        fn is_alive(&self) -> bool {
+            self.inner.is_alive()
+        }
+
+        fn shutdown(&mut self) -> std::result::Result<(), TransportError> {
+            self.inner.shutdown()
+        }
+    }
+
+    #[test]
+    fn worker_error_is_unrecoverable_immediately() {
+        let gs = groups();
+        let mut sup = SupervisedOptimizer::new(
+            engine(Arc::new(WorkerErrTransport(InProcess))),
+            policy(),
+        )
+        .unwrap();
+        let mut params = init_params(&gs);
+        let grads: Vec<Vec<f32>> = gs.iter().map(|g| vec![0.1; g.numel()]).collect();
+        let err = sup.run_step(&mut params, &grads, 0.05).unwrap_err();
+        match err.downcast_ref::<SupervisorError>() {
+            Some(SupervisorError::Unrecoverable { kind, .. }) => assert_eq!(*kind, "worker"),
+            other => panic!("expected Unrecoverable, got {other:?}"),
+        }
+        assert_eq!(sup.recoveries(), 0, "no recovery attempted for worker errors");
+    }
+}

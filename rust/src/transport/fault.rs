@@ -1,0 +1,518 @@
+//! Deterministic fault injection for the shard transport layer.
+//!
+//! [`FaultTransport`] wraps any inner [`ShardTransport`] and injects
+//! failures according to a [`FaultPlan`] — a declarative schedule of
+//! actions (`kill shard 1 at step 5`, `two timeouts on shard 0 from step
+//! 3`, `drop shard 1's second EXPORT`, `corrupt a frame to shard 0 at
+//! step 4`). Every scenario that previously needed a hand-timed SIGKILL
+//! race becomes a reproducible unit test: triggers are counted in
+//! per-shard operation ordinals (steps seen, exports seen), never in
+//! wall-clock time, so a plan fires at exactly the same point on every
+//! run.
+//!
+//! Injection semantics, by action:
+//!
+//! * **kill** — with a process killer installed
+//!   ([`FaultTransport::with_killer`], usually wired to
+//!   `SocketTransport::pid_of` + SIGKILL) the victim worker is killed for
+//!   real and the dispatch is forwarded, so the *genuine* dead-peer error
+//!   path (EOF → [`TransportError::Disconnected`]) fires. Without a
+//!   killer the wrapper severs the connection itself and synthesizes
+//!   `Disconnected` — the right spelling for in-process inners.
+//! * **timeout** — the dispatch is swallowed *before* reaching the
+//!   worker and [`TransportError::Timeout`] is returned: no worker state
+//!   mutates, exactly like a request lost in the network, so a
+//!   supervised retry stays bitwise-correct.
+//! * **corrupt** — synthesizes the [`TransportError::Protocol`] the wire
+//!   layer's frame validation produces on a corrupt length prefix, and
+//!   severs the connection (framing is unrecoverable).
+//! * **export-drop** — the n-th `EXPORT` on a shard fails with
+//!   `Disconnected` mid-stream and the connection is severed, modeling a
+//!   peer lost while a snapshot is on the wire.
+//!
+//! Trigger counters live in the transport (not the connection), so they
+//! persist across the reconnects a recovery performs: a fired action
+//! stays fired, replayed steps keep advancing the ordinals, and a plan
+//! can schedule a second failure *inside* the first recovery's replay
+//! window.
+
+use super::{GroupTask, ShardConnection, ShardTransport, TransportError, WorkerSpec};
+use crate::optim::StateExport;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result as AnyResult};
+use std::sync::{Arc, Mutex, PoisonError};
+
+/// One scheduled failure. `at_step` counts a shard's `next_step` calls
+/// (1-based: the engine's k-th dispatched step on that connection slot),
+/// `at_export` counts its `export_state` calls.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// SIGKILL (or sever) shard `shard`'s worker at step `at_step`.
+    Kill { shard: usize, at_step: u64 },
+    /// Swallow `count` consecutive step dispatches to `shard` starting at
+    /// step `at_step`, returning `Timeout` for each.
+    Timeout { shard: usize, at_step: u64, count: u32 },
+    /// Deliver a corrupt frame to `shard` at step `at_step` (surfaces as
+    /// `Protocol` and severs the connection).
+    Corrupt { shard: usize, at_step: u64 },
+    /// Fail shard `shard`'s `at_export`-th state export mid-stream.
+    ExportDrop { shard: usize, at_export: u64 },
+}
+
+impl FaultAction {
+    fn shard(&self) -> usize {
+        match self {
+            FaultAction::Kill { shard, .. }
+            | FaultAction::Timeout { shard, .. }
+            | FaultAction::Corrupt { shard, .. }
+            | FaultAction::ExportDrop { shard, .. } => *shard,
+        }
+    }
+}
+
+impl std::fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultAction::Kill { shard, at_step } => write!(f, "kill@{shard}:{at_step}"),
+            FaultAction::Timeout { shard, at_step, count } => {
+                write!(f, "timeout@{shard}:{at_step}x{count}")
+            }
+            FaultAction::Corrupt { shard, at_step } => write!(f, "corrupt@{shard}:{at_step}"),
+            FaultAction::ExportDrop { shard, at_export } => {
+                write!(f, "export-drop@{shard}:{at_export}")
+            }
+        }
+    }
+}
+
+/// A deterministic chaos schedule. The textual grammar (accepted by
+/// [`FaultPlan::parse`], produced by `Display`, documented in
+/// EXPERIMENTS.md §Recovery) is:
+///
+/// ```text
+/// plan   := action (';' action)*
+/// action := kind '@' shard ':' ordinal ['x' count]
+/// kind   := 'kill' | 'timeout' | 'corrupt' | 'export-drop'
+/// ```
+///
+/// `ordinal` is a step number for kill/timeout/corrupt and an export
+/// ordinal for export-drop; `x count` (timeout only) injects that many
+/// consecutive timeouts.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub actions: Vec<FaultAction>,
+}
+
+impl FaultPlan {
+    pub fn new(actions: Vec<FaultAction>) -> FaultPlan {
+        FaultPlan { actions }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    /// Parse the plan grammar; errors name the offending clause.
+    pub fn parse(s: &str) -> AnyResult<FaultPlan> {
+        let mut actions = Vec::new();
+        for clause in s.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind, rest) = clause
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault clause '{clause}': missing '@'"))?;
+            let (shard, ordinal) = rest.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("fault clause '{clause}': expected <shard>:<ordinal>")
+            })?;
+            let shard: usize = shard
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault clause '{clause}': bad shard index"))?;
+            let (ordinal, count) = match ordinal.split_once('x') {
+                Some((n, c)) => (n, Some(c)),
+                None => (ordinal, None),
+            };
+            let n: u64 = ordinal
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault clause '{clause}': bad ordinal"))?;
+            if n == 0 {
+                bail!("fault clause '{clause}': ordinals are 1-based");
+            }
+            let count: Option<u32> = match count {
+                Some(c) => Some(c.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("fault clause '{clause}': bad repeat count")
+                })?),
+                None => None,
+            };
+            if count == Some(0) {
+                bail!("fault clause '{clause}': repeat count must be >= 1");
+            }
+            let action = match (kind.trim(), count) {
+                ("kill", None) => FaultAction::Kill { shard, at_step: n },
+                ("timeout", c) => {
+                    FaultAction::Timeout { shard, at_step: n, count: c.unwrap_or(1) }
+                }
+                ("corrupt", None) => FaultAction::Corrupt { shard, at_step: n },
+                ("export-drop", None) => FaultAction::ExportDrop { shard, at_export: n },
+                (k @ ("kill" | "corrupt" | "export-drop"), Some(_)) => {
+                    bail!("fault clause '{clause}': '{k}' does not take a repeat count")
+                }
+                (k, _) => bail!(
+                    "fault clause '{clause}': unknown kind '{k}' \
+                     (kill|timeout|corrupt|export-drop)"
+                ),
+            };
+            actions.push(action);
+        }
+        if actions.is_empty() {
+            bail!("empty fault plan");
+        }
+        Ok(FaultPlan { actions })
+    }
+
+    /// Derive a reproducible single-kill plan from a seed: some shard
+    /// below `shards` dies at some step in `[2, steps]`. Same seed, same
+    /// plan — a property test can sweep seeds without flaking.
+    pub fn seeded_kill(seed: u64, shards: usize, steps: u64) -> FaultPlan {
+        let mut rng = Pcg64::seeded(seed ^ 0xFA017);
+        let shard = rng.below(shards.max(1) as u64) as usize;
+        let at_step = 2 + rng.below(steps.max(3) - 2);
+        FaultPlan { actions: vec![FaultAction::Kill { shard, at_step }] }
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for a in &self.actions {
+            if !first {
+                write!(f, ";")?;
+            }
+            write!(f, "{a}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+/// Per-shard trigger counters. Lives in the transport so reconnects (and
+/// hence recoveries) do not reset the schedule.
+#[derive(Default)]
+struct ShardOrdinals {
+    steps: u64,
+    exports: u64,
+    timeouts_left: u32,
+}
+
+struct FaultState {
+    /// Unfired actions; fired ones are removed so they never re-trigger
+    /// during a replay.
+    pending: Mutex<Vec<FaultAction>>,
+    ordinals: Mutex<Vec<ShardOrdinals>>,
+}
+
+impl FaultState {
+    fn lock_pending(&self) -> std::sync::MutexGuard<'_, Vec<FaultAction>> {
+        self.pending.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn lock_ordinals(&self) -> std::sync::MutexGuard<'_, Vec<ShardOrdinals>> {
+        self.ordinals.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+type Killer = dyn Fn(usize) + Send + Sync;
+
+/// A chaos wrapper around any [`ShardTransport`]: connections it hands
+/// out count their operations and fire the plan's actions at the
+/// scheduled ordinals.
+pub struct FaultTransport {
+    inner: Arc<dyn ShardTransport>,
+    state: Arc<FaultState>,
+    killer: Option<Arc<Killer>>,
+}
+
+impl FaultTransport {
+    pub fn new(inner: Arc<dyn ShardTransport>, plan: FaultPlan) -> FaultTransport {
+        FaultTransport {
+            inner,
+            state: Arc::new(FaultState {
+                pending: Mutex::new(plan.actions),
+                ordinals: Mutex::new(Vec::new()),
+            }),
+            killer: None,
+        }
+    }
+
+    /// Install a real process killer for `kill` actions (e.g. SIGKILL via
+    /// `SocketTransport::pid_of`). Kill actions then exercise the genuine
+    /// dead-peer error path instead of a synthesized disconnect.
+    pub fn with_killer(mut self, killer: impl Fn(usize) + Send + Sync + 'static) -> FaultTransport {
+        self.killer = Some(Arc::new(killer));
+        self
+    }
+
+    /// Actions that have not fired yet (a completed plan returns 0).
+    pub fn pending_actions(&self) -> usize {
+        self.state.lock_pending().len()
+    }
+}
+
+impl ShardTransport for FaultTransport {
+    fn connect(
+        &self,
+        shard: usize,
+        spec: WorkerSpec,
+        queue_cap: usize,
+    ) -> Result<Box<dyn ShardConnection>, TransportError> {
+        let inner = self.inner.connect(shard, spec, queue_cap)?;
+        {
+            let mut ords = self.state.lock_ordinals();
+            if ords.len() <= shard {
+                ords.resize_with(shard + 1, ShardOrdinals::default);
+            }
+        }
+        Ok(Box::new(FaultConnection {
+            shard,
+            inner: Some(inner),
+            state: Arc::clone(&self.state),
+            killer: self.killer.clone(),
+        }))
+    }
+
+    fn name(&self) -> &'static str {
+        // Keep the inner family label: the wrapper is transparent to
+        // executor naming, and parity tests assert on the inner name.
+        self.inner.name()
+    }
+}
+
+/// What, if anything, to inject for the current dispatch on one shard.
+enum Injection {
+    Kill,
+    Timeout,
+    Corrupt,
+}
+
+struct FaultConnection {
+    shard: usize,
+    /// `None` once severed: every subsequent op reports `Disconnected`.
+    inner: Option<Box<dyn ShardConnection>>,
+    state: Arc<FaultState>,
+    killer: Option<Arc<Killer>>,
+}
+
+impl FaultConnection {
+    fn severed(&self, context: &'static str) -> TransportError {
+        TransportError::Disconnected { shard: self.shard, context }
+    }
+
+    fn current_step(&self) -> u64 {
+        self.state.lock_ordinals().get(self.shard).map(|o| o.steps).unwrap_or(0)
+    }
+
+    /// Decide the injection for a step dispatch at the current ordinal,
+    /// consuming fired actions.
+    fn step_injection(&mut self) -> Option<Injection> {
+        let step = self.current_step();
+        {
+            let ords = self.state.lock_ordinals();
+            if ords.get(self.shard).map(|o| o.timeouts_left).unwrap_or(0) > 0 {
+                drop(ords);
+                if let Some(o) = self.state.lock_ordinals().get_mut(self.shard) {
+                    o.timeouts_left -= 1;
+                }
+                return Some(Injection::Timeout);
+            }
+        }
+        let mut pending = self.state.lock_pending();
+        let due = pending.iter().position(|a| {
+            a.shard() == self.shard
+                && match a {
+                    FaultAction::Kill { at_step, .. }
+                    | FaultAction::Corrupt { at_step, .. }
+                    | FaultAction::Timeout { at_step, .. } => *at_step <= step,
+                    FaultAction::ExportDrop { .. } => false,
+                }
+        })?;
+        let action = pending.remove(due);
+        drop(pending);
+        match action {
+            FaultAction::Kill { .. } => Some(Injection::Kill),
+            FaultAction::Corrupt { .. } => Some(Injection::Corrupt),
+            FaultAction::Timeout { count, .. } => {
+                if let Some(o) = self.state.lock_ordinals().get_mut(self.shard) {
+                    // This dispatch consumes one; the rest of the storm
+                    // drains on subsequent dispatches.
+                    o.timeouts_left = count.saturating_sub(1);
+                }
+                Some(Injection::Timeout)
+            }
+            FaultAction::ExportDrop { .. } => None,
+        }
+    }
+
+    /// Whether this shard's next export should fail, consuming the action.
+    fn export_due(&mut self) -> bool {
+        let exports = {
+            let mut ords = self.state.lock_ordinals();
+            match ords.get_mut(self.shard) {
+                Some(o) => {
+                    o.exports += 1;
+                    o.exports
+                }
+                None => return false,
+            }
+        };
+        let mut pending = self.state.lock_pending();
+        let due = pending.iter().position(|a| {
+            matches!(a, FaultAction::ExportDrop { shard, at_export }
+                if *shard == self.shard && *at_export <= exports)
+        });
+        match due {
+            Some(i) => {
+                pending.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+impl ShardConnection for FaultConnection {
+    fn send_step(&mut self, lr: f32, tasks: Vec<GroupTask>) -> Result<(), TransportError> {
+        match self.step_injection() {
+            Some(Injection::Timeout) => {
+                // Swallowed before the wire: the worker never sees the
+                // dispatch, so no state mutates and a retry is bitwise.
+                return Err(TransportError::Timeout { shard: self.shard, context: "step dispatch" });
+            }
+            Some(Injection::Corrupt) => {
+                self.inner = None;
+                return Err(TransportError::Protocol {
+                    shard: self.shard,
+                    message: "injected: frame length corrupted".to_string(),
+                });
+            }
+            Some(Injection::Kill) => match (&self.killer, &mut self.inner) {
+                (Some(kill), Some(_)) => {
+                    // Real kill, then forward: the dead peer surfaces as a
+                    // genuine Disconnected on the ack path.
+                    kill(self.shard);
+                }
+                _ => {
+                    self.inner = None;
+                    return Err(self.severed("step dispatch"));
+                }
+            },
+            None => {}
+        }
+        match self.inner.as_mut() {
+            Some(c) => c.send_step(lr, tasks),
+            None => Err(self.severed("step dispatch")),
+        }
+    }
+
+    fn recv_step_ack(&mut self) -> Result<(), TransportError> {
+        match self.inner.as_mut() {
+            Some(c) => c.recv_step_ack(),
+            None => Err(self.severed("step ack")),
+        }
+    }
+
+    fn next_step(&mut self) -> Result<(), TransportError> {
+        if let Some(o) = self.state.lock_ordinals().get_mut(self.shard) {
+            o.steps += 1;
+        }
+        match self.inner.as_mut() {
+            Some(c) => c.next_step(),
+            None => Err(self.severed("next_step")),
+        }
+    }
+
+    fn state_scalars(&mut self) -> Result<(usize, usize), TransportError> {
+        match self.inner.as_mut() {
+            Some(c) => c.state_scalars(),
+            None => Err(self.severed("state query")),
+        }
+    }
+
+    fn export_state(&mut self) -> Result<StateExport, TransportError> {
+        if self.export_due() {
+            self.inner = None;
+            return Err(self.severed("state export"));
+        }
+        match self.inner.as_mut() {
+            Some(c) => c.export_state(),
+            None => Err(self.severed("state export")),
+        }
+    }
+
+    fn import_state(&mut self, state: StateExport) -> Result<(), TransportError> {
+        match self.inner.as_mut() {
+            Some(c) => c.import_state(state),
+            None => Err(self.severed("state import")),
+        }
+    }
+
+    fn is_alive(&self) -> bool {
+        self.inner.as_ref().is_some_and(|c| c.is_alive())
+    }
+
+    fn shutdown(&mut self) -> Result<(), TransportError> {
+        match self.inner.as_mut() {
+            Some(c) => c.shutdown(),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_round_trips() {
+        let text = "kill@1:5;timeout@0:3x2;corrupt@0:4;export-drop@1:2";
+        let plan = FaultPlan::parse(text).unwrap();
+        assert_eq!(plan.actions.len(), 4);
+        assert_eq!(plan.to_string(), text);
+        assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        assert_eq!(
+            plan.actions.first(),
+            Some(&FaultAction::Kill { shard: 1, at_step: 5 })
+        );
+    }
+
+    #[test]
+    fn plan_grammar_rejects_malformed_clauses() {
+        for bad in [
+            "",
+            "kill@1",
+            "kill@x:5",
+            "kill@1:0",
+            "kill@1:5x2",
+            "explode@1:5",
+            "timeout@0:3x0",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = FaultPlan::seeded_kill(42, 4, 10);
+        let b = FaultPlan::seeded_kill(42, 4, 10);
+        assert_eq!(a, b);
+        let c = FaultPlan::seeded_kill(43, 4, 10);
+        // Different seeds usually differ; at minimum both stay in range.
+        for p in [&a, &c] {
+            match p.actions.first() {
+                Some(FaultAction::Kill { shard, at_step }) => {
+                    assert!(*shard < 4);
+                    assert!((2..=10).contains(at_step));
+                }
+                other => panic!("unexpected plan {other:?}"),
+            }
+        }
+    }
+}

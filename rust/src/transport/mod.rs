@@ -33,45 +33,146 @@
 //! arithmetic, and fan-in is a pure ack barrier, so results are bitwise
 //! identical across transports and shard counts.
 
+pub mod fault;
 pub mod proto;
 pub mod socket;
+pub mod tcp;
 pub mod wire;
 
+pub use fault::{FaultAction, FaultPlan, FaultTransport};
 pub use proto::{GroupTask, InProcess, WorkerSpec};
 pub use socket::{run_socket_worker, SocketTransport};
+pub use tcp::{run_tcp_worker, TcpTransport};
 
 use crate::optim::StateExport;
 use anyhow::{bail, Result as AnyResult};
+use std::time::Duration;
 
 /// Which transport a job should run its shard workers over. The spec-level
 /// spelling of the [`ShardTransport`] choice: TOML-able, cheap to compare,
 /// and resolved to an actual transport only at execution time (the socket
-/// transport needs a scratch directory and a worker binary path).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// transport needs a scratch directory and a worker binary path; the TCP
+/// transport carries its bind address right here).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub enum TransportKind {
     /// Worker threads in this process (the default; zero-copy).
     #[default]
     InProcess,
     /// `ettrain shard-worker` child processes over UNIX sockets.
     Socket,
+    /// `ettrain shard-worker` child processes over TCP. The address is the
+    /// bind host (`"host:port"`); port 0 asks the kernel for an ephemeral
+    /// port per shard, which is the only safe spelling when several
+    /// engines share a machine.
+    Tcp(String),
 }
 
 impl TransportKind {
-    /// Canonical spelling, matching [`ShardTransport::name`].
-    pub fn name(self) -> &'static str {
+    /// Canonical spelling, matching what [`TransportKind::parse`] accepts
+    /// (`"inproc"`, `"socket"`, `"tcp:<addr>"`). Round-trips through spec
+    /// TOML.
+    pub fn name(&self) -> String {
         match self {
-            TransportKind::InProcess => "inproc",
-            TransportKind::Socket => "socket",
+            TransportKind::InProcess => "inproc".to_string(),
+            TransportKind::Socket => "socket".to_string(),
+            TransportKind::Tcp(addr) => format!("tcp:{addr}"),
         }
     }
 
-    /// Parse a config spelling (accepts a few aliases).
+    /// Short family label without the address (`"inproc"`, `"socket"`,
+    /// `"tcp"`) — matches [`ShardTransport::name`] for the resolved
+    /// transport.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "inproc",
+            TransportKind::Socket => "socket",
+            TransportKind::Tcp(_) => "tcp",
+        }
+    }
+
+    /// Parse a config spelling (accepts a few aliases). `"tcp"` alone
+    /// binds loopback with ephemeral ports; `"tcp:<host:port>"` pins the
+    /// bind address.
     pub fn parse(s: &str) -> AnyResult<TransportKind> {
-        match s.trim().to_ascii_lowercase().as_str() {
+        let t = s.trim();
+        let lower = t.to_ascii_lowercase();
+        if let Some(addr) = lower.strip_prefix("tcp:") {
+            if addr.is_empty() {
+                bail!("transport 'tcp:' needs an address (e.g. tcp:127.0.0.1:0)");
+            }
+            return Ok(TransportKind::Tcp(addr.to_string()));
+        }
+        match lower.as_str() {
             "inproc" | "in-process" | "inprocess" | "thread" => Ok(TransportKind::InProcess),
             "socket" | "unix" | "uds" => Ok(TransportKind::Socket),
-            other => bail!("unknown transport '{other}' (inproc|socket)"),
+            "tcp" => Ok(TransportKind::Tcp(tcp::DEFAULT_BIND.to_string())),
+            other => bail!("unknown transport '{other}' (inproc|socket|tcp[:<addr>])"),
         }
+    }
+}
+
+/// Transport timing knobs, threaded from job specs (`run.transport.*` via
+/// TOML or `--set`) down to the socket/TCP transports. Replaces the
+/// hardcoded connect-retry/read-timeout constants those transports
+/// originally shipped with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransportTuning {
+    /// Per-reply read deadline in milliseconds
+    /// (`run.transport.read_timeout_ms`).
+    pub read_timeout_ms: u64,
+    /// Worker connect attempts before giving up
+    /// (`run.transport.connect_retries`).
+    pub connect_retries: u32,
+    /// Initial connect backoff in milliseconds, doubled per retry and
+    /// capped at [`TransportTuning::BACKOFF_CAP_MS`]
+    /// (`run.transport.backoff_ms`).
+    pub backoff_ms: u64,
+}
+
+impl Default for TransportTuning {
+    fn default() -> Self {
+        // 24 retries of 10ms-doubling-capped-at-500ms backoff spans ~9.6s,
+        // matching the old hardcoded 10s connect deadline.
+        TransportTuning { read_timeout_ms: 60_000, connect_retries: 24, backoff_ms: 10 }
+    }
+}
+
+impl TransportTuning {
+    /// Ceiling on a single connect-retry backoff sleep.
+    pub const BACKOFF_CAP_MS: u64 = 500;
+
+    /// Reject zero knobs with errors naming the `--set` key.
+    pub fn validate(&self) -> AnyResult<()> {
+        if self.read_timeout_ms == 0 {
+            bail!("run.transport.read_timeout_ms must be >= 1");
+        }
+        if self.connect_retries == 0 {
+            bail!("run.transport.connect_retries must be >= 1");
+        }
+        if self.backoff_ms == 0 {
+            bail!("run.transport.backoff_ms must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// The per-reply read deadline as a [`Duration`].
+    pub fn read_timeout(&self) -> Duration {
+        Duration::from_millis(self.read_timeout_ms)
+    }
+
+    /// Backoff before connect retry `attempt` (0-based): `backoff_ms`
+    /// doubled per attempt, capped.
+    pub fn connect_backoff(&self, attempt: u32) -> Duration {
+        let factor = if attempt >= 63 { u64::MAX } else { 1u64 << attempt };
+        let ms = self.backoff_ms.saturating_mul(factor).min(Self::BACKOFF_CAP_MS);
+        Duration::from_millis(ms)
+    }
+
+    /// Total worker-connect patience: the sum of every retry backoff. The
+    /// parent's accept deadline uses the same budget so both sides give up
+    /// together.
+    pub fn connect_budget(&self) -> Duration {
+        (0..self.connect_retries).map(|i| self.connect_backoff(i)).sum()
     }
 }
 
@@ -109,6 +210,18 @@ impl TransportError {
     /// clean worker-side failure report on a healthy channel).
     pub fn is_fatal(&self) -> bool {
         !matches!(self, TransportError::Worker { .. })
+    }
+
+    /// Stable short label for the error's taxonomy bucket — what the
+    /// supervision layer and the run registry record as `error_kind`.
+    pub fn kind_label(&self) -> &'static str {
+        match self {
+            TransportError::Io { .. } => "io",
+            TransportError::Disconnected { .. } => "disconnected",
+            TransportError::Timeout { .. } => "timeout",
+            TransportError::Protocol { .. } => "protocol",
+            TransportError::Worker { .. } => "worker",
+        }
     }
 }
 
@@ -201,11 +314,45 @@ mod tests {
 
     #[test]
     fn transport_kind_round_trips_and_rejects_junk() {
-        for k in [TransportKind::InProcess, TransportKind::Socket] {
-            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+        for k in [
+            TransportKind::InProcess,
+            TransportKind::Socket,
+            TransportKind::Tcp("127.0.0.1:0".to_string()),
+            TransportKind::Tcp("10.0.0.7:9999".to_string()),
+        ] {
+            assert_eq!(TransportKind::parse(&k.name()).unwrap(), k);
         }
         assert_eq!(TransportKind::parse("unix").unwrap(), TransportKind::Socket);
+        assert_eq!(
+            TransportKind::parse("tcp").unwrap(),
+            TransportKind::Tcp(tcp::DEFAULT_BIND.to_string())
+        );
         assert_eq!(TransportKind::default(), TransportKind::InProcess);
         assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert!(TransportKind::parse("tcp:").is_err());
+    }
+
+    #[test]
+    fn tuning_validation_names_the_offending_key() {
+        assert!(TransportTuning::default().validate().is_ok());
+        let bad = TransportTuning { read_timeout_ms: 0, ..Default::default() };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("run.transport.read_timeout_ms"), "{msg}");
+        let bad = TransportTuning { connect_retries: 0, ..Default::default() };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("run.transport.connect_retries"), "{msg}");
+        let bad = TransportTuning { backoff_ms: 0, ..Default::default() };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("run.transport.backoff_ms"), "{msg}");
+    }
+
+    #[test]
+    fn connect_backoff_doubles_and_caps() {
+        let t = TransportTuning::default();
+        assert_eq!(t.connect_backoff(0), Duration::from_millis(10));
+        assert_eq!(t.connect_backoff(1), Duration::from_millis(20));
+        assert_eq!(t.connect_backoff(5), Duration::from_millis(320));
+        assert_eq!(t.connect_backoff(6), Duration::from_millis(500));
+        assert_eq!(t.connect_backoff(63), Duration::from_millis(500));
     }
 }

@@ -37,7 +37,7 @@ use super::wire::{
     OP_EXPORT_REPLY, OP_IMPORT, OP_IMPORT_ERR, OP_IMPORT_OK, OP_NEXT, OP_SCALARS,
     OP_SCALARS_REPLY, OP_SHUTDOWN, OP_SPEC, OP_STEP, OP_STEP_ERR, OP_STEP_OK,
 };
-use super::{GroupTask, ShardConnection, ShardTransport, TransportError, WorkerSpec};
+use super::{GroupTask, ShardConnection, ShardTransport, TransportError, TransportTuning, WorkerSpec};
 use crate::optim::stream::{import_stream, read_export_stream, write_export_stream,
     write_state_stream, STREAM_CHUNK_NUMEL};
 use crate::optim::{Optimizer, StateExport};
@@ -62,11 +62,11 @@ const MAX_STEP_TASKS: u32 = 1 << 20;
 pub struct SocketTransport {
     dir: PathBuf,
     worker_bin: PathBuf,
-    read_timeout: Duration,
-    connect_timeout: Duration,
-    /// PIDs of every worker this transport spawned, in spawn order.
-    /// Exposed for tests that kill workers to exercise crash recovery.
-    pids: Arc<Mutex<Vec<u32>>>,
+    tuning: TransportTuning,
+    /// `(shard, pid)` of every worker this transport spawned, in spawn
+    /// order. Exposed for tests (and the fault injector's process killer)
+    /// that kill workers to exercise crash recovery.
+    pids: Arc<Mutex<Vec<(usize, u32)>>>,
 }
 
 impl SocketTransport {
@@ -74,23 +74,39 @@ impl SocketTransport {
         SocketTransport {
             dir: dir.into(),
             worker_bin: worker_bin.into(),
-            read_timeout: Duration::from_secs(60),
-            connect_timeout: Duration::from_secs(10),
+            tuning: TransportTuning::default(),
             pids: Arc::new(Mutex::new(Vec::new())),
         }
     }
 
-    pub fn with_timeouts(mut self, read: Duration, connect: Duration) -> SocketTransport {
-        self.read_timeout = read;
-        self.connect_timeout = connect;
+    /// Replace the timing knobs (read deadline, connect retry budget).
+    pub fn with_tuning(mut self, tuning: TransportTuning) -> SocketTransport {
+        self.tuning = tuning;
         self
     }
 
     /// Every worker PID this transport has spawned (including exited ones).
     pub fn spawned_pids(&self) -> Vec<u32> {
-        // A panicked holder can't corrupt a Vec<u32> push, so poison is
+        // A panicked holder can't corrupt a Vec push, so poison is
         // benign: take the data and keep serving.
-        self.pids.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
+        self.pids
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .iter()
+            .map(|&(_, pid)| pid)
+            .collect()
+    }
+
+    /// The most recently spawned worker PID for `shard` (reconnects after
+    /// recovery spawn a fresh process, so the latest entry wins).
+    pub fn pid_of(&self, shard: usize) -> Option<u32> {
+        self.pids
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .iter()
+            .rev()
+            .find(|&&(s, _)| s == shard)
+            .map(|&(_, pid)| pid)
     }
 
     /// Accept with a deadline: `UnixListener` has no native accept timeout,
@@ -101,7 +117,7 @@ impl SocketTransport {
         listener
             .set_nonblocking(true)
             .map_err(|e| TransportError::Io { shard, context: "listener setup", source: e })?;
-        let deadline = Instant::now() + self.connect_timeout;
+        let deadline = Instant::now() + self.tuning.connect_budget();
         loop {
             match listener.accept() {
                 Ok((stream, _)) => {
@@ -148,13 +164,22 @@ impl ShardTransport for SocketTransport {
             .arg(&sock)
             .arg("--shard")
             .arg(shard.to_string())
+            .arg("--retries")
+            .arg(self.tuning.connect_retries.to_string())
+            .arg("--backoff-ms")
+            .arg(self.tuning.backoff_ms.to_string())
             .stdin(Stdio::null())
             .spawn()
             .map_err(io_err("worker spawn"))?;
-        self.pids.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(child.id());
+        self.pids
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .push((shard, child.id()));
 
         let stream = self.accept_deadline(&listener, shard)?;
-        stream.set_read_timeout(Some(self.read_timeout)).map_err(io_err("read timeout"))?;
+        stream
+            .set_read_timeout(Some(self.tuning.read_timeout()))
+            .map_err(io_err("read timeout"))?;
 
         // Ship the spec before handing the stream to the proxy; the
         // executor's first state query doubles as the readiness check.
@@ -185,8 +210,9 @@ impl ShardTransport for SocketTransport {
 }
 
 /// Classify an `anyhow` failure from the codec/wire layer into a typed
-/// transport error by walking the chain for the root `io::Error`.
-fn classify(shard: usize, context: &'static str, e: anyhow::Error) -> TransportError {
+/// transport error by walking the chain for the root `io::Error`. Shared
+/// with the TCP transport, whose streams speak the same wire format.
+pub(crate) fn classify(shard: usize, context: &'static str, e: anyhow::Error) -> TransportError {
     for cause in e.chain() {
         // Typed framing violations from the wire layer map to Protocol
         // directly — the channel is intact, the peer's bytes are not.
@@ -232,7 +258,8 @@ enum ProxyReply {
 
 type ProxyAck = Result<ProxyReply, TransportError>;
 
-/// Parent-side handle to one worker process.
+/// Parent-side handle to one worker process (UNIX socket or TCP — the
+/// proxy machinery is generic over the stream).
 pub struct SocketConnection {
     shard: usize,
     jobs: SyncSender<ProxyJob>,
@@ -243,14 +270,18 @@ pub struct SocketConnection {
 }
 
 impl SocketConnection {
-    fn launch(
+    pub(crate) fn launch<R, W>(
         shard: usize,
-        reader: BufReader<UnixStream>,
-        writer: BufWriter<UnixStream>,
+        reader: BufReader<R>,
+        writer: BufWriter<W>,
         child: Child,
         max_buf_numel: usize,
         queue_cap: usize,
-    ) -> Result<SocketConnection, TransportError> {
+    ) -> Result<SocketConnection, TransportError>
+    where
+        R: Read + Send + 'static,
+        W: Write + Send + 'static,
+    {
         let (job_tx, job_rx) = sync_channel::<ProxyJob>(queue_cap.max(1));
         let (ack_tx, ack_rx) = sync_channel::<ProxyAck>(queue_cap.max(1));
         let alive = Arc::new(AtomicBool::new(true));
@@ -367,10 +398,10 @@ impl Drop for SocketConnection {
 /// fatal transport error it reports the error, drops every queued job
 /// unprocessed (so queued `GroupTask` pointers are never dereferenced),
 /// and exits, closing both stream halves.
-fn run_proxy(
+fn run_proxy<R: Read, W: Write>(
     shard: usize,
-    mut r: BufReader<UnixStream>,
-    mut w: BufWriter<UnixStream>,
+    mut r: BufReader<R>,
+    mut w: BufWriter<W>,
     max_buf_numel: usize,
     jobs: Receiver<ProxyJob>,
     acks: SyncSender<ProxyAck>,
@@ -443,9 +474,9 @@ impl std::fmt::Display for WorkerFailure {
 
 impl std::error::Error for WorkerFailure {}
 
-fn proxy_step(
-    r: &mut BufReader<UnixStream>,
-    w: &mut BufWriter<UnixStream>,
+fn proxy_step<R: Read, W: Write>(
+    r: &mut BufReader<R>,
+    w: &mut BufWriter<W>,
     lr: f32,
     tasks: &[GroupTask],
 ) -> Result<ProxyReply> {
@@ -500,15 +531,15 @@ fn proxy_step(
 }
 
 /// Read the reply task count and require it to match the request exactly.
-fn read_task_count(r: &mut BufReader<UnixStream>, expect: usize) -> Result<usize> {
+fn read_task_count<R: Read>(r: &mut BufReader<R>, expect: usize) -> Result<usize> {
     let n = read_u32(r)? as usize;
     anyhow::ensure!(n == expect, "step reply has {n} tasks, request had {expect}");
     Ok(n)
 }
 
-fn proxy_scalars(
-    r: &mut BufReader<UnixStream>,
-    w: &mut BufWriter<UnixStream>,
+fn proxy_scalars<R: Read, W: Write>(
+    r: &mut BufReader<R>,
+    w: &mut BufWriter<W>,
 ) -> Result<ProxyReply> {
     write_op(w, OP_SCALARS)?;
     w.flush()?;
@@ -519,9 +550,9 @@ fn proxy_scalars(
     Ok(ProxyReply::Scalars { scalars, bytes })
 }
 
-fn proxy_export(
-    r: &mut BufReader<UnixStream>,
-    w: &mut BufWriter<UnixStream>,
+fn proxy_export<R: Read, W: Write>(
+    r: &mut BufReader<R>,
+    w: &mut BufWriter<W>,
     max_buf_numel: usize,
 ) -> Result<ProxyReply> {
     write_op(w, OP_EXPORT)?;
@@ -532,9 +563,9 @@ fn proxy_export(
     Ok(ProxyReply::State(Box::new(state)))
 }
 
-fn proxy_import(
-    r: &mut BufReader<UnixStream>,
-    w: &mut BufWriter<UnixStream>,
+fn proxy_import<R: Read, W: Write>(
+    r: &mut BufReader<R>,
+    w: &mut BufWriter<W>,
     state: &StateExport,
 ) -> Result<ProxyReply> {
     write_op(w, OP_IMPORT)?;
@@ -556,28 +587,37 @@ fn proxy_import(
 
 /// Entry point for `ettrain shard-worker`: connect to the parent's socket
 /// (retrying with backoff while the parent finishes binding/accepting) and
-/// serve the wire protocol until shutdown or parent exit.
-pub fn run_socket_worker(path: &Path, shard: usize) -> Result<()> {
-    let stream = connect_with_backoff(path)
+/// serve the wire protocol until shutdown or parent exit. The retry budget
+/// comes from the parent's [`TransportTuning`], forwarded on the command
+/// line.
+pub fn run_socket_worker(path: &Path, shard: usize, tuning: TransportTuning) -> Result<()> {
+    let stream = connect_with_backoff(&tuning, || UnixStream::connect(path))
         .with_context(|| format!("shard {shard}: connecting to {}", path.display()))?;
     serve_stream(stream, shard)
 }
 
-/// Total patience ~10s: the parent binds the listener before spawning us,
-/// so in practice the first attempt succeeds; the retry loop covers slow
-/// filesystems and racing restarts.
-fn connect_with_backoff(path: &Path) -> Result<UnixStream> {
-    let mut delay = Duration::from_millis(10);
-    let deadline = Instant::now() + Duration::from_secs(10);
+/// Retry `connect` under the tuning's backoff schedule. The parent binds
+/// the listener before spawning us, so in practice the first attempt
+/// succeeds; the retry loop covers slow filesystems and racing restarts.
+pub(crate) fn connect_with_backoff<S>(
+    tuning: &TransportTuning,
+    connect: impl Fn() -> std::io::Result<S>,
+) -> Result<S> {
+    let mut attempt = 0u32;
     loop {
-        match UnixStream::connect(path) {
+        match connect() {
             Ok(s) => return Ok(s),
             Err(e) => {
-                if Instant::now() + delay >= deadline {
-                    return Err(e).context("worker connect retries exhausted");
+                if attempt + 1 >= tuning.connect_retries {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "worker connect retries exhausted ({} attempts)",
+                            tuning.connect_retries
+                        )
+                    });
                 }
-                std::thread::sleep(delay);
-                delay = (delay * 2).min(Duration::from_millis(500));
+                std::thread::sleep(tuning.connect_backoff(attempt));
+                attempt += 1;
             }
         }
     }
@@ -586,8 +626,15 @@ fn connect_with_backoff(path: &Path) -> Result<UnixStream> {
 /// Serve one parent connection. Public within the crate so unit tests can
 /// drive it over a `UnixStream::pair` without spawning a process.
 pub(crate) fn serve_stream(stream: UnixStream, shard: usize) -> Result<()> {
-    let mut r = BufReader::new(stream.try_clone().context("worker stream clone")?);
-    let mut w = BufWriter::new(stream);
+    let reader = stream.try_clone().context("worker stream clone")?;
+    serve_duplex(reader, stream, shard)
+}
+
+/// The transport-agnostic worker loop: the same protocol serves UNIX
+/// sockets and TCP (`tcp::run_tcp_worker`).
+pub(crate) fn serve_duplex<R: Read, W: Write>(reader: R, writer: W, shard: usize) -> Result<()> {
+    let mut r = BufReader::new(reader);
+    let mut w = BufWriter::new(writer);
 
     let op = read_op(&mut r).context("reading spec frame")?;
     anyhow::ensure!(op == OP_SPEC, "expected OP_SPEC, got opcode {op}");

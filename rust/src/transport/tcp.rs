@@ -1,0 +1,232 @@
+//! Out-of-process shard workers over TCP.
+//!
+//! Mostly address plumbing on top of the socket transport's machinery:
+//! the wire format is already endian-pinned and length-prefixed, the
+//! proxy thread and the worker serve loop are generic over the stream
+//! (`socket::{SocketConnection, serve_duplex}`), so this module only owns
+//! the listener/connect lifecycle. The parent binds one `TcpListener` per
+//! shard (port 0 asks the kernel for an ephemeral port, so concurrent
+//! engines never collide), spawns `ettrain shard-worker --tcp-connect
+//! <addr> --shard <s>` pointed at the bound address, and accepts exactly
+//! one connection.
+//!
+//! Determinism, failure classification, timeouts, and crash recovery are
+//! identical to the UNIX-socket transport: the same
+//! [`classify`](super::socket::classify) maps stream errors to typed
+//! [`TransportError`]s, and `rust/tests/sharded_parity.rs` runs the TCP
+//! transport through the same bitwise matrix as inproc and socket.
+
+use super::socket::{classify, connect_with_backoff, serve_duplex, SocketConnection};
+use super::wire::{write_op, write_worker_spec, OP_SPEC};
+use super::{ShardConnection, ShardTransport, TransportError, TransportTuning, WorkerSpec};
+use anyhow::{Context, Result};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Default bind address when a spec says just `transport = "tcp"`:
+/// loopback with kernel-assigned ephemeral ports.
+pub const DEFAULT_BIND: &str = "127.0.0.1:0";
+
+/// Spawns `ettrain shard-worker` child processes and talks to them over
+/// TCP. `bind` is the listen address; with port 0 every shard gets its
+/// own ephemeral port and the actual address is passed to the child.
+pub struct TcpTransport {
+    bind: String,
+    worker_bin: PathBuf,
+    tuning: TransportTuning,
+    /// `(shard, pid)` of every worker spawned, in spawn order — same
+    /// contract as [`super::SocketTransport::spawned_pids`].
+    pids: Arc<Mutex<Vec<(usize, u32)>>>,
+}
+
+impl TcpTransport {
+    pub fn new(bind: impl Into<String>, worker_bin: impl Into<PathBuf>) -> TcpTransport {
+        TcpTransport {
+            bind: bind.into(),
+            worker_bin: worker_bin.into(),
+            tuning: TransportTuning::default(),
+            pids: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Replace the timing knobs (read deadline, connect retry budget).
+    pub fn with_tuning(mut self, tuning: TransportTuning) -> TcpTransport {
+        self.tuning = tuning;
+        self
+    }
+
+    /// Every worker PID this transport has spawned (including exited ones).
+    pub fn spawned_pids(&self) -> Vec<u32> {
+        self.pids
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .iter()
+            .map(|&(_, pid)| pid)
+            .collect()
+    }
+
+    /// The most recently spawned worker PID for `shard`.
+    pub fn pid_of(&self, shard: usize) -> Option<u32> {
+        self.pids
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .iter()
+            .rev()
+            .find(|&&(s, _)| s == shard)
+            .map(|&(_, pid)| pid)
+    }
+
+    /// Accept with a deadline, mirroring the UNIX transport's non-blocking
+    /// poll (a raw `TcpListener` has no native accept timeout either).
+    fn accept_deadline(
+        &self,
+        listener: &TcpListener,
+        shard: usize,
+    ) -> Result<TcpStream, TransportError> {
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| TransportError::Io { shard, context: "listener setup", source: e })?;
+        let deadline = Instant::now() + self.tuning.connect_budget();
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).map_err(|e| TransportError::Io {
+                        shard,
+                        context: "accept",
+                        source: e,
+                    })?;
+                    return Ok(stream);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Timeout { shard, context: "worker connect" });
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    return Err(TransportError::Io { shard, context: "accept", source: e })
+                }
+            }
+        }
+    }
+}
+
+impl ShardTransport for TcpTransport {
+    fn connect(
+        &self,
+        shard: usize,
+        spec: WorkerSpec,
+        queue_cap: usize,
+    ) -> Result<Box<dyn ShardConnection>, TransportError> {
+        let io_err = |context: &'static str| {
+            move |e: std::io::Error| TransportError::Io { shard, context, source: e }
+        };
+        let listener = TcpListener::bind(&self.bind).map_err(io_err("bind"))?;
+        let addr = listener.local_addr().map_err(io_err("local addr"))?;
+        let child = Command::new(&self.worker_bin)
+            .arg("shard-worker")
+            .arg("--tcp-connect")
+            .arg(addr.to_string())
+            .arg("--shard")
+            .arg(shard.to_string())
+            .arg("--retries")
+            .arg(self.tuning.connect_retries.to_string())
+            .arg("--backoff-ms")
+            .arg(self.tuning.backoff_ms.to_string())
+            .stdin(Stdio::null())
+            .spawn()
+            .map_err(io_err("worker spawn"))?;
+        self.pids
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .push((shard, child.id()));
+
+        let stream = self.accept_deadline(&listener, shard)?;
+        stream.set_nodelay(true).map_err(io_err("nodelay"))?;
+        stream
+            .set_read_timeout(Some(self.tuning.read_timeout()))
+            .map_err(io_err("read timeout"))?;
+
+        // Ship the spec before handing the stream to the proxy, exactly
+        // like the UNIX transport.
+        let reader = stream.try_clone().map_err(io_err("stream clone"))?;
+        let mut w = BufWriter::new(stream);
+        let max_buf_numel = 2 * spec.max_group_numel();
+        (|| -> Result<()> {
+            write_op(&mut w, OP_SPEC)?;
+            write_worker_spec(&mut w, &spec)?;
+            w.flush()?;
+            Ok(())
+        })()
+        .map_err(|e| classify(shard, "spec send", e))?;
+
+        Ok(Box::new(SocketConnection::launch(
+            shard,
+            BufReader::new(reader),
+            w,
+            child,
+            max_buf_numel,
+            queue_cap,
+        )?))
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+/// Entry point for `ettrain shard-worker --tcp-connect <addr>`: dial the
+/// parent's listener (retrying under the forwarded backoff budget) and
+/// serve the wire protocol until shutdown or parent exit.
+pub fn run_tcp_worker(addr: &str, shard: usize, tuning: TransportTuning) -> Result<()> {
+    let stream = connect_with_backoff(&tuning, || TcpStream::connect(addr))
+        .with_context(|| format!("shard {shard}: connecting to {addr}"))?;
+    stream.set_nodelay(true).context("nodelay")?;
+    let reader = stream.try_clone().context("worker stream clone")?;
+    serve_duplex(reader, stream, shard)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{GroupSpec, Hyper};
+    use crate::tensoring::OptimizerKind;
+    use crate::transport::wire::{read_op, OP_SCALARS, OP_SCALARS_REPLY, OP_SHUTDOWN};
+    use crate::util::codec::read_u64;
+
+    /// The worker loop over a real TCP socketpair, no child process: dial,
+    /// ship a spec, query scalars, shut down.
+    #[test]
+    fn tcp_worker_serves_the_protocol() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let reader = stream.try_clone().unwrap();
+            serve_duplex(reader, stream, 0)
+        });
+
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        let spec = WorkerSpec::Uniform {
+            kind: OptimizerKind::AdaGrad,
+            groups: vec![GroupSpec::new("a", &[4])],
+            hyper: Hyper::default(),
+        };
+        write_op(&mut w, OP_SPEC).unwrap();
+        write_worker_spec(&mut w, &spec).unwrap();
+        write_op(&mut w, OP_SCALARS).unwrap();
+        w.flush().unwrap();
+        assert_eq!(read_op(&mut r).unwrap(), OP_SCALARS_REPLY);
+        assert_eq!(read_u64(&mut r).unwrap(), 4);
+        let _ = read_u64(&mut r).unwrap();
+        write_op(&mut w, OP_SHUTDOWN).unwrap();
+        w.flush().unwrap();
+        server.join().unwrap().unwrap();
+    }
+}

@@ -223,6 +223,8 @@ fn jsonl_and_csv_roundtrip_tricky_cells() {
         wall_seconds: 1.0 / 3.0,
         queue_seconds: 0.062_5,
         event_log: String::new(),
+        recoveries: 2,
+        error_kind: "disconnected".to_string(),
     };
     let (r0, r1) = (rec("0"), rec("1"));
     let registry = Registry::open(&dir).unwrap();

@@ -2,8 +2,9 @@
 //! optimizer kind in the suite, `ShardedOptimizer` over 1, 2, and 4 shards
 //! must produce parameter updates *bitwise-identical* to the
 //! single-threaded optimizer on the same seeded groups and gradient
-//! stream — over both transports (in-process worker threads and
-//! out-of-process `ettrain shard-worker` socket children). There is no
+//! stream — over every transport (in-process worker threads, and
+//! out-of-process `ettrain shard-worker` children on UNIX sockets or
+//! loopback TCP). There is no
 //! tolerance here on purpose — each group's update is computed by exactly
 //! one worker with the single-threaded arithmetic, so any drift would mean
 //! the engine (or the wire codec) reordered real math.
@@ -15,7 +16,7 @@
 use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
 use extensor::shard::{ShardedOptimizer, DEFAULT_MIN_BUCKET_NUMEL};
 use extensor::tensoring::OptimizerKind;
-use extensor::transport::{InProcess, ShardTransport, SocketTransport};
+use extensor::transport::{InProcess, ShardTransport, SocketTransport, TcpTransport};
 use extensor::util::rng::Pcg64;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -33,9 +34,19 @@ fn socket_transport() -> Arc<dyn ShardTransport> {
     Arc::new(SocketTransport::new(dir, env!("CARGO_BIN_EXE_ettrain")))
 }
 
-/// Both transports under test, by name.
+/// TCP transport on an ephemeral loopback port per worker; same worker
+/// binary as the socket transport.
+fn tcp_transport() -> Arc<dyn ShardTransport> {
+    Arc::new(TcpTransport::new("127.0.0.1:0", env!("CARGO_BIN_EXE_ettrain")))
+}
+
+/// Every transport under test, by name.
 fn transports() -> Vec<(&'static str, fn() -> Arc<dyn ShardTransport>)> {
-    vec![("inproc", || Arc::new(InProcess)), ("socket", socket_transport)]
+    vec![
+        ("inproc", || Arc::new(InProcess)),
+        ("socket", socket_transport),
+        ("tcp", tcp_transport),
+    ]
 }
 
 /// Transformer-flavored group mix: big matrices, a conv kernel, and a tail

@@ -1,18 +1,29 @@
-//! Crash recovery over the socket transport, end to end: a shard worker
-//! process is SIGKILLed mid-run, the in-flight step fails with a fatal
-//! transport error, and `take_snapshot`/`recover` rebuild the engine on
-//! the surviving workers — after which replaying from the snapshot step
-//! completes the run *bitwise-identical* to an uninterrupted
-//! single-threaded run. Determinism makes crash recovery testable exactly:
-//! there is no "close enough" after a worker dies.
+//! Crash recovery over the socket transport, end to end.
+//!
+//! The manual half: a shard worker process is SIGKILLed mid-run, the
+//! in-flight step fails with a fatal transport error, and
+//! `take_snapshot`/`recover` rebuild the engine on the surviving
+//! workers — after which replaying from the snapshot step completes the
+//! run *bitwise-identical* to an uninterrupted single-threaded run.
+//! Determinism makes crash recovery testable exactly: there is no "close
+//! enough" after a worker dies.
+//!
+//! The supervised half drives the same engine through
+//! [`SupervisedOptimizer`] under deterministic [`FaultPlan`] schedules —
+//! real SIGKILLs, injected timeout storms, a disconnect in the middle of
+//! a snapshot export, a second fault during recovery itself, and an
+//! exhausted recovery budget — asserting bitwise completion (or the
+//! typed failure) plus the recovery event stream for each.
 
 use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
-use extensor::shard::{ShardedOptimizer, DEFAULT_MIN_BUCKET_NUMEL};
+use extensor::shard::{
+    RecoveryPolicy, ShardedOptimizer, SupervisedOptimizer, SupervisorError,
+    DEFAULT_MIN_BUCKET_NUMEL,
+};
 use extensor::tensoring::OptimizerKind;
-use extensor::transport::SocketTransport;
+use extensor::transport::{FaultPlan, FaultTransport, SocketTransport, TransportTuning};
 use extensor::util::rng::Pcg64;
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
 
 const STEPS: usize = 6;
 const SNAP_AT: usize = 3;
@@ -55,10 +66,9 @@ fn init_params(gs: &[GroupSpec]) -> Vec<Vec<f32>> {
 
 fn socket_transport(tag: &str) -> Arc<SocketTransport> {
     let dir = std::env::temp_dir().join(format!("et-recover-{}-{tag}", std::process::id()));
-    Arc::new(
-        SocketTransport::new(dir, env!("CARGO_BIN_EXE_ettrain"))
-            .with_timeouts(Duration::from_secs(20), Duration::from_secs(10)),
-    )
+    Arc::new(SocketTransport::new(dir, env!("CARGO_BIN_EXE_ettrain")).with_tuning(
+        TransportTuning { read_timeout_ms: 20_000, ..TransportTuning::default() },
+    ))
 }
 
 /// The uninterrupted reference: single-threaded, same seeds.
@@ -188,4 +198,183 @@ fn recover_with_all_workers_alive_replays_bitwise() {
         opt.step_all(&mut params, grads, LR).unwrap();
     }
     assert_eq!(want, params);
+}
+
+// ---------------------------------------------------------------------------
+// Supervised fault matrix: SupervisedOptimizer x FaultPlan over real
+// socket workers.
+// ---------------------------------------------------------------------------
+
+fn sigkill(pid: u32) {
+    let status = std::process::Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("spawn kill");
+    assert!(status.success(), "kill -9 {pid} failed");
+}
+
+/// A fault-injecting transport over real socket workers: `kill` actions
+/// SIGKILL the most recently spawned worker for the shard, so the engine
+/// sees genuine process death, not a synthesized error.
+fn faulty_socket(tag: &str, plan: &str) -> Arc<FaultTransport> {
+    let socket = socket_transport(tag);
+    let killer = Arc::clone(&socket);
+    Arc::new(
+        FaultTransport::new(socket, FaultPlan::parse(plan).unwrap()).with_killer(move |shard| {
+            if let Some(pid) = killer.pid_of(shard) {
+                sigkill(pid);
+            }
+        }),
+    )
+}
+
+fn policy() -> RecoveryPolicy {
+    RecoveryPolicy { snapshot_every: SNAP_AT as u64, max_recoveries: 4, backoff_ms: 1 }
+}
+
+/// Build a supervised 2-shard ET(2) engine whose recovery events are
+/// appended (as tags) to `tags`.
+fn supervised(
+    transport: Arc<FaultTransport>,
+    gs: &[GroupSpec],
+    policy: RecoveryPolicy,
+    tags: &Arc<Mutex<Vec<String>>>,
+) -> SupervisedOptimizer {
+    let engine = ShardedOptimizer::with_transport(
+        OptimizerKind::Et(2),
+        gs,
+        &Hyper::default(),
+        2,
+        None,
+        DEFAULT_MIN_BUCKET_NUMEL,
+        transport,
+    )
+    .unwrap();
+    let sink = Arc::clone(tags);
+    SupervisedOptimizer::new(engine, policy)
+        .unwrap()
+        .with_events(move |e| sink.lock().unwrap().push(e.tag().to_string()))
+}
+
+fn count(tags: &Arc<Mutex<Vec<String>>>, tag: &str) -> usize {
+    tags.lock().unwrap().iter().filter(|t| *t == tag).count()
+}
+
+/// The acceptance scenario: a worker is SIGKILLed mid-run by the fault
+/// plan; the supervised run completes bitwise-identical to the
+/// uninterrupted reference, with the incident visible in the events.
+#[test]
+fn supervised_sigkill_over_socket_heals_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, STEPS, 37);
+    let want = reference_params(&gs, &stream);
+
+    let tags = Arc::new(Mutex::new(Vec::new()));
+    let mut sup = supervised(faulty_socket("sup-kill", "kill@1:5"), &gs, policy(), &tags);
+    let mut params = init_params(&gs);
+    for grads in &stream {
+        sup.run_step(&mut params, grads, LR).unwrap();
+    }
+
+    assert_eq!(want, params, "supervised SIGKILL run diverged from the reference");
+    assert_eq!(sup.recoveries(), 1);
+    assert_eq!(sup.engine().n_shards(), 1, "healed onto the survivor");
+    assert_eq!(count(&tags, "incident"), 1);
+    assert_eq!(count(&tags, "recovered"), 1);
+    assert!(count(&tags, "snapshot") >= 2, "snapshots at steps 0 and {SNAP_AT}");
+}
+
+/// A two-deep timeout storm: each swallowed dispatch is healed by
+/// rewind-and-replay (other shards may have applied the step), and the
+/// run still finishes bitwise on the full shard count.
+#[test]
+fn supervised_timeout_storm_heals_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, STEPS, 41);
+    let want = reference_params(&gs, &stream);
+
+    let tags = Arc::new(Mutex::new(Vec::new()));
+    let mut sup = supervised(faulty_socket("sup-timeout", "timeout@0:4x2"), &gs, policy(), &tags);
+    let mut params = init_params(&gs);
+    for grads in &stream {
+        sup.run_step(&mut params, grads, LR).unwrap();
+    }
+
+    assert_eq!(want, params, "timeout storm diverged from the reference");
+    assert_eq!(sup.recoveries(), 2, "one heal per swallowed dispatch");
+    assert_eq!(sup.engine().n_shards(), 2, "timeouts cost no workers");
+    assert_eq!(sup.last_error_kind(), Some("timeout"));
+}
+
+/// A disconnect in the middle of a snapshot *export*: the engine keeps
+/// the previous snapshot, heals, replays, and retakes the snapshot.
+#[test]
+fn supervised_export_disconnect_heals_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, STEPS, 43);
+    let want = reference_params(&gs, &stream);
+
+    // Exports are per-shard ordinals: #1 at step 0, #2 at step SNAP_AT.
+    let tags = Arc::new(Mutex::new(Vec::new()));
+    let mut sup = supervised(faulty_socket("sup-export", "export-drop@1:2"), &gs, policy(), &tags);
+    let mut params = init_params(&gs);
+    for grads in &stream {
+        sup.run_step(&mut params, grads, LR).unwrap();
+    }
+
+    assert_eq!(want, params, "mid-export disconnect diverged from the reference");
+    assert_eq!(sup.recoveries(), 1);
+    assert_eq!(sup.engine().n_shards(), 1, "the dropped shard is gone");
+}
+
+/// Recovery itself is interrupted: the first kill takes shard 1, and the
+/// second takes the rebuilt engine's only worker during the retry. Both
+/// draw from the same budget; the run still completes bitwise.
+#[test]
+fn supervised_double_fault_during_recovery_heals_bitwise() {
+    let gs = groups();
+    let stream = grad_stream(&gs, STEPS, 47);
+    let want = reference_params(&gs, &stream);
+
+    let tags = Arc::new(Mutex::new(Vec::new()));
+    let mut sup =
+        supervised(faulty_socket("sup-double", "kill@1:4;kill@0:5"), &gs, policy(), &tags);
+    let mut params = init_params(&gs);
+    for grads in &stream {
+        sup.run_step(&mut params, grads, LR).unwrap();
+    }
+
+    assert_eq!(want, params, "interrupted recovery diverged from the reference");
+    assert_eq!(sup.recoveries(), 2, "the mid-recovery fault is its own incident");
+    assert_eq!(count(&tags, "recovered"), 2);
+}
+
+/// An unbounded timeout storm against a budget of one: the run fails
+/// with the *typed* exhaustion error, and the give-up is an event.
+#[test]
+fn supervised_exhausted_budget_fails_typed() {
+    let gs = groups();
+    let stream = grad_stream(&gs, STEPS, 53);
+
+    let tags = Arc::new(Mutex::new(Vec::new()));
+    let tight = RecoveryPolicy { max_recoveries: 1, ..policy() };
+    let mut sup = supervised(faulty_socket("sup-exhaust", "timeout@0:4x100"), &gs, tight, &tags);
+    let mut params = init_params(&gs);
+    let mut failure = None;
+    for grads in &stream {
+        if let Err(e) = sup.run_step(&mut params, grads, LR) {
+            failure = Some(e);
+            break;
+        }
+    }
+
+    let err = failure.expect("a 100-deep storm must outlast a budget of 1");
+    match err.downcast_ref::<SupervisorError>() {
+        Some(SupervisorError::Exhausted { recoveries, kind, .. }) => {
+            assert_eq!(*recoveries, 1);
+            assert_eq!(*kind, "timeout");
+        }
+        other => panic!("expected Exhausted, got {other:?}"),
+    }
+    assert_eq!(count(&tags, "gave-up"), 1);
 }
