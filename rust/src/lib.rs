@@ -156,6 +156,30 @@
 //! a test. See `EXPERIMENTS.md` §Static analysis for the rule inventory
 //! and run instructions.
 //!
+//! Cutting across every runtime layer sits the **trace layer** (`trace`):
+//! zero-alloc step tracing as per-thread fixed-capacity rings of POD span
+//! records plus log2 latency histograms, instrumented at each layer
+//! boundary and drained after the run:
+//!
+//! ```text
+//! scheduler admit/claim/release ┐
+//! executor  step/dispatch/ack   ├─▶ trace::span ─▶ per-thread ring +
+//! transport wire send/recv      │   (POD record,   log2 histograms
+//! ETSS      export/import chunk │    no heap,      (kind × shard)
+//! supervisor snapshot/recover   ┘    TraceClock)        │
+//!                                          ┌────────────┴────────────┐
+//!                                 `ettrain trace` flame       registry/v1
+//!                                 + Chrome trace JSON         `timing` field
+//!                                 (results/trace/, trace/v1)  (`registry report`)
+//! ```
+//!
+//! The record path does zero steady-state heap allocation (the traced
+//! variant in `rust/tests/alloc_regression.rs` proves `step_all` stays
+//! allocation-free with tracing on), overflow is overwrite-oldest with a
+//! dropped-span counter, and timestamps never feed back into training
+//! arithmetic, so parity stays bitwise with tracing enabled
+//! (`rust/tests/sharded_parity.rs`). See `EXPERIMENTS.md` §Tracing.
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -171,6 +195,7 @@ pub mod session;
 pub mod shard;
 pub mod tensoring;
 pub mod testing;
+pub mod trace;
 pub mod train;
 pub mod transport;
 pub mod util;

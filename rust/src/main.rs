@@ -41,6 +41,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "batch" => cmd_batch(rest),
         "gate" => cmd_gate(rest),
         "registry" => cmd_registry(rest),
+        "trace" => cmd_trace(rest),
         "shard-worker" => cmd_shard_worker(rest),
         "plan" => cmd_plan(rest),
         "plan-index" => cmd_plan_index(rest),
@@ -86,9 +87,20 @@ USAGE: ettrain <subcommand> [options]
         fold registry records + schedule logs into per-commit trajectory
         tables (every train/batch/experiment run is recorded automatically
         under results/registry/)
+        (--ingest <dir,...> merges uploaded CI registry artifacts into the
+         trajectory, deduplicated by run id)
+  registry replay <run_id> [--dir results/registry]
+        re-execute a recorded run's spec and diff the fresh metrics
+        against the record bit-for-bit (typed divergence report;
+        non-zero exit on divergence)
   registry compact [--dir results/registry] [--keep N]
         rewrite the registry keeping only the last N runs per distinct
         job spec (JSONL + CSV, atomically)
+  trace [--kind et2] [--shards 2] [--transport inproc|socket|tcp[:addr]]
+        [--steps 30] [--tag <tag>] [--out-dir results] [--min-coverage 95%]
+        run a traced shard-bench: per-span flame summary table plus a
+        Chrome trace-event JSON (load it at chrome://tracing) written to
+        results/trace/<tag>.trace.json
   shard-worker (--connect <path> | --tcp-connect <addr>) [--shard N]
                [--retries N] [--backoff-ms N]
         run one out-of-process shard worker serving the transport wire
@@ -336,17 +348,62 @@ fn cmd_registry(argv: &[String]) -> Result<()> {
             ("dir", Some("results/registry"), "registry directory"),
             ("out", None, "also write dashboard.md + trajectory.csv here"),
             ("keep", Some("20"), "compact: runs to keep per distinct spec"),
+            ("ingest", None, "report: merge registry artifact dirs (comma separated)"),
         ],
         flags: vec![],
-        positional: vec![("action", "report | compact")],
+        positional: vec![("action", "report | replay | compact"), ("run_id", "replay: run id")],
     };
     let args = Args::parse(&spec, argv)?;
     let dir = PathBuf::from(args.get("dir").unwrap_or("results/registry"));
     match args.positional.first().map(String::as_str).unwrap_or("report") {
-        "report" => extensor::registry::dashboard::report(
-            &dir,
-            args.get("out").map(std::path::Path::new),
-        ),
+        "report" => {
+            let ingest_dirs: Vec<PathBuf> = args
+                .get("ingest")
+                .map(|s| s.split(',').map(|d| PathBuf::from(d.trim())).collect())
+                .unwrap_or_default();
+            extensor::registry::dashboard::report_with_ingest(
+                &dir,
+                args.get("out").map(std::path::Path::new),
+                &ingest_dirs,
+            )
+        }
+        "replay" => {
+            let run_id = args
+                .positional
+                .get(1)
+                .context("registry replay: missing <run_id> (see `registry report`)")?;
+            let report = extensor::registry::replay::replay(&dir, run_id)?;
+            if !report.skipped.is_empty() {
+                println!(
+                    "replay '{}' ({}): skipped time-derived metrics: {}",
+                    report.run_id,
+                    report.job,
+                    report.skipped.join(", ")
+                );
+            }
+            if report.reproduced() {
+                println!(
+                    "replay '{}' ({}): bitwise reproduction, {} metric(s) identical",
+                    report.run_id,
+                    report.job,
+                    report
+                        .recorded
+                        .as_obj()
+                        .map_or(0, |m| m.len())
+                        .saturating_sub(report.skipped.len())
+                );
+                return Ok(());
+            }
+            for d in &report.divergences {
+                eprintln!("replay: {d}");
+            }
+            bail!(
+                "replay '{}': {} divergence(s); first: {}",
+                report.run_id,
+                report.divergences.len(),
+                report.divergences[0]
+            );
+        }
         "compact" => {
             let keep = args.get_usize("keep")?.max(1);
             let registry = extensor::registry::Registry::open(&dir)?;
@@ -357,8 +414,110 @@ fn cmd_registry(argv: &[String]) -> Result<()> {
             );
             Ok(())
         }
-        other => bail!("unknown registry action '{other}' (try 'report' or 'compact')"),
+        other => bail!("unknown registry action '{other}' (try 'report', 'replay', 'compact')"),
     }
+}
+
+/// `ettrain trace` — run one traced shard-bench job: per-span flame
+/// summary on stdout, Chrome trace-event JSON (`chrome://tracing` /
+/// Perfetto) on disk. See `extensor::trace`.
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "trace",
+        about: "run a traced shard-bench and export a Chrome trace",
+        options: vec![
+            ("kind", Some("et2"), "optimizer kind (et1|et2|et3|etinf|adagrad|adam|...)"),
+            ("shards", Some("2"), "worker shard count"),
+            ("transport", Some("inproc"), "inproc | socket | tcp[:<addr>]"),
+            ("steps", Some("30"), "timed steps (after warmup)"),
+            ("tag", Some("trace"), "output name: <out-dir>/trace/<tag>.trace.json"),
+            ("out-dir", Some("results"), "output directory"),
+            ("min-coverage", None, "fail unless spans cover >= this % of step wall time"),
+        ],
+        flags: vec![],
+        positional: vec![],
+    };
+    let args = Args::parse(&spec, argv)?;
+    let kind_raw = args.get("kind").unwrap_or("et2");
+    let kind = extensor::tensoring::OptimizerKind::parse(kind_raw)
+        .with_context(|| format!("unknown optimizer kind '{kind_raw}'"))?;
+    let transport =
+        extensor::transport::TransportKind::parse(args.get("transport").unwrap_or("inproc"))?;
+    let min_coverage: Option<f64> = match args.get("min-coverage") {
+        Some(raw) => Some(
+            raw.trim()
+                .trim_end_matches('%')
+                .parse::<f64>()
+                .with_context(|| format!("bad --min-coverage '{raw}' (want e.g. 95%)"))?,
+        ),
+        None => None,
+    };
+    let tag = args.get("tag").unwrap_or("trace").to_string();
+    let bench = session::ShardBenchSpec {
+        kind,
+        shards: args.get_usize("shards")?.max(1),
+        iters: args.get_usize("steps")?.max(1),
+        transport,
+        ..session::ShardBenchSpec::default()
+    };
+    let job = session::JobSpec::shard_bench(format!("trace-{tag}"), bench);
+
+    extensor::trace::enable();
+    let sink = session::EventSink::discard(&job.name);
+    let outcome = session::run_job(&job, &Session::new(), &sink);
+    extensor::trace::disable();
+    let threads = extensor::trace::drain();
+    let outcome = outcome?;
+    let bench_out = outcome.as_shard_bench().context("trace: expected a shard-bench outcome")?;
+    let timing = bench_out.timing.as_ref().context("trace: no timing profile collected")?;
+
+    // Per-span flame summary over the timed loop.
+    let wall_ns = timing.get("wall_ns").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let coverage = timing.get("coverage_pct").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let mut table = extensor::coordinator::report::Table::new(
+        &format!(
+            "trace '{tag}' — {} x{} over {}, {:.1} steps/s",
+            bench_out.optimizer,
+            bench_out.shards,
+            args.get("transport").unwrap_or("inproc"),
+            bench_out.steps_per_sec
+        ),
+        &["span", "count", "p50 us", "p99 us", "max us", "total ms", "% wall"],
+    );
+    if let Some(kinds) = timing.get("kinds").and_then(|k| k.as_obj()) {
+        for (name, v) in kinds {
+            let g = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+            let total = g("total_ns");
+            table.row(vec![
+                name.clone(),
+                format!("{}", g("count") as u64),
+                format!("{:.1}", g("p50_ns") / 1e3),
+                format!("{:.1}", g("p99_ns") / 1e3),
+                format!("{:.1}", g("max_ns") / 1e3),
+                format!("{:.3}", total / 1e6),
+                if wall_ns > 0.0 { format!("{:.1}", 100.0 * total / wall_ns) } else { "-".into() },
+            ]);
+        }
+    }
+    println!("{}", table.render());
+
+    let out = PathBuf::from(args.get("out-dir").unwrap_or("results"))
+        .join("trace")
+        .join(format!("{tag}.trace.json"));
+    extensor::trace::write_chrome_trace(&out, &threads)?;
+    let spans: usize = threads.iter().map(|t| t.spans.len()).sum();
+    let dropped: u64 = threads.iter().map(|t| t.dropped).sum();
+    println!(
+        "wrote {out:?}: {spans} spans across {} thread(s), {dropped} dropped, \
+         coverage {coverage:.1}% of step wall time",
+        threads.len()
+    );
+    if let Some(min) = min_coverage {
+        if coverage < min {
+            bail!("trace: span coverage {coverage:.1}% below --min-coverage {min:.1}%");
+        }
+    }
+    Ok(())
 }
 
 /// `ettrain shard-worker` — one out-of-process shard worker (spawned by

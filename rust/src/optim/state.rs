@@ -968,6 +968,11 @@ pub trait UpdateRule: Send {
             params.len(),
             grads.len()
         );
+        let _sp = crate::trace::span(
+            crate::trace::SpanKind::OptimStep,
+            crate::trace::NO_SHARD,
+            crate::trace::NO_JOB,
+        );
         for (gi, (p, g)) in params.iter_mut().zip(grads).enumerate() {
             self.step(st, gi, p, g, lr)?;
         }

@@ -177,6 +177,11 @@ fn write_buf_header(
 }
 
 fn write_chunk(w: &mut impl Write, data: &[f32], ck: &mut StreamChecksum) -> Result<()> {
+    let _sp = crate::trace::span(
+        crate::trace::SpanKind::ExportChunk,
+        crate::trace::NO_SHARD,
+        crate::trace::NO_JOB,
+    );
     write_u32(w, OP_CHUNK)?;
     write_u64(w, data.len() as u64)?;
     write_f32_data(w, data)?;
@@ -336,6 +341,11 @@ pub fn read_stream_group(
         let mut data = vec![0.0f32; total];
         let mut got = 0usize;
         while got < total {
+            let _sp = crate::trace::span(
+                crate::trace::SpanKind::ImportChunk,
+                crate::trace::NO_SHARD,
+                crate::trace::NO_JOB,
+            );
             let op = read_u32(r)?;
             if op != OP_CHUNK {
                 bail!("state stream: expected a chunk frame, got opcode {op}");

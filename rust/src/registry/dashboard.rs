@@ -1,17 +1,23 @@
 //! The run-trajectory summarizer behind `ettrain registry report`: folds
 //! registry records (+ the schedule event logs they reference) into
 //! per-commit trajectories — steps/sec, peak budget occupancy, cache hit
-//! rate, queue wait, failure counts — rendered through
-//! [`coordinator::report::Table`](crate::coordinator::report::Table) as
-//! aligned text, Markdown (`dashboard.md`), and CSV series
+//! rate, queue wait, failure counts, and per-span step-time breakdowns
+//! (from each traced record's `trace_timing/v1` profile) — rendered
+//! through [`coordinator::report::Table`](crate::coordinator::report::Table)
+//! as aligned text, Markdown (`dashboard.md`), and CSV series
 //! (`trajectory.csv`).
+//!
+//! `--ingest <dir>` merges registry artifacts other machines uploaded
+//! (CI shards, teammates): every `registry.jsonl` found under the
+//! directory loads and merges into the local trajectory, deduplicated by
+//! run id with local records winning.
 
 use super::record::{Registry, RunRecord};
 use crate::coordinator::report::Table;
 use crate::util::logging::read_jsonl;
-use anyhow::Result;
-use std::collections::BTreeMap;
-use std::path::Path;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
 
 /// One commit's aggregated slice of the registry.
 struct CommitSlice<'a> {
@@ -189,7 +195,92 @@ pub fn build_tables(records: &[RunRecord], peaks: &BTreeMap<String, u64>) -> Vec
             (rs.len() - healed).to_string(),
         ]);
     }
-    vec![traj, kinds, incidents]
+    vec![traj, kinds, incidents, timing_table(records)]
+}
+
+/// Per-commit span-time breakdown out of each record's `trace_timing/v1`
+/// profile: counts and totals sum across a commit's traced runs;
+/// p50/p99/max take the worst run (percentiles do not sum). Untraced
+/// records (empty `timing`) contribute nothing.
+fn timing_table(records: &[RunRecord]) -> Table {
+    let mut t = Table::new(
+        "Step time breakdown by commit",
+        &["commit", "span", "count", "p50 us", "p99 us", "max us", "total ms"],
+    );
+    let us = |ns: u64| format!("{:.1}", ns as f64 / 1e3);
+    for s in by_commit(records) {
+        // span name -> [count, total_ns, p50_ns, p99_ns, max_ns]
+        let mut agg: BTreeMap<String, [u64; 5]> = BTreeMap::new();
+        for r in &s.records {
+            let Some(kinds) = r.timing.get("kinds").and_then(|k| k.as_obj()) else {
+                continue;
+            };
+            for (name, v) in kinds {
+                let g = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+                let e = agg.entry(name.clone()).or_insert([0; 5]);
+                e[0] += g("count");
+                e[1] += g("total_ns");
+                e[2] = e[2].max(g("p50_ns"));
+                e[3] = e[3].max(g("p99_ns"));
+                e[4] = e[4].max(g("max_ns"));
+            }
+        }
+        for (name, e) in agg {
+            t.row(vec![
+                short_commit(s.commit),
+                name,
+                e[0].to_string(),
+                us(e[2]),
+                us(e[3]),
+                us(e[4]),
+                format!("{:.3}", e[1] as f64 / 1e6),
+            ]);
+        }
+    }
+    t
+}
+
+/// Recursively collect every `registry.jsonl` under `dir`, in sorted
+/// path order so ingestion is deterministic.
+fn find_registries(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            find_registries(&p, out);
+        } else if p.file_name().and_then(|n| n.to_str()) == Some("registry.jsonl") {
+            out.push(p);
+        }
+    }
+}
+
+/// Merge uploaded registry artifacts into `records`: every
+/// `registry.jsonl` found under each ingest dir loads, and records whose
+/// `run_id` is already present are dropped (local/first-seen wins).
+/// Returns the number of records added.
+pub fn ingest(records: &mut Vec<RunRecord>, dirs: &[PathBuf]) -> Result<usize> {
+    let mut seen: BTreeSet<String> = records.iter().map(|r| r.run_id.clone()).collect();
+    let mut added = 0usize;
+    for dir in dirs {
+        let mut files = Vec::new();
+        find_registries(dir, &mut files);
+        if files.is_empty() {
+            crate::warnln!("ingest: no registry.jsonl found under {dir:?}");
+        }
+        for f in files {
+            let parent = f.parent().unwrap_or_else(|| Path::new("."));
+            let loaded =
+                Registry::load(parent).with_context(|| format!("ingest {f:?}"))?;
+            for r in loaded {
+                if seen.insert(r.run_id.clone()) {
+                    records.push(r);
+                    added += 1;
+                }
+            }
+        }
+    }
+    Ok(added)
 }
 
 fn short_commit(c: &str) -> String {
@@ -204,13 +295,24 @@ fn short_commit(c: &str) -> String {
 /// `dir`, print the trajectory tables, and (with `--out`) write
 /// `dashboard.md` + `trajectory.csv` under `out`.
 pub fn report(dir: &Path, out: Option<&Path>) -> Result<()> {
-    let records = Registry::load(dir)?;
+    report_with_ingest(dir, out, &[])
+}
+
+/// [`report`] plus `--ingest`: merge every `registry.jsonl` found under
+/// the given directories (uploaded CI artifacts) into the trajectory,
+/// deduplicated by run id.
+pub fn report_with_ingest(dir: &Path, out: Option<&Path>, ingest_dirs: &[PathBuf]) -> Result<()> {
+    let mut records = Registry::load(dir)?;
+    let ingested = ingest(&mut records, ingest_dirs)?;
     let peaks = peak_bytes_by_commit(&records);
     let tables = build_tables(&records, &peaks);
     for t in &tables {
         print!("{}", t.render());
     }
     println!("\n{} record(s) in {:?}", records.len(), dir.join("registry.jsonl"));
+    if !ingest_dirs.is_empty() {
+        println!("merged {ingested} ingested record(s) from {} dir(s)", ingest_dirs.len());
+    }
     if let Some(out) = out {
         std::fs::create_dir_all(out)?;
         let md: String = tables.iter().map(|t| t.render_markdown()).collect();
@@ -253,6 +355,7 @@ mod tests {
             event_log: String::new(),
             recoveries: 0,
             error_kind: String::new(),
+            timing: Json::obj(vec![]),
         }
     }
 
@@ -264,7 +367,7 @@ mod tests {
             rec("aaaa", "j2", 120, false, None),
         ];
         let tables = build_tables(&records, &BTreeMap::new());
-        assert_eq!(tables.len(), 3);
+        assert_eq!(tables.len(), 4);
         let traj = &tables[0];
         assert_eq!(traj.rows.len(), 2, "two commits -> two rows");
         // Ordered by first-seen time: aaaa (100) before bbbb (200).
@@ -308,5 +411,73 @@ mod tests {
         assert_eq!(inc.rows.len(), 2, "clean run contributes no incident row");
         assert_eq!(inc.rows[0], vec!["disconnected", "fatal", "1", "4", "0", "1"]);
         assert_eq!(inc.rows[1], vec!["timeout", "transient", "1", "2", "1", "0"]);
+    }
+
+    fn timing_json(count: f64, p50: f64, p99: f64, max: f64, total: f64) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("trace_timing/v1")),
+            ("wall_ns", Json::num(total)),
+            ("coverage_pct", Json::num(95.0)),
+            (
+                "kinds",
+                Json::obj(vec![(
+                    "step_all",
+                    Json::obj(vec![
+                        ("count", Json::num(count)),
+                        ("p50_ns", Json::num(p50)),
+                        ("p99_ns", Json::num(p99)),
+                        ("max_ns", Json::num(max)),
+                        ("total_ns", Json::num(total)),
+                    ]),
+                )]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn timing_table_sums_counts_and_keeps_worst_percentiles() {
+        let mut a = rec("cccc", "a", 1, true, None);
+        a.timing = timing_json(10.0, 1_000.0, 4_000.0, 9_000.0, 50_000.0);
+        let mut b = rec("cccc", "b", 2, true, None);
+        b.timing = timing_json(5.0, 2_000.0, 3_000.0, 6_000.0, 30_000.0);
+        let untraced = rec("cccc", "d", 3, true, None);
+        let tables = build_tables(&[a, b, untraced], &BTreeMap::new());
+        let t = &tables[3];
+        assert_eq!(t.rows.len(), 1, "one commit x one span kind");
+        assert_eq!(
+            t.rows[0],
+            vec!["cccc", "step_all", "15", "2.0", "4.0", "9.0", "0.080"]
+        );
+    }
+
+    #[test]
+    fn ingest_merges_and_dedups_by_run_id() {
+        let base = std::env::temp_dir()
+            .join(format!("et-dash-ingest-{}", std::process::id()));
+        std::fs::remove_dir_all(&base).ok();
+        // An uploaded artifact tree with two nested registries.
+        let up_a = base.join("ci/shard-a");
+        let up_b = base.join("ci/shard-b");
+        Registry::open(&up_a)
+            .unwrap()
+            .append(&[rec("aaaa", "j1", 100, true, None), rec("aaaa", "j2", 120, true, None)])
+            .unwrap();
+        Registry::open(&up_b)
+            .unwrap()
+            .append(&[rec("aaaa", "j2", 120, true, None), rec("bbbb", "j3", 200, true, None)])
+            .unwrap();
+
+        // Local records already hold j1: it must not duplicate.
+        let mut records = vec![rec("aaaa", "j1", 100, true, None)];
+        let added = ingest(&mut records, &[base.join("ci")]).unwrap();
+        assert_eq!(added, 2, "j2 (once) and j3; duplicates dropped");
+        assert_eq!(records.len(), 3);
+        let ids: BTreeSet<&str> = records.iter().map(|r| r.run_id.as_str()).collect();
+        assert_eq!(ids.len(), 3, "all run_ids distinct");
+
+        // Missing ingest dirs add nothing and do not fail the report.
+        let none = ingest(&mut records, &[base.join("absent")]).unwrap();
+        assert_eq!(none, 0);
+        std::fs::remove_dir_all(&base).ok();
     }
 }

@@ -46,6 +46,11 @@ pub enum GateError {
     },
     /// The bench file itself is malformed.
     Schema { file: String, msg: String },
+    /// A fresh pareto row is dominated by a golden row from a
+    /// *different* budget: the golden spends no more plan memory yet
+    /// reaches a better loss than the band allows. Per-key comparison
+    /// cannot see this — it is a regression of the frontier's shape.
+    Dominated { file: String, key: String, by: String, detail: String },
 }
 
 impl fmt::Display for GateError {
@@ -65,6 +70,9 @@ impl fmt::Display for GateError {
                 )
             }
             GateError::Schema { file, msg } => write!(f, "{file}: {msg}"),
+            GateError::Dominated { file, key, by, detail } => {
+                write!(f, "{file}: row '{key}' dominated by golden '{by}' ({detail})")
+            }
         }
     }
 }
@@ -417,6 +425,60 @@ pub fn compare_pareto(
     (errs, deltas)
 }
 
+/// Pareto-frontier dominance check, on top of the per-key band in
+/// [`compare_pareto`]: a fresh row must not be *dominated* by a golden
+/// row of the same task at a different budget — one that spends no more
+/// plan memory (`plan_bytes <=`) yet reaches a loss better than the
+/// tolerance band (`current loss > golden loss * (1 + tolerance)`).
+///
+/// This catches frontier-shape regressions the keyed join cannot: if
+/// the 4 KiB plan's loss drifts up until the 2 KiB golden beats it, the
+/// larger budget has stopped buying anything, even though every keyed
+/// row might still sit inside its own band.
+pub fn compare_frontier(golden: &Json, current: &Json, tolerance: f64) -> Vec<GateError> {
+    let file = "BENCH_pareto.json";
+    let empty = Vec::new();
+    let g_rows = golden.get("rows").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let c_rows = current.get("rows").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let key_of = |r: &Json| {
+        let task = str_field(r, "task")?;
+        let budget = num_field(r, "budget_bytes")?;
+        Some(format!("{task}/{budget}"))
+    };
+    let mut errs = Vec::new();
+    for cr in c_rows {
+        let Some(ck) = key_of(cr) else { continue };
+        let (Some(task), Some(c_plan), Some(c_loss)) =
+            (str_field(cr, "task"), num_field(cr, "plan_bytes"), num_field(cr, "final_loss"))
+        else {
+            continue;
+        };
+        for gr in g_rows {
+            let Some(gk) = key_of(gr) else { continue };
+            if gk == ck || str_field(gr, "task") != Some(task) {
+                continue; // same-key loss drift is compare_pareto's job
+            }
+            let (Some(g_plan), Some(g_loss)) =
+                (num_field(gr, "plan_bytes"), num_field(gr, "final_loss"))
+            else {
+                continue;
+            };
+            if g_plan <= c_plan && c_loss > g_loss * (1.0 + tolerance) {
+                errs.push(GateError::Dominated {
+                    file: file.to_string(),
+                    key: ck.clone(),
+                    by: gk,
+                    detail: format!(
+                        "golden plan {g_plan:.0} B <= {c_plan:.0} B at loss \
+                         {g_loss:.6} vs {c_loss:.6}"
+                    ),
+                });
+            }
+        }
+    }
+    errs
+}
+
 fn load_json(path: &Path) -> Result<Json> {
     let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
     Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))
@@ -514,6 +576,7 @@ pub fn run_gate(opts: &GateOptions) -> Result<()> {
     let (mut errs, optim_deltas) = compare_optim(&g_optim, &optim, opts.tolerance);
     let (pareto_errs, pareto_deltas) = compare_pareto(&g_pareto, &pareto, opts.tolerance);
     errs.extend(pareto_errs);
+    errs.extend(compare_frontier(&g_pareto, &pareto, opts.tolerance));
 
     print!(
         "{}",
@@ -684,6 +747,45 @@ mod tests {
             e,
             GateError::Regression { metric, .. } if metric == "plan_bytes"
         )));
+    }
+
+    #[test]
+    fn frontier_dominance_catches_cross_budget_regression() {
+        // A healthy frontier: more budget -> lower loss.
+        let golden = pareto_doc(&[
+            ("convex", 2048.0, 2000.0, "ET4/q8", 64.0, 0.60, 0.85),
+            ("convex", 4096.0, 4000.0, "ET2/f32", 128.0, 0.40, 0.90),
+        ]);
+        assert!(compare_frontier(&golden, &golden, 0.10).is_empty());
+
+        // The 4 KiB row's loss drifts to 0.70: now the 2 KiB golden
+        // (loss 0.60, half the memory) dominates it, even though both
+        // keyed rows could individually sit near their own bands.
+        let collapsed = pareto_doc(&[
+            ("convex", 2048.0, 2000.0, "ET4/q8", 64.0, 0.60, 0.85),
+            ("convex", 4096.0, 4000.0, "ET2/f32", 128.0, 0.70, 0.90),
+        ]);
+        let errs = compare_frontier(&golden, &collapsed, 0.10);
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(matches!(
+            &errs[0],
+            GateError::Dominated { key, by, .. }
+                if key == "convex/4096" && by == "convex/2048"
+        ));
+
+        // Within the band (0.60 * 1.10 = 0.66) is not dominance...
+        let drifted = pareto_doc(&[
+            ("convex", 2048.0, 2000.0, "ET4/q8", 64.0, 0.60, 0.85),
+            ("convex", 4096.0, 4000.0, "ET2/f32", 128.0, 0.65, 0.90),
+        ]);
+        assert!(compare_frontier(&golden, &drifted, 0.10).is_empty());
+
+        // ...and rows of a different task never dominate each other.
+        let other_task = pareto_doc(&[
+            ("convex", 2048.0, 2000.0, "ET4/q8", 64.0, 0.60, 0.85),
+            ("lm", 4096.0, 4000.0, "ET2/f32", 128.0, 5.00, 0.10),
+        ]);
+        assert!(compare_frontier(&golden, &other_task, 0.10).is_empty());
     }
 
     #[test]

@@ -33,7 +33,14 @@
 //!   [`gate::GateError`]s for missing/extra rows and a per-row delta
 //!   table.
 //! * [`dashboard`] — the trajectory summarizer behind
-//!   `ettrain registry report`.
+//!   `ettrain registry report`, including per-commit step-time
+//!   breakdowns folded out of each record's `timing` profile and
+//!   `--ingest` merging of uploaded CI registry artifacts (dedup by
+//!   run id).
+//! * [`replay`] — `ettrain registry replay <run_id>`: re-execute a
+//!   recorded spec on a fresh session and diff the fresh metrics
+//!   against the record bit-for-bit, reporting typed divergences
+//!   (time-derived metrics excluded).
 //!
 //! Determinism contract: a record's `spec_toml` is the canonical
 //! [`crate::session::JobSpec::to_toml`] serialization, and re-executing it
@@ -43,6 +50,7 @@
 pub mod dashboard;
 pub mod gate;
 pub mod record;
+pub mod replay;
 
 pub use record::{record_batch, CompactStats, Registry, RunRecord, REGISTRY_SCHEMA};
 

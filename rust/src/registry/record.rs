@@ -25,7 +25,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub const REGISTRY_SCHEMA: &str = "registry/v1";
 
 /// CSV column order (also the field order of the JSONL objects).
-const COLUMNS: [&str; 20] = [
+const COLUMNS: [&str; 21] = [
     "run_id",
     "job",
     "kind",
@@ -46,6 +46,7 @@ const COLUMNS: [&str; 20] = [
     "event_log",
     "recoveries",
     "error_kind",
+    "timing",
 ];
 
 /// Process-wide sequence number so run ids stay unique when several
@@ -98,6 +99,10 @@ pub struct RunRecord {
     /// incident the supervisor reported (empty when fault-free) — lets
     /// `registry report` split transient timeouts from real failures.
     pub error_kind: String,
+    /// `trace_timing/v1` span-histogram summary of the job's timed loop
+    /// (empty object when the job ran untraced) — `registry report`
+    /// renders these as per-commit time-breakdown rows.
+    pub timing: Json,
 }
 
 impl RunRecord {
@@ -123,6 +128,7 @@ impl RunRecord {
             ("event_log", Json::str(&self.event_log)),
             ("recoveries", Json::num(self.recoveries as f64)),
             ("error_kind", Json::str(&self.error_kind)),
+            ("timing", self.timing.clone()),
         ])
     }
 
@@ -183,6 +189,7 @@ impl RunRecord {
                 .and_then(|v| v.as_str())
                 .unwrap_or("")
                 .to_string(),
+            timing: j.get("timing").cloned().unwrap_or_else(|| Json::obj(vec![])),
         })
     }
 
@@ -208,12 +215,14 @@ impl RunRecord {
             self.event_log.clone(),
             self.recoveries.to_string(),
             self.error_kind.clone(),
+            self.timing.to_string(),
         ];
         cells.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",")
     }
 
     fn from_cells(cells: &[String]) -> Result<RunRecord> {
-        if cells.len() != COLUMNS.len() {
+        // 20-cell rows predate the `timing` column; keep loading them.
+        if cells.len() != COLUMNS.len() && cells.len() != COLUMNS.len() - 1 {
             bail!("registry csv: expected {} cells, got {}", COLUMNS.len(), cells.len());
         }
         let u = |i: usize| -> Result<u64> {
@@ -252,6 +261,12 @@ impl RunRecord {
             event_log: cells[17].clone(),
             recoveries: u(18)?,
             error_kind: cells[19].clone(),
+            timing: match cells.get(20) {
+                Some(c) if !c.is_empty() => {
+                    Json::parse(c).context("registry csv: bad timing JSON")?
+                }
+                _ => Json::obj(vec![]),
+            },
         })
     }
 }
@@ -547,9 +562,14 @@ pub fn record_batch(
                 _ => {}
             }
         }
-        let (status, error, metrics) = match &res.outcome {
-            Ok(out) => ("ok".to_string(), String::new(), out.metrics_json()),
-            Err(e) => ("failed".to_string(), e.clone(), Json::obj(vec![])),
+        let (status, error, metrics, timing) = match &res.outcome {
+            Ok(out) => (
+                "ok".to_string(),
+                String::new(),
+                out.metrics_json(),
+                out.timing_json().cloned().unwrap_or_else(|| Json::obj(vec![])),
+            ),
+            Err(e) => ("failed".to_string(), e.clone(), Json::obj(vec![]), Json::obj(vec![])),
         };
         let seq = RUN_SEQ.fetch_add(1, Ordering::Relaxed);
         records.push(RunRecord {
@@ -573,6 +593,7 @@ pub fn record_batch(
             event_log: log.clone(),
             recoveries,
             error_kind,
+            timing,
         });
     }
     registry.append(&records)?;
@@ -626,6 +647,7 @@ mod tests {
             event_log: String::new(),
             recoveries: 0,
             error_kind: String::new(),
+            timing: Json::obj(vec![]),
         }
     }
 

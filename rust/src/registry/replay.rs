@@ -1,0 +1,228 @@
+//! Registry replay: re-execute a recorded run's spec and diff the fresh
+//! metrics against the record bit-for-bit.
+//!
+//! Every `registry/v1` record carries the canonical [`JobSpec`] TOML it
+//! executed, and step-bounded workloads are bitwise deterministic — so a
+//! record is a *replayable* experiment, not just bookkeeping
+//! (`rust/tests/registry.rs` pins that contract). `ettrain registry
+//! replay <run_id>` turns the contract into a tool: parse the recorded
+//! TOML, run the job on a fresh [`Session`], and report every metric
+//! that diverged as a typed [`Divergence`].
+//!
+//! Wall-clock-derived metrics (`steps_per_sec`, `tokens_per_sec`, trace
+//! coverage) legitimately differ between executions of the same spec,
+//! so they are excluded from the diff and listed as skipped instead.
+//!
+//! [`JobSpec`]: crate::session::JobSpec
+
+use crate::registry::{Registry, RunRecord};
+use crate::session::{batch_from_config, run_job, EventSink, Session};
+use crate::util::config::Config;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::path::Path;
+
+/// Metric keys excluded from the bitwise diff because they derive from
+/// wall-clock time rather than the deterministic arithmetic.
+pub const TIME_DERIVED: [&str; 3] = ["steps_per_sec", "tokens_per_sec", "coverage_pct"];
+
+/// One way a replayed run diverged from its record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Divergence {
+    /// The record has this metric; the replay did not produce it.
+    Missing { key: String },
+    /// The replay produced a metric the record lacks.
+    Extra { key: String },
+    /// Same key, different value (bitwise compare for numbers).
+    Value { key: String, recorded: String, replayed: String },
+    /// The replayed job failed outright.
+    Failed { error: String },
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Divergence::Missing { key } => {
+                write!(f, "metric '{key}': recorded but absent from the replay")
+            }
+            Divergence::Extra { key } => {
+                write!(f, "metric '{key}': produced by the replay but not recorded")
+            }
+            Divergence::Value { key, recorded, replayed } => {
+                write!(f, "metric '{key}': recorded {recorded}, replayed {replayed}")
+            }
+            Divergence::Failed { error } => write!(f, "replayed job failed: {error}"),
+        }
+    }
+}
+
+/// Outcome of one replay: the fresh metrics next to the recorded ones,
+/// plus every divergence. Empty `divergences` = bitwise reproduction.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub run_id: String,
+    pub job: String,
+    /// Metrics object from the registry record.
+    pub recorded: Json,
+    /// Metrics object the re-execution produced (empty if it failed).
+    pub replayed: Json,
+    pub divergences: Vec<Divergence>,
+    /// Time-derived keys present on either side but excluded from the
+    /// diff.
+    pub skipped: Vec<String>,
+}
+
+impl ReplayReport {
+    /// Did the replay reproduce the record bit-for-bit (modulo the
+    /// time-derived skip list)?
+    pub fn reproduced(&self) -> bool {
+        self.divergences.is_empty()
+    }
+}
+
+/// Replay `run_id` out of the registry at `dir`.
+pub fn replay(dir: &Path, run_id: &str) -> Result<ReplayReport> {
+    let records = Registry::load(dir)?;
+    let rec = records
+        .iter()
+        .find(|r| r.run_id == run_id)
+        .with_context(|| format!("run '{run_id}' not found in registry {dir:?}"))?;
+    replay_record(rec)
+}
+
+/// Replay one loaded record.
+pub fn replay_record(rec: &RunRecord) -> Result<ReplayReport> {
+    if rec.status != "ok" {
+        bail!(
+            "run '{}' recorded status '{}' — only successful runs replay",
+            rec.run_id,
+            rec.status
+        );
+    }
+    let cfg = Config::parse(&rec.spec_toml)
+        .with_context(|| format!("run '{}': recorded spec TOML does not parse", rec.run_id))?;
+    let specs = batch_from_config(&cfg)
+        .with_context(|| format!("run '{}': recorded spec TOML is not a job batch", rec.run_id))?;
+    let spec = specs
+        .iter()
+        .find(|s| s.name == rec.job)
+        .or_else(|| specs.first())
+        .with_context(|| format!("run '{}': recorded spec TOML holds no jobs", rec.run_id))?;
+
+    let sink = EventSink::discard(&spec.name);
+    let (replayed, mut divergences) = match run_job(spec, &Session::new(), &sink) {
+        Ok(out) => (out.metrics_json(), Vec::new()),
+        Err(e) => {
+            (Json::obj(vec![]), vec![Divergence::Failed { error: format!("{e:#}") }])
+        }
+    };
+    let mut skipped = Vec::new();
+    if divergences.is_empty() {
+        divergences = diff_metrics(&rec.metrics, &replayed, &mut skipped);
+    }
+    Ok(ReplayReport {
+        run_id: rec.run_id.clone(),
+        job: rec.job.clone(),
+        recorded: rec.metrics.clone(),
+        replayed,
+        divergences,
+        skipped,
+    })
+}
+
+/// Render a value for the divergence report: shortest-round-trip for
+/// numbers (so the printed value is itself bit-exact), JSON otherwise.
+fn show(v: &Json) -> String {
+    match v.as_f64() {
+        Some(n) => format!("{n}"),
+        None => v.to_string(),
+    }
+}
+
+/// Key-by-key bitwise diff of two metrics objects, excluding the
+/// [`TIME_DERIVED`] keys (collected into `skipped` instead).
+fn diff_metrics(recorded: &Json, replayed: &Json, skipped: &mut Vec<String>) -> Vec<Divergence> {
+    let mut out = Vec::new();
+    let rec = recorded.as_obj().cloned().unwrap_or_default();
+    let rep = replayed.as_obj().cloned().unwrap_or_default();
+    let time_derived = |k: &str| TIME_DERIVED.contains(&k);
+    for (k, rv) in &rec {
+        if time_derived(k) {
+            skipped.push(k.clone());
+            continue;
+        }
+        match rep.get(k) {
+            None => out.push(Divergence::Missing { key: k.clone() }),
+            Some(pv) => {
+                let same = match (rv.as_f64(), pv.as_f64()) {
+                    (Some(a), Some(b)) => a.to_bits() == b.to_bits(),
+                    _ => rv == pv,
+                };
+                if !same {
+                    out.push(Divergence::Value {
+                        key: k.clone(),
+                        recorded: show(rv),
+                        replayed: show(pv),
+                    });
+                }
+            }
+        }
+    }
+    for k in rep.keys() {
+        if rec.contains_key(k) {
+            continue;
+        }
+        if time_derived(k) {
+            skipped.push(k.clone());
+        } else {
+            out.push(Divergence::Extra { key: k.clone() });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::obj(pairs)
+    }
+
+    #[test]
+    fn diff_is_bitwise_and_skips_time_derived() {
+        let rec = obj(vec![
+            ("final_loss", Json::num(0.1 + 0.2)),
+            ("accuracy", Json::num(0.75)),
+            ("steps_per_sec", Json::num(123.4)),
+            ("optimizer", Json::str("adagrad")),
+        ]);
+        let same = diff_metrics(&rec, &rec, &mut Vec::new());
+        assert!(same.is_empty());
+
+        let mut skipped = Vec::new();
+        let rep = obj(vec![
+            ("final_loss", Json::num(0.3)), // != 0.1+0.2 bitwise
+            ("accuracy", Json::num(0.75)),
+            ("steps_per_sec", Json::num(999.0)), // skipped
+            ("optimizer", Json::str("adagrad")),
+            ("tokens_per_sec", Json::num(1.0)), // skipped even when extra
+            ("new_metric", Json::num(1.0)),
+        ]);
+        let d = diff_metrics(&rec, &rep, &mut skipped);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(matches!(&d[0], Divergence::Value { key, .. } if key == "final_loss"));
+        assert!(matches!(&d[1], Divergence::Extra { key } if key == "new_metric"));
+        assert!(skipped.contains(&"steps_per_sec".to_string()));
+        assert!(skipped.contains(&"tokens_per_sec".to_string()));
+    }
+
+    #[test]
+    fn missing_metrics_are_reported() {
+        let rec = obj(vec![("final_loss", Json::num(1.0))]);
+        let rep = obj(vec![]);
+        let d = diff_metrics(&rec, &rep, &mut Vec::new());
+        assert_eq!(d, vec![Divergence::Missing { key: "final_loss".to_string() }]);
+    }
+}

@@ -48,6 +48,7 @@ use crate::optim::{self, GroupSpec, Hyper, Optimizer};
 use crate::runtime::{Client, Engine};
 use crate::shard::ShardedOptimizer;
 use crate::tensoring::{EpsMode, SliceAccumulators, StateBackend, TensorIndex};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Timer;
 use crate::vision::{VisionConfig, VisionDataset};
@@ -319,6 +320,16 @@ impl JobOutcome {
         }
     }
 
+    /// The `trace_timing/v1` span-histogram profile the job recorded,
+    /// when tracing was enabled (shard-bench jobs only for now) — folded
+    /// into the job's registry record by [`crate::registry::record_batch`].
+    pub fn timing_json(&self) -> Option<&crate::util::json::Json> {
+        match self {
+            JobOutcome::ShardBench(s) => s.timing.as_ref(),
+            _ => None,
+        }
+    }
+
     /// Workload-specific final metrics as a flat JSON object — what the
     /// run registry records for a finished job (see [`crate::registry`]).
     pub fn metrics_json(&self) -> crate::util::json::Json {
@@ -359,6 +370,12 @@ impl JobOutcome {
                 ];
                 if let Some(kind) = &s.error_kind {
                     fields.push(("error_kind", Json::str(kind.clone())));
+                }
+                if let Some(timing) = &s.timing {
+                    fields.push((
+                        "coverage_pct",
+                        timing.get("coverage_pct").cloned().unwrap_or(Json::Null),
+                    ));
                 }
                 Json::obj(fields)
             }
@@ -406,6 +423,10 @@ pub struct ShardBenchOutcome {
     /// [`crate::transport::TransportError::kind_label`] of the last
     /// incident the supervisor saw, if any.
     pub error_kind: Option<String>,
+    /// `trace_timing/v1` span-histogram summary of the timed loop
+    /// (`None` unless tracing was enabled during the run). Folded into
+    /// the job's registry record; see [`crate::trace`].
+    pub timing: Option<Json>,
 }
 
 /// Execute one job against the session, emitting progress and cache events
@@ -597,7 +618,7 @@ fn run_shard_bench(spec: &ShardBenchSpec, sink: &EventSink) -> Result<ShardBench
         transport,
     )?;
 
-    let (secs, recoveries, error_kind, opt) = match &spec.recovery {
+    let (secs, recoveries, error_kind, timing, opt) = match &spec.recovery {
         Some(policy) => {
             // Supervised run: the engine heals itself per the policy, and
             // every supervision decision lands in the job's event stream.
@@ -635,28 +656,37 @@ fn run_shard_bench(spec: &ShardBenchSpec, sink: &EventSink) -> Result<ShardBench
             for _ in 0..2 {
                 sup.run_step(&mut params, &grads, 1e-3)?;
             }
+            // Histogram delta over exactly the timed loop, so warm-up
+            // spans never skew the recorded timing profile.
+            let hist0 = crate::trace::is_enabled().then(crate::trace::snapshot);
             let timer = Timer::start();
             for t in 0..spec.iters {
                 sup.run_step(&mut params, &grads, 1e-3)?;
                 sink.progress(t as u64 + 1, spec.iters as u64, f64::NAN);
             }
             let secs = timer.elapsed_secs();
+            let timing = hist0
+                .map(|h0| crate::trace::snapshot().delta(&h0).timing_json((secs * 1e9) as u64));
             let recoveries = sup.recoveries();
             let error_kind = sup.last_error_kind().map(str::to_string);
-            (secs, recoveries, error_kind, sup.into_engine())
+            (secs, recoveries, error_kind, timing, sup.into_engine())
         }
         None => {
             for _ in 0..2 {
                 opt.next_step();
                 opt.step_all(&mut params, &grads, 1e-3)?;
             }
+            let hist0 = crate::trace::is_enabled().then(crate::trace::snapshot);
             let timer = Timer::start();
             for t in 0..spec.iters {
                 opt.next_step();
                 opt.step_all(&mut params, &grads, 1e-3)?;
                 sink.progress(t as u64 + 1, spec.iters as u64, f64::NAN);
             }
-            (timer.elapsed_secs(), 0u32, None, opt)
+            let secs = timer.elapsed_secs();
+            let timing = hist0
+                .map(|h0| crate::trace::snapshot().delta(&h0).timing_json((secs * 1e9) as u64));
+            (secs, 0u32, None, timing, opt)
         }
     };
     // Real per-shard bytes, not scalars*4 — ET∞'s wide accumulator is an
@@ -672,6 +702,7 @@ fn run_shard_bench(spec: &ShardBenchSpec, sink: &EventSink) -> Result<ShardBench
         work_imbalance: opt.plan().work_imbalance(),
         recoveries,
         error_kind,
+        timing,
     })
 }
 

@@ -308,6 +308,11 @@ fn worker_loop(
         // never fit the total budget were already failed at submission, so
         // head-of-line blocking cannot deadlock. Exits when the queue is
         // drained.
+        let mut claim_span = crate::trace::span(
+            crate::trace::SpanKind::Claim,
+            crate::trace::NO_SHARD,
+            crate::trace::NO_JOB,
+        );
         let claimed = {
             // See run_batch: QueueState stays structurally valid across a
             // worker panic, so poison recovery is safe here and below.
@@ -317,6 +322,11 @@ fn worker_loop(
                     break None;
                 };
                 if q.admission.fits(costs[front]) {
+                    let _admit_span = crate::trace::span(
+                        crate::trace::SpanKind::Admit,
+                        crate::trace::NO_SHARD,
+                        front as u32,
+                    );
                     q.pending.remove(0);
                     q.admission.acquire(costs[front]);
                     let waited = (clock.elapsed_secs() - q.queued_t[front]).max(0.0);
@@ -337,6 +347,8 @@ fn worker_loop(
             }
         };
         let Some((i, in_use, queue_seconds)) = claimed else { return };
+        claim_span.set_job(i as u32);
+        drop(claim_span);
 
         let sink = EventSink::new(specs[i].name.clone(), tx.clone(), clock.clone());
         sink.emit(JobEvent::Admitted {
@@ -366,6 +378,11 @@ fn worker_loop(
             }
         };
 
+        let release_span = crate::trace::span(
+            crate::trace::SpanKind::Release,
+            crate::trace::NO_SHARD,
+            i as u32,
+        );
         let mut q = state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         q.admission.release(costs[i]);
         // Post-release occupancy, so the log alone reconstructs budget
@@ -377,6 +394,7 @@ fn worker_loop(
                 in_use_bytes: q.admission.in_use(),
             },
         });
+        drop(release_span);
         q.results[i] = Some(JobResult {
             name: specs[i].name.clone(),
             outcome,

@@ -540,6 +540,11 @@ impl Optimizer for ShardedOptimizer {
     /// handoff (see [`crate::transport::GroupTask`]): `params`/`grads`
     /// stay borrowed until every worker is done with them.
     fn step_all(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32) -> Result<()> {
+        let _step_span = crate::trace::span(
+            crate::trace::SpanKind::StepAll,
+            crate::trace::NO_SHARD,
+            crate::trace::NO_JOB,
+        );
         let n = self.group_numels.len();
         anyhow::ensure!(
             params.len() == n && grads.len() == n,
@@ -565,6 +570,11 @@ impl Optimizer for ShardedOptimizer {
         let mut errs: Vec<String> = Vec::new();
         self.last_errors.clear();
         for s in 0..n_shards {
+            let _sp = crate::trace::span(
+                crate::trace::SpanKind::Dispatch,
+                s as u32,
+                crate::trace::NO_JOB,
+            );
             for bucket in &self.buckets[s] {
                 let mut tasks = Vec::with_capacity(bucket.groups.len());
                 for &gi in &bucket.groups {
@@ -588,6 +598,11 @@ impl Optimizer for ShardedOptimizer {
         // never touch the remaining queued tasks; only then may the drain
         // stop early.)
         for s in 0..n_shards {
+            let _sp = crate::trace::span(
+                crate::trace::SpanKind::AckBarrier,
+                s as u32,
+                crate::trace::NO_JOB,
+            );
             for _ in 0..pending[s] {
                 match self.conns[s].recv_step_ack() {
                     Ok(()) => {}

@@ -329,7 +329,14 @@ impl SupervisedOptimizer {
             return Ok(());
         }
         loop {
-            match self.engine.take_snapshot() {
+            let sp = crate::trace::span(
+                crate::trace::SpanKind::Snapshot,
+                crate::trace::NO_SHARD,
+                crate::trace::NO_JOB,
+            );
+            let taken = self.engine.take_snapshot();
+            drop(sp);
+            match taken {
                 Ok(step) => {
                     self.params_at_snapshot = params.to_vec();
                     self.window.clear();
@@ -377,12 +384,19 @@ impl SupervisedOptimizer {
                 return Err(anyhow::Error::new(terminal));
             }
             self.recoveries += 1;
-            self.emit(RecoveryEvent::Incident {
-                step: self.step,
-                kind: class.kind,
-                transient: class.transient,
-                detail: err.to_string(),
-            });
+            {
+                let _sp = crate::trace::span(
+                    crate::trace::SpanKind::Incident,
+                    crate::trace::NO_SHARD,
+                    crate::trace::NO_JOB,
+                );
+                self.emit(RecoveryEvent::Incident {
+                    step: self.step,
+                    kind: class.kind,
+                    transient: class.transient,
+                    detail: err.to_string(),
+                });
+            }
             if class.transient {
                 let pause = self.policy.backoff_for(self.recoveries);
                 if !pause.is_zero() {
@@ -400,6 +414,11 @@ impl SupervisedOptimizer {
     /// replay the window bitwise. Any failure propagates back to
     /// [`heal`](Self::heal) as the next incident.
     fn recover_and_replay(&mut self, params: &mut [Vec<f32>]) -> Result<()> {
+        let _sp = crate::trace::span(
+            crate::trace::SpanKind::Recover,
+            crate::trace::NO_SHARD,
+            crate::trace::NO_JOB,
+        );
         let before = self.engine.n_shards();
         let from_step = self.engine.recover()?;
         let after = self.engine.n_shards();

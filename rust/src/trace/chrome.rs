@@ -1,0 +1,113 @@
+//! Chrome trace-event JSON export (`trace/v1`).
+//!
+//! Renders drained [`ThreadSpans`] as the Trace Event Format both
+//! `chrome://tracing` and Perfetto load: one `ph: "M"` thread-name
+//! metadata event per thread, then one `ph: "X"` complete event per
+//! span, with microsecond `ts`/`dur` and `shard`/`job` attribution in
+//! `args`. The top-level document carries `"schema": "trace/v1"` (an
+//! extra key both viewers ignore) so our own tooling can validate what
+//! it wrote; `rust/tests/trace.rs` pins the shape.
+
+use super::ring::ThreadSpans;
+use super::SpanKind;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Schema tag of the exported document.
+pub const TRACE_SCHEMA: &str = "trace/v1";
+
+fn us(ticks_ns: u64) -> Json {
+    Json::num(ticks_ns as f64 / 1000.0)
+}
+
+/// Build the `trace/v1` Chrome trace document from drained spans.
+pub fn chrome_trace_json(threads: &[ThreadSpans]) -> Json {
+    let mut events = Vec::new();
+    let mut dropped_total = 0u64;
+    for t in threads {
+        dropped_total += t.dropped;
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(t.tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(&t.name))])),
+        ]));
+        for s in &t.spans {
+            let kind = SpanKind::from_u16(s.kind);
+            let name = kind.map_or("unknown", SpanKind::name);
+            let mut args = Vec::new();
+            if s.shard != u16::MAX {
+                args.push(("shard", Json::num(s.shard as f64)));
+            }
+            if s.job != u16::MAX {
+                args.push(("job", Json::num(s.job as f64)));
+            }
+            events.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str("ettrain")),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(t.tid as f64)),
+                ("ts", us(s.begin)),
+                ("dur", us(s.end.saturating_sub(s.begin))),
+                ("args", Json::obj(args)),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("schema", Json::str(TRACE_SCHEMA)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("dropped_spans", Json::num(dropped_total as f64)),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Write the trace document to `path` (directories created as needed).
+pub fn write_chrome_trace(path: &Path, threads: &[ThreadSpans]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).with_context(|| format!("create {parent:?}"))?;
+    }
+    let doc = chrome_trace_json(threads);
+    std::fs::write(path, doc.to_string_pretty() + "\n")
+        .with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::ring::SpanRecord;
+
+    #[test]
+    fn exports_metadata_and_complete_events() {
+        let threads = vec![ThreadSpans {
+            name: "et-shard-0".to_string(),
+            tid: 3,
+            dropped: 2,
+            spans: vec![SpanRecord {
+                begin: 1_000,
+                end: 5_000,
+                kind: SpanKind::WireSend as u16,
+                shard: 0,
+                job: u16::MAX,
+                pad: 0,
+            }],
+        }];
+        let doc = chrome_trace_json(&threads);
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some(TRACE_SCHEMA));
+        assert_eq!(doc.get("dropped_spans").and_then(|v| v.as_usize()), Some(2));
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").and_then(|v| v.as_str()), Some("M"));
+        let x = &events[1];
+        assert_eq!(x.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(x.get("name").and_then(|v| v.as_str()), Some("wire_send"));
+        assert_eq!(x.get("ts").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(x.get("dur").and_then(|v| v.as_f64()), Some(4.0));
+        let args = x.get("args").unwrap();
+        assert_eq!(args.get("shard").and_then(|v| v.as_usize()), Some(0));
+        assert!(args.get("job").is_none(), "unattributed job omitted");
+    }
+}

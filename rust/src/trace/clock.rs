@@ -1,0 +1,111 @@
+//! The tracing clock, behind a trait so tests can pin timestamps.
+//!
+//! Timestamps are observability data only: they are recorded into span
+//! buffers and rendered into reports, and **never feed back into training
+//! arithmetic** — which is why the clock may live here, outside the
+//! etlint determinism scope, while the instrumented modules inside that
+//! scope only ever call the [`crate::trace`] API.
+//!
+//! Two implementations:
+//!
+//! * [`MonotonicClock`] — nanoseconds since an anchor `Instant` captured
+//!   at installation (process-lifetime monotonic ticks that fit `u64`).
+//! * [`TestClock`] — a deterministic counter advancing by a fixed step
+//!   per read, so tests can assert exact begin/end ordering and bin
+//!   placement without touching a real clock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
+
+/// Monotonic tick source for span timestamps. Ticks are nanoseconds.
+pub trait TraceClock: Send + Sync {
+    /// Current monotonic tick (ns). Must never decrease.
+    fn ticks(&self) -> u64;
+}
+
+/// The production clock: ns elapsed since the anchor `Instant`.
+pub struct MonotonicClock {
+    anchor: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { anchor: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl TraceClock for MonotonicClock {
+    fn ticks(&self) -> u64 {
+        u64::try_from(self.anchor.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+}
+
+/// Deterministic test clock: every read returns the previous value plus
+/// `step` (first read returns `step`). Shared across threads, so even
+/// concurrent readers observe strictly increasing, totally ordered ticks.
+pub struct TestClock {
+    next: AtomicU64,
+    step: u64,
+}
+
+impl TestClock {
+    pub fn new(step: u64) -> TestClock {
+        TestClock { next: AtomicU64::new(0), step: step.max(1) }
+    }
+}
+
+impl TraceClock for TestClock {
+    fn ticks(&self) -> u64 {
+        self.next.fetch_add(self.step, Ordering::SeqCst) + self.step
+    }
+}
+
+fn cell() -> &'static RwLock<Arc<dyn TraceClock>> {
+    static CLOCK: OnceLock<RwLock<Arc<dyn TraceClock>>> = OnceLock::new();
+    CLOCK.get_or_init(|| RwLock::new(Arc::new(MonotonicClock::new())))
+}
+
+/// Replace the global tracing clock (tests install a [`TestClock`];
+/// [`install_monotonic`] restores the default).
+pub fn install_clock(clock: Arc<dyn TraceClock>) {
+    *cell().write().unwrap_or_else(std::sync::PoisonError::into_inner) = clock;
+}
+
+/// Restore the default [`MonotonicClock`] (fresh anchor).
+pub fn install_monotonic() {
+    install_clock(Arc::new(MonotonicClock::new()));
+}
+
+/// Current tick of the installed clock. Allocation-free after the global
+/// cell is initialized (a read lock plus one virtual call).
+pub fn now_ticks() -> u64 {
+    cell().read().unwrap_or_else(std::sync::PoisonError::into_inner).ticks()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_clock_never_decreases() {
+        let c = MonotonicClock::new();
+        let a = c.ticks();
+        let b = c.ticks();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn test_clock_is_deterministic() {
+        let c = TestClock::new(10);
+        assert_eq!(c.ticks(), 10);
+        assert_eq!(c.ticks(), 20);
+        assert_eq!(c.ticks(), 30);
+    }
+}

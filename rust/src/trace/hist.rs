@@ -1,0 +1,342 @@
+//! Fixed-bin log2 latency histograms, aggregated per (span-kind × shard).
+//!
+//! Each tracing thread owns one [`ThreadHist`]: a flat `u64` count array
+//! indexed by `(kind, shard slot, log2 bin)` plus per-`(kind, shard)`
+//! duration sums and maxima. Recording a span is three array writes — no
+//! allocation, no branching beyond the clamps — so the hot path stays
+//! inside the PR-8 zero-alloc contract. The drain side merges thread
+//! histograms into a [`Histograms`] snapshot, diffs snapshots
+//! ([`Histograms::delta`]), and folds them into per-kind
+//! p50/p99/max/total summaries for the registry and the flame table.
+//!
+//! Shard slots: slot 0 holds unattributed spans (no shard context, e.g.
+//! scheduler or single-threaded optimizer spans); slots `1..` hold shards
+//! `0..`, with every shard ≥ [`MAX_TRACKED_SHARD`] clamped into the last
+//! slot. Bins: bin `b` covers durations in `[2^b, 2^(b+1))` ns, with bin
+//! 0 also absorbing 0-ns spans and the last bin absorbing everything
+//! from ~18 minutes up.
+
+use super::{SpanKind, N_KINDS, NO_SHARD};
+use crate::util::json::Json;
+
+/// Number of log2 duration bins (`2^40` ns ≈ 18 minutes in the top bin).
+pub const BINS: usize = 40;
+
+/// Shard slots per kind: 1 unattributed + this many tracked shards.
+pub const MAX_TRACKED_SHARD: usize = 15;
+
+/// Total shard slots (slot 0 = unattributed).
+pub const SHARD_SLOTS: usize = MAX_TRACKED_SHARD + 2;
+
+/// The flat slot a shard id maps to.
+pub fn shard_slot(shard: u32) -> usize {
+    if shard == NO_SHARD {
+        0
+    } else {
+        1 + (shard as usize).min(MAX_TRACKED_SHARD)
+    }
+}
+
+/// `floor(log2(dur_ns))` clamped into the bin range; 0 ns lands in bin 0.
+pub fn bin_of(dur_ns: u64) -> usize {
+    (63 - (dur_ns | 1).leading_zeros() as usize).min(BINS - 1)
+}
+
+/// Inclusive-ish upper edge of a bin, used when reading percentiles back
+/// out of the counts (`2^(bin+1)` ns).
+pub fn bin_upper_ns(bin: usize) -> u64 {
+    1u64 << (bin + 1).min(63)
+}
+
+const KIND_SHARD: usize = N_KINDS * SHARD_SLOTS;
+const TOTAL_BINS: usize = KIND_SHARD * BINS;
+
+fn ks_index(kind: u16, slot: usize) -> usize {
+    (kind as usize).min(N_KINDS - 1) * SHARD_SLOTS + slot.min(SHARD_SLOTS - 1)
+}
+
+/// One thread's histogram state. Allocated once at thread registration
+/// (the warm-up path); recording never allocates.
+pub(crate) struct ThreadHist {
+    counts: Box<[u64]>,
+    sums: Box<[u64]>,
+    maxs: Box<[u64]>,
+}
+
+impl ThreadHist {
+    pub(crate) fn new() -> ThreadHist {
+        ThreadHist {
+            counts: vec![0u64; TOTAL_BINS].into_boxed_slice(),
+            sums: vec![0u64; KIND_SHARD].into_boxed_slice(),
+            maxs: vec![0u64; KIND_SHARD].into_boxed_slice(),
+        }
+    }
+
+    pub(crate) fn clear(&mut self) {
+        self.counts.fill(0);
+        self.sums.fill(0);
+        self.maxs.fill(0);
+    }
+
+    /// Record one span duration. Zero-alloc: three bounded array updates.
+    pub(crate) fn record(&mut self, kind: SpanKind, shard: u32, dur_ns: u64) {
+        let ks = ks_index(kind as u16, shard_slot(shard));
+        let bin = ks * BINS + bin_of(dur_ns);
+        if let Some(c) = self.counts.get_mut(bin) {
+            *c += 1;
+        }
+        if let Some(s) = self.sums.get_mut(ks) {
+            *s = s.saturating_add(dur_ns);
+        }
+        if let Some(m) = self.maxs.get_mut(ks) {
+            *m = (*m).max(dur_ns);
+        }
+    }
+
+    pub(crate) fn merge_into(&self, out: &mut Histograms) {
+        for (o, c) in out.counts.iter_mut().zip(self.counts.iter()) {
+            *o += *c;
+        }
+        for (o, s) in out.sums.iter_mut().zip(self.sums.iter()) {
+            *o = o.saturating_add(*s);
+        }
+        for (o, m) in out.maxs.iter_mut().zip(self.maxs.iter()) {
+            *o = (*o).max(*m);
+        }
+    }
+}
+
+/// A merged histogram snapshot across every tracing thread.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histograms {
+    counts: Vec<u64>,
+    sums: Vec<u64>,
+    maxs: Vec<u64>,
+}
+
+impl Default for Histograms {
+    fn default() -> Self {
+        Histograms::new()
+    }
+}
+
+/// Per-kind (or per kind × shard) summary the registry records and the
+/// flame table renders.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KindSummary {
+    pub count: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    pub total_ns: u64,
+}
+
+impl Histograms {
+    pub fn new() -> Histograms {
+        Histograms {
+            counts: vec![0u64; TOTAL_BINS],
+            sums: vec![0u64; KIND_SHARD],
+            maxs: vec![0u64; KIND_SHARD],
+        }
+    }
+
+    /// Counts and sums recorded since `before` was taken. Maxima are not
+    /// differentiable, so the later snapshot's max is kept for any
+    /// `(kind, shard)` cell active in the window and zeroed otherwise.
+    pub fn delta(&self, before: &Histograms) -> Histograms {
+        let mut out = Histograms::new();
+        for (o, (a, b)) in out.counts.iter_mut().zip(self.counts.iter().zip(&before.counts)) {
+            *o = a.saturating_sub(*b);
+        }
+        for (o, (a, b)) in out.sums.iter_mut().zip(self.sums.iter().zip(&before.sums)) {
+            *o = a.saturating_sub(*b);
+        }
+        for ks in 0..KIND_SHARD {
+            let active = out.counts[ks * BINS..(ks + 1) * BINS].iter().any(|&c| c > 0);
+            out.maxs[ks] = if active { self.maxs[ks] } else { 0 };
+        }
+        out
+    }
+
+    fn cell_summary(&self, ks: usize) -> KindSummary {
+        let bins = &self.counts[ks * BINS..(ks + 1) * BINS];
+        let count: u64 = bins.iter().sum();
+        if count == 0 {
+            return KindSummary::default();
+        }
+        let pct = |q_num: u64, q_den: u64| -> u64 {
+            let target = (count * q_num).div_ceil(q_den).max(1);
+            let mut seen = 0u64;
+            for (b, &c) in bins.iter().enumerate() {
+                seen += c;
+                if seen >= target {
+                    return bin_upper_ns(b);
+                }
+            }
+            bin_upper_ns(BINS - 1)
+        };
+        KindSummary {
+            count,
+            p50_ns: pct(1, 2),
+            p99_ns: pct(99, 100),
+            max_ns: self.maxs[ks],
+            total_ns: self.sums[ks],
+        }
+    }
+
+    /// Summary for one kind aggregated over every shard slot.
+    pub fn kind_summary(&self, kind: SpanKind) -> KindSummary {
+        let mut agg = Histograms::new();
+        let k = kind as usize;
+        for slot in 0..SHARD_SLOTS {
+            let ks = k * SHARD_SLOTS + slot;
+            for b in 0..BINS {
+                agg.counts[k * SHARD_SLOTS * BINS + b] += self.counts[ks * BINS + b];
+            }
+            agg.sums[k * SHARD_SLOTS] = agg.sums[k * SHARD_SLOTS].saturating_add(self.sums[ks]);
+            agg.maxs[k * SHARD_SLOTS] = agg.maxs[k * SHARD_SLOTS].max(self.maxs[ks]);
+        }
+        agg.cell_summary(k * SHARD_SLOTS)
+    }
+
+    /// Summary for one `(kind, shard)` cell (`shard = NO_SHARD` for the
+    /// unattributed slot).
+    pub fn shard_summary(&self, kind: SpanKind, shard: u32) -> KindSummary {
+        self.cell_summary(ks_index(kind as u16, shard_slot(shard)))
+    }
+
+    /// Every kind with at least one recorded span, in declaration order.
+    pub fn active_kinds(&self) -> Vec<SpanKind> {
+        SpanKind::all().iter().copied().filter(|&k| self.kind_summary(k).count > 0).collect()
+    }
+
+    /// Shard slots with activity for `kind`, as `(shard_label, summary)`
+    /// rows — `"-"` for the unattributed slot, the shard id otherwise.
+    pub fn active_shards(&self, kind: SpanKind) -> Vec<(String, KindSummary)> {
+        let mut rows = Vec::new();
+        for slot in 0..SHARD_SLOTS {
+            let s = self.cell_summary(ks_index(kind as u16, slot));
+            if s.count > 0 {
+                let label = if slot == 0 { "-".to_string() } else { (slot - 1).to_string() };
+                rows.push((label, s));
+            }
+        }
+        rows
+    }
+
+    /// The `trace_timing/v1` JSON the registry folds into each traced
+    /// job's record: wall/coverage plus p50/p99/max/total per kind.
+    /// Coverage is the fraction of `wall_ns` the top-level step spans
+    /// ([`SpanKind::StepAll`]) account for.
+    pub fn timing_json(&self, wall_ns: u64) -> Json {
+        let mut kinds = Vec::new();
+        for kind in self.active_kinds() {
+            let s = self.kind_summary(kind);
+            kinds.push((
+                kind.name(),
+                Json::obj(vec![
+                    ("count", Json::num(s.count as f64)),
+                    ("p50_ns", Json::num(s.p50_ns as f64)),
+                    ("p99_ns", Json::num(s.p99_ns as f64)),
+                    ("max_ns", Json::num(s.max_ns as f64)),
+                    ("total_ns", Json::num(s.total_ns as f64)),
+                ]),
+            ));
+        }
+        let step_total = self.kind_summary(SpanKind::StepAll).total_ns;
+        let coverage = if wall_ns > 0 {
+            100.0 * step_total as f64 / wall_ns as f64
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("schema", Json::str("trace_timing/v1")),
+            ("wall_ns", Json::num(wall_ns as f64)),
+            ("coverage_pct", Json::num(coverage)),
+            ("kinds", Json::obj(kinds)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_are_log2_with_clamped_edges() {
+        assert_eq!(bin_of(0), 0);
+        assert_eq!(bin_of(1), 0);
+        assert_eq!(bin_of(2), 1);
+        assert_eq!(bin_of(3), 1);
+        assert_eq!(bin_of(4), 2);
+        assert_eq!(bin_of(1023), 9);
+        assert_eq!(bin_of(1024), 10);
+        assert_eq!(bin_of(u64::MAX), BINS - 1);
+        assert_eq!(bin_upper_ns(0), 2);
+        assert_eq!(bin_upper_ns(9), 1024);
+    }
+
+    #[test]
+    fn shard_slots_clamp() {
+        assert_eq!(shard_slot(NO_SHARD), 0);
+        assert_eq!(shard_slot(0), 1);
+        assert_eq!(shard_slot(14), 15);
+        assert_eq!(shard_slot(15), 16);
+        assert_eq!(shard_slot(4000), 16);
+    }
+
+    #[test]
+    fn summary_percentiles_come_from_bin_edges() {
+        let mut h = ThreadHist::new();
+        // 99 fast spans (~16 ns, bin 4) and one slow (~2048 ns, bin 11).
+        for _ in 0..99 {
+            h.record(SpanKind::WireSend, 1, 16);
+        }
+        h.record(SpanKind::WireSend, 1, 2048);
+        let mut merged = Histograms::new();
+        h.merge_into(&mut merged);
+        let s = merged.kind_summary(SpanKind::WireSend);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50_ns, bin_upper_ns(4));
+        assert_eq!(s.p99_ns, bin_upper_ns(4), "p99 of 100 = the 99th sample");
+        assert_eq!(s.max_ns, 2048);
+        assert_eq!(s.total_ns, 99 * 16 + 2048);
+        // The per-shard cell agrees; other cells are silent.
+        assert_eq!(merged.shard_summary(SpanKind::WireSend, 1).count, 100);
+        assert_eq!(merged.shard_summary(SpanKind::WireSend, 0).count, 0);
+        assert_eq!(merged.shard_summary(SpanKind::WireRecv, 1).count, 0);
+    }
+
+    #[test]
+    fn delta_subtracts_counts_and_sums() {
+        let mut h = ThreadHist::new();
+        h.record(SpanKind::StepAll, NO_SHARD, 100);
+        let mut before = Histograms::new();
+        h.merge_into(&mut before);
+        h.record(SpanKind::StepAll, NO_SHARD, 300);
+        let mut after = Histograms::new();
+        h.merge_into(&mut after);
+        let d = after.delta(&before);
+        let s = d.kind_summary(SpanKind::StepAll);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.total_ns, 300);
+        // Inactive kinds zero out entirely, max included.
+        assert_eq!(d.kind_summary(SpanKind::WireSend), KindSummary::default());
+    }
+
+    #[test]
+    fn timing_json_reports_coverage() {
+        let mut h = ThreadHist::new();
+        h.record(SpanKind::StepAll, NO_SHARD, 950);
+        let mut m = Histograms::new();
+        h.merge_into(&mut m);
+        let j = m.timing_json(1000);
+        assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some("trace_timing/v1"));
+        let cov = j.get("coverage_pct").and_then(|v| v.as_f64()).unwrap();
+        assert!((cov - 95.0).abs() < 1e-9, "{cov}");
+        let kinds = j.get("kinds").unwrap();
+        let step = kinds.get("step_all").unwrap();
+        assert_eq!(step.get("count").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(step.get("total_ns").and_then(|v| v.as_usize()), Some(950));
+    }
+}

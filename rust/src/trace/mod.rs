@@ -1,0 +1,238 @@
+//! Zero-alloc step tracing: spans across scheduler → shard → transport →
+//! supervisor, with Chrome-trace export and registry-integrated timing.
+//!
+//! ```text
+//! instrumented layers                record path (per thread)
+//! ───────────────────                ────────────────────────
+//! scheduler  admit/claim/release ┐
+//! executor   step_all/dispatch/  │   trace::span(kind, shard, job)
+//!            ack_barrier         ├─▶   ├─ begin tick  (TraceClock)
+//! transport  wire_send/wire_recv │     └─ drop → SpanRecord into the
+//! ETSS       export/import chunk │        thread's fixed ring + log2
+//! supervisor snapshot/incident/  │        histogram (kind × shard)
+//!            recover             ┘        — no heap, no formatting
+//! optimizer  optim_step
+//!
+//! drain side
+//! ──────────
+//! trace::drain()     ─▶ chrome::write_chrome_trace  results/trace/<tag>.trace.json
+//! trace::snapshot()  ─▶ hist::Histograms::timing_json ─▶ registry/v1 `timing`
+//!                       (`ettrain trace` flame table, `registry report` columns)
+//! ```
+//!
+//! Contracts this module keeps (and `rust/tests/trace.rs`,
+//! `rust/tests/alloc_regression.rs`, `rust/tests/sharded_parity.rs`
+//! enforce):
+//!
+//! * **Zero steady-state allocation.** A thread's first span allocates
+//!   its ring + histograms (warm-up); every later record is a TLS read,
+//!   an uncontended lock, and fixed array writes. `step_all` with
+//!   tracing enabled stays allocation-free for all 10 optimizer kinds.
+//! * **Overwrite-oldest overflow.** Rings never grow: past capacity the
+//!   oldest span is overwritten and a dropped counter increments, so
+//!   tracing cannot turn a long run into a memory leak.
+//! * **No timing feedback.** Ticks come from a [`TraceClock`] behind
+//!   the API (deterministic [`TestClock`] in tests) and are never read
+//!   back by training arithmetic — sharded parity is bitwise identical
+//!   with tracing on vs off.
+//! * **Disabled = a few atomic loads.** All instrumentation is behind
+//!   [`is_enabled`]; the default-off cost is one relaxed atomic read
+//!   per span site.
+
+pub mod chrome;
+pub mod clock;
+pub mod hist;
+pub mod ring;
+
+pub use chrome::{chrome_trace_json, write_chrome_trace, TRACE_SCHEMA};
+pub use clock::{install_clock, install_monotonic, MonotonicClock, TestClock, TraceClock};
+pub use hist::{Histograms, KindSummary};
+pub use ring::{SpanRecord, ThreadSpans, SPAN_CAPACITY};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Shard argument for spans with no shard context.
+pub const NO_SHARD: u32 = u32::MAX;
+
+/// Job argument for spans with no scheduler-job context.
+pub const NO_JOB: u32 = u32::MAX;
+
+/// The span vocabulary — one variant per instrumented layer boundary.
+/// Stored in [`SpanRecord`] as the `u16` discriminant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum SpanKind {
+    /// One whole `ShardedOptimizer::step_all` (dispatch + barrier).
+    StepAll = 0,
+    /// Per-shard task fan-out (`send_step` enqueue) inside a step.
+    Dispatch = 1,
+    /// Per-shard ack fan-in wait — the pointer-safety barrier.
+    AckBarrier = 2,
+    /// One step frame written to a worker (inproc enqueue or wire write).
+    WireSend = 3,
+    /// One step ack / updated-x readback from a worker.
+    WireRecv = 4,
+    /// One ETSS chunk written during state export / checkpoint save.
+    ExportChunk = 5,
+    /// One ETSS chunk read during state import / checkpoint load.
+    ImportChunk = 6,
+    /// Scheduler admission-control acquire for a job.
+    Admit = 7,
+    /// Scheduler worker waiting to claim the next queued job.
+    Claim = 8,
+    /// Scheduler budget release after a job finishes.
+    Release = 9,
+    /// Supervisor cadence snapshot (engine + param copy).
+    Snapshot = 10,
+    /// Supervisor fault classification of a failed operation.
+    Incident = 11,
+    /// Supervisor recover + rewind + bitwise replay.
+    Recover = 12,
+    /// One optimizer state update batch (worker-side math).
+    OptimStep = 13,
+}
+
+/// Number of span kinds (histogram axis length).
+pub const N_KINDS: usize = 14;
+
+impl SpanKind {
+    /// Stable wire/report name (`snake_case`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::StepAll => "step_all",
+            SpanKind::Dispatch => "dispatch",
+            SpanKind::AckBarrier => "ack_barrier",
+            SpanKind::WireSend => "wire_send",
+            SpanKind::WireRecv => "wire_recv",
+            SpanKind::ExportChunk => "export_chunk",
+            SpanKind::ImportChunk => "import_chunk",
+            SpanKind::Admit => "admit",
+            SpanKind::Claim => "claim",
+            SpanKind::Release => "release",
+            SpanKind::Snapshot => "snapshot",
+            SpanKind::Incident => "incident",
+            SpanKind::Recover => "recover",
+            SpanKind::OptimStep => "optim_step",
+        }
+    }
+
+    /// Every kind, in discriminant order.
+    pub fn all() -> &'static [SpanKind] {
+        &[
+            SpanKind::StepAll,
+            SpanKind::Dispatch,
+            SpanKind::AckBarrier,
+            SpanKind::WireSend,
+            SpanKind::WireRecv,
+            SpanKind::ExportChunk,
+            SpanKind::ImportChunk,
+            SpanKind::Admit,
+            SpanKind::Claim,
+            SpanKind::Release,
+            SpanKind::Snapshot,
+            SpanKind::Incident,
+            SpanKind::Recover,
+            SpanKind::OptimStep,
+        ]
+    }
+
+    /// Decode a stored discriminant.
+    pub fn from_u16(v: u16) -> Option<SpanKind> {
+        SpanKind::all().get(v as usize).copied()
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn tracing on, clearing every ring and histogram so the session
+/// starts from a clean window.
+pub fn enable() {
+    ring::reset_all();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn tracing off. Buffers keep their contents for a later drain.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Whether spans are currently being recorded.
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// A RAII span: begin tick taken at construction, the record written on
+/// drop. Construction when tracing is disabled is a no-op (`armed =
+/// false`), so instrumentation sites pay one atomic load by default.
+pub struct Span {
+    begin: u64,
+    kind: SpanKind,
+    shard: u32,
+    job: u32,
+    armed: bool,
+}
+
+/// Open a span. Drop it to record; early returns (`?`) record too, so a
+/// failed operation's latency is still attributed.
+#[inline]
+pub fn span(kind: SpanKind, shard: u32, job: u32) -> Span {
+    if !is_enabled() {
+        return Span { begin: 0, kind, shard, job, armed: false };
+    }
+    Span { begin: clock::now_ticks(), kind, shard, job, armed: true }
+}
+
+impl Span {
+    /// Attach the job index once it is known (claim spans open before
+    /// the claimed job is).
+    pub fn set_job(&mut self, job: u32) {
+        self.job = job;
+    }
+
+    /// Attach the shard id once it is known.
+    pub fn set_shard(&mut self, shard: u32) {
+        self.shard = shard;
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed && is_enabled() {
+            ring::record(self.kind, self.begin, clock::now_ticks(), self.shard, self.job);
+        }
+    }
+}
+
+/// Merged histogram snapshot across every tracing thread. Diff two
+/// snapshots with [`Histograms::delta`] to isolate a timed window.
+pub fn snapshot() -> Histograms {
+    ring::hist_snapshot()
+}
+
+/// Drain every thread's recorded spans (clearing the rings) for export.
+pub fn drain() -> Vec<ThreadSpans> {
+    ring::drain_spans()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_and_discriminants_round_trip() {
+        assert_eq!(SpanKind::all().len(), N_KINDS);
+        for (i, &k) in SpanKind::all().iter().enumerate() {
+            assert_eq!(k as u16 as usize, i);
+            assert_eq!(SpanKind::from_u16(k as u16), Some(k));
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(SpanKind::from_u16(N_KINDS as u16), None);
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        disable();
+        let s = span(SpanKind::StepAll, NO_SHARD, NO_JOB);
+        assert!(!s.armed);
+    }
+}

@@ -1,0 +1,198 @@
+//! Per-thread fixed-capacity span rings — the zero-alloc record path.
+//!
+//! Every thread that records a span owns one [`ThreadRing`]: a
+//! power-of-two `Box<[SpanRecord]>` of POD records, a monotonically
+//! increasing write head, a dropped-span counter, and the thread's
+//! latency histograms. Registration (the only allocating step: the slot
+//! array, the histogram arrays, the thread-name string, one registry
+//! push) happens on the thread's *first* span — i.e. during warm-up —
+//! after which [`record`] is: one TLS read, one uncontended mutex lock,
+//! one slot write, three histogram array updates. No formatting, no
+//! heap.
+//!
+//! **Overflow policy: overwrite-oldest.** The head keeps advancing past
+//! capacity; each wrapped write lands on the oldest slot and bumps
+//! `dropped` by one, so the ring always holds the most recent
+//! [`SPAN_CAPACITY`] spans and the drain reports exactly how many older
+//! ones were lost (`rust/tests/trace.rs` pins both).
+//!
+//! Rings are registered globally and outlive their thread, so a worker
+//! thread's spans survive until the coordinator drains them.
+
+use super::hist::{Histograms, ThreadHist};
+use super::SpanKind;
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+
+/// Spans retained per thread (power of two; 24 B each → 192 KiB/thread).
+pub const SPAN_CAPACITY: usize = 8192;
+
+const CAP_MASK: u64 = (SPAN_CAPACITY as u64) - 1;
+
+/// One recorded span: plain old data, fixed size, no heap references.
+/// `shard`/`job` are `u16::MAX` when unattributed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Begin tick (clock ns).
+    pub begin: u64,
+    /// End tick (clock ns).
+    pub end: u64,
+    /// [`SpanKind`] as its `u16` discriminant.
+    pub kind: u16,
+    /// Shard id, clamped; `u16::MAX` = unattributed.
+    pub shard: u16,
+    /// Scheduler job index, clamped; `u16::MAX` = unattributed.
+    pub job: u16,
+    /// Layout padding (always 0).
+    pub pad: u16,
+}
+
+struct ThreadBuf {
+    slots: Box<[SpanRecord]>,
+    head: u64,
+    dropped: u64,
+    hist: ThreadHist,
+}
+
+impl ThreadBuf {
+    fn new() -> ThreadBuf {
+        ThreadBuf {
+            slots: vec![SpanRecord::default(); SPAN_CAPACITY].into_boxed_slice(),
+            head: 0,
+            dropped: 0,
+            hist: ThreadHist::new(),
+        }
+    }
+}
+
+/// One thread's registered ring: name + tid for trace attribution, the
+/// buffer behind a mutex so the drain side can read it cross-thread.
+pub struct ThreadRing {
+    name: String,
+    tid: u32,
+    buf: Mutex<ThreadBuf>,
+}
+
+impl ThreadRing {
+    /// The record path: write the slot under the (uncontended) lock and
+    /// fold the duration into the histograms. Allocation-free.
+    fn push(&self, kind: SpanKind, begin: u64, end: u64, shard: u32, job: u32) {
+        let mut b = self.buf.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let idx = (b.head & CAP_MASK) as usize;
+        if b.head >= SPAN_CAPACITY as u64 {
+            b.dropped += 1;
+        }
+        if let Some(slot) = b.slots.get_mut(idx) {
+            *slot = SpanRecord {
+                begin,
+                end,
+                kind: kind as u16,
+                shard: clamp_id(shard),
+                job: clamp_id(job),
+                pad: 0,
+            };
+        }
+        b.head += 1;
+        b.hist.record(kind, shard, end.saturating_sub(begin));
+    }
+}
+
+fn clamp_id(v: u32) -> u16 {
+    if v == u32::MAX {
+        u16::MAX
+    } else {
+        u16::try_from(v).unwrap_or(u16::MAX - 1)
+    }
+}
+
+static REGISTRY: Mutex<Vec<Arc<ThreadRing>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL: RefCell<Option<Arc<ThreadRing>>> = const { RefCell::new(None) };
+}
+
+/// The cold, allocating half: build and register this thread's ring.
+/// Runs once per thread, on its first recorded span.
+#[cold]
+fn register_current_thread() -> Arc<ThreadRing> {
+    let named = std::thread::current().name().map(|s| s.to_string());
+    let mut reg = REGISTRY.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let tid = reg.len() as u32;
+    let ring = Arc::new(ThreadRing {
+        name: named.unwrap_or_else(|| format!("thread-{tid}")),
+        tid,
+        buf: Mutex::new(ThreadBuf::new()),
+    });
+    reg.push(Arc::clone(&ring));
+    ring
+}
+
+/// Record one finished span on the calling thread's ring.
+pub(crate) fn record(kind: SpanKind, begin: u64, end: u64, shard: u32, job: u32) {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if l.is_none() {
+            *l = Some(register_current_thread());
+        }
+        if let Some(ring) = l.as_ref() {
+            ring.push(kind, begin, end, shard, job);
+        }
+    });
+}
+
+/// Merge every registered thread's histograms into one snapshot.
+pub(crate) fn hist_snapshot() -> Histograms {
+    let reg = REGISTRY.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut out = Histograms::new();
+    for ring in reg.iter() {
+        let b = ring.buf.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        b.hist.merge_into(&mut out);
+    }
+    out
+}
+
+/// One thread's drained spans, oldest first, plus the overflow tally.
+#[derive(Clone, Debug)]
+pub struct ThreadSpans {
+    pub name: String,
+    pub tid: u32,
+    /// Spans lost to overwrite-oldest before this drain.
+    pub dropped: u64,
+    pub spans: Vec<SpanRecord>,
+}
+
+/// Drain every thread's spans (oldest → newest per thread) and clear the
+/// rings. Histograms are left intact — [`reset_all`] (via
+/// `trace::enable`) is the histogram reset point.
+pub(crate) fn drain_spans() -> Vec<ThreadSpans> {
+    let reg = REGISTRY.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut out = Vec::with_capacity(reg.len());
+    for ring in reg.iter() {
+        let mut b = ring.buf.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let filled = b.head.min(SPAN_CAPACITY as u64) as usize;
+        let mut spans = Vec::with_capacity(filled);
+        if b.head > SPAN_CAPACITY as u64 {
+            let split = (b.head & CAP_MASK) as usize;
+            spans.extend_from_slice(&b.slots[split..]);
+            spans.extend_from_slice(&b.slots[..split]);
+        } else {
+            spans.extend_from_slice(&b.slots[..filled]);
+        }
+        let dropped = b.dropped;
+        b.head = 0;
+        b.dropped = 0;
+        out.push(ThreadSpans { name: ring.name.clone(), tid: ring.tid, dropped, spans });
+    }
+    out
+}
+
+/// Clear every ring *and* every histogram (the `trace::enable` reset).
+pub(crate) fn reset_all() {
+    let reg = REGISTRY.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    for ring in reg.iter() {
+        let mut b = ring.buf.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        b.head = 0;
+        b.dropped = 0;
+        b.hist.clear();
+    }
+}

@@ -144,6 +144,11 @@ pub(crate) fn run_worker(
     while let Ok(req) = requests.recv() {
         match req {
             Request::Step { lr, tasks } => {
+                let _sp = crate::trace::span(
+                    crate::trace::SpanKind::OptimStep,
+                    shard as u32,
+                    crate::trace::NO_JOB,
+                );
                 let mut outcome: Result<(), String> = Ok(());
                 for t in &tasks {
                     // SAFETY: sound per the GroupTask contract — the
@@ -259,12 +264,22 @@ impl InProcConnection {
 
 impl ShardConnection for InProcConnection {
     fn send_step(&mut self, lr: f32, tasks: Vec<GroupTask>) -> Result<(), TransportError> {
+        let _sp = crate::trace::span(
+            crate::trace::SpanKind::WireSend,
+            self.shard as u32,
+            crate::trace::NO_JOB,
+        );
         self.requests
             .send(Request::Step { lr, tasks })
             .map_err(|_| self.gone("step dispatch"))
     }
 
     fn recv_step_ack(&mut self) -> Result<(), TransportError> {
+        let _sp = crate::trace::span(
+            crate::trace::SpanKind::WireRecv,
+            self.shard as u32,
+            crate::trace::NO_JOB,
+        );
         match self.replies.recv() {
             Ok(Reply::StepDone(Ok(()))) => Ok(()),
             Ok(Reply::StepDone(Err(message))) => {

@@ -409,7 +409,9 @@ fn run_proxy<R: Read, W: Write>(
 ) {
     while let Ok(job) = jobs.recv() {
         let (context, outcome): (&'static str, Result<ProxyReply>) = match job {
-            ProxyJob::Step { lr, tasks } => ("step", proxy_step(&mut r, &mut w, lr, &tasks)),
+            ProxyJob::Step { lr, tasks } => {
+                ("step", proxy_step(shard, &mut r, &mut w, lr, &tasks))
+            }
             ProxyJob::Next => {
                 // Fire-and-forget: no ack, but a write failure kills the
                 // connection.
@@ -475,11 +477,17 @@ impl std::fmt::Display for WorkerFailure {
 impl std::error::Error for WorkerFailure {}
 
 fn proxy_step<R: Read, W: Write>(
+    shard: usize,
     r: &mut BufReader<R>,
     w: &mut BufWriter<W>,
     lr: f32,
     tasks: &[GroupTask],
 ) -> Result<ProxyReply> {
+    let send_span = crate::trace::span(
+        crate::trace::SpanKind::WireSend,
+        shard as u32,
+        crate::trace::NO_JOB,
+    );
     write_op(w, OP_STEP)?;
     write_f32(w, lr)?;
     write_u32(w, tasks.len() as u32)?;
@@ -498,6 +506,12 @@ fn proxy_step<R: Read, W: Write>(
         write_f32s(w, g)?;
     }
     w.flush()?;
+    drop(send_span);
+    let _recv_span = crate::trace::span(
+        crate::trace::SpanKind::WireRecv,
+        shard as u32,
+        crate::trace::NO_JOB,
+    );
     match read_op(r)? {
         OP_STEP_OK => {
             let n = read_task_count(r, tasks.len())?;

@@ -8,12 +8,20 @@
 //! only allocations made by *this* test's thread are counted (the harness
 //! may run other threads). `Cell<u64>` is const-initialized and has no
 //! destructor, so the counter itself never allocates or recurses.
+//!
+//! The matrix runs twice: tracing disabled (the original PR-8 contract)
+//! and tracing **enabled** — the span record path (ring slot write +
+//! histogram updates) must itself be allocation-free after the thread's
+//! ring registers during warm-up. The two tests share a gate mutex
+//! because the trace enable flag is process-global.
 
 use extensor::optim::{self, GroupSpec, Hyper, Optimizer};
 use extensor::tensoring::{OptimizerKind, StateBackend};
+use extensor::trace;
 use extensor::util::rng::Pcg64;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
 
 thread_local! {
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
@@ -68,8 +76,17 @@ fn groups() -> Vec<GroupSpec> {
     ]
 }
 
-#[test]
-fn et_step_all_is_allocation_free_after_warmup() {
+/// Serialize the traced and untraced matrices: the trace enable flag is
+/// process-global, so the other test's window must not leak in.
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The zero-alloc matrix: every optimizer kind × both state backends,
+/// 3 warm-up steps then 5 counted steady-state steps, asserting zero
+/// allocations. `label` names the tracing mode in failure messages.
+fn assert_step_all_matrix_alloc_free(label: &str) {
     let gs = groups();
     let mut rng = Pcg64::seeded(42);
     let grads: Vec<Vec<f32>> = gs
@@ -103,7 +120,9 @@ fn et_step_all_is_allocation_free_after_warmup() {
             let mut params: Vec<Vec<f32>> =
                 gs.iter().map(|g| vec![0.1f32; g.numel()]).collect();
             // Warm-up: grows the scratch arena (kernel buffers + q8 decode
-            // vectors) to its high-water mark across all groups.
+            // vectors) to its high-water mark across all groups — and, when
+            // tracing, registers this thread's span ring (the one
+            // allocating step of the record path).
             for _ in 0..3 {
                 opt.next_step();
                 opt.step_all(&mut params, &grads, 1e-3).unwrap();
@@ -118,11 +137,33 @@ fn et_step_all_is_allocation_free_after_warmup() {
             assert_eq!(
                 after - before,
                 0,
-                "{kind:?} under {backend:?}: {} allocations in 5 steady-state steps",
+                "{kind:?} under {backend:?} ({label}): {} allocations in 5 steady-state steps",
                 after - before
             );
         }
     }
+}
+
+#[test]
+fn et_step_all_is_allocation_free_after_warmup() {
+    let _g = gate();
+    trace::disable();
+    assert_step_all_matrix_alloc_free("tracing off");
+}
+
+/// The PR-10 extension of the contract: `step_all` stays zero-alloc with
+/// tracing **enabled** — recording a span is a TLS read, an uncontended
+/// lock, and fixed array writes once the ring exists.
+#[test]
+fn et_step_all_is_allocation_free_with_tracing_enabled() {
+    let _g = gate();
+    trace::enable();
+    assert_step_all_matrix_alloc_free("tracing on");
+    trace::disable();
+    // Sanity: the window actually recorded optimizer spans.
+    let recorded = trace::snapshot().kind_summary(extensor::trace::SpanKind::OptimStep).count;
+    assert!(recorded > 0, "tracing was enabled but recorded no optim_step spans");
+    trace::drain();
 }
 
 /// The counter itself must observe ordinary allocations, or the zero

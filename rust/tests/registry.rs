@@ -225,6 +225,10 @@ fn jsonl_and_csv_roundtrip_tricky_cells() {
         event_log: String::new(),
         recoveries: 2,
         error_kind: "disconnected".to_string(),
+        timing: Json::obj(vec![
+            ("schema", Json::str("trace_timing/v1")),
+            ("coverage_pct", Json::num(97.5)),
+        ]),
     };
     let (r0, r1) = (rec("0"), rec("1"));
     let registry = Registry::open(&dir).unwrap();

@@ -248,6 +248,31 @@ fn reshard_grow_and_shrink_mid_run_bitwise() {
     }
 }
 
+/// Tracing must be observationally invisible to the arithmetic: the same
+/// run with tracing enabled is bitwise identical to tracing off, over the
+/// in-process and socket transports (the socket run covers the
+/// coordinator-side wire_send/wire_recv proxy spans; span data never
+/// touches the wire payloads). Timestamps are observability data only;
+/// nothing feeds back.
+#[test]
+fn tracing_on_vs_off_is_bitwise_invisible() {
+    let gs = groups();
+    let stream = grad_stream(&gs, 4, 17);
+    let kind = OptimizerKind::Et(2);
+    let want = run_single(kind, &gs, &stream, 0.05);
+    let cases: Vec<(&'static str, fn() -> Arc<dyn ShardTransport>)> =
+        vec![("inproc", || Arc::new(InProcess)), ("socket", socket_transport)];
+    for (tname, make) in cases {
+        let untraced = run_over_transport(kind, &gs, &stream, 0.05, 2, make());
+        extensor::trace::enable();
+        let traced = run_over_transport(kind, &gs, &stream, 0.05, 2, make());
+        extensor::trace::disable();
+        extensor::trace::drain();
+        assert_eq!(want, untraced, "untraced {tname} run diverged from single-threaded");
+        assert_eq!(untraced, traced, "tracing changed results over {tname}");
+    }
+}
+
 /// The trait-compat path (per-group `step`) must agree with `step_all`.
 #[test]
 fn trait_step_agrees_with_step_all() {

@@ -1,0 +1,254 @@
+//! Integration tests for the zero-alloc tracing subsystem
+//! (`extensor::trace`): ring overflow semantics, histogram bin edges at
+//! the public API, deterministic-clock span ordering, Chrome trace JSON
+//! schema validity, and the registry `timing` field round-trip.
+//!
+//! Tracing state (the enable flag, the clock, the span rings) is global,
+//! so every test serializes on one gate mutex and restores the
+//! monotonic clock + disabled state before releasing it.
+
+use extensor::registry::{Registry, RunRecord};
+use extensor::trace::{
+    self, chrome_trace_json, install_clock, install_monotonic, SpanKind, TestClock, NO_JOB,
+    NO_SHARD, SPAN_CAPACITY, TRACE_SCHEMA,
+};
+use extensor::util::json::Json;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+
+/// Serialize tests sharing the global trace state; restore defaults on
+/// acquisition so a prior test (or panic) cannot leak state in.
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    let g = GATE.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(PoisonError::into_inner);
+    trace::disable();
+    install_monotonic();
+    g
+}
+
+/// The drained spans recorded by *this* thread (other test threads'
+/// rings exist in the registry but are empty inside a gated window).
+fn my_spans() -> Vec<extensor::trace::SpanRecord> {
+    let mut drained: Vec<_> =
+        trace::drain().into_iter().filter(|t| !t.spans.is_empty()).collect();
+    assert_eq!(drained.len(), 1, "exactly one thread recorded: {drained:?}");
+    drained.pop().unwrap().spans
+}
+
+#[test]
+fn deterministic_clock_pins_span_order_and_ticks() {
+    let _g = gate();
+    install_clock(Arc::new(TestClock::new(10)));
+    trace::enable();
+    drop(trace::span(SpanKind::WireSend, 0, NO_JOB));
+    drop(trace::span(SpanKind::WireRecv, 0, NO_JOB));
+    {
+        let mut claim = trace::span(SpanKind::Claim, NO_SHARD, NO_JOB);
+        claim.set_job(7);
+    }
+    trace::disable();
+    install_monotonic();
+
+    let spans = my_spans();
+    assert_eq!(spans.len(), 3);
+    // Each span reads the clock twice; the TestClock advances by 10 per
+    // read, so the exact ticks are pinned.
+    assert_eq!((spans[0].begin, spans[0].end), (10, 20));
+    assert_eq!((spans[1].begin, spans[1].end), (30, 40));
+    assert_eq!((spans[2].begin, spans[2].end), (50, 60));
+    assert_eq!(SpanKind::from_u16(spans[0].kind), Some(SpanKind::WireSend));
+    assert_eq!(SpanKind::from_u16(spans[1].kind), Some(SpanKind::WireRecv));
+    assert_eq!(SpanKind::from_u16(spans[2].kind), Some(SpanKind::Claim));
+    assert_eq!(spans[0].shard, 0);
+    assert_eq!(spans[0].job, u16::MAX, "NO_JOB stays unattributed");
+    assert_eq!(spans[2].job, 7, "set_job after open is recorded");
+    // Chronological within the thread.
+    assert!(spans.windows(2).all(|w| w[0].end <= w[1].begin));
+}
+
+#[test]
+fn ring_overflow_overwrites_oldest_and_counts_drops() {
+    let _g = gate();
+    install_clock(Arc::new(TestClock::new(1)));
+    trace::enable();
+    let extra = 5usize;
+    for _ in 0..SPAN_CAPACITY + extra {
+        drop(trace::span(SpanKind::OptimStep, NO_SHARD, NO_JOB));
+    }
+    trace::disable();
+    install_monotonic();
+
+    let spans = my_spans();
+    assert_eq!(spans.len(), SPAN_CAPACITY, "ring never grows past capacity");
+    let drained = trace::drain(); // rings already cleared by my_spans' drain
+    assert!(drained.iter().all(|t| t.spans.is_empty() && t.dropped == 0));
+
+    // Span i (0-based) has begin = 2i+1 under a step-1 TestClock; the
+    // oldest `extra` spans were overwritten, so the first retained span
+    // is span `extra`, and order stays chronological across the wrap.
+    assert_eq!(spans[0].begin, (2 * extra + 1) as u64);
+    assert_eq!(spans.last().unwrap().begin, (2 * (SPAN_CAPACITY + extra - 1) + 1) as u64);
+    assert!(spans.windows(2).all(|w| w[0].begin < w[1].begin));
+}
+
+#[test]
+fn dropped_counter_reports_exact_overflow() {
+    let _g = gate();
+    trace::enable();
+    for _ in 0..SPAN_CAPACITY + 3 {
+        drop(trace::span(SpanKind::OptimStep, NO_SHARD, NO_JOB));
+    }
+    trace::disable();
+    let t = trace::drain().into_iter().find(|t| !t.spans.is_empty()).unwrap();
+    assert_eq!(t.dropped, 3, "one drop per overwritten span");
+    // enable() resets the tally along with the rings.
+    trace::enable();
+    drop(trace::span(SpanKind::OptimStep, NO_SHARD, NO_JOB));
+    trace::disable();
+    let t = trace::drain().into_iter().find(|t| !t.spans.is_empty()).unwrap();
+    assert_eq!(t.dropped, 0);
+    assert_eq!(t.spans.len(), 1);
+}
+
+#[test]
+fn histogram_percentiles_quantize_to_log2_bin_edges() {
+    let _g = gate();
+    // Duration per span = one clock step; 1000 ns lands in bin 9
+    // ([512, 1024)), whose upper edge is 1024 ns.
+    install_clock(Arc::new(TestClock::new(1000)));
+    trace::enable();
+    let before = trace::snapshot();
+    for _ in 0..8 {
+        drop(trace::span(SpanKind::StepAll, NO_SHARD, NO_JOB));
+    }
+    let delta = trace::snapshot().delta(&before);
+    trace::disable();
+    install_monotonic();
+    trace::drain();
+
+    let s = delta.kind_summary(SpanKind::StepAll);
+    assert_eq!(s.count, 8);
+    assert_eq!(s.p50_ns, 1024, "percentiles report the log2 bin upper edge");
+    assert_eq!(s.p99_ns, 1024);
+    assert_eq!(s.max_ns, 1000, "max is exact, not quantized");
+    assert_eq!(s.total_ns, 8 * 1000);
+
+    // timing_json: 8 StepAll spans x 1000 ns over a 10_000 ns wall.
+    let j = delta.timing_json(10_000);
+    assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some("trace_timing/v1"));
+    let cov = j.get("coverage_pct").and_then(|v| v.as_f64()).unwrap();
+    assert!((cov - 80.0).abs() < 1e-9, "{cov}");
+}
+
+#[test]
+fn chrome_trace_json_is_schema_valid() {
+    let _g = gate();
+    install_clock(Arc::new(TestClock::new(500)));
+    trace::enable();
+    drop(trace::span(SpanKind::WireSend, 3, NO_JOB));
+    drop(trace::span(SpanKind::Claim, NO_SHARD, 2));
+    trace::disable();
+    install_monotonic();
+    let threads: Vec<_> =
+        trace::drain().into_iter().filter(|t| !t.spans.is_empty()).collect();
+
+    let doc = chrome_trace_json(&threads);
+    // Round-trip through the serializer: the export must be valid JSON.
+    let doc = Json::parse(&doc.to_string()).unwrap();
+    assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some(TRACE_SCHEMA));
+    assert_eq!(doc.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    assert_eq!(doc.get("dropped_spans").and_then(|v| v.as_usize()), Some(0));
+    let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+
+    let metas: Vec<&Json> =
+        events.iter().filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("M")).collect();
+    assert_eq!(metas.len(), 1, "one thread_name metadata event per thread");
+    assert_eq!(metas[0].get("name").and_then(|v| v.as_str()), Some("thread_name"));
+
+    let xs: Vec<&Json> =
+        events.iter().filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X")).collect();
+    assert_eq!(xs.len(), 2);
+    for e in &xs {
+        assert!(e.get("name").and_then(|v| v.as_str()).is_some());
+        assert_eq!(e.get("cat").and_then(|v| v.as_str()), Some("ettrain"));
+        assert_eq!(e.get("pid").and_then(|v| v.as_usize()), Some(1));
+        assert!(e.get("tid").is_some());
+        // ts/dur are microsecond floats; TestClock step 500 ns = 0.5 us.
+        assert!(e.get("ts").and_then(|v| v.as_f64()).is_some());
+        assert!((e.get("dur").and_then(|v| v.as_f64()).unwrap() - 0.5).abs() < 1e-9);
+    }
+    let send = xs.iter().find(|e| e.get("name").and_then(|v| v.as_str()) == Some("wire_send"));
+    let args = send.unwrap().get("args").unwrap();
+    assert_eq!(args.get("shard").and_then(|v| v.as_usize()), Some(3));
+    assert!(args.get("job").is_none(), "unattributed ids are omitted");
+    let claim = xs.iter().find(|e| e.get("name").and_then(|v| v.as_str()) == Some("claim"));
+    let args = claim.unwrap().get("args").unwrap();
+    assert!(args.get("shard").is_none());
+    assert_eq!(args.get("job").and_then(|v| v.as_usize()), Some(2));
+
+    // The file writer produces the same document on disk.
+    let path = std::env::temp_dir()
+        .join(format!("et-trace-{}", std::process::id()))
+        .join("t.trace.json");
+    extensor::trace::write_chrome_trace(&path, &threads).unwrap();
+    let on_disk = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(on_disk.get("schema").and_then(|v| v.as_str()), Some(TRACE_SCHEMA));
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn registry_timing_field_round_trips_both_encodings() {
+    let _g = gate();
+    install_clock(Arc::new(TestClock::new(750)));
+    trace::enable();
+    let before = trace::snapshot();
+    for _ in 0..4 {
+        drop(trace::span(SpanKind::StepAll, NO_SHARD, NO_JOB));
+    }
+    let timing = trace::snapshot().delta(&before).timing_json(5_000);
+    trace::disable();
+    install_monotonic();
+    trace::drain();
+
+    let rec = RunRecord {
+        run_id: "1-0-traced".to_string(),
+        job: "traced".to_string(),
+        kind: "shard-bench".to_string(),
+        commit: "deadbeef".to_string(),
+        started_unix: 1,
+        utc: "1970-01-01T00:00:01Z".to_string(),
+        spec_toml: "[job.traced]\ntype = \"shard-bench\"\n".to_string(),
+        plan: None,
+        status: "ok".to_string(),
+        error: String::new(),
+        metrics: Json::obj(vec![("steps_per_sec", Json::num(800.0))]),
+        artifact_hits: 0,
+        artifact_misses: 0,
+        corpus_hits: 0,
+        corpus_misses: 0,
+        wall_seconds: 0.005,
+        queue_seconds: 0.0,
+        event_log: String::new(),
+        recoveries: 0,
+        error_kind: String::new(),
+        timing,
+    };
+
+    let dir = std::env::temp_dir().join(format!("et-trace-reg-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let registry = Registry::open(&dir).unwrap();
+    registry.append(std::slice::from_ref(&rec)).unwrap();
+    let jsonl = Registry::load(&dir).unwrap();
+    assert_eq!(jsonl, vec![rec.clone()], "JSONL round trip preserves the timing profile");
+    let csv = Registry::load_csv(&dir).unwrap();
+    assert_eq!(csv, vec![rec.clone()], "CSV round trip preserves the timing profile");
+
+    let t = &jsonl[0].timing;
+    assert_eq!(t.get("schema").and_then(|v| v.as_str()), Some("trace_timing/v1"));
+    assert_eq!(
+        t.get("kinds").and_then(|k| k.get("step_all")).and_then(|s| s.get("count")).and_then(
+            |c| c.as_usize()
+        ),
+        Some(4)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
